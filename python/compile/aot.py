@@ -1,0 +1,332 @@
+"""AOT pipeline: lower every L2 entry point to HLO text + manifest.
+
+This is the ONLY bridge between Python and Rust: each exported function
+becomes one ``artifacts/<name>.hlo.txt`` (HLO *text* — xla_extension
+0.5.1 rejects jax>=0.5's 64-bit-id serialized protos, see
+/opt/xla-example/README.md), plus a ``manifest.json`` describing every
+artifact's I/O contract and a ``params_<cfg>.bin`` with the initial
+parameter buffers in canonical flatten order.
+
+Python never runs again after this: the Rust coordinator loads the
+artifacts through PJRT and drives serving/training with pure tensor
+I/O.
+
+Usage:  python -m compile.aot --out ../artifacts [--heavy] [--only pat]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import diffusion, model as model_lib, train
+from .kernels import ref, sla2
+
+# paper sparsity tiers -> fraction of key blocks kept by the sparse branch
+TIERS = {"s90": 0.10, "s95": 0.05, "s97": 0.03}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec_of(x):
+    if not hasattr(x, "shape") or not hasattr(x, "dtype"):
+        x = jnp.asarray(x)
+    return {"shape": list(x.shape), "dtype": str(jnp.dtype(x.dtype))}
+
+
+class Exporter:
+    def __init__(self, out_dir: str, only: str | None = None):
+        self.out = out_dir
+        self.only = only
+        self.manifest = {"version": 1, "artifacts": [], "params": [],
+                         "configs": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def want(self, name: str) -> bool:
+        return self.only is None or self.only in name
+
+    def export(self, name: str, fn, example_args, *, kind: str, meta=None):
+        """Lower ``fn(*example_args)`` and record the artifact."""
+        if not self.want(name):
+            return
+        path = os.path.join(self.out, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        flat_in, _ = jax.tree_util.tree_flatten(example_args)
+        out_shape = jax.eval_shape(fn, *example_args)
+        flat_out, _ = jax.tree_util.tree_flatten(out_shape)
+        self.manifest["artifacts"].append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "kind": kind,
+            "inputs": [_spec_of(x) for x in flat_in],
+            "outputs": [_spec_of(x) for x in flat_out],
+            "meta": meta or {},
+        })
+        print(f"  wrote {name}: {len(text) / 1e6:.2f} MB, "
+              f"{len(flat_in)} inputs, {len(flat_out)} outputs")
+
+    def export_params(self, cfg, params):
+        """Dump initial parameters as a flat f32 .bin + layout records."""
+        flat = model_lib.flatten_params(params)
+        fname = f"params_{cfg.name}.bin"
+        tensors, offset = [], 0
+        with open(os.path.join(self.out, fname), "wb") as f:
+            for name, leaf in flat:
+                arr = np.asarray(leaf, dtype=np.float32)
+                f.write(arr.tobytes())
+                tensors.append({"name": name, "shape": list(arr.shape),
+                                "offset": offset, "size": int(arr.size)})
+                offset += int(arr.size)
+        self.manifest["params"].append(
+            {"config": cfg.name, "file": fname, "tensors": tensors})
+        print(f"  wrote {fname}: {offset * 4 / 1e6:.2f} MB, "
+              f"{len(tensors)} tensors")
+
+    def record_config(self, cfg, params):
+        self.manifest["configs"][cfg.name] = {
+            "video": list(cfg.video), "patch": list(cfg.patch),
+            "dim": cfg.dim, "depth": cfg.depth, "heads": cfg.heads,
+            "head_dim": cfg.head_dim, "b_q": cfg.b_q, "b_k": cfg.b_k,
+            "n_tokens": cfg.n_tokens, "t_m": cfg.t_m, "t_n": cfg.t_n,
+            "num_classes": cfg.num_classes,
+            "param_count": model_lib.param_count(params),
+        }
+
+    def save_manifest(self):
+        with open(os.path.join(self.out, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# artifact builders
+# ---------------------------------------------------------------------------
+
+
+def _anchor_params(params, out):
+    """Tie every parameter leaf into the output with zero weight.
+
+    jax's lowering dead-code-eliminates unused inputs (e.g. the SLA
+    proj_o when exporting the sla2 variant), which would silently
+    change the artifact's input arity and break the manifest contract
+    with the Rust runtime.  A `+ 0 * sum(leaves)` keeps the declared
+    signature stable; XLA folds the dead arithmetic away after the
+    entry signature is fixed.
+    """
+    zero = sum((l * 0.0).sum()
+               for l in jax.tree_util.tree_leaves(params))
+    return out + zero.astype(out.dtype)
+
+
+def denoise_meta(cfg, variant, tier, k_pct, batch):
+    from .kernels import router as router_lib
+
+    kept = router_lib.top_k_count(k_pct, cfg.t_n)
+    return {"config": cfg.name, "variant": variant, "tier": tier,
+            "k_pct": k_pct, "batch": batch,
+            "block_sparsity": 1.0 - kept / cfg.t_n}
+
+
+def export_denoise(ex, cfg, params, variant, tier, batch):
+    k_pct = TIERS.get(tier, 1.0)
+    name = f"denoise_{cfg.name}_{variant}_{tier}_b{batch}"
+
+    def fn(params, xs, ts, ys):
+        if batch == 1:
+            out = diffusion.denoise_step(params, cfg, xs[0], ts[0], ys[0],
+                                         variant=variant,
+                                         k_pct=k_pct)[None]
+        else:
+            out = model_lib.apply_model_batch(params, cfg, xs, ts, ys,
+                                              variant=variant, k_pct=k_pct)
+        return (_anchor_params(params, out),)
+
+    xs = jnp.zeros((batch,) + cfg.video, jnp.float32)
+    ts = jnp.zeros((batch,), jnp.float32)
+    ys = jnp.zeros((batch,), jnp.int32)
+    ex.export(name, fn, (params, xs, ts, ys), kind="denoise",
+              meta=denoise_meta(cfg, variant, tier, k_pct, batch))
+
+
+def export_train_step(ex, cfg, params, variant, tier, batch, lr=1e-4):
+    k_pct = TIERS.get(tier, 1.0)
+    step_fn = train.make_train_step(cfg, variant, k_pct, lr=lr)
+    name = f"train_{cfg.name}_{variant}_{tier}_b{batch}"
+    m, v = train.init_opt_state(params)
+    args = (params, m, v, jnp.zeros((), jnp.int32),
+            jnp.zeros((batch,) + cfg.video, jnp.float32),
+            jnp.zeros((batch,), jnp.int32), jnp.zeros((), jnp.int32))
+    ex.export(name, step_fn, args, kind="train_step",
+              meta=denoise_meta(cfg, variant, tier, k_pct, batch) | {
+                  "lr": lr, "n_param_tensors": len(
+                      model_lib.flatten_params(params))})
+
+
+def export_stage1(ex, cfg, params, tier, lr=1e-3):
+    k_pct = TIERS.get(tier, 1.0)
+    step_fn = train.make_stage1_step(cfg, k_pct, lr=lr)
+    rparams = train.extract_stage1_params(params, cfg)
+    m, v = train.init_opt_state(rparams)
+    qkv = jnp.zeros((cfg.depth, cfg.heads, 3, cfg.n_tokens, cfg.head_dim),
+                    jnp.float32)
+    name = f"stage1_{cfg.name}_{tier}"
+    ex.export(name, step_fn, (rparams, m, v, jnp.zeros((), jnp.int32), qkv),
+              kind="stage1_step",
+              meta={"config": cfg.name, "tier": tier, "k_pct": k_pct,
+                    "lr": lr,
+                    "n_router_tensors": 3 * cfg.depth})
+
+
+def export_collect_qkv(ex, cfg, params):
+    fn = train.make_collect_qkv(cfg)
+    name = f"collect_qkv_{cfg.name}"
+    args = (params, jnp.zeros(cfg.video, jnp.float32),
+            jnp.zeros((), jnp.int32), jnp.asarray(0.5, jnp.float32),
+            jnp.zeros(cfg.video, jnp.float32))
+    ex.export(name,
+              lambda params, *a: (_anchor_params(params,
+                                                 fn(params, *a)),),
+              args, kind="collect_qkv", meta={"config": cfg.name})
+
+
+def export_attn_micro(ex, n: int, d: int, b_q: int, b_k: int):
+    """Single-head attention micro-artifacts for Fig. 4 latency points."""
+    t_m = n // b_q
+
+    def mk(variant, tier):
+        k_pct = TIERS.get(tier, 1.0)
+        # alpha at the kept-mass prior (see init_sla2_params docstring):
+        # micro-kernels carry no trained state, so the principled init
+        # is what an untrained-but-sane deployment would use.
+        kept_frac = max(1, round(k_pct * (n // b_k))) / (n // b_k)
+        p = sla2.init_sla2_params(d, t_m, k_pct=kept_frac)
+
+        def fn(q, k, v):
+            if variant == "full":
+                return (ref.full_attention(q, k, v),)
+            if variant == "flash":
+                from .kernels.full_attn import flash_attention
+                return (flash_attention(q, k, v, b_q=b_q, b_k=b_k)[0],)
+            if variant in ("sla2", "sla2_noquant"):
+                return (sla2.sla2_attention(
+                    q, k, v, p, k_pct=k_pct, b_q=b_q, b_k=b_k,
+                    quant=(variant == "sla2")),)
+            if variant == "sla":
+                return (sla2.sla_attention(q, k, v,
+                                           {"proj_o": jnp.eye(d) * 0.5},
+                                           k_pct=k_pct, b_q=b_q, b_k=b_k),)
+            if variant == "vsa":
+                return (sla2.vsa_attention(q, k, v, k_pct=k_pct, b_q=b_q,
+                                           b_k=b_k),)
+            if variant == "vmoba":
+                return (sla2.vmoba_attention(q, k, v, k_pct=k_pct, b_q=b_q,
+                                             b_k=b_k),)
+            raise ValueError(variant)
+
+        z = jnp.zeros((n, d), jnp.float32)
+        ex.export(f"attn_{variant}_{tier}_n{n}", fn, (z, z, z), kind="attn",
+                  meta={"n": n, "d": d, "b_q": b_q, "b_k": b_k,
+                        "variant": variant, "tier": tier,
+                        "k_pct": TIERS.get(tier, 1.0)})
+
+    mk("flash", "dense")
+    for tier in TIERS:
+        mk("sla2", tier)
+    mk("sla2_noquant", "s95")
+    mk("sla", "s95")
+    mk("vsa", "s95")
+    mk("vmoba", "s95")
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--heavy", action="store_true",
+                    help="also export dit-base / dit-100m artifacts")
+    ap.add_argument("--only", default=None,
+                    help="only export artifacts whose name contains this")
+    args = ap.parse_args()
+    ex = Exporter(args.out, args.only)
+    key = jax.random.PRNGKey(42)
+
+    # ---- dit-tiny: the integration-test workhorse --------------------
+    cfg = model_lib.CONFIGS["dit-tiny"]
+    params = model_lib.init_params(cfg, key)
+    print(f"{cfg.name}: {model_lib.param_count(params) / 1e6:.2f}M params")
+    ex.record_config(cfg, params)
+    ex.export_params(cfg, params)
+    export_denoise(ex, cfg, params, "full", "dense", 1)
+    export_denoise(ex, cfg, params, "sla2", "s90", 1)
+    export_denoise(ex, cfg, params, "sla2", "s90", 2)
+    export_train_step(ex, cfg, params, "sla2", "s90", 2)
+    export_stage1(ex, cfg, params, "s90")
+    export_collect_qkv(ex, cfg, params)
+
+    # ---- dit-small: the Wan2.1-1.3B stand-in -------------------------
+    cfg = model_lib.CONFIGS["dit-small"]
+    params = model_lib.init_params(cfg, key)
+    print(f"{cfg.name}: {model_lib.param_count(params) / 1e6:.2f}M params")
+    ex.record_config(cfg, params)
+    ex.export_params(cfg, params)
+    for tier in ("dense",):
+        export_denoise(ex, cfg, params, "full", tier, 1)
+        export_denoise(ex, cfg, params, "full", tier, 4)
+    for tier in TIERS:
+        export_denoise(ex, cfg, params, "sla2", tier, 1)
+    export_denoise(ex, cfg, params, "sla2", "s95", 4)
+    for variant in ("sla2_noquant", "sla", "vsa", "vmoba"):
+        export_denoise(ex, cfg, params, variant, "s95", 1)
+    export_train_step(ex, cfg, params, "sla2", "s95", 4)
+    export_train_step(ex, cfg, params, "full", "dense", 4)
+    for tier in TIERS:
+        export_stage1(ex, cfg, params, tier)
+    export_collect_qkv(ex, cfg, params)
+    # Fig. 4 kernel micro-benchmarks at the dit-small geometry
+    export_attn_micro(ex, n=256, d=64, b_q=32, b_k=16)
+
+    if args.heavy:
+        # ---- dit-base: the Wan2.1-14B stand-in (N=1024) --------------
+        cfg = model_lib.CONFIGS["dit-base"]
+        params = model_lib.init_params(cfg, key)
+        print(f"{cfg.name}: {model_lib.param_count(params) / 1e6:.2f}M")
+        ex.record_config(cfg, params)
+        ex.export_params(cfg, params)
+        export_denoise(ex, cfg, params, "full", "dense", 1)
+        for tier in TIERS:
+            export_denoise(ex, cfg, params, "sla2", tier, 1)
+        export_attn_micro(ex, n=1024, d=64, b_q=64, b_k=32)
+
+        # ---- dit-100m: end-to-end training deliverable ---------------
+        cfg = model_lib.CONFIGS["dit-100m"]
+        params = model_lib.init_params(cfg, key)
+        print(f"{cfg.name}: {model_lib.param_count(params) / 1e6:.2f}M")
+        ex.record_config(cfg, params)
+        ex.export_params(cfg, params)
+        export_train_step(ex, cfg, params, "sla2", "s97", 1)
+        export_denoise(ex, cfg, params, "sla2", "s97", 1)
+
+    ex.save_manifest()
+    print(f"manifest: {len(ex.manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""Rectified-flow diffusion substrate (training loss + sampling step).
+
+Matches the modern video-DiT recipe (Wan2.1 is flow-matching based):
+
+  * forward process    x_t = (1 - t) x_0 + t eps,  t ~ U(0, 1)
+  * training target    v   = eps - x_0  (the probability-flow velocity)
+  * Euler sampling     x_{t - dt} = x_t - dt * v_theta(x_t, t)
+
+Only the SINGLE-STEP functions are exported to HLO; the Rust
+coordinator owns the sampling loop (timestep schedule, batching, CFG),
+mirroring how a serving stack drives a denoiser.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as model_lib
+
+
+def noise_sample(x0: jax.Array, t: jax.Array, eps: jax.Array) -> jax.Array:
+    """x_t of the rectified-flow forward process (t broadcast per-sample)."""
+    tb = t.reshape(t.shape + (1,) * (x0.ndim - t.ndim))
+    return (1.0 - tb) * x0 + tb * eps
+
+
+def velocity_target(x0: jax.Array, eps: jax.Array) -> jax.Array:
+    return eps - x0
+
+
+def diffusion_loss(params, cfg, x0s, ys, ts, epss, *, variant="full",
+                   k_pct=0.25):
+    """Mean-squared velocity-matching loss over a batch."""
+    xts = noise_sample(x0s, ts, epss)
+    pred = model_lib.apply_model_batch(params, cfg, xts, ts, ys,
+                                       variant=variant, k_pct=k_pct)
+    return jnp.mean((pred - velocity_target(x0s, epss)) ** 2)
+
+
+def euler_step(x: jax.Array, vel: jax.Array, t: jax.Array,
+               t_next: jax.Array) -> jax.Array:
+    """One Euler step of dx/dt = v from t down to t_next (t_next < t)."""
+    return x + (t_next - t) * vel
+
+
+def sample_timesteps(n_steps: int):
+    """The t-grid the Rust sampler walks: 1.0 -> 0.0 in n_steps."""
+    import numpy as np
+
+    return np.linspace(1.0, 0.0, n_steps + 1)
+
+
+def denoise_step(params, cfg, x, t, y, *, variant="full", k_pct=0.25,
+                 cfg_scale: float = 0.0):
+    """One classifier-free-guided velocity evaluation (exported to HLO).
+
+    ``cfg_scale = 0`` is plain conditional sampling (single forward);
+    positive values add the unconditional-extrapolation term using the
+    null class embedding.
+    """
+    vel = model_lib.apply_model(params, cfg, x, t, y, variant=variant,
+                                k_pct=k_pct)
+    if cfg_scale > 0.0:
+        null = jnp.asarray(cfg.num_classes, jnp.int32)
+        vel_u = model_lib.apply_model(params, cfg, x, t, null,
+                                      variant=variant, k_pct=k_pct)
+        vel = vel_u + (1.0 + cfg_scale) * (vel - vel_u)
+    return vel

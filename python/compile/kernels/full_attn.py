@@ -1,0 +1,71 @@
+"""Pallas FlashAttention baseline (the paper's FlashAttn2 stand-in).
+
+Same grid / online-softmax skeleton as ``sla2_fwd.py`` but dense: every
+key tile goes through the softmax branch.  Serves as (a) the
+0 %-sparsity quality row of Table 1, (b) the denominator of every
+speedup claim, and (c) a structural cross-check that the SLA2 kernel
+with an all-ones mask reproduces FlashAttention exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, b_k: int):
+    b_q, d = q_ref.shape
+    n = k_ref.shape[0]
+    t_n = n // b_k
+    q = q_ref[...].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    def body(j, carry):
+        m_i, l_i, acc = carry
+        kj = k_ref[pl.ds(j * b_k, b_k), :].astype(jnp.float32)
+        vj = v_ref[pl.ds(j * b_k, b_k), :].astype(jnp.float32)
+        s = (q @ kj.T) * scale
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = corr * l_i + jnp.sum(p, axis=-1)
+        acc_new = corr[:, None] * acc + p @ vj
+        return (m_new, l_new, acc_new)
+
+    init = (jnp.full((b_q,), NEG_INF, jnp.float32),
+            jnp.zeros((b_q,), jnp.float32),
+            jnp.zeros((b_q, d), jnp.float32))
+    m_i, l_i, acc = jax.lax.fori_loop(0, t_n, body, init)
+    o_ref[...] = (acc / l_i[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = (m_i + jnp.log(l_i)).astype(lse_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("b_q", "b_k"))
+def flash_attention(q, k, v, *, b_q: int, b_k: int):
+    """FlashAttention forward; returns ``(o, lse)`` for one head."""
+    n, d = q.shape
+    t_m = n // b_q
+    o, lse = pl.pallas_call(
+        functools.partial(_flash_kernel, b_k=b_k),
+        grid=(t_m,),
+        in_specs=[
+            pl.BlockSpec((b_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((b_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return o, lse

@@ -1,0 +1,84 @@
+"""INT8 quantization substrate (SageAttention-style) for the QAT path.
+
+The paper (Sec. 5) quantizes Q, K before the score matmul and P, V
+before the output matmul, following SageAttention2++.  On the original
+testbed this hits INT8 tensor cores; here quantization is *simulated*
+in fp32 (scale → round → clip → dequant), which is mathematically what
+quantization-aware training requires: the forward sees exactly the
+low-bit values, the backward (straight-through) sees clean fp32.
+
+Scale granularity (documented substitution of SageAttention's
+per-thread scheme):
+  * Q, K    — per-row scales within each tile (axis=-1 max-abs / 127)
+  * P       — fixed scale 1/127 (probabilities live in [0, 1] after the
+              online-softmax ``exp(S - m)`` rescaling)
+  * V       — per-column scales within each tile (tokens vary, feature
+              channels are homogeneous)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+EPS = 1e-8
+
+
+def quantize_int8(x: jax.Array, axis: int = -1):
+    """Symmetric per-slice INT8 quantization.
+
+    Returns ``(x_q, scale)`` with ``x_q`` an int8-valued fp32 array in
+    [-127, 127] and ``scale`` broadcastable so ``x ≈ x_q * scale``.
+    """
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = amax / INT8_MAX + EPS
+    x_q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX)
+    return x_q, scale
+
+
+def dequantize(x_q: jax.Array, scale: jax.Array) -> jax.Array:
+    return x_q * scale
+
+
+def fake_quant(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Quantize-dequantize round trip (the canonical QAT fake-quant op)."""
+    x_q, s = quantize_int8(x, axis)
+    return x_q * s
+
+
+def fake_quant_ste(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Fake-quant with a straight-through estimator gradient.
+
+    Forward: INT8 quant-dequant.  Backward: identity.  This is the QAT
+    recipe of Sec. 5 — "low-bit attention only in the forward pass,
+    while the backward pass remains fully in FP16".
+    """
+    return x + jax.lax.stop_gradient(fake_quant(x, axis) - x)
+
+
+def quant_matmul_qk(q_tile: jax.Array, k_tile: jax.Array) -> jax.Array:
+    """INT8-simulated ``Q_i K_j^T`` (Alg. 2 line 13, without the 1/sqrt(d)).
+
+    Per-row scales on both operands; the int8 x int8 product accumulates
+    in int32 on real hardware — exactly representable in fp32 here.
+    """
+    q_q, s_q = quantize_int8(q_tile, axis=-1)  # (b_q, d), (b_q, 1)
+    k_q, s_k = quantize_int8(k_tile, axis=-1)  # (b_k, d), (b_k, 1)
+    return (q_q @ k_q.T) * (s_q * s_k.T)
+
+
+def quant_matmul_pv(p_tile: jax.Array, v_tile: jax.Array) -> jax.Array:
+    """INT8-simulated ``P_ij V_j`` (Alg. 2 line 17).
+
+    P is in [0, 1] (post ``exp(S - rowmax)``) so a fixed 1/127 scale is
+    exact on that range; V uses per-column scales.
+    """
+    p_q = jnp.clip(jnp.round(p_tile * INT8_MAX), 0.0, INT8_MAX)
+    v_q, s_v = quantize_int8(v_tile, axis=0)  # (b_k, d), (1, d)
+    return (p_q @ v_q) * (s_v / INT8_MAX)
+
+
+def quant_error(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Relative Frobenius error of the INT8 round trip (test metric)."""
+    return jnp.linalg.norm(fake_quant(x, axis) - x) / (jnp.linalg.norm(x) + EPS)

@@ -1,0 +1,268 @@
+"""Pure-jnp reference oracles for every attention variant in the repo.
+
+These are the CORE correctness signal: the Pallas kernels
+(``sla2_fwd.py`` / ``sla2_bwd.py``), the jnp block-loop implementations,
+and the AOT artifacts are all tested against the functions in this file.
+
+Everything here operates on a single attention head: ``q, k, v`` have
+shape ``(N, d)``.  Multi-head wrappers live in ``model.py`` (a python
+loop over heads keeps ``lax.cond`` tile-skipping intact when lowering —
+``vmap`` would convert it to ``select`` and defeat block skipping).
+
+Notation follows the paper (Sec. 2/3):
+  * ``mc`` — compressed block mask, shape ``(T_m, T_n)``, 1 = sparse
+    branch, 0 = linear branch.
+  * ``b_q, b_k`` — query/key block sizes; ``T_m = N // b_q``,
+    ``T_n = N // b_k``.
+  * ``alpha`` — learnable mixing ratio in [0, 1], one scalar per query
+    block (shape ``(T_m,)``; Alg. 2 uses per-block alpha, broadcast over
+    the ``b_q`` rows of the block).
+  * ``phi`` — linear-attention feature map; the paper uses softmax over
+    the feature dimension.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative stand-in for -inf (safe in fp32 exp)
+EPS = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def phi_softmax(x: jax.Array) -> jax.Array:
+    """Linear-attention feature map: softmax over the feature dim (paper
+
+    Sec. 3: "phi is an activation function for linear attention, and we
+    use the softmax function").  Guarantees positivity, so the linear
+    branch normalizer is strictly positive.
+    """
+    return jax.nn.softmax(x, axis=-1)
+
+
+def smooth_k(k: jax.Array) -> jax.Array:
+    """SageAttention K-smoothing: subtract the per-feature mean over
+
+    tokens (Alg. 2 line 2, ``K = K - colmean(K)``).  Softmax-invariant:
+    it shifts every score row by a constant, but shrinks the dynamic
+    range INT8 quantization has to cover.
+    """
+    return k - jnp.mean(k, axis=0, keepdims=True)
+
+
+def expand_mask(mc: jax.Array, b_q: int, b_k: int) -> jax.Array:
+    """Expand a block mask ``(T_m, T_n)`` to token resolution ``(N, N)``."""
+    return jnp.repeat(jnp.repeat(mc, b_q, axis=0), b_k, axis=1)
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Vanilla softmax attention, the 0 %-sparsity baseline."""
+    d = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    return jax.nn.softmax(s, axis=-1) @ v
+
+
+def full_attention_lse(q, k, v):
+    """Full attention that also returns the row-wise log-sum-exp (the
+
+    ``L_i`` the backward pass consumes)."""
+    d = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = (p / l) @ v
+    lse = (m + jnp.log(l))[:, 0]
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# sparse branch
+# ---------------------------------------------------------------------------
+
+
+def block_sparse_attention(q, k, v, mc, b_q: int, b_k: int):
+    """Sparse softmax branch O_s (Eq. 14, first line).
+
+    Computes ``softmax(S masked to M==1) @ V`` — i.e. the re-normalized
+    distribution P_s of Eq. 8, NOT the un-normalized slice P_1.  Rows
+    whose mask selects nothing would be degenerate; the router always
+    selects >= 1 block per row, and tests enforce that invariant.
+    """
+    d = q.shape[-1]
+    m = expand_mask(mc, b_q, b_k)
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    s = jnp.where(m > 0, s, NEG_INF)
+    return jax.nn.softmax(s, axis=-1) @ v
+
+
+def block_sparse_attention_lse(q, k, v, mc, b_q: int, b_k: int):
+    """Sparse branch + the log-sum-exp over masked positions."""
+    d = q.shape[-1]
+    m = expand_mask(mc, b_q, b_k)
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    s = jnp.where(m > 0, s, NEG_INF)
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - mx)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = (p / l) @ v
+    return o, (mx + jnp.log(l))[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# linear branch
+# ---------------------------------------------------------------------------
+
+
+def masked_linear_attention(q, k, v, mc, b_q: int, b_k: int, phi=phi_softmax):
+    """Linear branch O_l over the complement blocks (Eq. 14, second line).
+
+    Row-normalized linear attention restricted to key blocks with
+    ``mc == 0``:
+
+        O_l[i-block] = phi(Q_i) H_i / (phi(Q_i) Z_i)
+        H_i = sum_{j : mc[i,j]=0} phi(K_j)^T V_j
+        Z_i = sum_{j : mc[i,j]=0} colsum(phi(K_j))
+
+    Equivalent to the dense form ``norm(phi(Q) phi(K)^T ⊙ (1-M)) V`` but
+    computed the way Alg. 2 does (never materializing N x N).
+    """
+    t_m, t_n = mc.shape
+    d = q.shape[-1]
+    qp = phi(q)  # (N, d)
+    kp = phi(k)  # (N, d)
+    kp_b = kp.reshape(t_n, b_k, d)
+    v_b = v.reshape(t_n, b_k, d)
+    # per key-block states
+    h = jnp.einsum("jtd,jte->jde", kp_b, v_b)  # (T_n, d, d)
+    z = jnp.sum(kp_b, axis=1)  # (T_n, d)
+    inv = 1.0 - mc.astype(jnp.float32)  # (T_m, T_n)
+    h_i = jnp.einsum("ij,jde->ide", inv, h)  # (T_m, d, d)
+    z_i = jnp.einsum("ij,jd->id", inv, z)  # (T_m, d)
+    qp_b = qp.reshape(t_m, b_q, d)
+    num = jnp.einsum("itd,ide->ite", qp_b, h_i)  # (T_m, b_q, d)
+    den = jnp.einsum("itd,id->it", qp_b, z_i)[..., None]  # (T_m, b_q, 1)
+    out = num / (den + EPS)
+    return out.reshape(t_m * b_q, d)
+
+
+def dense_masked_linear_attention(q, k, v, mc, b_q: int, b_k: int, phi=phi_softmax):
+    """O(N^2) dense equivalent of :func:`masked_linear_attention`.
+
+    Only used in tests, to pin down that the block-state formulation is
+    exactly ``norm(phi(Q) phi(K)^T ⊙ (1-M)) V``.
+    """
+    m = expand_mask(mc, b_q, b_k).astype(jnp.float32)
+    w = (phi(q) @ phi(k).T) * (1.0 - m)
+    den = jnp.sum(w, axis=-1, keepdims=True)
+    return (w / (den + EPS)) @ v
+
+
+# ---------------------------------------------------------------------------
+# SLA2 (hard mask) — Eq. 13
+# ---------------------------------------------------------------------------
+
+
+def alpha_rows(alpha: jax.Array, b_q: int) -> jax.Array:
+    """Broadcast per-query-block alpha (T_m,) to per-row (N, 1)."""
+    return jnp.repeat(alpha.reshape(-1), b_q)[:, None]
+
+
+def sla2_attention(q, k, v, mc, alpha, b_q: int, b_k: int, smooth: bool = True):
+    """SLA2 forward, Eq. 13: ``O = a ⊙ O_s + (1-a) ⊙ O_l``.
+
+    ``alpha`` has shape ``(T_m,)`` with values in [0, 1].  With
+    ``smooth=True`` the SageAttention K-smoothing of Alg. 2 line 2 is
+    applied before BOTH branches (it precedes line 3 in the algorithm).
+    """
+    if smooth:
+        k = smooth_k(k)
+    o_s = block_sparse_attention(q, k, v, mc, b_q, b_k)
+    o_l = masked_linear_attention(q, k, v, mc, b_q, b_k)
+    a = alpha_rows(alpha, b_q)
+    return a * o_s + (1.0 - a) * o_l
+
+
+# ---------------------------------------------------------------------------
+# SLA2 (soft mask) — differentiable Stage-1 form
+# ---------------------------------------------------------------------------
+
+
+def sla2_attention_soft(q, k, v, mc_soft, alpha, b_q: int, b_k: int,
+                        smooth: bool = True):
+    """Differentiable SLA2 used during Stage-1 router training.
+
+    ``mc_soft`` in [0, 1] comes from SoftTop-k (Eq. 17).  A soft block
+    weight ``m`` gates the sparse branch multiplicatively BEFORE
+    renormalization (``exp(S) * m``, i.e. ``S + log m``), and the linear
+    branch with weight ``1 - m``.  At m in {0, 1} this reduces exactly
+    to the hard formulation, which the test-suite pins down.
+    """
+    if smooth:
+        k = smooth_k(k)
+    d = q.shape[-1]
+    m = expand_mask(mc_soft.astype(jnp.float32), b_q, b_k)
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    # sparse branch: softmax re-weighted by the soft gate
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    p1 = jnp.exp(s - mx) * m
+    den = jnp.sum(p1, axis=-1, keepdims=True)
+    o_s = (p1 / (den + EPS)) @ v
+    # linear branch: complement-weighted linear attention
+    w = (phi_softmax(q) @ phi_softmax(k).T) * (1.0 - m)
+    dl = jnp.sum(w, axis=-1, keepdims=True)
+    o_l = (w / (dl + EPS)) @ v
+    a = alpha_rows(alpha, b_q)
+    return a * o_s + (1.0 - a) * o_l
+
+
+# ---------------------------------------------------------------------------
+# original SLA (baseline) — Eq. 2-4
+# ---------------------------------------------------------------------------
+
+
+def sla_attention(q, k, v, mc, proj, b_q: int, b_k: int):
+    """Original SLA (Zhang et al. 2025c): ``O = O_s + proj(O_l)``.
+
+    ``proj`` is the learnable (d, d) output projection of the linear
+    branch.  The router is the magnitude heuristic (see
+    ``router.magnitude_topk_mask``); this function takes the mask as
+    given so both SLA and SLA2 routing can be compared on equal footing.
+    """
+    o_s = block_sparse_attention(q, k, v, mc, b_q, b_k)
+    o_l = masked_linear_attention(q, k, v, mc, b_q, b_k)
+    return o_s + o_l @ proj
+
+
+# ---------------------------------------------------------------------------
+# error decomposition (Sec. 2.2) — used by tests and the table-2 ablation
+# ---------------------------------------------------------------------------
+
+
+def decomposition_terms(q, k, v, mc, b_q: int, b_k: int):
+    """Return (P1 @ V, P2 @ V, alpha*) of Eq. 5-9.
+
+    * ``P1 = P ⊙ M`` slice of the FULL softmax (not renormalized),
+    * ``P2 = P ⊙ (1-M)``,
+    * ``alpha* = P1 @ 1`` — the oracle per-row mixing ratio of Eq. 7.
+
+    Tests verify ``P1 V = alpha* ⊙ O_s`` (Eq. 9) and that SLA2 with the
+    oracle alpha + oracle linear branch reconstructs full attention.
+    """
+    d = q.shape[-1]
+    m = expand_mask(mc, b_q, b_k).astype(jnp.float32)
+    p = jax.nn.softmax((q @ k.T) / jnp.sqrt(jnp.float32(d)), axis=-1)
+    p1 = p * m
+    p2 = p * (1.0 - m)
+    alpha_star = jnp.sum(p1, axis=-1, keepdims=True)
+    return p1 @ v, p2 @ v, alpha_star
+
+
+def attention_relative_error(o_approx: jax.Array, o_full: jax.Array) -> jax.Array:
+    """Frobenius relative error — the quality proxy used throughout."""
+    return jnp.linalg.norm(o_approx - o_full) / (jnp.linalg.norm(o_full) + EPS)

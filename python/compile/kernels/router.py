@@ -1,0 +1,162 @@
+"""Learnable router R (paper Sec. 4) + the routing baselines.
+
+The router decides, per (query-block i, key-block j) tile, whether the
+tile goes to the sparse softmax branch (M_c[i,j] = 1) or the linear
+branch (M_c[i,j] = 0):
+
+    P_c = softmax( proj_q(pool(Q)) proj_k(pool(K))^T / sqrt(d) )
+    M_c = Top-k(k%, P_c)                       (hard, inference/Stage-2)
+    M_c = SoftTop-k(k%, P_c)                   (soft, Stage-1 training)
+
+SoftTop-k (Eq. 17, after Ding et al. 2024) is
+``sigma(P_c[i,j]/tau + lambda_i)`` with ``lambda_i`` found by row-wise
+bisection so every row sums to ``k% * T_n``.  Sigma is monotone in
+lambda, so bisection converges geometrically; 50 fixed iterations give
+~1e-13 row-sum accuracy and stay jit/lowering-friendly (no data-
+dependent control flow).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RouterParams(NamedTuple):
+    """Learnable parameters of R: the two (d, d) projections.
+
+    ``proj_q = proj_k = I`` recovers SLA's magnitude heuristic exactly
+    (paper Sec. 8, insight 1.c) — tests pin that equivalence down.
+    """
+
+    proj_q: jax.Array  # (d, d)
+    proj_k: jax.Array  # (d, d)
+
+
+def init_router_params(d: int) -> RouterParams:
+    """Identity init: start from the (already decent) SLA heuristic."""
+    eye = jnp.eye(d, dtype=jnp.float32)
+    return RouterParams(proj_q=eye, proj_k=eye)
+
+
+def pool_blocks(x: jax.Array, block: int) -> jax.Array:
+    """Mean-pool consecutive ``block`` tokens: (N, d) -> (N/block, d)."""
+    n, d = x.shape
+    return jnp.mean(x.reshape(n // block, block, d), axis=1)
+
+
+def top_k_count(k_pct: float, t_n: int) -> int:
+    """Number of key blocks the sparse branch keeps per query block.
+
+    At least 1 so no row of the sparse softmax is empty.
+    """
+    return max(1, int(round(k_pct * t_n)))
+
+
+def compressed_scores(q, k, params: RouterParams, b_q: int, b_k: int):
+    """P_c of Alg. 2 line 8: softmax(proj_q(Qbar) proj_k(Kbar)^T / sqrt d)."""
+    d = q.shape[-1]
+    qb = pool_blocks(q, b_q) @ params.proj_q  # (T_m, d)
+    kb = pool_blocks(k, b_k) @ params.proj_k  # (T_n, d)
+    return jax.nn.softmax(qb @ kb.T / jnp.sqrt(jnp.float32(d)), axis=-1)
+
+
+def hard_topk_mask(p_c: jax.Array, k_pct: float) -> jax.Array:
+    """Row-wise hard Top-k: the top ``k% * T_n`` entries -> 1, rest -> 0.
+
+    Non-differentiable by construction (gradients flow through
+    SoftTop-k during Stage 1 instead), so scores are detached here —
+    this also keeps grad-linearization from tracing through argsort.
+    """
+    p_c = jax.lax.stop_gradient(p_c)
+    t_n = p_c.shape[-1]
+    kc = top_k_count(k_pct, t_n)
+    # threshold at the kc-th largest value per row (ties broken by rank
+    # so the count is exact even with duplicate scores)
+    idx = jnp.argsort(-p_c, axis=-1)
+    ranks = jnp.argsort(idx, axis=-1)
+    return (ranks < kc).astype(jnp.float32)
+
+
+def soft_topk(p_c: jax.Array, k_pct: float, tau: float = 0.1,
+              iters: int = 50) -> jax.Array:
+    """SoftTop-k (Eq. 17): sigma(P_c/tau + lambda_i), lambda_i bisected
+
+    per row so the row sum equals ``k% * T_n``.  Fully differentiable in
+    ``p_c`` (lambda is treated as locally constant — the
+    reparameterization-trick gradient of Ding et al. 2024).
+    """
+    t_n = p_c.shape[-1]
+    target = jnp.float32(top_k_count(k_pct, t_n))
+    logits = p_c / tau  # (T_m, T_n)
+
+    # row sum of sigma(logits + lam) is monotone increasing in lam;
+    # bracket so that sigma saturates at both ends regardless of tau:
+    # lam = -max(logits) - 40 forces every sigma below ~4e-18, and
+    # lam = -min(logits) + 40 forces every sigma above 1 - 4e-18.
+    lo = -jnp.max(logits, axis=-1, keepdims=True) - 40.0
+    hi = -jnp.min(logits, axis=-1, keepdims=True) + 40.0
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        s = jnp.sum(jax.nn.sigmoid(logits + mid), axis=-1, keepdims=True)
+        too_big = s > target
+        return (jnp.where(too_big, lo, mid), jnp.where(too_big, mid, hi))
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    lam = jax.lax.stop_gradient(0.5 * (lo + hi))
+    return jax.nn.sigmoid(logits + lam)
+
+
+def learnable_mask(q, k, params: RouterParams, k_pct: float,
+                   b_q: int, b_k: int, soft: bool = False,
+                   tau: float = 0.1) -> jax.Array:
+    """The full router R(Q, K) -> M_c (Sec. 4)."""
+    p_c = compressed_scores(q, k, params, b_q, b_k)
+    if soft:
+        return soft_topk(p_c, k_pct, tau)
+    return hard_topk_mask(p_c, k_pct)
+
+
+# ---------------------------------------------------------------------------
+# baseline routers
+# ---------------------------------------------------------------------------
+
+
+def magnitude_topk_mask(q, k, k_pct: float, b_q: int, b_k: int) -> jax.Array:
+    """SLA / VSA heuristic router: top-k of softmax(pool(Q) pool(K)^T).
+
+    Identical to :func:`learnable_mask` with identity projections
+    (Eq. 1) — the "Topk-router" row of Table 2.
+    """
+    d = q.shape[-1]
+    qb = pool_blocks(q, b_q)
+    kb = pool_blocks(k, b_k)
+    p_c = jax.nn.softmax(qb @ kb.T / jnp.sqrt(jnp.float32(d)), axis=-1)
+    return hard_topk_mask(p_c, k_pct)
+
+
+def vmoba_gate_mask(q, k, k_pct: float, b_q: int, b_k: int) -> jax.Array:
+    """VMoBA-style mixture-of-block-attention gate (Wu et al. 2025).
+
+    Each query *token* scores key blocks by affinity to the block mean
+    key (MoBA gating); token votes are then majority-pooled back to
+    query-block granularity so the same block-sparse kernel can run it.
+    """
+    d = q.shape[-1]
+    kb = pool_blocks(k, b_k)  # (T_n, d)
+    gates = q @ kb.T / jnp.sqrt(jnp.float32(d))  # (N, T_n)
+    tok_mask = hard_topk_mask(gates, k_pct)  # (N, T_n)
+    t_m = q.shape[0] // b_q
+    votes = jnp.mean(tok_mask.reshape(t_m, b_q, -1), axis=1)  # (T_m, T_n)
+    # keep the same per-row block budget as the other routers
+    return hard_topk_mask(votes + 1e-6 * gates.reshape(t_m, b_q, -1).mean(1),
+                          k_pct)
+
+
+def mask_sparsity(mc: jax.Array) -> jax.Array:
+    """Fraction of attention-map blocks NOT computed by the sparse branch."""
+    return 1.0 - jnp.mean(mc)

@@ -1,0 +1,147 @@
+"""SLA2 attention op: Pallas fwd/bwd pair wired through ``jax.custom_vjp``.
+
+This is the public L1 entry point the L2 model calls.  It composes:
+
+  * K-smoothing + the phi feature maps (plain jax — autodiff handles
+    their Jacobians),
+  * the router (hard Top-k; ``stop_gradient`` — Stage 2 trains the
+    model and alpha "without R", Alg. 1 line 7),
+  * the Alg. 2 forward / Alg. 3 backward Pallas kernels,
+  * the alpha mix of Eq. 13 (plain jax, so d(alpha) is automatic).
+
+It also exposes the baseline variants (original SLA, VSA-like,
+VMoBA-like) — all share the same fused kernel core with different
+routers/combinations, mirroring how the paper's baselines share the
+block-sparse FlashAttention skeleton.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref, router
+from .sla2_bwd import sla2_bwd
+from .sla2_fwd import sla2_fwd
+
+
+@functools.lru_cache(maxsize=None)
+def _core(b_q: int, b_k: int, quant: bool):
+    """Build (and cache) the custom-vjp kernel core for a tile config."""
+
+    @jax.custom_vjp
+    def core(q, k_sm, v, qphi, kphi, mc):
+        return sla2_fwd(q, k_sm, v, qphi, kphi, mc,
+                        b_q=b_q, b_k=b_k, quant=quant)
+
+    def fwd(q, k_sm, v, qphi, kphi, mc):
+        o_s, o_l, lse = sla2_fwd(q, k_sm, v, qphi, kphi, mc,
+                                 b_q=b_q, b_k=b_k, quant=quant)
+        return (o_s, o_l, lse), (q, k_sm, v, qphi, kphi, mc, lse, o_s, o_l)
+
+    def bwd(res, cts):
+        q, k_sm, v, qphi, kphi, mc, lse, o_s, o_l = res
+        do_s, do_l, _dlse = cts  # lse is a residual, no cotangent path
+        dq, dk, dv, dqphi, dkphi = sla2_bwd(
+            q, k_sm, v, qphi, kphi, mc, lse, o_s, o_l, do_s, do_l,
+            b_q=b_q, b_k=b_k)
+        return dq, dk, dv, dqphi, dkphi, jnp.zeros_like(mc)
+
+    core.defvjp(fwd, bwd)
+    return core
+
+
+def sla2_branches(q, k, v, mc, *, b_q: int, b_k: int, quant: bool = False,
+                  smooth: bool = True):
+    """Run the fused kernel; returns ``(o_s, o_l, lse)``.
+
+    The QAT trick of Sec. 5 falls out of the custom_vjp structure: the
+    forward kernel fake-quantizes (when ``quant``) but the backward
+    kernel is always full precision over the ORIGINAL inputs.
+    """
+    k_sm = ref.smooth_k(k) if smooth else k
+    qphi = ref.phi_softmax(q)
+    kphi = ref.phi_softmax(k_sm)
+    mc = jax.lax.stop_gradient(mc.astype(jnp.float32))
+    return _core(b_q, b_k, quant)(q, k_sm, v, qphi, kphi, mc)
+
+
+def sla2_attention(q, k, v, params, *, k_pct: float, b_q: int, b_k: int,
+                   quant: bool = True, smooth: bool = True):
+    """Full SLA2 op (Eq. 13) for one head.
+
+    ``params`` is a dict with:
+      * ``proj_q``, ``proj_k`` — router projections (frozen in Stage 2),
+      * ``alpha_logit``        — (T_m,) pre-sigmoid mixing logits.
+    """
+    rp = router.RouterParams(params["proj_q"], params["proj_k"])
+    mc = router.learnable_mask(q, k, rp, k_pct, b_q, b_k, soft=False)
+    o_s, o_l, _ = sla2_branches(q, k, v, mc, b_q=b_q, b_k=b_k,
+                                quant=quant, smooth=smooth)
+    a = ref.alpha_rows(jax.nn.sigmoid(params["alpha_logit"]), b_q)
+    return a * o_s + (1.0 - a) * o_l
+
+
+def init_sla2_params(d: int, t_m: int, k_pct: float | None = None) -> dict:
+    """Identity router init (= SLA's heuristic, Sec. 8 insight 1.c).
+
+    When ``k_pct`` is given, alpha is initialized to the kept
+    *probability-mass* prior: under near-uniform attention the oracle
+    alpha* of Eq. 7 equals the kept fraction, so
+    ``alpha = sigmoid(logit(k_pct))`` is the principled starting point
+    (alpha = 0.5 would wildly over-weight the sparse branch at 95 %+
+    sparsity).  ``k_pct=None`` keeps the neutral 0.5 init.
+    """
+    eye = jnp.eye(d, dtype=jnp.float32)
+    if k_pct is None:
+        logit = 0.0
+    else:
+        kf = min(max(k_pct, 1e-3), 1 - 1e-3)
+        logit = float(jnp.log(kf / (1.0 - kf)))
+    return {
+        "proj_q": eye,
+        "proj_k": eye,
+        "alpha_logit": jnp.full((t_m,), logit, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# baselines sharing the same kernel core
+# ---------------------------------------------------------------------------
+
+
+def sla_attention(q, k, v, params, *, k_pct: float, b_q: int, b_k: int):
+    """Original SLA (Eq. 2-4): magnitude router, ``O = O_s + proj(O_l)``."""
+    mc = router.magnitude_topk_mask(q, k, k_pct, b_q, b_k)
+    o_s, o_l, _ = sla2_branches(q, k, v, mc, b_q=b_q, b_k=b_k,
+                                quant=False, smooth=False)
+    return o_s + o_l @ params["proj_o"]
+
+
+def vsa_attention(q, k, v, *, k_pct: float, b_q: int, b_k: int):
+    """VSA-like: trainable block-sparse softmax only (no linear branch)."""
+    mc = router.magnitude_topk_mask(q, k, k_pct, b_q, b_k)
+    o_s, _, _ = sla2_branches(q, k, v, mc, b_q=b_q, b_k=b_k,
+                              quant=False, smooth=False)
+    return o_s
+
+
+def vmoba_attention(q, k, v, *, k_pct: float, b_q: int, b_k: int):
+    """VMoBA-like: MoBA gating, block-sparse softmax only."""
+    mc = router.vmoba_gate_mask(q, k, k_pct, b_q, b_k)
+    o_s, _, _ = sla2_branches(q, k, v, mc, b_q=b_q, b_k=b_k,
+                              quant=False, smooth=False)
+    return o_s
+
+
+def multi_head(fn, q, k, v, *args, **kwargs):
+    """Apply a single-head attention fn over (H, N, d) inputs.
+
+    A python loop (not vmap) keeps the kernel's ``lax.cond`` tile
+    skipping intact in the lowered HLO — vmap would batch the branches
+    into ``select`` and execute both.
+    """
+    outs = [fn(q[h], k[h], v[h], *args, **kwargs) for h in range(q.shape[0])]
+    return jnp.stack(outs, axis=0)

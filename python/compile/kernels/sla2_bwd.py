@@ -1,0 +1,201 @@
+"""Pallas backward kernels for SLA2 — Algorithm 3 of the paper.
+
+Gradients w.r.t. Q, K, V, phi(Q), phi(K) are derived manually (the
+paper's Appendix A); everything upstream (the phi softmax Jacobian,
+K-smoothing, the alpha mix) is left to jax autodiff in ``sla2.py``.
+
+Structure mirrors Alg. 3 exactly:
+
+  1. a plain-jnp *precompute* (Alg. 3 lines 2-6): the per-query-block
+     linear-branch gradients ``dH_i``, ``dZ_i`` and ``dQphi_i``, which
+     only need batched (b_q, d)-sized matmuls — "dH_i and dZ_i are
+     precomputed, such that the main procedure involves only a single
+     matrix addition" (Appendix A);
+  2. kernel A over query blocks (grid T_m): sparse-branch ``dQ``
+     (Alg. 3 lines 11-13, the dQ half);
+  3. kernel B over key blocks (grid T_n): ``dK_j``, ``dV_j``,
+     ``dKphi_j`` — recomputes P_ij from the saved log-sum-exp, and
+     accumulates the precomputed dH/dZ over the complement rows
+     (Alg. 3 lines 7-18).
+
+Per Sec. 5 (QAT), the backward is always full precision — even when
+the forward ran the INT8 path — using the original inputs plus the
+forward residuals (L, O_s, O_l).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-9
+
+
+def _precompute_linear_grads(qphi, kphi, v, mc, do_l, o_l, b_q: int, b_k: int):
+    """Alg. 3 lines 2-6: D^l, dH_i, dZ_i, dQphi_i (plain jnp, batched)."""
+    t_m, t_n = mc.shape
+    d = qphi.shape[-1]
+    inv = 1.0 - mc.astype(jnp.float32)                      # (T_m, T_n)
+    kp_b = kphi.reshape(t_n, b_k, d)
+    v_b = v.reshape(t_n, b_k, d)
+    h = jnp.einsum("jtd,jte->jde", kp_b, v_b)               # (T_n, d, d)
+    z = jnp.sum(kp_b, axis=1)                               # (T_n, d)
+    h_i = jnp.einsum("ij,jde->ide", inv, h)                 # (T_m, d, d)
+    z_i = jnp.einsum("ij,jd->id", inv, z)                   # (T_m, d)
+
+    qp_b = qphi.reshape(t_m, b_q, d)
+    dol_b = do_l.reshape(t_m, b_q, d)
+    dl_b = jnp.sum(do_l * o_l, axis=-1).reshape(t_m, b_q, 1)  # D^l rows
+    w = jnp.einsum("itd,id->it", qp_b, z_i)[..., None] + EPS  # Qphi_i Z_i
+    qp_w = qp_b / w                                          # (T_m, b_q, d)
+    dh_i = jnp.einsum("itd,ite->ide", qp_w, dol_b)           # (T_m, d, d)
+    dz_i = -jnp.einsum("itd,ite->ide", qp_w, dl_b)[..., 0]   # (T_m, d)
+    # dQphi_i = (dO^l H_i^T - D^l Z_i^T) / w
+    dqphi = (jnp.einsum("ite,ide->itd", dol_b, h_i)
+             - dl_b * z_i[:, None, :]) / w
+    return dh_i, dz_i, dqphi.reshape(t_m * b_q, d)
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, mc_ref, lse_ref, ds_ref, dos_ref,
+                   dq_ref, *, b_k: int):
+    """Kernel A, grid (T_m,): sparse-branch dQ for query block i."""
+    b_q, d = q_ref.shape
+    t_n = mc_ref.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    q = q_ref[...].astype(jnp.float32)
+    lse = lse_ref[...].astype(jnp.float32)      # (b_q,)
+    ds = ds_ref[...].astype(jnp.float32)        # (b_q,)  D^s rows
+    dos = dos_ref[...].astype(jnp.float32)      # (b_q, d)
+
+    def body(j, dq):
+        kj = k_ref[pl.ds(j * b_k, b_k), :].astype(jnp.float32)
+        vj = v_ref[pl.ds(j * b_k, b_k), :].astype(jnp.float32)
+        mij = mc_ref[0, j]
+
+        def sparse(_):
+            s = (q @ kj.T) * scale                       # (b_q, b_k)
+            p = jnp.exp(s - lse[:, None])                # recovered P_ij
+            dp = dos @ vj.T                              # (b_q, b_k)
+            dsij = p * (dp - ds[:, None])
+            return dq + (dsij @ kj) * scale
+
+        return jax.lax.cond(mij > 0, sparse, lambda _: dq, None)
+
+    dq = jax.lax.fori_loop(0, t_n, body, jnp.zeros((b_q, d), jnp.float32))
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, kphi_ref, mc_ref, lse_ref, ds_ref,
+                    dos_ref, dh_ref, dz_ref, dk_ref, dv_ref, dkphi_ref,
+                    *, b_q: int):
+    """Kernel B, grid (T_n,): dK_j, dV_j, dKphi_j for key block j."""
+    b_k, d = k_ref.shape
+    t_m = mc_ref.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    kj = k_ref[...].astype(jnp.float32)
+    vj = v_ref[...].astype(jnp.float32)
+    kpj = kphi_ref[...].astype(jnp.float32)
+
+    def body(i, carry):
+        dk, dv, dh, dz = carry
+        qi = q_ref[pl.ds(i * b_q, b_q), :].astype(jnp.float32)
+        lse_i = lse_ref[pl.ds(i * b_q, b_q)].astype(jnp.float32)
+        ds_i = ds_ref[pl.ds(i * b_q, b_q)].astype(jnp.float32)
+        dos_i = dos_ref[pl.ds(i * b_q, b_q), :].astype(jnp.float32)
+        mij = mc_ref[i, 0]
+
+        def sparse(_):
+            # Alg. 3 lines 11-13
+            s = (qi @ kj.T) * scale
+            p = jnp.exp(s - lse_i[:, None])              # (b_q, b_k)
+            dv_new = dv + p.T @ dos_i
+            dp = dos_i @ vj.T
+            dsij = p * (dp - ds_i[:, None])
+            dk_new = dk + (dsij.T @ qi) * scale
+            return (dk_new, dv_new, dh, dz)
+
+        def linear(_):
+            # Alg. 3 lines 14-15: the "single matrix addition"
+            dh_i = dh_ref[i].astype(jnp.float32)         # (d, d)
+            dz_i = dz_ref[i].astype(jnp.float32)         # (d,)
+            return (dk, dv, dh + dh_i, dz + dz_i)
+
+        return jax.lax.cond(mij > 0, sparse, linear, carry)
+
+    init = (jnp.zeros((b_k, d), jnp.float32), jnp.zeros((b_k, d), jnp.float32),
+            jnp.zeros((d, d), jnp.float32), jnp.zeros((d,), jnp.float32))
+    dk, dv, dh, dz = jax.lax.fori_loop(0, t_m, body, init)
+
+    # Alg. 3 line 17
+    dkphi = vj @ dh.T + dz[None, :]
+    dv = dv + kpj @ dh
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+    dkphi_ref[...] = dkphi.astype(dkphi_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("b_q", "b_k"))
+def sla2_bwd(q, k_sm, v, qphi, kphi, mc, lse, o_s, o_l, do_s, do_l,
+             *, b_q: int, b_k: int):
+    """Full Alg. 3 backward.
+
+    Returns ``(dq, dk_sm, dv, dqphi, dkphi)`` — the gradients the
+    ``custom_vjp`` in ``sla2.py`` hands back to jax autodiff.
+    """
+    n, d = q.shape
+    t_m, t_n = mc.shape
+    mc = mc.astype(jnp.int32)
+    ds_rows = jnp.sum(do_s * o_s, axis=-1)   # D^s  (Alg. 3 line 2)
+
+    dh_i, dz_i, dqphi = _precompute_linear_grads(
+        qphi, kphi, v, mc, do_l, o_l, b_q, b_k)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, b_k=b_k),
+        grid=(t_m,),
+        in_specs=[
+            pl.BlockSpec((b_q, d), lambda i: (i, 0)),    # Q tile
+            pl.BlockSpec((n, d), lambda i: (0, 0)),      # K
+            pl.BlockSpec((n, d), lambda i: (0, 0)),      # V
+            pl.BlockSpec((1, t_n), lambda i: (i, 0)),    # M_c row
+            pl.BlockSpec((b_q,), lambda i: (i,)),        # lse
+            pl.BlockSpec((b_q,), lambda i: (i,)),        # D^s
+            pl.BlockSpec((b_q, d), lambda i: (i, 0)),    # dO^s
+        ],
+        out_specs=pl.BlockSpec((b_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(q, k_sm, v, mc, lse, ds_rows, do_s)
+
+    dk, dv, dkphi = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, b_q=b_q),
+        grid=(t_n,),
+        in_specs=[
+            pl.BlockSpec((n, d), lambda j: (0, 0)),      # Q
+            pl.BlockSpec((b_k, d), lambda j: (j, 0)),    # K tile
+            pl.BlockSpec((b_k, d), lambda j: (j, 0)),    # V tile
+            pl.BlockSpec((b_k, d), lambda j: (j, 0)),    # phi(K) tile
+            pl.BlockSpec((t_m, 1), lambda j: (0, j)),    # M_c column
+            pl.BlockSpec((n,), lambda j: (0,)),          # lse
+            pl.BlockSpec((n,), lambda j: (0,)),          # D^s
+            pl.BlockSpec((n, d), lambda j: (0, 0)),      # dO^s
+            pl.BlockSpec((t_m, d, d), lambda j: (0, 0, 0)),  # dH_i
+            pl.BlockSpec((t_m, d), lambda j: (0, 0)),    # dZ_i
+        ],
+        out_specs=[
+            pl.BlockSpec((b_k, d), lambda j: (j, 0)),
+            pl.BlockSpec((b_k, d), lambda j: (j, 0)),
+            pl.BlockSpec((b_k, d), lambda j: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k_sm, v, kphi, mc, lse, ds_rows, do_s, dh_i, dz_i)
+
+    return dq, dk, dv, dqphi, dkphi

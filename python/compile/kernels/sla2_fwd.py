@@ -1,0 +1,152 @@
+"""Pallas forward kernel for SLA2 — Algorithm 2 of the paper.
+
+One fused kernel produces all three per-query-block quantities:
+
+  * ``O_s`` — sparse softmax branch over tiles with ``M_c[i,j] = 1``,
+    computed FlashAttention-style (online softmax, never materializing
+    the N x N score matrix),
+  * ``O_l`` — linear branch over the complement tiles, accumulated as a
+    running ``H = sum phi(K_j)^T V_j`` / ``Z = sum colsum(phi(K_j))``
+    state (Alg. 2 lines 6-7, 20),
+  * ``L``   — row-wise log-sum-exp of the masked scores (the residual
+    the backward kernel consumes).
+
+The alpha-mix (Alg. 2 line 27) happens OUTSIDE the kernel in plain jax
+so autodiff delivers d(alpha) for free.
+
+Hardware adaptation (DESIGN.md §3): the CUDA threadblock loop becomes a
+``grid=(T_m,)`` Pallas grid with a ``fori_loop`` over key tiles; the
+shared-memory accumulators are fp32 loop carries (VMEM scratch on a
+real TPU); tile skipping is a ``lax.cond`` on ``M_c[i,j]``, which
+lowers to an HLO conditional so the AOT artifact executed from Rust
+genuinely skips the untaken branch's matmuls.  The kernel always runs
+``interpret=True`` (CPU-PJRT cannot execute Mosaic custom-calls).
+
+Quantization (``quant=True``) follows Sec. 5 / SageAttention: INT8
+fake-quant of Q and K before the score matmul and of P, V before the
+output matmul; K arrives pre-smoothed (Alg. 2 line 2 lives in the jax
+wrapper, ``sla2.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import quant as qt
+
+NEG_INF = -1e30
+EPS = 1e-9
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, qphi_ref, kphi_ref, mc_ref,
+                os_ref, ol_ref, lse_ref, *, b_k: int, quant: bool):
+    """Grid is (T_m,): one program per query block i."""
+    b_q, d = q_ref.shape
+    t_n = mc_ref.shape[-1]
+    q = q_ref[...].astype(jnp.float32)       # (b_q, d)
+    qp = qphi_ref[...].astype(jnp.float32)   # (b_q, d)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    if quant:
+        # Alg. 2 line 13: quant(Q_i) is loop-invariant — hoist it.
+        q_q, s_q = qt.quantize_int8(q, axis=-1)
+
+    def body(j, carry):
+        m_i, l_i, acc, h, z = carry
+        kj = k_ref[pl.ds(j * b_k, b_k), :].astype(jnp.float32)    # (b_k, d)
+        vj = v_ref[pl.ds(j * b_k, b_k), :].astype(jnp.float32)    # (b_k, d)
+        kpj = kphi_ref[pl.ds(j * b_k, b_k), :].astype(jnp.float32)
+        mij = mc_ref[0, j]
+
+        def sparse_branch(_):
+            # Alg. 2 lines 13-18: one online-softmax step.
+            if quant:
+                k_q, s_k = qt.quantize_int8(kj, axis=-1)
+                s = (q_q @ k_q.T) * (s_q * s_k.T) * scale
+            else:
+                s = (q @ kj.T) * scale
+            m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[:, None])                       # (b_q, b_k)
+            corr = jnp.exp(m_i - m_new)
+            l_new = corr * l_i + jnp.sum(p, axis=-1)
+            if quant:
+                pv = qt.quant_matmul_pv(p, vj)
+            else:
+                pv = p @ vj
+            acc_new = corr[:, None] * acc + pv
+            return (m_new, l_new, acc_new, h, z)
+
+        def linear_branch(_):
+            # Alg. 2 line 20: fold tile j into the linear state.
+            return (m_i, l_i, acc, h + kpj.T @ vj, z + jnp.sum(kpj, axis=0))
+
+        return jax.lax.cond(mij > 0, sparse_branch, linear_branch, None)
+
+    init = (
+        jnp.full((b_q,), NEG_INF, jnp.float32),   # running row max m
+        jnp.zeros((b_q,), jnp.float32),           # running denominator l
+        jnp.zeros((b_q, d), jnp.float32),         # unnormalized O_s
+        jnp.zeros((d, d), jnp.float32),           # H
+        jnp.zeros((d,), jnp.float32),             # Z
+    )
+    m_i, l_i, acc, h, z = jax.lax.fori_loop(0, t_n, body, init)
+
+    # Alg. 2 lines 23-24.  l == 0 would mean the router selected no
+    # sparse tile for this row; the router guarantees >= 1, the guard
+    # just keeps the kernel NaN-free for adversarial masks in tests.
+    l_safe = jnp.where(l_i > 0, l_i, 1.0)
+    os_ref[...] = (acc / l_safe[:, None]).astype(os_ref.dtype)
+    den = qp @ z                                  # (b_q,)
+    ol_ref[...] = ((qp @ h) / (den[:, None] + EPS)).astype(ol_ref.dtype)
+    lse_ref[...] = jnp.where(l_i > 0, m_i + jnp.log(l_safe), NEG_INF
+                             ).astype(lse_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("b_q", "b_k", "quant"))
+def sla2_fwd(q, k_sm, v, qphi, kphi, mc, *, b_q: int, b_k: int,
+             quant: bool = False):
+    """Run the Alg. 2 forward kernel.
+
+    Args:
+      q:     (N, d) queries (un-smoothed; smoothing only affects K).
+      k_sm:  (N, d) SageAttention-smoothed keys.
+      v:     (N, d) values.
+      qphi:  (N, d) phi(Q) for the linear branch.
+      kphi:  (N, d) phi(K_sm).
+      mc:    (T_m, T_n) int32 block mask from the router.
+      quant: enable the INT8 QAT forward path.
+
+    Returns:
+      (o_s, o_l, lse): (N, d), (N, d), (N,).
+    """
+    n, d = q.shape
+    t_m, t_n = mc.shape
+    assert n == t_m * b_q and n == t_n * b_k, (n, t_m, b_q, t_n, b_k)
+    kernel = functools.partial(_fwd_kernel, b_k=b_k, quant=quant)
+    return pl.pallas_call(
+        kernel,
+        grid=(t_m,),
+        in_specs=[
+            pl.BlockSpec((b_q, d), lambda i: (i, 0)),   # Q tile
+            pl.BlockSpec((n, d), lambda i: (0, 0)),     # K (resident)
+            pl.BlockSpec((n, d), lambda i: (0, 0)),     # V (resident)
+            pl.BlockSpec((b_q, d), lambda i: (i, 0)),   # phi(Q) tile
+            pl.BlockSpec((n, d), lambda i: (0, 0)),     # phi(K) (resident)
+            pl.BlockSpec((1, t_n), lambda i: (i, 0)),   # M_c row
+        ],
+        out_specs=[
+            pl.BlockSpec((b_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((b_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((b_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k_sm, v, qphi, kphi, mc.astype(jnp.int32))

@@ -1,0 +1,278 @@
+"""L2: video Diffusion Transformer (DiT) with pluggable attention.
+
+Stand-in for the paper's Wan2.1 models (DESIGN.md §2): a standard
+AdaLN-zero DiT over patchified 3-D video latents, conditioned on a
+diffusion timestep and a class label (substituting text conditioning).
+SLA2 only replaces the attention op, so any DiT exercises the exact
+code path the paper fine-tunes.
+
+Design choices that matter for the AOT path:
+  * heads and batch are iterated with python loops / ``lax.map`` — not
+    ``vmap`` — so the Pallas kernel's ``lax.cond`` tile skipping
+    survives lowering as an HLO conditional (DESIGN.md §3),
+  * parameters are a nested dict pytree; ``flatten_params`` defines the
+    canonical ordering the Rust runtime uses to feed buffers,
+  * every config is pure data (``ModelConfig``) so aot.py can sweep
+    model scales without code changes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, sla2
+
+
+class ModelConfig(NamedTuple):
+    """Architecture + attention configuration for one DiT variant."""
+
+    name: str
+    video: tuple  # (T, H, W, C) latent video shape
+    patch: tuple  # (pt, ph, pw)
+    dim: int  # model width D
+    depth: int  # transformer blocks L
+    heads: int  # attention heads
+    head_dim: int  # per-head dim d
+    b_q: int  # SLA2 query block size
+    b_k: int  # SLA2 key block size
+    mlp_ratio: int = 4
+    num_classes: int = 10
+
+    @property
+    def n_tokens(self) -> int:
+        t, h, w, _ = self.video
+        pt, ph, pw = self.patch
+        return (t // pt) * (h // ph) * (w // pw)
+
+    @property
+    def patch_dim(self) -> int:
+        pt, ph, pw = self.patch
+        return pt * ph * pw * self.video[3]
+
+    @property
+    def t_m(self) -> int:
+        return self.n_tokens // self.b_q
+
+    @property
+    def t_n(self) -> int:
+        return self.n_tokens // self.b_k
+
+
+CONFIGS = {
+    # test-scale
+    "dit-tiny": ModelConfig("dit-tiny", (4, 8, 8, 3), (2, 2, 2),
+                            dim=64, depth=2, heads=2, head_dim=32,
+                            b_q=8, b_k=4),
+    # Wan2.1-1.3B stand-in (laptop scale) — N=256 tokens
+    "dit-small": ModelConfig("dit-small", (8, 16, 16, 3), (2, 2, 2),
+                             dim=256, depth=6, heads=4, head_dim=64,
+                             b_q=32, b_k=16),
+    # Wan2.1-14B stand-in — N=1024 tokens
+    "dit-base": ModelConfig("dit-base", (8, 32, 32, 3), (2, 2, 2),
+                            dim=384, depth=12, heads=6, head_dim=64,
+                            b_q=64, b_k=32),
+    # ~100M-parameter config for the end-to-end training deliverable
+    "dit-100m": ModelConfig("dit-100m", (8, 32, 32, 3), (2, 2, 2),
+                            dim=768, depth=9, heads=12, head_dim=64,
+                            b_q=64, b_k=32),
+}
+
+ATTENTION_VARIANTS = ("full", "sla2", "sla2_noquant", "sla", "vsa", "vmoba")
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in, fan_out, scale=1.0):
+    std = scale / math.sqrt(fan_in)
+    return jax.random.normal(key, (fan_in, fan_out)) * std
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """Initialize the full parameter pytree (AdaLN-zero style: gates 0)."""
+    d, hd = cfg.dim, cfg.heads * cfg.head_dim
+    keys = iter(jax.random.split(key, 16 + 8 * cfg.depth))
+    params: dict[str, Any] = {
+        "patch_w": _dense_init(next(keys), cfg.patch_dim, d),
+        "patch_b": jnp.zeros((d,)),
+        "t_w1": _dense_init(next(keys), d, d),
+        "t_b1": jnp.zeros((d,)),
+        "t_w2": _dense_init(next(keys), d, d),
+        "t_b2": jnp.zeros((d,)),
+        "y_embed": jax.random.normal(next(keys), (cfg.num_classes + 1, d))
+        * 0.02,
+        "final_ada_w": jnp.zeros((d, 2 * d)),
+        "final_ada_b": jnp.zeros((2 * d,)),
+        "final_w": jnp.zeros((d, cfg.patch_dim)),  # zero-init output
+        "final_b": jnp.zeros((cfg.patch_dim,)),
+    }
+    blocks = []
+    for _ in range(cfg.depth):
+        blk = {
+            "ada_w": jnp.zeros((d, 6 * d)),  # AdaLN-zero: gates start at 0
+            "ada_b": jnp.zeros((6 * d,)),
+            "qkv_w": _dense_init(next(keys), d, 3 * hd),
+            "qkv_b": jnp.zeros((3 * hd,)),
+            "out_w": _dense_init(next(keys), hd, d),
+            "out_b": jnp.zeros((d,)),
+            "mlp_w1": _dense_init(next(keys), d, cfg.mlp_ratio * d),
+            "mlp_b1": jnp.zeros((cfg.mlp_ratio * d,)),
+            "mlp_w2": _dense_init(next(keys), cfg.mlp_ratio * d, d),
+            "mlp_b2": jnp.zeros((d,)),
+            # attention-method parameters (SLA2 router + alpha / SLA proj).
+            # alpha starts at the kept-mass prior for the tiers in use
+            # (~10 % kept): sigmoid(-2.2) ~ 0.1 (see init_sla2_params).
+            "attn_proj_q": jnp.eye(cfg.head_dim),
+            "attn_proj_k": jnp.eye(cfg.head_dim),
+            "attn_alpha_logit": jnp.full((cfg.t_m,), -2.2),
+            "attn_proj_o": jnp.eye(cfg.head_dim) * 0.5,
+        }
+        blocks.append(blk)
+    params["blocks"] = blocks
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+def flatten_params(params):
+    """Canonical (path, leaf) list — the order Rust feeds buffers in.
+
+    jax's tree_flatten order (dict keys sorted, lists in order) IS the
+    order of the lowered HLO entry parameters, so this single function
+    defines the contract between aot.py's manifest and the runtime.
+    """
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = []
+    for path, leaf in leaves_with_paths:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def patchify(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    t, h, w, c = cfg.video
+    pt, ph, pw = cfg.patch
+    x = x.reshape(t // pt, pt, h // ph, ph, w // pw, pw, c)
+    x = x.transpose(0, 2, 4, 1, 3, 5, 6)
+    return x.reshape(cfg.n_tokens, cfg.patch_dim)
+
+
+def unpatchify(tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    t, h, w, c = cfg.video
+    pt, ph, pw = cfg.patch
+    x = tokens.reshape(t // pt, h // ph, w // pw, pt, ph, pw, c)
+    x = x.transpose(0, 3, 1, 4, 2, 5, 6)
+    return x.reshape(t, h, w, c)
+
+
+def timestep_embedding(t: jax.Array, dim: int) -> jax.Array:
+    """Sinusoidal embedding of a scalar diffusion time in [0, 1]."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / half)
+    args = t * 1000.0 * freqs
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)])
+
+
+def _layer_norm(x: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6)
+
+
+def _modulate(x, shift, scale):
+    return x * (1.0 + scale) + shift
+
+
+def _head_attention(q, k, v, blk, variant: str, k_pct: float, cfg):
+    """Dispatch one (N, head_dim) attention head to the chosen variant."""
+    if variant == "full":
+        return ref.full_attention(q, k, v)
+    if variant in ("sla2", "sla2_noquant"):
+        p = {"proj_q": blk["attn_proj_q"], "proj_k": blk["attn_proj_k"],
+             "alpha_logit": blk["attn_alpha_logit"]}
+        return sla2.sla2_attention(q, k, v, p, k_pct=k_pct, b_q=cfg.b_q,
+                                   b_k=cfg.b_k, quant=(variant == "sla2"))
+    if variant == "sla":
+        return sla2.sla_attention(q, k, v, {"proj_o": blk["attn_proj_o"]},
+                                  k_pct=k_pct, b_q=cfg.b_q, b_k=cfg.b_k)
+    if variant == "vsa":
+        return sla2.vsa_attention(q, k, v, k_pct=k_pct, b_q=cfg.b_q,
+                                  b_k=cfg.b_k)
+    if variant == "vmoba":
+        return sla2.vmoba_attention(q, k, v, k_pct=k_pct, b_q=cfg.b_q,
+                                    b_k=cfg.b_k)
+    raise ValueError(f"unknown attention variant {variant!r}")
+
+
+def apply_model(params, cfg: ModelConfig, x, t, y, *,
+                variant: str = "full", k_pct: float = 0.25,
+                collect_qkv: bool = False):
+    """DiT forward for ONE sample.
+
+    Args:
+      x: (T, H, W, C) noisy latent video.
+      t: scalar diffusion time in [0, 1].
+      y: scalar int class label (num_classes = unconditional/null).
+
+    Returns the velocity prediction (T, H, W, C); with
+    ``collect_qkv=True`` also a (L, heads, 3, N, head_dim) stack of the
+    attention inputs (the Stage-1 dataset of Alg. 1 line 2).
+    """
+    tokens = patchify(x, cfg) @ params["patch_w"] + params["patch_b"]
+    temb = timestep_embedding(t, cfg.dim)
+    temb = jnp.tanh(temb @ params["t_w1"] + params["t_b1"])
+    temb = temb @ params["t_w2"] + params["t_b2"]
+    cond = temb + params["y_embed"][y]
+
+    qkv_log = []
+    h = tokens
+    for blk in params["blocks"]:
+        ada = cond @ blk["ada_w"] + blk["ada_b"]
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(ada, 6)
+        a_in = _modulate(_layer_norm(h), sh1, sc1)
+        qkv = a_in @ blk["qkv_w"] + blk["qkv_b"]
+        qkv = qkv.reshape(cfg.n_tokens, 3, cfg.heads, cfg.head_dim)
+        heads_out = []
+        for hh in range(cfg.heads):
+            q, k, v = qkv[:, 0, hh], qkv[:, 1, hh], qkv[:, 2, hh]
+            if collect_qkv:
+                qkv_log.append(jnp.stack([q, k, v]))
+            heads_out.append(_head_attention(q, k, v, blk, variant, k_pct,
+                                             cfg))
+        attn = jnp.concatenate(heads_out, axis=-1) @ blk["out_w"] + blk[
+            "out_b"]
+        h = h + g1 * attn
+        m_in = _modulate(_layer_norm(h), sh2, sc2)
+        m = jax.nn.gelu(m_in @ blk["mlp_w1"] + blk["mlp_b1"])
+        h = h + g2 * (m @ blk["mlp_w2"] + blk["mlp_b2"])
+
+    fsh, fsc = jnp.split(cond @ params["final_ada_w"] + params["final_ada_b"],
+                         2)
+    out = _modulate(_layer_norm(h), fsh, fsc) @ params["final_w"] + params[
+        "final_b"]
+    vel = unpatchify(out, cfg)
+    if collect_qkv:
+        stack = jnp.stack(qkv_log).reshape(cfg.depth, cfg.heads, 3,
+                                           cfg.n_tokens, cfg.head_dim)
+        return vel, stack
+    return vel
+
+
+def apply_model_batch(params, cfg, xs, ts, ys, **kw):
+    """Batched forward via ``lax.map`` (keeps HLO conditionals intact)."""
+    return jax.lax.map(
+        lambda args: apply_model(params, cfg, *args, **kw), (xs, ts, ys))

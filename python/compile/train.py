@@ -1,0 +1,202 @@
+"""Two-stage SLA2 training (paper Alg. 1), exported as pure step functions.
+
+Stage 1  — initialize the router R and alpha: minimize
+           MSE(FullAttn(Q,K,V), SLA2_soft(Q,K,V)) over (proj_q, proj_k,
+           alpha_logit) per layer, with the differentiable SoftTop-k.
+Stage 2  — fine-tune the diffusion model end-to-end with the Pallas
+           SLA2 op (hard Top-k, QAT forward), training all parameters
+           *including alpha but excluding R* (Alg. 1 line 7).
+
+Both stages are hand-rolled Adam so the whole optimizer lives inside
+the exported HLO: the Rust trainer only shuttles tensors.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import diffusion, model as model_lib
+from .kernels import ref, router
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+# Stage 2 trains Theta and alpha but NOT the router projections.
+STAGE2_FROZEN = ("attn_proj_q", "attn_proj_k")
+
+
+def init_opt_state(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def adam_update(params, grads, m, v, step, lr):
+    """One Adam step over arbitrary pytrees (bias-corrected)."""
+    step = step + 1
+    m = jax.tree_util.tree_map(
+        lambda a, g: ADAM_B1 * a + (1 - ADAM_B1) * g, m, grads)
+    v = jax.tree_util.tree_map(
+        lambda a, g: ADAM_B2 * a + (1 - ADAM_B2) * g * g, v, grads)
+    bc1 = 1 - ADAM_B1 ** step
+    bc2 = 1 - ADAM_B2 ** step
+    params = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2)
+                                                 + ADAM_EPS),
+        params, m, v)
+    return params, m, v, step
+
+
+def _mask_frozen(grads, frozen_names):
+    """Zero gradients of frozen leaves (matched by dict key name)."""
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (jax.tree_util.tree_map(jnp.zeros_like, val)
+                        if k in frozen_names else walk(val))
+                    for k, val in node.items()}
+        if isinstance(node, list):
+            return [walk(x) for x in node]
+        return node
+
+    return walk(grads)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2 — end-to-end diffusion fine-tuning
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: model_lib.ModelConfig, variant: str, k_pct: float,
+                    lr: float = 1e-4, freeze_router: bool = True):
+    """Build the jittable Stage-2 step: the artifact Rust drives."""
+
+    def loss_fn(params, x0s, ys, ts, epss):
+        return diffusion.diffusion_loss(params, cfg, x0s, ys, ts, epss,
+                                        variant=variant, k_pct=k_pct)
+
+    def step_fn(params, m, v, step, x0s, ys, seed):
+        key = jax.random.PRNGKey(seed)
+        kt, ke = jax.random.split(key)
+        bsz = x0s.shape[0]
+        ts = jax.random.uniform(kt, (bsz,), minval=1e-3, maxval=1.0)
+        epss = jax.random.normal(ke, x0s.shape)
+        loss, grads = jax.value_and_grad(loss_fn)(params, x0s, ys, ts, epss)
+        if freeze_router:
+            grads = _mask_frozen(grads, STAGE2_FROZEN)
+        params, m, v, step = adam_update(params, grads, m, v, step, lr)
+        return params, m, v, step, loss
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# Stage 1 — router + alpha initialization
+# ---------------------------------------------------------------------------
+
+
+def extract_stage1_params(params, cfg):
+    """The Stage-1 trainable subset: (proj_q, proj_k, alpha_logit) / layer."""
+    return [{"proj_q": b["attn_proj_q"], "proj_k": b["attn_proj_k"],
+             "alpha_logit": b["attn_alpha_logit"]}
+            for b in params["blocks"]]
+
+
+def merge_stage1_params(params, rparams):
+    """Write trained Stage-1 params back into the model pytree."""
+    blocks = []
+    for b, rp in zip(params["blocks"], rparams):
+        nb = dict(b)
+        nb["attn_proj_q"] = rp["proj_q"]
+        nb["attn_proj_k"] = rp["proj_k"]
+        nb["attn_alpha_logit"] = rp["alpha_logit"]
+        blocks.append(nb)
+    out = dict(params)
+    out["blocks"] = blocks
+    return out
+
+
+def stage1_loss(rparams, qkv_stack, cfg, k_pct: float, tau: float = 0.1):
+    """MSE between SLA2 (soft routing) and full attention, averaged over
+
+    layers and heads.  ``qkv_stack``: (L, heads, 3, N, head_dim) — the
+    dataset D of Alg. 1 line 2."""
+    losses = []
+    for layer in range(cfg.depth):
+        rp = router.RouterParams(rparams[layer]["proj_q"],
+                                 rparams[layer]["proj_k"])
+        alpha = jax.nn.sigmoid(rparams[layer]["alpha_logit"])
+        for hh in range(cfg.heads):
+            q, k, v = (qkv_stack[layer, hh, 0], qkv_stack[layer, hh, 1],
+                       qkv_stack[layer, hh, 2])
+            target = ref.full_attention(q, k, v)
+            mc = router.learnable_mask(q, k, rp, k_pct, cfg.b_q, cfg.b_k,
+                                       soft=True, tau=tau)
+            pred = ref.sla2_attention_soft(q, k, v, mc, alpha, cfg.b_q,
+                                           cfg.b_k)
+            losses.append(jnp.mean((pred - target) ** 2))
+    return jnp.mean(jnp.stack(losses))
+
+
+def make_stage1_step(cfg: model_lib.ModelConfig, k_pct: float,
+                     lr: float = 1e-3, tau: float = 0.1):
+    def step_fn(rparams, m, v, step, qkv_stack):
+        loss, grads = jax.value_and_grad(stage1_loss)(rparams, qkv_stack,
+                                                      cfg, k_pct, tau)
+        rparams, m, v, step = adam_update(rparams, grads, m, v, step, lr)
+        return rparams, m, v, step, loss
+
+    return step_fn
+
+
+def make_collect_qkv(cfg: model_lib.ModelConfig):
+    """Build the QKV-sampling fn (Alg. 1 line 2): one forward of the
+
+    FULL-attention model on a noised sample, returning every layer's
+    attention inputs."""
+
+    def collect(params, x0, y, t, eps):
+        xt = diffusion.noise_sample(x0, t, eps)
+        _, stack = model_lib.apply_model(params, cfg, xt, t, y,
+                                         variant="full", collect_qkv=True)
+        return stack
+
+    return collect
+
+
+# ---------------------------------------------------------------------------
+# synthetic video data (JAX mirror of rust/src/video/synth.rs)
+# ---------------------------------------------------------------------------
+
+
+def synthetic_video(key, cfg: model_lib.ModelConfig, label: jax.Array):
+    """A moving-Gaussian-blob clip; class label sets the motion direction.
+
+    Deterministic dynamics give real temporal structure (motion
+    smoothness / subject consistency proxies measure something real).
+    """
+    t, h, w, c = cfg.video
+    k1, k2 = jax.random.split(key)
+    angle = 2.0 * jnp.pi * label.astype(jnp.float32) / cfg.num_classes
+    speed = 0.25 + 0.5 * jax.random.uniform(k1)
+    cx0 = 0.25 + 0.5 * jax.random.uniform(k2)
+    cy0 = 0.25 + 0.5 * jax.random.uniform(k1)
+    ts = jnp.arange(t, dtype=jnp.float32) / t
+    cx = (cx0 + speed * ts * jnp.cos(angle)) % 1.0  # (T,)
+    cy = (cy0 + speed * ts * jnp.sin(angle)) % 1.0
+    ys = jnp.arange(h, dtype=jnp.float32)[None, :, None] / h
+    xs = jnp.arange(w, dtype=jnp.float32)[None, None, :] / w
+    d2 = (ys - cy[:, None, None]) ** 2 + (xs - cx[:, None, None]) ** 2
+    blob = jnp.exp(-d2 / 0.02)  # (T, H, W)
+    chans = jnp.stack([blob * (0.5 + 0.5 * jnp.cos(angle + i))
+                       for i in range(c)], axis=-1)
+    return 2.0 * chans - 0.5  # roughly zero-centered
+
+
+def synthetic_batch(key, cfg: model_lib.ModelConfig, batch: int):
+    keys = jax.random.split(key, batch + 1)
+    ys = jax.random.randint(keys[0], (batch,), 0, cfg.num_classes)
+    xs = jnp.stack([synthetic_video(keys[i + 1], cfg, ys[i])
+                    for i in range(batch)])
+    return xs, ys

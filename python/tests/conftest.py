@@ -1,0 +1,28 @@
+"""Shared fixtures + hypothesis profile for the kernel test suite."""
+
+import jax
+import pytest
+from hypothesis import HealthCheck, settings
+
+# interpret-mode pallas is slow; keep sweeps small but meaningful and
+# disable wall-clock deadlines (first call pays trace+compile).
+settings.register_profile(
+    "kernels",
+    max_examples=8,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    derandomize=True,
+)
+settings.load_profile("kernels")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+def qkv(key, n, d, scale=1.0):
+    kq, kk, kv = jax.random.split(key, 3)
+    return (scale * jax.random.normal(kq, (n, d)),
+            scale * jax.random.normal(kk, (n, d)),
+            scale * jax.random.normal(kv, (n, d)))

@@ -1,0 +1,118 @@
+"""AOT pipeline tests: manifest consistency + HLO text sanity.
+
+These validate the Python→Rust contract without needing PJRT: every
+artifact file exists, declared I/O arity matches the flattened example
+args, params layouts match the .bin sizes, and the lowered HLO text
+declares exactly the inputs the manifest promises (the DCE-anchor
+regression, see aot.py::_anchor_params).
+"""
+
+import json
+import os
+import re
+
+import jax
+import pytest
+
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built — run `make artifacts`")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_artifact_files_exist(manifest):
+    assert manifest["artifacts"], "no artifacts recorded"
+    for a in manifest["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["file"]
+        assert a["kind"] in ("denoise", "train_step", "stage1_step",
+                             "collect_qkv", "attn")
+        assert a["inputs"] and a["outputs"]
+
+
+def test_params_bins_match_layouts(manifest):
+    for p in manifest["params"]:
+        path = os.path.join(ART, p["file"])
+        total = sum(t["size"] for t in p["tensors"])
+        assert os.path.getsize(path) == 4 * total, p["file"]
+        # offsets are contiguous and ordered
+        off = 0
+        for t in p["tensors"]:
+            assert t["offset"] == off
+            import math
+            assert t["size"] == math.prod(t["shape"]) if t["shape"] else 1
+            off += t["size"]
+
+
+def test_configs_match_source_of_truth(manifest):
+    for name, cj in manifest["configs"].items():
+        cfg = M.CONFIGS[name]
+        assert cj["n_tokens"] == cfg.n_tokens
+        assert cj["dim"] == cfg.dim
+        assert cj["depth"] == cfg.depth
+        assert cj["b_q"] == cfg.b_q and cj["b_k"] == cfg.b_k
+
+
+def _hlo_entry_param_count(path):
+    """Count parameter instructions in the ENTRY computation."""
+    with open(path) as f:
+        text = f.read()
+    entry = text[text.index("ENTRY"):]
+    return len(re.findall(r"= [a-z0-9]+\[[^\]]*\][^=]*? parameter\(\d+\)",
+                          entry))
+
+
+def test_denoise_arity_matches_params_plus_io(manifest):
+    by_name = {a["name"]: a for a in manifest["artifacts"]}
+    layout = {p["config"]: p for p in manifest["params"]}
+    for a in manifest["artifacts"]:
+        if a["kind"] != "denoise":
+            continue
+        cfgname = a["meta"]["config"]
+        n_params = len(layout[cfgname]["tensors"])
+        assert len(a["inputs"]) == n_params + 3, a["name"]
+    assert by_name  # used
+
+
+def test_hlo_declares_all_manifest_inputs(manifest):
+    """The DCE regression: lowered HLO must keep every declared input."""
+    for a in manifest["artifacts"]:
+        if a["kind"] not in ("denoise", "collect_qkv"):
+            continue
+        path = os.path.join(ART, a["file"])
+        n = _hlo_entry_param_count(path)
+        assert n == len(a["inputs"]), (
+            f"{a['name']}: HLO entry has {n} parameters, manifest "
+            f"declares {len(a['inputs'])} — unused-input DCE regressed")
+
+
+def test_train_step_output_arity(manifest):
+    for a in manifest["artifacts"]:
+        if a["kind"] != "train_step":
+            continue
+        n = a["meta"]["n_param_tensors"]
+        # params + m + v + step + loss
+        assert len(a["outputs"]) == 3 * n + 2, a["name"]
+        # inputs: state (3n + 1) + x0s + ys + seed
+        assert len(a["inputs"]) == 3 * n + 4, a["name"]
+
+
+def test_flatten_order_is_jax_flatten_order():
+    """flatten_params must equal tree_flatten's leaf order — the single
+
+    assumption the whole params-bin contract rests on."""
+    cfg = M.CONFIGS["dit-tiny"]
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    named = [leaf for _, leaf in M.flatten_params(params)]
+    plain = jax.tree_util.tree_leaves(params)
+    assert len(named) == len(plain)
+    for a, b in zip(named, plain):
+        assert a is b

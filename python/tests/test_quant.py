@@ -1,0 +1,88 @@
+"""INT8 quantization substrate tests (the QAT forward path of Sec. 5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import quant as qt
+from compile.kernels import ref
+
+from .conftest import qkv
+
+
+def test_quantize_int8_values_are_integers_in_range():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 32)) * 3.0
+    x_q, s = qt.quantize_int8(x)
+    a = np.array(x_q)
+    np.testing.assert_allclose(a, np.round(a))
+    assert (np.abs(a) <= 127).all()
+    assert (np.array(s) > 0).all()
+
+
+@given(st.integers(0, 300), st.floats(0.1, 10.0))
+def test_fake_quant_bounded_error(seed, scale):
+    """Round-trip error per element is at most half a quantization step."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 16)) * scale
+    err = jnp.abs(qt.fake_quant(x) - x)
+    step = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    assert bool(jnp.all(err <= 0.5 * step + 1e-6))
+
+
+def test_fake_quant_idempotent():
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16))
+    y = qt.fake_quant(x)
+    np.testing.assert_allclose(np.array(qt.fake_quant(y)), np.array(y),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_ste_gradient_is_identity():
+    """QAT backward = clean FP gradient (Sec. 5, 'backward FP16-only')."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 16))
+    g = jax.grad(lambda t: jnp.sum(qt.fake_quant_ste(t) * 3.0))(x)
+    np.testing.assert_allclose(np.array(g), np.full((8, 16), 3.0), atol=1e-6)
+
+
+def test_quant_matmul_qk_close_to_exact():
+    q, k, _ = qkv(jax.random.PRNGKey(3), 32, 16)
+    exact = q @ k.T
+    approx = qt.quant_matmul_qk(q, k)
+    rel = float(ref.attention_relative_error(approx, exact))
+    assert rel < 0.02, rel
+
+
+def test_quant_matmul_pv_close_to_exact():
+    key = jax.random.PRNGKey(4)
+    p = jax.nn.softmax(jax.random.normal(key, (8, 32)), -1)
+    p = p / p.max(-1, keepdims=True)  # emulate post exp(S - m) range
+    v = jax.random.normal(key, (32, 16))
+    rel = float(ref.attention_relative_error(qt.quant_matmul_pv(p, v), p @ v))
+    assert rel < 0.05, rel
+
+
+def test_smoothing_reduces_qk_quant_error():
+    """The reason Alg. 2 line 2 exists: smoothed K quantizes better when
+
+    K has a large common offset."""
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (32, 16))
+    k = jax.random.normal(jax.random.PRNGKey(6), (32, 16)) + 8.0  # offset
+    # compare softmax outputs (what actually matters downstream)
+    v = jax.random.normal(jax.random.PRNGKey(7), (32, 16))
+    d = 16
+
+    def attn_from_scores(s):
+        return jax.nn.softmax(s / jnp.sqrt(jnp.float32(d)), -1) @ v
+
+    o_exact = attn_from_scores(q @ k.T)
+    e_raw = ref.attention_relative_error(
+        attn_from_scores(qt.quant_matmul_qk(q, k)), o_exact)
+    ks = ref.smooth_k(k)
+    e_smooth = ref.attention_relative_error(
+        attn_from_scores(qt.quant_matmul_qk(q, ks)), o_exact)
+    assert float(e_smooth) < float(e_raw)
+
+
+def test_quant_error_metric_zero_for_exactly_representable():
+    x = jnp.array([[127.0, -127.0, 64.0, 0.0]])
+    assert float(qt.quant_error(x)) < 1e-6

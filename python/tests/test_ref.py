@@ -1,0 +1,165 @@
+"""Reference-oracle invariants: the math of Sec. 2.2 pinned down in code.
+
+These tests validate ref.py against *independent* formulations (dense
+numpy, the paper's equations) so the oracle itself is trustworthy
+before the Pallas kernels are tested against it.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref, router
+
+from .conftest import qkv
+
+
+def make_case(seed=0, n=64, d=16, b_q=8, b_k=4, k_pct=0.25):
+    key = jax.random.PRNGKey(seed)
+    q, k, v = qkv(key, n, d)
+    mc = router.magnitude_topk_mask(q, k, k_pct, b_q, b_k)
+    return q, k, v, mc, b_q, b_k
+
+
+def test_full_attention_vs_numpy():
+    q, k, v, *_ = make_case()
+    s = np.array(q) @ np.array(k).T / np.sqrt(q.shape[-1])
+    e = np.exp(s - s.max(-1, keepdims=True))
+    p = e / e.sum(-1, keepdims=True)
+    np.testing.assert_allclose(np.array(ref.full_attention(q, k, v)),
+                               p @ np.array(v), rtol=2e-5, atol=2e-5)
+
+
+def test_full_attention_lse_consistent():
+    q, k, v, *_ = make_case(1)
+    o1 = ref.full_attention(q, k, v)
+    o2, lse = ref.full_attention_lse(q, k, v)
+    np.testing.assert_allclose(np.array(o1), np.array(o2), atol=1e-5)
+    # lse really is log sum exp of the score rows
+    s = np.array(q) @ np.array(k).T / np.sqrt(q.shape[-1])
+    np.testing.assert_allclose(np.array(lse),
+                               np.log(np.exp(s).sum(-1)), rtol=1e-4)
+
+
+def test_block_linear_matches_dense_form():
+    """Alg. 2's H/Z block-state form == norm(phi(Q)phi(K)^T ⊙ (1-M)) V."""
+    q, k, v, mc, b_q, b_k = make_case(2)
+    a = ref.masked_linear_attention(q, k, v, mc, b_q, b_k)
+    b = ref.dense_masked_linear_attention(q, k, v, mc, b_q, b_k)
+    np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-4, atol=1e-5)
+
+
+def test_decomposition_eq5():
+    """P = P1 + P2 (Eq. 5): the slices reassemble full attention."""
+    q, k, v, mc, b_q, b_k = make_case(3)
+    p1v, p2v, _ = ref.decomposition_terms(q, k, v, mc, b_q, b_k)
+    np.testing.assert_allclose(np.array(p1v + p2v),
+                               np.array(ref.full_attention(q, k, v)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_scale_mismatch_eq9():
+    """P1 V = alpha* ⊙ O_s (Eq. 9) — the mismatch SLA2 fixes."""
+    q, k, v, mc, b_q, b_k = make_case(4)
+    p1v, _, alpha_star = ref.decomposition_terms(q, k, v, mc, b_q, b_k)
+    o_s = ref.block_sparse_attention(q, k, v, mc, b_q, b_k)
+    np.testing.assert_allclose(np.array(alpha_star * o_s), np.array(p1v),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_oracle_alpha_bound():
+    """alpha* = P1 @ 1 lies in (0, 1] — it is a probability mass."""
+    q, k, v, mc, b_q, b_k = make_case(5)
+    _, _, alpha_star = ref.decomposition_terms(q, k, v, mc, b_q, b_k)
+    a = np.array(alpha_star)
+    assert (a > 0).all() and (a <= 1 + 1e-6).all()
+
+
+def test_sla2_with_oracle_alpha_beats_sla_form():
+    """Sec. 2.2's core claim: the alpha-mix with the oracle alpha gives a
+
+    strictly better sparse-branch reconstruction than SLA's un-scaled
+    ``O_s + (P2 V)`` form."""
+    q, k, v, mc, b_q, b_k = make_case(6)
+    o_full = ref.full_attention(q, k, v)
+    p1v, p2v, alpha_star = ref.decomposition_terms(q, k, v, mc, b_q, b_k)
+    o_s = ref.block_sparse_attention(q, k, v, mc, b_q, b_k)
+    # SLA2 ideal: alpha* O_s + P2 V == P V exactly
+    err_sla2 = ref.attention_relative_error(alpha_star * o_s + p2v, o_full)
+    # SLA ideal (perfect linear branch, identity proj): O_s + P2 V
+    err_sla = ref.attention_relative_error(o_s + p2v, o_full)
+    assert float(err_sla2) < 1e-5
+    assert float(err_sla) > float(err_sla2)
+
+
+def test_sla2_hard_soft_equivalence():
+    """Soft formulation at m in {0,1} == hard formulation (Stage-1 vs 2)."""
+    q, k, v, mc, b_q, b_k = make_case(7)
+    alpha = jax.random.uniform(jax.random.PRNGKey(7), (mc.shape[0],))
+    hard = ref.sla2_attention(q, k, v, mc, alpha, b_q, b_k)
+    soft = ref.sla2_attention_soft(q, k, v, mc.astype(jnp.float32), alpha,
+                                   b_q, b_k)
+    np.testing.assert_allclose(np.array(hard), np.array(soft),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_sla2_all_sparse_recovers_full():
+    """mc == all-ones, alpha == 1: SLA2 degenerates to full attention."""
+    q, k, v, _, b_q, b_k = make_case(8)
+    mc = jnp.ones((q.shape[0] // b_q, q.shape[0] // b_k))
+    alpha = jnp.ones((mc.shape[0],))
+    o = ref.sla2_attention(q, k, v, mc, alpha, b_q, b_k, smooth=False)
+    np.testing.assert_allclose(np.array(o),
+                               np.array(ref.full_attention(q, k, v)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_smoothing_softmax_invariance():
+    """K-smoothing must not change full attention output (Sec. 5)."""
+    q, k, v, *_ = make_case(9)
+    o1 = ref.full_attention(q, k, v)
+    o2 = ref.full_attention(q, ref.smooth_k(k), v)
+    np.testing.assert_allclose(np.array(o1), np.array(o2), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_sla_attention_shape_and_identity_proj():
+    q, k, v, mc, b_q, b_k = make_case(10)
+    proj = jnp.eye(q.shape[-1])
+    o = ref.sla_attention(q, k, v, mc, proj, b_q, b_k)
+    o_s = ref.block_sparse_attention(q, k, v, mc, b_q, b_k)
+    o_l = ref.masked_linear_attention(q, k, v, mc, b_q, b_k)
+    np.testing.assert_allclose(np.array(o), np.array(o_s + o_l), atol=1e-5)
+
+
+def test_relative_error_metric():
+    x = jnp.ones((4, 4))
+    assert float(ref.attention_relative_error(x, x)) < 1e-8
+    assert abs(float(ref.attention_relative_error(1.1 * x, x)) - 0.1) < 1e-5
+
+
+@pytest.mark.parametrize("k_pct", [0.1, 0.25, 0.5, 0.9])
+def test_sla2_error_decreases_with_density(k_pct):
+    """More sparse-branch blocks => closer to full attention (with the
+
+    oracle alpha), the monotonicity Table 2's sparsity sweep relies on."""
+    q, k, v, _, b_q, b_k = make_case(11)
+    mc = router.magnitude_topk_mask(q, k, k_pct, b_q, b_k)
+    _, _, alpha_star = ref.decomposition_terms(q, k, v, mc, b_q, b_k)
+    alpha = alpha_star.reshape(-1, b_q).mean(-1)
+    o = ref.sla2_attention(q, k, v, mc, alpha, b_q, b_k, smooth=False)
+    err = float(ref.attention_relative_error(o, ref.full_attention(q, k, v)))
+    # store on the function for the ordering check below
+    test_sla2_error_decreases_with_density.errs[k_pct] = err
+
+
+test_sla2_error_decreases_with_density.errs = {}
+
+
+def test_sla2_error_ordering():
+    errs = test_sla2_error_decreases_with_density.errs
+    if len(errs) == 4:
+        ks = sorted(errs)
+        vals = [errs[k] for k in ks]
+        assert vals[0] >= vals[-1], vals

@@ -1,0 +1,128 @@
+"""Router tests: Top-k exactness, SoftTop-k row-sum property (Eq. 17),
+
+identity-projection equivalence (Sec. 8 insight 1.c), gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import router
+
+from .conftest import qkv
+
+
+def test_top_k_count_floor():
+    assert router.top_k_count(0.03, 16) == 1  # never zero blocks
+    assert router.top_k_count(0.25, 16) == 4
+    assert router.top_k_count(1.0, 16) == 16
+
+
+def test_hard_topk_exact_count():
+    p = jax.random.uniform(jax.random.PRNGKey(0), (8, 16))
+    m = router.hard_topk_mask(p, 0.25)
+    np.testing.assert_array_equal(np.array(m.sum(-1)), np.full(8, 4.0))
+
+
+def test_hard_topk_with_ties():
+    """Duplicate scores must still produce an exact per-row count."""
+    p = jnp.ones((4, 8))
+    m = router.hard_topk_mask(p, 0.5)
+    np.testing.assert_array_equal(np.array(m.sum(-1)), np.full(4, 4.0))
+
+
+def test_hard_topk_selects_largest():
+    p = jnp.arange(12.0).reshape(1, 12)
+    m = router.hard_topk_mask(p, 0.25)  # top 3
+    assert np.array(m[0, -3:]).sum() == 3 and np.array(m[0, :-3]).sum() == 0
+
+
+@given(st.integers(0, 500), st.sampled_from([0.05, 0.1, 0.25, 0.5]),
+       st.sampled_from([8, 16, 32]))
+def test_soft_topk_row_sum(seed, k_pct, t_n):
+    """Eq. 17's constraint: every row of SoftTop-k sums to k% * T_n."""
+    p = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(seed), (6, t_n)), -1)
+    m = router.soft_topk(p, k_pct)
+    target = router.top_k_count(k_pct, t_n)
+    np.testing.assert_allclose(np.array(m.sum(-1)), np.full(6, target),
+                               rtol=1e-5)
+    assert (np.array(m) >= 0).all() and (np.array(m) <= 1).all()
+
+
+def test_soft_topk_approaches_hard_at_low_tau():
+    """With well-separated scores (gap >> tau), SoftTop-k -> hard Top-k.
+
+    (With near-ties at the k-th boundary the soft operator splits mass
+    between the tied entries — correct behaviour, excluded here.)"""
+    base = jnp.linspace(0.0, 1.0, 16)  # gaps of 1/15 >> tau
+    p = jnp.stack([jnp.roll(base, s) for s in range(4)])
+    hard = router.hard_topk_mask(p, 0.25)
+    soft = router.soft_topk(p, 0.25, tau=1e-3)
+    np.testing.assert_allclose(np.array(soft), np.array(hard), atol=1e-3)
+
+
+def test_soft_topk_differentiable():
+    p0 = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(4), (4, 16)), -1)
+
+    def loss(p):
+        return jnp.sum(router.soft_topk(p, 0.25) ** 2)
+
+    g = jax.grad(loss)(p0)
+    assert np.isfinite(np.array(g)).all()
+    assert float(jnp.abs(g).max()) > 0
+
+
+def test_identity_proj_recovers_magnitude_router():
+    """proj_q = proj_k = I  ==  SLA's heuristic (Sec. 8, insight 1.c)."""
+    q, k, _ = qkv(jax.random.PRNGKey(5), 64, 16)
+    params = router.init_router_params(16)
+    m1 = router.learnable_mask(q, k, params, 0.25, 8, 4)
+    m2 = router.magnitude_topk_mask(q, k, 0.25, 8, 4)
+    np.testing.assert_array_equal(np.array(m1), np.array(m2))
+
+
+def test_learnable_mask_row_budget():
+    q, k, _ = qkv(jax.random.PRNGKey(6), 64, 16)
+    params = router.RouterParams(
+        jax.random.normal(jax.random.PRNGKey(7), (16, 16)) * 0.3,
+        jax.random.normal(jax.random.PRNGKey(8), (16, 16)) * 0.3)
+    m = router.learnable_mask(q, k, params, 0.25, 8, 4)
+    np.testing.assert_array_equal(np.array(m.sum(-1)), np.full(8, 4.0))
+
+
+def test_vmoba_mask_budget_and_shape():
+    q, k, _ = qkv(jax.random.PRNGKey(9), 64, 16)
+    m = router.vmoba_gate_mask(q, k, 0.25, 8, 4)
+    assert m.shape == (8, 16)
+    np.testing.assert_array_equal(np.array(m.sum(-1)), np.full(8, 4.0))
+
+
+@pytest.mark.parametrize("k_pct,expect", [(0.05, 1 - 1 / 16), (0.25, 0.75)])
+def test_mask_sparsity(k_pct, expect):
+    q, k, _ = qkv(jax.random.PRNGKey(10), 64, 16)
+    m = router.magnitude_topk_mask(q, k, k_pct, 8, 4)
+    assert abs(float(router.mask_sparsity(m)) - expect) < 1e-6
+
+
+def test_pool_blocks():
+    x = jnp.arange(12.0).reshape(6, 2)
+    p = router.pool_blocks(x, 3)
+    np.testing.assert_allclose(np.array(p),
+                               np.array([[2.0, 3.0], [8.0, 9.0]]))
+
+
+def test_router_grad_flows_to_projections():
+    """Stage-1 trainability: d loss / d proj_q must be nonzero through
+
+    SoftTop-k (the whole point of replacing hard Top-k)."""
+    q, k, _ = qkv(jax.random.PRNGKey(11), 64, 16)
+
+    def loss(pq):
+        params = router.RouterParams(pq, jnp.eye(16))
+        m = router.learnable_mask(q, k, params, 0.25, 8, 4, soft=True)
+        return jnp.sum(m * jnp.arange(16.0)[None, :])
+
+    g = jax.grad(loss)(jnp.eye(16))
+    assert float(jnp.abs(g).max()) > 1e-8

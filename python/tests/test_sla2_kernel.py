@@ -1,0 +1,266 @@
+"""Pallas kernel vs pure-jnp oracle — the core correctness signal.
+
+Covers: forward (both branches + lse) across a hypothesis shape sweep,
+the INT8 QAT path, degenerate masks, the custom_vjp backward against
+``jax.grad`` of the reference, alpha/variant wrappers, multi-head.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref, router, sla2
+from compile.kernels.full_attn import flash_attention
+from compile.kernels.sla2_fwd import sla2_fwd
+
+from .conftest import qkv
+
+
+def branches_via_ref(q, k, v, mc, b_q, b_k, smooth=True):
+    k_sm = ref.smooth_k(k) if smooth else k
+    o_s, lse = ref.block_sparse_attention_lse(q, k_sm, v, mc, b_q, b_k)
+    o_l = ref.masked_linear_attention(q, k_sm, v, mc, b_q, b_k)
+    return o_s, o_l, lse
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+@given(st.sampled_from([(32, 8, 8, 4), (64, 16, 8, 8), (64, 16, 16, 4),
+                        (128, 32, 16, 8), (96, 8, 8, 4)]),
+       st.sampled_from([0.1, 0.25, 0.5]),
+       st.integers(0, 100))
+def test_fwd_matches_ref(shape, k_pct, seed):
+    n, d, b_q, b_k = shape
+    q, k, v = qkv(jax.random.PRNGKey(seed), n, d)
+    mc = router.magnitude_topk_mask(q, k, k_pct, b_q, b_k)
+    o_s, o_l, lse = sla2.sla2_branches(q, k, v, mc, b_q=b_q, b_k=b_k)
+    r_s, r_l, r_lse = branches_via_ref(q, k, v, mc, b_q, b_k)
+    np.testing.assert_allclose(np.array(o_s), np.array(r_s), rtol=2e-4,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.array(o_l), np.array(r_l), rtol=2e-4,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.array(lse), np.array(r_lse), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_fwd_all_ones_mask_equals_flash():
+    """mc = 1 everywhere: the sparse branch IS FlashAttention."""
+    q, k, v = qkv(jax.random.PRNGKey(1), 64, 16)
+    mc = jnp.ones((8, 16))
+    o_s, _, lse = sla2.sla2_branches(q, k, v, mc, b_q=8, b_k=4, smooth=False)
+    fo, flse = flash_attention(q, k, v, b_q=8, b_k=4)
+    np.testing.assert_allclose(np.array(o_s), np.array(fo), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.array(lse), np.array(flse), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_fwd_all_zeros_mask_is_pure_linear():
+    """mc = 0 everywhere: O_l is global linear attention; O_s guarded."""
+    q, k, v = qkv(jax.random.PRNGKey(2), 64, 16)
+    mc = jnp.zeros((8, 16))
+    o_s, o_l, lse = sla2.sla2_branches(q, k, v, mc, b_q=8, b_k=4,
+                                       smooth=False)
+    dense = ref.dense_masked_linear_attention(q, k, v, mc, 8, 4)
+    np.testing.assert_allclose(np.array(o_l), np.array(dense), rtol=1e-4,
+                               atol=1e-5)
+    assert np.isfinite(np.array(o_s)).all()  # NaN guard engaged
+
+
+def test_fwd_quant_close_and_different():
+    """QAT path: close to exact (smoothed K keeps error ~1e-2) but must
+
+    actually differ (the fake-quant is real)."""
+    q, k, v = qkv(jax.random.PRNGKey(3), 64, 16)
+    mc = router.magnitude_topk_mask(q, k, 0.25, 8, 4)
+    o_s, _, _ = sla2.sla2_branches(q, k, v, mc, b_q=8, b_k=4, quant=False)
+    o_sq, _, _ = sla2.sla2_branches(q, k, v, mc, b_q=8, b_k=4, quant=True)
+    rel = float(ref.attention_relative_error(o_sq, o_s))
+    assert 1e-5 < rel < 0.05, rel
+
+
+def test_fwd_linear_branch_identical_under_quant():
+    """Quantization applies to the sparse branch only (Sec. 5)."""
+    q, k, v = qkv(jax.random.PRNGKey(4), 64, 16)
+    mc = router.magnitude_topk_mask(q, k, 0.25, 8, 4)
+    _, o_l, _ = sla2.sla2_branches(q, k, v, mc, b_q=8, b_k=4, quant=False)
+    _, o_lq, _ = sla2.sla2_branches(q, k, v, mc, b_q=8, b_k=4, quant=True)
+    np.testing.assert_allclose(np.array(o_l), np.array(o_lq), atol=1e-6)
+
+
+@given(st.integers(0, 50))
+def test_fwd_quant_sweep(seed):
+    q, k, v = qkv(jax.random.PRNGKey(seed), 32, 8)
+    mc = router.magnitude_topk_mask(q, k, 0.25, 8, 4)
+    o_sq, o_lq, _ = sla2.sla2_branches(q, k, v, mc, b_q=8, b_k=4, quant=True)
+    r_s, r_l, _ = branches_via_ref(q, k, v, mc, 8, 4)
+    assert float(ref.attention_relative_error(o_sq, r_s)) < 0.05
+    np.testing.assert_allclose(np.array(o_lq), np.array(r_l), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_fwd_per_row_mask_pattern():
+    """Adversarial mask: different block budget per row still matches."""
+    q, k, v = qkv(jax.random.PRNGKey(5), 64, 16)
+    mc = jnp.array(np.random.RandomState(0).rand(8, 16) > 0.5,
+                   dtype=jnp.float32)
+    mc = mc.at[:, 0].set(1.0)  # guarantee >= 1 sparse block per row
+    o_s, o_l, _ = sla2.sla2_branches(q, k, v, mc, b_q=8, b_k=4)
+    r_s, r_l, _ = branches_via_ref(q, k, v, mc, 8, 4)
+    np.testing.assert_allclose(np.array(o_s), np.array(r_s), rtol=2e-4,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.array(o_l), np.array(r_l), rtol=2e-4,
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+
+def _grad_case(seed, n=32, d=8, b_q=8, b_k=4, k_pct=0.3, quant=False):
+    q, k, v = qkv(jax.random.PRNGKey(seed), n, d)
+    mc = router.magnitude_topk_mask(q, k, k_pct, b_q, b_k)
+    alpha = jax.random.uniform(jax.random.PRNGKey(seed + 1), (n // b_q,))
+    w = jnp.cos(jnp.arange(n * d, dtype=jnp.float32).reshape(n, d) * 0.1)
+
+    def via_kernel(q, k, v, alpha):
+        o_s, o_l, _ = sla2.sla2_branches(q, k, v, mc, b_q=b_q, b_k=b_k,
+                                         quant=quant)
+        a = ref.alpha_rows(alpha, b_q)
+        return jnp.sum((a * o_s + (1 - a) * o_l) * w)
+
+    def via_ref(q, k, v, alpha):
+        return jnp.sum(ref.sla2_attention(q, k, v, mc, alpha, b_q, b_k) * w)
+
+    return via_kernel, via_ref, (q, k, v, alpha)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_bwd_matches_ref_grad(seed):
+    via_kernel, via_ref, args = _grad_case(seed)
+    g1 = jax.grad(via_kernel, argnums=(0, 1, 2, 3))(*args)
+    g2 = jax.grad(via_ref, argnums=(0, 1, 2, 3))(*args)
+    for name, a, b in zip("qkva", g1, g2):
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=2e-3,
+                                   atol=2e-5, err_msg=f"d{name}")
+
+
+def test_bwd_larger_shape():
+    via_kernel, via_ref, args = _grad_case(7, n=64, d=16, b_q=16, b_k=8)
+    g1 = jax.grad(via_kernel, argnums=(0, 1, 2))(*args[:3], args[3])
+    g2 = jax.grad(via_ref, argnums=(0, 1, 2))(*args[:3], args[3])
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=2e-3,
+                                   atol=2e-5)
+
+
+def test_bwd_quant_fwd_still_full_precision():
+    """QAT: gradients with quantized forward ~ clean-forward gradients
+
+    (small perturbation from the quantized residuals, never garbage)."""
+    via_kernel_q, via_ref, args = _grad_case(3, quant=True)
+    g_q = jax.grad(via_kernel_q, argnums=(0, 1, 2))(*args[:3], args[3])
+    g_c = jax.grad(via_ref, argnums=(0, 1, 2))(*args[:3], args[3])
+    for a, b in zip(g_q, g_c):
+        denom = float(jnp.linalg.norm(b)) + 1e-9
+        rel = float(jnp.linalg.norm(a - b)) / denom
+        assert rel < 0.15, rel
+        assert np.isfinite(np.array(a)).all()
+
+
+def test_bwd_alpha_gradient_formula():
+    """d(alpha) == rowsum(dO ⊙ (O_s - O_l)) pooled per block * sigmoid'."""
+    q, k, v = qkv(jax.random.PRNGKey(8), 32, 8)
+    mc = router.magnitude_topk_mask(q, k, 0.3, 8, 4)
+    logit = jnp.array([0.3, -0.2, 0.7, 0.0])
+
+    def f(logit):
+        o_s, o_l, _ = sla2.sla2_branches(q, k, v, mc, b_q=8, b_k=4)
+        a = ref.alpha_rows(jax.nn.sigmoid(logit), 8)
+        return jnp.sum(a * o_s + (1 - a) * o_l)
+
+    g = jax.grad(f)(logit)
+    o_s, o_l, _ = sla2.sla2_branches(q, k, v, mc, b_q=8, b_k=4)
+    sig = jax.nn.sigmoid(logit)
+    expect = (jnp.sum(o_s - o_l, axis=-1).reshape(4, 8).sum(-1)
+              * sig * (1 - sig))
+    np.testing.assert_allclose(np.array(g), np.array(expect), rtol=1e-3,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# wrappers / variants
+# ---------------------------------------------------------------------------
+
+
+def test_sla2_attention_end_to_end():
+    q, k, v = qkv(jax.random.PRNGKey(9), 64, 16)
+    params = sla2.init_sla2_params(16, 8)
+    o = sla2.sla2_attention(q, k, v, params, k_pct=0.25, b_q=8, b_k=4,
+                            quant=False)
+    mc = router.magnitude_topk_mask(q, k, 0.25, 8, 4)  # identity proj
+    expect = ref.sla2_attention(q, k, v, mc, jnp.full((8,), 0.5), 8, 4)
+    np.testing.assert_allclose(np.array(o), np.array(expect), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_vsa_is_pure_sparse():
+    q, k, v = qkv(jax.random.PRNGKey(10), 64, 16)
+    o = sla2.vsa_attention(q, k, v, k_pct=0.25, b_q=8, b_k=4)
+    mc = router.magnitude_topk_mask(q, k, 0.25, 8, 4)
+    expect = ref.block_sparse_attention(q, k, v, mc, 8, 4)
+    np.testing.assert_allclose(np.array(o), np.array(expect), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_sla_baseline_wrapper():
+    q, k, v = qkv(jax.random.PRNGKey(11), 64, 16)
+    proj = jax.random.normal(jax.random.PRNGKey(12), (16, 16)) * 0.1
+    o = sla2.sla_attention(q, k, v, {"proj_o": proj}, k_pct=0.25, b_q=8,
+                           b_k=4)
+    mc = router.magnitude_topk_mask(q, k, 0.25, 8, 4)
+    expect = ref.sla_attention(q, k, v, mc, proj, 8, 4)
+    np.testing.assert_allclose(np.array(o), np.array(expect), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_vmoba_wrapper_finite_and_sparse():
+    q, k, v = qkv(jax.random.PRNGKey(13), 64, 16)
+    o = sla2.vmoba_attention(q, k, v, k_pct=0.25, b_q=8, b_k=4)
+    assert np.isfinite(np.array(o)).all()
+
+
+def test_multi_head():
+    key = jax.random.PRNGKey(14)
+    q = jax.random.normal(key, (2, 64, 16))
+    k = jax.random.normal(jax.random.PRNGKey(15), (2, 64, 16))
+    v = jax.random.normal(jax.random.PRNGKey(16), (2, 64, 16))
+    o = sla2.multi_head(sla2.vsa_attention, q, k, v, k_pct=0.25, b_q=8,
+                        b_k=4)
+    assert o.shape == (2, 64, 16)
+    per_head = sla2.vsa_attention(q[1], k[1], v[1], k_pct=0.25, b_q=8, b_k=4)
+    np.testing.assert_allclose(np.array(o[1]), np.array(per_head), atol=1e-6)
+
+
+def test_sla2_quality_beats_vsa_at_same_sparsity():
+    """The paper's core quality claim, at kernel granularity: adding the
+
+    linear branch + alpha mix reduces attention error vs sparse-only."""
+    errs = {"sla2": [], "vsa": []}
+    for seed in range(5):
+        q, k, v = qkv(jax.random.PRNGKey(seed), 128, 16)
+        o_full = ref.full_attention(q, k, v)
+        mc = router.magnitude_topk_mask(q, k, 0.15, 8, 4)
+        _, _, alpha_star = ref.decomposition_terms(q, k, v, mc, 8, 4)
+        alpha = alpha_star.reshape(-1, 8).mean(-1)
+        o_sla2 = ref.sla2_attention(q, k, v, mc, alpha, 8, 4, smooth=False)
+        o_vsa = ref.block_sparse_attention(q, k, v, mc, 8, 4)
+        errs["sla2"].append(float(ref.attention_relative_error(o_sla2, o_full)))
+        errs["vsa"].append(float(ref.attention_relative_error(o_vsa, o_full)))
+    assert np.mean(errs["sla2"]) < np.mean(errs["vsa"])

@@ -1,0 +1,232 @@
+//! Typed configuration system over the artifact manifest + run configs.
+//!
+//! `ModelConfig` mirrors `python/compile/model.py::ModelConfig` and is
+//! parsed from `manifest.json` (the python side is the source of
+//! truth; Rust never hardcodes geometry).  `ServeConfig`/`TrainConfig`
+//! are the L3 runtime knobs, loadable from a JSON file or CLI flags.
+
+use anyhow::{Context, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Mirror of the L2 model geometry (from `manifest.json::configs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub video: [usize; 4], // (T, H, W, C)
+    pub patch: [usize; 3],
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub b_q: usize,
+    pub b_k: usize,
+    pub n_tokens: usize,
+    pub t_m: usize,
+    pub t_n: usize,
+    pub num_classes: usize,
+    pub param_count: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(name: &str, j: &Json) -> Result<ModelConfig> {
+        let vid = j.req("video")?.as_usize_vec()
+            .context("video shape")?;
+        let patch = j.req("patch")?.as_usize_vec().context("patch")?;
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().context(format!("config field {k}"))
+        };
+        Ok(ModelConfig {
+            name: name.to_string(),
+            video: [vid[0], vid[1], vid[2], vid[3]],
+            patch: [patch[0], patch[1], patch[2]],
+            dim: u("dim")?,
+            depth: u("depth")?,
+            heads: u("heads")?,
+            head_dim: u("head_dim")?,
+            b_q: u("b_q")?,
+            b_k: u("b_k")?,
+            n_tokens: u("n_tokens")?,
+            t_m: u("t_m")?,
+            t_n: u("t_n")?,
+            num_classes: u("num_classes")?,
+            param_count: u("param_count")?,
+        })
+    }
+
+    pub fn video_numel(&self) -> usize {
+        self.video.iter().product()
+    }
+
+    /// Number of key blocks the sparse branch keeps at `k_pct`
+    /// (mirrors `router.top_k_count`).
+    pub fn kept_blocks(&self, k_pct: f64) -> usize {
+        ((k_pct * self.t_n as f64).round() as usize).max(1)
+    }
+
+    /// Achieved block sparsity at `k_pct` (Table 1's "Sparsity" column).
+    pub fn block_sparsity(&self, k_pct: f64) -> f64 {
+        1.0 - self.kept_blocks(k_pct) as f64 / self.t_n as f64
+    }
+}
+
+/// Serving-side knobs (dynamic batcher + sampler).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub model: String,
+    pub variant: String,
+    pub tier: String,
+    pub sample_steps: usize,
+    pub max_batch: usize,
+    /// how long the batcher waits to fill a batch before dispatching
+    pub batch_window_ms: u64,
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "dit-tiny".into(),
+            variant: "sla2".into(),
+            tier: "s90".into(),
+            sample_steps: 8,
+            max_batch: 2,
+            batch_window_ms: 5,
+            queue_capacity: 256,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_args(args: &Args) -> ServeConfig {
+        let d = ServeConfig::default();
+        ServeConfig {
+            model: args.str("model", &d.model),
+            variant: args.str("variant", &d.variant),
+            tier: args.str("tier", &d.tier),
+            sample_steps: args.usize("steps", d.sample_steps),
+            max_batch: args.usize("max-batch", d.max_batch),
+            batch_window_ms: args.u64("batch-window-ms", d.batch_window_ms),
+            queue_capacity: args.usize("queue-capacity", d.queue_capacity),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> ServeConfig {
+        let d = ServeConfig::default();
+        let s = |k: &str, dv: &str| {
+            j.get(k).and_then(|v| v.as_str()).unwrap_or(dv).to_string()
+        };
+        let u = |k: &str, dv: usize| {
+            j.get(k).and_then(|v| v.as_usize()).unwrap_or(dv)
+        };
+        ServeConfig {
+            model: s("model", &d.model),
+            variant: s("variant", &d.variant),
+            tier: s("tier", &d.tier),
+            sample_steps: u("sample_steps", d.sample_steps),
+            max_batch: u("max_batch", d.max_batch),
+            batch_window_ms: u("batch_window_ms",
+                               d.batch_window_ms as usize) as u64,
+            queue_capacity: u("queue_capacity", d.queue_capacity),
+        }
+    }
+}
+
+/// Training-driver knobs (Alg. 1).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub variant: String,
+    pub tier: String,
+    pub stage1_steps: usize,
+    pub stage2_steps: usize,
+    pub batch: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "dit-tiny".into(),
+            variant: "sla2".into(),
+            tier: "s90".into(),
+            stage1_steps: 30,
+            stage2_steps: 100,
+            batch: 2,
+            seed: 42,
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_args(args: &Args) -> TrainConfig {
+        let d = TrainConfig::default();
+        TrainConfig {
+            model: args.str("model", &d.model),
+            variant: args.str("variant", &d.variant),
+            tier: args.str("tier", &d.tier),
+            stage1_steps: args.usize("stage1-steps", d.stage1_steps),
+            stage2_steps: args.usize("stage2-steps", d.stage2_steps),
+            batch: args.usize("batch", d.batch),
+            seed: args.u64("seed", d.seed),
+            log_every: args.usize("log-every", d.log_every),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{"video":[4,8,8,3],"patch":[2,2,2],"dim":64,"depth":2,
+                "heads":2,"head_dim":32,"b_q":8,"b_k":4,"n_tokens":32,
+                "t_m":4,"t_n":8,"num_classes":10,"param_count":176032}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_model_config() {
+        let c = ModelConfig::from_json("dit-tiny", &sample_json()).unwrap();
+        assert_eq!(c.video, [4, 8, 8, 3]);
+        assert_eq!(c.n_tokens, 32);
+        assert_eq!(c.video_numel(), 768);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        let j = Json::parse(r#"{"video":[1,2,3,4]}"#).unwrap();
+        assert!(ModelConfig::from_json("x", &j).is_err());
+    }
+
+    #[test]
+    fn sparsity_math() {
+        let c = ModelConfig::from_json("dit-tiny", &sample_json()).unwrap();
+        assert_eq!(c.kept_blocks(0.10), 1); // round(0.8) -> 1
+        assert_eq!(c.kept_blocks(0.5), 4);
+        assert!((c.block_sparsity(0.10) - 0.875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serve_config_from_args() {
+        let a = Args::parse_from(
+            ["--model", "dit-small", "--steps", "4"].map(String::from));
+        let s = ServeConfig::from_args(&a);
+        assert_eq!(s.model, "dit-small");
+        assert_eq!(s.sample_steps, 4);
+        assert_eq!(s.max_batch, ServeConfig::default().max_batch);
+    }
+
+    #[test]
+    fn serve_config_from_json() {
+        let j = Json::parse(r#"{"model":"m","max_batch":8}"#).unwrap();
+        let s = ServeConfig::from_json(&j);
+        assert_eq!(s.model, "m");
+        assert_eq!(s.max_batch, 8);
+    }
+}

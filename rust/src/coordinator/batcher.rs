@@ -1,0 +1,100 @@
+//! Batch-size planning: map N compatible requests onto the batch sizes
+//! the AOT artifacts actually support.
+//!
+//! XLA executables have static shapes, so a `denoise_*_b4` artifact
+//! serves exactly 4 clips.  Given N requests and the supported size
+//! set (from the manifest, e.g. {1, 4}), plan a greedy cover that
+//! minimizes launches without padding (padding wastes a full sample's
+//! compute; with size 1 always exported, an exact cover always exists).
+
+/// Greedy plan: largest supported size first.  Returns batch sizes
+/// summing exactly to `n`.  `sizes` must contain 1.
+pub fn plan_batches(n: usize, sizes: &[usize]) -> Vec<usize> {
+    assert!(sizes.contains(&1), "size-1 artifact must exist");
+    let mut sorted: Vec<usize> = sizes.to_vec();
+    sorted.sort_unstable_by(|a, b| b.cmp(a));
+    let mut remaining = n;
+    let mut plan = Vec::new();
+    for &s in &sorted {
+        while remaining >= s {
+            plan.push(s);
+            remaining -= s;
+        }
+    }
+    debug_assert_eq!(plan.iter().sum::<usize>(), n);
+    plan
+}
+
+/// The artifact name for a (model, variant, tier, batch) combination —
+/// single source of naming truth, mirrored by aot.py.
+pub fn denoise_artifact_name(model: &str, variant: &str, tier: &str,
+                             batch: usize) -> String {
+    format!("denoise_{model}_{variant}_{tier}_b{batch}")
+}
+
+/// Supported batch sizes for (model, variant, tier) per the manifest.
+pub fn supported_batch_sizes(
+    manifest: &crate::runtime::Manifest, model: &str, variant: &str,
+    tier: &str) -> Vec<usize> {
+    let prefix = format!("denoise_{model}_{variant}_{tier}_b");
+    let mut sizes: Vec<usize> = manifest
+        .artifacts
+        .keys()
+        .filter_map(|name| name.strip_prefix(&prefix))
+        .filter_map(|suffix| suffix.parse().ok())
+        .collect();
+    sizes.sort_unstable();
+    sizes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn greedy_plan_basic() {
+        assert_eq!(plan_batches(6, &[1, 4]), vec![4, 1, 1]);
+        assert_eq!(plan_batches(8, &[1, 4]), vec![4, 4]);
+        assert_eq!(plan_batches(3, &[1, 2, 4]), vec![2, 1]);
+        assert_eq!(plan_batches(0, &[1]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn artifact_naming() {
+        assert_eq!(denoise_artifact_name("dit-tiny", "sla2", "s90", 2),
+                   "denoise_dit-tiny_sla2_s90_b2");
+    }
+
+    #[test]
+    fn prop_plan_covers_exactly() {
+        check("plan-covers", 256,
+              |r: &mut Pcg32| {
+                  let n = r.below(40) as usize;
+                  let mut sizes = vec![1usize];
+                  if r.f32() < 0.7 { sizes.push(2); }
+                  if r.f32() < 0.7 { sizes.push(4); }
+                  if r.f32() < 0.3 { sizes.push(8); }
+                  (n, sizes)
+              },
+              |(n, sizes)| {
+                  let plan = plan_batches(*n, sizes);
+                  if plan.iter().sum::<usize>() != *n {
+                      return Err(format!("sum {} != n {n}",
+                                         plan.iter().sum::<usize>()));
+                  }
+                  if let Some(bad) =
+                      plan.iter().find(|s| !sizes.contains(s))
+                  {
+                      return Err(format!("unsupported size {bad}"));
+                  }
+                  // greedy optimality for {1, k} ladders: number of
+                  // launches <= n (trivial) and descending order
+                  if plan.windows(2).any(|w| w[0] < w[1]) {
+                      return Err("plan not descending".into());
+                  }
+                  Ok(())
+              });
+    }
+}

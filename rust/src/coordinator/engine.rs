@@ -1,0 +1,127 @@
+//! The engine: owns the PJRT runtime and turns request batches into
+//! clips by driving the diffusion sampling loop over denoise HLOs.
+//!
+//! Runs on ONE thread (PjRtClient is `Rc`-based).  Model parameters
+//! are converted to XLA literals once at startup and reused across
+//! every step of every request — the hot loop only materializes the
+//! small per-batch tensors (latents, t, labels).
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use super::batcher::{denoise_artifact_name, plan_batches,
+                     supported_batch_sizes};
+use super::request::{GenRequest, RequestMetrics};
+use crate::config::{ModelConfig, ServeConfig};
+use crate::diffusion;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+pub struct Engine {
+    runtime: Runtime,
+    pub model: ModelConfig,
+    pub serve: ServeConfig,
+    /// model parameters, pre-converted to literals (hot-loop reuse)
+    params: Vec<Literal>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &str, serve: ServeConfig) -> Result<Engine> {
+        let runtime = Runtime::load(artifacts_dir)?;
+        let model = runtime.manifest().config(&serve.model)?.clone();
+        let params = runtime.manifest().load_params(&serve.model)?;
+        let params = params.iter()
+            .map(crate::runtime::tensor_to_literal)
+            .collect::<Result<Vec<_>>>()
+            .context("params -> literals")?;
+        Ok(Engine { runtime, model, serve, params })
+    }
+
+    /// Replace the parameter set (e.g. after training).
+    pub fn set_params(&mut self, params: &[Tensor]) -> Result<()> {
+        self.params = params.iter()
+            .map(crate::runtime::tensor_to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    fn variant_for_tier<'a>(&'a self, tier: &str) -> &'a str {
+        if tier == "dense" { "full" } else { &self.serve.variant }
+    }
+
+    /// Serve a set of COMPATIBLE requests (same tier + steps).
+    /// Returns `(clip, metrics)` per request, input order preserved.
+    pub fn generate(&self, reqs: &[GenRequest])
+                    -> Result<Vec<(Tensor, RequestMetrics)>> {
+        let first = reqs.first().context("empty batch")?;
+        let tier = &first.tier;
+        let variant = self.variant_for_tier(tier);
+        let sizes = supported_batch_sizes(self.runtime.manifest(),
+                                          &self.model.name, variant, tier);
+        anyhow::ensure!(!sizes.is_empty(),
+                        "no denoise artifacts for {}/{}/{} — re-run `make \
+                         artifacts`", self.model.name, variant, tier);
+        let plan = plan_batches(reqs.len(),
+                                if sizes.contains(&1) { &sizes }
+                                else { &[1] });
+        let mut out = Vec::with_capacity(reqs.len());
+        let mut cursor = 0;
+        for batch_size in plan {
+            let chunk = &reqs[cursor..cursor + batch_size];
+            cursor += batch_size;
+            let artifact = denoise_artifact_name(
+                &self.model.name, variant, tier, batch_size);
+            let t0 = Instant::now();
+            let clips = self.sample_batch(&artifact, chunk)?;
+            let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+            for (req, clip) in chunk.iter().zip(clips) {
+                out.push((clip, RequestMetrics {
+                    queue_ms: req.submitted_at.elapsed().as_secs_f64()
+                        * 1e3 - compute_ms,
+                    compute_ms,
+                    steps: req.steps,
+                    batch_size,
+                }));
+            }
+        }
+        Ok(out)
+    }
+
+    /// The diffusion sampling loop for one fixed-size sub-batch.
+    fn sample_batch(&self, artifact: &str, reqs: &[GenRequest])
+                    -> Result<Vec<Tensor>> {
+        let b = reqs.len();
+        let [t, h, w, c] = self.model.video;
+        // initial noise latents from per-request seeds (deterministic)
+        let latents: Vec<Tensor> = reqs.iter()
+            .map(|r| Tensor::randn(&[t, h, w, c],
+                                   &mut Pcg32::seeded(r.seed)))
+            .collect();
+        let mut x = Tensor::stack(&latents.iter().collect::<Vec<_>>())?;
+        let labels: Vec<i32> = reqs.iter().map(|r| r.class_label).collect();
+        let ys = Tensor::from_i32(&[b], labels)?;
+        let ys_lit = crate::runtime::tensor_to_literal(&ys)?;
+
+        let grid = diffusion::timestep_grid(reqs[0].steps);
+        for step in grid.windows(2) {
+            let (t_cur, t_next) = (step[0], step[1]);
+            let ts = Tensor::from_f32(&[b], vec![t_cur; b])?;
+            let inputs = [crate::runtime::tensor_to_literal(&x)?,
+                          crate::runtime::tensor_to_literal(&ts)?,
+                          ys_lit.clone()];
+            let vel = self.runtime.execute_literals_with_prefix(
+                artifact, &self.params, &inputs)?
+                .into_iter().next()
+                .context("denoise returned nothing")?;
+            diffusion::euler_step(&mut x, &vel, t_cur, t_next);
+        }
+        x.unstack()
+    }
+}

@@ -1,0 +1,139 @@
+//! Poisson load generator: drive the server with a realistic open-loop
+//! request trace and measure latency / throughput / rejection under
+//! offered load — the serving-paper methodology for exercising the
+//! dynamic batcher and backpressure path.
+
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::request::GenResponse;
+use super::server::Server;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// offered load, requests/second (Poisson arrivals)
+    pub rps: f64,
+    pub n_requests: usize,
+    /// sparsity tiers sampled uniformly per request
+    pub tiers: Vec<String>,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { rps: 4.0, n_requests: 16,
+                      tiers: vec!["s90".into()], steps: 4, seed: 17 }
+    }
+}
+
+#[derive(Debug)]
+pub struct TraceReport {
+    pub offered: usize,
+    pub accepted: usize,
+    pub rejected: usize,
+    pub completed: usize,
+    pub failed: usize,
+    /// end-to-end request latency (submit -> response), seconds
+    pub latency: Option<Summary>,
+    pub wall_s: f64,
+}
+
+impl TraceReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .push("offered", self.offered)
+            .push("accepted", self.accepted)
+            .push("rejected", self.rejected)
+            .push("completed", self.completed)
+            .push("failed", self.failed)
+            .push("wall_s", self.wall_s)
+            .push("throughput_rps", self.throughput_rps());
+        if let Some(l) = &self.latency {
+            j = j.push("latency_mean_ms", l.mean * 1e3)
+                .push("latency_p50_ms", l.p50 * 1e3)
+                .push("latency_p99_ms", l.p99 * 1e3);
+        }
+        j
+    }
+}
+
+/// Replay a Poisson trace against a running server (open loop: arrivals
+/// do not wait for completions, so overload genuinely queues/rejects).
+pub fn run_trace(server: &Server, cfg: &TraceConfig) -> Result<TraceReport> {
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let start = Instant::now();
+    let mut inflight: Vec<(Instant, Receiver<Result<GenResponse>>)> =
+        Vec::new();
+    let mut rejected = 0usize;
+    let mut next_arrival = Instant::now();
+    for i in 0..cfg.n_requests {
+        // Poisson process: exponential inter-arrival gaps
+        next_arrival += Duration::from_secs_f64(rng.exp(cfg.rps));
+        if let Some(gap) = next_arrival.checked_duration_since(Instant::now())
+        {
+            std::thread::sleep(gap);
+        }
+        let tier = cfg.tiers[rng.below(cfg.tiers.len() as u32) as usize]
+            .clone();
+        let label = rng.below(10) as i32;
+        match server.submit(label, cfg.seed + i as u64, cfg.steps, &tier) {
+            Ok(rx) => inflight.push((Instant::now(), rx)),
+            Err(_) => rejected += 1, // backpressure: drop, keep offering
+        }
+    }
+    let mut latencies = Vec::with_capacity(inflight.len());
+    let mut failed = 0usize;
+    for (t0, rx) in inflight {
+        match rx.recv() {
+            Ok(Ok(_)) => latencies.push(t0.elapsed().as_secs_f64()),
+            _ => failed += 1,
+        }
+    }
+    let completed = latencies.len();
+    Ok(TraceReport {
+        offered: cfg.n_requests,
+        accepted: cfg.n_requests - rejected,
+        rejected,
+        completed,
+        failed,
+        latency: if latencies.is_empty() { None }
+                 else { Some(Summary::of(&latencies)) },
+        wall_s: start.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_config_defaults_sane() {
+        let c = TraceConfig::default();
+        assert!(c.rps > 0.0 && c.n_requests > 0 && !c.tiers.is_empty());
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let r = TraceReport {
+            offered: 10, accepted: 8, rejected: 2, completed: 7,
+            failed: 1, latency: Some(Summary::of(&[0.1, 0.2, 0.3])),
+            wall_s: 2.0,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("rejected").unwrap().as_usize(), Some(2));
+        assert!((j.get("throughput_rps").unwrap().as_f64().unwrap() - 3.5)
+            .abs() < 1e-9);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("completed").unwrap().as_usize(), Some(7));
+    }
+}

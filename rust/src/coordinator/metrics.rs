@@ -1,0 +1,94 @@
+//! Server-level metrics: counters + latency distributions.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Online;
+
+#[derive(Debug)]
+pub struct ServerMetrics {
+    started: Instant,
+    pub requests: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub denoise_steps: u64,
+    pub queue_ms: Online,
+    pub compute_ms: Online,
+    pub batch_size: Online,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerMetrics {
+    pub fn new() -> ServerMetrics {
+        ServerMetrics {
+            started: Instant::now(),
+            requests: 0,
+            completed: 0,
+            rejected: 0,
+            batches: 0,
+            denoise_steps: 0,
+            queue_ms: Online::new(),
+            compute_ms: Online::new(),
+            batch_size: Online::new(),
+        }
+    }
+
+    pub fn record_batch(&mut self, size: usize, steps: usize,
+                        compute_ms: f64) {
+        self.batches += 1;
+        self.denoise_steps += (steps * size) as u64;
+        self.batch_size.push(size as f64);
+        self.compute_ms.push(compute_ms);
+    }
+
+    pub fn record_completion(&mut self, queue_ms: f64) {
+        self.completed += 1;
+        self.queue_ms.push(queue_ms);
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn snapshot(&self) -> Json {
+        Json::obj()
+            .push("requests", self.requests as usize)
+            .push("completed", self.completed as usize)
+            .push("rejected", self.rejected as usize)
+            .push("batches", self.batches as usize)
+            .push("denoise_steps", self.denoise_steps as usize)
+            .push("mean_batch_size", self.batch_size.mean())
+            .push("mean_queue_ms", self.queue_ms.mean())
+            .push("mean_compute_ms", self.compute_ms.mean())
+            .push("throughput_rps", self.throughput_rps())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let mut m = ServerMetrics::new();
+        m.requests = 3;
+        m.record_batch(2, 8, 120.0);
+        m.record_batch(1, 8, 70.0);
+        m.record_completion(4.0);
+        m.record_completion(6.0);
+        m.record_completion(2.0);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.denoise_steps, 24);
+        assert!((m.batch_size.mean() - 1.5).abs() < 1e-9);
+        let s = m.snapshot();
+        assert_eq!(s.get("completed").unwrap().as_usize(), Some(3));
+        assert!((s.get("mean_queue_ms").unwrap().as_f64().unwrap() - 4.0)
+            .abs() < 1e-9);
+    }
+}

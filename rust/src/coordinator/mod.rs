@@ -1,0 +1,35 @@
+//! L3 coordinator: the serving stack around the SLA2 denoiser.
+//!
+//! Architecture (vLLM-style, adapted to `!Send` PJRT):
+//!
+//! ```text
+//!  clients ──submit()──▶ RequestQueue (bounded, backpressure)
+//!                            │  pop_batch: same-tier grouping,
+//!                            │  batch window, size planning
+//!                            ▼
+//!                     engine thread (owns Runtime — PjRtClient is Rc)
+//!                            │  sampling loop: denoise HLO + Euler
+//!                            ▼
+//!                     per-request response channels + metrics
+//! ```
+//!
+//! Requests are whole video generations; all requests in a batch share
+//! the timestep schedule (diffusion jobs are fixed-length, so static
+//! per-batch scheduling is optimal — there is no analogue of
+//! continuous batching's early-exit requests).
+
+pub mod batcher;
+pub mod engine;
+pub mod loadgen;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod server;
+
+pub use batcher::plan_batches;
+pub use engine::Engine;
+pub use loadgen::{run_trace, TraceConfig, TraceReport};
+pub use metrics::ServerMetrics;
+pub use queue::RequestQueue;
+pub use request::{GenRequest, GenResponse, RequestMetrics};
+pub use server::Server;

@@ -1,0 +1,213 @@
+//! Bounded request queue with backpressure + compatibility-aware
+//! batch extraction (the batcher's front half).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::request::Envelope;
+
+#[derive(Debug, thiserror::Error)]
+pub enum QueueError {
+    #[error("queue full ({0} pending) — backpressure")]
+    Full(usize),
+    #[error("queue closed")]
+    Closed,
+}
+
+struct Inner {
+    items: VecDeque<Envelope>,
+    closed: bool,
+}
+
+/// MPSC: many frontend producers, one engine consumer.
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> RequestQueue {
+        RequestQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(),
+                                      closed: false }),
+            cv: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Non-blocking submit; `Err(Full)` is the backpressure signal the
+    /// frontend surfaces to clients.
+    pub fn push(&self, env: Envelope) -> Result<(), QueueError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(QueueError::Closed);
+        }
+        if g.items.len() >= self.capacity {
+            return Err(QueueError::Full(g.items.len()));
+        }
+        g.items.push_back(env);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Engine side: block (up to `wait`) for a first request, then
+    /// collect every already-queued request COMPATIBLE with it (same
+    /// tier + steps), up to `max_batch`, preserving FIFO order for the
+    /// rest.  After the first arrival, also waits up to `window` for
+    /// stragglers to fill the batch (the dynamic-batching knob).
+    ///
+    /// Returns `None` on close-and-drained.
+    pub fn pop_batch(&self, max_batch: usize, wait: Duration,
+                     window: Duration) -> Option<Vec<Envelope>> {
+        let deadline = Instant::now() + wait;
+        let mut g = self.inner.lock().unwrap();
+        while g.items.is_empty() {
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Some(Vec::new()); // timeout, no work
+            }
+            let (ng, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+        // batch window: give stragglers a chance to coalesce
+        if g.items.len() < max_batch && !window.is_zero() {
+            let wdeadline = Instant::now() + window;
+            while g.items.len() < max_batch && !g.closed {
+                let now = Instant::now();
+                if now >= wdeadline {
+                    break;
+                }
+                let (ng, _) =
+                    self.cv.wait_timeout(g, wdeadline - now).unwrap();
+                g = ng;
+            }
+        }
+        let first = g.items.pop_front().expect("non-empty");
+        let mut batch = vec![first];
+        let mut rest = VecDeque::new();
+        while let Some(env) = g.items.pop_front() {
+            if batch.len() < max_batch
+                && env.request.compatible(&batch[0].request)
+            {
+                batch.push(env);
+            } else {
+                rest.push_back(env);
+            }
+        }
+        g.items = rest;
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::GenRequest;
+    use std::sync::mpsc::channel;
+
+    fn env(id: u64, tier: &str, steps: usize) -> Envelope {
+        let (tx, _rx) = channel();
+        // leak the receiver so the sender stays usable in tests
+        std::mem::forget(_rx);
+        Envelope { request: GenRequest::new(id, 0, id, steps, tier),
+                   reply: tx }
+    }
+
+    #[test]
+    fn backpressure_at_capacity() {
+        let q = RequestQueue::new(2);
+        q.push(env(1, "s95", 8)).unwrap();
+        q.push(env(2, "s95", 8)).unwrap();
+        match q.push(env(3, "s95", 8)) {
+            Err(QueueError::Full(2)) => {}
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn pop_batch_groups_compatible() {
+        let q = RequestQueue::new(16);
+        q.push(env(1, "s95", 8)).unwrap();
+        q.push(env(2, "s97", 8)).unwrap(); // incompatible, must stay
+        q.push(env(3, "s95", 8)).unwrap();
+        q.push(env(4, "s95", 4)).unwrap(); // different steps, stays
+        let b = q.pop_batch(4, Duration::from_millis(10),
+                            Duration::ZERO).unwrap();
+        assert_eq!(b.iter().map(|e| e.request.id).collect::<Vec<_>>(),
+                   vec![1, 3]);
+        assert_eq!(q.len(), 2);
+        // FIFO preserved for the remainder
+        let b2 = q.pop_batch(4, Duration::from_millis(10),
+                             Duration::ZERO).unwrap();
+        assert_eq!(b2[0].request.id, 2);
+    }
+
+    #[test]
+    fn pop_batch_respects_max() {
+        let q = RequestQueue::new(16);
+        for i in 0..6 {
+            q.push(env(i, "s95", 8)).unwrap();
+        }
+        let b = q.pop_batch(4, Duration::from_millis(10),
+                            Duration::ZERO).unwrap();
+        assert_eq!(b.len(), 4);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn timeout_returns_empty() {
+        let q = RequestQueue::new(4);
+        let b = q.pop_batch(4, Duration::from_millis(5), Duration::ZERO)
+            .unwrap();
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn close_drains_to_none() {
+        let q = RequestQueue::new(4);
+        q.close();
+        assert!(q.pop_batch(4, Duration::from_millis(5),
+                            Duration::ZERO).is_none());
+        assert!(matches!(q.push(env(1, "s95", 8)),
+                         Err(QueueError::Closed)));
+    }
+
+    #[test]
+    fn batch_window_coalesces_concurrent_pushes() {
+        use std::sync::Arc;
+        let q = Arc::new(RequestQueue::new(16));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            q2.push(env(2, "s95", 8)).unwrap();
+        });
+        q.push(env(1, "s95", 8)).unwrap();
+        let b = q.pop_batch(4, Duration::from_millis(100),
+                            Duration::from_millis(200)).unwrap();
+        h.join().unwrap();
+        // either both coalesced (common) or at least the first arrived
+        assert!(!b.is_empty());
+        if b.len() == 2 {
+            assert_eq!(b[1].request.id, 2);
+        }
+    }
+}

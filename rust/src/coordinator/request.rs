@@ -1,0 +1,80 @@
+//! Request/response types for the generation service.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::tensor::Tensor;
+
+/// A video-generation request (one clip).
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    /// class conditioning (stands in for the text prompt)
+    pub class_label: i32,
+    /// seed for the initial noise latent
+    pub seed: u64,
+    /// sampling steps (must match across a batch; the batcher groups)
+    pub steps: usize,
+    /// sparsity tier: "s90" | "s95" | "s97" | "dense"
+    pub tier: String,
+    pub submitted_at: Instant,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, class_label: i32, seed: u64, steps: usize,
+               tier: &str) -> GenRequest {
+        GenRequest { id, class_label, seed, steps, tier: tier.into(),
+                     submitted_at: Instant::now() }
+    }
+
+    /// Two requests can share a batch iff they run the same artifact
+    /// and walk the same timestep grid.
+    pub fn compatible(&self, other: &GenRequest) -> bool {
+        self.tier == other.tier && self.steps == other.steps
+    }
+}
+
+/// Per-request service metrics (returned with the clip).
+#[derive(Debug, Clone, Default)]
+pub struct RequestMetrics {
+    pub queue_ms: f64,
+    pub compute_ms: f64,
+    pub steps: usize,
+    /// batch size this request was served in
+    pub batch_size: usize,
+}
+
+#[derive(Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    pub clip: Tensor,
+    pub metrics: RequestMetrics,
+}
+
+/// What actually travels through the queue: request + reply channel.
+pub struct Envelope {
+    pub request: GenRequest,
+    pub reply: Sender<anyhow::Result<GenResponse>>,
+}
+
+impl std::fmt::Debug for Envelope {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Envelope").field("request", &self.request).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compatibility() {
+        let a = GenRequest::new(1, 0, 0, 8, "s95");
+        let b = GenRequest::new(2, 5, 9, 8, "s95");
+        let c = GenRequest::new(3, 0, 0, 4, "s95");
+        let d = GenRequest::new(4, 0, 0, 8, "s97");
+        assert!(a.compatible(&b));
+        assert!(!a.compatible(&c)); // different step count
+        assert!(!a.compatible(&d)); // different tier
+    }
+}

@@ -1,0 +1,146 @@
+//! The server: frontend handle + engine thread + lifecycle.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::engine::Engine;
+use super::metrics::ServerMetrics;
+use super::queue::{QueueError, RequestQueue};
+use super::request::{Envelope, GenRequest, GenResponse};
+use crate::config::ServeConfig;
+
+pub struct Server {
+    queue: Arc<RequestQueue>,
+    metrics: Arc<Mutex<ServerMetrics>>,
+    next_id: AtomicU64,
+    engine_thread: Option<JoinHandle<()>>,
+    serve: ServeConfig,
+}
+
+impl Server {
+    /// Start the engine thread (it builds the PJRT runtime locally —
+    /// `PjRtClient` cannot cross threads).  Blocks until the engine is
+    /// ready or failed, so callers get load errors synchronously.
+    pub fn start(artifacts_dir: &str, serve: ServeConfig) -> Result<Server> {
+        let queue = Arc::new(RequestQueue::new(serve.queue_capacity));
+        let metrics = Arc::new(Mutex::new(ServerMetrics::new()));
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let q = Arc::clone(&queue);
+        let m = Arc::clone(&metrics);
+        let dir = artifacts_dir.to_string();
+        let cfg = serve.clone();
+        let engine_thread = std::thread::Builder::new()
+            .name("sla2-engine".into())
+            .spawn(move || {
+                let engine = match Engine::new(&dir, cfg.clone()) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                engine_loop(engine, &cfg, &q, &m);
+            })?;
+        ready_rx.recv()??;
+        Ok(Server { queue, metrics, next_id: AtomicU64::new(1),
+                    engine_thread: Some(engine_thread), serve })
+    }
+
+    /// Submit a generation request; returns the reply channel.
+    /// `Err` = backpressure (queue full) or shutdown.
+    pub fn submit(&self, class_label: i32, seed: u64, steps: usize,
+                  tier: &str)
+                  -> Result<Receiver<Result<GenResponse>>, QueueError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let req = GenRequest::new(id, class_label, seed, steps, tier);
+        self.metrics.lock().unwrap().requests += 1;
+        match self.queue.push(Envelope { request: req, reply: tx }) {
+            Ok(()) => Ok(rx),
+            Err(e) => {
+                self.metrics.lock().unwrap().rejected += 1;
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit with the server's default tier.
+    pub fn submit_default(&self, class_label: i32, seed: u64)
+                          -> Result<Receiver<Result<GenResponse>>,
+                                    QueueError> {
+        self.submit(class_label, seed, self.serve.sample_steps,
+                    &self.serve.tier.clone())
+    }
+
+    pub fn metrics_snapshot(&self) -> crate::util::json::Json {
+        self.metrics.lock().unwrap().snapshot()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Graceful shutdown: close the queue and join the engine.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        if let Some(h) = self.engine_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.engine_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn engine_loop(engine: Engine, cfg: &ServeConfig,
+               queue: &RequestQueue,
+               metrics: &Mutex<ServerMetrics>) {
+    crate::info!("engine up: model={} variant={} tier={} platform={}",
+                 engine.model.name, engine.serve.variant, engine.serve.tier,
+                 engine.runtime().platform());
+    loop {
+        let batch = match queue.pop_batch(
+            cfg.max_batch,
+            Duration::from_millis(100),
+            Duration::from_millis(cfg.batch_window_ms)) {
+            None => break, // closed + drained
+            Some(b) if b.is_empty() => continue, // poll timeout
+            Some(b) => b,
+        };
+        let reqs: Vec<_> = batch.iter().map(|e| e.request.clone()).collect();
+        match engine.generate(&reqs) {
+            Ok(results) => {
+                let mut m = metrics.lock().unwrap();
+                for (env, (clip, rm)) in batch.into_iter().zip(results) {
+                    m.record_batch(rm.batch_size, rm.steps, rm.compute_ms);
+                    m.record_completion(rm.queue_ms.max(0.0));
+                    let _ = env.reply.send(Ok(GenResponse {
+                        id: env.request.id, clip, metrics: rm }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                crate::warn_!("batch failed: {msg}");
+                for env in batch {
+                    let _ = env.reply.send(Err(anyhow::anyhow!(
+                        "generation failed: {msg}")));
+                }
+            }
+        }
+    }
+    crate::info!("engine shut down");
+}

@@ -1,0 +1,119 @@
+//! End-to-end generation-latency composition (Fig. 5).
+//!
+//! ```text
+//! latency = attention_time(method, sparsity) + other_time
+//! ```
+//!
+//! `other_time` (projections, MLPs, norms, VAE) does not depend on the
+//! attention method — Fig. 5's bars are exactly this decomposition.
+//! It is anchored on the paper's own full-attention split
+//! (`PaperModel::attn_frac_full`, solved from the reported end-to-end
+//! speedups), because the non-attention stack (text encoder, VAE,
+//! scheduler) is not something a FLOP model can see.
+
+use super::device::{kernel_time, profile, vmoba_profile, Device};
+use super::flops::{AttnGeometry, AttnKind, PaperModel};
+
+#[derive(Debug, Clone, Copy)]
+pub struct E2eEstimate {
+    pub attention_s: f64,
+    pub other_s: f64,
+}
+
+impl E2eEstimate {
+    pub fn total_s(&self) -> f64 {
+        self.attention_s + self.other_s
+    }
+}
+
+/// Estimate one full generation (all sampling steps) for a paper-scale
+/// model on the modelled device.
+pub fn estimate(dev: &Device, model: &PaperModel, kind: AttnKind,
+                keep: f64, steps: usize, vmoba: bool) -> E2eEstimate {
+    let g: AttnGeometry = model.geometry(keep);
+    let prof = if vmoba { vmoba_profile() } else { profile(kind) };
+    let per_call = kernel_time(dev, kind, &g, prof).seconds;
+    let attn = per_call * (model.layers * model.heads * steps) as f64;
+
+    // full-attention reference fixes the method-independent remainder
+    let full_call = kernel_time(dev, AttnKind::Full,
+                                &model.geometry(1.0),
+                                profile(AttnKind::Full)).seconds;
+    let attn_full = full_call * (model.layers * model.heads * steps) as f64;
+    let other = attn_full * (1.0 - model.attn_frac_full)
+        / model.attn_frac_full;
+    E2eEstimate { attention_s: attn, other_s: other }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::flops::{WAN_14B, WAN_1_3B};
+
+    const STEPS: usize = 50;
+
+    #[test]
+    fn fig5_full_attention_split_1_3b() {
+        let dev = Device::rtx5090();
+        let e = estimate(&dev, &WAN_1_3B, AttnKind::Full, 1.0, STEPS, false);
+        let frac = e.attention_s / e.total_s();
+        assert!((frac - 0.61).abs() < 0.02, "attention fraction {frac:.2}");
+    }
+
+    #[test]
+    fn fig5_e2e_speedup_1_3b() {
+        // Paper: 2.30x end-to-end on Wan-1.3B with SLA2 @ 97 %.
+        let dev = Device::rtx5090();
+        let full = estimate(&dev, &WAN_1_3B, AttnKind::Full, 1.0, STEPS,
+                            false);
+        let sla2 = estimate(&dev, &WAN_1_3B, AttnKind::Sla2 { quant: true },
+                            0.03, STEPS, false);
+        let speedup = full.total_s() / sla2.total_s();
+        assert!(speedup > 1.9 && speedup < 2.7, "e2e speedup {speedup:.2}");
+    }
+
+    #[test]
+    fn fig5_e2e_speedup_14b_larger() {
+        // Paper: 4.35x on the 14B model (attention-heavier at 720P).
+        let dev = Device::rtx5090();
+        let full = estimate(&dev, &WAN_14B, AttnKind::Full, 1.0, STEPS,
+                            false);
+        let sla2 = estimate(&dev, &WAN_14B, AttnKind::Sla2 { quant: true },
+                            0.03, STEPS, false);
+        let s14 = full.total_s() / sla2.total_s();
+        let full13 = estimate(&dev, &WAN_1_3B, AttnKind::Full, 1.0, STEPS,
+                              false);
+        let sla13 = estimate(&dev, &WAN_1_3B, AttnKind::Sla2 { quant: true },
+                             0.03, STEPS, false);
+        let s13 = full13.total_s() / sla13.total_s();
+        assert!(s14 > s13, "14B speedup {s14:.2} <= 1.3B {s13:.2}");
+        assert!(s14 > 3.3 && s14 < 5.5, "{s14:.2}");
+    }
+
+    #[test]
+    fn other_time_method_independent() {
+        let dev = Device::rtx5090();
+        let a = estimate(&dev, &WAN_1_3B, AttnKind::Full, 1.0, STEPS, false);
+        let b = estimate(&dev, &WAN_1_3B, AttnKind::Sla2 { quant: true },
+                         0.03, STEPS, false);
+        assert!((a.other_s - b.other_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vmoba_e2e_slower_than_sla2() {
+        let dev = Device::rtx5090();
+        let vm = estimate(&dev, &WAN_1_3B, AttnKind::SparseOnly, 0.05,
+                          STEPS, true);
+        let sla2 = estimate(&dev, &WAN_1_3B, AttnKind::Sla2 { quant: true },
+                            0.03, STEPS, false);
+        assert!(vm.total_s() > sla2.total_s());
+    }
+
+    #[test]
+    fn steps_scale_linearly() {
+        let dev = Device::rtx5090();
+        let a = estimate(&dev, &WAN_1_3B, AttnKind::Full, 1.0, 10, false);
+        let b = estimate(&dev, &WAN_1_3B, AttnKind::Full, 1.0, 20, false);
+        assert!((b.attention_s / a.attention_s - 2.0).abs() < 1e-9);
+    }
+}

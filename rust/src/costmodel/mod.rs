@@ -1,0 +1,24 @@
+//! Analytic cost model: FLOPs accounting + calibrated device model.
+//!
+//! The paper's kernel-speed (Fig. 4) and end-to-end latency (Fig. 5)
+//! numbers come from CUDA kernels on an RTX5090 — unreproducible on
+//! this CPU-only testbed.  Per DESIGN.md §2, the *shape* of those
+//! results is regenerated from first principles:
+//!
+//! * [`flops`] counts exact multiply-add work per attention variant
+//!   (sparse branch, linear branch, router, quant overhead) and per
+//!   model forward — the Table 1 "FLOPs" column;
+//! * [`device`] turns (FLOPs, bytes) into kernel time via a roofline
+//!   model with per-method efficiency factors calibrated on the
+//!   paper's published points (FlashAttn2 baseline, SLA2 18.7x @ 97 %,
+//!   VSA 2.6x slower, VMoBA 11.7x slower, quant 1.3x);
+//! * [`e2e`] composes kernel times into end-to-end generation latency
+//!   (Fig. 5) given a model geometry and step count.
+
+pub mod device;
+pub mod e2e;
+pub mod flops;
+
+pub use device::{Device, KernelTime};
+pub use e2e::E2eEstimate;
+pub use flops::{AttnGeometry, AttnKind, FlopCount};

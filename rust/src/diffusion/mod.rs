@@ -1,0 +1,92 @@
+//! Rust half of the rectified-flow diffusion substrate.
+//!
+//! The exported HLO only evaluates the velocity at ONE timestep; the
+//! coordinator owns the sampling loop, so the sigma schedule and Euler
+//! integrator are mirrored here (the python source of truth is
+//! `python/compile/diffusion.py`).
+
+use crate::tensor::Tensor;
+
+/// The t-grid a sampler walks: 1.0 -> 0.0 inclusive, `steps` intervals.
+pub fn timestep_grid(steps: usize) -> Vec<f32> {
+    assert!(steps > 0);
+    (0..=steps)
+        .map(|i| 1.0 - i as f32 / steps as f32)
+        .collect()
+}
+
+/// One Euler step of `dx/dt = v` from `t` down to `t_next` (in place).
+pub fn euler_step(x: &mut Tensor, vel: &Tensor, t: f32, t_next: f32) {
+    let dt = t_next - t;
+    let xs = x.f32s_mut().expect("latent is f32");
+    let vs = vel.f32s().expect("velocity is f32");
+    assert_eq!(xs.len(), vs.len(), "euler step shape mismatch");
+    for (xi, vi) in xs.iter_mut().zip(vs) {
+        *xi += dt * vi;
+    }
+}
+
+/// Rectified-flow forward process: `x_t = (1 - t) x0 + t eps`.
+pub fn noise_to(x0: &Tensor, eps: &Tensor, t: f32) -> Tensor {
+    let a = x0.f32s().expect("x0 f32");
+    let b = eps.f32s().expect("eps f32");
+    let data = a.iter().zip(b).map(|(x, e)| (1.0 - t) * x + t * e).collect();
+    Tensor::from_f32(&x0.shape, data).unwrap()
+}
+
+/// Exact-velocity sanity target: `v = eps - x0`.
+pub fn velocity_target(x0: &Tensor, eps: &Tensor) -> Tensor {
+    let a = x0.f32s().unwrap();
+    let b = eps.f32s().unwrap();
+    let data = a.iter().zip(b).map(|(x, e)| e - x).collect();
+    Tensor::from_f32(&x0.shape, data).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn grid_endpoints_and_monotone() {
+        let g = timestep_grid(8);
+        assert_eq!(g.len(), 9);
+        assert_eq!(g[0], 1.0);
+        assert_eq!(*g.last().unwrap(), 0.0);
+        assert!(g.windows(2).all(|w| w[1] < w[0]));
+    }
+
+    #[test]
+    fn euler_exact_on_linear_flow() {
+        // with the exact velocity, one step from eps at t=1 lands on x0
+        let mut rng = Pcg32::seeded(1);
+        let x0 = Tensor::randn(&[4, 4], &mut rng);
+        let eps = Tensor::randn(&[4, 4], &mut rng);
+        let v = velocity_target(&x0, &eps);
+        let mut x = eps.clone();
+        euler_step(&mut x, &v, 1.0, 0.0);
+        assert!(x.rel_err(&x0).unwrap() < 1e-6);
+    }
+
+    #[test]
+    fn multi_step_euler_also_exact_for_linear_flow() {
+        let mut rng = Pcg32::seeded(2);
+        let x0 = Tensor::randn(&[8], &mut rng);
+        let eps = Tensor::randn(&[8], &mut rng);
+        let v = velocity_target(&x0, &eps);
+        let mut x = eps.clone();
+        let grid = timestep_grid(10);
+        for w in grid.windows(2) {
+            euler_step(&mut x, &v, w[0], w[1]);
+        }
+        assert!(x.rel_err(&x0).unwrap() < 1e-5);
+    }
+
+    #[test]
+    fn noise_endpoints() {
+        let x0 = Tensor::from_f32(&[2], vec![1.0, 2.0]).unwrap();
+        let eps = Tensor::from_f32(&[2], vec![-1.0, 0.5]).unwrap();
+        assert_eq!(noise_to(&x0, &eps, 0.0), x0);
+        assert_eq!(noise_to(&x0, &eps, 1.0), eps);
+    }
+}

@@ -1,0 +1,36 @@
+//! # SLA2 — Sparse-Linear Attention with Learnable Routing and QAT
+//!
+//! Three-layer reproduction of the SLA2 paper (Zhang et al., 2026):
+//!
+//! * **L1** — Pallas attention kernels (Alg. 2/3), authored in
+//!   `python/compile/kernels/` and AOT-lowered to HLO text;
+//! * **L2** — a video Diffusion Transformer + two-stage training
+//!   pipeline (`python/compile/`), also AOT-lowered;
+//! * **L3** — this crate: the Rust coordinator that loads the HLO
+//!   artifacts through PJRT (`xla` crate) and owns serving (request
+//!   routing, dynamic batching, the diffusion sampling loop) and
+//!   training (the Alg. 1 two-stage driver).  Python never runs on the
+//!   request path.
+//!
+//! The crate is dependency-light by necessity (offline build): JSON,
+//! RNG, CLI, statistics, thread pool, property testing and the bench
+//! harness are first-party substrates under [`util`].
+//!
+//! ```no_run
+//! use sla2::runtime::Runtime;
+//! let rt = Runtime::load("artifacts").unwrap();
+//! let exe = rt.executable("denoise_dit-tiny_sla2_s90_b1").unwrap();
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod diffusion;
+pub mod runtime;
+pub mod tensor;
+pub mod trainer;
+pub mod util;
+pub mod video;
+
+pub use config::ModelConfig;
+pub use tensor::Tensor;

@@ -1,0 +1,274 @@
+//! `sla2` — the leader binary: CLI over the serving + training stack.
+//!
+//! Subcommands:
+//!   info                      list artifacts / configs / platform
+//!   generate                  run one batched generation synchronously
+//!   serve-demo                start the server, fire a request wave,
+//!                             print latency/throughput metrics
+//!   train                     two-stage SLA2 fine-tune (Alg. 1)
+//!   costmodel                 print the paper-calibrated Fig.4/Fig.5
+//!                             curves without touching PJRT
+
+use anyhow::Result;
+
+use sla2::config::{ServeConfig, TrainConfig};
+use sla2::coordinator::Server;
+use sla2::costmodel::{device, e2e, flops};
+use sla2::runtime::Runtime;
+use sla2::trainer::Trainer;
+use sla2::util::bench::Table;
+use sla2::util::cli::Args;
+use sla2::util::rng::Pcg32;
+
+const USAGE: &str = "\
+usage: sla2 <command> [--artifacts DIR] [flags]
+
+commands:
+  info          show manifest contents and runtime platform
+  generate      --model dit-tiny --variant sla2 --tier s90 --steps 8
+                --count 2 — generate clips synchronously
+  serve-demo    --model dit-tiny --requests 6 --max-batch 2 — run the
+                batching server against a synthetic request wave
+  train         --model dit-tiny --tier s90 --stage1-steps 20
+                --stage2-steps 60 — two-stage fine-tune (Alg. 1)
+  costmodel     print paper-calibrated kernel/e2e curves (no PJRT)
+";
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let artifacts = args.str("artifacts", "artifacts");
+    match args.subcommand() {
+        Some("info") => info(&artifacts),
+        Some("generate") => generate(&artifacts, &args),
+        Some("serve-demo") => serve_demo(&artifacts, &args),
+        Some("train") => train(&artifacts, &args),
+        Some("costmodel") => {
+            costmodel_report();
+            Ok(())
+        }
+        Some("perf") => perf(&artifacts, &args),
+        Some("loadtest") => loadtest(&artifacts, &args),
+        _ => {
+            eprint!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn info(artifacts: &str) -> Result<()> {
+    let rt = Runtime::load(artifacts)?;
+    println!("platform: {}", rt.platform());
+    let m = rt.manifest();
+    println!("configs:");
+    for (name, c) in &m.configs {
+        println!("  {name}: {:.1}M params, N={}, {}x{} blocks, video {:?}",
+                 c.param_count as f64 / 1e6, c.n_tokens, c.t_m, c.t_n,
+                 c.video);
+    }
+    println!("artifacts ({}):", m.artifacts.len());
+    for (name, a) in &m.artifacts {
+        println!("  {:<42} {:<12} in={:<3} out={}", name, a.kind,
+                 a.inputs.len(), a.outputs.len());
+    }
+    Ok(())
+}
+
+fn generate(artifacts: &str, args: &Args) -> Result<()> {
+    let serve = ServeConfig::from_args(args);
+    let count = args.usize("count", 2);
+    let server = Server::start(artifacts, serve.clone())?;
+    println!("generating {count} clips (model={}, variant={}, tier={}, \
+              steps={})", serve.model, serve.variant, serve.tier,
+             serve.sample_steps);
+    let rxs: Vec<_> = (0..count)
+        .map(|i| server.submit_default(i as i32 % 10, 1000 + i as u64))
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("submit: {e}"))?;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv()??;
+        println!("  clip {i}: shape {:?}, compute {:.1} ms (batch {})",
+                 resp.clip.shape, resp.metrics.compute_ms,
+                 resp.metrics.batch_size);
+    }
+    println!("{}", server.metrics_snapshot());
+    server.shutdown();
+    Ok(())
+}
+
+fn serve_demo(artifacts: &str, args: &Args) -> Result<()> {
+    let serve = ServeConfig::from_args(args);
+    let n = args.usize("requests", 6);
+    let server = Server::start(artifacts, serve)?;
+    let mut rng = Pcg32::seeded(7);
+    let rxs: Vec<_> = (0..n)
+        .filter_map(|i| {
+            server.submit_default(rng.below(10) as i32, i as u64).ok()
+        })
+        .collect();
+    println!("accepted {} / {n} requests", rxs.len());
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    println!("completed {ok}");
+    println!("{}", server.metrics_snapshot());
+    server.shutdown();
+    Ok(())
+}
+
+fn train(artifacts: &str, args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args);
+    let trainer = Trainer::new(artifacts, cfg.clone())?;
+    let mut state = trainer.init_state()?;
+    if cfg.stage1_steps > 0 {
+        println!("== Stage 1: router + alpha init ({} steps) ==",
+                 cfg.stage1_steps);
+        trainer.run_stage1(&mut state, cfg.stage1_steps,
+                           |i, l| println!("  stage1[{i:>4}] loss {l:.6}"))?;
+        println!("mean alpha after stage 1: {:.3}",
+                 trainer.mean_alpha(&state)?);
+    } else {
+        println!("(stage 1 skipped)");
+    }
+    println!("== Stage 2: end-to-end fine-tune ({} steps) ==",
+             cfg.stage2_steps);
+    trainer.run_stage2(&mut state, cfg.stage2_steps,
+                       |i, l| println!("  stage2[{i:>4}] loss {l:.6}"))?;
+    Ok(())
+}
+
+/// Open-loop Poisson load test against the serving stack:
+/// `sla2 loadtest --model dit-tiny --rps 6 --requests 24 --steps 2`
+fn loadtest(artifacts: &str, args: &Args) -> Result<()> {
+    use sla2::coordinator::{run_trace, TraceConfig};
+    let serve = ServeConfig::from_args(args);
+    let trace = TraceConfig {
+        rps: args.f64("rps", 4.0),
+        n_requests: args.usize("requests", 16),
+        tiers: vec![serve.tier.clone()],
+        steps: args.usize("steps", serve.sample_steps),
+        seed: args.u64("seed", 17),
+    };
+    println!("load test: {} requests at {} rps (Poisson), model {}, \
+              tier {}, {} steps, max_batch {}",
+             trace.n_requests, trace.rps, serve.model, serve.tier,
+             trace.steps, serve.max_batch);
+    let server = Server::start(artifacts, serve)?;
+    // warm the executable so the trace measures steady state
+    let _ = server.submit(0, 1, trace.steps, &trace.tiers[0])
+        .map_err(|e| anyhow::anyhow!("{e}"))?.recv()??;
+    let report = run_trace(&server, &trace)?;
+    println!("{}", report.to_json());
+    println!("server: {}", server.metrics_snapshot());
+    server.shutdown();
+    Ok(())
+}
+
+/// L3 overhead measurement (EXPERIMENTS.md §Perf): per-request latency
+/// through the full coordinator (queue -> batcher -> engine -> euler)
+/// vs the bare HLO execution it wraps, at 1 sampling step so the
+/// coordinator's fixed costs are maximally visible.
+fn perf(artifacts: &str, args: &Args) -> Result<()> {
+    use sla2::runtime::{tensor_to_literal, Runtime};
+    use sla2::tensor::Tensor;
+    let model = args.str("model", "dit-tiny");
+    let tier = args.str("tier", "s90");
+    let n = args.usize("iters", 50);
+
+    // --- bare HLO call (params pre-converted, like the engine) -------
+    let rt = Runtime::load(artifacts)?;
+    let cfg = rt.manifest().config(&model)?.clone();
+    let params: Vec<xla::Literal> = rt.manifest().load_params(&model)?
+        .iter().map(|t| tensor_to_literal(t).unwrap()).collect();
+    let artifact = format!("denoise_{model}_sla2_{tier}_b1");
+    let mut rng = Pcg32::seeded(1);
+    let x = Tensor::randn(&[1, cfg.video[0], cfg.video[1], cfg.video[2],
+                            cfg.video[3]], &mut rng);
+    let rest = [tensor_to_literal(&x)?,
+                tensor_to_literal(&Tensor::from_f32(&[1], vec![0.5])?)?,
+                tensor_to_literal(&Tensor::from_i32(&[1], vec![1])?)?];
+    rt.execute_literals_with_prefix(&artifact, &params, &rest)?; // warm
+    let b = sla2::util::bench::run(&artifact, 3, n, || {
+        rt.execute_literals_with_prefix(&artifact, &params, &rest)
+            .unwrap();
+    });
+    println!("bare HLO denoise call: mean {:.3} ms (p99 {:.3})",
+             b.mean_ms(), b.summary.p99 * 1e3);
+    drop(rt);
+
+    // --- through the full coordinator at steps=1 ---------------------
+    let serve = ServeConfig {
+        model: model.clone(), variant: "sla2".into(), tier: tier.clone(),
+        sample_steps: 1, max_batch: 1, batch_window_ms: 0,
+        queue_capacity: 8,
+    };
+    let server = Server::start(artifacts, serve)?;
+    let _ = server.submit(1, 7, 1, &tier).unwrap().recv()??; // warm
+    let mut samples = Vec::with_capacity(n);
+    for i in 0..n {
+        let t0 = std::time::Instant::now();
+        let _ = server.submit(1, 7 + i as u64, 1, &tier)
+            .map_err(|e| anyhow::anyhow!("{e}"))?.recv()??;
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let s = sla2::util::stats::Summary::of(&samples);
+    println!("through coordinator (1 step): mean {:.3} ms (p99 {:.3})",
+             s.mean * 1e3, s.p99 * 1e3);
+    let overhead = s.mean * 1e3 - b.mean_ms();
+    println!("L3 overhead: {:.3} ms/request = {:.1}% of a single \
+              denoise step", overhead, 100.0 * overhead / b.mean_ms());
+    server.shutdown();
+    Ok(())
+}
+
+fn costmodel_report() {
+    let dev = device::Device::rtx5090();
+    println!("== Fig. 4: kernel speed (paper-calibrated model) ==");
+    let mut t = Table::new(&["method", "sparsity", "time (us)",
+                             "eff. TOPS", "speedup vs FA2"]);
+    let g = |keep| flops::AttnGeometry { keep, ..flops::FIG4_GEOM };
+    let fa2 = device::kernel_time_default(&dev, flops::AttnKind::Full,
+                                          &g(1.0));
+    {
+        let mut row = |name: &str, kt: device::KernelTime, sp: f64| {
+            t.row(vec![name.into(), format!("{:.0}%", sp * 100.0),
+                       format!("{:.1}", kt.seconds * 1e6),
+                       format!("{:.0}", kt.effective_tops),
+                       format!("{:.1}x", fa2.seconds / kt.seconds)]);
+        };
+        row("FlashAttn2", fa2, 0.0);
+        for (tier, keep) in [("90", 0.10), ("95", 0.05), ("97", 0.03)] {
+            let kt = device::kernel_time_default(
+                &dev, flops::AttnKind::Sla2 { quant: true }, &g(keep));
+            row(&format!("SLA2 @{tier}%"), kt, 1.0 - keep);
+        }
+        let vsa = device::kernel_time_default(
+            &dev, flops::AttnKind::SparseOnly, &g(0.05));
+        row("VSA @95%", vsa, 0.95);
+        let vmoba = device::kernel_time(&dev, flops::AttnKind::SparseOnly,
+                                        &g(0.05), device::vmoba_profile());
+        row("VMoBA @95%", vmoba, 0.95);
+    }
+    t.print();
+
+    println!("== Fig. 5: end-to-end latency (50 steps) ==");
+    let mut t = Table::new(&["model", "method", "attn (s)", "other (s)",
+                             "total (s)", "speedup"]);
+    for model in [&flops::WAN_1_3B, &flops::WAN_14B] {
+        let full = e2e::estimate(&dev, model, flops::AttnKind::Full, 1.0,
+                                 50, false);
+        let sla2 = e2e::estimate(&dev, model,
+                                 flops::AttnKind::Sla2 { quant: true },
+                                 0.03, 50, false);
+        for (name, e) in [("Full", &full), ("SLA2 @97%", &sla2)] {
+            t.row(vec![model.name.into(), name.into(),
+                       format!("{:.1}", e.attention_s),
+                       format!("{:.1}", e.other_s),
+                       format!("{:.1}", e.total_s()),
+                       format!("{:.2}x", full.total_s() / e.total_s())]);
+        }
+    }
+    t.print();
+}

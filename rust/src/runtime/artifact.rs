@@ -1,0 +1,272 @@
+//! Manifest parsing: the I/O contract between aot.py and the runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::tensor::{Data, Tensor};
+use crate::util::json::Json;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            shape: j.req("shape")?.as_usize_vec().context("spec shape")?,
+            dtype: j.req("dtype")?.as_str().context("spec dtype")?.into(),
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn matches(&self, t: &Tensor) -> bool {
+        t.shape == self.shape && t.dtype_str() == self.dtype
+    }
+
+    /// A zero-filled tensor of this spec (placeholder inputs).
+    pub fn zeros(&self) -> Tensor {
+        match self.dtype.as_str() {
+            "int32" => Tensor {
+                shape: self.shape.clone(),
+                data: Data::I32(vec![0; self.numel()]),
+            },
+            _ => Tensor::zeros(&self.shape),
+        }
+    }
+}
+
+/// One exported HLO computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(|v| v.as_f64())
+    }
+}
+
+/// Layout of a `params_<cfg>.bin` file.
+#[derive(Debug, Clone)]
+pub struct ParamsLayout {
+    pub config: String,
+    pub file: String,
+    /// (name, shape, offset-in-floats)
+    pub tensors: Vec<(String, Vec<usize>, usize)>,
+}
+
+impl ParamsLayout {
+    pub fn total_floats(&self) -> usize {
+        self.tensors.iter()
+            .map(|(_, s, _)| s.iter().product::<usize>())
+            .sum()
+    }
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub params: BTreeMap<String, ParamsLayout>,
+    pub configs: BTreeMap<String, ModelConfig>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make \
+                                      artifacts` first"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: PathBuf, j: &Json) -> Result<Manifest> {
+        let mut artifacts = BTreeMap::new();
+        for a in j.req("artifacts")?.as_arr().context("artifacts array")? {
+            let name = a.req("name")?.as_str().context("name")?.to_string();
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.req(key)?.as_arr().context("specs")?.iter()
+                    .map(TensorSpec::from_json).collect()
+            };
+            artifacts.insert(name.clone(), ArtifactSpec {
+                name,
+                file: a.req("file")?.as_str().context("file")?.into(),
+                kind: a.req("kind")?.as_str().context("kind")?.into(),
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+                meta: a.get("meta").cloned().unwrap_or(Json::obj()),
+            });
+        }
+        let mut params = BTreeMap::new();
+        for p in j.req("params")?.as_arr().context("params array")? {
+            let config = p.req("config")?.as_str().context("cfg")?
+                .to_string();
+            let tensors = p.req("tensors")?.as_arr().context("tensors")?
+                .iter()
+                .map(|t| -> Result<_> {
+                    Ok((t.req("name")?.as_str().context("n")?.to_string(),
+                        t.req("shape")?.as_usize_vec().context("s")?,
+                        t.req("offset")?.as_usize().context("o")?))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            params.insert(config.clone(), ParamsLayout {
+                config,
+                file: p.req("file")?.as_str().context("file")?.into(),
+                tensors,
+            });
+        }
+        let mut configs = BTreeMap::new();
+        for (name, cj) in j.req("configs")?.as_obj().context("configs")? {
+            configs.insert(name.clone(), ModelConfig::from_json(name, cj)?);
+        }
+        Ok(Manifest { dir, artifacts, params, configs })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().take(8).collect::<Vec<_>>())
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.configs.get(name)
+            .ok_or_else(|| anyhow::anyhow!("config {name:?} not in \
+                                            manifest"))
+    }
+
+    /// Load the initial parameter tensors for a model, in the canonical
+    /// flatten order (the order every train/denoise artifact expects).
+    pub fn load_params(&self, config: &str) -> Result<Vec<Tensor>> {
+        let layout = self.params.get(config).ok_or_else(|| {
+            anyhow::anyhow!("no params for config {config:?}")
+        })?;
+        let path = self.dir.join(&layout.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        if floats.len() != layout.total_floats() {
+            bail!("params file {} has {} floats, layout wants {}",
+                  layout.file, floats.len(), layout.total_floats());
+        }
+        layout.tensors.iter()
+            .map(|(_, shape, offset)| {
+                let n: usize = shape.iter().product();
+                Tensor::from_f32(shape, floats[*offset..offset + n].to_vec())
+            })
+            .collect()
+    }
+
+    /// All artifacts of a kind (for bench sweeps).
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.values().filter(|a| a.kind == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest() -> Json {
+        Json::parse(
+            r#"{
+  "version": 1,
+  "artifacts": [
+    {"name": "f", "file": "f.hlo.txt", "kind": "attn",
+     "inputs": [{"shape": [2, 3], "dtype": "float32"},
+                 {"shape": [], "dtype": "int32"}],
+     "outputs": [{"shape": [2, 3], "dtype": "float32"}],
+     "meta": {"variant": "sla2", "k_pct": 0.05}}
+  ],
+  "params": [
+    {"config": "m", "file": "params_m.bin",
+     "tensors": [{"name": "w", "shape": [2, 2], "offset": 0, "size": 4},
+                  {"name": "b", "shape": [2], "offset": 4, "size": 2}]}
+  ],
+  "configs": {
+    "m": {"video":[4,8,8,3],"patch":[2,2,2],"dim":64,"depth":2,
+          "heads":2,"head_dim":32,"b_q":8,"b_k":4,"n_tokens":32,
+          "t_m":4,"t_n":8,"num_classes":10,"param_count":6}
+  }
+}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::from_json(PathBuf::from("/tmp"), &mini_manifest())
+            .unwrap();
+        let a = m.artifact("f").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].dtype, "int32");
+        assert_eq!(a.meta_str("variant"), Some("sla2"));
+        assert_eq!(a.meta_f64("k_pct"), Some(0.05));
+        assert!(m.artifact("missing").is_err());
+        assert_eq!(m.config("m").unwrap().depth, 2);
+    }
+
+    #[test]
+    fn spec_matching() {
+        let s = TensorSpec { shape: vec![2, 3], dtype: "float32".into() };
+        assert!(s.matches(&Tensor::zeros(&[2, 3])));
+        assert!(!s.matches(&Tensor::zeros(&[3, 2])));
+        let z = TensorSpec { shape: vec![2], dtype: "int32".into() }.zeros();
+        assert_eq!(z.i32s().unwrap(), &[0, 0]);
+    }
+
+    #[test]
+    fn params_layout_roundtrip() {
+        let m = Manifest::from_json(PathBuf::from("/tmp"), &mini_manifest())
+            .unwrap();
+        let layout = &m.params["m"];
+        assert_eq!(layout.total_floats(), 6);
+        // write a fake bin and load it back
+        let dir = std::env::temp_dir().join("sla2_test_params");
+        std::fs::create_dir_all(&dir).unwrap();
+        let floats: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let bytes: Vec<u8> =
+            floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("params_m.bin"), bytes).unwrap();
+        let m2 = Manifest::from_json(dir, &mini_manifest()).unwrap();
+        let ps = m2.load_params("m").unwrap();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].shape, vec![2, 2]);
+        assert_eq!(ps[1].f32s().unwrap(), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn by_kind_filters() {
+        let m = Manifest::from_json(PathBuf::from("/tmp"), &mini_manifest())
+            .unwrap();
+        assert_eq!(m.by_kind("attn").len(), 1);
+        assert_eq!(m.by_kind("train_step").len(), 0);
+    }
+}

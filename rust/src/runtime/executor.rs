@@ -1,0 +1,170 @@
+//! The PJRT executor: compile-on-demand cache + validated execution.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifact::Manifest;
+use crate::tensor::{Data, Tensor};
+
+/// Single-threaded PJRT runtime (PjRtClient is `Rc`-based, `!Send`).
+pub struct Runtime {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    /// cumulative (compiles, executions) — surfaced in metrics
+    counters: RefCell<(usize, usize)>,
+}
+
+impl Runtime {
+    /// Load the manifest and connect the PJRT CPU client.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            counters: RefCell::new((0, 0)),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(exe));
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.manifest.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+        crate::info!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        self.counters.borrow_mut().0 += 1;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an artifact with host tensors; validates shapes/dtypes
+    /// against the manifest before handing buffers to XLA.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", spec.inputs.len(),
+                  inputs.len());
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if !s.matches(t) {
+                bail!("{name}: input {i} mismatch: artifact wants \
+                       {:?}/{}, got {:?}/{}",
+                      s.shape, s.dtype, t.shape, t.dtype_str());
+            }
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<Literal> = inputs.iter()
+            .map(tensor_to_literal)
+            .collect::<Result<_>>()?;
+        self.counters.borrow_mut().1 += 1;
+        let result = exe.execute::<Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+        let root = result
+            .into_iter().next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow::anyhow!("{name}: empty result"))?;
+        let root = root.to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{name}: to_literal: {e}"))?;
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let elems = root.to_tuple()
+            .map_err(|e| anyhow::anyhow!("{name}: untuple: {e}"))?;
+        if elems.len() != spec.outputs.len() {
+            bail!("{name}: manifest declares {} outputs, runtime \
+                   returned {}", spec.outputs.len(), elems.len());
+        }
+        elems.iter().map(literal_to_tensor).collect()
+    }
+
+    /// Hot-path variant: execute with pre-converted literals.  `prefix`
+    /// (typically the model parameters) is reused across calls so the
+    /// per-step cost is only the small dynamic tensors.  Count is
+    /// validated against the manifest; shapes are trusted (they were
+    /// validated when the prefix was built).
+    pub fn execute_literals_with_prefix(&self, name: &str,
+                                        prefix: &[Literal],
+                                        rest: &[Literal])
+                                        -> Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(name)?;
+        let total = prefix.len() + rest.len();
+        if total != spec.inputs.len() {
+            bail!("{name}: expected {} inputs, got {} (prefix {} + {})",
+                  spec.inputs.len(), total, prefix.len(), rest.len());
+        }
+        let exe = self.executable(name)?;
+        let refs: Vec<&Literal> = prefix.iter().chain(rest.iter()).collect();
+        self.counters.borrow_mut().1 += 1;
+        let result = exe.execute::<&Literal>(&refs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+        let root = result
+            .into_iter().next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow::anyhow!("{name}: empty result"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{name}: to_literal: {e}"))?;
+        let elems = root.to_tuple()
+            .map_err(|e| anyhow::anyhow!("{name}: untuple: {e}"))?;
+        elems.iter().map(literal_to_tensor).collect()
+    }
+
+    /// (compiles, executions) so far — cheap observability hook.
+    pub fn counters(&self) -> (usize, usize) {
+        *self.counters.borrow()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Host tensor -> XLA literal (public: engines pre-convert hot inputs).
+pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
+    let lit = match &t.data {
+        Data::F32(v) => Literal::vec1(v),
+        Data::I32(v) => Literal::vec1(v),
+    };
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("literal reshape {:?}: {e}", t.shape))
+}
+
+fn literal_to_tensor(lit: &Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()
+        .map_err(|e| anyhow::anyhow!("literal shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    match shape.ty() {
+        ElementType::F32 => {
+            let v = lit.to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("to_vec f32: {e}"))?;
+            Tensor::from_f32(&dims, v)
+        }
+        ElementType::S32 => {
+            let v = lit.to_vec::<i32>()
+                .map_err(|e| anyhow::anyhow!("to_vec i32: {e}"))?;
+            Tensor::from_i32(&dims, v)
+        }
+        other => bail!("unsupported output element type {other:?}"),
+    }
+    .context("literal -> tensor")
+}

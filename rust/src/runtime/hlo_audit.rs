@@ -1,0 +1,110 @@
+//! Structural audit of HLO text artifacts.
+//!
+//! Interpret-mode wall-clock on CPU says nothing about TPU/GPU cost,
+//! but the lowered HLO's *structure* does: if the SLA2 artifact ever
+//! contained a dense `f32[N,N]` score matmul outside the tile
+//! conditionals, the kernel would have silently degraded to full
+//! attention.  This module parses `dot` ops and their output shapes
+//! from HLO text so tests and the perf pass can pin the structure
+//! down (DESIGN.md §8: "no dense N x N fallback anywhere").
+
+use anyhow::Result;
+
+/// One `dot` instruction's output shape (elements, dims).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DotOp {
+    pub dims: Vec<usize>,
+}
+
+impl DotOp {
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Extract every `dot(` instruction's output shape from HLO text.
+///
+/// HLO text lines look like
+/// `%dot.5 = f32[256,128]{1,0} dot(%a, %b), lhs_contracting_dims=...`;
+/// we scan for `= <type>[dims]` immediately preceding ` dot(`.
+pub fn parse_dots(hlo_text: &str) -> Vec<DotOp> {
+    let mut out = Vec::new();
+    for line in hlo_text.lines() {
+        let Some(dot_pos) = line.find(" dot(") else { continue };
+        let head = &line[..dot_pos];
+        // find the last "= f32[...]" (or other dtype) before " dot("
+        let Some(eq) = head.rfind('=') else { continue };
+        let decl = head[eq + 1..].trim();
+        let Some(lb) = decl.find('[') else { continue };
+        let Some(rb) = decl[lb..].find(']') else { continue };
+        let dims_str = &decl[lb + 1..lb + rb];
+        let dims: Option<Vec<usize>> = if dims_str.is_empty() {
+            Some(Vec::new())
+        } else {
+            dims_str.split(',').map(|d| d.trim().parse().ok()).collect()
+        };
+        if let Some(dims) = dims {
+            out.push(DotOp { dims });
+        }
+    }
+    out
+}
+
+/// Largest dot output (in elements) in the module.
+pub fn max_dot_elems(hlo_text: &str) -> usize {
+    parse_dots(hlo_text).iter().map(|d| d.elems()).max().unwrap_or(0)
+}
+
+/// Does the module contain a dot whose output has >= 2 dims of at
+/// least `n` each (the dense N x N score-matrix signature)?
+pub fn has_square_dot(hlo_text: &str, n: usize) -> bool {
+    parse_dots(hlo_text).iter().any(|d| {
+        d.dims.iter().filter(|&&x| x >= n).count() >= 2
+    })
+}
+
+/// Audit summary for an artifact file.
+pub fn audit_file(path: &std::path::Path) -> Result<(usize, usize, bool)> {
+    let text = std::fs::read_to_string(path)?;
+    let dots = parse_dots(&text);
+    Ok((dots.len(), max_dot_elems(&text), has_square_dot(&text, 256)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+ENTRY %main {
+  %p0 = f32[256,64]{1,0} parameter(0)
+  %dot.1 = f32[256,256]{1,0} dot(%p0, %p0), lhs_contracting_dims={1}
+  %dot.2 = f32[32,16]{1,0} dot(%a, %b), lhs_contracting_dims={1}
+  %dot.s = f32[] dot(%x, %y), lhs_contracting_dims={0}
+  %add.1 = f32[256,256]{1,0} add(%dot.1, %dot.1)
+}";
+
+    #[test]
+    fn parses_shapes() {
+        let dots = parse_dots(SAMPLE);
+        assert_eq!(dots.len(), 3);
+        assert_eq!(dots[0].dims, vec![256, 256]);
+        assert_eq!(dots[1].dims, vec![32, 16]);
+        assert_eq!(dots[2].dims, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn max_and_square() {
+        assert_eq!(max_dot_elems(SAMPLE), 256 * 256);
+        assert!(has_square_dot(SAMPLE, 256));
+        assert!(!has_square_dot(SAMPLE, 257));
+    }
+
+    #[test]
+    fn add_is_not_a_dot() {
+        // the add on an [256,256] buffer must not count
+        let only_small = "%dot.2 = f32[32,16]{1,0} dot(%a, %b)\n\
+                          %add = f32[999,999]{1,0} add(%c, %d)";
+        assert_eq!(max_dot_elems(only_small), 512);
+        assert!(!has_square_dot(only_small, 256));
+    }
+}

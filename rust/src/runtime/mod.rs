@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (`!Send`), so a
+//! [`Runtime`] is confined to one thread — the coordinator runs it on a
+//! dedicated engine thread and talks to it over channels
+//! (`coordinator::engine`).
+//!
+//! Artifact flow: `manifest.json` → [`Manifest`] → lazy
+//! compile-and-cache per artifact → [`Runtime::execute`] with
+//! [`Tensor`] I/O (spec-validated so a Rust-side shape bug surfaces as
+//! a readable error, not an XLA crash).
+
+mod artifact;
+mod executor;
+pub mod hlo_audit;
+
+pub use artifact::{ArtifactSpec, Manifest, ParamsLayout, TensorSpec};
+pub use executor::{tensor_to_literal, Runtime};

@@ -1,0 +1,235 @@
+//! Host tensor type bridging Rust data and XLA literals.
+//!
+//! Deliberately small: shape + flat data (f32 or i32), row-major.  All
+//! heavy math runs inside the compiled HLO; host-side ops are limited
+//! to what the coordinator needs (noise generation, metric reductions,
+//! batch assembly).
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    // ---- constructors --------------------------------------------------
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(),
+                 data: Data::F32(vec![0.0; shape.iter().product()]) }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {:?} wants {} elements, got {}", shape, n,
+                  data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: Data::F32(data) })
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {:?} wants {} elements, got {}", shape, n,
+                  data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: Data::I32(data) })
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: Data::F32(vec![v]) }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor { shape: vec![], data: Data::I32(vec![v]) }
+    }
+
+    /// Standard-normal tensor (noise latents, synthetic QKV, ...).
+    pub fn randn(shape: &[usize], rng: &mut Pcg32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: Data::F32(rng.normal_vec(n)) }
+    }
+
+    // ---- accessors -----------------------------------------------------
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_f32(&self) -> bool {
+        matches!(self.data, Data::F32(_))
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match self.data {
+            Data::F32(_) => "float32",
+            Data::I32(_) => "int32",
+        }
+    }
+
+    // ---- host-side ops -------------------------------------------------
+
+    pub fn reshaped(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.numel() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Stack same-shaped tensors along a new axis 0 (batch assembly).
+    pub fn stack(parts: &[&Tensor]) -> Result<Tensor> {
+        let first = parts.first().ok_or_else(|| anyhow::anyhow!("empty"))?;
+        let mut data = Vec::with_capacity(first.numel() * parts.len());
+        for p in parts {
+            if p.shape != first.shape {
+                bail!("stack shape mismatch {:?} vs {:?}", p.shape,
+                      first.shape);
+            }
+            data.extend_from_slice(p.f32s()?);
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(&first.shape);
+        Tensor::from_f32(&shape, data)
+    }
+
+    /// Split axis 0 back into per-sample tensors (batch disassembly).
+    pub fn unstack(&self) -> Result<Vec<Tensor>> {
+        let b = *self.shape.first()
+            .ok_or_else(|| anyhow::anyhow!("unstack scalar"))?;
+        let inner: Vec<usize> = self.shape[1..].to_vec();
+        let stride: usize = inner.iter().product();
+        let data = self.f32s()?;
+        (0..b)
+            .map(|i| Tensor::from_f32(
+                &inner, data[i * stride..(i + 1) * stride].to_vec()))
+            .collect()
+    }
+
+    pub fn mse(&self, other: &Tensor) -> Result<f64> {
+        let a = self.f32s()?;
+        let b = other.f32s()?;
+        if a.len() != b.len() {
+            bail!("mse length mismatch");
+        }
+        Ok(a.iter().zip(b)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>() / a.len() as f64)
+    }
+
+    /// Frobenius relative error — mirrors ref.attention_relative_error.
+    pub fn rel_err(&self, reference: &Tensor) -> Result<f64> {
+        let a = self.f32s()?;
+        let b = reference.f32s()?;
+        let num: f64 = a.iter().zip(b)
+            .map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>();
+        let den: f64 = b.iter().map(|y| (*y as f64).powi(2)).sum::<f64>();
+        Ok((num.sqrt()) / (den.sqrt() + 1e-9))
+    }
+
+    pub fn mean(&self) -> Result<f64> {
+        let a = self.f32s()?;
+        Ok(a.iter().map(|x| *x as f64).sum::<f64>() / a.len().max(1) as f64)
+    }
+
+    pub fn max_abs(&self) -> Result<f64> {
+        Ok(self.f32s()?.iter().fold(0.0f64, |m, x| m.max(x.abs() as f64)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_shape_check() {
+        assert!(Tensor::from_f32(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::from_f32(&[2, 3], vec![0.0; 5]).is_err());
+        let t = Tensor::zeros(&[4, 5]);
+        assert_eq!(t.numel(), 20);
+        assert_eq!(t.dtype_str(), "float32");
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = Tensor::from_i32(&[3], vec![1, -2, 3]).unwrap();
+        assert_eq!(t.i32s().unwrap(), &[1, -2, 3]);
+        assert!(t.f32s().is_err());
+    }
+
+    #[test]
+    fn stack_unstack_roundtrip() {
+        let a = Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::from_f32(&[2, 2], vec![5., 6., 7., 8.]).unwrap();
+        let s = Tensor::stack(&[&a, &b]).unwrap();
+        assert_eq!(s.shape, vec![2, 2, 2]);
+        let parts = s.unstack().unwrap();
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn stack_rejects_mismatch() {
+        let a = Tensor::zeros(&[2]);
+        let b = Tensor::zeros(&[3]);
+        assert!(Tensor::stack(&[&a, &b]).is_err());
+    }
+
+    #[test]
+    fn metrics() {
+        let a = Tensor::from_f32(&[4], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::from_f32(&[4], vec![1., 2., 3., 5.]).unwrap();
+        assert!((a.mse(&b).unwrap() - 0.25).abs() < 1e-12);
+        assert_eq!(a.mse(&a).unwrap(), 0.0);
+        assert!(a.rel_err(&a).unwrap() < 1e-9);
+        assert!((a.mean().unwrap() - 2.5).abs() < 1e-12);
+        assert_eq!(a.max_abs().unwrap(), 4.0);
+    }
+
+    #[test]
+    fn randn_is_deterministic_per_seed() {
+        let mut r1 = Pcg32::seeded(9);
+        let mut r2 = Pcg32::seeded(9);
+        assert_eq!(Tensor::randn(&[8], &mut r1), Tensor::randn(&[8], &mut r2));
+    }
+
+    #[test]
+    fn reshape() {
+        let t = Tensor::zeros(&[2, 6]).reshaped(&[3, 4]).unwrap();
+        assert_eq!(t.shape, vec![3, 4]);
+        assert!(Tensor::zeros(&[2, 6]).reshaped(&[5]).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! Rust-driven two-stage SLA2 training (paper Alg. 1).
+//!
+//! The exported `train_*` / `stage1_*` HLOs contain the full update
+//! (loss, gradients, Adam) — this driver owns the parameter buffers
+//! and the data stream, so training works with Python long gone:
+//!
+//!  * **Stage 1** — sample (Q, K, V) from the model's attention layers
+//!    (`collect_qkv_*` artifact) and fit the router + alpha against
+//!    full attention (SoftTop-k inside the HLO);
+//!  * **Stage 2** — merge the trained router back and fine-tune the
+//!    whole model end-to-end (hard Top-k + QAT forward inside the
+//!    Pallas-lowered HLO), on synthetic video batches.
+
+use anyhow::{Context, Result};
+
+use crate::config::{ModelConfig, TrainConfig};
+use crate::runtime::Runtime;
+use crate::tensor::{Data, Tensor};
+use crate::util::rng::Pcg32;
+use crate::video::synth;
+
+/// Parameters + Adam moments + step counter, in artifact input order.
+pub struct TrainState {
+    pub params: Vec<Tensor>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub step: Tensor, // i32 scalar
+}
+
+impl TrainState {
+    pub fn fresh(params: Vec<Tensor>) -> TrainState {
+        let zeros =
+            |ps: &[Tensor]| ps.iter().map(|p| Tensor::zeros(&p.shape))
+                .collect::<Vec<_>>();
+        TrainState { m: zeros(&params), v: zeros(&params), params,
+                     step: Tensor::scalar_i32(0) }
+    }
+
+    fn flat_inputs(&self) -> Vec<Tensor> {
+        let mut v: Vec<Tensor> = Vec::with_capacity(3 * self.params.len()
+                                                    + 1);
+        v.extend(self.params.iter().cloned());
+        v.extend(self.m.iter().cloned());
+        v.extend(self.v.iter().cloned());
+        v.push(self.step.clone());
+        v
+    }
+
+    /// Rebuild from a train-step output tuple: params, m, v, step, loss.
+    fn absorb(&mut self, mut outs: Vec<Tensor>) -> Result<f64> {
+        let n = self.params.len();
+        anyhow::ensure!(outs.len() == 3 * n + 2,
+                        "train step returned {} outputs, want {}",
+                        outs.len(), 3 * n + 2);
+        let loss_t = outs.pop().unwrap();
+        let loss = loss_t.f32s()?[0] as f64;
+        self.step = outs.pop().unwrap();
+        self.v = outs.split_off(2 * n);
+        self.m = outs.split_off(n);
+        self.params = outs;
+        Ok(loss)
+    }
+}
+
+pub struct Trainer {
+    pub runtime: Runtime,
+    pub model: ModelConfig,
+    pub cfg: TrainConfig,
+}
+
+impl Trainer {
+    pub fn new(artifacts_dir: &str, cfg: TrainConfig) -> Result<Trainer> {
+        let runtime = Runtime::load(artifacts_dir)?;
+        let model = runtime.manifest().config(&cfg.model)?.clone();
+        Ok(Trainer { runtime, model, cfg })
+    }
+
+    pub fn init_state(&self) -> Result<TrainState> {
+        Ok(TrainState::fresh(
+            self.runtime.manifest().load_params(&self.cfg.model)?))
+    }
+
+    fn stage2_artifact(&self) -> String {
+        format!("train_{}_{}_{}_b{}", self.cfg.model, self.cfg.variant,
+                self.cfg.tier, self.cfg.batch)
+    }
+
+    /// One Stage-2 step on a synthetic batch; returns the loss.
+    pub fn stage2_step(&self, state: &mut TrainState, rng: &mut Pcg32,
+                       seed: i32) -> Result<f64> {
+        let (x0s, ys) = synth::synthetic_batch(&self.model, self.cfg.batch,
+                                               rng);
+        let ys = Tensor::from_i32(&[self.cfg.batch], ys)?;
+        let mut inputs = state.flat_inputs();
+        inputs.push(x0s);
+        inputs.push(ys);
+        inputs.push(Tensor::scalar_i32(seed));
+        let outs = self.runtime.execute(&self.stage2_artifact(), &inputs)?;
+        state.absorb(outs)
+    }
+
+    /// Run Stage 2 for `steps` steps; returns the loss curve.
+    pub fn run_stage2<F: FnMut(usize, f64)>(
+        &self, state: &mut TrainState, steps: usize, mut on_log: F)
+        -> Result<Vec<f64>> {
+        let mut rng = Pcg32::seeded(self.cfg.seed);
+        let mut losses = Vec::with_capacity(steps);
+        for i in 0..steps {
+            let loss = self.stage2_step(state, &mut rng, i as i32)
+                .with_context(|| format!("stage-2 step {i}"))?;
+            losses.push(loss);
+            if i % self.cfg.log_every == 0 || i + 1 == steps {
+                on_log(i, loss);
+            }
+        }
+        Ok(losses)
+    }
+
+    // ------------------------------------------------------------------
+    // Stage 1
+    // ------------------------------------------------------------------
+
+    /// Indices of (alpha_logit, proj_k, proj_q) per block inside the
+    /// canonical params order — jax's flatten sorts dict keys, so the
+    /// Stage-1 pytree `[{alpha_logit, proj_k, proj_q}; depth]` flattens
+    /// in exactly this per-block key order.
+    fn router_indices(&self) -> Result<Vec<usize>> {
+        let layout = self.runtime.manifest().params
+            .get(&self.cfg.model)
+            .context("params layout")?;
+        let find = |name: &str| -> Result<usize> {
+            layout.tensors.iter().position(|(n, _, _)| n == name)
+                .with_context(|| format!("param {name} not in layout"))
+        };
+        let mut idx = Vec::with_capacity(3 * self.model.depth);
+        for b in 0..self.model.depth {
+            idx.push(find(&format!("blocks/{b}/attn_alpha_logit"))?);
+            idx.push(find(&format!("blocks/{b}/attn_proj_k"))?);
+            idx.push(find(&format!("blocks/{b}/attn_proj_q"))?);
+        }
+        Ok(idx)
+    }
+
+    /// Sample one (L, heads, 3, N, d) QKV stack via `collect_qkv_*`
+    /// (Alg. 1 line 2): noise a synthetic clip to a random t and run
+    /// the full-attention forward, capturing attention inputs.
+    pub fn collect_qkv(&self, params: &[Tensor], rng: &mut Pcg32)
+                       -> Result<Tensor> {
+        let label = rng.below(self.model.num_classes as u32) as usize;
+        let x0 = synth::synthetic_clip(&self.model, label, rng);
+        let eps = Tensor::randn(&x0.shape, rng);
+        let t = Tensor::scalar_f32(0.1 + 0.8 * rng.f32());
+        let y = Tensor::scalar_i32(label as i32);
+        let mut inputs: Vec<Tensor> = params.to_vec();
+        inputs.extend([x0, y, t, eps]);
+        let outs = self.runtime.execute(
+            &format!("collect_qkv_{}", self.cfg.model), &inputs)?;
+        outs.into_iter().next().context("collect_qkv output")
+    }
+
+    /// Run Stage 1: fit router + alpha on freshly sampled QKV stacks.
+    /// Returns (updated router state merged into `state.params`,
+    /// loss curve).
+    pub fn run_stage1<F: FnMut(usize, f64)>(
+        &self, state: &mut TrainState, steps: usize, mut on_log: F)
+        -> Result<Vec<f64>> {
+        let idx = self.router_indices()?;
+        let mut rparams: Vec<Tensor> =
+            idx.iter().map(|&i| state.params[i].clone()).collect();
+        let mut m: Vec<Tensor> =
+            rparams.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        let mut v = m.clone();
+        let mut step = Tensor::scalar_i32(0);
+        let artifact = format!("stage1_{}_{}", self.cfg.model, self.cfg.tier);
+        let mut rng = Pcg32::seeded(self.cfg.seed ^ 0x51a2);
+        let mut losses = Vec::with_capacity(steps);
+        // a small pool of QKV stacks, refreshed round-robin (the paper
+        // trains on a fixed sampled dataset D)
+        let pool: Vec<Tensor> = (0..4)
+            .map(|_| self.collect_qkv(&state.params, &mut rng))
+            .collect::<Result<_>>()?;
+        for i in 0..steps {
+            let qkv = &pool[i % pool.len()];
+            let mut inputs: Vec<Tensor> = rparams.clone();
+            inputs.extend(m.iter().cloned());
+            inputs.extend(v.iter().cloned());
+            inputs.push(step.clone());
+            inputs.push(qkv.clone());
+            let mut outs = self.runtime.execute(&artifact, &inputs)
+                .with_context(|| format!("stage-1 step {i}"))?;
+            let n = rparams.len();
+            anyhow::ensure!(outs.len() == 3 * n + 2);
+            let loss = outs.pop().unwrap().f32s()?[0] as f64;
+            step = outs.pop().unwrap();
+            v = outs.split_off(2 * n);
+            m = outs.split_off(n);
+            rparams = outs;
+            losses.push(loss);
+            if i % self.cfg.log_every == 0 || i + 1 == steps {
+                on_log(i, loss);
+            }
+        }
+        // merge back (Alg. 1: Stage 2 starts from the fitted router)
+        for (&i, rp) in idx.iter().zip(&rparams) {
+            state.params[i] = rp.clone();
+        }
+        Ok(losses)
+    }
+
+    /// Mean sigmoid(alpha_logit) over blocks — observability for the
+    /// learnable mixing ratio.
+    pub fn mean_alpha(&self, state: &TrainState) -> Result<f64> {
+        let idx = self.router_indices()?;
+        let mut acc = 0.0;
+        let mut n = 0usize;
+        for chunk in idx.chunks(3) {
+            let logits = state.params[chunk[0]].f32s()?;
+            for &l in logits {
+                acc += 1.0 / (1.0 + (-l as f64).exp());
+                n += 1;
+            }
+        }
+        Ok(acc / n as f64)
+    }
+}
+
+/// Quick structural check used by tests: every tensor in a state is
+/// finite (guards against NaN blowups in long runs).
+pub fn state_is_finite(state: &TrainState) -> bool {
+    state.params.iter().chain(&state.m).chain(&state.v).all(|t| {
+        match &t.data {
+            Data::F32(v) => v.iter().all(|x| x.is_finite()),
+            Data::I32(_) => true,
+        }
+    })
+}

@@ -1,0 +1,137 @@
+//! Criterion-style bench harness (criterion is not in the offline
+//! registry).  Warmup + timed iterations + summary stats, plus a
+//! markdown-ish table printer shared by all paper-table benches.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// per-iteration wall time in seconds
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean * 1e3
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn run<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                       mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), summary: Summary::of(&samples) }
+}
+
+/// Adaptive variant: keep iterating until `min_time_s` of measurement
+/// or `max_iters`, whichever first (good for multi-second HLO steps).
+pub fn run_for<F: FnMut()>(name: &str, warmup: usize, min_time_s: f64,
+                           max_iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < max_iters
+        && (samples.len() < 3 || start.elapsed().as_secs_f64() < min_time_s)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), summary: Summary::of(&samples) }
+}
+
+/// Fixed-width table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {c:>w$} |", w = w));
+            }
+            s
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let r = run("noop-ish", 2, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.summary.n, 10);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn run_for_respects_max_iters() {
+        let r = run_for("fast", 0, 10.0, 5, || {});
+        assert_eq!(r.summary.n, 5);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new(&["name", "ms"]);
+        t.row(vec!["a".into(), "1.5".into()]);
+        t.row(vec!["long-name".into(), "10.25".into()]);
+        let s = t.to_string();
+        assert!(s.contains("| long-name |"));
+        assert!(s.lines().count() == 4);
+    }
+}

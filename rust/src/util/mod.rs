@@ -1,0 +1,18 @@
+//! First-party utility substrates.
+//!
+//! The offline cargo registry only carries `xla`/`anyhow`/`thiserror`/
+//! `once_cell`, so everything a framework normally pulls from crates.io
+//! lives here instead: JSON ([`json`]), a PCG RNG ([`rng`]), CLI
+//! parsing ([`cli`]), descriptive statistics ([`stats`]), a thread pool
+//! ([`threadpool`]), leveled logging ([`logging`]), a property-testing
+//! mini-framework ([`proptest`]) and the criterion-style bench harness
+//! ([`bench`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,79 @@
+//! proptest-lite: randomized property testing with failure reporting.
+//!
+//! The real `proptest` crate is not in the offline registry; this
+//! substrate covers what the coordinator-invariant tests need:
+//! deterministic case generation from a seed, N cases per property,
+//! and a panic message that pins down the failing seed + case index so
+//! a failure is reproducible with `check_seeded`.
+
+use super::rng::Pcg32;
+
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `prop` on `cases` generated inputs; panic with the seed and case
+/// index on the first failure.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg32) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check_seeded(name, 0x5eed_cafe, cases, &mut gen, &mut prop);
+}
+
+pub fn check_seeded<T, G, P>(name: &str, seed: u64, cases: usize,
+                             gen: &mut G, prop: &mut P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg32) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Pcg32::new(seed, case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (seed {seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("reverse-involution", 64,
+              |r| (0..r.below(20)).map(|_| r.next_u32()).collect::<Vec<_>>(),
+              |v| {
+                  let mut w = v.clone();
+                  w.reverse();
+                  w.reverse();
+                  if w == *v { Ok(()) } else { Err("mismatch".into()) }
+              });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\"")]
+    fn failing_property_panics_with_context() {
+        check("always-fails", 8, |r| r.next_u32(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let mut a = Vec::new();
+        check("collect-a", 4, |r| r.next_u32(), |x| {
+            a.push(*x);
+            Ok(())
+        });
+        let mut b = Vec::new();
+        check("collect-b", 4, |r| r.next_u32(), |x| {
+            b.push(*x);
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

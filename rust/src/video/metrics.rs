@@ -1,0 +1,240 @@
+//! Proxy quality metrics (the VBench / VisionReward substitution).
+//!
+//! Each proxy targets the failure mode of its Table 1 counterpart:
+//!
+//! | paper metric            | proxy here                                |
+//! |-------------------------|-------------------------------------------|
+//! | Imaging Quality (IQ)    | spatial sharpness (mean gradient energy)  |
+//! | Aesthetic Quality (AQ)  | PSNR vs. the full-attention rollout       |
+//! | Motion Smoothness (MS)  | inverse temporal jerk                     |
+//! | Subject Consistency (SC)| frame-to-frame correlation                |
+//! | Overall Consistency (OC)| SSIM (global) vs. full-attention rollout  |
+//! | VisionReward (VR)       | attention-output relative error (negated) |
+//!
+//! Absolute values are NOT comparable to VBench scores; Table 1/2
+//! claims are about *ordering across methods*, which these preserve.
+
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct QualityReport {
+    pub sharpness: f64,
+    pub psnr_vs_ref: f64,
+    pub ssim_vs_ref: f64,
+    pub motion_smoothness: f64,
+    pub subject_consistency: f64,
+}
+
+/// Mean spatial gradient magnitude (sharpness / imaging-quality proxy).
+pub fn sharpness(clip: &Tensor) -> f64 {
+    let [t, h, w, c] = dims4(clip);
+    let d = clip.f32s().unwrap();
+    let at = |ti: usize, yi: usize, xi: usize, ci: usize| {
+        d[((ti * h + yi) * w + xi) * c + ci] as f64
+    };
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for ti in 0..t {
+        for yi in 0..h - 1 {
+            for xi in 0..w - 1 {
+                for ci in 0..c {
+                    let gx = at(ti, yi, xi + 1, ci) - at(ti, yi, xi, ci);
+                    let gy = at(ti, yi + 1, xi, ci) - at(ti, yi, xi, ci);
+                    acc += (gx * gx + gy * gy).sqrt();
+                    n += 1;
+                }
+            }
+        }
+    }
+    acc / n as f64
+}
+
+/// PSNR in dB against a reference clip (range taken as the reference's
+/// dynamic range).
+pub fn psnr(clip: &Tensor, reference: &Tensor) -> f64 {
+    let mse = clip.mse(reference).unwrap();
+    let r = reference.f32s().unwrap();
+    let (lo, hi) = r.iter().fold((f32::MAX, f32::MIN),
+                                 |(l, h), &v| (l.min(v), h.max(v)));
+    let range = ((hi - lo) as f64).max(1e-6);
+    if mse < 1e-20 {
+        return 99.0;
+    }
+    10.0 * (range * range / mse).log10()
+}
+
+/// Global SSIM (single window over the whole clip — a coarse but
+/// monotone structural-similarity proxy).
+pub fn ssim_global(a: &Tensor, b: &Tensor) -> f64 {
+    let x = a.f32s().unwrap();
+    let y = b.f32s().unwrap();
+    let n = x.len() as f64;
+    let mx = x.iter().map(|v| *v as f64).sum::<f64>() / n;
+    let my = y.iter().map(|v| *v as f64).sum::<f64>() / n;
+    let (mut vx, mut vy, mut cov) = (0.0, 0.0, 0.0);
+    for (xi, yi) in x.iter().zip(y) {
+        let dx = *xi as f64 - mx;
+        let dy = *yi as f64 - my;
+        vx += dx * dx;
+        vy += dy * dy;
+        cov += dx * dy;
+    }
+    vx /= n;
+    vy /= n;
+    cov /= n;
+    let (c1, c2) = (0.0001, 0.0009);
+    ((2.0 * mx * my + c1) * (2.0 * cov + c2))
+        / ((mx * mx + my * my + c1) * (vx + vy + c2))
+}
+
+/// Inverse temporal jerk: 1 / (1 + mean |x[t+1] - 2 x[t] + x[t-1]|).
+/// Smooth motion (constant velocity) scores ~1; flicker scores low.
+pub fn motion_smoothness(clip: &Tensor) -> f64 {
+    let [t, h, w, c] = dims4(clip);
+    if t < 3 {
+        return 1.0;
+    }
+    let d = clip.f32s().unwrap();
+    let frame = h * w * c;
+    let mut acc = 0.0;
+    for ti in 1..t - 1 {
+        for i in 0..frame {
+            let jerk = d[(ti + 1) * frame + i] as f64
+                - 2.0 * d[ti * frame + i] as f64
+                + d[(ti - 1) * frame + i] as f64;
+            acc += jerk.abs();
+        }
+    }
+    1.0 / (1.0 + acc / ((t - 2) * frame) as f64 * 10.0)
+}
+
+/// Mean correlation of every frame with frame 0 (subject persistence).
+pub fn subject_consistency(clip: &Tensor) -> f64 {
+    let [t, h, w, c] = dims4(clip);
+    let d = clip.f32s().unwrap();
+    let frame = h * w * c;
+    let f0: Vec<f64> = d[..frame].iter().map(|v| *v as f64).collect();
+    let m0 = f0.iter().sum::<f64>() / frame as f64;
+    let s0: f64 = f0.iter().map(|v| (v - m0) * (v - m0)).sum::<f64>().sqrt();
+    let mut acc = 0.0;
+    for ti in 1..t {
+        let ft = &d[ti * frame..(ti + 1) * frame];
+        let mt = ft.iter().map(|v| *v as f64).sum::<f64>() / frame as f64;
+        let st: f64 = ft.iter()
+            .map(|v| (*v as f64 - mt) * (*v as f64 - mt))
+            .sum::<f64>()
+            .sqrt();
+        let cov: f64 = f0.iter().zip(ft)
+            .map(|(a, b)| (a - m0) * (*b as f64 - mt))
+            .sum();
+        acc += cov / (s0 * st + 1e-12);
+    }
+    acc / (t - 1) as f64
+}
+
+/// Full report for a generated clip against its full-attention
+/// reference rollout.
+pub fn report(clip: &Tensor, reference: &Tensor) -> QualityReport {
+    QualityReport {
+        sharpness: sharpness(clip),
+        psnr_vs_ref: psnr(clip, reference),
+        ssim_vs_ref: ssim_global(clip, reference),
+        motion_smoothness: motion_smoothness(clip),
+        subject_consistency: subject_consistency(clip),
+    }
+}
+
+fn dims4(t: &Tensor) -> [usize; 4] {
+    assert_eq!(t.shape.len(), 4, "expected (T,H,W,C), got {:?}", t.shape);
+    [t.shape[0], t.shape[1], t.shape[2], t.shape[3]]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::video::synth::{synthetic_clip, tests::tiny_cfg};
+
+    #[test]
+    fn psnr_identity_is_high_and_noise_lowers_it() {
+        let cfg = tiny_cfg();
+        let clip = synthetic_clip(&cfg, 1, &mut Pcg32::seeded(0));
+        assert!(psnr(&clip, &clip) > 90.0);
+        let mut noisy = clip.clone();
+        let mut rng = Pcg32::seeded(1);
+        for v in noisy.f32s_mut().unwrap() {
+            *v += 0.1 * rng.normal();
+        }
+        let p = psnr(&noisy, &clip);
+        assert!(p > 5.0 && p < 40.0, "psnr {p}");
+        let mut worse = clip.clone();
+        let mut rng = Pcg32::seeded(2);
+        for v in worse.f32s_mut().unwrap() {
+            *v += 0.5 * rng.normal();
+        }
+        assert!(psnr(&worse, &clip) < p);
+    }
+
+    #[test]
+    fn ssim_bounds() {
+        let cfg = tiny_cfg();
+        let a = synthetic_clip(&cfg, 1, &mut Pcg32::seeded(3));
+        let b = synthetic_clip(&cfg, 6, &mut Pcg32::seeded(4));
+        assert!((ssim_global(&a, &a) - 1.0).abs() < 1e-9);
+        let cross = ssim_global(&a, &b);
+        assert!(cross < 0.999, "distinct clips should not be identical");
+    }
+
+    #[test]
+    fn smooth_motion_beats_flicker() {
+        let cfg = tiny_cfg();
+        let clip = synthetic_clip(&cfg, 2, &mut Pcg32::seeded(5));
+        let smooth = motion_smoothness(&clip);
+        let mut flicker = clip.clone();
+        {
+            let d = flicker.f32s_mut().unwrap();
+            let frame = d.len() / 4;
+            for (i, v) in d.iter_mut().enumerate() {
+                if (i / frame) % 2 == 1 {
+                    *v = -*v; // invert alternating frames
+                }
+            }
+        }
+        assert!(motion_smoothness(&flicker) < smooth);
+    }
+
+    #[test]
+    fn subject_consistency_detects_subject_swap() {
+        let cfg = tiny_cfg();
+        let a = synthetic_clip(&cfg, 1, &mut Pcg32::seeded(6));
+        let sc_same = subject_consistency(&a);
+        // splice a different clip's frames into the tail
+        let b = synthetic_clip(&cfg, 6, &mut Pcg32::seeded(7));
+        let mut spliced = a.clone();
+        {
+            let frame = a.numel() / 4;
+            let src = b.f32s().unwrap()[2 * frame..].to_vec();
+            spliced.f32s_mut().unwrap()[2 * frame..]
+                .copy_from_slice(&src);
+        }
+        assert!(subject_consistency(&spliced) < sc_same);
+    }
+
+    #[test]
+    fn sharpness_prefers_structure_over_blur() {
+        let cfg = tiny_cfg();
+        let clip = synthetic_clip(&cfg, 3, &mut Pcg32::seeded(8));
+        let flat = Tensor::zeros(&clip.shape);
+        assert!(sharpness(&clip) > sharpness(&flat));
+    }
+
+    #[test]
+    fn report_is_complete() {
+        let cfg = tiny_cfg();
+        let clip = synthetic_clip(&cfg, 0, &mut Pcg32::seeded(9));
+        let r = report(&clip, &clip);
+        assert!(r.psnr_vs_ref > 90.0);
+        assert!((r.ssim_vs_ref - 1.0).abs() < 1e-9);
+        assert!(r.motion_smoothness > 0.0 && r.motion_smoothness <= 1.0);
+    }
+}

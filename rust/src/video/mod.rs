@@ -1,0 +1,13 @@
+//! Synthetic video workload + proxy quality metrics.
+//!
+//! Substitutes the paper's private 3k-video dataset and VBench /
+//! VisionReward judges (DESIGN.md §2): [`synth`] generates
+//! deterministic moving-blob clips (class label = motion direction),
+//! and [`metrics`] scores generations on proxies that target the same
+//! failure modes as the paper's quality columns.
+
+pub mod metrics;
+pub mod synth;
+
+pub use metrics::QualityReport;
+pub use synth::{synthetic_clip, synthetic_batch};

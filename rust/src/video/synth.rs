@@ -1,0 +1,139 @@
+//! Deterministic moving-Gaussian-blob video generator.
+//!
+//! Rust mirror of `python/compile/train.py::synthetic_video` (not
+//! bit-identical — each side uses its own RNG — but the same family:
+//! one Gaussian blob per clip, class label sets the motion direction,
+//! speed/start position randomized per sample).  This gives the
+//! training and serving workloads real temporal structure so motion /
+//! consistency proxies measure something.
+
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// One clip of shape `cfg.video = (T, H, W, C)`, values ~ [-0.5, 1.5].
+pub fn synthetic_clip(cfg: &ModelConfig, label: usize,
+                      rng: &mut Pcg32) -> Tensor {
+    let [t, h, w, c] = cfg.video;
+    let angle = 2.0 * std::f32::consts::PI * label as f32
+        / cfg.num_classes as f32;
+    let speed = 0.25 + 0.5 * rng.f32();
+    let cx0 = 0.25 + 0.5 * rng.f32();
+    let cy0 = 0.25 + 0.5 * rng.f32();
+    let mut data = vec![0.0f32; t * h * w * c];
+    for ti in 0..t {
+        let tf = ti as f32 / t as f32;
+        let cx = (cx0 + speed * tf * angle.cos()).rem_euclid(1.0);
+        let cy = (cy0 + speed * tf * angle.sin()).rem_euclid(1.0);
+        for yi in 0..h {
+            let y = yi as f32 / h as f32;
+            for xi in 0..w {
+                let x = xi as f32 / w as f32;
+                let d2 = (y - cy) * (y - cy) + (x - cx) * (x - cx);
+                let blob = (-d2 / 0.02).exp();
+                for ci in 0..c {
+                    let chan = blob * (0.5 + 0.5 * (angle + ci as f32).cos());
+                    data[((ti * h + yi) * w + xi) * c + ci] =
+                        2.0 * chan - 0.5;
+                }
+            }
+        }
+    }
+    Tensor::from_f32(&[t, h, w, c], data).unwrap()
+}
+
+/// A batch of clips + labels: `((B, T, H, W, C), Vec<label>)`.
+pub fn synthetic_batch(cfg: &ModelConfig, batch: usize,
+                       rng: &mut Pcg32) -> (Tensor, Vec<i32>) {
+    let labels: Vec<i32> = (0..batch)
+        .map(|_| rng.below(cfg.num_classes as u32) as i32)
+        .collect();
+    let clips: Vec<Tensor> = labels.iter()
+        .map(|&l| synthetic_clip(cfg, l as usize, rng))
+        .collect();
+    let refs: Vec<&Tensor> = clips.iter().collect();
+    (Tensor::stack(&refs).unwrap(), labels)
+}
+
+/// Blob centroid per frame — used by the class-consistency proxy.
+pub fn frame_centroids(clip: &Tensor) -> Vec<(f32, f32)> {
+    let [t, h, w, c] = [clip.shape[0], clip.shape[1], clip.shape[2],
+                        clip.shape[3]];
+    let data = clip.f32s().unwrap();
+    (0..t).map(|ti| {
+        let (mut sx, mut sy, mut sw) = (0.0f64, 0.0f64, 0.0f64);
+        for yi in 0..h {
+            for xi in 0..w {
+                let mut v = 0.0f32;
+                for ci in 0..c {
+                    v += data[((ti * h + yi) * w + xi) * c + ci];
+                }
+                let wgt = (v.max(0.0)) as f64; // energy above background
+                sx += wgt * xi as f64;
+                sy += wgt * yi as f64;
+                sw += wgt;
+            }
+        }
+        if sw > 1e-9 {
+            ((sx / sw / w as f64) as f32, (sy / sw / h as f64) as f32)
+        } else {
+            (0.5, 0.5)
+        }
+    }).collect()
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    pub(crate) fn tiny_cfg() -> ModelConfig {
+        let j = Json::parse(
+            r#"{"video":[4,8,8,3],"patch":[2,2,2],"dim":64,"depth":2,
+                "heads":2,"head_dim":32,"b_q":8,"b_k":4,"n_tokens":32,
+                "t_m":4,"t_n":8,"num_classes":10,"param_count":0}"#,
+        ).unwrap();
+        ModelConfig::from_json("dit-tiny", &j).unwrap()
+    }
+
+    #[test]
+    fn clip_shape_and_range() {
+        let cfg = tiny_cfg();
+        let mut rng = Pcg32::seeded(0);
+        let clip = synthetic_clip(&cfg, 3, &mut rng);
+        assert_eq!(clip.shape, vec![4, 8, 8, 3]);
+        let d = clip.f32s().unwrap();
+        assert!(d.iter().all(|v| (-0.6..=1.6).contains(v)));
+        assert!(clip.max_abs().unwrap() > 0.1); // not all background
+    }
+
+    #[test]
+    fn batch_shapes_and_labels() {
+        let cfg = tiny_cfg();
+        let mut rng = Pcg32::seeded(1);
+        let (xs, ys) = synthetic_batch(&cfg, 3, &mut rng);
+        assert_eq!(xs.shape, vec![3, 4, 8, 8, 3]);
+        assert_eq!(ys.len(), 3);
+        assert!(ys.iter().all(|&y| (0..10).contains(&y)));
+    }
+
+    #[test]
+    fn blob_moves_over_time() {
+        let cfg = tiny_cfg();
+        let mut rng = Pcg32::seeded(2);
+        let clip = synthetic_clip(&cfg, 2, &mut rng);
+        let cents = frame_centroids(&clip);
+        let (x0, y0) = cents[0];
+        let (x3, y3) = cents[3];
+        let dist = ((x3 - x0).powi(2) + (y3 - y0).powi(2)).sqrt();
+        assert!(dist > 0.01, "centroid barely moved: {dist}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = tiny_cfg();
+        let a = synthetic_clip(&cfg, 1, &mut Pcg32::seeded(7));
+        let b = synthetic_clip(&cfg, 1, &mut Pcg32::seeded(7));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,186 @@
+//! Property tests on coordinator invariants (no PJRT needed):
+//! no request loss/duplication, batch compatibility, FIFO order for
+//! the remainder, backpressure bounds, batch planning exactness.
+
+use std::collections::HashSet;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use sla2::coordinator::queue::RequestQueue;
+use sla2::coordinator::request::{Envelope, GenRequest};
+use sla2::coordinator::plan_batches;
+use sla2::util::proptest::check;
+use sla2::util::rng::Pcg32;
+
+fn env(id: u64, tier: &str, steps: usize) -> Envelope {
+    let (tx, rx) = channel();
+    std::mem::forget(rx);
+    Envelope { request: GenRequest::new(id, 0, id, steps, tier), reply: tx }
+}
+
+const TIERS: [&str; 3] = ["s90", "s95", "s97"];
+
+#[test]
+fn prop_no_request_lost_or_duplicated() {
+    check("queue-conservation", 64,
+          |r: &mut Pcg32| {
+              (0..(1 + r.below(30) as u64))
+                  .map(|id| (id, *r.choice(&TIERS),
+                             if r.f32() < 0.5 { 4 } else { 8 }))
+                  .collect::<Vec<_>>()
+          },
+          |reqs| {
+              let q = RequestQueue::new(1024);
+              for (id, tier, steps) in reqs {
+                  q.push(env(*id, tier, *steps)).map_err(|e| e.to_string())?;
+              }
+              let mut seen = HashSet::new();
+              let mut drained = 0usize;
+              while drained < reqs.len() {
+                  let b = q.pop_batch(4, Duration::from_millis(50),
+                                      Duration::ZERO)
+                      .ok_or("queue closed early")?;
+                  if b.is_empty() {
+                      return Err("timeout before drain complete".into());
+                  }
+                  for e in &b {
+                      if !seen.insert(e.request.id) {
+                          return Err(format!("duplicate id {}",
+                                             e.request.id));
+                      }
+                  }
+                  drained += b.len();
+              }
+              if seen.len() != reqs.len() {
+                  return Err(format!("lost requests: {} of {}",
+                                     seen.len(), reqs.len()));
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn prop_batches_are_homogeneous() {
+    check("batch-compat", 64,
+          |r: &mut Pcg32| {
+              (0..(1 + r.below(25) as u64))
+                  .map(|id| (id, *r.choice(&TIERS),
+                             if r.f32() < 0.5 { 4 } else { 8 }))
+                  .collect::<Vec<_>>()
+          },
+          |reqs| {
+              let q = RequestQueue::new(1024);
+              for (id, tier, steps) in reqs {
+                  q.push(env(*id, tier, *steps)).map_err(|e| e.to_string())?;
+              }
+              let mut drained = 0;
+              while drained < reqs.len() {
+                  let b = q.pop_batch(3, Duration::from_millis(50),
+                                      Duration::ZERO)
+                      .ok_or("closed")?;
+                  if b.is_empty() {
+                      return Err("timeout".into());
+                  }
+                  if b.len() > 3 {
+                      return Err(format!("batch too big: {}", b.len()));
+                  }
+                  let first = &b[0].request;
+                  for e in &b[1..] {
+                      if !e.request.compatible(first) {
+                          return Err(format!(
+                              "incompatible batch: {:?}/{} with {:?}/{}",
+                              first.tier, first.steps, e.request.tier,
+                              e.request.steps));
+                      }
+                  }
+                  drained += b.len();
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn prop_first_request_fifo() {
+    // the head of every popped batch is the oldest pending request
+    check("fifo-head", 64,
+          |r: &mut Pcg32| {
+              (0..(1 + r.below(20) as u64))
+                  .map(|id| (id, *r.choice(&TIERS)))
+                  .collect::<Vec<_>>()
+          },
+          |reqs| {
+              let q = RequestQueue::new(1024);
+              for (id, tier) in reqs {
+                  q.push(env(*id, tier, 8)).map_err(|e| e.to_string())?;
+              }
+              let mut expected_heads: Vec<u64> = Vec::new();
+              let mut pending: Vec<(u64, String)> = reqs.iter()
+                  .map(|(i, t)| (*i, t.to_string())).collect();
+              while !pending.is_empty() {
+                  let b = q.pop_batch(4, Duration::from_millis(50),
+                                      Duration::ZERO).ok_or("closed")?;
+                  if b.is_empty() {
+                      return Err("timeout".into());
+                  }
+                  // head must be the oldest pending
+                  if b[0].request.id != pending[0].0 {
+                      return Err(format!("head {} != oldest {}",
+                                         b[0].request.id, pending[0].0));
+                  }
+                  expected_heads.push(b[0].request.id);
+                  let taken: HashSet<u64> =
+                      b.iter().map(|e| e.request.id).collect();
+                  pending.retain(|(id, _)| !taken.contains(id));
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn prop_backpressure_never_exceeds_capacity() {
+    check("backpressure", 32,
+          |r: &mut Pcg32| (1 + r.below(8) as usize,
+                           r.below(40) as usize),
+          |(cap, n)| {
+              let q = RequestQueue::new(*cap);
+              let mut accepted = 0;
+              for i in 0..*n {
+                  if q.push(env(i as u64, "s95", 8)).is_ok() {
+                      accepted += 1;
+                  }
+                  if q.len() > *cap {
+                      return Err(format!("len {} > cap {cap}", q.len()));
+                  }
+              }
+              if accepted > *cap {
+                  return Err(format!("accepted {accepted} > cap {cap}"));
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn prop_plan_batches_exact_cover() {
+    check("plan-exact", 128,
+          |r: &mut Pcg32| {
+              let n = r.below(64) as usize;
+              let mut sizes = vec![1];
+              for s in [2, 3, 4, 8] {
+                  if r.f32() < 0.5 {
+                      sizes.push(s);
+                  }
+              }
+              (n, sizes)
+          },
+          |(n, sizes)| {
+              let plan = plan_batches(*n, sizes);
+              let total: usize = plan.iter().sum();
+              if total != *n {
+                  return Err(format!("covered {total}, wanted {n}"));
+              }
+              if plan.iter().any(|s| !sizes.contains(s)) {
+                  return Err("unsupported batch size in plan".into());
+              }
+              Ok(())
+          });
+}

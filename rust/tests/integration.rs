@@ -1,0 +1,148 @@
+//! Full-stack integration: server (queue -> batcher -> engine ->
+//! sampling loop) and trainer (two-stage Alg. 1) against real
+//! artifacts on the tiny model.
+
+mod common;
+
+use sla2::config::{ServeConfig, TrainConfig};
+use sla2::coordinator::Server;
+use sla2::trainer::{state_is_finite, Trainer};
+use sla2::video::metrics;
+
+fn tiny_serve() -> ServeConfig {
+    ServeConfig {
+        model: "dit-tiny".into(),
+        variant: "sla2".into(),
+        tier: "s90".into(),
+        sample_steps: 4,
+        max_batch: 2,
+        batch_window_ms: 20,
+        queue_capacity: 64,
+    }
+}
+
+#[test]
+fn server_end_to_end_generation() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let server = Server::start(dir.to_str().unwrap(), tiny_serve())
+        .expect("server start");
+    // submit a burst: 3 sla2 requests + 1 dense (incompatible tier)
+    let rxs: Vec<_> = (0..3)
+        .map(|i| server.submit(i, 100 + i as u64, 4, "s90").unwrap())
+        .collect();
+    let dense_rx = server.submit(5, 999, 4, "dense").unwrap();
+
+    let mut clips = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.clip.shape, vec![4, 8, 8, 3]);
+        assert!(resp.metrics.batch_size >= 1
+                && resp.metrics.batch_size <= 2);
+        clips.push(resp.clip);
+    }
+    let dense = dense_rx.recv().unwrap().unwrap();
+    assert_eq!(dense.metrics.batch_size, 1, "dense tier cannot batch \
+                                             with sla2 requests");
+
+    // deterministic seeds: same seed == same clip
+    let again = server.submit(0, 100, 4, "s90").unwrap()
+        .recv().unwrap().unwrap();
+    assert_eq!(again.clip, clips[0]);
+
+    let snap = server.metrics_snapshot();
+    assert!(snap.get("completed").unwrap().as_usize().unwrap() >= 5);
+    server.shutdown();
+}
+
+#[test]
+fn generated_clips_have_video_structure() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let server = Server::start(dir.to_str().unwrap(), tiny_serve())
+        .unwrap();
+    let resp = server.submit(3, 42, 4, "s90").unwrap()
+        .recv().unwrap().unwrap();
+    let clip = resp.clip;
+    // untrained model: clip ~ noise integrated toward zero velocity;
+    // metrics must at least be finite and in range
+    let ms = metrics::motion_smoothness(&clip);
+    assert!(ms > 0.0 && ms <= 1.0);
+    assert!(metrics::sharpness(&clip).is_finite());
+    server.shutdown();
+}
+
+#[test]
+fn loadgen_under_overload_rejects_but_never_loses() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    use sla2::coordinator::{run_trace, TraceConfig};
+    let mut serve = tiny_serve();
+    serve.queue_capacity = 2; // force backpressure under burst
+    serve.sample_steps = 2;
+    let server = Server::start(dir.to_str().unwrap(), serve).unwrap();
+    // warm compile
+    let _ = server.submit(0, 1, 2, "s90").unwrap().recv().unwrap();
+    let trace = TraceConfig {
+        rps: 500.0, // a burst far above 1-core capacity
+        n_requests: 12,
+        tiers: vec!["s90".into()],
+        steps: 2,
+        seed: 3,
+    };
+    let report = run_trace(&server, &trace).unwrap();
+    // conservation: every offered request is accounted for exactly once
+    assert_eq!(report.accepted + report.rejected, report.offered);
+    assert_eq!(report.completed + report.failed, report.accepted);
+    assert_eq!(report.failed, 0, "accepted requests must complete");
+    assert!(report.completed >= 1);
+    server.shutdown();
+}
+
+#[test]
+fn trainer_two_stage_reduces_losses() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let cfg = TrainConfig {
+        model: "dit-tiny".into(),
+        variant: "sla2".into(),
+        tier: "s90".into(),
+        stage1_steps: 12,
+        stage2_steps: 12,
+        batch: 2,
+        seed: 7,
+        log_every: 100,
+    };
+    let trainer = Trainer::new(dir.to_str().unwrap(), cfg).unwrap();
+    let mut state = trainer.init_state().unwrap();
+
+    let s1 = trainer.run_stage1(&mut state, 12, |_, _| {}).unwrap();
+    assert!(s1.last().unwrap() < s1.first().unwrap(),
+            "stage1 loss did not drop: {s1:?}");
+
+    let alpha = trainer.mean_alpha(&state).unwrap();
+    assert!(alpha > 0.0 && alpha < 1.0);
+
+    let s2 = trainer.run_stage2(&mut state, 12, |_, _| {}).unwrap();
+    assert!(s2.last().unwrap() < s2.first().unwrap(),
+            "stage2 loss did not drop: {s2:?}");
+    assert!(state_is_finite(&state));
+}
+
+#[test]
+fn trainer_stage1_actually_moves_router_params() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let cfg = TrainConfig {
+        model: "dit-tiny".into(),
+        variant: "sla2".into(),
+        tier: "s90".into(),
+        stage1_steps: 4,
+        stage2_steps: 0,
+        batch: 2,
+        seed: 8,
+        log_every: 100,
+    };
+    let trainer = Trainer::new(dir.to_str().unwrap(), cfg).unwrap();
+    let mut state = trainer.init_state().unwrap();
+    let before = state.params.clone();
+    trainer.run_stage1(&mut state, 4, |_, _| {}).unwrap();
+    let moved = state.params.iter().zip(&before)
+        .any(|(a, b)| a != b);
+    assert!(moved, "stage 1 left all parameters untouched");
+}
