@@ -4,7 +4,8 @@
 //!
 //! ```bash
 //! cargo run --release --example serve_batch -- \
-//!     --model dit-tiny --requests 8 --max-batch 2 --steps 6
+//!     --model dit-tiny --requests 8 --max-batch 2 --steps 6 \
+//!     --num-shards 2
 //! ```
 
 use anyhow::Result;
@@ -19,8 +20,10 @@ fn main() -> Result<()> {
     let artifacts = args.str("artifacts", "artifacts");
     let serve = ServeConfig::from_args(&args);
     let n_requests = args.usize("requests", 8);
-    println!("starting server: model={} variant={} tier={} max_batch={}",
-             serve.model, serve.variant, serve.tier, serve.max_batch);
+    println!("starting server: model={} variant={} tier={} max_batch={} \
+              num_shards={}",
+             serve.model, serve.variant, serve.tier, serve.max_batch,
+             serve.num_shards);
     let server = Server::start(&artifacts, serve.clone())?;
 
     // a request wave with mixed tiers: the batcher must group

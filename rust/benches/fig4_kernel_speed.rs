@@ -11,20 +11,23 @@
 //!     bench detect structural regressions (e.g. a dense fallback
 //!     sneaking in would destroy the sparse/dense latency ratio).
 //!
-//! Run: `cargo bench --bench fig4_kernel_speed`
+//! Run: `cargo bench --bench fig4_kernel_speed [--json PATH|none]`
+//! Writes `BENCH_fig4_kernel.json` by default.
 
 use anyhow::Result;
 use sla2::costmodel::{device, flops};
 use sla2::runtime::Runtime;
 use sla2::tensor::Tensor;
-use sla2::util::bench::{run_for, Table};
+use sla2::util::bench::{self, run_for, Table};
 use sla2::util::cli::Args;
+use sla2::util::json::Json;
 use sla2::util::rng::Pcg32;
 
 fn main() -> Result<()> {
     let args = Args::parse_from(std::env::args().skip(1)
         .filter(|a| a != "--bench"));
     let artifacts = args.str("artifacts", "artifacts");
+    let mut json_rows: Vec<Json> = Vec::new();
 
     // ------- modelled RTX5090 curve over a dense sparsity grid -------
     println!("=== Fig. 4: kernel speed, RTX5090 cost model \
@@ -37,23 +40,33 @@ fn main() -> Result<()> {
                              "VMoBA", "SLA", "FlashAttn2"]);
     for sparsity in [0.80, 0.85, 0.90, 0.95, 0.97] {
         let keep = 1.0 - sparsity;
-        let tops = |kind, prof: Option<device::MethodProfile>| {
+        let tops = |kind, prof: Option<device::MethodProfile>| -> f64 {
             let kt = match prof {
                 Some(p) => device::kernel_time(&dev, kind, &g(keep), p),
                 None => device::kernel_time_default(&dev, kind, &g(keep)),
             };
-            format!("{:.0}", kt.effective_tops)
+            kt.effective_tops
         };
-        t.row(vec![
-            format!("{:.0}%", sparsity * 100.0),
-            tops(flops::AttnKind::Sla2 { quant: true }, None),
-            tops(flops::AttnKind::Sla2 { quant: false }, None),
-            tops(flops::AttnKind::SparseOnly, None),
-            tops(flops::AttnKind::SparseOnly,
-                 Some(device::vmoba_profile())),
-            tops(flops::AttnKind::Sla, None),
-            format!("{:.0}", fa2.effective_tops),
-        ]);
+        let methods: [(&str, f64); 6] = [
+            ("SLA2", tops(flops::AttnKind::Sla2 { quant: true }, None)),
+            ("SLA2-noQ", tops(flops::AttnKind::Sla2 { quant: false },
+                              None)),
+            ("VSA", tops(flops::AttnKind::SparseOnly, None)),
+            ("VMoBA", tops(flops::AttnKind::SparseOnly,
+                           Some(device::vmoba_profile()))),
+            ("SLA", tops(flops::AttnKind::Sla, None)),
+            ("FlashAttn2", fa2.effective_tops),
+        ];
+        let mut cells = vec![format!("{:.0}%", sparsity * 100.0)];
+        for (method, eff_tops) in methods {
+            cells.push(format!("{eff_tops:.0}"));
+            json_rows.push(Json::obj()
+                .push("section", "rtx5090_model")
+                .push("method", method)
+                .push("sparsity", sparsity)
+                .push("eff_tops", eff_tops));
+        }
+        t.row(cells);
     }
     t.print();
     let s97 = device::kernel_time_default(
@@ -72,32 +85,55 @@ fn main() -> Result<()> {
     println!("=== Fig. 4 companion: measured CPU latency of the AOT \
               kernels (N=256, d=64; structural check, not a GPU \
               proxy) ===\n");
-    let rt = Runtime::load(&artifacts)?;
-    let mut rng = Pcg32::seeded(4);
-    let q = Tensor::randn(&[256, 64], &mut rng);
-    let k = Tensor::randn(&[256, 64], &mut rng);
-    let v = Tensor::randn(&[256, 64], &mut rng);
-    let mut t = Table::new(&["artifact", "mean ms", "p50 ms", "p99 ms",
-                             "eff. GOPS"]);
-    let c = flops::full_attention_flops(256, 64);
-    let arts = ["attn_flash_dense_n256", "attn_sla2_s90_n256",
-                "attn_sla2_s95_n256", "attn_sla2_s97_n256",
-                "attn_sla2_noquant_s95_n256", "attn_sla_s95_n256",
-                "attn_vsa_s95_n256", "attn_vmoba_s95_n256"];
-    for name in arts {
-        if rt.manifest().artifact(name).is_err() {
-            continue;
+    // the measured section only appends to json_rows; both the run
+    // and SKIP paths fall through to the single report write below,
+    // so the perf-trajectory file is always produced
+    match Runtime::load(&artifacts) {
+        Err(err) => println!("  SKIP measured section ({err:#})"),
+        Ok(rt) => {
+            let mut rng = Pcg32::seeded(4);
+            let q = Tensor::randn(&[256, 64], &mut rng);
+            let k = Tensor::randn(&[256, 64], &mut rng);
+            let v = Tensor::randn(&[256, 64], &mut rng);
+            let mut t = Table::new(&["artifact", "mean ms", "p50 ms",
+                                     "p99 ms", "eff. GOPS"]);
+            let c = flops::full_attention_flops(256, 64);
+            let arts = ["attn_flash_dense_n256", "attn_sla2_s90_n256",
+                        "attn_sla2_s95_n256", "attn_sla2_s97_n256",
+                        "attn_sla2_noquant_s95_n256", "attn_sla_s95_n256",
+                        "attn_vsa_s95_n256", "attn_vmoba_s95_n256"];
+            for name in arts {
+                if rt.manifest().artifact(name).is_err() {
+                    continue;
+                }
+                // warm compile outside the timer; a broken artifact
+                // skips, it must not abort the report
+                if let Err(err) = rt.execute(
+                    name, &[q.clone(), k.clone(), v.clone()])
+                {
+                    println!("  SKIP {name} ({err:#})");
+                    continue;
+                }
+                let b = run_for(name, 2, 1.0, 50, || {
+                    rt.execute(name, &[q.clone(), k.clone(), v.clone()])
+                        .unwrap();
+                });
+                t.row(vec![name.into(), format!("{:.2}", b.mean_ms()),
+                           format!("{:.2}", b.summary.p50 * 1e3),
+                           format!("{:.2}", b.summary.p99 * 1e3),
+                           format!("{:.2}", c / b.summary.mean / 1e9)]);
+                json_rows.push(b.to_json()
+                    .push("section", "cpu_measured")
+                    .push("eff_gops", c / b.summary.mean / 1e9));
+            }
+            t.print();
         }
-        // warm compile outside the timer
-        rt.execute(name, &[q.clone(), k.clone(), v.clone()])?;
-        let b = run_for(name, 2, 1.0, 50, || {
-            rt.execute(name, &[q.clone(), k.clone(), v.clone()]).unwrap();
-        });
-        t.row(vec![name.into(), format!("{:.2}", b.mean_ms()),
-                   format!("{:.2}", b.summary.p50 * 1e3),
-                   format!("{:.2}", b.summary.p99 * 1e3),
-                   format!("{:.2}", c / b.summary.mean / 1e9)]);
     }
-    t.print();
+
+    if let Some(path) = args.json_path("BENCH_fig4_kernel.json") {
+        let report = bench::report("fig4_kernel", json_rows);
+        bench::write_json(&path, &report)?;
+        println!("wrote {path}");
+    }
     Ok(())
 }

@@ -7,16 +7,24 @@
 //!     coordinator on this testbed's DiT models: per-step denoise
 //!     latency x sampling steps, full vs SLA2 tiers.  Shape check:
 //!     SLA2 steps must be markedly cheaper than full-attention steps.
+//!   * **Sharded serving (measured)** — aggregate throughput of the
+//!     engine pool at 1 shard vs N shards: the host-orchestration half
+//!     of the speedup story.
 //!
-//! Run: `cargo bench --bench fig5_e2e_latency`
+//! Run: `cargo bench --bench fig5_e2e_latency [--json PATH|none]`
+//! Writes `BENCH_fig5_e2e.json` by default.
+
+use std::time::Instant;
 
 use anyhow::Result;
-use sla2::config::ServeConfig;
+use sla2::config::{default_num_shards, ServeConfig};
 use sla2::coordinator::engine::Engine;
 use sla2::coordinator::request::GenRequest;
+use sla2::coordinator::Server;
 use sla2::costmodel::{device, e2e, flops};
-use sla2::util::bench::Table;
+use sla2::util::bench::{self, Table};
 use sla2::util::cli::Args;
+use sla2::util::json::Json;
 
 fn main() -> Result<()> {
     let args = Args::parse_from(std::env::args().skip(1)
@@ -24,6 +32,7 @@ fn main() -> Result<()> {
     let artifacts = args.str("artifacts", "artifacts");
     let model = args.str("model", "dit-tiny");
     let steps = args.usize("steps", 6);
+    let mut json_rows: Vec<Json> = Vec::new();
 
     // ---------------- modelled paper bars ----------------------------
     println!("=== Fig. 5: end-to-end latency, RTX5090 cost model \
@@ -56,6 +65,14 @@ fn main() -> Result<()> {
                        format!("{:.1}", est.other_s),
                        format!("{:.1}", est.total_s()),
                        format!("{:.2}x", full.total_s() / est.total_s())]);
+            json_rows.push(Json::obj()
+                .push("section", "rtx5090_model")
+                .push("model", pm.name)
+                .push("method", name)
+                .push("attention_s", est.attention_s)
+                .push("other_s", est.other_s)
+                .push("total_s", est.total_s())
+                .push("speedup", full.total_s() / est.total_s()));
         }
     }
     t.print();
@@ -82,6 +99,7 @@ fn main() -> Result<()> {
             max_batch: 1,
             batch_window_ms: 0,
             queue_capacity: 4,
+            num_shards: 1,
         };
         let engine = match Engine::new(&artifacts, serve) {
             Ok(e) => e,
@@ -109,11 +127,99 @@ fn main() -> Result<()> {
         t.row(vec![format!("{variant}@{tier}"), format!("{total:.2}"),
                    format!("{:.3}", total / steps as f64),
                    format!("{speedup:.2}x")]);
+        json_rows.push(Json::obj()
+            .push("section", "cpu_measured")
+            .push("method", format!("{variant}@{tier}"))
+            .push("total_s", total)
+            .push("s_per_step", total / steps as f64)
+            .push("speedup_vs_full", speedup));
     }
     t.print();
     println!("note: CPU interpret-lowered HLO; the measured speedups \
               reflect HLO-level compute skipping, not GPU tile \
               efficiency — the RTX5090 table above carries the paper's \
               absolute claims.");
+
+    // ---------------- sharded serving throughput ---------------------
+    // same flag name as every other surface (serve-demo, serve_batch)
+    let max_shards = args.usize("num-shards", default_num_shards().max(2));
+    let shard_sweep: Vec<usize> = if max_shards <= 1 {
+        vec![1]
+    } else {
+        vec![1, max_shards]
+    };
+    println!("\n=== Fig. 5 companion: engine-pool aggregate throughput \
+              (model {model}, tier s90, {steps} steps) ===\n");
+    let mut t = Table::new(&["shards", "requests", "wall s",
+                             "throughput rps", "speedup vs 1 shard"]);
+    let mut base_rps = None;
+    for &shards in &shard_sweep {
+        let n_requests = 4 * shards;
+        let serve = ServeConfig {
+            model: model.clone(),
+            variant: "sla2".into(),
+            tier: "s90".into(),
+            sample_steps: steps,
+            max_batch: 1,       // per-request dispatch: pure fan-out
+            batch_window_ms: 0,
+            queue_capacity: n_requests + shards + 4,
+            num_shards: shards,
+        };
+        let server = match Server::start(&artifacts, serve) {
+            Ok(s) => s,
+            Err(err) => {
+                println!("  {shards} shard(s): SKIP ({err:#})");
+                continue;
+            }
+        };
+        // warm every shard: one compile per shard, outside the timer
+        let warm: Vec<_> = (0..shards)
+            .filter_map(|i| server.submit(1, 7 + i as u64, steps, "s90")
+                .ok())
+            .collect();
+        for rx in warm {
+            let _ = rx.recv();
+        }
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n_requests)
+            .filter_map(|i| {
+                server.submit((i % 10) as i32, 100 + i as u64, steps,
+                              "s90").ok()
+            })
+            .collect();
+        let mut completed = 0usize;
+        for rx in rxs {
+            if matches!(rx.recv(), Ok(Ok(_))) {
+                completed += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = completed as f64 / wall.max(1e-9);
+        let speedup = match base_rps {
+            None => {
+                base_rps = Some(rps);
+                1.0
+            }
+            Some(b) => rps / b,
+        };
+        t.row(vec![format!("{shards}"), format!("{completed}"),
+                   format!("{wall:.2}"), format!("{rps:.2}"),
+                   format!("{speedup:.2}x")]);
+        json_rows.push(Json::obj()
+            .push("section", "serve_shards")
+            .push("num_shards", shards)
+            .push("requests", completed)
+            .push("wall_s", wall)
+            .push("throughput_rps", rps)
+            .push("speedup_vs_1shard", speedup));
+        server.shutdown();
+    }
+    t.print();
+
+    if let Some(path) = args.json_path("BENCH_fig5_e2e.json") {
+        let report = bench::report("fig5_e2e", json_rows);
+        bench::write_json(&path, &report)?;
+        println!("\nwrote {path}");
+    }
     Ok(())
 }

@@ -38,6 +38,7 @@ fn generate_clips(artifacts: &str, model: &str, variant: &str, tier: &str,
         max_batch: 1,
         batch_window_ms: 0,
         queue_capacity: 16,
+        num_shards: 1,
     };
     let mut engine = Engine::new(artifacts, serve)?;
     if let Some(p) = params {

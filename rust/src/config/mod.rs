@@ -71,7 +71,21 @@ impl ModelConfig {
     }
 }
 
-/// Serving-side knobs (dynamic batcher + sampler).
+/// Default shard count for the engine pool: available cores minus one
+/// (one core is left for the frontend/dispatcher), floored at 1 and
+/// capped at 8 — every shard loads its own runtime + parameter copy
+/// and compiles its own executables, so an uncapped default would
+/// silently eat minutes and gigabytes on many-core hosts.  Set
+/// `num_shards` explicitly to go wider.
+pub fn default_num_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .saturating_sub(1)
+        .clamp(1, 8)
+}
+
+/// Serving-side knobs (engine pool + dynamic batcher + sampler).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub model: String,
@@ -82,6 +96,10 @@ pub struct ServeConfig {
     /// how long the batcher waits to fill a batch before dispatching
     pub batch_window_ms: u64,
     pub queue_capacity: usize,
+    /// engine-pool width: each shard owns its own PJRT runtime and
+    /// executable cache (the client is `Rc`-based and never crosses
+    /// threads); 1 reproduces the old single-engine behavior
+    pub num_shards: usize,
 }
 
 impl Default for ServeConfig {
@@ -94,6 +112,7 @@ impl Default for ServeConfig {
             max_batch: 2,
             batch_window_ms: 5,
             queue_capacity: 256,
+            num_shards: default_num_shards(),
         }
     }
 }
@@ -109,6 +128,7 @@ impl ServeConfig {
             max_batch: args.usize("max-batch", d.max_batch),
             batch_window_ms: args.u64("batch-window-ms", d.batch_window_ms),
             queue_capacity: args.usize("queue-capacity", d.queue_capacity),
+            num_shards: args.usize("num-shards", d.num_shards).max(1),
         }
     }
 
@@ -129,6 +149,7 @@ impl ServeConfig {
             batch_window_ms: u("batch_window_ms",
                                d.batch_window_ms as usize) as u64,
             queue_capacity: u("queue_capacity", d.queue_capacity),
+            num_shards: u("num_shards", d.num_shards).max(1),
         }
     }
 }
@@ -228,5 +249,18 @@ mod tests {
         let s = ServeConfig::from_json(&j);
         assert_eq!(s.model, "m");
         assert_eq!(s.max_batch, 8);
+    }
+
+    #[test]
+    fn num_shards_parses_and_never_drops_below_one() {
+        assert!(default_num_shards() >= 1);
+        let a = Args::parse_from(["--num-shards", "3"].map(String::from));
+        assert_eq!(ServeConfig::from_args(&a).num_shards, 3);
+        let a = Args::parse_from(["--num-shards", "0"].map(String::from));
+        assert_eq!(ServeConfig::from_args(&a).num_shards, 1);
+        let j = Json::parse(r#"{"num_shards":4}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).num_shards, 4);
+        let j = Json::parse(r#"{"num_shards":0}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).num_shards, 1);
     }
 }

@@ -1,10 +1,14 @@
 //! The engine: owns the PJRT runtime and turns request batches into
 //! clips by driving the diffusion sampling loop over denoise HLOs.
 //!
-//! Runs on ONE thread (PjRtClient is `Rc`-based).  Model parameters
-//! are converted to XLA literals once at startup and reused across
-//! every step of every request — the hot loop only materializes the
-//! small per-batch tensors (latents, t, labels).
+//! Runs on ONE thread (PjRtClient is `Rc`-based); the sharded pool
+//! (`coordinator::pool`) runs one engine per shard thread.  Model
+//! parameters are converted to XLA literals once at startup and reused
+//! across every step of every request; inside the sampling loop the
+//! stacked-latent buffer, the per-step `ts` tensor and the label
+//! literal are all allocated once per batch and reused across steps —
+//! the per-step cost is only the literal conversion of the data that
+//! actually changed.
 
 use std::time::Instant;
 
@@ -13,6 +17,7 @@ use xla::Literal;
 
 use super::batcher::{denoise_artifact_name, plan_batches,
                      supported_batch_sizes};
+use super::pool::BatchProcessor;
 use super::request::{GenRequest, RequestMetrics};
 use crate::config::{ModelConfig, ServeConfig};
 use crate::diffusion;
@@ -73,18 +78,26 @@ impl Engine {
                                 else { &[1] });
         let mut out = Vec::with_capacity(reqs.len());
         let mut cursor = 0;
+        let dispatch_start = Instant::now();
         for batch_size in plan {
             let chunk = &reqs[cursor..cursor + batch_size];
             cursor += batch_size;
             let artifact = denoise_artifact_name(
                 &self.model.name, variant, tier, batch_size);
             let t0 = Instant::now();
+            // requests in later sub-batches waited in the engine for
+            // the earlier ones: count that toward queue wait so no
+            // latency goes unreported
+            let chunk_wait_ms =
+                t0.duration_since(dispatch_start).as_secs_f64() * 1e3;
             let clips = self.sample_batch(&artifact, chunk)?;
             let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
             for (req, clip) in chunk.iter().zip(clips) {
                 out.push((clip, RequestMetrics {
-                    queue_ms: req.submitted_at.elapsed().as_secs_f64()
-                        * 1e3 - compute_ms,
+                    // queue wait measured directly at dequeue (stamped
+                    // by the queue) — never negative, never
+                    // reconstructed from wall-clock arithmetic
+                    queue_ms: req.queue_wait_ms() + chunk_wait_ms,
                     compute_ms,
                     steps: req.steps,
                     batch_size,
@@ -95,33 +108,61 @@ impl Engine {
     }
 
     /// The diffusion sampling loop for one fixed-size sub-batch.
+    ///
+    /// Allocation discipline: the stacked latent `x`, the per-step
+    /// `ts` tensor and the label literal are each allocated ONCE and
+    /// mutated/reused across all steps; the loop only converts the two
+    /// tensors whose data changed into fresh literals.
     fn sample_batch(&self, artifact: &str, reqs: &[GenRequest])
                     -> Result<Vec<Tensor>> {
         let b = reqs.len();
         let [t, h, w, c] = self.model.video;
-        // initial noise latents from per-request seeds (deterministic)
-        let latents: Vec<Tensor> = reqs.iter()
-            .map(|r| Tensor::randn(&[t, h, w, c],
-                                   &mut Pcg32::seeded(r.seed)))
-            .collect();
-        let mut x = Tensor::stack(&latents.iter().collect::<Vec<_>>())?;
+        let clip_len = t * h * w * c;
+        // initial noise latents from per-request seeds, written
+        // straight into the stacked buffer (deterministic: the value
+        // stream per request is identical to stacking per-request
+        // `Tensor::randn` results)
+        let mut x = Tensor::zeros(&[b, t, h, w, c]);
+        {
+            let xs = x.f32s_mut()?;
+            for (i, r) in reqs.iter().enumerate() {
+                let mut rng = Pcg32::seeded(r.seed);
+                for v in &mut xs[i * clip_len..(i + 1) * clip_len] {
+                    *v = rng.normal();
+                }
+            }
+        }
         let labels: Vec<i32> = reqs.iter().map(|r| r.class_label).collect();
-        let ys = Tensor::from_i32(&[b], labels)?;
-        let ys_lit = crate::runtime::tensor_to_literal(&ys)?;
+        let ys_lit = crate::runtime::tensor_to_literal(
+            &Tensor::from_i32(&[b], labels)?)?;
+        let mut ts = Tensor::from_f32(&[b], vec![0.0; b])?;
 
         let grid = diffusion::timestep_grid(reqs[0].steps);
         for step in grid.windows(2) {
             let (t_cur, t_next) = (step[0], step[1]);
-            let ts = Tensor::from_f32(&[b], vec![t_cur; b])?;
-            let inputs = [crate::runtime::tensor_to_literal(&x)?,
-                          crate::runtime::tensor_to_literal(&ts)?,
-                          ys_lit.clone()];
-            let vel = self.runtime.execute_literals_with_prefix(
-                artifact, &self.params, &inputs)?
+            for v in ts.f32s_mut()? {
+                *v = t_cur;
+            }
+            let x_lit = crate::runtime::tensor_to_literal(&x)?;
+            let ts_lit = crate::runtime::tensor_to_literal(&ts)?;
+            let vel = self.runtime.execute_literal_refs_with_prefix(
+                artifact, &self.params, &[&x_lit, &ts_lit, &ys_lit])?
                 .into_iter().next()
                 .context("denoise returned nothing")?;
             diffusion::euler_step(&mut x, &vel, t_cur, t_next);
         }
         x.unstack()
+    }
+}
+
+impl BatchProcessor for Engine {
+    fn process(&mut self, reqs: &[GenRequest])
+               -> Result<Vec<(Tensor, RequestMetrics)>> {
+        self.generate(reqs)
+    }
+
+    fn counters(&self) -> (u64, u64) {
+        let (compiles, executions) = self.runtime.counters();
+        (compiles as u64, executions as u64)
     }
 }

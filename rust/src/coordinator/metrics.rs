@@ -1,7 +1,11 @@
-//! Server-level metrics: counters + latency distributions.
+//! Server-level metrics: counters + latency distributions + the
+//! per-shard rollup (compiles, executions, batches, utilization).
 
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::Instant;
 
+use super::pool::ShardStats;
 use crate::util::json::Json;
 use crate::util::stats::Online;
 
@@ -11,11 +15,14 @@ pub struct ServerMetrics {
     pub requests: u64,
     pub completed: u64,
     pub rejected: u64,
+    /// engine invocations (sub-batches after batch-size planning)
     pub batches: u64,
     pub denoise_steps: u64,
     pub queue_ms: Online,
     pub compute_ms: Online,
     pub batch_size: Online,
+    /// per-shard counters, attached by the engine pool at startup
+    shards: Vec<Arc<ShardStats>>,
 }
 
 impl Default for ServerMetrics {
@@ -36,7 +43,13 @@ impl ServerMetrics {
             queue_ms: Online::new(),
             compute_ms: Online::new(),
             batch_size: Online::new(),
+            shards: Vec::new(),
         }
+    }
+
+    /// Wire in the pool's per-shard counters (called once at startup).
+    pub fn attach_shards(&mut self, shards: Vec<Arc<ShardStats>>) {
+        self.shards = shards;
     }
 
     pub fn record_batch(&mut self, size: usize, steps: usize,
@@ -56,8 +69,18 @@ impl ServerMetrics {
         self.completed as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
     }
 
+    /// Total (compiles, executions) summed over every shard.
+    pub fn pool_counters(&self) -> (u64, u64) {
+        self.shards.iter().fold((0, 0), |(c, e), s| {
+            (c + s.compiles.load(Ordering::Relaxed),
+             e + s.executions.load(Ordering::Relaxed))
+        })
+    }
+
     pub fn snapshot(&self) -> Json {
-        Json::obj()
+        let uptime_s = self.started.elapsed().as_secs_f64();
+        let (compiles, executions) = self.pool_counters();
+        let mut j = Json::obj()
             .push("requests", self.requests as usize)
             .push("completed", self.completed as usize)
             .push("rejected", self.rejected as usize)
@@ -66,7 +89,29 @@ impl ServerMetrics {
             .push("mean_batch_size", self.batch_size.mean())
             .push("mean_queue_ms", self.queue_ms.mean())
             .push("mean_compute_ms", self.compute_ms.mean())
-            .push("throughput_rps", self.throughput_rps())
+            .push("throughput_rps", self.throughput_rps());
+        if !self.shards.is_empty() {
+            j = j.push("num_shards", self.shards.len())
+                .push("compiles", compiles as usize)
+                .push("executions", executions as usize);
+            let shards: Vec<Json> = self.shards.iter().enumerate()
+                .map(|(i, s)| Json::obj()
+                    .push("shard", i)
+                    .push("batches",
+                          s.batches.load(Ordering::Relaxed) as usize)
+                    .push("requests",
+                          s.requests.load(Ordering::Relaxed) as usize)
+                    .push("compiles",
+                          s.compiles.load(Ordering::Relaxed) as usize)
+                    .push("executions",
+                          s.executions.load(Ordering::Relaxed) as usize)
+                    .push("busy_ms",
+                          s.busy_us.load(Ordering::Relaxed) as f64 / 1e3)
+                    .push("utilization", s.utilization(uptime_s)))
+                .collect();
+            j = j.push("shards", shards);
+        }
+        j
     }
 }
 
@@ -90,5 +135,28 @@ mod tests {
         assert_eq!(s.get("completed").unwrap().as_usize(), Some(3));
         assert!((s.get("mean_queue_ms").unwrap().as_f64().unwrap() - 4.0)
             .abs() < 1e-9);
+        // no pool attached: no shard rollup keys
+        assert!(s.get("shards").is_none());
+    }
+
+    #[test]
+    fn shard_rollup_sums_counters() {
+        let mut m = ServerMetrics::new();
+        let a = Arc::new(ShardStats::default());
+        let b = Arc::new(ShardStats::default());
+        a.compiles.store(2, Ordering::Relaxed);
+        a.executions.store(10, Ordering::Relaxed);
+        a.batches.store(4, Ordering::Relaxed);
+        b.compiles.store(1, Ordering::Relaxed);
+        b.executions.store(5, Ordering::Relaxed);
+        m.attach_shards(vec![a, b]);
+        assert_eq!(m.pool_counters(), (3, 15));
+        let s = m.snapshot();
+        assert_eq!(s.get("num_shards").unwrap().as_usize(), Some(2));
+        assert_eq!(s.get("compiles").unwrap().as_usize(), Some(3));
+        assert_eq!(s.get("executions").unwrap().as_usize(), Some(15));
+        let shards = s.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].get("batches").unwrap().as_usize(), Some(4));
     }
 }

@@ -1,17 +1,45 @@
 //! L3 coordinator: the serving stack around the SLA2 denoiser.
 //!
-//! Architecture (vLLM-style, adapted to `!Send` PJRT):
+//! # Serving architecture
+//!
+//! vLLM-style, adapted to `!Send` PJRT and fanned out over a sharded
+//! engine pool:
 //!
 //! ```text
 //!  clients ──submit()──▶ RequestQueue (bounded, backpressure)
 //!                            │  pop_batch: same-tier grouping,
-//!                            │  batch window, size planning
+//!                            │  batch window, dequeue stamping
 //!                            ▼
-//!                     engine thread (owns Runtime — PjRtClient is Rc)
-//!                            │  sampling loop: denoise HLO + Euler
+//!                     dispatcher thread
+//!                            │  claims an idle shard, then pops the
+//!                            │  next compatible batch and routes it
+//!              ┌─────────────┼─────────────┐
+//!              ▼             ▼             ▼
+//!          shard 0        shard 1  ...  shard N-1
+//!        (own Runtime — PjRtClient is Rc; each shard compiles and
+//!         caches its own executables, runs the sampling loop)
+//!              │             │             │
+//!              └─────────────┴─────────────┘
 //!                            ▼
-//!                     per-request response channels + metrics
+//!          per-request response channels + ServerMetrics
+//!          (global counters + per-shard compiles/executions/
+//!           batches/utilization rollup)
 //! ```
+//!
+//! **Shard model** — `ServeConfig::num_shards` worker threads (default:
+//! available cores minus one).  Each shard owns a full `Runtime` +
+//! parameter set; nothing PJRT-related ever crosses a thread boundary.
+//!
+//! **Dispatch policy** — the dispatcher holds a free-shard token
+//! BEFORE popping, so while every shard is busy, requests keep
+//! coalescing in the queue (bigger batches under load) and `queue_ms`
+//! stays truthful: it is stamped at dequeue, which coincides with the
+//! start of service.  With `num_shards = 1` this reduces exactly to
+//! the old single-engine FIFO-compatible behavior.
+//!
+//! **Metrics** — shards update lock-free `ShardStats` (batches,
+//! requests, compiles, executions, busy time); `ServerMetrics::
+//! snapshot` rolls them up next to the global latency distributions.
 //!
 //! Requests are whole video generations; all requests in a batch share
 //! the timestep schedule (diffusion jobs are fixed-length, so static
@@ -22,6 +50,7 @@ pub mod batcher;
 pub mod engine;
 pub mod loadgen;
 pub mod metrics;
+pub mod pool;
 pub mod queue;
 pub mod request;
 pub mod server;
@@ -30,6 +59,7 @@ pub use batcher::plan_batches;
 pub use engine::Engine;
 pub use loadgen::{run_trace, TraceConfig, TraceReport};
 pub use metrics::ServerMetrics;
+pub use pool::{BatchProcessor, EnginePool, ShardStats};
 pub use queue::RequestQueue;
 pub use request::{GenRequest, GenResponse, RequestMetrics};
 pub use server::Server;

@@ -1,0 +1,340 @@
+//! Sharded engine pool: N worker shards, each owning its own PJRT
+//! runtime (the `xla` client is `Rc`-based and never crosses threads,
+//! so every shard compiles and caches its own executables), fed by a
+//! dispatcher that pops compatible batches off the shared
+//! [`RequestQueue`] and routes each to an idle shard.
+//!
+//! Dispatch policy: the dispatcher claims a free shard FIRST, then
+//! pops a batch.  While every shard is busy, requests stay in the
+//! queue, which (a) keeps the batch window coalescing stragglers into
+//! bigger batches under load and (b) keeps the dequeue stamp — and
+//! with it `queue_ms` — truthful: queue wait ends exactly when a
+//! shard is about to serve the batch.
+//!
+//! With `num_shards = 1` the pool degenerates to the old single
+//! engine-thread behavior: one consumer, strict FIFO-compatible
+//! batching, identical per-seed clips.
+//!
+//! Shutdown: closing the queue makes the dispatcher exit after the
+//! drain; dropping its per-shard channels then winds down every shard
+//! after it finishes its in-flight batch, so no reply channel is ever
+//! dropped with a request still pending.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, SendError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::metrics::ServerMetrics;
+use super::queue::RequestQueue;
+use super::request::{Envelope, GenRequest, GenResponse, RequestMetrics};
+use crate::tensor::Tensor;
+
+/// What a shard needs to turn a batch of COMPATIBLE requests into
+/// clips.  [`crate::coordinator::Engine`] implements this over PJRT;
+/// tests substitute a host-only mock so pool dispatch is testable
+/// without artifacts.
+pub trait BatchProcessor {
+    /// Serve the batch; returns `(clip, metrics)` per request, input
+    /// order preserved, exactly one entry per request.
+    ///
+    /// Contract on `metrics.batch_size`: results must be grouped into
+    /// CONTIGUOUS runs of engine invocations, each run's entries
+    /// carrying that invocation's size (`Engine::generate`'s chunk
+    /// layout).  `serve_batch` strides over `batch_size` to record
+    /// one `ServerMetrics::record_batch` per invocation — a processor
+    /// that reports sizes not matching its grouping skews the
+    /// batches/compute distributions.
+    fn process(&mut self, reqs: &[GenRequest])
+               -> Result<Vec<(Tensor, RequestMetrics)>>;
+
+    /// Cumulative (compiles, executions) for the metrics rollup.
+    fn counters(&self) -> (u64, u64) {
+        (0, 0)
+    }
+}
+
+/// Per-shard counters, updated lock-free by the owning shard and read
+/// by [`ServerMetrics::snapshot`].
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    pub batches: AtomicU64,
+    pub requests: AtomicU64,
+    pub compiles: AtomicU64,
+    pub executions: AtomicU64,
+    /// cumulative wall time spent serving batches, in microseconds
+    pub busy_us: AtomicU64,
+}
+
+impl ShardStats {
+    /// Busy fraction of `uptime_s` (the per-shard utilization metric).
+    pub fn utilization(&self, uptime_s: f64) -> f64 {
+        (self.busy_us.load(Ordering::Relaxed) as f64 / 1e6)
+            / uptime_s.max(1e-9)
+    }
+}
+
+/// The running pool: shard worker threads + the dispatcher.
+///
+/// [`EnginePool::join`] (and `Drop`) closes the queue itself before
+/// joining, so dropping a pool can never hang on an open queue; the
+/// dispatcher exits once the queue is closed and drained.
+pub struct EnginePool {
+    queue: Arc<RequestQueue>,
+    dispatcher: Option<JoinHandle<()>>,
+    shards: Vec<JoinHandle<()>>,
+    stats: Vec<Arc<ShardStats>>,
+}
+
+impl EnginePool {
+    /// Spawn `num_shards` workers, each building its own processor via
+    /// `factory(shard_id)` ON ITS OWN THREAD (so `Rc`-based runtimes
+    /// never migrate), then start the dispatcher.  Blocks until every
+    /// shard reports ready so callers get load errors synchronously;
+    /// on any failure the already-started shards are wound down before
+    /// the error is returned.
+    pub fn start_with<P, F>(num_shards: usize, queue: Arc<RequestQueue>,
+                            metrics: Arc<Mutex<ServerMetrics>>,
+                            max_batch: usize, batch_window: Duration,
+                            factory: F) -> Result<EnginePool>
+    where
+        P: BatchProcessor + 'static,
+        F: Fn(usize) -> Result<P> + Clone + Send + 'static,
+    {
+        assert!(num_shards >= 1, "pool needs at least one shard");
+        let (idle_tx, idle_rx) = channel::<usize>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let mut batch_txs: Vec<Sender<Vec<Envelope>>> = Vec::new();
+        let mut shards = Vec::new();
+        let mut stats = Vec::new();
+        for shard in 0..num_shards {
+            let (batch_tx, batch_rx) = channel::<Vec<Envelope>>();
+            batch_txs.push(batch_tx);
+            let st = Arc::new(ShardStats::default());
+            stats.push(Arc::clone(&st));
+            let factory = factory.clone();
+            let idle_tx = idle_tx.clone();
+            let ready_tx = ready_tx.clone();
+            let metrics = Arc::clone(&metrics);
+            let handle = std::thread::Builder::new()
+                .name(format!("sla2-shard-{shard}"))
+                .spawn(move || {
+                    let proc = match factory(shard) {
+                        Ok(p) => {
+                            let _ = ready_tx.send(Ok(()));
+                            p
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    // release our ready sender so a sibling shard that
+                    // dies before reporting surfaces as a disconnect,
+                    // not a startup hang
+                    drop(ready_tx);
+                    crate::info!("shard {shard} up");
+                    shard_loop(shard, proc, batch_rx, idle_tx, &metrics,
+                               &st);
+                    crate::info!("shard {shard} shut down");
+                })?;
+            shards.push(handle);
+        }
+        drop(idle_tx);
+        drop(ready_tx);
+
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..num_shards {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err = first_err.or_else(|| Some(anyhow::anyhow!(
+                        "a shard exited before reporting ready")));
+                    break;
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            // wind down the shards that did come up: dropping their
+            // batch channels (and the idle receiver) unblocks them
+            drop(batch_txs);
+            drop(idle_rx);
+            for h in shards {
+                let _ = h.join();
+            }
+            return Err(e).context("engine pool startup");
+        }
+
+        metrics.lock().unwrap().attach_shards(stats.clone());
+        let q = Arc::clone(&queue);
+        let dispatcher = std::thread::Builder::new()
+            .name("sla2-dispatch".into())
+            .spawn(move || {
+                dispatch_loop(&q, idle_rx, batch_txs, max_batch,
+                              batch_window);
+            })?;
+        Ok(EnginePool { queue, dispatcher: Some(dispatcher), shards,
+                        stats })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.stats.len()
+    }
+
+    pub fn stats(&self) -> &[Arc<ShardStats>] {
+        &self.stats
+    }
+
+    /// Graceful shutdown: close the queue (idempotent), then join the
+    /// dispatcher and every shard — each finishes its in-flight batch
+    /// and already-queued requests are drained, not dropped.
+    pub fn join(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        for h in self.shards.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        self.join();
+    }
+}
+
+/// Dispatcher: claim an idle shard, pop a compatible batch, hand it
+/// over.  Exits when the queue closes (graceful shutdown) or every
+/// shard has died (each remaining batch is failed, never dropped).
+fn dispatch_loop(queue: &RequestQueue, idle_rx: Receiver<usize>,
+                 batch_txs: Vec<Sender<Vec<Envelope>>>, max_batch: usize,
+                 batch_window: Duration) {
+    let poll = Duration::from_millis(100);
+    let mut idle: Option<usize> = None;
+    loop {
+        if idle.is_none() {
+            idle = match idle_rx.recv() {
+                Ok(i) => Some(i),
+                Err(_) => break, // every shard is gone
+            };
+        }
+        let mut batch = match queue.pop_batch(max_batch, poll, batch_window)
+        {
+            None => break,                       // closed + drained
+            Some(b) if b.is_empty() => continue, // poll timeout
+            Some(b) => b,
+        };
+        loop {
+            let shard = match idle.take() {
+                Some(i) => i,
+                None => match idle_rx.recv() {
+                    Ok(i) => i,
+                    Err(_) => {
+                        fail_batch(batch, "engine pool has no live \
+                                           shards");
+                        return;
+                    }
+                },
+            };
+            match batch_txs[shard].send(batch) {
+                Ok(()) => break,
+                // the shard died between announcing idle and
+                // receiving: take the batch back, try the next one
+                Err(SendError(b)) => batch = b,
+            }
+        }
+    }
+    // dropping batch_txs here winds down the shards
+}
+
+/// One shard: announce idle, serve the next batch, repeat.
+fn shard_loop<P: BatchProcessor>(shard: usize, mut proc: P,
+                                 batch_rx: Receiver<Vec<Envelope>>,
+                                 idle_tx: Sender<usize>,
+                                 metrics: &Mutex<ServerMetrics>,
+                                 stats: &ShardStats) {
+    loop {
+        if idle_tx.send(shard).is_err() {
+            break; // dispatcher gone
+        }
+        let batch = match batch_rx.recv() {
+            Ok(b) => b,
+            Err(_) => break, // dispatcher gone
+        };
+        serve_batch(&mut proc, batch, metrics, stats);
+        let (compiles, executions) = proc.counters();
+        stats.compiles.store(compiles, Ordering::Relaxed);
+        stats.executions.store(executions, Ordering::Relaxed);
+    }
+}
+
+fn serve_batch<P: BatchProcessor>(proc: &mut P, batch: Vec<Envelope>,
+                                  metrics: &Mutex<ServerMetrics>,
+                                  stats: &ShardStats) {
+    let reqs: Vec<GenRequest> =
+        batch.iter().map(|e| e.request.clone()).collect();
+    let t0 = Instant::now();
+    // a panicking processor must not take the whole shard down: turn
+    // the panic into per-request errors and keep serving
+    let outcome = catch_unwind(AssertUnwindSafe(|| proc.process(&reqs)));
+    let elapsed = t0.elapsed();
+    stats.busy_us.fetch_add(elapsed.as_micros() as u64, Ordering::Relaxed);
+    let results = match outcome {
+        Ok(Ok(r)) if r.len() == batch.len() => r,
+        Ok(Ok(r)) => {
+            fail_batch(batch, &format!(
+                "processor returned {} results for {} requests", r.len(),
+                reqs.len()));
+            return;
+        }
+        Ok(Err(e)) => {
+            crate::warn_!("batch failed: {e:#}");
+            fail_batch(batch, &format!("{e:#}"));
+            return;
+        }
+        Err(_) => {
+            crate::warn_!("batch processor panicked");
+            fail_batch(batch, "batch processor panicked");
+            return;
+        }
+    };
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    stats.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    {
+        // record before replying (readers who saw a reply see the
+        // records), but keep the lock off the reply sends — the
+        // submit path contends on this same mutex
+        let mut m = metrics.lock().unwrap();
+        // one record per ENGINE INVOCATION: the batch-size planner
+        // may split a dispatched batch into sub-batches, each with
+        // its own compute_ms — results within a sub-batch are
+        // contiguous and share batch_size, so stride over them
+        let mut i = 0;
+        while i < results.len() {
+            let rm = &results[i].1;
+            m.record_batch(rm.batch_size, rm.steps, rm.compute_ms);
+            i += rm.batch_size.max(1);
+        }
+        for (_, rm) in &results {
+            m.record_completion(rm.queue_ms);
+        }
+    }
+    for (env, (clip, rm)) in batch.into_iter().zip(results) {
+        let _ = env.reply.send(Ok(GenResponse {
+            id: env.request.id, clip, metrics: rm }));
+    }
+}
+
+fn fail_batch(batch: Vec<Envelope>, msg: &str) {
+    for env in batch {
+        let _ = env.reply.send(Err(anyhow::anyhow!(
+            "generation failed: {msg}")));
+    }
+}

@@ -20,7 +20,7 @@ struct Inner {
     closed: bool,
 }
 
-/// MPSC: many frontend producers, one engine consumer.
+/// MPSC: many frontend producers, one consumer (the pool dispatcher).
 pub struct RequestQueue {
     inner: Mutex<Inner>,
     cv: Condvar,
@@ -113,6 +113,13 @@ impl RequestQueue {
             }
         }
         g.items = rest;
+        drop(g);
+        // stamp the dequeue so queue wait is measured directly
+        // (submit -> here) instead of being reconstructed later
+        let now = Instant::now();
+        for env in &mut batch {
+            env.request.dequeued_at = Some(now);
+        }
         Some(batch)
     }
 }
@@ -189,6 +196,21 @@ mod tests {
                             Duration::ZERO).is_none());
         assert!(matches!(q.push(env(1, "s95", 8)),
                          Err(QueueError::Closed)));
+    }
+
+    #[test]
+    fn pop_batch_stamps_nonnegative_dequeue_time() {
+        let q = RequestQueue::new(4);
+        q.push(env(1, "s95", 8)).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let b = q.pop_batch(4, Duration::from_millis(10), Duration::ZERO)
+            .unwrap();
+        let r = &b[0].request;
+        let d = r.dequeued_at.expect("pop_batch must stamp dequeued_at");
+        assert!(d >= r.submitted_at);
+        let wait = r.queue_wait_ms();
+        assert!(wait >= 0.0, "queue wait went negative: {wait}");
+        assert!(wait >= 4.0, "expected >=4ms of queue wait, got {wait}");
     }
 
     #[test]

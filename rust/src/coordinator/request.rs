@@ -18,19 +18,33 @@ pub struct GenRequest {
     /// sparsity tier: "s90" | "s95" | "s97" | "dense"
     pub tier: String,
     pub submitted_at: Instant,
+    /// stamped by `RequestQueue::pop_batch` when the request leaves the
+    /// queue; `None` for requests that never crossed the queue (direct
+    /// `Engine::generate` calls in benches and tests)
+    pub dequeued_at: Option<Instant>,
 }
 
 impl GenRequest {
     pub fn new(id: u64, class_label: i32, seed: u64, steps: usize,
                tier: &str) -> GenRequest {
         GenRequest { id, class_label, seed, steps, tier: tier.into(),
-                     submitted_at: Instant::now() }
+                     submitted_at: Instant::now(), dequeued_at: None }
     }
 
     /// Two requests can share a batch iff they run the same artifact
     /// and walk the same timestep grid.
     pub fn compatible(&self, other: &GenRequest) -> bool {
         self.tier == other.tier && self.steps == other.steps
+    }
+
+    /// Queue wait in milliseconds, measured submit -> dequeue.
+    /// Non-negative by construction (the dequeue stamp is taken after
+    /// the submit stamp); 0.0 when the request bypassed the queue.
+    pub fn queue_wait_ms(&self) -> f64 {
+        self.dequeued_at
+            .map(|d| d.saturating_duration_since(self.submitted_at)
+                      .as_secs_f64() * 1e3)
+            .unwrap_or(0.0)
     }
 }
 
@@ -76,5 +90,17 @@ mod tests {
         assert!(a.compatible(&b));
         assert!(!a.compatible(&c)); // different step count
         assert!(!a.compatible(&d)); // different tier
+    }
+
+    #[test]
+    fn queue_wait_is_zero_without_dequeue_and_nonnegative_with() {
+        let mut r = GenRequest::new(1, 0, 0, 8, "s95");
+        assert_eq!(r.queue_wait_ms(), 0.0);
+        r.dequeued_at = Some(Instant::now());
+        assert!(r.queue_wait_ms() >= 0.0);
+        // a stamp that (impossibly) predates the submit still never
+        // goes negative thanks to saturating_duration_since
+        r.dequeued_at = Some(r.submitted_at);
+        assert_eq!(r.queue_wait_ms(), 0.0);
     }
 }

@@ -1,15 +1,15 @@
-//! The server: frontend handle + engine thread + lifecycle.
+//! The server: frontend handle + sharded engine pool + lifecycle.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::Result;
 
 use super::engine::Engine;
 use super::metrics::ServerMetrics;
+use super::pool::EnginePool;
 use super::queue::{QueueError, RequestQueue};
 use super::request::{Envelope, GenRequest, GenResponse};
 use crate::config::ServeConfig;
@@ -18,40 +18,39 @@ pub struct Server {
     queue: Arc<RequestQueue>,
     metrics: Arc<Mutex<ServerMetrics>>,
     next_id: AtomicU64,
-    engine_thread: Option<JoinHandle<()>>,
+    pool: Option<EnginePool>,
     serve: ServeConfig,
 }
 
 impl Server {
-    /// Start the engine thread (it builds the PJRT runtime locally —
-    /// `PjRtClient` cannot cross threads).  Blocks until the engine is
-    /// ready or failed, so callers get load errors synchronously.
+    /// Start `serve.num_shards` engine shards (each builds its PJRT
+    /// runtime on its own thread — `PjRtClient` cannot cross threads).
+    /// Blocks until every shard is ready or failed, so callers get
+    /// load errors synchronously.
     pub fn start(artifacts_dir: &str, serve: ServeConfig) -> Result<Server> {
         let queue = Arc::new(RequestQueue::new(serve.queue_capacity));
         let metrics = Arc::new(Mutex::new(ServerMetrics::new()));
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
-        let q = Arc::clone(&queue);
-        let m = Arc::clone(&metrics);
         let dir = artifacts_dir.to_string();
         let cfg = serve.clone();
-        let engine_thread = std::thread::Builder::new()
-            .name("sla2-engine".into())
-            .spawn(move || {
-                let engine = match Engine::new(&dir, cfg.clone()) {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                engine_loop(engine, &cfg, &q, &m);
+        let pool = EnginePool::start_with(
+            serve.num_shards.max(1),
+            Arc::clone(&queue),
+            Arc::clone(&metrics),
+            serve.max_batch,
+            Duration::from_millis(serve.batch_window_ms),
+            move |shard| {
+                let engine = Engine::new(&dir, cfg.clone())?;
+                if shard == 0 {
+                    crate::info!(
+                        "engine up: model={} variant={} tier={} \
+                         platform={}", engine.model.name,
+                        engine.serve.variant, engine.serve.tier,
+                        engine.runtime().platform());
+                }
+                Ok(engine)
             })?;
-        ready_rx.recv()??;
         Ok(Server { queue, metrics, next_id: AtomicU64::new(1),
-                    engine_thread: Some(engine_thread), serve })
+                    pool: Some(pool), serve })
     }
 
     /// Submit a generation request; returns the reply channel.
@@ -84,15 +83,20 @@ impl Server {
         self.metrics.lock().unwrap().snapshot()
     }
 
+    pub fn num_shards(&self) -> usize {
+        self.pool.as_ref().map(|p| p.num_shards()).unwrap_or(0)
+    }
+
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
-    /// Graceful shutdown: close the queue and join the engine.
+    /// Graceful shutdown: close the queue, then join the dispatcher
+    /// and every shard (each finishes its in-flight batch first).
     pub fn shutdown(mut self) {
         self.queue.close();
-        if let Some(h) = self.engine_thread.take() {
-            let _ = h.join();
+        if let Some(mut p) = self.pool.take() {
+            p.join();
         }
     }
 }
@@ -100,47 +104,8 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.queue.close();
-        if let Some(h) = self.engine_thread.take() {
-            let _ = h.join();
+        if let Some(mut p) = self.pool.take() {
+            p.join();
         }
     }
-}
-
-fn engine_loop(engine: Engine, cfg: &ServeConfig,
-               queue: &RequestQueue,
-               metrics: &Mutex<ServerMetrics>) {
-    crate::info!("engine up: model={} variant={} tier={} platform={}",
-                 engine.model.name, engine.serve.variant, engine.serve.tier,
-                 engine.runtime().platform());
-    loop {
-        let batch = match queue.pop_batch(
-            cfg.max_batch,
-            Duration::from_millis(100),
-            Duration::from_millis(cfg.batch_window_ms)) {
-            None => break, // closed + drained
-            Some(b) if b.is_empty() => continue, // poll timeout
-            Some(b) => b,
-        };
-        let reqs: Vec<_> = batch.iter().map(|e| e.request.clone()).collect();
-        match engine.generate(&reqs) {
-            Ok(results) => {
-                let mut m = metrics.lock().unwrap();
-                for (env, (clip, rm)) in batch.into_iter().zip(results) {
-                    m.record_batch(rm.batch_size, rm.steps, rm.compute_ms);
-                    m.record_completion(rm.queue_ms.max(0.0));
-                    let _ = env.reply.send(Ok(GenResponse {
-                        id: env.request.id, clip, metrics: rm }));
-                }
-            }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                crate::warn_!("batch failed: {msg}");
-                for env in batch {
-                    let _ = env.reply.send(Err(anyhow::anyhow!(
-                        "generation failed: {msg}")));
-                }
-            }
-        }
-    }
-    crate::info!("engine shut down");
 }

@@ -27,8 +27,10 @@ commands:
   info          show manifest contents and runtime platform
   generate      --model dit-tiny --variant sla2 --tier s90 --steps 8
                 --count 2 — generate clips synchronously
-  serve-demo    --model dit-tiny --requests 6 --max-batch 2 — run the
-                batching server against a synthetic request wave
+  serve-demo    --model dit-tiny --requests 6 --max-batch 2
+                --num-shards N — run the sharded batching server
+                against a synthetic request wave (default shards:
+                cores - 1)
   train         --model dit-tiny --tier s90 --stage1-steps 20
                 --stage2-steps 60 — two-stage fine-tune (Alg. 1)
   costmodel     print paper-calibrated kernel/e2e curves (no PJRT)
@@ -202,7 +204,7 @@ fn perf(artifacts: &str, args: &Args) -> Result<()> {
     let serve = ServeConfig {
         model: model.clone(), variant: "sla2".into(), tier: tier.clone(),
         sample_steps: 1, max_batch: 1, batch_window_ms: 0,
-        queue_capacity: 8,
+        queue_capacity: 8, num_shards: 1,
     };
     let server = Server::start(artifacts, serve)?;
     let _ = server.submit(1, 7, 1, &tier).unwrap().recv()??; // warm

@@ -106,6 +106,17 @@ impl Runtime {
                                         prefix: &[Literal],
                                         rest: &[Literal])
                                         -> Result<Vec<Tensor>> {
+        let refs: Vec<&Literal> = rest.iter().collect();
+        self.execute_literal_refs_with_prefix(name, prefix, &refs)
+    }
+
+    /// Like [`Self::execute_literals_with_prefix`] but `rest` is taken
+    /// by reference, so hot loops can reuse long-lived literals (e.g.
+    /// the per-batch label tensor) across steps without cloning them.
+    pub fn execute_literal_refs_with_prefix(&self, name: &str,
+                                            prefix: &[Literal],
+                                            rest: &[&Literal])
+                                            -> Result<Vec<Tensor>> {
         let spec = self.manifest.artifact(name)?;
         let total = prefix.len() + rest.len();
         if total != spec.inputs.len() {
@@ -113,7 +124,8 @@ impl Runtime {
                   spec.inputs.len(), total, prefix.len(), rest.len());
         }
         let exe = self.executable(name)?;
-        let refs: Vec<&Literal> = prefix.iter().chain(rest.iter()).collect();
+        let refs: Vec<&Literal> =
+            prefix.iter().chain(rest.iter().copied()).collect();
         self.counters.borrow_mut().1 += 1;
         let result = exe.execute::<&Literal>(&refs)
             .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;

@@ -1,9 +1,12 @@
 //! Criterion-style bench harness (criterion is not in the offline
 //! registry).  Warmup + timed iterations + summary stats, plus a
-//! markdown-ish table printer shared by all paper-table benches.
+//! markdown-ish table printer shared by all paper-table benches and a
+//! JSON report writer for the perf-trajectory files
+//! (`BENCH_<name>.json`).
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::Summary;
 
 #[derive(Debug, Clone)]
@@ -17,6 +20,31 @@ impl BenchResult {
     pub fn mean_ms(&self) -> f64 {
         self.summary.mean * 1e3
     }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .push("name", self.name.as_str())
+            .push("n", self.summary.n)
+            .push("mean_ms", self.summary.mean * 1e3)
+            .push("p50_ms", self.summary.p50 * 1e3)
+            .push("p90_ms", self.summary.p90 * 1e3)
+            .push("p99_ms", self.summary.p99 * 1e3)
+            .push("min_ms", self.summary.min * 1e3)
+            .push("max_ms", self.summary.max * 1e3)
+    }
+}
+
+/// Assemble a bench report: `{"bench": <name>, "results": [...]}`.
+pub fn report(bench: &str, results: Vec<Json>) -> Json {
+    Json::obj()
+        .push("bench", bench)
+        .push("results", results)
+}
+
+/// Write a JSON report to `path` (the perf-trajectory file a bench
+/// run leaves behind, e.g. `BENCH_fig5_e2e.json`).
+pub fn write_json(path: &str, report: &Json) -> std::io::Result<()> {
+    std::fs::write(path, format!("{report}\n"))
 }
 
 /// Time `f` for `iters` iterations after `warmup` unmeasured runs.
@@ -123,6 +151,32 @@ mod tests {
     fn run_for_respects_max_iters() {
         let r = run_for("fast", 0, 10.0, 5, || {});
         assert_eq!(r.summary.n, 5);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let r = run("unit", 0, 4, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        let j = report("mini", vec![r.to_json()]);
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("mini"));
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("unit"));
+        assert_eq!(results[0].get("n").unwrap().as_usize(), Some(4));
+        assert!(results[0].get("mean_ms").unwrap().as_f64().unwrap()
+                >= 0.0);
+    }
+
+    #[test]
+    fn write_json_produces_parseable_file() {
+        let path = std::env::temp_dir().join("sla2_bench_write_test.json");
+        let path = path.to_str().unwrap().to_string();
+        let j = report("t", vec![Json::obj().push("x", 1usize)]);
+        write_json(&path, &j).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(Json::parse(back.trim()).unwrap(), j);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -75,6 +75,19 @@ impl Args {
             .map(|v| v == "true" || v == "1" || v == "yes")
             .unwrap_or(default)
     }
+
+    /// The `--json <path>` convention for bench report emission:
+    /// absent -> `default`, `--json <path>` -> that path, and
+    /// `--json none|off|false` -> disabled.
+    pub fn json_path(&self, default: &str) -> Option<String> {
+        let v = self.str("json", default);
+        match v.as_str() {
+            "none" | "off" | "false" | "" => None,
+            // a bare `--json` parses as "true": use the default path
+            "true" => Some(default.to_string()),
+            _ => Some(v),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -106,6 +119,19 @@ mod tests {
     fn trailing_flag_is_bool() {
         let a = parse("run --verbose");
         assert!(a.bool("verbose", false));
+    }
+
+    #[test]
+    fn json_path_flag() {
+        assert_eq!(parse("bench").json_path("BENCH_x.json"),
+                   Some("BENCH_x.json".into()));
+        assert_eq!(parse("bench --json out.json").json_path("d.json"),
+                   Some("out.json".into()));
+        assert_eq!(parse("bench --json none").json_path("d.json"), None);
+        assert_eq!(parse("bench --json off").json_path("d.json"), None);
+        // bare flag (parses as "true") falls back to the default path
+        assert_eq!(parse("bench --json").json_path("d.json"),
+                   Some("d.json".into()));
     }
 
     #[test]

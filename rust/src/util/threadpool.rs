@@ -15,6 +15,19 @@ pub struct ThreadPool {
     submitted: AtomicUsize,
 }
 
+/// Decrements the pending count on drop, so a panicking job can never
+/// leak a pending slot and deadlock `wait_idle()`.
+struct PendingGuard<'a>(&'a (Mutex<usize>, Condvar));
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        let (lock, cv) = self.0;
+        let mut n = lock.lock().unwrap();
+        *n -= 1;
+        cv.notify_all();
+    }
+}
+
 impl ThreadPool {
     pub fn new(size: usize) -> ThreadPool {
         assert!(size > 0);
@@ -34,11 +47,15 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
-                                let (lock, cv) = &*pending;
-                                let mut n = lock.lock().unwrap();
-                                *n -= 1;
-                                cv.notify_all();
+                                let _guard = PendingGuard(&pending);
+                                // contain panics: the worker survives
+                                // and the guard still decrements
+                                let r = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job));
+                                if r.is_err() {
+                                    crate::warn_!(
+                                        "thread-pool job panicked");
+                                }
                             }
                             Err(_) => break, // sender dropped: shut down
                         }
@@ -106,6 +123,31 @@ mod tests {
     fn wait_idle_on_empty_pool_returns() {
         let pool = ThreadPool::new(2);
         pool.wait_idle();
+    }
+
+    #[test]
+    fn panicking_job_neither_deadlocks_nor_kills_the_pool() {
+        let pool = ThreadPool::new(2);
+        let sum = Arc::new(AtomicU64::new(0));
+        pool.submit(|| panic!("boom"));
+        for i in 1..=10u64 {
+            let sum = Arc::clone(&sum);
+            pool.submit(move || {
+                sum.fetch_add(i, Ordering::Relaxed);
+            });
+        }
+        // regression: before the drop-guard, the panicking job skipped
+        // the pending decrement and this wait_idle() hung forever
+        pool.wait_idle();
+        assert_eq!(sum.load(Ordering::Relaxed), 55);
+        // and the pool still serves new work afterwards
+        let s = Arc::clone(&sum);
+        pool.submit(move || {
+            s.fetch_add(100, Ordering::Relaxed);
+        });
+        pool.wait_idle();
+        assert_eq!(sum.load(Ordering::Relaxed), 155);
+        assert_eq!(pool.submitted(), 12);
     }
 
     #[test]

@@ -14,7 +14,13 @@
 //! Absolute values are NOT comparable to VBench scores; Table 1/2
 //! claims are about *ordering across methods*, which these preserve.
 
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::Lazy;
+
 use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
 
 #[derive(Debug, Clone)]
 pub struct QualityReport {
@@ -25,28 +31,103 @@ pub struct QualityReport {
     pub subject_consistency: f64,
 }
 
+/// Shared pool for frame-parallel metric passes.  `Mutex`-wrapped
+/// because `ThreadPool` holds an mpsc sender (`!Sync`); the lock is
+/// only held while enqueueing jobs, never while they run.
+static METRICS_POOL: Lazy<Mutex<ThreadPool>> = Lazy::new(|| {
+    let n = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 8);
+    Mutex::new(ThreadPool::new(n))
+});
+
+/// Below this many elements the thread-pool handoff costs more than
+/// the frame pass itself; run serially.
+const PARALLEL_THRESHOLD: usize = 4096;
+
+/// A parallel job must also carry at least this much per-frame work,
+/// or many-tiny-frame clips would fan out jobs whose channel/Arc
+/// handoff dwarfs the pass itself.
+const MIN_FRAME_ELEMS: usize = 256;
+
+/// Run `f(data, ti)` for every frame index, in parallel for clips big
+/// enough to amortize the handoff.  Results come back indexed by
+/// frame, so reductions over them are deterministic regardless of
+/// completion order.
+///
+/// The parallel path copies the clip once into an `Arc<[f32]>` (pool
+/// jobs need `'static` data); callers doing several passes over one
+/// clip pay that copy per pass — acceptable next to the O(n) passes
+/// themselves, revisit if a profile says otherwise.
+fn per_frame_pass<F>(t: usize, data: &[f32], f: F) -> Vec<f64>
+where
+    F: Fn(&[f32], usize) -> f64 + Send + Sync + 'static,
+{
+    if t < 2 || data.len() < PARALLEL_THRESHOLD
+        || data.len() / t < MIN_FRAME_ELEMS
+    {
+        return (0..t).map(|ti| f(data, ti)).collect();
+    }
+    let shared: Arc<[f32]> = Arc::from(data);
+    let f = Arc::new(f);
+    let (tx, rx) = channel::<(usize, f64)>();
+    {
+        let pool = METRICS_POOL.lock().unwrap();
+        for ti in 0..t {
+            let shared = Arc::clone(&shared);
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            pool.submit(move || {
+                let v = (*f)(&shared, ti);
+                let _ = tx.send((ti, v));
+            });
+        }
+    }
+    drop(tx);
+    let mut out = vec![0.0; t];
+    let mut received = 0usize;
+    for (ti, v) in rx {
+        out[ti] = v;
+        received += 1;
+    }
+    // a panicked job drops its sender without sending; surface that
+    // as a failure instead of silently scoring the frame 0.0 (the
+    // serial path propagates the same panic)
+    assert_eq!(received, t,
+               "frame pass lost {} result(s) — a metric job panicked",
+               t - received);
+    out
+}
+
 /// Mean spatial gradient magnitude (sharpness / imaging-quality proxy).
+///
+/// Flat slice pass (row-offset indexing, no per-element index
+/// arithmetic), parallelized over frames.
 pub fn sharpness(clip: &Tensor) -> f64 {
     let [t, h, w, c] = dims4(clip);
     let d = clip.f32s().unwrap();
-    let at = |ti: usize, yi: usize, xi: usize, ci: usize| {
-        d[((ti * h + yi) * w + xi) * c + ci] as f64
-    };
-    let mut acc = 0.0;
-    let mut n = 0usize;
-    for ti in 0..t {
+    let frame = h * w * c;
+    let row = w * c;
+    let per_frame = per_frame_pass(t, d, move |all, ti| {
+        let fr = &all[ti * frame..(ti + 1) * frame];
+        let mut acc = 0.0f64;
         for yi in 0..h - 1 {
+            let base = yi * row;
             for xi in 0..w - 1 {
+                let p = base + xi * c;
                 for ci in 0..c {
-                    let gx = at(ti, yi, xi + 1, ci) - at(ti, yi, xi, ci);
-                    let gy = at(ti, yi + 1, xi, ci) - at(ti, yi, xi, ci);
+                    let v = fr[p + ci] as f64;
+                    let gx = fr[p + c + ci] as f64 - v;
+                    let gy = fr[p + row + ci] as f64 - v;
                     acc += (gx * gx + gy * gy).sqrt();
-                    n += 1;
                 }
             }
         }
-    }
-    acc / n as f64
+        acc
+    });
+    let n = t * (h - 1) * (w - 1) * c;
+    per_frame.iter().sum::<f64>() / n as f64
 }
 
 /// PSNR in dB against a reference clip (range taken as the reference's
@@ -109,27 +190,49 @@ pub fn motion_smoothness(clip: &Tensor) -> f64 {
 }
 
 /// Mean correlation of every frame with frame 0 (subject persistence).
+///
+/// Flat slice pass parallelized over frames; frame-0 statistics are
+/// computed once and captured by value.  Accumulation order within
+/// each frame matches the scalar reference, so values are identical.
 pub fn subject_consistency(clip: &Tensor) -> f64 {
     let [t, h, w, c] = dims4(clip);
+    if t < 2 {
+        return 1.0; // a single frame is trivially self-consistent
+    }
     let d = clip.f32s().unwrap();
     let frame = h * w * c;
-    let f0: Vec<f64> = d[..frame].iter().map(|v| *v as f64).collect();
-    let m0 = f0.iter().sum::<f64>() / frame as f64;
-    let s0: f64 = f0.iter().map(|v| (v - m0) * (v - m0)).sum::<f64>().sqrt();
-    let mut acc = 0.0;
-    for ti in 1..t {
-        let ft = &d[ti * frame..(ti + 1) * frame];
-        let mt = ft.iter().map(|v| *v as f64).sum::<f64>() / frame as f64;
-        let st: f64 = ft.iter()
-            .map(|v| (*v as f64 - mt) * (*v as f64 - mt))
-            .sum::<f64>()
-            .sqrt();
-        let cov: f64 = f0.iter().zip(ft)
-            .map(|(a, b)| (a - m0) * (*b as f64 - mt))
-            .sum();
-        acc += cov / (s0 * st + 1e-12);
+    let mut m0 = 0.0f64;
+    for v in &d[..frame] {
+        m0 += *v as f64;
     }
-    acc / (t - 1) as f64
+    m0 /= frame as f64;
+    let mut s0 = 0.0f64;
+    for v in &d[..frame] {
+        let dv = *v as f64 - m0;
+        s0 += dv * dv;
+    }
+    let s0 = s0.sqrt();
+    let per_frame = per_frame_pass(t, d, move |all, ti| {
+        if ti == 0 {
+            return 0.0;
+        }
+        let f0 = &all[..frame];
+        let ft = &all[ti * frame..(ti + 1) * frame];
+        let mut mt = 0.0f64;
+        for v in ft {
+            mt += *v as f64;
+        }
+        mt /= frame as f64;
+        let mut st = 0.0f64;
+        let mut cov = 0.0f64;
+        for j in 0..frame {
+            let dt = ft[j] as f64 - mt;
+            st += dt * dt;
+            cov += (f0[j] as f64 - m0) * dt;
+        }
+        cov / (s0 * st.sqrt() + 1e-12)
+    });
+    per_frame[1..].iter().sum::<f64>() / (t - 1) as f64
 }
 
 /// Full report for a generated clip against its full-attention
@@ -226,6 +329,95 @@ mod tests {
         let clip = synthetic_clip(&cfg, 3, &mut Pcg32::seeded(8));
         let flat = Tensor::zeros(&clip.shape);
         assert!(sharpness(&clip) > sharpness(&flat));
+    }
+
+    /// Verbatim pre-rewrite implementations: the parity oracle for the
+    /// flat/parallel passes.
+    mod reference {
+        use crate::tensor::Tensor;
+        use super::super::dims4;
+
+        pub fn sharpness(clip: &Tensor) -> f64 {
+            let [t, h, w, c] = dims4(clip);
+            let d = clip.f32s().unwrap();
+            let at = |ti: usize, yi: usize, xi: usize, ci: usize| {
+                d[((ti * h + yi) * w + xi) * c + ci] as f64
+            };
+            let mut acc = 0.0;
+            let mut n = 0usize;
+            for ti in 0..t {
+                for yi in 0..h - 1 {
+                    for xi in 0..w - 1 {
+                        for ci in 0..c {
+                            let gx = at(ti, yi, xi + 1, ci)
+                                - at(ti, yi, xi, ci);
+                            let gy = at(ti, yi + 1, xi, ci)
+                                - at(ti, yi, xi, ci);
+                            acc += (gx * gx + gy * gy).sqrt();
+                            n += 1;
+                        }
+                    }
+                }
+            }
+            acc / n as f64
+        }
+
+        pub fn subject_consistency(clip: &Tensor) -> f64 {
+            let [t, h, w, c] = dims4(clip);
+            let d = clip.f32s().unwrap();
+            let frame = h * w * c;
+            let f0: Vec<f64> =
+                d[..frame].iter().map(|v| *v as f64).collect();
+            let m0 = f0.iter().sum::<f64>() / frame as f64;
+            let s0: f64 = f0.iter()
+                .map(|v| (v - m0) * (v - m0)).sum::<f64>().sqrt();
+            let mut acc = 0.0;
+            for ti in 1..t {
+                let ft = &d[ti * frame..(ti + 1) * frame];
+                let mt = ft.iter().map(|v| *v as f64).sum::<f64>()
+                    / frame as f64;
+                let st: f64 = ft.iter()
+                    .map(|v| (*v as f64 - mt) * (*v as f64 - mt))
+                    .sum::<f64>()
+                    .sqrt();
+                let cov: f64 = f0.iter().zip(ft)
+                    .map(|(a, b)| (a - m0) * (*b as f64 - mt))
+                    .sum();
+                acc += cov / (s0 * st + 1e-12);
+            }
+            acc / (t - 1) as f64
+        }
+    }
+
+    fn assert_close(a: f64, b: f64, what: &str) {
+        let tol = 1e-12 * b.abs().max(1.0);
+        assert!((a - b).abs() <= tol, "{what}: {a} vs reference {b}");
+    }
+
+    #[test]
+    fn rewritten_kernels_match_reference_serial_path() {
+        // small clip: stays on the serial flat pass
+        let cfg = tiny_cfg();
+        for seed in 0..4u64 {
+            let clip = synthetic_clip(&cfg, seed as usize,
+                                      &mut Pcg32::seeded(20 + seed));
+            assert_close(sharpness(&clip), reference::sharpness(&clip),
+                         "sharpness");
+            // identical accumulation order per frame: exact equality
+            assert_eq!(subject_consistency(&clip),
+                       reference::subject_consistency(&clip));
+        }
+    }
+
+    #[test]
+    fn rewritten_kernels_match_reference_parallel_path() {
+        // big enough to cross PARALLEL_THRESHOLD and fan out frames
+        let clip = Tensor::randn(&[8, 16, 16, 3], &mut Pcg32::seeded(31));
+        assert!(clip.numel() >= super::PARALLEL_THRESHOLD);
+        assert_close(sharpness(&clip), reference::sharpness(&clip),
+                     "sharpness");
+        assert_eq!(subject_consistency(&clip),
+                   reference::subject_consistency(&clip));
     }
 
     #[test]

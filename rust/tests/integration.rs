@@ -18,6 +18,7 @@ fn tiny_serve() -> ServeConfig {
         max_batch: 2,
         batch_window_ms: 20,
         queue_capacity: 64,
+        num_shards: 1, // single-shard: the seed's deterministic config
     }
 }
 
@@ -52,6 +53,47 @@ fn server_end_to_end_generation() {
     let snap = server.metrics_snapshot();
     assert!(snap.get("completed").unwrap().as_usize().unwrap() >= 5);
     server.shutdown();
+}
+
+#[test]
+fn sharded_server_matches_single_shard_clips() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    // clips are a pure function of (seed, steps, tier): the shard a
+    // request lands on must not change the output.  max_batch is
+    // pinned to 1 on both servers so every request runs the same
+    // batch-size-1 executable — only shard placement varies (distinct
+    // batch-size artifacts are separate XLA compiles and need not be
+    // bitwise-identical).
+    let mut serve = tiny_serve();
+    serve.max_batch = 1;
+    serve.batch_window_ms = 0;
+    let single = Server::start(dir.to_str().unwrap(), serve.clone())
+        .unwrap();
+    let mut expected = Vec::new();
+    for i in 0..3 {
+        let resp = single.submit(i, 500 + i as u64, 4, "s90").unwrap()
+            .recv().unwrap().unwrap();
+        expected.push(resp.clip);
+    }
+    single.shutdown();
+
+    serve.num_shards = 2;
+    let sharded = Server::start(dir.to_str().unwrap(), serve).unwrap();
+    assert_eq!(sharded.num_shards(), 2);
+    let rxs: Vec<_> = (0..3)
+        .map(|i| sharded.submit(i, 500 + i as u64, 4, "s90").unwrap())
+        .collect();
+    for (rx, want) in rxs.into_iter().zip(&expected) {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(&resp.clip, want,
+                   "sharded clip diverged from single-shard clip");
+        assert!(resp.metrics.queue_ms >= 0.0);
+    }
+    let snap = sharded.metrics_snapshot();
+    assert_eq!(snap.get("num_shards").unwrap().as_usize(), Some(2));
+    assert!(snap.get("completed").unwrap().as_usize().unwrap() >= 3);
+    assert_eq!(snap.get("shards").unwrap().as_arr().unwrap().len(), 2);
+    sharded.shutdown();
 }
 
 #[test]
