@@ -40,16 +40,24 @@ fn main() -> Result<()> {
         }
     }
 
+    // collect every clip first, then score: the quality kernels
+    // (sharpness / motion_smoothness / subject_consistency) fan their
+    // frame passes out over the shared metrics thread pool, so the
+    // reporting loop below is the serving threads' cooldown, not a
+    // serial tail on the request path
+    let mut done = Vec::new();
     for (i, tier, rx) in handles {
-        let resp = rx.recv()??;
-        let clip = resp.clip;
+        done.push((i, tier, rx.recv()??));
+    }
+    for (i, tier, resp) in &done {
+        let clip = &resp.clip;
         println!(
             "  req {i:>2} [{tier:>5}] clip {:?} | batch {} | \
              compute {:>7.1} ms | sharp {:.3} smooth {:.3} consist {:.3}",
             clip.shape, resp.metrics.batch_size, resp.metrics.compute_ms,
-            metrics::sharpness(&clip),
-            metrics::motion_smoothness(&clip),
-            metrics::subject_consistency(&clip));
+            metrics::sharpness(clip),
+            metrics::motion_smoothness(clip),
+            metrics::subject_consistency(clip));
     }
 
     println!("\nserver metrics: {}", server.metrics_snapshot());

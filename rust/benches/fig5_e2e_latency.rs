@@ -10,6 +10,10 @@
 //!   * **Sharded serving (measured)** — aggregate throughput of the
 //!     engine pool at 1 shard vs N shards: the host-orchestration half
 //!     of the speedup story.
+//!   * **Mixed-tier head-of-line (measured)** — a dense backlog in
+//!     front of cheap sparse requests, served under the `fifo` vs the
+//!     `class` scheduler: per-tier p50/p99 queue wait shows what the
+//!     class-aware bypass buys.
 //!
 //! Run: `cargo bench --bench fig5_e2e_latency [--json PATH|none]`
 //! Writes `BENCH_fig5_e2e.json` by default.
@@ -25,6 +29,7 @@ use sla2::costmodel::{device, e2e, flops};
 use sla2::util::bench::{self, Table};
 use sla2::util::cli::Args;
 use sla2::util::json::Json;
+use sla2::util::stats::Summary;
 
 fn main() -> Result<()> {
     let args = Args::parse_from(std::env::args().skip(1)
@@ -100,6 +105,7 @@ fn main() -> Result<()> {
             batch_window_ms: 0,
             queue_capacity: 4,
             num_shards: 1,
+            ..ServeConfig::default()
         };
         let engine = match Engine::new(&artifacts, serve) {
             Ok(e) => e,
@@ -164,6 +170,7 @@ fn main() -> Result<()> {
             batch_window_ms: 0,
             queue_capacity: n_requests + shards + 4,
             num_shards: shards,
+            ..ServeConfig::default()
         };
         let server = match Server::start(&artifacts, serve) {
             Ok(s) => s,
@@ -212,6 +219,92 @@ fn main() -> Result<()> {
             .push("wall_s", wall)
             .push("throughput_rps", rps)
             .push("speedup_vs_1shard", speedup));
+        server.shutdown();
+    }
+    t.print();
+
+    // ---------------- mixed-tier head-of-line ------------------------
+    // A dense backlog submitted ahead of cheap sparse requests on ONE
+    // shard (so scheduling order, not parallelism, decides the wait).
+    // FIFO must drain the dense backlog first; the class scheduler
+    // lets the aged sparse class bypass — visible as a collapse of the
+    // sparse tier's queue-wait percentiles.
+    let n_dense = args.usize("hol-dense", 4);
+    let n_sparse = args.usize("hol-sparse", 4);
+    println!("\n=== Fig. 5 companion: mixed-tier head-of-line, fifo vs \
+              class scheduler (model {model}, {n_dense} dense + \
+              {n_sparse} s90, {steps} steps) ===\n");
+    let mut t = Table::new(&["scheduler", "tier", "requests",
+                             "queue p50 ms", "queue p99 ms"]);
+    for scheduler in ["fifo", "class"] {
+        let serve = ServeConfig {
+            model: model.clone(),
+            variant: "sla2".into(),
+            tier: "s90".into(),
+            sample_steps: steps,
+            max_batch: 1,
+            batch_window_ms: 0,
+            queue_capacity: n_dense + n_sparse + 4,
+            num_shards: 1,
+            scheduler: scheduler.into(),
+            bypass_threshold_ms: 10,
+        };
+        let server = match Server::start(&artifacts, serve) {
+            Ok(s) => s,
+            Err(err) => {
+                println!("  {scheduler}: SKIP ({err:#})");
+                continue;
+            }
+        };
+        // warm both tiers' executables outside the measurement
+        for tier in ["dense", "s90"] {
+            if let Ok(rx) = server.submit(1, 7, steps, tier) {
+                let _ = rx.recv();
+            }
+        }
+        // the head-of-line shape: dense backlog first, sparse behind
+        let mut rxs = Vec::new();
+        for i in 0..n_dense {
+            if let Ok(rx) =
+                server.submit(1, 100 + i as u64, steps, "dense")
+            {
+                rxs.push(("dense", rx));
+            }
+        }
+        for i in 0..n_sparse {
+            if let Ok(rx) =
+                server.submit(1, 200 + i as u64, steps, "s90")
+            {
+                rxs.push(("s90", rx));
+            }
+        }
+        let mut waits: Vec<(&str, f64)> = Vec::new();
+        for (tier, rx) in rxs {
+            if let Ok(Ok(resp)) = rx.recv() {
+                waits.push((tier, resp.metrics.queue_ms));
+            }
+        }
+        for tier in ["dense", "s90"] {
+            let tier_waits: Vec<f64> = waits.iter()
+                .filter(|(t, _)| *t == tier)
+                .map(|(_, w)| *w)
+                .collect();
+            if tier_waits.is_empty() {
+                continue;
+            }
+            let s = Summary::of(&tier_waits);
+            t.row(vec![scheduler.into(), tier.into(),
+                       format!("{}", tier_waits.len()),
+                       format!("{:.1}", s.p50),
+                       format!("{:.1}", s.p99)]);
+            json_rows.push(Json::obj()
+                .push("section", "mixed_tier_hol")
+                .push("scheduler", scheduler)
+                .push("tier", tier)
+                .push("requests", tier_waits.len())
+                .push("queue_p50_ms", s.p50)
+                .push("queue_p99_ms", s.p99));
+        }
         server.shutdown();
     }
     t.print();

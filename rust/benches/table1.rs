@@ -39,6 +39,7 @@ fn generate_clips(artifacts: &str, model: &str, variant: &str, tier: &str,
         batch_window_ms: 0,
         queue_capacity: 16,
         num_shards: 1,
+        ..ServeConfig::default()
     };
     let mut engine = Engine::new(artifacts, serve)?;
     if let Some(p) = params {

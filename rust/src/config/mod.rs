@@ -100,6 +100,14 @@ pub struct ServeConfig {
     /// executable cache (the client is `Rc`-based and never crosses
     /// threads); 1 reproduces the old single-engine behavior
     pub num_shards: usize,
+    /// scheduler policy: `"class"` (default) buckets requests by
+    /// compatibility class and lets an aged cheap class bypass an
+    /// expensive head-of-line class; `"fifo"` reproduces the seed's
+    /// strict-FIFO-compatible batching bit-for-bit
+    pub scheduler: String,
+    /// class mode only: how long a cheaper class's head must have
+    /// waited before it may jump a more expensive class at the head
+    pub bypass_threshold_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -113,6 +121,8 @@ impl Default for ServeConfig {
             batch_window_ms: 5,
             queue_capacity: 256,
             num_shards: default_num_shards(),
+            scheduler: "class".into(),
+            bypass_threshold_ms: 50,
         }
     }
 }
@@ -129,6 +139,9 @@ impl ServeConfig {
             batch_window_ms: args.u64("batch-window-ms", d.batch_window_ms),
             queue_capacity: args.usize("queue-capacity", d.queue_capacity),
             num_shards: args.usize("num-shards", d.num_shards).max(1),
+            scheduler: args.str("scheduler", &d.scheduler),
+            bypass_threshold_ms: args.u64("bypass-threshold-ms",
+                                          d.bypass_threshold_ms),
         }
     }
 
@@ -150,6 +163,9 @@ impl ServeConfig {
                                d.batch_window_ms as usize) as u64,
             queue_capacity: u("queue_capacity", d.queue_capacity),
             num_shards: u("num_shards", d.num_shards).max(1),
+            scheduler: s("scheduler", &d.scheduler),
+            bypass_threshold_ms: u("bypass_threshold_ms",
+                                   d.bypass_threshold_ms as usize) as u64,
         }
     }
 }
@@ -249,6 +265,24 @@ mod tests {
         let s = ServeConfig::from_json(&j);
         assert_eq!(s.model, "m");
         assert_eq!(s.max_batch, 8);
+    }
+
+    #[test]
+    fn scheduler_knobs_parse_with_defaults() {
+        let d = ServeConfig::default();
+        assert_eq!(d.scheduler, "class");
+        assert_eq!(d.bypass_threshold_ms, 50);
+        let a = Args::parse_from(
+            ["--scheduler", "fifo", "--bypass-threshold-ms", "120"]
+                .map(String::from));
+        let s = ServeConfig::from_args(&a);
+        assert_eq!(s.scheduler, "fifo");
+        assert_eq!(s.bypass_threshold_ms, 120);
+        let j = Json::parse(
+            r#"{"scheduler":"fifo","bypass_threshold_ms":10}"#).unwrap();
+        let s = ServeConfig::from_json(&j);
+        assert_eq!(s.scheduler, "fifo");
+        assert_eq!(s.bypass_threshold_ms, 10);
     }
 
     #[test]

@@ -37,7 +37,11 @@ impl Engine {
     pub fn new(artifacts_dir: &str, serve: ServeConfig) -> Result<Engine> {
         let runtime = Runtime::load(artifacts_dir)?;
         let model = runtime.manifest().config(&serve.model)?.clone();
-        let params = runtime.manifest().load_params(&serve.model)?;
+        // host-side parameter tensors are process-shared: the file
+        // read + f32 decode happens once, not once per shard; only
+        // the (Rc-based, thread-confined) literal conversion is ours
+        let params = crate::runtime::shared()
+            .params(runtime.manifest(), &serve.model)?;
         let params = params.iter()
             .map(crate::runtime::tensor_to_literal)
             .collect::<Result<Vec<_>>>()

@@ -1,11 +1,14 @@
 //! Server-level metrics: counters + latency distributions + the
-//! per-shard rollup (compiles, executions, batches, utilization).
+//! per-shard rollup (compiles, executions, batches, utilization) +
+//! scheduler observability (per-class queue depths, warm/cold
+//! dispatch routing, compile-cache dedup).
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::pool::ShardStats;
+use super::pool::{DispatchStats, ShardStats};
+use super::queue::RequestQueue;
 use crate::util::json::Json;
 use crate::util::stats::Online;
 
@@ -23,6 +26,11 @@ pub struct ServerMetrics {
     pub batch_size: Online,
     /// per-shard counters, attached by the engine pool at startup
     shards: Vec<Arc<ShardStats>>,
+    /// dispatcher routing counters, attached by the engine pool
+    dispatch: Option<Arc<DispatchStats>>,
+    /// the live queue, attached by the server for per-class depth
+    /// gauges (lock order: metrics -> queue, never the reverse)
+    queue: Option<Arc<RequestQueue>>,
 }
 
 impl Default for ServerMetrics {
@@ -44,12 +52,24 @@ impl ServerMetrics {
             compute_ms: Online::new(),
             batch_size: Online::new(),
             shards: Vec::new(),
+            dispatch: None,
+            queue: None,
         }
     }
 
     /// Wire in the pool's per-shard counters (called once at startup).
     pub fn attach_shards(&mut self, shards: Vec<Arc<ShardStats>>) {
         self.shards = shards;
+    }
+
+    /// Wire in the dispatcher's routing counters (engine pool startup).
+    pub fn attach_dispatch(&mut self, dispatch: Arc<DispatchStats>) {
+        self.dispatch = Some(dispatch);
+    }
+
+    /// Wire in the live queue so snapshots can report per-class depth.
+    pub fn attach_queue(&mut self, queue: Arc<RequestQueue>) {
+        self.queue = Some(queue);
     }
 
     pub fn record_batch(&mut self, size: usize, steps: usize,
@@ -111,7 +131,33 @@ impl ServerMetrics {
                 .collect();
             j = j.push("shards", shards);
         }
-        j
+        if let Some(d) = &self.dispatch {
+            j = j.push("dispatch", Json::obj()
+                .push("warm_hits",
+                      d.warm_hits.load(Ordering::Relaxed) as usize)
+                .push("cold_routes",
+                      d.cold_routes.load(Ordering::Relaxed) as usize));
+        }
+        if let Some(q) = &self.queue {
+            let depths: Vec<Json> = q.class_depths().into_iter()
+                .map(|(k, n)| Json::obj()
+                    .push("tier", k.tier)
+                    .push("steps", k.steps)
+                    .push("depth", n))
+                .collect();
+            j = j.push("scheduler", q.policy_name())
+                .push("queue_depth_per_class", depths);
+        }
+        // process-wide compile-cache effectiveness (shared across
+        // every runtime in this process, not just this server's)
+        let cc = crate::runtime::shared().stats().snapshot();
+        j.push("compile_cache", Json::obj()
+            .push("compile_attempts", cc.compile_attempts as usize)
+            .push("singleflight_waits", cc.singleflight_waits as usize)
+            .push("manifest_loads", cc.manifest_loads as usize)
+            .push("manifest_hits", cc.manifest_hits as usize)
+            .push("params_loads", cc.params_loads as usize)
+            .push("params_hits", cc.params_hits as usize))
     }
 }
 
@@ -137,6 +183,45 @@ mod tests {
             .abs() < 1e-9);
         // no pool attached: no shard rollup keys
         assert!(s.get("shards").is_none());
+        assert!(s.get("dispatch").is_none());
+        assert!(s.get("queue_depth_per_class").is_none());
+        // the process-wide compile-cache section is always present
+        assert!(s.get("compile_cache").is_some());
+    }
+
+    #[test]
+    fn snapshot_reports_scheduler_and_dispatch_sections() {
+        use crate::coordinator::queue::{RequestQueue, SchedPolicy};
+        use crate::coordinator::request::{Envelope, GenRequest};
+        use std::time::Duration;
+
+        let mut m = ServerMetrics::new();
+        let d = Arc::new(DispatchStats::default());
+        d.warm_hits.store(7, Ordering::Relaxed);
+        d.cold_routes.store(3, Ordering::Relaxed);
+        m.attach_dispatch(Arc::clone(&d));
+        let q = Arc::new(RequestQueue::with_policy(
+            8,
+            SchedPolicy::ClassAware {
+                bypass_threshold: Duration::from_millis(50),
+            }));
+        let (tx, _rx) = std::sync::mpsc::channel();
+        q.push(Envelope {
+            request: GenRequest::new(1, 0, 1, 8, "s90"),
+            reply: tx,
+        }).unwrap();
+        m.attach_queue(Arc::clone(&q));
+
+        let s = m.snapshot();
+        let disp = s.get("dispatch").unwrap();
+        assert_eq!(disp.get("warm_hits").unwrap().as_usize(), Some(7));
+        assert_eq!(disp.get("cold_routes").unwrap().as_usize(), Some(3));
+        assert_eq!(s.get("scheduler").unwrap().as_str(), Some("class"));
+        let depths =
+            s.get("queue_depth_per_class").unwrap().as_arr().unwrap();
+        assert_eq!(depths.len(), 1);
+        assert_eq!(depths[0].get("tier").unwrap().as_str(), Some("s90"));
+        assert_eq!(depths[0].get("depth").unwrap().as_usize(), Some(1));
     }
 
     #[test]

@@ -7,39 +7,67 @@
 //!
 //! ```text
 //!  clients ──submit()──▶ RequestQueue (bounded, backpressure)
-//!                            │  pop_batch: same-tier grouping,
-//!                            │  batch window, dequeue stamping
+//!                            │  class-keyed buckets (tier, steps);
+//!                            │  pop_batch serves ONE class per the
+//!                            │  SchedPolicy (fifo | class-aware
+//!                            │  aging + cost bypass), batch window,
+//!                            │  dequeue stamping
 //!                            ▼
 //!                     dispatcher thread
-//!                            │  claims an idle shard, then pops the
-//!                            │  next compatible batch and routes it
+//!                            │  claims idle shards, pops the next
+//!                            │  scheduled batch, routes it to a
+//!                            │  WARM shard for its class when one
+//!                            │  is free (else any idle shard)
 //!              ┌─────────────┼─────────────┐
 //!              ▼             ▼             ▼
 //!          shard 0        shard 1  ...  shard N-1
 //!        (own Runtime — PjRtClient is Rc; each shard compiles and
-//!         caches its own executables, runs the sampling loop)
+//!         caches its own executables, runs the sampling loop;
+//!         manifest + params come from the process-wide
+//!         runtime::SharedArtifacts, and compiles go through its
+//!         per-artifact single-flight gate)
 //!              │             │             │
 //!              └─────────────┴─────────────┘
 //!                            ▼
 //!          per-request response channels + ServerMetrics
 //!          (global counters + per-shard compiles/executions/
-//!           batches/utilization rollup)
+//!           batches/utilization + per-class queue depths +
+//!           warm/cold dispatch routing + compile-cache dedup)
 //! ```
 //!
 //! **Shard model** — `ServeConfig::num_shards` worker threads (default:
-//! available cores minus one).  Each shard owns a full `Runtime` +
-//! parameter set; nothing PJRT-related ever crosses a thread boundary.
+//! available cores minus one).  Each shard owns a full `Runtime`; the
+//! `Send + Sync` halves of startup (manifest parse, parameter decode)
+//! are process-shared, and nothing PJRT-related ever crosses a thread
+//! boundary.
 //!
-//! **Dispatch policy** — the dispatcher holds a free-shard token
-//! BEFORE popping, so while every shard is busy, requests keep
-//! coalescing in the queue (bigger batches under load) and `queue_ms`
-//! stays truthful: it is stamped at dequeue, which coincides with the
-//! start of service.  With `num_shards = 1` this reduces exactly to
-//! the old single-engine FIFO-compatible behavior.
+//! **Scheduling** — requests are bucketed by compatibility class
+//! `(tier, steps)` at push time ([`queue::ClassKey`]).  The
+//! `ServeConfig::scheduler` knob picks the policy: `"fifo"` always
+//! serves the class of the globally oldest request (bit-for-bit the
+//! seed's single-deque behavior), `"class"` (default) adds a
+//! cost-aware head-of-line bypass — a cheaper class whose head has
+//! waited at least `ServeConfig::bypass_threshold_ms` jumps an
+//! expensive class (canonically: sparse jumps a long dense backlog),
+//! with consecutive jumps capped at [`queue::MAX_BYPASS_STREAK`] so
+//! nothing starves.
+//!
+//! **Dispatch** — the dispatcher holds free-shard tokens BEFORE
+//! popping, so while every shard is busy, requests keep coalescing in
+//! the queue (bigger batches under load) and `queue_ms` stays
+//! truthful: it is stamped at dequeue, which coincides with the start
+//! of service.  Among idle shards it prefers one already WARM for the
+//! batch's class (it compiled that class before), so steady-state
+//! compiles across the pool track the number of distinct classes
+//! rather than `classes x shards`.  With `num_shards = 1` and
+//! `scheduler = "fifo"` this reduces exactly to the old single-engine
+//! behavior.
 //!
 //! **Metrics** — shards update lock-free `ShardStats` (batches,
-//! requests, compiles, executions, busy time); `ServerMetrics::
-//! snapshot` rolls them up next to the global latency distributions.
+//! requests, compiles, executions, busy time); the dispatcher updates
+//! `DispatchStats` (warm hits / cold routes); `ServerMetrics::
+//! snapshot` rolls them up next to the global latency distributions,
+//! per-class queue depths and the process-wide compile-cache stats.
 //!
 //! Requests are whole video generations; all requests in a batch share
 //! the timestep schedule (diffusion jobs are fixed-length, so static
@@ -59,7 +87,7 @@ pub use batcher::plan_batches;
 pub use engine::Engine;
 pub use loadgen::{run_trace, TraceConfig, TraceReport};
 pub use metrics::ServerMetrics;
-pub use pool::{BatchProcessor, EnginePool, ShardStats};
-pub use queue::RequestQueue;
+pub use pool::{BatchProcessor, DispatchStats, EnginePool, ShardStats};
+pub use queue::{ClassKey, RequestQueue, SchedPolicy};
 pub use request::{GenRequest, GenResponse, RequestMetrics};
 pub use server::Server;

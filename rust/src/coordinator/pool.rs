@@ -11,6 +11,17 @@
 //! with it `queue_ms` — truthful: queue wait ends exactly when a
 //! shard is about to serve the batch.
 //!
+//! **Warm-shard affinity** — executables cannot cross shard threads
+//! (`Rc`-based), so the first batch of a compatibility class on a
+//! shard pays that shard's compile.  The dispatcher therefore tracks
+//! which classes each shard has already served and, when several
+//! shards are idle, routes a batch to one that is already warm for
+//! its class.  Steady state: each class sticks to the shard(s) that
+//! compiled it, so total compiles across the pool stay near the
+//! number of distinct classes instead of `classes x shards`.  A cold
+//! shard is still used the moment no warm one is idle — affinity is a
+//! preference, never a stall.
+//!
 //! With `num_shards = 1` the pool degenerates to the old single
 //! engine-thread behavior: one consumer, strict FIFO-compatible
 //! batching, identical per-seed clips.
@@ -20,9 +31,10 @@
 //! after it finishes its in-flight batch, so no reply channel is ever
 //! dropped with a request still pending.
 
+use std::collections::HashSet;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, SendError, Sender};
+use std::sync::mpsc::{channel, Receiver, SendError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -30,7 +42,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::metrics::ServerMetrics;
-use super::queue::RequestQueue;
+use super::queue::{ClassKey, RequestQueue};
 use super::request::{Envelope, GenRequest, GenResponse, RequestMetrics};
 use crate::tensor::Tensor;
 
@@ -78,6 +90,22 @@ impl ShardStats {
     }
 }
 
+/// Dispatcher-level routing counters, updated lock-free by the
+/// dispatcher and read by [`ServerMetrics::snapshot`].  A *warm hit*
+/// routed a batch to a shard the dispatcher has ROUTED that class to
+/// before (so its compile was at least attempted); a *cold route*
+/// sent it to a shard seeing the class for the first time.  Warmth is
+/// route-based, not success-based — the dispatcher gets no per-batch
+/// result feedback — so a class whose artifact persistently fails
+/// stays pinned to one shard (bounded blast radius) and still counts
+/// warm hits; cross-check `ShardStats::compiles` / `completed` when
+/// these numbers look too good.
+#[derive(Debug, Default)]
+pub struct DispatchStats {
+    pub warm_hits: AtomicU64,
+    pub cold_routes: AtomicU64,
+}
+
 /// The running pool: shard worker threads + the dispatcher.
 ///
 /// [`EnginePool::join`] (and `Drop`) closes the queue itself before
@@ -88,6 +116,7 @@ pub struct EnginePool {
     dispatcher: Option<JoinHandle<()>>,
     shards: Vec<JoinHandle<()>>,
     stats: Vec<Arc<ShardStats>>,
+    dispatch: Arc<DispatchStats>,
 }
 
 impl EnginePool {
@@ -170,16 +199,22 @@ impl EnginePool {
             return Err(e).context("engine pool startup");
         }
 
-        metrics.lock().unwrap().attach_shards(stats.clone());
+        let dispatch = Arc::new(DispatchStats::default());
+        {
+            let mut m = metrics.lock().unwrap();
+            m.attach_shards(stats.clone());
+            m.attach_dispatch(Arc::clone(&dispatch));
+        }
         let q = Arc::clone(&queue);
+        let d = Arc::clone(&dispatch);
         let dispatcher = std::thread::Builder::new()
             .name("sla2-dispatch".into())
             .spawn(move || {
                 dispatch_loop(&q, idle_rx, batch_txs, max_batch,
-                              batch_window);
+                              batch_window, &d);
             })?;
         Ok(EnginePool { queue, dispatcher: Some(dispatcher), shards,
-                        stats })
+                        stats, dispatch })
     }
 
     pub fn num_shards(&self) -> usize {
@@ -188,6 +223,10 @@ impl EnginePool {
 
     pub fn stats(&self) -> &[Arc<ShardStats>] {
         &self.stats
+    }
+
+    pub fn dispatch_stats(&self) -> &DispatchStats {
+        &self.dispatch
     }
 
     /// Graceful shutdown: close the queue (idempotent), then join the
@@ -211,19 +250,25 @@ impl Drop for EnginePool {
 }
 
 /// Dispatcher: claim an idle shard, pop a compatible batch, hand it
-/// over.  Exits when the queue closes (graceful shutdown) or every
-/// shard has died (each remaining batch is failed, never dropped).
+/// to a shard — preferring one already warm for the batch's class.
+/// Exits when the queue closes (graceful shutdown) or every shard has
+/// died (each remaining batch is failed, never dropped).
 fn dispatch_loop(queue: &RequestQueue, idle_rx: Receiver<usize>,
                  batch_txs: Vec<Sender<Vec<Envelope>>>, max_batch: usize,
-                 batch_window: Duration) {
+                 batch_window: Duration, stats: &DispatchStats) {
     let poll = Duration::from_millis(100);
-    let mut idle: Option<usize> = None;
+    // idle tokens currently held (a shard appears at most once: it
+    // only announces idle after receiving its previous batch)
+    let mut idle: Vec<usize> = Vec::new();
+    // classes each shard has served — and therefore compiled
+    let mut warm: Vec<HashSet<ClassKey>> =
+        (0..batch_txs.len()).map(|_| HashSet::new()).collect();
     loop {
-        if idle.is_none() {
-            idle = match idle_rx.recv() {
-                Ok(i) => Some(i),
+        if idle.is_empty() {
+            match idle_rx.recv() {
+                Ok(i) => idle.push(i),
                 Err(_) => break, // every shard is gone
-            };
+            }
         }
         let mut batch = match queue.pop_batch(max_batch, poll, batch_window)
         {
@@ -231,9 +276,25 @@ fn dispatch_loop(queue: &RequestQueue, idle_rx: Receiver<usize>,
             Some(b) if b.is_empty() => continue, // poll timeout
             Some(b) => b,
         };
+        // drain idle announcements AFTER the (possibly long) pop so
+        // the affinity pick sees every shard that went idle while we
+        // blocked — draining before it would cold-route any class
+        // whose warm shard finished during the wait
         loop {
-            let shard = match idle.take() {
-                Some(i) => i,
+            match idle_rx.try_recv() {
+                Ok(i) => idle.push(i),
+                Err(TryRecvError::Empty)
+                | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        let key = ClassKey::of(&batch[0].request);
+        loop {
+            // warm idle shard if any, else any idle shard, else block
+            let shard = match idle.iter()
+                .position(|&s| warm[s].contains(&key))
+                .or(if idle.is_empty() { None } else { Some(0) })
+            {
+                Some(pos) => idle.swap_remove(pos),
                 None => match idle_rx.recv() {
                     Ok(i) => i,
                     Err(_) => {
@@ -244,10 +305,21 @@ fn dispatch_loop(queue: &RequestQueue, idle_rx: Receiver<usize>,
                 },
             };
             match batch_txs[shard].send(batch) {
-                Ok(()) => break,
+                Ok(()) => {
+                    if warm[shard].insert(key.clone()) {
+                        stats.cold_routes.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        stats.warm_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    break;
+                }
                 // the shard died between announcing idle and
-                // receiving: take the batch back, try the next one
-                Err(SendError(b)) => batch = b,
+                // receiving: take the batch back, forget its warm
+                // set, try the next one
+                Err(SendError(b)) => {
+                    warm[shard].clear();
+                    batch = b;
+                }
             }
         }
     }

@@ -1,11 +1,108 @@
-//! Bounded request queue with backpressure + compatibility-aware
-//! batch extraction (the batcher's front half).
+//! Bounded request queue with backpressure + class-keyed scheduling
+//! (the batcher's front half).
+//!
+//! Requests are bucketed at push time by **compatibility class**
+//! `(tier, steps)` — exactly the predicate [`GenRequest::compatible`]
+//! implements — so the dispatcher can pick WHICH class to serve
+//! instead of being forced to serve whatever sits at the global head.
+//! Per-class FIFO order is always preserved; global arrival order is
+//! tracked with sequence numbers so strict-FIFO mode reconstructs the
+//! old single-`VecDeque` behavior bit-for-bit.
+//!
+//! Two scheduling policies ([`SchedPolicy`]):
+//!
+//! * **`Fifo`** — the class whose head arrived earliest is served.
+//!   Because a class bucket holds exactly the requests the old scan
+//!   would have collected (in the same order), this reproduces the
+//!   seed's strict-FIFO-compatible batching exactly.
+//! * **`ClassAware`** — same oldest-head-first baseline, plus a
+//!   cost-aware head-of-line bypass: when the oldest head belongs to
+//!   an expensive class (e.g. dense) and a *cheaper* class's head has
+//!   already waited past `bypass_threshold`, the cheap class jumps
+//!   the line.  Consecutive bypasses are capped at
+//!   [`MAX_BYPASS_STREAK`], so the expensive class is served after a
+//!   bounded number of jumps — no starvation.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::request::Envelope;
+use super::request::{Envelope, GenRequest};
+
+/// Upper bound on consecutive cost-aware bypasses.  After this many
+/// jumps in a row the oldest head is served unconditionally, which
+/// bounds any class's extra wait to `MAX_BYPASS_STREAK` batch services
+/// — the anti-starvation guarantee the property tests pin down.
+pub const MAX_BYPASS_STREAK: u32 = 4;
+
+/// A batch-compatibility class: requests in the same class run the
+/// same artifact family and walk the same timestep grid, so they can
+/// share a batch (mirrors [`GenRequest::compatible`]).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClassKey {
+    pub tier: String,
+    pub steps: usize,
+}
+
+impl ClassKey {
+    pub fn of(req: &GenRequest) -> ClassKey {
+        ClassKey { tier: req.tier.clone(), steps: req.steps }
+    }
+
+    /// Relative service-cost proxy used by the bypass policy — NOT a
+    /// latency estimate.  Monotone in what matters: more steps cost
+    /// more, dense attention costs more than any sparse tier, higher
+    /// sparsity costs less.  Sparse tiers are parsed from their
+    /// "sNN" name; unknown tiers land in the middle.
+    pub fn cost(&self) -> f64 {
+        let tier_weight = match self.tier.as_str() {
+            "dense" => 1.0,
+            t => t.strip_prefix('s')
+                .and_then(|pct| pct.parse::<f64>().ok())
+                .map(|pct| 0.2 + 0.8 * (1.0 - pct / 100.0))
+                .unwrap_or(0.5),
+        };
+        self.steps as f64 * tier_weight
+    }
+}
+
+/// Which class the next `pop_batch` serves.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchedPolicy {
+    /// Oldest head wins, always — bit-for-bit the seed's behavior.
+    Fifo,
+    /// Oldest head wins unless a cheaper class's head has waited at
+    /// least `bypass_threshold` (then it jumps, streak-capped).
+    ClassAware { bypass_threshold: Duration },
+}
+
+impl SchedPolicy {
+    /// Build from the `ServeConfig` string knobs: `"fifo"` is strict
+    /// FIFO, `"class"` is class-aware with the given bypass
+    /// threshold.  Anything else falls back to class-aware WITH a
+    /// warning — silently honoring a typo like `"fifio"` would
+    /// switch serving semantics out from under a determinism repro.
+    pub fn from_config(scheduler: &str, bypass_threshold_ms: u64)
+                       -> SchedPolicy {
+        if scheduler == "fifo" {
+            return SchedPolicy::Fifo;
+        }
+        if scheduler != "class" {
+            crate::warn_!("unknown scheduler {scheduler:?}; using \
+                           \"class\" (valid: \"class\", \"fifo\")");
+        }
+        SchedPolicy::ClassAware {
+            bypass_threshold: Duration::from_millis(bypass_threshold_ms),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPolicy::Fifo => "fifo",
+            SchedPolicy::ClassAware { .. } => "class",
+        }
+    }
+}
 
 #[derive(Debug, thiserror::Error)]
 pub enum QueueError {
@@ -15,49 +112,115 @@ pub enum QueueError {
     Closed,
 }
 
+/// One class bucket: per-class FIFO, entries stamped with their global
+/// arrival sequence number.
+#[derive(Debug)]
+struct Bucket {
+    key: ClassKey,
+    items: VecDeque<(u64, Envelope)>,
+}
+
+#[derive(Debug)]
 struct Inner {
-    items: VecDeque<Envelope>,
+    /// Non-empty class buckets.  The class count is tiny (tiers x
+    /// step-counts actually in flight), so linear scans beat map
+    /// overhead and keep iteration order deterministic.
+    buckets: Vec<Bucket>,
+    len: usize,
+    next_seq: u64,
     closed: bool,
+    /// consecutive cost-aware bypasses (ClassAware anti-starvation)
+    bypass_streak: u32,
+}
+
+impl Inner {
+    /// Index of the bucket whose head arrived earliest.
+    fn oldest(&self) -> Option<usize> {
+        self.buckets.iter().enumerate()
+            .filter_map(|(i, b)| b.items.front().map(|(seq, _)| (i, *seq)))
+            .min_by_key(|(_, seq)| *seq)
+            .map(|(i, _)| i)
+    }
 }
 
 /// MPSC: many frontend producers, one consumer (the pool dispatcher).
+#[derive(Debug)]
 pub struct RequestQueue {
     inner: Mutex<Inner>,
     cv: Condvar,
     capacity: usize,
+    policy: SchedPolicy,
 }
 
 impl RequestQueue {
+    /// Strict-FIFO queue (the seed's behavior); serving stacks that
+    /// want head-of-line bypass use [`RequestQueue::with_policy`].
     pub fn new(capacity: usize) -> RequestQueue {
+        RequestQueue::with_policy(capacity, SchedPolicy::Fifo)
+    }
+
+    pub fn with_policy(capacity: usize, policy: SchedPolicy)
+                       -> RequestQueue {
         RequestQueue {
-            inner: Mutex::new(Inner { items: VecDeque::new(),
-                                      closed: false }),
+            inner: Mutex::new(Inner { buckets: Vec::new(),
+                                      len: 0,
+                                      next_seq: 0,
+                                      closed: false,
+                                      bypass_streak: 0 }),
             cv: Condvar::new(),
             capacity,
+            policy,
         }
     }
 
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
     /// Non-blocking submit; `Err(Full)` is the backpressure signal the
-    /// frontend surfaces to clients.
+    /// frontend surfaces to clients.  Capacity counts pending requests
+    /// across ALL classes.
     pub fn push(&self, env: Envelope) -> Result<(), QueueError> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
             return Err(QueueError::Closed);
         }
-        if g.items.len() >= self.capacity {
-            return Err(QueueError::Full(g.items.len()));
+        if g.len >= self.capacity {
+            return Err(QueueError::Full(g.len));
         }
-        g.items.push_back(env);
+        let key = ClassKey::of(&env.request);
+        let seq = g.next_seq;
+        g.next_seq += 1;
+        match g.buckets.iter().position(|b| b.key == key) {
+            Some(i) => g.buckets[i].items.push_back((seq, env)),
+            None => g.buckets.push(Bucket {
+                key,
+                items: VecDeque::from([(seq, env)]),
+            }),
+        }
+        g.len += 1;
         self.cv.notify_one();
         Ok(())
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        self.inner.lock().unwrap().len
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Pending depth per class, sorted by key — the per-class gauge
+    /// `ServerMetrics::snapshot` reports.
+    pub fn class_depths(&self) -> Vec<(ClassKey, usize)> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<(ClassKey, usize)> = g.buckets.iter()
+            .filter(|b| !b.items.is_empty())
+            .map(|b| (b.key.clone(), b.items.len()))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
     }
 
     pub fn close(&self) {
@@ -66,17 +229,23 @@ impl RequestQueue {
     }
 
     /// Engine side: block (up to `wait`) for a first request, then
-    /// collect every already-queued request COMPATIBLE with it (same
-    /// tier + steps), up to `max_batch`, preserving FIFO order for the
-    /// rest.  After the first arrival, also waits up to `window` for
-    /// stragglers to fill the batch (the dynamic-batching knob).
+    /// serve the scheduled class — up to `max_batch` of its oldest
+    /// requests, per-class FIFO order preserved.  After the first
+    /// arrival, also waits up to `window` for stragglers to fill the
+    /// batch (the dynamic-batching knob).
+    ///
+    /// Which class gets served is the policy's call: `Fifo` always
+    /// takes the class of the globally oldest request (reproducing the
+    /// seed's scan exactly); `ClassAware` lets a cheaper class whose
+    /// head has aged past the bypass threshold jump an expensive one,
+    /// at most [`MAX_BYPASS_STREAK`] times in a row.
     ///
     /// Returns `None` on close-and-drained.
     pub fn pop_batch(&self, max_batch: usize, wait: Duration,
                      window: Duration) -> Option<Vec<Envelope>> {
         let deadline = Instant::now() + wait;
         let mut g = self.inner.lock().unwrap();
-        while g.items.is_empty() {
+        while g.len == 0 {
             if g.closed {
                 return None;
             }
@@ -88,9 +257,9 @@ impl RequestQueue {
             g = ng;
         }
         // batch window: give stragglers a chance to coalesce
-        if g.items.len() < max_batch && !window.is_zero() {
+        if g.len < max_batch && !window.is_zero() {
             let wdeadline = Instant::now() + window;
-            while g.items.len() < max_batch && !g.closed {
+            while g.len < max_batch && !g.closed {
                 let now = Instant::now();
                 if now >= wdeadline {
                     break;
@@ -100,19 +269,17 @@ impl RequestQueue {
                 g = ng;
             }
         }
-        let first = g.items.pop_front().expect("non-empty");
-        let mut batch = vec![first];
-        let mut rest = VecDeque::new();
-        while let Some(env) = g.items.pop_front() {
-            if batch.len() < max_batch
-                && env.request.compatible(&batch[0].request)
-            {
-                batch.push(env);
-            } else {
-                rest.push_back(env);
-            }
+        let bi = self.schedule(&mut g).expect("non-empty queue");
+        let take = g.buckets[bi].items.len().min(max_batch.max(1));
+        let mut batch = Vec::with_capacity(take);
+        for _ in 0..take {
+            let (_, env) = g.buckets[bi].items.pop_front().expect("take");
+            batch.push(env);
         }
-        g.items = rest;
+        if g.buckets[bi].items.is_empty() {
+            g.buckets.swap_remove(bi);
+        }
+        g.len -= batch.len();
         drop(g);
         // stamp the dequeue so queue wait is measured directly
         // (submit -> here) instead of being reconstructed later
@@ -122,28 +289,89 @@ impl RequestQueue {
         }
         Some(batch)
     }
+
+    /// Pick the bucket to serve.  Requires a non-empty queue.
+    fn schedule(&self, g: &mut Inner) -> Option<usize> {
+        let oldest = g.oldest()?;
+        let bypass_threshold = match &self.policy {
+            SchedPolicy::Fifo => {
+                return Some(oldest);
+            }
+            SchedPolicy::ClassAware { bypass_threshold } => {
+                *bypass_threshold
+            }
+        };
+        if g.bypass_streak >= MAX_BYPASS_STREAK {
+            g.bypass_streak = 0;
+            return Some(oldest);
+        }
+        let now = Instant::now();
+        let oldest_cost = g.buckets[oldest].key.cost();
+        // cheapest bypass-eligible class; oldest head breaks cost ties
+        let jump = g.buckets.iter().enumerate()
+            .filter(|(i, b)| {
+                *i != oldest && !b.items.is_empty()
+                    && b.key.cost() < oldest_cost
+            })
+            .filter_map(|(i, b)| {
+                let (seq, env) = b.items.front()?;
+                let waited = now.saturating_duration_since(
+                    env.request.submitted_at);
+                (waited >= bypass_threshold)
+                    .then_some((i, b.key.cost(), *seq))
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()
+                .then(a.2.cmp(&b.2)))
+            .map(|(i, _, _)| i);
+        match jump {
+            Some(i) => {
+                g.bypass_streak += 1;
+                Some(i)
+            }
+            None => {
+                g.bypass_streak = 0;
+                Some(oldest)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::GenRequest;
-    use std::sync::mpsc::channel;
+    use crate::coordinator::request::{GenRequest, GenResponse};
+    use std::sync::mpsc::{channel, Receiver};
 
-    fn env(id: u64, tier: &str, steps: usize) -> Envelope {
-        let (tx, _rx) = channel();
-        // leak the receiver so the sender stays usable in tests
-        std::mem::forget(_rx);
-        Envelope { request: GenRequest::new(id, 0, id, steps, tier),
-                   reply: tx }
+    /// Build an envelope AND hand back its reply receiver so tests
+    /// keep it alive for the envelope's lifetime (no `mem::forget`
+    /// leak; a dropped receiver would make reply sends fail).
+    fn env(id: u64, tier: &str, steps: usize)
+           -> (Envelope, Receiver<anyhow::Result<GenResponse>>) {
+        let (tx, rx) = channel();
+        (Envelope { request: GenRequest::new(id, 0, id, steps, tier),
+                    reply: tx },
+         rx)
+    }
+
+    /// Push a fresh envelope, stashing the receiver in `keep`.
+    fn push(q: &RequestQueue, keep: &mut Vec<Receiver<anyhow::Result<GenResponse>>>,
+            id: u64, tier: &str, steps: usize) -> Result<(), QueueError> {
+        let (e, rx) = env(id, tier, steps);
+        keep.push(rx);
+        q.push(e)
+    }
+
+    fn ids(batch: &[Envelope]) -> Vec<u64> {
+        batch.iter().map(|e| e.request.id).collect()
     }
 
     #[test]
     fn backpressure_at_capacity() {
         let q = RequestQueue::new(2);
-        q.push(env(1, "s95", 8)).unwrap();
-        q.push(env(2, "s95", 8)).unwrap();
-        match q.push(env(3, "s95", 8)) {
+        let mut keep = Vec::new();
+        push(&q, &mut keep, 1, "s95", 8).unwrap();
+        push(&q, &mut keep, 2, "s95", 8).unwrap();
+        match push(&q, &mut keep, 3, "s95", 8) {
             Err(QueueError::Full(2)) => {}
             other => panic!("expected Full, got {other:?}"),
         }
@@ -151,16 +379,30 @@ mod tests {
     }
 
     #[test]
+    fn backpressure_counts_across_classes() {
+        // capacity is a TOTAL across class buckets, not per class
+        let q = RequestQueue::new(3);
+        let mut keep = Vec::new();
+        push(&q, &mut keep, 1, "s95", 8).unwrap();
+        push(&q, &mut keep, 2, "dense", 8).unwrap();
+        push(&q, &mut keep, 3, "s90", 4).unwrap();
+        match push(&q, &mut keep, 4, "s97", 8) {
+            Err(QueueError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+    }
+
+    #[test]
     fn pop_batch_groups_compatible() {
         let q = RequestQueue::new(16);
-        q.push(env(1, "s95", 8)).unwrap();
-        q.push(env(2, "s97", 8)).unwrap(); // incompatible, must stay
-        q.push(env(3, "s95", 8)).unwrap();
-        q.push(env(4, "s95", 4)).unwrap(); // different steps, stays
+        let mut keep = Vec::new();
+        push(&q, &mut keep, 1, "s95", 8).unwrap();
+        push(&q, &mut keep, 2, "s97", 8).unwrap(); // incompatible, stays
+        push(&q, &mut keep, 3, "s95", 8).unwrap();
+        push(&q, &mut keep, 4, "s95", 4).unwrap(); // different steps
         let b = q.pop_batch(4, Duration::from_millis(10),
                             Duration::ZERO).unwrap();
-        assert_eq!(b.iter().map(|e| e.request.id).collect::<Vec<_>>(),
-                   vec![1, 3]);
+        assert_eq!(ids(&b), vec![1, 3]);
         assert_eq!(q.len(), 2);
         // FIFO preserved for the remainder
         let b2 = q.pop_batch(4, Duration::from_millis(10),
@@ -171,8 +413,9 @@ mod tests {
     #[test]
     fn pop_batch_respects_max() {
         let q = RequestQueue::new(16);
+        let mut keep = Vec::new();
         for i in 0..6 {
-            q.push(env(i, "s95", 8)).unwrap();
+            push(&q, &mut keep, i, "s95", 8).unwrap();
         }
         let b = q.pop_batch(4, Duration::from_millis(10),
                             Duration::ZERO).unwrap();
@@ -194,14 +437,15 @@ mod tests {
         q.close();
         assert!(q.pop_batch(4, Duration::from_millis(5),
                             Duration::ZERO).is_none());
-        assert!(matches!(q.push(env(1, "s95", 8)),
-                         Err(QueueError::Closed)));
+        let (e, _rx) = env(1, "s95", 8);
+        assert!(matches!(q.push(e), Err(QueueError::Closed)));
     }
 
     #[test]
     fn pop_batch_stamps_nonnegative_dequeue_time() {
         let q = RequestQueue::new(4);
-        q.push(env(1, "s95", 8)).unwrap();
+        let mut keep = Vec::new();
+        push(&q, &mut keep, 1, "s95", 8).unwrap();
         std::thread::sleep(Duration::from_millis(5));
         let b = q.pop_batch(4, Duration::from_millis(10), Duration::ZERO)
             .unwrap();
@@ -220,16 +464,145 @@ mod tests {
         let q2 = Arc::clone(&q);
         let h = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(10));
-            q2.push(env(2, "s95", 8)).unwrap();
+            let (e, rx) = env(2, "s95", 8);
+            q2.push(e).unwrap();
+            rx
         });
-        q.push(env(1, "s95", 8)).unwrap();
+        let (e, _rx1) = env(1, "s95", 8);
+        q.push(e).unwrap();
         let b = q.pop_batch(4, Duration::from_millis(100),
                             Duration::from_millis(200)).unwrap();
-        h.join().unwrap();
+        let _rx2 = h.join().unwrap();
         // either both coalesced (common) or at least the first arrived
         assert!(!b.is_empty());
         if b.len() == 2 {
             assert_eq!(b[1].request.id, 2);
         }
+    }
+
+    #[test]
+    fn class_depths_reports_per_class() {
+        let q = RequestQueue::new(16);
+        let mut keep = Vec::new();
+        push(&q, &mut keep, 1, "s90", 8).unwrap();
+        push(&q, &mut keep, 2, "s90", 8).unwrap();
+        push(&q, &mut keep, 3, "dense", 8).unwrap();
+        let depths = q.class_depths();
+        assert_eq!(depths.len(), 2);
+        let dense = depths.iter()
+            .find(|(k, _)| k.tier == "dense").unwrap();
+        assert_eq!(dense.1, 1);
+        let s90 = depths.iter().find(|(k, _)| k.tier == "s90").unwrap();
+        assert_eq!(s90.1, 2);
+    }
+
+    #[test]
+    fn class_cost_orders_dense_above_sparse() {
+        let dense = ClassKey { tier: "dense".into(), steps: 8 };
+        let s90 = ClassKey { tier: "s90".into(), steps: 8 };
+        let s97 = ClassKey { tier: "s97".into(), steps: 8 };
+        let s90_short = ClassKey { tier: "s90".into(), steps: 4 };
+        assert!(dense.cost() > s90.cost());
+        assert!(s90.cost() > s97.cost());
+        assert!(s90.cost() > s90_short.cost());
+    }
+
+    #[test]
+    fn young_sparse_head_does_not_bypass() {
+        // threshold far beyond the test's runtime: however loaded the
+        // machine, the sparse head cannot have aged past it, so the
+        // oldest (dense) head must win
+        let q = RequestQueue::with_policy(
+            64,
+            SchedPolicy::ClassAware {
+                bypass_threshold: Duration::from_secs(3600),
+            });
+        let mut keep = Vec::new();
+        push(&q, &mut keep, 0, "dense", 8).unwrap();
+        push(&q, &mut keep, 10, "s97", 8).unwrap();
+        let b = q.pop_batch(1, Duration::from_millis(10),
+                            Duration::ZERO).unwrap();
+        assert_eq!(ids(&b), vec![0], "young sparse head must not jump");
+    }
+
+    #[test]
+    fn aged_sparse_class_bypasses_dense_backlog() {
+        // the acceptance scenario: a dense backlog at the head, one
+        // sparse request behind it.  Strict FIFO serves all dense
+        // first; class-aware serves the sparse one once it has aged
+        // past the bypass threshold.  The sleep strictly exceeds the
+        // threshold, so this cannot flake on a slow runner (extra
+        // elapsed time only ages the head further).
+        let threshold = Duration::from_millis(5);
+        let q = RequestQueue::with_policy(
+            64, SchedPolicy::ClassAware { bypass_threshold: threshold });
+        let mut keep = Vec::new();
+        for i in 0..4 {
+            push(&q, &mut keep, i, "dense", 8).unwrap();
+        }
+        push(&q, &mut keep, 10, "s97", 8).unwrap();
+        std::thread::sleep(threshold + Duration::from_millis(5));
+        let b = q.pop_batch(1, Duration::from_millis(10),
+                            Duration::ZERO).unwrap();
+        assert_eq!(ids(&b), vec![10], "aged sparse head must bypass");
+        // and the dense backlog then drains in order
+        let b = q.pop_batch(4, Duration::from_millis(10),
+                            Duration::ZERO).unwrap();
+        assert_eq!(ids(&b), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bypass_streak_is_capped() {
+        // threshold 0: sparse is ALWAYS bypass-eligible.  The streak
+        // cap must still force the dense head through after at most
+        // MAX_BYPASS_STREAK jumps.
+        let q = RequestQueue::with_policy(
+            64,
+            SchedPolicy::ClassAware { bypass_threshold: Duration::ZERO });
+        let mut keep = Vec::new();
+        push(&q, &mut keep, 100, "dense", 8).unwrap();
+        let mut next_sparse = 0u64;
+        let mut pops_until_dense = 0usize;
+        loop {
+            // adversarial arrival pattern: keep the sparse bucket
+            // non-empty forever
+            push(&q, &mut keep, next_sparse, "s97", 8).unwrap();
+            next_sparse += 1;
+            let b = q.pop_batch(1, Duration::from_millis(10),
+                                Duration::ZERO).unwrap();
+            pops_until_dense += 1;
+            if b[0].request.tier == "dense" {
+                break;
+            }
+            assert!(pops_until_dense <= MAX_BYPASS_STREAK as usize + 1,
+                    "dense starved past the streak cap");
+        }
+        assert!(pops_until_dense <= MAX_BYPASS_STREAK as usize + 1);
+    }
+
+    #[test]
+    fn fifo_policy_never_bypasses() {
+        let q = RequestQueue::with_policy(64, SchedPolicy::Fifo);
+        assert_eq!(q.policy_name(), "fifo");
+        let mut keep = Vec::new();
+        for i in 0..3 {
+            push(&q, &mut keep, i, "dense", 8).unwrap();
+        }
+        push(&q, &mut keep, 10, "s97", 8).unwrap();
+        std::thread::sleep(Duration::from_millis(15));
+        // however long the sparse head has waited, FIFO serves dense
+        let b = q.pop_batch(4, Duration::from_millis(10),
+                            Duration::ZERO).unwrap();
+        assert_eq!(ids(&b), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sched_policy_from_config() {
+        assert_eq!(SchedPolicy::from_config("fifo", 50), SchedPolicy::Fifo);
+        assert_eq!(
+            SchedPolicy::from_config("class", 50),
+            SchedPolicy::ClassAware {
+                bypass_threshold: Duration::from_millis(50)
+            });
     }
 }

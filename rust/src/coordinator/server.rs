@@ -10,7 +10,7 @@ use anyhow::Result;
 use super::engine::Engine;
 use super::metrics::ServerMetrics;
 use super::pool::EnginePool;
-use super::queue::{QueueError, RequestQueue};
+use super::queue::{QueueError, RequestQueue, SchedPolicy};
 use super::request::{Envelope, GenRequest, GenResponse};
 use crate::config::ServeConfig;
 
@@ -28,8 +28,12 @@ impl Server {
     /// Blocks until every shard is ready or failed, so callers get
     /// load errors synchronously.
     pub fn start(artifacts_dir: &str, serve: ServeConfig) -> Result<Server> {
-        let queue = Arc::new(RequestQueue::new(serve.queue_capacity));
+        let policy = SchedPolicy::from_config(&serve.scheduler,
+                                              serve.bypass_threshold_ms);
+        let queue = Arc::new(RequestQueue::with_policy(
+            serve.queue_capacity, policy));
         let metrics = Arc::new(Mutex::new(ServerMetrics::new()));
+        metrics.lock().unwrap().attach_queue(Arc::clone(&queue));
         let dir = artifacts_dir.to_string();
         let cfg = serve.clone();
         let pool = EnginePool::start_with(

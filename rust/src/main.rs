@@ -205,6 +205,7 @@ fn perf(artifacts: &str, args: &Args) -> Result<()> {
         model: model.clone(), variant: "sla2".into(), tier: tier.clone(),
         sample_steps: 1, max_batch: 1, batch_window_ms: 0,
         queue_capacity: 8, num_shards: 1,
+        ..ServeConfig::default()
     };
     let server = Server::start(artifacts, serve)?;
     let _ = server.submit(1, 7, 1, &tier).unwrap().recv()??; // warm

@@ -92,6 +92,10 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json`.  Callers that may run many times
+    /// per process (pool shards) should go through
+    /// [`crate::runtime::shared`] instead, which memoizes the parse
+    /// behind an `Arc` — this constructor always re-reads the file.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
@@ -161,6 +165,10 @@ impl Manifest {
 
     /// Load the initial parameter tensors for a model, in the canonical
     /// flatten order (the order every train/denoise artifact expects).
+    ///
+    /// Returns an OWNED copy (the trainer mutates its set); serving
+    /// shards that only read params should use
+    /// [`crate::runtime::shared`]'s memoized `params` instead.
     pub fn load_params(&self, config: &str) -> Result<Vec<Tensor>> {
         let layout = self.params.get(config).ok_or_else(|| {
             anyhow::anyhow!("no params for config {config:?}")

@@ -1,0 +1,288 @@
+//! Process-wide shared artifact state for the sharded engine pool.
+//!
+//! Every pool shard owns its own PJRT runtime (the `xla` client and
+//! its executables are `Rc`-based and can never cross threads), but a
+//! lot of per-shard startup work is plain `Send + Sync` data that N
+//! shards used to redo N times:
+//!
+//! * **Manifest** — `manifest.json` parse, shared as `Arc<Manifest>`;
+//! * **Parameters** — the `params_<cfg>.bin` read + f32 decode +
+//!   tensor build (the dominant non-compile startup cost), shared as
+//!   `Arc<Vec<Tensor>>` (each shard still converts to its own XLA
+//!   literals — those are `Rc`-based);
+//! * **Compile gate** — a per-artifact single-flight guard: when two
+//!   shards need the same executable at the same time, the second
+//!   blocks until the first finishes instead of racing an identical
+//!   compile on the same cores.  The compiled executable itself stays
+//!   per-shard (it cannot be shared, and the pinned `xla` version
+//!   exposes no serialize/deserialize pair to ship bytes across) —
+//!   *steady-state* dedup comes from the dispatcher's warm-shard
+//!   affinity; the gate bounds the cold-start thundering herd.
+//!
+//! Loads are single-flighted by doing the file I/O under the map
+//! mutex: a second shard asking for the same dir/config blocks on the
+//! lock and then hits the cache.  That serializes loads of *different*
+//! dirs too, which is fine — real deployments have one artifacts dir.
+//!
+//! Failed loads are NOT cached (a missing file can be fixed and
+//! retried); the [`CacheStats`] counters are surfaced in
+//! `ServerMetrics::snapshot` as the compile-dedup observability hook.
+
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::sync::Arc;
+
+use anyhow::Result;
+use once_cell::sync::Lazy;
+
+use super::artifact::Manifest;
+use crate::tensor::Tensor;
+
+/// Lock-free counters for cache effectiveness (cumulative since
+/// process start).
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    /// manifest.json actually read + parsed
+    pub manifest_loads: AtomicU64,
+    /// manifest requests served from the shared Arc
+    pub manifest_hits: AtomicU64,
+    /// params_<cfg>.bin actually read + decoded
+    pub params_loads: AtomicU64,
+    /// params requests served from the shared Arc
+    pub params_hits: AtomicU64,
+    /// single-flight compile sections entered — one per compile
+    /// ATTEMPT, so a failed parse/compile that is retried later
+    /// counts again
+    pub compile_attempts: AtomicU64,
+    /// times a shard blocked on a sibling's in-flight identical compile
+    pub singleflight_waits: AtomicU64,
+}
+
+impl CacheStats {
+    pub fn snapshot(&self) -> CacheStatsSnapshot {
+        CacheStatsSnapshot {
+            manifest_loads: self.manifest_loads.load(Ordering::Relaxed),
+            manifest_hits: self.manifest_hits.load(Ordering::Relaxed),
+            params_loads: self.params_loads.load(Ordering::Relaxed),
+            params_hits: self.params_hits.load(Ordering::Relaxed),
+            compile_attempts:
+                self.compile_attempts.load(Ordering::Relaxed),
+            singleflight_waits:
+                self.singleflight_waits.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStatsSnapshot {
+    pub manifest_loads: u64,
+    pub manifest_hits: u64,
+    pub params_loads: u64,
+    pub params_hits: u64,
+    pub compile_attempts: u64,
+    pub singleflight_waits: u64,
+}
+
+/// The process-wide cache (see module docs).
+pub struct SharedArtifacts {
+    manifests: Mutex<HashMap<PathBuf, Arc<Manifest>>>,
+    params: Mutex<HashMap<(PathBuf, String), Arc<Vec<Tensor>>>>,
+    inflight: Mutex<HashSet<String>>,
+    cv: Condvar,
+    stats: CacheStats,
+}
+
+static SHARED: Lazy<SharedArtifacts> = Lazy::new(|| SharedArtifacts {
+    manifests: Mutex::new(HashMap::new()),
+    params: Mutex::new(HashMap::new()),
+    inflight: Mutex::new(HashSet::new()),
+    cv: Condvar::new(),
+    stats: CacheStats::default(),
+});
+
+/// The process-wide instance every shard shares.
+pub fn shared() -> &'static SharedArtifacts {
+    &SHARED
+}
+
+impl SharedArtifacts {
+    /// Load (or fetch) the manifest for an artifacts dir.  The first
+    /// caller parses; every later shard gets the same `Arc`.
+    pub fn manifest(&self, dir: impl AsRef<Path>) -> Result<Arc<Manifest>> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut g = self.manifests.lock().unwrap();
+        if let Some(m) = g.get(&dir) {
+            self.stats.manifest_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(m));
+        }
+        let m = Arc::new(Manifest::load(&dir)?);
+        self.stats.manifest_loads.fetch_add(1, Ordering::Relaxed);
+        g.insert(dir, Arc::clone(&m));
+        Ok(m)
+    }
+
+    /// Load (or fetch) a model's initial parameter tensors.  One file
+    /// read + decode per (dir, config) per process, however many
+    /// shards start.
+    pub fn params(&self, manifest: &Manifest, config: &str)
+                  -> Result<Arc<Vec<Tensor>>> {
+        let key = (manifest.dir.clone(), config.to_string());
+        let mut g = self.params.lock().unwrap();
+        if let Some(p) = g.get(&key) {
+            self.stats.params_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(p));
+        }
+        let p = Arc::new(manifest.load_params(config)?);
+        self.stats.params_loads.fetch_add(1, Ordering::Relaxed);
+        g.insert(key, Arc::clone(&p));
+        Ok(p)
+    }
+
+    /// Enter the single-flight compile section for `key` (the
+    /// artifact name).  Blocks while another thread holds the same
+    /// key; the returned ticket releases the slot on drop — including
+    /// on panic, so a failed compile never wedges its siblings.
+    pub fn begin_compile(&self, key: &str) -> CompileTicket<'_> {
+        let mut g = self.inflight.lock().unwrap();
+        let mut counted_wait = false;
+        while g.contains(key) {
+            if !counted_wait {
+                self.stats.singleflight_waits
+                    .fetch_add(1, Ordering::Relaxed);
+                counted_wait = true;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+        g.insert(key.to_string());
+        self.stats.compile_attempts.fetch_add(1, Ordering::Relaxed);
+        CompileTicket { cache: self, key: key.to_string() }
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+}
+
+/// RAII guard for a single-flight compile section.
+pub struct CompileTicket<'a> {
+    cache: &'a SharedArtifacts,
+    key: String,
+}
+
+impl Drop for CompileTicket<'_> {
+    fn drop(&mut self) {
+        let mut g = self.cache.inflight.lock().unwrap();
+        g.remove(&self.key);
+        self.cache.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    fn mini_manifest_json() -> &'static str {
+        r#"{
+  "version": 1,
+  "artifacts": [],
+  "params": [
+    {"config": "m", "file": "params_m.bin",
+     "tensors": [{"name": "w", "shape": [2, 2], "offset": 0, "size": 4}]}
+  ],
+  "configs": {
+    "m": {"video":[4,8,8,3],"patch":[2,2,2],"dim":64,"depth":2,
+          "heads":2,"head_dim":32,"b_q":8,"b_k":4,"n_tokens":32,
+          "t_m":4,"t_n":8,"num_classes":10,"param_count":4}
+  }
+}"#
+    }
+
+    fn write_fixture(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), mini_manifest_json())
+            .unwrap();
+        let floats: Vec<f32> = (0..4).map(|i| i as f32).collect();
+        let bytes: Vec<u8> =
+            floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("params_m.bin"), bytes).unwrap();
+        dir
+    }
+
+    #[test]
+    fn manifest_is_shared_across_callers() {
+        let dir = write_fixture("sla2_shared_manifest");
+        let a = shared().manifest(&dir).unwrap();
+        let b = shared().manifest(&dir).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second load must reuse the Arc");
+        assert_eq!(a.config("m").unwrap().depth, 2);
+    }
+
+    #[test]
+    fn params_are_shared_across_callers() {
+        let dir = write_fixture("sla2_shared_params");
+        let m = shared().manifest(&dir).unwrap();
+        let p1 = shared().params(&m, "m").unwrap();
+        let p2 = shared().params(&m, "m").unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(p1.len(), 1);
+        assert_eq!(p1[0].shape, vec![2, 2]);
+        assert_eq!(p1[0].f32s().unwrap(), &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn missing_params_error_is_not_cached() {
+        let dir = write_fixture("sla2_shared_params_miss");
+        let m = shared().manifest(&dir).unwrap();
+        assert!(shared().params(&m, "nope").is_err());
+        // the failure did not poison the slot for the good config
+        assert!(shared().params(&m, "m").is_ok());
+    }
+
+    #[test]
+    fn single_flight_blocks_second_compiler() {
+        // thread A holds the ticket; thread B must block until A
+        // drops it, and the wait must be counted exactly once.
+        let waits_before =
+            shared().stats().singleflight_waits.load(Ordering::Relaxed);
+        let ticket = shared().begin_compile("sf_test_artifact");
+        let entered = Arc::new(AtomicUsize::new(0));
+        let entered2 = Arc::clone(&entered);
+        let h = std::thread::spawn(move || {
+            let _t = shared().begin_compile("sf_test_artifact");
+            entered2.store(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(entered.load(Ordering::SeqCst), 0,
+                   "second compile entered while the first was in \
+                    flight");
+        drop(ticket);
+        h.join().unwrap();
+        assert_eq!(entered.load(Ordering::SeqCst), 1);
+        let waits_after =
+            shared().stats().singleflight_waits.load(Ordering::Relaxed);
+        assert!(waits_after >= waits_before + 1);
+    }
+
+    #[test]
+    fn distinct_artifacts_compile_concurrently() {
+        let _a = shared().begin_compile("sf_distinct_a");
+        // must not block: different key
+        let _b = shared().begin_compile("sf_distinct_b");
+    }
+
+    #[test]
+    fn ticket_releases_on_panic() {
+        let r = std::panic::catch_unwind(|| {
+            let _t = shared().begin_compile("sf_panic_artifact");
+            panic!("compile failed");
+        });
+        assert!(r.is_err());
+        // slot must be free again: this would deadlock otherwise
+        let _t = shared().begin_compile("sf_panic_artifact");
+    }
+}

@@ -4,27 +4,37 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
 
 use super::artifact::Manifest;
+use super::compile_cache;
 use crate::tensor::{Data, Tensor};
 
 /// Single-threaded PJRT runtime (PjRtClient is `Rc`-based, `!Send`).
+///
+/// The manifest is process-shared (`Arc` via
+/// [`compile_cache::SharedArtifacts`]): N pool shards parse
+/// `manifest.json` once.  Executables stay per-runtime — they are
+/// `Rc`-based and cannot cross threads — but each compile runs inside
+/// the process-wide single-flight gate so identical cold-start
+/// compiles on sibling shards serialize instead of racing.
 pub struct Runtime {
     client: PjRtClient,
-    manifest: Manifest,
+    manifest: Arc<Manifest>,
     cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
     /// cumulative (compiles, executions) — surfaced in metrics
     counters: RefCell<(usize, usize)>,
 }
 
 impl Runtime {
-    /// Load the manifest and connect the PJRT CPU client.
+    /// Load the manifest (shared across runtimes in this process) and
+    /// connect the PJRT CPU client.
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
+        let manifest = compile_cache::shared().manifest(artifacts_dir)?;
         let client = PjRtClient::cpu()
             .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
         Ok(Runtime {
@@ -40,12 +50,19 @@ impl Runtime {
     }
 
     /// Compile (or fetch from cache) an artifact's executable.
+    ///
+    /// Cold path holds the process-wide single-flight ticket for the
+    /// artifact name, so two shards that both need `name` right now
+    /// run ONE compile at a time (the second starts only after the
+    /// first finished, on cores the first is no longer saturating)
+    /// instead of racing identical lowering pipelines.
     pub fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
         if let Some(exe) = self.cache.borrow().get(name) {
             return Ok(Rc::clone(exe));
         }
         let spec = self.manifest.artifact(name)?;
         let path = self.manifest.dir.join(&spec.file);
+        let _ticket = compile_cache::shared().begin_compile(name);
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;

@@ -9,10 +9,17 @@
 //! compile-and-cache per artifact → [`Runtime::execute`] with
 //! [`Tensor`] I/O (spec-validated so a Rust-side shape bug surfaces as
 //! a readable error, not an XLA crash).
+//!
+//! Cross-shard sharing: the `Send + Sync` halves of artifact loading
+//! (manifest parse, parameter decode) live in a process-wide
+//! [`compile_cache::SharedArtifacts`] so a sharded pool pays them
+//! once, and per-artifact compiles are single-flighted across shards.
 
 mod artifact;
+pub mod compile_cache;
 mod executor;
 pub mod hlo_audit;
 
 pub use artifact::{ArtifactSpec, Manifest, ParamsLayout, TensorSpec};
+pub use compile_cache::{shared, CacheStats, SharedArtifacts};
 pub use executor::{tensor_to_literal, Runtime};

@@ -51,10 +51,55 @@ const PARALLEL_THRESHOLD: usize = 4096;
 /// handoff dwarfs the pass itself.
 const MIN_FRAME_ELEMS: usize = 256;
 
+/// Fan `f(ti)` out over the shared pool, one job per frame index.
+/// Results come back indexed by frame, so reductions over them are
+/// deterministic regardless of completion order.  `f` must own (Arc)
+/// whatever slice data it reads — the callers below wrap their clip
+/// copies.  Do NOT call from a job already running on the pool: the
+/// caller blocks on the result channel, and nested fan-out can then
+/// occupy every worker with blocked parents (classic pool deadlock).
+fn frame_map<R, F>(t: usize, f: F) -> Vec<R>
+where
+    R: Send + 'static,
+    F: Fn(usize) -> R + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let (tx, rx) = channel::<(usize, R)>();
+    {
+        let pool = METRICS_POOL.lock().unwrap();
+        for ti in 0..t {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            pool.submit(move || {
+                let v = (*f)(ti);
+                let _ = tx.send((ti, v));
+            });
+        }
+    }
+    drop(tx);
+    let mut out: Vec<Option<R>> = (0..t).map(|_| None).collect();
+    let mut received = 0usize;
+    for (ti, v) in rx {
+        out[ti] = Some(v);
+        received += 1;
+    }
+    // a panicked job drops its sender without sending; surface that
+    // as a failure instead of silently scoring the frame 0.0 (the
+    // serial path propagates the same panic)
+    assert_eq!(received, t,
+               "frame pass lost {} result(s) — a metric job panicked",
+               t - received);
+    out.into_iter().map(|o| o.expect("indexed result")).collect()
+}
+
+/// Should a `t`-frame pass over `n` elements fan out?  Below the
+/// thresholds the pool handoff costs more than the pass itself.
+fn worth_parallelizing(t: usize, n: usize) -> bool {
+    t >= 2 && n >= PARALLEL_THRESHOLD && n / t >= MIN_FRAME_ELEMS
+}
+
 /// Run `f(data, ti)` for every frame index, in parallel for clips big
-/// enough to amortize the handoff.  Results come back indexed by
-/// frame, so reductions over them are deterministic regardless of
-/// completion order.
+/// enough to amortize the handoff.
 ///
 /// The parallel path copies the clip once into an `Arc<[f32]>` (pool
 /// jobs need `'static` data); callers doing several passes over one
@@ -64,40 +109,11 @@ fn per_frame_pass<F>(t: usize, data: &[f32], f: F) -> Vec<f64>
 where
     F: Fn(&[f32], usize) -> f64 + Send + Sync + 'static,
 {
-    if t < 2 || data.len() < PARALLEL_THRESHOLD
-        || data.len() / t < MIN_FRAME_ELEMS
-    {
+    if !worth_parallelizing(t, data.len()) {
         return (0..t).map(|ti| f(data, ti)).collect();
     }
     let shared: Arc<[f32]> = Arc::from(data);
-    let f = Arc::new(f);
-    let (tx, rx) = channel::<(usize, f64)>();
-    {
-        let pool = METRICS_POOL.lock().unwrap();
-        for ti in 0..t {
-            let shared = Arc::clone(&shared);
-            let f = Arc::clone(&f);
-            let tx = tx.clone();
-            pool.submit(move || {
-                let v = (*f)(&shared, ti);
-                let _ = tx.send((ti, v));
-            });
-        }
-    }
-    drop(tx);
-    let mut out = vec![0.0; t];
-    let mut received = 0usize;
-    for (ti, v) in rx {
-        out[ti] = v;
-        received += 1;
-    }
-    // a panicked job drops its sender without sending; surface that
-    // as a failure instead of silently scoring the frame 0.0 (the
-    // serial path propagates the same panic)
-    assert_eq!(received, t,
-               "frame pass lost {} result(s) — a metric job panicked",
-               t - received);
-    out
+    frame_map(t, move |ti| f(&shared, ti))
 }
 
 /// Mean spatial gradient magnitude (sharpness / imaging-quality proxy).
@@ -146,9 +162,56 @@ pub fn psnr(clip: &Tensor, reference: &Tensor) -> f64 {
 
 /// Global SSIM (single window over the whole clip — a coarse but
 /// monotone structural-similarity proxy).
+///
+/// Big same-shape 4-D pairs run as two frame-parallel passes over the
+/// shared pool (per-frame sums, then per-frame moments against the
+/// global means — the same two-pass moment computation as the serial
+/// path, chunked by frame); everything else takes the serial path.
 pub fn ssim_global(a: &Tensor, b: &Tensor) -> f64 {
     let x = a.f32s().unwrap();
     let y = b.f32s().unwrap();
+    let parallel = a.shape.len() == 4 && a.shape == b.shape
+        && worth_parallelizing(a.shape[0], x.len());
+    if !parallel {
+        return ssim_serial(x, y);
+    }
+    let t = a.shape[0];
+    let frame = x.len() / t;
+    let n = x.len() as f64;
+    let xs: Arc<[f32]> = Arc::from(x);
+    let ys: Arc<[f32]> = Arc::from(y);
+    let sums = {
+        let (xs, ys) = (Arc::clone(&xs), Arc::clone(&ys));
+        frame_map(t, move |ti| {
+            let (mut sx, mut sy) = (0.0f64, 0.0f64);
+            for j in ti * frame..(ti + 1) * frame {
+                sx += xs[j] as f64;
+                sy += ys[j] as f64;
+            }
+            (sx, sy)
+        })
+    };
+    let mx = sums.iter().map(|s| s.0).sum::<f64>() / n;
+    let my = sums.iter().map(|s| s.1).sum::<f64>() / n;
+    let moments = frame_map(t, move |ti| {
+        let (mut vx, mut vy, mut cov) = (0.0f64, 0.0f64, 0.0f64);
+        for j in ti * frame..(ti + 1) * frame {
+            let dx = xs[j] as f64 - mx;
+            let dy = ys[j] as f64 - my;
+            vx += dx * dx;
+            vy += dy * dy;
+            cov += dx * dy;
+        }
+        (vx, vy, cov)
+    });
+    let vx = moments.iter().map(|m| m.0).sum::<f64>() / n;
+    let vy = moments.iter().map(|m| m.1).sum::<f64>() / n;
+    let cov = moments.iter().map(|m| m.2).sum::<f64>() / n;
+    ssim_formula(mx, my, vx, vy, cov)
+}
+
+/// The original single-threaded SSIM pass (also the parity oracle).
+fn ssim_serial(x: &[f32], y: &[f32]) -> f64 {
     let n = x.len() as f64;
     let mx = x.iter().map(|v| *v as f64).sum::<f64>() / n;
     let my = y.iter().map(|v| *v as f64).sum::<f64>() / n;
@@ -160,9 +223,10 @@ pub fn ssim_global(a: &Tensor, b: &Tensor) -> f64 {
         vy += dy * dy;
         cov += dx * dy;
     }
-    vx /= n;
-    vy /= n;
-    cov /= n;
+    ssim_formula(mx, my, vx / n, vy / n, cov / n)
+}
+
+fn ssim_formula(mx: f64, my: f64, vx: f64, vy: f64, cov: f64) -> f64 {
     let (c1, c2) = (0.0001, 0.0009);
     ((2.0 * mx * my + c1) * (2.0 * cov + c2))
         / ((mx * mx + my * my + c1) * (vx + vy + c2))
@@ -170,6 +234,11 @@ pub fn ssim_global(a: &Tensor, b: &Tensor) -> f64 {
 
 /// Inverse temporal jerk: 1 / (1 + mean |x[t+1] - 2 x[t] + x[t-1]|).
 /// Smooth motion (constant velocity) scores ~1; flicker scores low.
+///
+/// Flat slice pass parallelized over interior frames like sharpness /
+/// subject_consistency; the boundary frames contribute nothing, so
+/// their jobs return 0.  Accumulation order within each frame matches
+/// the scalar reference; only the cross-frame association differs.
 pub fn motion_smoothness(clip: &Tensor) -> f64 {
     let [t, h, w, c] = dims4(clip);
     if t < 3 {
@@ -177,15 +246,20 @@ pub fn motion_smoothness(clip: &Tensor) -> f64 {
     }
     let d = clip.f32s().unwrap();
     let frame = h * w * c;
-    let mut acc = 0.0;
-    for ti in 1..t - 1 {
+    let per_frame = per_frame_pass(t, d, move |all, ti| {
+        if ti == 0 || ti + 1 >= t {
+            return 0.0;
+        }
+        let mut acc = 0.0f64;
         for i in 0..frame {
-            let jerk = d[(ti + 1) * frame + i] as f64
-                - 2.0 * d[ti * frame + i] as f64
-                + d[(ti - 1) * frame + i] as f64;
+            let jerk = all[(ti + 1) * frame + i] as f64
+                - 2.0 * all[ti * frame + i] as f64
+                + all[(ti - 1) * frame + i] as f64;
             acc += jerk.abs();
         }
-    }
+        acc
+    });
+    let acc: f64 = per_frame.iter().sum();
     1.0 / (1.0 + acc / ((t - 2) * frame) as f64 * 10.0)
 }
 
@@ -387,6 +461,47 @@ mod tests {
             }
             acc / (t - 1) as f64
         }
+
+        pub fn motion_smoothness(clip: &Tensor) -> f64 {
+            let [t, h, w, c] = dims4(clip);
+            if t < 3 {
+                return 1.0;
+            }
+            let d = clip.f32s().unwrap();
+            let frame = h * w * c;
+            let mut acc = 0.0;
+            for ti in 1..t - 1 {
+                for i in 0..frame {
+                    let jerk = d[(ti + 1) * frame + i] as f64
+                        - 2.0 * d[ti * frame + i] as f64
+                        + d[(ti - 1) * frame + i] as f64;
+                    acc += jerk.abs();
+                }
+            }
+            1.0 / (1.0 + acc / ((t - 2) * frame) as f64 * 10.0)
+        }
+
+        pub fn ssim_global(a: &Tensor, b: &Tensor) -> f64 {
+            let x = a.f32s().unwrap();
+            let y = b.f32s().unwrap();
+            let n = x.len() as f64;
+            let mx = x.iter().map(|v| *v as f64).sum::<f64>() / n;
+            let my = y.iter().map(|v| *v as f64).sum::<f64>() / n;
+            let (mut vx, mut vy, mut cov) = (0.0, 0.0, 0.0);
+            for (xi, yi) in x.iter().zip(y) {
+                let dx = *xi as f64 - mx;
+                let dy = *yi as f64 - my;
+                vx += dx * dx;
+                vy += dy * dy;
+                cov += dx * dy;
+            }
+            vx /= n;
+            vy /= n;
+            cov /= n;
+            let (c1, c2) = (0.0001, 0.0009);
+            ((2.0 * mx * my + c1) * (2.0 * cov + c2))
+                / ((mx * mx + my * my + c1) * (vx + vy + c2))
+        }
     }
 
     fn assert_close(a: f64, b: f64, what: &str) {
@@ -406,6 +521,15 @@ mod tests {
             // identical accumulation order per frame: exact equality
             assert_eq!(subject_consistency(&clip),
                        reference::subject_consistency(&clip));
+            // per-frame partials reassociate the cross-frame sum:
+            // equal within reassociation error
+            assert_close(motion_smoothness(&clip),
+                         reference::motion_smoothness(&clip),
+                         "motion_smoothness");
+            let other = synthetic_clip(&cfg, 9, &mut Pcg32::seeded(40));
+            // small pairs run the verbatim serial pass: exact equality
+            assert_eq!(ssim_global(&clip, &other),
+                       reference::ssim_global(&clip, &other));
         }
     }
 
@@ -418,6 +542,44 @@ mod tests {
                      "sharpness");
         assert_eq!(subject_consistency(&clip),
                    reference::subject_consistency(&clip));
+    }
+
+    #[test]
+    fn motion_smoothness_parallel_matches_reference() {
+        // per-frame accumulation matches the scalar reference within
+        // cross-frame summation reassociation error
+        let clip = Tensor::randn(&[8, 16, 16, 3], &mut Pcg32::seeded(32));
+        assert!(clip.numel() >= super::PARALLEL_THRESHOLD);
+        let (got, want) = (motion_smoothness(&clip),
+                           reference::motion_smoothness(&clip));
+        let tol = 1e-9 * want.abs().max(1.0);
+        assert!((got - want).abs() <= tol,
+                "motion_smoothness: {got} vs reference {want}");
+        // and a boundary-sized clip (t=3: single interior frame)
+        let clip3 = Tensor::randn(&[3, 24, 24, 3],
+                                  &mut Pcg32::seeded(33));
+        let (g3, w3) = (motion_smoothness(&clip3),
+                        reference::motion_smoothness(&clip3));
+        assert!((g3 - w3).abs() <= 1e-9 * w3.abs().max(1.0),
+                "motion_smoothness t=3: {g3} vs {w3}");
+    }
+
+    #[test]
+    fn ssim_parallel_matches_reference() {
+        let a = Tensor::randn(&[8, 16, 16, 3], &mut Pcg32::seeded(34));
+        let mut b = a.clone();
+        let mut rng = Pcg32::seeded(35);
+        for v in b.f32s_mut().unwrap() {
+            *v += 0.05 * rng.normal();
+        }
+        assert!(a.numel() >= super::PARALLEL_THRESHOLD);
+        let (got, want) = (ssim_global(&a, &b),
+                           reference::ssim_global(&a, &b));
+        let tol = 1e-9 * want.abs().max(1.0);
+        assert!((got - want).abs() <= tol,
+                "ssim_global: {got} vs reference {want}");
+        // identity still scores ~1 through the parallel path
+        assert!((ssim_global(&a, &a) - 1.0).abs() < 1e-9);
     }
 
     #[test]

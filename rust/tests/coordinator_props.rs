@@ -1,26 +1,37 @@
 //! Property tests on coordinator invariants (no PJRT needed):
 //! no request loss/duplication, batch compatibility, FIFO order for
-//! the remainder, backpressure bounds, batch planning exactness, and
-//! engine-pool dispatch under concurrent load (mock processor).
+//! the remainder, backpressure bounds, scheduler-policy invariants
+//! (per-class FIFO, anti-starvation, fifo-mode bit-for-bit parity),
+//! batch planning exactness, and engine-pool dispatch under
+//! concurrent load (mock processor) including warm-shard compile
+//! dedup.
 
-use std::collections::HashSet;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::channel;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use sla2::coordinator::pool::{BatchProcessor, EnginePool};
-use sla2::coordinator::queue::RequestQueue;
-use sla2::coordinator::request::{Envelope, GenRequest, RequestMetrics};
+use sla2::coordinator::queue::{RequestQueue, SchedPolicy,
+                               MAX_BYPASS_STREAK};
+use sla2::coordinator::request::{Envelope, GenRequest, GenResponse,
+                                 RequestMetrics};
 use sla2::coordinator::plan_batches;
 use sla2::coordinator::ServerMetrics;
 use sla2::tensor::Tensor;
 use sla2::util::proptest::check;
 use sla2::util::rng::Pcg32;
 
-fn env(id: u64, tier: &str, steps: usize) -> Envelope {
+type Reply = Receiver<anyhow::Result<GenResponse>>;
+
+/// Build an envelope, stashing the reply receiver in `keep` so it
+/// stays alive for the envelope's lifetime (the seed's helper leaked
+/// it via `mem::forget`).
+fn env(keep: &mut Vec<Reply>, id: u64, tier: &str, steps: usize)
+       -> Envelope {
     let (tx, rx) = channel();
-    std::mem::forget(rx);
+    keep.push(rx);
     Envelope { request: GenRequest::new(id, 0, id, steps, tier), reply: tx }
 }
 
@@ -37,8 +48,10 @@ fn prop_no_request_lost_or_duplicated() {
           },
           |reqs| {
               let q = RequestQueue::new(1024);
+              let mut keep = Vec::new();
               for (id, tier, steps) in reqs {
-                  q.push(env(*id, tier, *steps)).map_err(|e| e.to_string())?;
+                  q.push(env(&mut keep, *id, tier, *steps))
+                      .map_err(|e| e.to_string())?;
               }
               let mut seen = HashSet::new();
               let mut drained = 0usize;
@@ -76,8 +89,10 @@ fn prop_batches_are_homogeneous() {
           },
           |reqs| {
               let q = RequestQueue::new(1024);
+              let mut keep = Vec::new();
               for (id, tier, steps) in reqs {
-                  q.push(env(*id, tier, *steps)).map_err(|e| e.to_string())?;
+                  q.push(env(&mut keep, *id, tier, *steps))
+                      .map_err(|e| e.to_string())?;
               }
               let mut drained = 0;
               while drained < reqs.len() {
@@ -116,8 +131,10 @@ fn prop_first_request_fifo() {
           },
           |reqs| {
               let q = RequestQueue::new(1024);
+              let mut keep = Vec::new();
               for (id, tier) in reqs {
-                  q.push(env(*id, tier, 8)).map_err(|e| e.to_string())?;
+                  q.push(env(&mut keep, *id, tier, 8))
+                      .map_err(|e| e.to_string())?;
               }
               let mut expected_heads: Vec<u64> = Vec::new();
               let mut pending: Vec<(u64, String)> = reqs.iter()
@@ -149,9 +166,13 @@ fn prop_backpressure_never_exceeds_capacity() {
                            r.below(40) as usize),
           |(cap, n)| {
               let q = RequestQueue::new(*cap);
+              let mut keep = Vec::new();
               let mut accepted = 0;
               for i in 0..*n {
-                  if q.push(env(i as u64, "s95", 8)).is_ok() {
+                  // rotate classes: capacity must bound the TOTAL
+                  // across class buckets, not any single class
+                  let tier = TIERS[i % TIERS.len()];
+                  if q.push(env(&mut keep, i as u64, tier, 8)).is_ok() {
                       accepted += 1;
                   }
                   if q.len() > *cap {
@@ -162,6 +183,174 @@ fn prop_backpressure_never_exceeds_capacity() {
                   return Err(format!("accepted {accepted} > cap {cap}"));
               }
               Ok(())
+          });
+}
+
+// ---------------- scheduler-policy invariants -----------------------
+
+#[test]
+fn prop_class_policy_preserves_per_class_fifo() {
+    // whatever the bypass policy does ACROSS classes, requests WITHIN
+    // a class must always be served in arrival order
+    check("class-fifo", 48,
+          |r: &mut Pcg32| {
+              let max_batch = 1 + r.below(4) as usize;
+              let threshold_ms = r.below(3) as u64; // 0..2ms: jumpy
+              let reqs: Vec<(u64, &str, usize)> =
+                  (0..(1 + r.below(30) as u64))
+                      .map(|id| (id, if r.f32() < 0.3 { "dense" }
+                                     else { *r.choice(&TIERS) },
+                                 if r.f32() < 0.5 { 4 } else { 8 }))
+                      .collect();
+              (max_batch, threshold_ms, reqs)
+          },
+          |(max_batch, threshold_ms, reqs)| {
+              let q = RequestQueue::with_policy(
+                  1024,
+                  SchedPolicy::ClassAware {
+                      bypass_threshold:
+                          Duration::from_millis(*threshold_ms),
+                  });
+              let mut keep = Vec::new();
+              for (id, tier, steps) in reqs {
+                  q.push(env(&mut keep, *id, tier, *steps))
+                      .map_err(|e| e.to_string())?;
+              }
+              let mut served: HashMap<(String, usize), Vec<u64>> =
+                  HashMap::new();
+              let mut drained = 0usize;
+              while drained < reqs.len() {
+                  let b = q.pop_batch(*max_batch,
+                                      Duration::from_millis(50),
+                                      Duration::ZERO)
+                      .ok_or("closed")?;
+                  if b.is_empty() {
+                      return Err("timeout before drain".into());
+                  }
+                  for e in &b {
+                      served.entry((e.request.tier.clone(),
+                                    e.request.steps))
+                          .or_default()
+                          .push(e.request.id);
+                  }
+                  drained += b.len();
+              }
+              // ids were pushed in increasing order, so per-class
+              // serve order must be strictly increasing
+              for (class, ids) in &served {
+                  if ids.windows(2).any(|w| w[0] >= w[1]) {
+                      return Err(format!(
+                          "class {class:?} served out of order: \
+                           {ids:?}"));
+                  }
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn prop_fifo_mode_matches_reference_scan_bit_for_bit() {
+    // the seed's algorithm: pop the global head, then scan the whole
+    // queue in arrival order collecting compatible requests up to
+    // max_batch.  Class buckets + oldest-head selection must
+    // reproduce its served sequence EXACTLY.
+    check("fifo-parity", 64,
+          |r: &mut Pcg32| {
+              let max_batch = 1 + r.below(4) as usize;
+              let reqs: Vec<(u64, &str, usize)> =
+                  (0..(1 + r.below(30) as u64))
+                      .map(|id| (id, if r.f32() < 0.25 { "dense" }
+                                     else { *r.choice(&TIERS) },
+                                 if r.f32() < 0.5 { 4 } else { 8 }))
+                      .collect();
+              (max_batch, reqs)
+          },
+          |(max_batch, reqs)| {
+              let q = RequestQueue::with_policy(1024, SchedPolicy::Fifo);
+              let mut keep = Vec::new();
+              for (id, tier, steps) in reqs {
+                  q.push(env(&mut keep, *id, tier, *steps))
+                      .map_err(|e| e.to_string())?;
+              }
+              // reference model over (id, tier, steps)
+              let mut model: Vec<(u64, &str, usize)> = reqs.clone();
+              let mut drained = 0usize;
+              while drained < reqs.len() {
+                  let b = q.pop_batch(*max_batch,
+                                      Duration::from_millis(50),
+                                      Duration::ZERO)
+                      .ok_or("closed")?;
+                  if b.is_empty() {
+                      return Err("timeout before drain".into());
+                  }
+                  let mut expect: Vec<u64> = Vec::new();
+                  let (_, htier, hsteps) = model[0];
+                  let mut rest = Vec::new();
+                  for &(id, tier, steps) in model.iter() {
+                      if expect.len() < *max_batch && tier == htier
+                          && steps == hsteps
+                      {
+                          expect.push(id);
+                      } else {
+                          rest.push((id, tier, steps));
+                      }
+                  }
+                  model = rest;
+                  let got: Vec<u64> =
+                      b.iter().map(|e| e.request.id).collect();
+                  if got != expect {
+                      return Err(format!(
+                          "fifo divergence: got {got:?}, reference \
+                           {expect:?}"));
+                  }
+                  drained += b.len();
+              }
+              Ok(())
+          });
+}
+
+#[test]
+fn prop_no_class_starves_under_adversarial_arrivals() {
+    // threshold 0 makes every cheaper class bypass-eligible on every
+    // pop; a continuous sparse arrival stream is the worst case for
+    // the dense head.  The streak cap must still serve it within
+    // MAX_BYPASS_STREAK + 1 pops.
+    check("no-starvation", 32,
+          |r: &mut Pcg32| {
+              let dense_steps = if r.f32() < 0.5 { 4 } else { 8 };
+              let sparse_tier = *r.choice(&TIERS);
+              (dense_steps, sparse_tier)
+          },
+          |(dense_steps, sparse_tier)| {
+              let q = RequestQueue::with_policy(
+                  1024,
+                  SchedPolicy::ClassAware {
+                      bypass_threshold: Duration::ZERO,
+                  });
+              let mut keep = Vec::new();
+              q.push(env(&mut keep, 1000, "dense", *dense_steps))
+                  .map_err(|e| e.to_string())?;
+              let mut next = 0u64;
+              for pops in 1.. {
+                  q.push(env(&mut keep, next, sparse_tier, 4))
+                      .map_err(|e| e.to_string())?;
+                  next += 1;
+                  let b = q.pop_batch(1, Duration::from_millis(50),
+                                      Duration::ZERO)
+                      .ok_or("closed")?;
+                  if b.is_empty() {
+                      return Err("timeout".into());
+                  }
+                  if b[0].request.tier == "dense" {
+                      return Ok(()); // served within the bound below
+                  }
+                  if pops > MAX_BYPASS_STREAK as usize + 1 {
+                      return Err(format!(
+                          "dense head still starved after {pops} \
+                           pops (cap {MAX_BYPASS_STREAK})"));
+                  }
+              }
+              unreachable!()
           });
 }
 
@@ -382,6 +571,93 @@ fn pool_survives_panicking_processor() {
     mp.queue.close();
     drop(mp.pool);
     assert_eq!(mp.metrics.lock().unwrap().completed, 4);
+}
+
+/// Mock that "compiles" once per distinct compatibility class it
+/// sees, like a real engine's per-shard executable cache: the pool's
+/// `counters()` rollup then reports distinct-classes-served per shard.
+struct CompileCountingProcessor {
+    seen: HashSet<(String, usize)>,
+    total_compiles: Arc<AtomicU64>,
+}
+
+impl BatchProcessor for CompileCountingProcessor {
+    fn process(&mut self, reqs: &[GenRequest])
+               -> anyhow::Result<Vec<(Tensor, RequestMetrics)>> {
+        let key = (reqs[0].tier.clone(), reqs[0].steps);
+        if self.seen.insert(key) {
+            self.total_compiles.fetch_add(1, Ordering::SeqCst);
+        }
+        Ok(reqs.iter()
+            .map(|r| (Tensor::zeros(&[1]), RequestMetrics {
+                queue_ms: r.queue_wait_ms(),
+                compute_ms: 0.0,
+                steps: r.steps,
+                batch_size: reqs.len(),
+            }))
+            .collect())
+    }
+
+    fn counters(&self) -> (u64, u64) {
+        (self.seen.len() as u64, 0)
+    }
+}
+
+#[test]
+fn warm_shard_affinity_compiles_each_class_about_once() {
+    // 3 shards, 3 classes, requests submitted strictly one at a time:
+    // after each class's first (cold) route, the dispatcher must keep
+    // routing it to a shard that already compiled it.  Without
+    // affinity the steady state drifts toward classes x shards = 9
+    // compiles; with it, compiles stay at the number of distinct
+    // classes (one extra tolerated for an idle-token race on the very
+    // first repeat).
+    let shards = 3;
+    let queue = Arc::new(RequestQueue::new(1024));
+    let metrics = Arc::new(Mutex::new(ServerMetrics::new()));
+    let total = Arc::new(AtomicU64::new(0));
+    let t2 = Arc::clone(&total);
+    let pool = EnginePool::start_with(
+        shards, Arc::clone(&queue), Arc::clone(&metrics), 2,
+        Duration::ZERO,
+        move |_shard| Ok(CompileCountingProcessor {
+            seen: HashSet::new(),
+            total_compiles: Arc::clone(&t2),
+        }))
+        .expect("pool start");
+    let classes: [(&str, usize); 3] =
+        [("s90", 4), ("s97", 4), ("dense", 8)];
+    for round in 0..8u64 {
+        for (ci, (tier, steps)) in classes.iter().enumerate() {
+            let (tx, rx) = channel();
+            queue.push(Envelope {
+                request: GenRequest::new(round * 10 + ci as u64, 0, 1,
+                                         *steps, tier),
+                reply: tx,
+            }).unwrap();
+            rx.recv().unwrap().unwrap(); // strictly sequential
+            // let the shard's idle announcement land before the next
+            // dispatch decision (de-races the affinity pick)
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    queue.close();
+    let stats = pool.stats().to_vec();
+    drop(pool); // joins every shard: counter stores are done
+    let per_shard: u64 = stats.iter()
+        .map(|s| s.compiles.load(Ordering::Relaxed))
+        .sum();
+    let compiled = total.load(Ordering::SeqCst);
+    assert_eq!(per_shard, compiled,
+               "shard rollup must agree with the mock's global count");
+    assert!(compiled >= classes.len() as u64,
+            "every class compiles at least once");
+    assert!(compiled <= classes.len() as u64 + 1,
+            "steady-state compiles must track distinct classes \
+             (got {compiled} for {} classes on {shards} shards — \
+              N x duplication means affinity is broken)",
+            classes.len());
+    assert_eq!(metrics.lock().unwrap().completed, 24);
 }
 
 #[test]

@@ -19,6 +19,7 @@ fn tiny_serve() -> ServeConfig {
         batch_window_ms: 20,
         queue_capacity: 64,
         num_shards: 1, // single-shard: the seed's deterministic config
+        ..ServeConfig::default()
     }
 }
 
