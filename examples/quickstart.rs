@@ -5,6 +5,13 @@
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
+//!
+//! This example drives the `sla2::runtime` layer directly and takes
+//! no `ServeConfig` flags.  For the serving stack — sharded engine
+//! pool, class-aware scheduler, streaming chunk delivery, TCP
+//! frontend — see `examples/serve_batch.rs`, `sla2 serve-net` and the
+//! `sla2-stream-client` binary (docs/ARCHITECTURE.md has the full
+//! picture).
 
 use anyhow::Result;
 use sla2::costmodel::{device, flops};

@@ -1,11 +1,26 @@
 //! Batched serving demo: start the coordinator, fire a wave of
-//! generation requests with mixed sparsity tiers, and report latency /
-//! throughput / batching metrics plus quality proxies of the clips.
+//! generation requests with mixed sparsity tiers, report latency /
+//! throughput / batching metrics plus quality proxies of the clips,
+//! then demonstrate the streaming submit path (chunked clip delivery
+//! and its bit-for-bit parity with the one-shot reply).
+//!
+//! All `ServeConfig` knobs are CLI flags; the serving-relevant ones:
+//!
+//! * `--num-shards N` — engine-pool width (default: cores - 1)
+//! * `--scheduler class|fifo` — class-aware head-of-line bypass
+//!   (default) or the seed's strict-FIFO batching
+//! * `--bypass-threshold-ms MS` — how long a cheaper class's head must
+//!   age before it may jump a dense backlog (class mode, default 50)
+//! * `--chunk-frames N` — frames per streamed chunk (default 1;
+//!   0 = whole clip in one chunk)
+//! * `--stream-buffer-chunks N` — per-stream backpressure bound
+//! * `--listen-addr HOST:PORT` — also serve the JSON-over-TCP
+//!   protocol (see `sla2 serve-net` / `sla2-stream-client`)
 //!
 //! ```bash
 //! cargo run --release --example serve_batch -- \
 //!     --model dit-tiny --requests 8 --max-batch 2 --steps 6 \
-//!     --num-shards 2
+//!     --num-shards 2 --scheduler class
 //! ```
 
 use anyhow::Result;
@@ -31,10 +46,13 @@ fn main() -> Result<()> {
     let tiers = ["s90", "s90", "s90", "dense"];
     let mut rng = Pcg32::seeded(11);
     let mut handles = Vec::new();
+    let mut classes = Vec::new();
     for i in 0..n_requests {
         let tier = tiers[i % tiers.len()];
-        match server.submit(rng.below(10) as i32, 40 + i as u64,
-                            serve.sample_steps, tier) {
+        let class = rng.below(10) as i32;
+        classes.push(class);
+        match server.submit(class, 40 + i as u64, serve.sample_steps,
+                            tier) {
             Ok(rx) => handles.push((i, tier, rx)),
             Err(e) => println!("  request {i} rejected: {e}"),
         }
@@ -58,6 +76,60 @@ fn main() -> Result<()> {
             metrics::sharpness(clip),
             metrics::motion_smoothness(clip),
             metrics::subject_consistency(clip));
+    }
+
+    // --- streaming submit: chunked delivery of the same workload ----
+    // The stream yields frame-range chunks as the engine finishes
+    // them; reassembling them must reproduce the one-shot clip
+    // byte-for-byte (same seed => same clip, whatever the transport).
+    let Some(&class0) = classes.first() else {
+        server.shutdown();
+        return Ok(());
+    };
+    let (seed, steps) = (40, serve.sample_steps);
+    println!("\nstreaming the seed-{seed} clip again \
+              (chunk_frames={}):", serve.chunk_frames);
+    let t0 = std::time::Instant::now();
+    let stream = server.submit_streaming(class0, seed, steps, "s90")
+        .map_err(|e| anyhow::anyhow!("streaming submit: {e}"))?;
+    let stream_id = stream.id();
+    let mut chunks = Vec::new();
+    while let Some(item) = stream.recv() {
+        let chunk = item?;
+        println!("  chunk {}: frames [{}, {}) of {} at +{:.1} ms{}",
+                 chunk.seq, chunk.frame_start, chunk.frame_end,
+                 chunk.total_frames,
+                 t0.elapsed().as_secs_f64() * 1e3,
+                 if chunk.last { " (last)" } else { "" });
+        let last = chunk.last;
+        chunks.push(chunk);
+        if last {
+            break;
+        }
+    }
+    let streamed =
+        sla2::coordinator::stream::assemble_response(stream_id, chunks)?;
+    // bitwise parity only holds between runs of the SAME batch-size
+    // executable (distinct XLA compiles need not match bit-for-bit —
+    // see docs/ARCHITECTURE.md "Determinism contract"), so gate the
+    // check on equal batch sizes instead of hard-failing a correct
+    // server that batched the wave differently.
+    match done.iter().find(|(i, _, _)| *i == 0) {
+        Some((_, _, first))
+            if first.metrics.batch_size == streamed.metrics.batch_size =>
+        {
+            if first.clip == streamed.clip {
+                println!("  reassembled stream == one-shot clip ✓");
+            } else {
+                anyhow::bail!("stream diverged from the one-shot clip \
+                               at equal batch size");
+            }
+        }
+        Some((_, _, first)) => println!(
+            "  (bitwise check skipped: one-shot ran at batch {}, \
+             stream at batch {} — different executables)",
+            first.metrics.batch_size, streamed.metrics.batch_size),
+        None => {}
     }
 
     println!("\nserver metrics: {}", server.metrics_snapshot());

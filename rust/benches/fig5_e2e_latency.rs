@@ -14,6 +14,10 @@
 //!     front of cheap sparse requests, served under the `fifo` vs the
 //!     `class` scheduler: per-tier p50/p99 queue wait shows what the
 //!     class-aware bypass buys.
+//!   * **Streaming first-chunk latency (measured)** — the chunked
+//!     reply path (`submit_streaming`) vs the monolithic one-shot
+//!     reply: when the first frames reach the client vs the full clip
+//!     (`stream_ttfc` rows).
 //!
 //! Run: `cargo bench --bench fig5_e2e_latency [--json PATH|none]`
 //! Writes `BENCH_fig5_e2e.json` by default.
@@ -248,6 +252,7 @@ fn main() -> Result<()> {
             num_shards: 1,
             scheduler: scheduler.into(),
             bypass_threshold_ms: 10,
+            ..ServeConfig::default()
         };
         let server = match Server::start(&artifacts, serve) {
             Ok(s) => s,
@@ -308,6 +313,87 @@ fn main() -> Result<()> {
         server.shutdown();
     }
     t.print();
+
+    // ---------------- streaming time-to-first-chunk ------------------
+    // Chunked delivery vs the monolithic reply: submit the same
+    // request one-shot and streaming, and measure when the FIRST
+    // frames reach the client vs when the full clip does.  In-process
+    // both land close together (chunks of one sub-batch emit
+    // back-to-back); the interesting spread appears when the batch
+    // planner splits a dispatched batch, because earlier sub-batches
+    // stream out while later ones are still denoising.
+    let chunk_frames = args.usize("chunk-frames", 1);
+    println!("\n=== Fig. 5 companion: streaming first-chunk latency \
+              (model {model}, tier s90, {steps} steps, chunk_frames \
+              {chunk_frames}) ===\n");
+    let mut t = Table::new(&["mode", "first data ms", "full clip ms",
+                             "chunks"]);
+    let serve = ServeConfig {
+        model: model.clone(),
+        variant: "sla2".into(),
+        tier: "s90".into(),
+        sample_steps: steps,
+        max_batch: 1,
+        batch_window_ms: 0,
+        queue_capacity: 8,
+        num_shards: 1,
+        chunk_frames,
+        ..ServeConfig::default()
+    };
+    match Server::start(&artifacts, serve) {
+        Err(err) => println!("  SKIP ({err:#})"),
+        Ok(server) => {
+            // warm the executable outside the timers
+            if let Ok(rx) = server.submit(1, 7, steps, "s90") {
+                let _ = rx.recv();
+            }
+            // one-shot reference
+            let t0 = Instant::now();
+            let resp = server.submit(1, 31, steps, "s90")
+                .ok().and_then(|rx| rx.recv().ok());
+            let oneshot_ms = t0.elapsed().as_secs_f64() * 1e3;
+            if let Some(Ok(_)) = resp {
+                t.row(vec!["oneshot".into(),
+                           format!("{oneshot_ms:.1}"),
+                           format!("{oneshot_ms:.1}"), "1".into()]);
+                json_rows.push(Json::obj()
+                    .push("section", "stream_ttfc")
+                    .push("mode", "oneshot")
+                    .push("first_data_ms", oneshot_ms)
+                    .push("full_clip_ms", oneshot_ms)
+                    .push("chunks", 1usize));
+            }
+            // streaming: same seed, chunked delivery
+            let t0 = Instant::now();
+            if let Ok(stream) = server.submit_streaming(1, 31, steps,
+                                                        "s90") {
+                let mut first_ms = None;
+                let mut chunks = 0usize;
+                while let Some(Ok(chunk)) = stream.recv() {
+                    first_ms.get_or_insert_with(
+                        || t0.elapsed().as_secs_f64() * 1e3);
+                    chunks += 1;
+                    if chunk.last {
+                        break;
+                    }
+                }
+                let full_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let first_ms = first_ms.unwrap_or(full_ms);
+                t.row(vec!["stream".into(), format!("{first_ms:.1}"),
+                           format!("{full_ms:.1}"),
+                           format!("{chunks}")]);
+                json_rows.push(Json::obj()
+                    .push("section", "stream_ttfc")
+                    .push("mode", "stream")
+                    .push("chunk_frames", chunk_frames)
+                    .push("first_data_ms", first_ms)
+                    .push("full_clip_ms", full_ms)
+                    .push("chunks", chunks));
+            }
+            server.shutdown();
+            t.print();
+        }
+    }
 
     if let Some(path) = args.json_path("BENCH_fig5_e2e.json") {
         let report = bench::report("fig5_e2e", json_rows);

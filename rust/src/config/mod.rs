@@ -108,6 +108,15 @@ pub struct ServeConfig {
     /// class mode only: how long a cheaper class's head must have
     /// waited before it may jump a more expensive class at the head
     pub bypass_threshold_ms: u64,
+    /// TCP frontend bind address (e.g. `"127.0.0.1:7341"`, port 0 for
+    /// an ephemeral port); empty = in-process API only, no listener
+    pub listen_addr: String,
+    /// frames per streamed [`ClipChunk`](crate::coordinator::ClipChunk);
+    /// 0 = the whole clip as a single chunk
+    pub chunk_frames: usize,
+    /// chunks buffered per stream before the producer blocks
+    /// (bounded backpressure; floored at 1)
+    pub stream_buffer_chunks: usize,
 }
 
 impl Default for ServeConfig {
@@ -123,6 +132,9 @@ impl Default for ServeConfig {
             num_shards: default_num_shards(),
             scheduler: "class".into(),
             bypass_threshold_ms: 50,
+            listen_addr: String::new(),
+            chunk_frames: 1,
+            stream_buffer_chunks: 8,
         }
     }
 }
@@ -142,6 +154,11 @@ impl ServeConfig {
             scheduler: args.str("scheduler", &d.scheduler),
             bypass_threshold_ms: args.u64("bypass-threshold-ms",
                                           d.bypass_threshold_ms),
+            listen_addr: args.str("listen-addr", &d.listen_addr),
+            chunk_frames: args.usize("chunk-frames", d.chunk_frames),
+            stream_buffer_chunks:
+                args.usize("stream-buffer-chunks",
+                           d.stream_buffer_chunks).max(1),
         }
     }
 
@@ -166,6 +183,10 @@ impl ServeConfig {
             scheduler: s("scheduler", &d.scheduler),
             bypass_threshold_ms: u("bypass_threshold_ms",
                                    d.bypass_threshold_ms as usize) as u64,
+            listen_addr: s("listen_addr", &d.listen_addr),
+            chunk_frames: u("chunk_frames", d.chunk_frames),
+            stream_buffer_chunks:
+                u("stream_buffer_chunks", d.stream_buffer_chunks).max(1),
         }
     }
 }
@@ -283,6 +304,29 @@ mod tests {
         let s = ServeConfig::from_json(&j);
         assert_eq!(s.scheduler, "fifo");
         assert_eq!(s.bypass_threshold_ms, 10);
+    }
+
+    #[test]
+    fn streaming_knobs_parse_with_defaults() {
+        let d = ServeConfig::default();
+        assert_eq!(d.listen_addr, "");
+        assert_eq!(d.chunk_frames, 1);
+        assert_eq!(d.stream_buffer_chunks, 8);
+        let a = Args::parse_from(
+            ["--listen-addr", "127.0.0.1:0", "--chunk-frames", "2",
+             "--stream-buffer-chunks", "0"].map(String::from));
+        let s = ServeConfig::from_args(&a);
+        assert_eq!(s.listen_addr, "127.0.0.1:0");
+        assert_eq!(s.chunk_frames, 2);
+        assert_eq!(s.stream_buffer_chunks, 1,
+                   "buffer must floor at 1 chunk");
+        let j = Json::parse(
+            r#"{"listen_addr":"0.0.0.0:9000","chunk_frames":0,
+                "stream_buffer_chunks":4}"#).unwrap();
+        let s = ServeConfig::from_json(&j);
+        assert_eq!(s.listen_addr, "0.0.0.0:9000");
+        assert_eq!(s.chunk_frames, 0); // 0 = whole clip in one chunk
+        assert_eq!(s.stream_buffer_chunks, 4);
     }
 
     #[test]

@@ -69,6 +69,23 @@ impl Engine {
     /// Returns `(clip, metrics)` per request, input order preserved.
     pub fn generate(&self, reqs: &[GenRequest])
                     -> Result<Vec<(Tensor, RequestMetrics)>> {
+        let mut out = Vec::with_capacity(reqs.len());
+        self.generate_streaming(reqs, &mut |_, clip, rm| {
+            out.push((clip, rm));
+        })?;
+        Ok(out)
+    }
+
+    /// Streaming core of [`Engine::generate`]: run the batch plan and
+    /// hand each request's `(index, clip, metrics)` to `emit` the
+    /// moment its sub-batch finishes sampling — requests in the first
+    /// sub-batch are delivered while later sub-batches are still
+    /// denoising.  Emission is in input order; an error aborts the
+    /// remaining sub-batches but everything already emitted stands.
+    pub fn generate_streaming(
+        &self, reqs: &[GenRequest],
+        emit: &mut dyn FnMut(usize, Tensor, RequestMetrics))
+        -> Result<()> {
         let first = reqs.first().context("empty batch")?;
         let tier = &first.tier;
         let variant = self.variant_for_tier(tier);
@@ -80,12 +97,10 @@ impl Engine {
         let plan = plan_batches(reqs.len(),
                                 if sizes.contains(&1) { &sizes }
                                 else { &[1] });
-        let mut out = Vec::with_capacity(reqs.len());
         let mut cursor = 0;
         let dispatch_start = Instant::now();
         for batch_size in plan {
             let chunk = &reqs[cursor..cursor + batch_size];
-            cursor += batch_size;
             let artifact = denoise_artifact_name(
                 &self.model.name, variant, tier, batch_size);
             let t0 = Instant::now();
@@ -96,8 +111,8 @@ impl Engine {
                 t0.duration_since(dispatch_start).as_secs_f64() * 1e3;
             let clips = self.sample_batch(&artifact, chunk)?;
             let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
-            for (req, clip) in chunk.iter().zip(clips) {
-                out.push((clip, RequestMetrics {
+            for (j, (req, clip)) in chunk.iter().zip(clips).enumerate() {
+                emit(cursor + j, clip, RequestMetrics {
                     // queue wait measured directly at dequeue (stamped
                     // by the queue) — never negative, never
                     // reconstructed from wall-clock arithmetic
@@ -105,10 +120,11 @@ impl Engine {
                     compute_ms,
                     steps: req.steps,
                     batch_size,
-                }));
+                });
             }
+            cursor += batch_size;
         }
-        Ok(out)
+        Ok(())
     }
 
     /// The diffusion sampling loop for one fixed-size sub-batch.
@@ -163,6 +179,13 @@ impl BatchProcessor for Engine {
     fn process(&mut self, reqs: &[GenRequest])
                -> Result<Vec<(Tensor, RequestMetrics)>> {
         self.generate(reqs)
+    }
+
+    fn process_streaming(
+        &mut self, reqs: &[GenRequest],
+        emit: &mut dyn FnMut(usize, Tensor, RequestMetrics))
+        -> Result<()> {
+        self.generate_streaming(reqs, emit)
     }
 
     fn counters(&self) -> (u64, u64) {

@@ -1,7 +1,9 @@
 //! Server-level metrics: counters + latency distributions + the
 //! per-shard rollup (compiles, executions, batches, utilization) +
 //! scheduler observability (per-class queue depths, warm/cold
-//! dispatch routing, compile-cache dedup).
+//! dispatch routing, compile-cache dedup) + streaming delivery
+//! (streams opened, chunks sent, cancelled streams, first-chunk
+//! latency).
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -24,6 +26,14 @@ pub struct ServerMetrics {
     pub queue_ms: Online,
     pub compute_ms: Online,
     pub batch_size: Online,
+    /// streaming submits accepted (subset of `requests`)
+    pub streams: u64,
+    /// chunks delivered across all streams
+    pub chunks_sent: u64,
+    /// streams abandoned by their consumer before/during delivery
+    pub cancelled_streams: u64,
+    /// submit -> first-chunk-delivery latency, streaming requests only
+    pub first_chunk_ms: Online,
     /// per-shard counters, attached by the engine pool at startup
     shards: Vec<Arc<ShardStats>>,
     /// dispatcher routing counters, attached by the engine pool
@@ -51,6 +61,10 @@ impl ServerMetrics {
             queue_ms: Online::new(),
             compute_ms: Online::new(),
             batch_size: Online::new(),
+            streams: 0,
+            chunks_sent: 0,
+            cancelled_streams: 0,
+            first_chunk_ms: Online::new(),
             shards: Vec::new(),
             dispatch: None,
             queue: None,
@@ -85,6 +99,19 @@ impl ServerMetrics {
         self.queue_ms.push(queue_ms);
     }
 
+    /// A stream finished delivery: `chunks` frames-ranges were sent,
+    /// the first of them `first_chunk_ms` after submit.
+    pub fn record_stream_delivery(&mut self, chunks: usize,
+                                  first_chunk_ms: f64) {
+        self.chunks_sent += chunks as u64;
+        self.first_chunk_ms.push(first_chunk_ms);
+    }
+
+    /// A stream's consumer vanished before (or during) delivery.
+    pub fn record_cancelled_stream(&mut self) {
+        self.cancelled_streams += 1;
+    }
+
     pub fn throughput_rps(&self) -> f64 {
         self.completed as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
     }
@@ -109,7 +136,12 @@ impl ServerMetrics {
             .push("mean_batch_size", self.batch_size.mean())
             .push("mean_queue_ms", self.queue_ms.mean())
             .push("mean_compute_ms", self.compute_ms.mean())
-            .push("throughput_rps", self.throughput_rps());
+            .push("throughput_rps", self.throughput_rps())
+            .push("streaming", Json::obj()
+                .push("streams", self.streams as usize)
+                .push("chunks_sent", self.chunks_sent as usize)
+                .push("cancelled_streams", self.cancelled_streams as usize)
+                .push("mean_first_chunk_ms", self.first_chunk_ms.mean()));
         if !self.shards.is_empty() {
             j = j.push("num_shards", self.shards.len())
                 .push("compiles", compiles as usize)
@@ -190,6 +222,23 @@ mod tests {
     }
 
     #[test]
+    fn streaming_section_tracks_deliveries_and_cancels() {
+        let mut m = ServerMetrics::new();
+        m.streams = 3;
+        m.record_stream_delivery(4, 12.0);
+        m.record_stream_delivery(2, 8.0);
+        m.record_cancelled_stream();
+        let s = m.snapshot();
+        let st = s.get("streaming").unwrap();
+        assert_eq!(st.get("streams").unwrap().as_usize(), Some(3));
+        assert_eq!(st.get("chunks_sent").unwrap().as_usize(), Some(6));
+        assert_eq!(st.get("cancelled_streams").unwrap().as_usize(),
+                   Some(1));
+        assert!((st.get("mean_first_chunk_ms").unwrap().as_f64()
+                     .unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn snapshot_reports_scheduler_and_dispatch_sections() {
         use crate::coordinator::queue::{RequestQueue, SchedPolicy};
         use crate::coordinator::request::{Envelope, GenRequest};
@@ -206,10 +255,8 @@ mod tests {
                 bypass_threshold: Duration::from_millis(50),
             }));
         let (tx, _rx) = std::sync::mpsc::channel();
-        q.push(Envelope {
-            request: GenRequest::new(1, 0, 1, 8, "s90"),
-            reply: tx,
-        }).unwrap();
+        q.push(Envelope::oneshot(GenRequest::new(1, 0, 1, 8, "s90"), tx))
+            .unwrap();
         m.attach_queue(Arc::clone(&q));
 
         let s = m.snapshot();

@@ -6,7 +6,13 @@
 //! engine pool:
 //!
 //! ```text
-//!  clients ──submit()──▶ RequestQueue (bounded, backpressure)
+//!  remote clients ──frames──▶ net::NetFrontend (JSON-over-TCP)
+//!                                  │ submit / cancel / metrics verbs
+//!                                  ▼
+//!  clients ──submit() / submit_streaming()──▶ server::Gateway
+//!                            │
+//!                            ▼
+//!                     RequestQueue (bounded, backpressure)
 //!                            │  class-keyed buckets (tier, steps);
 //!                            │  pop_batch serves ONE class per the
 //!                            │  SchedPolicy (fifo | class-aware
@@ -29,10 +35,14 @@
 //!              │             │             │
 //!              └─────────────┴─────────────┘
 //!                            ▼
-//!          per-request response channels + ServerMetrics
+//!          per-request reply sinks (request::ReplySink):
+//!          one-shot channels AND bounded chunk streams
+//!          (stream::ClipStream — frame-range ClipChunks with
+//!           cancel-on-drop), + ServerMetrics
 //!          (global counters + per-shard compiles/executions/
 //!           batches/utilization + per-class queue depths +
-//!           warm/cold dispatch routing + compile-cache dedup)
+//!           warm/cold dispatch routing + compile-cache dedup +
+//!           streaming chunk/first-chunk/cancel stats)
 //! ```
 //!
 //! **Shard model** — `ServeConfig::num_shards` worker threads (default:
@@ -69,6 +79,17 @@
 //! snapshot` rolls them up next to the global latency distributions,
 //! per-class queue depths and the process-wide compile-cache stats.
 //!
+//! **Streaming** — every reply travels through a
+//! [`request::ReplySink`]: the classic one-shot channel, or a bounded
+//! [`stream::ClipStream`] of frame-range [`stream::ClipChunk`]s that
+//! the engine feeds as each sub-batch finishes (the one-shot path is
+//! itself a thin wrapper over the chunking machinery, so both share
+//! invariants).  Dropping a stream cancels its request: the shard
+//! stops emitting, all-cancelled batches skip compute entirely, and
+//! the abandoned slot is freed.  The [`net`] module exposes submit /
+//! streaming chunks / cancel / metrics over length-prefixed
+//! JSON-over-TCP (`ServeConfig::listen_addr`).
+//!
 //! Requests are whole video generations; all requests in a batch share
 //! the timestep schedule (diffusion jobs are fixed-length, so static
 //! per-batch scheduling is optimal — there is no analogue of
@@ -78,16 +99,20 @@ pub mod batcher;
 pub mod engine;
 pub mod loadgen;
 pub mod metrics;
+pub mod net;
 pub mod pool;
 pub mod queue;
 pub mod request;
 pub mod server;
+pub mod stream;
 
 pub use batcher::plan_batches;
 pub use engine::Engine;
 pub use loadgen::{run_trace, TraceConfig, TraceReport};
 pub use metrics::ServerMetrics;
+pub use net::{NetClient, NetFrontend};
 pub use pool::{BatchProcessor, DispatchStats, EnginePool, ShardStats};
 pub use queue::{ClassKey, RequestQueue, SchedPolicy};
-pub use request::{GenRequest, GenResponse, RequestMetrics};
-pub use server::Server;
+pub use request::{GenRequest, GenResponse, ReplySink, RequestMetrics};
+pub use server::{Gateway, Server};
+pub use stream::{ClipChunk, ClipStream, StreamCancel};

@@ -1,0 +1,712 @@
+//! TCP network frontend: length-prefixed JSON framing over the
+//! [`Gateway`], plus the matching [`NetClient`].
+//!
+//! # Wire protocol (v1)
+//!
+//! Every message is a **frame**: a 4-byte big-endian unsigned length
+//! `n` (capped at [`MAX_FRAME_LEN`]) followed by exactly `n` bytes of
+//! UTF-8 JSON (the [`crate::util::json`] subset).  Frames flow both
+//! ways on one connection; the server multiplexes responses for every
+//! in-flight request onto the socket, tagged by request `id`.
+//! Numbers travel as JSON doubles, so integer fields (ids, seeds) are
+//! exact up to 2^53.
+//!
+//! Client -> server verbs (the `"op"` field):
+//!
+//! | op        | fields                                             |
+//! |-----------|----------------------------------------------------|
+//! | `submit`  | `class`, `seed`, `steps` (1..=[`MAX_NET_STEPS`]),  |
+//! |           | `tier`, `stream` (bool)                            |
+//! | `cancel`  | `id` — cancel an in-flight streaming request       |
+//! | `metrics` | none — request a metrics snapshot                  |
+//!
+//! Server -> client frames (the `"type"` field):
+//!
+//! * `accepted` / `rejected` — submit ack: `{id}` or `{error}`
+//!   (rejection = backpressure or shutdown).
+//! * `chunk` — one streamed frame range: `id`, `seq`, `frame_start`,
+//!   `frame_end`, `total_frames`, `last`, `frames` (tensor), and the
+//!   request `metrics`; chunks for an id arrive in `seq` order.
+//! * `done` — stream terminal: `{id, complete}`; `complete` is false
+//!   when the stream ended without its last chunk (cancel/failure).
+//! * `clip` — non-streaming result: `{id, clip, metrics}`.
+//! * `metrics` — `{snapshot}`.
+//! * `cancel_ok` — `{id, found}`.
+//! * `error` — `{error}` and, for request-scoped failures, `{id}`.
+//!   Framing-level errors (malformed JSON, oversized frame) close the
+//!   connection after this frame, since the byte stream can no longer
+//!   be trusted.
+//!
+//! Tensors are `{"shape": [..], "data": [f32 as double, ..]}` —
+//! lossless for f32 (every f32 is exactly representable as a double
+//! and the writer emits shortest-roundtrip decimals).
+//!
+//! Not covered (recorded in ROADMAP.md): TLS, authentication,
+//! compression, binary tensor payloads.
+//!
+//! # Threads
+//!
+//! One listener thread; per connection, a reader thread (this is the
+//! connection's request loop), one writer thread serializing outbound
+//! frames, and one short-lived pump thread per in-flight request
+//! moving chunks from its [`stream::ClipStream`] to the writer.  A
+//! dropped
+//! connection cancels every stream it still owns, so abandoned
+//! clients release their shard slots (see
+//! [`crate::coordinator::stream`]).
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use super::request::{GenResponse, RequestMetrics};
+use super::server::Gateway;
+use super::stream::{self, ClipChunk, StreamCancel};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Hard cap on a single frame (header `n`), both directions.  Far
+/// above any legitimate chunk on the testbed models; anything larger
+/// is treated as a protocol violation and closes the connection.
+pub const MAX_FRAME_LEN: usize = 16 * 1024 * 1024;
+
+/// Hard cap on a network submit's `steps`.  Frames are size-capped by
+/// [`MAX_FRAME_LEN`], but nothing else bounds per-request COMPUTE, and
+/// a denoise loop cannot be interrupted once it starts — an
+/// unvalidated `steps` would let one request pin a shard arbitrarily
+/// long.  Requests outside `1..=MAX_NET_STEPS` are rejected.
+pub const MAX_NET_STEPS: usize = 1024;
+
+// ---------------- framing ----------------------------------------------
+
+/// Write one length-prefixed JSON frame.
+pub fn write_frame(w: &mut impl Write, j: &Json) -> Result<()> {
+    let body = j.to_string();
+    anyhow::ensure!(body.len() <= MAX_FRAME_LEN,
+                    "frame of {} bytes exceeds the {} byte cap",
+                    body.len(), MAX_FRAME_LEN);
+    w.write_all(&(body.len() as u32).to_be_bytes())?;
+    w.write_all(body.as_bytes())?;
+    Ok(())
+}
+
+/// Read one frame.  `Ok(None)` = the peer closed cleanly between
+/// frames; `Err` = oversized length prefix, truncated frame, or
+/// malformed JSON (the caller should drop the connection — the byte
+/// stream cannot be resynchronized).
+pub fn read_frame(r: &mut impl Read, max_len: usize)
+                  -> Result<Option<Json>> {
+    let mut header = [0u8; 4];
+    // distinguish clean EOF (no header at all) from truncation
+    match r.read(&mut header)? {
+        0 => return Ok(None),
+        mut got => {
+            while got < 4 {
+                let n = r.read(&mut header[got..])?;
+                anyhow::ensure!(n > 0, "truncated frame header");
+                got += n;
+            }
+        }
+    }
+    let len = u32::from_be_bytes(header) as usize;
+    anyhow::ensure!(len <= max_len,
+                    "oversized frame: {len} bytes (cap {max_len})");
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("truncated frame body")?;
+    let text = std::str::from_utf8(&body).context("frame is not UTF-8")?;
+    let j = Json::parse(text)
+        .map_err(|e| anyhow::anyhow!("malformed frame: {e}"))?;
+    Ok(Some(j))
+}
+
+// ---------------- JSON <-> domain conversions ---------------------------
+
+pub fn tensor_to_json(t: &Tensor) -> Result<Json> {
+    let data: Vec<Json> =
+        t.f32s()?.iter().map(|v| Json::Num(*v as f64)).collect();
+    Ok(Json::obj()
+        .push("shape", t.shape.as_slice())
+        .push("data", data))
+}
+
+pub fn tensor_from_json(j: &Json) -> Result<Tensor> {
+    let shape = j.req("shape")?.as_usize_vec()
+        .context("tensor shape")?;
+    let data: Vec<f32> = j.req("data")?.as_arr()
+        .context("tensor data")?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as f32))
+        .collect::<Option<_>>()
+        .context("non-numeric tensor data")?;
+    Tensor::from_f32(&shape, data)
+}
+
+fn metrics_to_json(m: &RequestMetrics) -> Json {
+    Json::obj()
+        .push("queue_ms", m.queue_ms)
+        .push("compute_ms", m.compute_ms)
+        .push("steps", m.steps)
+        .push("batch_size", m.batch_size)
+}
+
+fn metrics_from_json(j: &Json) -> RequestMetrics {
+    let f = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let u = |k: &str| j.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+    RequestMetrics { queue_ms: f("queue_ms"), compute_ms: f("compute_ms"),
+                     steps: u("steps"), batch_size: u("batch_size") }
+}
+
+pub fn chunk_to_json(c: &ClipChunk) -> Result<Json> {
+    Ok(Json::obj()
+        .push("type", "chunk")
+        .push("id", c.id as usize)
+        .push("seq", c.seq)
+        .push("frame_start", c.frame_start)
+        .push("frame_end", c.frame_end)
+        .push("total_frames", c.total_frames)
+        .push("last", c.last)
+        .push("frames", tensor_to_json(&c.frames)?)
+        .push("metrics", metrics_to_json(&c.metrics)))
+}
+
+pub fn chunk_from_json(j: &Json) -> Result<ClipChunk> {
+    let u = |k: &str| -> Result<usize> {
+        j.req(k)?.as_usize().context(format!("chunk field {k}"))
+    };
+    Ok(ClipChunk {
+        id: u("id")? as u64,
+        seq: u("seq")?,
+        frame_start: u("frame_start")?,
+        frame_end: u("frame_end")?,
+        total_frames: u("total_frames")?,
+        last: j.req("last")?.as_bool().context("chunk field last")?,
+        frames: tensor_from_json(j.req("frames")?)?,
+        metrics: j.get("metrics").map(metrics_from_json)
+            .unwrap_or_default(),
+    })
+}
+
+fn error_frame(id: Option<u64>, msg: &str) -> Json {
+    let mut j = Json::obj().push("type", "error");
+    if let Some(id) = id {
+        j = j.push("id", id as usize);
+    }
+    j.push("error", msg)
+}
+
+// ---------------- server side -------------------------------------------
+
+/// The listening half: accepts connections and serves the protocol
+/// against a [`Gateway`].  Owned by [`super::server::Server`]; tests
+/// start one over a mock-backed gateway directly.
+pub struct NetFrontend {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl NetFrontend {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start the accept loop.
+    pub fn start(gateway: Arc<Gateway>, addr: &str) -> Result<NetFrontend> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("bind {addr}"))?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("sla2-net-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match conn {
+                        Ok(sock) => {
+                            let gw = Arc::clone(&gateway);
+                            // connection threads are detached: they
+                            // exit when their socket closes or the
+                            // queue shuts down
+                            let _ = std::thread::Builder::new()
+                                .name("sla2-net-conn".into())
+                                .spawn(move || handle_conn(gw, sock));
+                        }
+                        Err(e) => {
+                            crate::warn_!("accept failed: {e}");
+                        }
+                    }
+                }
+            })?;
+        Ok(NetFrontend { local_addr, stop,
+                         accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (port 0 resolved to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting.  Existing connections wind down on their own
+    /// when their sockets close or the server's queue shuts down.
+    pub fn shutdown(&mut self) {
+        if let Some(h) = self.accept_thread.take() {
+            self.stop.store(true, Ordering::Relaxed);
+            // the accept loop only observes `stop` on its next
+            // connection: poke it awake
+            let mut wake = self.local_addr;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
+            }
+            let _ = TcpStream::connect(wake);
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetFrontend {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One connection: read request frames, fan responses back through a
+/// single writer thread (one frame at a time, whatever request it
+/// belongs to).
+fn handle_conn(gw: Arc<Gateway>, sock: TcpStream) {
+    let _ = sock.set_nodelay(true);
+    let write_sock = match sock.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            crate::warn_!("connection clone failed: {e}");
+            return;
+        }
+    };
+    let (out_tx, out_rx) = channel::<Json>();
+    let writer = std::thread::Builder::new()
+        .name("sla2-net-write".into())
+        .spawn(move || {
+            let mut w = BufWriter::new(write_sock);
+            while let Ok(frame) = out_rx.recv() {
+                if write_frame(&mut w, &frame).is_err()
+                    || w.flush().is_err()
+                {
+                    break; // peer gone; reader will notice too
+                }
+            }
+        });
+    // streaming requests this connection still owns, by id — used by
+    // the `cancel` verb and the disconnect sweep
+    let active: Arc<Mutex<HashMap<u64, StreamCancel>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let mut reader = BufReader::new(sock);
+    loop {
+        match read_frame(&mut reader, MAX_FRAME_LEN) {
+            Ok(None) => break, // client closed
+            Ok(Some(req)) => {
+                handle_request(&gw, &req, &out_tx, &active);
+            }
+            Err(e) => {
+                // framing is broken: report and drop the connection
+                let _ = out_tx.send(error_frame(None, &format!("{e:#}")));
+                break;
+            }
+        }
+    }
+    // cancel-on-disconnect: whatever this client still had in flight
+    // is dead work now
+    for (_, cancel) in active.lock().unwrap().drain() {
+        cancel.cancel();
+    }
+    drop(out_tx);
+    if let Ok(w) = writer {
+        let _ = w.join();
+    }
+}
+
+fn handle_request(gw: &Arc<Gateway>, req: &Json, out_tx: &Sender<Json>,
+                  active: &Arc<Mutex<HashMap<u64, StreamCancel>>>) {
+    match req.get("op").and_then(|v| v.as_str()) {
+        Some("submit") => handle_submit(gw, req, out_tx, active),
+        Some("metrics") => {
+            let _ = out_tx.send(Json::obj()
+                .push("type", "metrics")
+                .push("snapshot", gw.metrics_snapshot()));
+        }
+        Some("cancel") => {
+            let id = req.get("id").and_then(|v| v.as_usize())
+                .unwrap_or(0) as u64;
+            let found = match active.lock().unwrap().get(&id) {
+                Some(c) => {
+                    c.cancel();
+                    true
+                }
+                None => false,
+            };
+            let _ = out_tx.send(Json::obj()
+                .push("type", "cancel_ok")
+                .push("id", id as usize)
+                .push("found", found));
+        }
+        Some(op) => {
+            let _ = out_tx.send(error_frame(None, &format!(
+                "unknown op {op:?} (valid: submit, cancel, metrics)")));
+        }
+        None => {
+            let _ = out_tx.send(error_frame(None, "request has no \"op\""));
+        }
+    }
+}
+
+fn handle_submit(gw: &Arc<Gateway>, req: &Json, out_tx: &Sender<Json>,
+                 active: &Arc<Mutex<HashMap<u64, StreamCancel>>>) {
+    let serve = gw.serve_config();
+    let class = req.get("class").and_then(|v| v.as_i64()).unwrap_or(0)
+        as i32;
+    let seed = req.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0)
+        as u64;
+    let steps = req.get("steps").and_then(|v| v.as_usize())
+        .unwrap_or(serve.sample_steps);
+    let tier = req.get("tier").and_then(|v| v.as_str())
+        .unwrap_or(&serve.tier).to_string();
+    let streaming = req.get("stream").and_then(|v| v.as_bool())
+        .unwrap_or(true);
+    if steps == 0 || steps > MAX_NET_STEPS {
+        let _ = out_tx.send(Json::obj()
+            .push("type", "rejected")
+            .push("error", format!(
+                "steps {steps} out of range (1..={MAX_NET_STEPS})")));
+        return;
+    }
+    if streaming {
+        match gw.submit_streaming(class, seed, steps, &tier) {
+            Ok(stream) => {
+                let id = stream.id();
+                active.lock().unwrap().insert(id, stream.cancel_handle());
+                let _ = out_tx.send(Json::obj()
+                    .push("type", "accepted")
+                    .push("id", id as usize));
+                let out = out_tx.clone();
+                let reg = Arc::clone(active);
+                let _ = std::thread::Builder::new()
+                    .name("sla2-net-pump".into())
+                    .spawn(move || {
+                        pump_stream(id, stream, &out);
+                        reg.lock().unwrap().remove(&id);
+                    });
+            }
+            Err(e) => {
+                let _ = out_tx.send(Json::obj()
+                    .push("type", "rejected")
+                    .push("error", format!("{e}")));
+            }
+        }
+    } else {
+        match gw.submit_tracked(class, seed, steps, &tier) {
+            Ok((id, rx)) => {
+                // ack with the real gateway id: clip/error frames are
+                // tagged with it, so pipelined one-shot submits on one
+                // connection stay correlatable even though pump
+                // threads race to the writer in completion order
+                let _ = out_tx.send(Json::obj()
+                    .push("type", "accepted")
+                    .push("id", id as usize));
+                let out = out_tx.clone();
+                let _ = std::thread::Builder::new()
+                    .name("sla2-net-pump".into())
+                    .spawn(move || {
+                        let frame = match rx.recv() {
+                            Ok(Ok(resp)) => clip_frame(&resp),
+                            Ok(Err(e)) => error_frame(Some(id),
+                                                      &format!("{e:#}")),
+                            Err(_) => error_frame(
+                                Some(id), "server dropped the request"),
+                        };
+                        let _ = out.send(frame);
+                    });
+            }
+            Err(e) => {
+                let _ = out_tx.send(Json::obj()
+                    .push("type", "rejected")
+                    .push("error", format!("{e}")));
+            }
+        }
+    }
+}
+
+fn clip_frame(resp: &GenResponse) -> Json {
+    match tensor_to_json(&resp.clip) {
+        Ok(t) => Json::obj()
+            .push("type", "clip")
+            .push("id", resp.id as usize)
+            .push("clip", t)
+            .push("metrics", metrics_to_json(&resp.metrics)),
+        Err(e) => error_frame(Some(resp.id), &format!("{e:#}")),
+    }
+}
+
+/// Move chunks from a [`ClipStream`] to the connection writer until
+/// the stream ends, then emit the `done` terminal.
+fn pump_stream(id: u64, stream: stream::ClipStream, out: &Sender<Json>) {
+    let mut complete = false;
+    while let Some(item) = stream.recv() {
+        match item {
+            Ok(chunk) => {
+                complete = chunk.last;
+                let frame = match chunk_to_json(&chunk) {
+                    Ok(f) => f,
+                    Err(e) => error_frame(Some(id), &format!("{e:#}")),
+                };
+                if out.send(frame).is_err() {
+                    return; // connection gone; drop cancels the stream
+                }
+            }
+            Err(e) => {
+                let _ = out.send(error_frame(Some(id), &format!("{e:#}")));
+                break;
+            }
+        }
+    }
+    let _ = out.send(Json::obj()
+        .push("type", "done")
+        .push("id", id as usize)
+        .push("complete", complete));
+}
+
+// ---------------- client side -------------------------------------------
+
+/// Minimal blocking client for the wire protocol, used by the
+/// `sla2-stream-client` binary and the integration tests.  Designed
+/// for sequential use: submit, then consume that request's frames;
+/// frames for other requests encountered while scanning are buffered
+/// and replayed in order.
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    pending: VecDeque<Json>,
+}
+
+impl NetClient {
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let sock = TcpStream::connect(addr)
+            .with_context(|| format!("connect {addr}"))?;
+        let _ = sock.set_nodelay(true);
+        let writer = sock.try_clone()?;
+        Ok(NetClient { reader: BufReader::new(sock), writer,
+                       pending: VecDeque::new() })
+    }
+
+    pub fn send(&mut self, frame: &Json) -> Result<()> {
+        write_frame(&mut self.writer, frame)
+    }
+
+    /// Next frame: replays buffered frames first, then reads the wire.
+    pub fn next_frame(&mut self) -> Result<Json> {
+        if let Some(f) = self.pending.pop_front() {
+            return Ok(f);
+        }
+        read_frame(&mut self.reader, MAX_FRAME_LEN)?
+            .context("connection closed")
+    }
+
+    /// Read until `pred` matches, buffering everything else in order.
+    fn wait_for(&mut self, pred: impl Fn(&Json) -> bool) -> Result<Json> {
+        for i in 0..self.pending.len() {
+            if pred(&self.pending[i]) {
+                return Ok(self.pending.remove(i).unwrap());
+            }
+        }
+        loop {
+            let f = read_frame(&mut self.reader, MAX_FRAME_LEN)?
+                .context("connection closed")?;
+            if pred(&f) {
+                return Ok(f);
+            }
+            self.pending.push_back(f);
+        }
+    }
+
+    /// Submit; `Ok(id)` on accept (streaming and one-shot submits both
+    /// ack with the gateway-allocated request id), `Err` on rejection.
+    pub fn submit(&mut self, class: i32, seed: u64, steps: usize,
+                  tier: &str, streaming: bool) -> Result<u64> {
+        self.send(&Json::obj()
+            .push("op", "submit")
+            .push("class", class as i64)
+            .push("seed", seed as f64)
+            .push("steps", steps)
+            .push("tier", tier)
+            .push("stream", streaming))?;
+        let ack = self.wait_for(|f| {
+            matches!(f.get("type").and_then(|v| v.as_str()),
+                     Some("accepted") | Some("rejected"))
+        })?;
+        match ack.get("type").and_then(|v| v.as_str()) {
+            Some("accepted") => Ok(ack.get("id")
+                .and_then(|v| v.as_usize()).unwrap_or(0) as u64),
+            _ => bail!("rejected: {}",
+                       ack.get("error").and_then(|v| v.as_str())
+                           .unwrap_or("unknown")),
+        }
+    }
+
+    /// Consume one stream to completion, invoking `on_chunk` per
+    /// chunk, and reassemble the clip (validating order and
+    /// completeness).
+    pub fn collect_stream_with(
+        &mut self, id: u64, mut on_chunk: impl FnMut(&ClipChunk))
+        -> Result<GenResponse> {
+        let of_id = move |f: &Json| {
+            f.get("id").and_then(|v| v.as_usize()).map(|v| v as u64)
+                == Some(id)
+        };
+        let mut chunks: Vec<ClipChunk> = Vec::new();
+        loop {
+            let f = self.wait_for(|f| {
+                of_id(f)
+                    && matches!(f.get("type").and_then(|v| v.as_str()),
+                                Some("chunk") | Some("done")
+                                | Some("error"))
+            })?;
+            match f.get("type").and_then(|v| v.as_str()) {
+                Some("chunk") => {
+                    let c = chunk_from_json(&f)?;
+                    on_chunk(&c);
+                    chunks.push(c);
+                }
+                Some("done") => {
+                    return stream::assemble_response(id, chunks);
+                }
+                _ => bail!("stream {id} failed: {}",
+                           f.get("error").and_then(|v| v.as_str())
+                               .unwrap_or("unknown")),
+            }
+        }
+    }
+
+    pub fn collect_stream(&mut self, id: u64) -> Result<GenResponse> {
+        self.collect_stream_with(id, |_| {})
+    }
+
+    /// Wait for one non-streaming submit's clip frame, matched by the
+    /// id its ack returned (pump threads answer in completion order,
+    /// not submit order).
+    pub fn collect_clip(&mut self, id: u64) -> Result<GenResponse> {
+        let f = self.wait_for(|f| {
+            f.get("id").and_then(|v| v.as_usize()).map(|v| v as u64)
+                == Some(id)
+                && matches!(f.get("type").and_then(|v| v.as_str()),
+                            Some("clip") | Some("error"))
+        })?;
+        match f.get("type").and_then(|v| v.as_str()) {
+            Some("clip") => Ok(GenResponse {
+                id,
+                clip: tensor_from_json(f.req("clip")?)?,
+                metrics: f.get("metrics").map(metrics_from_json)
+                    .unwrap_or_default(),
+            }),
+            _ => bail!("request {id} failed: {}",
+                       f.get("error").and_then(|v| v.as_str())
+                           .unwrap_or("unknown")),
+        }
+    }
+
+    /// Request and await a server metrics snapshot.
+    pub fn metrics_snapshot(&mut self) -> Result<Json> {
+        self.send(&Json::obj().push("op", "metrics"))?;
+        let f = self.wait_for(|f| {
+            f.get("type").and_then(|v| v.as_str()) == Some("metrics")
+        })?;
+        Ok(f.req("snapshot")?.clone())
+    }
+
+    /// Cancel an in-flight streaming request; `Ok(found)`.
+    pub fn cancel(&mut self, id: u64) -> Result<bool> {
+        self.send(&Json::obj()
+            .push("op", "cancel")
+            .push("id", id as usize))?;
+        let f = self.wait_for(|f| {
+            f.get("type").and_then(|v| v.as_str()) == Some("cancel_ok")
+                && f.get("id").and_then(|v| v.as_usize())
+                    .map(|v| v as u64) == Some(id)
+        })?;
+        Ok(f.get("found").and_then(|v| v.as_bool()).unwrap_or(false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip() {
+        let j = Json::obj().push("op", "metrics").push("x", 1.5);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &j).unwrap();
+        let mut r = Cursor::new(buf);
+        let back = read_frame(&mut r, MAX_FRAME_LEN).unwrap().unwrap();
+        assert_eq!(back, j);
+        // clean EOF after the frame
+        assert!(read_frame(&mut r, MAX_FRAME_LEN).unwrap().is_none());
+    }
+
+    #[test]
+    fn read_frame_rejects_oversized_and_malformed() {
+        // oversized: length prefix beyond the cap
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(64u32).to_be_bytes());
+        buf.extend_from_slice(&[b'{'; 64]);
+        let err = read_frame(&mut Cursor::new(&buf), 16).unwrap_err();
+        assert!(err.to_string().contains("oversized"), "{err}");
+        // malformed JSON body
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(3u32).to_be_bytes());
+        buf.extend_from_slice(b"{x}");
+        let err = read_frame(&mut Cursor::new(&buf), MAX_FRAME_LEN)
+            .unwrap_err();
+        assert!(err.to_string().contains("malformed"), "{err}");
+        // truncated body
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(10u32).to_be_bytes());
+        buf.extend_from_slice(b"{}");
+        assert!(read_frame(&mut Cursor::new(&buf), MAX_FRAME_LEN)
+                    .is_err());
+    }
+
+    #[test]
+    fn tensor_json_roundtrip_is_bit_exact() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(3);
+        let t = Tensor::randn(&[2, 3, 4], &mut rng);
+        // through the actual WIRE TEXT, not just the Json tree: the
+        // f32 -> double -> shortest-decimal -> double -> f32 path
+        // must be lossless
+        let text = tensor_to_json(&t).unwrap().to_string();
+        let back = tensor_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn chunk_json_roundtrip() {
+        let c = ClipChunk {
+            id: 7, seq: 2, frame_start: 2, frame_end: 3, total_frames: 4,
+            last: false,
+            frames: Tensor::from_f32(&[1, 2], vec![0.25, -1.5]).unwrap(),
+            metrics: RequestMetrics { queue_ms: 1.0, compute_ms: 2.0,
+                                      steps: 4, batch_size: 2 },
+        };
+        let text = chunk_to_json(&c).unwrap().to_string();
+        let back = chunk_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.seq, 2);
+        assert_eq!(back.frames, c.frames);
+        assert_eq!(back.metrics.batch_size, 2);
+        assert!(!back.last);
+    }
+}

@@ -22,6 +22,14 @@
 //! shard is still used the moment no warm one is idle — affinity is a
 //! preference, never a stall.
 //!
+//! **Streaming reply path** — `serve_batch` drives
+//! [`BatchProcessor::process_streaming`], so each request's clip is
+//! delivered through its [`ReplySink`] the moment its sub-batch
+//! finishes (chunked for streams, whole-clip for one-shot — both via
+//! the [`stream`] machinery).  A batch whose every stream was
+//! abandoned is skipped without compute, and per-invocation metrics
+//! are recorded on the emission stride.
+//!
 //! With `num_shards = 1` the pool degenerates to the old single
 //! engine-thread behavior: one consumer, strict FIFO-compatible
 //! batching, identical per-seed clips.
@@ -43,7 +51,8 @@ use anyhow::{Context, Result};
 
 use super::metrics::ServerMetrics;
 use super::queue::{ClassKey, RequestQueue};
-use super::request::{Envelope, GenRequest, GenResponse, RequestMetrics};
+use super::request::{Envelope, GenRequest, ReplySink, RequestMetrics};
+use super::stream;
 use crate::tensor::Tensor;
 
 /// What a shard needs to turn a batch of COMPATIBLE requests into
@@ -67,6 +76,26 @@ pub trait BatchProcessor {
     /// Cumulative (compiles, executions) for the metrics rollup.
     fn counters(&self) -> (u64, u64) {
         (0, 0)
+    }
+
+    /// Streaming variant: emit each request's `(index, clip, metrics)`
+    /// AS SOON AS IT IS READY instead of returning everything at the
+    /// end.  Emission must preserve input order and the `batch_size`
+    /// grouping contract of [`BatchProcessor::process`].  The default
+    /// delegates to `process` and emits the whole batch at completion,
+    /// so non-streaming processors (mocks, simple engines) need no
+    /// changes; [`crate::coordinator::Engine`] overrides it to emit
+    /// per sub-batch, which is what makes time-to-first-chunk shorter
+    /// than time-to-last-chunk for split batches.
+    fn process_streaming(
+        &mut self, reqs: &[GenRequest],
+        emit: &mut dyn FnMut(usize, Tensor, RequestMetrics))
+        -> Result<()> {
+        for (i, (clip, rm)) in self.process(reqs)?.into_iter().enumerate()
+        {
+            emit(i, clip, rm);
+        }
+        Ok(())
     }
 }
 
@@ -350,63 +379,137 @@ fn shard_loop<P: BatchProcessor>(shard: usize, mut proc: P,
 fn serve_batch<P: BatchProcessor>(proc: &mut P, batch: Vec<Envelope>,
                                   metrics: &Mutex<ServerMetrics>,
                                   stats: &ShardStats) {
+    // cancel fast path: a batch whose every consumer is gone is pure
+    // dead work — release the shard slot without touching the engine
+    if batch.iter().all(|e| e.reply.is_cancelled()) {
+        let mut m = metrics.lock().unwrap();
+        for _ in &batch {
+            m.record_cancelled_stream();
+        }
+        return; // dropping the envelopes ends the streams
+    }
     let reqs: Vec<GenRequest> =
         batch.iter().map(|e| e.request.clone()).collect();
     let t0 = Instant::now();
+    // delivery bookkeeping lives OUTSIDE the catch_unwind closure so a
+    // mid-batch panic still knows which requests were already served
+    let mut delivered = vec![false; batch.len()];
     // a panicking processor must not take the whole shard down: turn
-    // the panic into per-request errors and keep serving
-    let outcome = catch_unwind(AssertUnwindSafe(|| proc.process(&reqs)));
+    // the panic into per-request errors and keep serving.  Requests
+    // emitted before the panic keep their (already delivered) clips.
+    let outcome = {
+        let delivered = &mut delivered;
+        let batch = &batch;
+        let mut emitted = 0usize;
+        let mut next_invocation_start = 0usize;
+        catch_unwind(AssertUnwindSafe(move || {
+            let mut emit = |i: usize, clip: Tensor, rm: RequestMetrics| {
+                // one record per ENGINE INVOCATION: the batch-size
+                // planner may split a dispatched batch into
+                // sub-batches, each with its own compute_ms —
+                // emissions within a sub-batch are contiguous and
+                // share batch_size, so stride over them
+                if emitted == next_invocation_start {
+                    metrics.lock().unwrap().record_batch(
+                        rm.batch_size, rm.steps, rm.compute_ms);
+                    next_invocation_start += rm.batch_size.max(1);
+                }
+                emitted += 1;
+                if i >= batch.len() || delivered[i] {
+                    crate::warn_!("processor emitted bogus index {i} for \
+                                   a batch of {}", batch.len());
+                    return;
+                }
+                deliver(&batch[i], clip, rm, metrics);
+                delivered[i] = true;
+            };
+            proc.process_streaming(&reqs, &mut emit)
+        }))
+    };
     let elapsed = t0.elapsed();
     stats.busy_us.fetch_add(elapsed.as_micros() as u64, Ordering::Relaxed);
-    let results = match outcome {
-        Ok(Ok(r)) if r.len() == batch.len() => r,
-        Ok(Ok(r)) => {
-            fail_batch(batch, &format!(
-                "processor returned {} results for {} requests", r.len(),
-                reqs.len()));
-            return;
+    let failure = match outcome {
+        Ok(Ok(())) => {
+            if delivered.iter().all(|d| *d) {
+                None
+            } else {
+                Some("processor finished without emitting every \
+                      request".to_string())
+            }
         }
         Ok(Err(e)) => {
             crate::warn_!("batch failed: {e:#}");
-            fail_batch(batch, &format!("{e:#}"));
-            return;
+            Some(format!("{e:#}"))
         }
         Err(_) => {
             crate::warn_!("batch processor panicked");
-            fail_batch(batch, "batch processor panicked");
-            return;
+            Some("batch processor panicked".to_string())
         }
     };
-    stats.batches.fetch_add(1, Ordering::Relaxed);
-    stats.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
-    {
-        // record before replying (readers who saw a reply see the
-        // records), but keep the lock off the reply sends — the
-        // submit path contends on this same mutex
-        let mut m = metrics.lock().unwrap();
-        // one record per ENGINE INVOCATION: the batch-size planner
-        // may split a dispatched batch into sub-batches, each with
-        // its own compute_ms — results within a sub-batch are
-        // contiguous and share batch_size, so stride over them
-        let mut i = 0;
-        while i < results.len() {
-            let rm = &results[i].1;
-            m.record_batch(rm.batch_size, rm.steps, rm.compute_ms);
-            i += rm.batch_size.max(1);
-        }
-        for (_, rm) in &results {
-            m.record_completion(rm.queue_ms);
+    let served = delivered.iter().filter(|d| **d).count();
+    if served > 0 {
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.requests.fetch_add(served as u64, Ordering::Relaxed);
+    }
+    if let Some(msg) = failure {
+        for (env, done) in batch.iter().zip(&delivered) {
+            if !*done {
+                env.reply.fail(&msg);
+            }
         }
     }
-    for (env, (clip, rm)) in batch.into_iter().zip(results) {
-        let _ = env.reply.send(Ok(GenResponse {
-            id: env.request.id, clip, metrics: rm }));
+}
+
+/// Deliver one finished clip through its reply sink.  The one-shot
+/// path is a thin wrapper over the stream machinery: the clip is run
+/// through [`stream::chunk_clip`] / [`stream::assemble_response`]
+/// (collapsed to a single whole-clip chunk) so both sinks share the
+/// same invariants and failure modes.
+fn deliver(env: &Envelope, clip: Tensor, rm: RequestMetrics,
+           metrics: &Mutex<ServerMetrics>) {
+    let queue_ms = rm.queue_ms;
+    match &env.reply {
+        ReplySink::Oneshot(tx) => {
+            let resp = stream::chunk_clip(env.request.id, clip, &rm, 0)
+                .and_then(|chunks| {
+                    stream::assemble_response(env.request.id, chunks)
+                });
+            match resp {
+                Ok(r) => {
+                    // record BEFORE replying so a reader who saw the
+                    // reply sees the records (the pre-streaming
+                    // contract); chunk streams record post-delivery
+                    // instead, since chunk/cancel counts are only
+                    // known once delivery finishes
+                    metrics.lock().unwrap().record_completion(queue_ms);
+                    let _ = tx.send(Ok(r));
+                }
+                Err(e) => {
+                    let _ = tx.send(Err(e));
+                }
+            }
+        }
+        ReplySink::Stream(cs) => {
+            // first-chunk latency is clocked at delivery start: the
+            // send of chunk 0 is the next instruction
+            let first_chunk_ms = env.request.submitted_at.elapsed()
+                .as_secs_f64() * 1e3;
+            match cs.send_clip(clip, &rm) {
+                stream::SendOutcome::Delivered(chunks) => {
+                    let mut m = metrics.lock().unwrap();
+                    m.record_stream_delivery(chunks, first_chunk_ms);
+                    m.record_completion(queue_ms);
+                }
+                stream::SendOutcome::Cancelled => {
+                    metrics.lock().unwrap().record_cancelled_stream();
+                }
+            }
+        }
     }
 }
 
 fn fail_batch(batch: Vec<Envelope>, msg: &str) {
     for env in batch {
-        let _ = env.reply.send(Err(anyhow::anyhow!(
-            "generation failed: {msg}")));
+        env.reply.fail(msg);
     }
 }

@@ -348,8 +348,7 @@ mod tests {
     fn env(id: u64, tier: &str, steps: usize)
            -> (Envelope, Receiver<anyhow::Result<GenResponse>>) {
         let (tx, rx) = channel();
-        (Envelope { request: GenRequest::new(id, 0, id, steps, tier),
-                    reply: tx },
+        (Envelope::oneshot(GenRequest::new(id, 0, id, steps, tier), tx),
          rx)
     }
 

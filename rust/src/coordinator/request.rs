@@ -1,8 +1,16 @@
 //! Request/response types for the generation service.
+//!
+//! The reply path is sink-polymorphic: every request travels with a
+//! [`ReplySink`] that is either a classic one-shot channel (the whole
+//! clip in one [`GenResponse`]) or a [`ChunkSender`] feeding a
+//! [`crate::coordinator::stream::ClipStream`].  The one-shot variant
+//! is delivered THROUGH the chunking path (split + reassemble), so
+//! both sinks exercise the same stream invariants.
 
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+use super::stream::ChunkSender;
 use crate::tensor::Tensor;
 
 /// A video-generation request (one clip).
@@ -65,10 +73,57 @@ pub struct GenResponse {
     pub metrics: RequestMetrics,
 }
 
-/// What actually travels through the queue: request + reply channel.
+/// Where a served request's output goes.
+pub enum ReplySink {
+    /// classic API: the full clip in one message
+    Oneshot(Sender<anyhow::Result<GenResponse>>),
+    /// streaming API: frame-range chunks as they become ready
+    Stream(ChunkSender),
+}
+
+impl ReplySink {
+    /// True when the consumer has abandoned a STREAMING request (the
+    /// `ClipStream` was dropped or cancelled) — the serving side uses
+    /// this to skip compute for dead work.  One-shot receivers cannot
+    /// be observed without sending, so they always report `false`.
+    pub fn is_cancelled(&self) -> bool {
+        match self {
+            ReplySink::Oneshot(_) => false,
+            ReplySink::Stream(cs) => cs.is_cancelled(),
+        }
+    }
+
+    /// Deliver a terminal failure.  Never blocks: a dropped one-shot
+    /// receiver makes `send` a no-op, and the stream side uses a
+    /// non-blocking error push.
+    pub fn fail(&self, msg: &str) {
+        match self {
+            ReplySink::Oneshot(tx) => {
+                let _ = tx.send(Err(anyhow::anyhow!(
+                    "generation failed: {msg}")));
+            }
+            ReplySink::Stream(cs) => cs.send_error(msg),
+        }
+    }
+}
+
+/// What actually travels through the queue: request + reply sink.
 pub struct Envelope {
     pub request: GenRequest,
-    pub reply: Sender<anyhow::Result<GenResponse>>,
+    pub reply: ReplySink,
+}
+
+impl Envelope {
+    /// Envelope with a classic one-shot reply channel.
+    pub fn oneshot(request: GenRequest,
+                   reply: Sender<anyhow::Result<GenResponse>>) -> Envelope {
+        Envelope { request, reply: ReplySink::Oneshot(reply) }
+    }
+
+    /// Envelope whose clip is delivered as a chunk stream.
+    pub fn stream(request: GenRequest, chunks: ChunkSender) -> Envelope {
+        Envelope { request, reply: ReplySink::Stream(chunks) }
+    }
 }
 
 impl std::fmt::Debug for Envelope {

@@ -1,4 +1,14 @@
-//! The server: frontend handle + sharded engine pool + lifecycle.
+//! The server: frontend gateway + sharded engine pool + optional TCP
+//! listener + lifecycle.
+//!
+//! [`Gateway`] is the transport-independent submission surface (id
+//! allocation, metrics accounting, queue push); [`Server`] wires it to
+//! an [`EnginePool`] of PJRT shards and — when
+//! `ServeConfig::listen_addr` is set — a [`super::net::NetFrontend`]
+//! that exposes the same verbs over length-prefixed JSON-over-TCP.
+//! Tests drive `Gateway` + a mock pool directly, so the whole reply
+//! path (including the network frontend) is exercised without
+//! artifacts.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -9,22 +19,106 @@ use anyhow::Result;
 
 use super::engine::Engine;
 use super::metrics::ServerMetrics;
+use super::net::NetFrontend;
 use super::pool::EnginePool;
 use super::queue::{QueueError, RequestQueue, SchedPolicy};
 use super::request::{Envelope, GenRequest, GenResponse};
+use super::stream::{self, ClipStream};
 use crate::config::ServeConfig;
 
-pub struct Server {
+/// Transport-independent request frontend: every submission surface
+/// (in-process handles, the TCP frontend, load generators) goes
+/// through here so ids, accounting and backpressure behave
+/// identically.
+pub struct Gateway {
     queue: Arc<RequestQueue>,
     metrics: Arc<Mutex<ServerMetrics>>,
     next_id: AtomicU64,
-    pool: Option<EnginePool>,
     serve: ServeConfig,
+}
+
+impl Gateway {
+    pub fn new(queue: Arc<RequestQueue>,
+               metrics: Arc<Mutex<ServerMetrics>>,
+               serve: ServeConfig) -> Gateway {
+        Gateway { queue, metrics, next_id: AtomicU64::new(1), serve }
+    }
+
+    pub fn serve_config(&self) -> &ServeConfig {
+        &self.serve
+    }
+
+    /// Submit a generation request; returns the reply channel.
+    /// `Err` = backpressure (queue full) or shutdown.
+    pub fn submit(&self, class_label: i32, seed: u64, steps: usize,
+                  tier: &str)
+                  -> Result<Receiver<Result<GenResponse>>, QueueError> {
+        self.submit_tracked(class_label, seed, steps, tier)
+            .map(|(_, rx)| rx)
+    }
+
+    /// Like [`Gateway::submit`] but also returns the allocated request
+    /// id, so multiplexing frontends can correlate the eventual reply.
+    pub fn submit_tracked(&self, class_label: i32, seed: u64,
+                          steps: usize, tier: &str)
+                          -> Result<(u64, Receiver<Result<GenResponse>>),
+                                    QueueError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let req = GenRequest::new(id, class_label, seed, steps, tier);
+        self.metrics.lock().unwrap().requests += 1;
+        match self.queue.push(Envelope::oneshot(req, tx)) {
+            Ok(()) => Ok((id, rx)),
+            Err(e) => {
+                self.metrics.lock().unwrap().rejected += 1;
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit a generation request whose clip is delivered as a
+    /// stream of frame-range chunks (`ServeConfig::chunk_frames` per
+    /// chunk, buffer bounded by `ServeConfig::stream_buffer_chunks`).
+    /// Dropping the returned [`ClipStream`] cancels the request.
+    pub fn submit_streaming(&self, class_label: i32, seed: u64,
+                            steps: usize, tier: &str)
+                            -> Result<ClipStream, QueueError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (chunks, handle) = stream::channel(
+            id, self.serve.chunk_frames, self.serve.stream_buffer_chunks);
+        let req = GenRequest::new(id, class_label, seed, steps, tier);
+        self.metrics.lock().unwrap().requests += 1;
+        match self.queue.push(Envelope::stream(req, chunks)) {
+            Ok(()) => {
+                self.metrics.lock().unwrap().streams += 1;
+                Ok(handle)
+            }
+            Err(e) => {
+                self.metrics.lock().unwrap().rejected += 1;
+                Err(e)
+            }
+        }
+    }
+
+    pub fn metrics_snapshot(&self) -> crate::util::json::Json {
+        self.metrics.lock().unwrap().snapshot()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+pub struct Server {
+    gateway: Arc<Gateway>,
+    pool: Option<EnginePool>,
+    net: Option<NetFrontend>,
 }
 
 impl Server {
     /// Start `serve.num_shards` engine shards (each builds its PJRT
-    /// runtime on its own thread — `PjRtClient` cannot cross threads).
+    /// runtime on its own thread — `PjRtClient` cannot cross threads)
+    /// and, when `serve.listen_addr` is non-empty, the TCP frontend.
     /// Blocks until every shard is ready or failed, so callers get
     /// load errors synchronously.
     pub fn start(artifacts_dir: &str, serve: ServeConfig) -> Result<Server> {
@@ -53,8 +147,16 @@ impl Server {
                 }
                 Ok(engine)
             })?;
-        Ok(Server { queue, metrics, next_id: AtomicU64::new(1),
-                    pool: Some(pool), serve })
+        let gateway = Arc::new(Gateway::new(queue, metrics, serve.clone()));
+        let net = if serve.listen_addr.is_empty() {
+            None
+        } else {
+            let frontend = NetFrontend::start(Arc::clone(&gateway),
+                                              &serve.listen_addr)?;
+            crate::info!("tcp frontend on {}", frontend.local_addr());
+            Some(frontend)
+        };
+        Ok(Server { gateway, pool: Some(pool), net })
     }
 
     /// Submit a generation request; returns the reply channel.
@@ -62,29 +164,28 @@ impl Server {
     pub fn submit(&self, class_label: i32, seed: u64, steps: usize,
                   tier: &str)
                   -> Result<Receiver<Result<GenResponse>>, QueueError> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = channel();
-        let req = GenRequest::new(id, class_label, seed, steps, tier);
-        self.metrics.lock().unwrap().requests += 1;
-        match self.queue.push(Envelope { request: req, reply: tx }) {
-            Ok(()) => Ok(rx),
-            Err(e) => {
-                self.metrics.lock().unwrap().rejected += 1;
-                Err(e)
-            }
-        }
+        self.gateway.submit(class_label, seed, steps, tier)
     }
 
     /// Submit with the server's default tier.
     pub fn submit_default(&self, class_label: i32, seed: u64)
                           -> Result<Receiver<Result<GenResponse>>,
                                     QueueError> {
-        self.submit(class_label, seed, self.serve.sample_steps,
-                    &self.serve.tier.clone())
+        let serve = self.gateway.serve_config();
+        self.gateway.submit(class_label, seed, serve.sample_steps,
+                            &serve.tier)
+    }
+
+    /// Streaming submit: chunks arrive on the returned [`ClipStream`]
+    /// as the engine finishes them; dropping the stream cancels.
+    pub fn submit_streaming(&self, class_label: i32, seed: u64,
+                            steps: usize, tier: &str)
+                            -> Result<ClipStream, QueueError> {
+        self.gateway.submit_streaming(class_label, seed, steps, tier)
     }
 
     pub fn metrics_snapshot(&self) -> crate::util::json::Json {
-        self.metrics.lock().unwrap().snapshot()
+        self.gateway.metrics_snapshot()
     }
 
     pub fn num_shards(&self) -> usize {
@@ -92,13 +193,27 @@ impl Server {
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.gateway.pending()
     }
 
-    /// Graceful shutdown: close the queue, then join the dispatcher
-    /// and every shard (each finishes its in-flight batch first).
+    /// Bound address of the TCP frontend, if one is listening
+    /// (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> Option<std::net::SocketAddr> {
+        self.net.as_ref().map(|n| n.local_addr())
+    }
+
+    /// Graceful shutdown: stop accepting connections, close the
+    /// queue, then join the dispatcher and every shard (each finishes
+    /// its in-flight batch first).
     pub fn shutdown(mut self) {
-        self.queue.close();
+        self.wind_down();
+    }
+
+    fn wind_down(&mut self) {
+        if let Some(mut n) = self.net.take() {
+            n.shutdown();
+        }
+        self.gateway.queue.close();
         if let Some(mut p) = self.pool.take() {
             p.join();
         }
@@ -107,9 +222,6 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.queue.close();
-        if let Some(mut p) = self.pool.take() {
-            p.join();
-        }
+        self.wind_down();
     }
 }

@@ -1,0 +1,436 @@
+//! Streaming clip delivery: the chunked half of the reply path.
+//!
+//! A finished clip used to travel as ONE monolithic [`GenResponse`].
+//! This module splits delivery into [`ClipChunk`]s — contiguous frame
+//! ranges of the final clip, tagged with sequence numbers and
+//! per-chunk metrics — flowing through a bounded channel from the
+//! serving shard to a [`ClipStream`] handle the client polls.
+//!
+//! Semantics:
+//!
+//! * **Chunks are frame ranges of the FINAL clip.**  Full-clip
+//!   diffusion denoises every frame of a sub-batch together, so frames
+//!   become final at that sub-batch's last sampling step; what
+//!   streaming buys is that each request's frames leave the shard the
+//!   moment its sub-batch finishes — before the rest of the dispatched
+//!   batch is served, before server-side bookkeeping, and (over the
+//!   TCP frontend) while later frames are still in flight.
+//!   `ServeConfig::chunk_frames` sets the range granularity
+//!   (`0` = the whole clip as one chunk).
+//! * **Reassembly is exact.**  [`assemble_response`] concatenates the
+//!   ranges back into a clip that is byte-identical to the one-shot
+//!   result for the same seed — the one-shot reply path itself is a
+//!   thin wrapper over this module (chunk, then reassemble), so every
+//!   one-shot request exercises the stream invariants.
+//! * **Bounded backpressure.**  The channel holds at most
+//!   `ServeConfig::stream_buffer_chunks` chunks; a producer ahead of
+//!   its consumer blocks rather than buffering a whole clip per slow
+//!   client.
+//! * **Cancel-on-drop.**  Dropping a [`ClipStream`] (or an explicit
+//!   [`StreamCancel::cancel`]) sets a shared flag AND closes the
+//!   receiver: an in-flight send fails immediately, the shard stops
+//!   emitting for that request, and a batch whose every request is
+//!   cancelled is skipped without compute — an abandoned client frees
+//!   its shard slot instead of pinning it.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::request::{GenResponse, RequestMetrics};
+use crate::tensor::Tensor;
+
+/// One contiguous frame range of a generated clip.
+#[derive(Debug, Clone)]
+pub struct ClipChunk {
+    /// request id this chunk belongs to
+    pub id: u64,
+    /// 0-based chunk index; chunks arrive in `seq` order
+    pub seq: usize,
+    /// first frame (inclusive) of the range
+    pub frame_start: usize,
+    /// one past the last frame of the range
+    pub frame_end: usize,
+    /// total frames in the full clip (same on every chunk)
+    pub total_frames: usize,
+    /// set on the final chunk of the clip
+    pub last: bool,
+    /// `[frame_end - frame_start, H, W, C]` frame data
+    pub frames: Tensor,
+    /// request-level service metrics (repeated on every chunk so a
+    /// consumer that only keeps the first chunk still sees them)
+    pub metrics: RequestMetrics,
+}
+
+/// What a delivery attempt did (the producer-side outcome).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SendOutcome {
+    /// all chunks were handed to the stream (count included)
+    Delivered(usize),
+    /// the client cancelled / dropped the stream; delivery stopped
+    Cancelled,
+}
+
+/// Producer half: owned by the reply path, travels through the queue
+/// inside the request envelope.
+#[derive(Debug)]
+pub struct ChunkSender {
+    id: u64,
+    chunk_frames: usize,
+    tx: SyncSender<Result<ClipChunk>>,
+    cancelled: Arc<AtomicBool>,
+}
+
+/// Consumer half: yields chunks in order; dropping it cancels the
+/// stream.
+#[derive(Debug)]
+pub struct ClipStream {
+    id: u64,
+    rx: Receiver<Result<ClipChunk>>,
+    cancelled: Arc<AtomicBool>,
+}
+
+/// Cloneable cancel handle (e.g. for a connection registry that must
+/// cancel a stream whose `ClipStream` lives on a pump thread).
+#[derive(Debug, Clone)]
+pub struct StreamCancel(Arc<AtomicBool>);
+
+impl StreamCancel {
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Build a bounded chunk channel for request `id`.
+///
+/// `chunk_frames` is the frames-per-chunk granularity (`0` = whole
+/// clip in one chunk); `buffer_chunks` bounds how many chunks may sit
+/// in flight before the producer blocks (floored at 1).
+pub fn channel(id: u64, chunk_frames: usize, buffer_chunks: usize)
+               -> (ChunkSender, ClipStream) {
+    let (tx, rx) = sync_channel(buffer_chunks.max(1));
+    let cancelled = Arc::new(AtomicBool::new(false));
+    (ChunkSender { id, chunk_frames, tx,
+                   cancelled: Arc::clone(&cancelled) },
+     ClipStream { id, rx, cancelled })
+}
+
+impl ChunkSender {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// True once the consumer dropped its stream or called cancel.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Chunk `clip` into frame ranges and send them in order.
+    ///
+    /// Blocks when the buffer is full (bounded backpressure).  Stops
+    /// early — and reports [`SendOutcome::Cancelled`] — the moment the
+    /// cancel flag is set or the receiver is gone, so a shard never
+    /// stalls on an abandoned client.
+    pub fn send_clip(&self, clip: Tensor, metrics: &RequestMetrics)
+                     -> SendOutcome {
+        if self.is_cancelled() {
+            return SendOutcome::Cancelled;
+        }
+        let chunks = match chunk_clip(self.id, clip, metrics,
+                                      self.chunk_frames) {
+            Ok(c) => c,
+            Err(e) => {
+                self.send_error(&format!("{e:#}"));
+                return SendOutcome::Cancelled;
+            }
+        };
+        let mut sent = 0usize;
+        for chunk in chunks {
+            if self.is_cancelled() {
+                return SendOutcome::Cancelled;
+            }
+            match self.tx.send(Ok(chunk)) {
+                Ok(()) => sent += 1,
+                Err(_) => {
+                    // receiver dropped: remember it so the batch-level
+                    // cancel fast paths see this stream as dead too
+                    self.cancelled.store(true, Ordering::Relaxed);
+                    return SendOutcome::Cancelled;
+                }
+            }
+        }
+        SendOutcome::Delivered(sent)
+    }
+
+    /// Push a terminal error onto the stream.  Uses `try_send` so the
+    /// failure path can never block on a stalled consumer: if the
+    /// buffer is full the stream simply ends without a `last` chunk,
+    /// which the consumer reports as "stream ended early".
+    pub fn send_error(&self, msg: &str) {
+        let _ = self.tx.try_send(Err(anyhow::anyhow!(
+            "generation failed: {msg}")));
+    }
+}
+
+impl ClipStream {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Next chunk, blocking.  `None` once the producer is done (after
+    /// the `last` chunk, a cancellation, or a producer-side drop).
+    pub fn recv(&self) -> Option<Result<ClipChunk>> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking variant: `Ok(None)` = nothing buffered yet.
+    pub fn try_recv(&self) -> Result<Option<Result<ClipChunk>>> {
+        match self.rx.try_recv() {
+            Ok(item) => Ok(Some(item)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => {
+                bail!("stream closed")
+            }
+        }
+    }
+
+    /// Ask the producer to stop without dropping the handle.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// A cloneable cancel handle for registries.
+    pub fn cancel_handle(&self) -> StreamCancel {
+        StreamCancel(Arc::clone(&self.cancelled))
+    }
+
+    /// Drain the stream and reassemble the full clip — the one-shot
+    /// view of a streaming submit.  Errors if the producer reported a
+    /// failure or the stream ended before its `last` chunk.
+    pub fn collect(self) -> Result<GenResponse> {
+        let mut chunks = Vec::new();
+        while let Some(item) = self.recv() {
+            let chunk = item?;
+            let last = chunk.last;
+            chunks.push(chunk);
+            if last {
+                break;
+            }
+        }
+        assemble_response(self.id, chunks)
+    }
+}
+
+impl Drop for ClipStream {
+    fn drop(&mut self) {
+        // cancel-on-drop: the producer observes the flag (or the
+        // disconnected receiver) and stops emitting for this request
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Split `clip` (`[T, ...]`, f32) into `ceil(T / chunk_frames)` frame
+/// ranges.  `chunk_frames == 0` (or `>= T`) keeps the whole clip as a
+/// single chunk WITHOUT copying its data.
+pub fn chunk_clip(id: u64, clip: Tensor, metrics: &RequestMetrics,
+                  chunk_frames: usize) -> Result<Vec<ClipChunk>> {
+    let total = *clip.shape.first()
+        .context("cannot chunk a scalar clip")?;
+    anyhow::ensure!(total > 0, "cannot chunk an empty clip");
+    let per = if chunk_frames == 0 { total }
+              else { chunk_frames.min(total) };
+    if per == total {
+        return Ok(vec![ClipChunk {
+            id, seq: 0, frame_start: 0, frame_end: total,
+            total_frames: total, last: true, frames: clip,
+            metrics: metrics.clone(),
+        }]);
+    }
+    let inner: Vec<usize> = clip.shape[1..].to_vec();
+    let stride: usize = inner.iter().product();
+    let data = clip.f32s()?;
+    let mut chunks = Vec::with_capacity((total + per - 1) / per);
+    let mut start = 0usize;
+    let mut seq = 0usize;
+    while start < total {
+        let end = (start + per).min(total);
+        let mut shape = vec![end - start];
+        shape.extend_from_slice(&inner);
+        let frames = Tensor::from_f32(
+            &shape, data[start * stride..end * stride].to_vec())?;
+        chunks.push(ClipChunk {
+            id, seq, frame_start: start, frame_end: end,
+            total_frames: total, last: end == total, frames,
+            metrics: metrics.clone(),
+        });
+        start = end;
+        seq += 1;
+    }
+    Ok(chunks)
+}
+
+/// Validate chunk ordering/completeness and concatenate the ranges
+/// back into the full clip.  The inverse of [`chunk_clip`]: for any
+/// clip and granularity, `assemble_response(chunk_clip(..))` yields a
+/// byte-identical tensor.
+pub fn assemble_response(id: u64, chunks: Vec<ClipChunk>)
+                         -> Result<GenResponse> {
+    let total = {
+        let last = chunks.last()
+            .context("stream ended before any chunk")?;
+        anyhow::ensure!(last.last, "stream ended early: chunk {}/{} \
+                                    frames [{}, {}) is not terminal",
+                        last.seq, last.total_frames, last.frame_start,
+                        last.frame_end);
+        last.total_frames
+    };
+    if chunks.len() == 1 {
+        // single whole-clip chunk (the one-shot wrapper's shape):
+        // validate and move the tensor out without copying it
+        let c = chunks.into_iter().next().unwrap();
+        anyhow::ensure!(c.id == id, "chunk for request {} on stream {id}",
+                        c.id);
+        anyhow::ensure!(c.seq == 0 && c.frame_start == 0
+                        && c.frame_end == c.total_frames
+                        && c.frames.shape.first() == Some(&c.total_frames),
+                        "lone chunk does not cover the clip: seq {} \
+                         frames [{}, {}) of {}", c.seq, c.frame_start,
+                        c.frame_end, c.total_frames);
+        return Ok(GenResponse { id, clip: c.frames, metrics: c.metrics });
+    }
+    let inner: Vec<usize> = chunks[0].frames.shape[1..].to_vec();
+    let stride: usize = inner.iter().product();
+    let mut data: Vec<f32> = Vec::with_capacity(total * stride);
+    let mut cursor = 0usize;
+    for (i, c) in chunks.iter().enumerate() {
+        anyhow::ensure!(c.id == id, "chunk for request {} on stream {id}",
+                        c.id);
+        anyhow::ensure!(c.seq == i, "chunk out of order: seq {} at \
+                                     position {i}", c.seq);
+        anyhow::ensure!(c.frame_start == cursor,
+                        "frame gap: chunk {i} starts at {} but {} frames \
+                         assembled", c.frame_start, cursor);
+        anyhow::ensure!(c.frame_end > c.frame_start
+                        && c.frame_end <= total,
+                        "bad frame range [{}, {}) of {total}",
+                        c.frame_start, c.frame_end);
+        anyhow::ensure!(c.total_frames == total,
+                        "total_frames changed mid-stream");
+        anyhow::ensure!(c.frames.shape[1..] == inner[..],
+                        "frame shape changed mid-stream");
+        data.extend_from_slice(c.frames.f32s()?);
+        cursor = c.frame_end;
+    }
+    anyhow::ensure!(cursor == total,
+                    "incomplete clip: {cursor} of {total} frames");
+    let mut shape = vec![total];
+    shape.extend_from_slice(&inner);
+    let metrics = chunks.last().unwrap().metrics.clone();
+    Ok(GenResponse { id, clip: Tensor::from_f32(&shape, data)?, metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn clip(seed: u64, t: usize) -> Tensor {
+        let mut rng = Pcg32::seeded(seed);
+        Tensor::randn(&[t, 2, 2, 3], &mut rng)
+    }
+
+    #[test]
+    fn chunk_then_assemble_is_identity() {
+        for chunk_frames in [0, 1, 2, 3, 4, 7] {
+            let original = clip(5, 4);
+            let chunks = chunk_clip(9, original.clone(),
+                                    &RequestMetrics::default(),
+                                    chunk_frames).unwrap();
+            let expect = if chunk_frames == 0 { 1 }
+                         else { (4 + chunk_frames.min(4) - 1)
+                                / chunk_frames.min(4) };
+            assert_eq!(chunks.len(), expect, "cf={chunk_frames}");
+            assert!(chunks.last().unwrap().last);
+            assert!(chunks[..chunks.len() - 1].iter()
+                        .all(|c| !c.last));
+            for (i, c) in chunks.iter().enumerate() {
+                assert_eq!(c.seq, i);
+                assert_eq!(c.total_frames, 4);
+                assert_eq!(c.frames.shape[0], c.frame_end - c.frame_start);
+            }
+            let resp = assemble_response(9, chunks).unwrap();
+            assert_eq!(resp.id, 9);
+            assert_eq!(resp.clip, original, "cf={chunk_frames}");
+        }
+    }
+
+    #[test]
+    fn assemble_rejects_gaps_reorders_and_truncation() {
+        let rm = RequestMetrics::default();
+        let whole = chunk_clip(1, clip(2, 4), &rm, 1).unwrap();
+        // truncated: missing the last chunk
+        let mut truncated = whole.clone();
+        truncated.pop();
+        assert!(assemble_response(1, truncated).is_err());
+        // reordered
+        let mut reordered = whole.clone();
+        reordered.swap(1, 2);
+        assert!(assemble_response(1, reordered).is_err());
+        // empty
+        assert!(assemble_response(1, Vec::new()).is_err());
+        // wrong id
+        assert!(assemble_response(2, whole).is_err());
+    }
+
+    #[test]
+    fn stream_channel_roundtrip_and_collect() {
+        let (tx, rx) = channel(3, 1, 8);
+        let original = clip(7, 4);
+        let rm = RequestMetrics { queue_ms: 1.0, compute_ms: 2.0,
+                                  steps: 4, batch_size: 1 };
+        assert_eq!(tx.send_clip(original.clone(), &rm),
+                   SendOutcome::Delivered(4));
+        drop(tx);
+        let resp = rx.collect().unwrap();
+        assert_eq!(resp.clip, original);
+        assert_eq!(resp.metrics.steps, 4);
+    }
+
+    #[test]
+    fn dropped_stream_cancels_sender_without_blocking() {
+        // buffer of 1 against 4 chunks: if cancel-on-drop failed, the
+        // second send would block forever
+        let (tx, rx) = channel(4, 1, 1);
+        drop(rx);
+        assert_eq!(tx.send_clip(clip(1, 4), &RequestMetrics::default()),
+                   SendOutcome::Cancelled);
+        assert!(tx.is_cancelled());
+    }
+
+    #[test]
+    fn explicit_cancel_stops_delivery() {
+        let (tx, rx) = channel(5, 1, 8);
+        rx.cancel_handle().cancel();
+        assert_eq!(tx.send_clip(clip(1, 4), &RequestMetrics::default()),
+                   SendOutcome::Cancelled);
+        // producer side done (sender dropped): the consumer sees the
+        // stream end without a terminal chunk
+        drop(tx);
+        assert!(rx.collect().is_err());
+    }
+
+    #[test]
+    fn mid_stream_error_surfaces_in_collect() {
+        let (tx, rx) = channel(6, 1, 8);
+        tx.send_error("shard died");
+        drop(tx);
+        let err = rx.collect().unwrap_err().to_string();
+        assert!(err.contains("shard died"), "{err}");
+    }
+}

@@ -5,6 +5,8 @@
 //!   generate                  run one batched generation synchronously
 //!   serve-demo                start the server, fire a request wave,
 //!                             print latency/throughput metrics
+//!   serve-net                 start the server with the TCP frontend
+//!                             and keep serving until killed
 //!   train                     two-stage SLA2 fine-tune (Alg. 1)
 //!   costmodel                 print the paper-calibrated Fig.4/Fig.5
 //!                             curves without touching PJRT
@@ -31,6 +33,11 @@ commands:
                 --num-shards N — run the sharded batching server
                 against a synthetic request wave (default shards:
                 cores - 1)
+  serve-net     --listen-addr 127.0.0.1:7341 --chunk-frames 1
+                --duration-s 0 — serve the JSON-over-TCP protocol
+                (submit / streaming chunks / cancel / metrics); talk
+                to it with the sla2-stream-client binary.  duration 0
+                = run until killed
   train         --model dit-tiny --tier s90 --stage1-steps 20
                 --stage2-steps 60 — two-stage fine-tune (Alg. 1)
   costmodel     print paper-calibrated kernel/e2e curves (no PJRT)
@@ -43,6 +50,7 @@ fn main() -> Result<()> {
         Some("info") => info(&artifacts),
         Some("generate") => generate(&artifacts, &args),
         Some("serve-demo") => serve_demo(&artifacts, &args),
+        Some("serve-net") => serve_net(&artifacts, &args),
         Some("train") => train(&artifacts, &args),
         Some("costmodel") => {
             costmodel_report();
@@ -115,6 +123,30 @@ fn serve_demo(artifacts: &str, args: &Args) -> Result<()> {
         }
     }
     println!("completed {ok}");
+    println!("{}", server.metrics_snapshot());
+    server.shutdown();
+    Ok(())
+}
+
+/// Network serving: bind the TCP frontend and block.
+/// `sla2 serve-net --listen-addr 127.0.0.1:7341 --model dit-tiny`
+fn serve_net(artifacts: &str, args: &Args) -> Result<()> {
+    let mut serve = ServeConfig::from_args(args);
+    if serve.listen_addr.is_empty() {
+        serve.listen_addr = "127.0.0.1:7341".into();
+    }
+    let server = Server::start(artifacts, serve)?;
+    let addr = server.local_addr().expect("listener configured above");
+    println!("serving on {addr} — try:");
+    println!("  cargo run --release --bin sla2-stream-client -- \
+              --addr {addr} --steps 4");
+    let duration_s = args.u64("duration-s", 0);
+    if duration_s == 0 {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(duration_s));
     println!("{}", server.metrics_snapshot());
     server.shutdown();
     Ok(())

@@ -32,7 +32,7 @@ fn env(keep: &mut Vec<Reply>, id: u64, tier: &str, steps: usize)
        -> Envelope {
     let (tx, rx) = channel();
     keep.push(rx);
-    Envelope { request: GenRequest::new(id, 0, id, steps, tier), reply: tx }
+    Envelope::oneshot(GenRequest::new(id, 0, id, steps, tier), tx)
 }
 
 const TIERS: [&str; 3] = ["s90", "s95", "s97"];
@@ -453,10 +453,8 @@ fn prop_pool_dispatch_under_concurrent_load() {
               for (id, tier, steps) in reqs {
                   let (tx, rx) = channel();
                   rxs.push(rx);
-                  envs.push(Envelope {
-                      request: GenRequest::new(*id, 0, *id, *steps, tier),
-                      reply: tx,
-                  });
+                  envs.push(Envelope::oneshot(
+                      GenRequest::new(*id, 0, *id, *steps, tier), tx));
               }
               let tail = envs.split_off(envs.len() / 2);
               let (q1, q2) = (Arc::clone(&mp.queue), Arc::clone(&mp.queue));
@@ -517,10 +515,9 @@ fn pool_overlaps_shards_under_load() {
         for i in 0..8u64 {
             let (tx, rx) = channel();
             rxs.push(rx);
-            mp.queue.push(Envelope {
-                request: GenRequest::new(wave * 8 + i, 0, i, 4, "s90"),
-                reply: tx,
-            }).unwrap();
+            mp.queue.push(Envelope::oneshot(
+                GenRequest::new(wave * 8 + i, 0, i, 4, "s90"), tx))
+                .unwrap();
         }
         for rx in rxs {
             rx.recv().unwrap().unwrap();
@@ -549,10 +546,8 @@ fn pool_survives_panicking_processor() {
     let mp = mock_pool(2, 1, Duration::ZERO);
     // poison request: class_label == -1 makes the mock panic
     let (ptx, prx) = channel();
-    mp.queue.push(Envelope {
-        request: GenRequest::new(1, -1, 1, 4, "s90"),
-        reply: ptx,
-    }).unwrap();
+    mp.queue.push(Envelope::oneshot(
+        GenRequest::new(1, -1, 1, 4, "s90"), ptx)).unwrap();
     let poisoned = prx.recv().expect("reply must arrive, not be dropped");
     assert!(poisoned.is_err(), "panicked batch must surface an error");
     // the pool keeps serving afterwards
@@ -560,10 +555,8 @@ fn pool_survives_panicking_processor() {
     for id in 2..6u64 {
         let (tx, rx) = channel();
         rxs.push(rx);
-        mp.queue.push(Envelope {
-            request: GenRequest::new(id, 0, id, 4, "s90"),
-            reply: tx,
-        }).unwrap();
+        mp.queue.push(Envelope::oneshot(
+            GenRequest::new(id, 0, id, 4, "s90"), tx)).unwrap();
     }
     for rx in rxs {
         rx.recv().unwrap().unwrap();
@@ -630,11 +623,9 @@ fn warm_shard_affinity_compiles_each_class_about_once() {
     for round in 0..8u64 {
         for (ci, (tier, steps)) in classes.iter().enumerate() {
             let (tx, rx) = channel();
-            queue.push(Envelope {
-                request: GenRequest::new(round * 10 + ci as u64, 0, 1,
-                                         *steps, tier),
-                reply: tx,
-            }).unwrap();
+            queue.push(Envelope::oneshot(
+                GenRequest::new(round * 10 + ci as u64, 0, 1, *steps,
+                                tier), tx)).unwrap();
             rx.recv().unwrap().unwrap(); // strictly sequential
             // let the shard's idle announcement land before the next
             // dispatch decision (de-races the affinity pick)

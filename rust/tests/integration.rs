@@ -98,6 +98,46 @@ fn sharded_server_matches_single_shard_clips() {
 }
 
 #[test]
+fn streaming_submit_matches_oneshot_clip_bit_for_bit() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    // pin max_batch to 1 so both submits run the same batch-size-1
+    // executable (distinct batch-size artifacts are separate XLA
+    // compiles and need not be bitwise-identical)
+    let mut serve = tiny_serve();
+    serve.max_batch = 1;
+    serve.batch_window_ms = 0;
+    serve.chunk_frames = 1; // one chunk per frame: 4 chunks
+    let server = Server::start(dir.to_str().unwrap(), serve).unwrap();
+    let oneshot = server.submit(2, 321, 4, "s90").unwrap()
+        .recv().unwrap().unwrap();
+
+    let stream = server.submit_streaming(2, 321, 4, "s90").unwrap();
+    let id = stream.id();
+    let mut chunks = Vec::new();
+    while let Some(item) = stream.recv() {
+        let c = item.expect("stream errored");
+        let last = c.last;
+        chunks.push(c);
+        if last {
+            break;
+        }
+    }
+    assert!(chunks.len() >= 2,
+            "a 4-frame clip at chunk_frames=1 must arrive in several \
+             chunks, got {}", chunks.len());
+    let resp = sla2::coordinator::stream::assemble_response(id, chunks)
+        .expect("chunk stream must reassemble");
+    assert_eq!(resp.clip, oneshot.clip,
+               "streamed clip diverged from the one-shot clip");
+
+    let snap = server.metrics_snapshot();
+    let streaming = snap.get("streaming").unwrap();
+    assert!(streaming.get("chunks_sent").unwrap().as_usize().unwrap()
+            >= 4);
+    server.shutdown();
+}
+
+#[test]
 fn generated_clips_have_video_structure() {
     let Some(dir) = common::artifacts_dir() else { return };
     let server = Server::start(dir.to_str().unwrap(), tiny_serve())

@@ -1,0 +1,454 @@
+//! Stream-semantics and network-frontend tests, all runnable without
+//! PJRT artifacts (mock processors): chunked delivery reassembles
+//! bit-for-bit to the one-shot clip, chunk ordering/completeness
+//! invariants hold over TCP, cancel-on-drop releases capacity without
+//! leaking pending work, partial batch failures deliver what finished,
+//! and the TCP framing rejects malformed/oversized frames.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use sla2::config::ServeConfig;
+use sla2::coordinator::net::{self, read_frame, write_frame};
+use sla2::coordinator::pool::{BatchProcessor, EnginePool};
+use sla2::coordinator::queue::RequestQueue;
+use sla2::coordinator::request::{GenRequest, RequestMetrics};
+use sla2::coordinator::{Gateway, NetClient, NetFrontend, ServerMetrics};
+use sla2::tensor::Tensor;
+use sla2::util::json::Json;
+use sla2::util::rng::Pcg32;
+
+const CLIP_SHAPE: [usize; 4] = [4, 2, 2, 3];
+
+/// The deterministic clip for a seed — what both delivery paths must
+/// reproduce exactly.
+fn clip_for_seed(seed: u64) -> Tensor {
+    let mut rng = Pcg32::seeded(seed);
+    Tensor::randn(&CLIP_SHAPE, &mut rng)
+}
+
+/// Host-only processor: clips are a pure function of the seed, with
+/// optional wall-time per batch (to keep requests queued behind work).
+struct SeedClipProcessor {
+    work: Duration,
+}
+
+impl BatchProcessor for SeedClipProcessor {
+    fn process(&mut self, reqs: &[GenRequest])
+               -> anyhow::Result<Vec<(Tensor, RequestMetrics)>> {
+        if !self.work.is_zero() {
+            std::thread::sleep(self.work);
+        }
+        Ok(reqs.iter()
+            .map(|r| (clip_for_seed(r.seed), RequestMetrics {
+                queue_ms: r.queue_wait_ms(),
+                compute_ms: self.work.as_secs_f64() * 1e3,
+                steps: r.steps,
+                batch_size: reqs.len(),
+            }))
+            .collect())
+    }
+}
+
+struct Harness {
+    queue: Arc<RequestQueue>,
+    metrics: Arc<Mutex<ServerMetrics>>,
+    gateway: Arc<Gateway>,
+    pool: EnginePool,
+}
+
+fn serve_cfg(chunk_frames: usize, buffer: usize) -> ServeConfig {
+    ServeConfig {
+        tier: "s90".into(),
+        sample_steps: 4,
+        chunk_frames,
+        stream_buffer_chunks: buffer,
+        queue_capacity: 64,
+        ..ServeConfig::default()
+    }
+}
+
+fn harness(shards: usize, max_batch: usize, serve: ServeConfig,
+           work: Duration) -> Harness {
+    let queue = Arc::new(RequestQueue::new(serve.queue_capacity));
+    let metrics = Arc::new(Mutex::new(ServerMetrics::new()));
+    metrics.lock().unwrap().attach_queue(Arc::clone(&queue));
+    let pool = EnginePool::start_with(
+        shards, Arc::clone(&queue), Arc::clone(&metrics), max_batch,
+        Duration::ZERO, move |_| Ok(SeedClipProcessor { work }))
+        .expect("pool start");
+    let gateway = Arc::new(Gateway::new(Arc::clone(&queue),
+                                        Arc::clone(&metrics), serve));
+    Harness { queue, metrics, gateway, pool }
+}
+
+// ---------------- in-process stream semantics ---------------------------
+
+#[test]
+fn stream_reassembles_bit_for_bit_and_in_order() {
+    let h = harness(1, 2, serve_cfg(1, 8), Duration::ZERO);
+    let stream = h.gateway.submit_streaming(0, 1234, 4, "s90").unwrap();
+    let oneshot_rx = h.gateway.submit(0, 1234, 4, "s90").unwrap();
+
+    // drain the stream by hand to check the invariants chunk by chunk
+    let mut chunks = Vec::new();
+    while let Some(item) = stream.recv() {
+        let c = item.expect("stream errored");
+        let done = c.last;
+        chunks.push(c);
+        if done {
+            break;
+        }
+    }
+    assert_eq!(chunks.len(), CLIP_SHAPE[0],
+               "chunk_frames=1 over {} frames", CLIP_SHAPE[0]);
+    assert!(chunks.len() >= 2, "a multi-frame clip must stream in \
+                                multiple chunks");
+    let mut cursor = 0;
+    for (i, c) in chunks.iter().enumerate() {
+        assert_eq!(c.seq, i, "chunks must arrive in seq order");
+        assert_eq!(c.frame_start, cursor, "ranges must be contiguous");
+        assert_eq!(c.total_frames, CLIP_SHAPE[0]);
+        assert_eq!(c.last, i == chunks.len() - 1);
+        assert_eq!(c.frames.shape[0], c.frame_end - c.frame_start);
+        cursor = c.frame_end;
+    }
+    assert_eq!(cursor, CLIP_SHAPE[0], "chunks must cover every frame");
+
+    let reassembled =
+        sla2::coordinator::stream::assemble_response(
+            chunks[0].id, chunks).unwrap();
+    let oneshot = oneshot_rx.recv().unwrap().unwrap();
+    assert_eq!(reassembled.clip, oneshot.clip,
+               "reassembled stream must be byte-identical to one-shot");
+    assert_eq!(reassembled.clip, clip_for_seed(1234));
+
+    h.queue.close();
+    drop(h.pool);
+    let m = h.metrics.lock().unwrap();
+    assert_eq!(m.streams, 1);
+    assert_eq!(m.chunks_sent, CLIP_SHAPE[0] as u64);
+    assert_eq!(m.completed, 2);
+    assert!(m.first_chunk_ms.count() == 1);
+}
+
+#[test]
+fn whole_clip_chunking_still_matches() {
+    // chunk_frames = 0: the stream degenerates to a single chunk
+    let h = harness(1, 1, serve_cfg(0, 2), Duration::ZERO);
+    let stream = h.gateway.submit_streaming(1, 77, 4, "s90").unwrap();
+    let resp = stream.collect().unwrap();
+    assert_eq!(resp.clip, clip_for_seed(77));
+    h.queue.close();
+    drop(h.pool);
+}
+
+#[test]
+fn cancel_on_drop_releases_capacity_and_skips_compute() {
+    // buffer of 1 against 4 chunks per clip: if cancellation did not
+    // short-circuit delivery, the shard would block forever on the
+    // second chunk of the first dropped stream
+    let h = harness(1, 4, serve_cfg(1, 1), Duration::from_millis(30));
+    let mut dropped = 0;
+    for i in 0..4 {
+        match h.gateway.submit_streaming(0, 500 + i, 4, "s90") {
+            Ok(stream) => {
+                drop(stream); // abandon immediately
+                dropped += 1;
+            }
+            Err(e) => panic!("submit rejected: {e}"),
+        }
+    }
+    // a live request behind the dead ones must still be served
+    let rx = h.gateway.submit(0, 900, 4, "s90").unwrap();
+    let resp = rx.recv().expect("live request starved behind cancelled \
+                                 streams").unwrap();
+    assert_eq!(resp.clip, clip_for_seed(900));
+
+    // the queue fully drains: no pending count leaks from the
+    // abandoned streams
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while h.gateway.pending() > 0 {
+        assert!(std::time::Instant::now() < deadline,
+                "queue never drained: {} pending", h.gateway.pending());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    h.queue.close();
+    drop(h.pool);
+    let m = h.metrics.lock().unwrap();
+    assert_eq!(m.cancelled_streams, dropped,
+               "every abandoned stream must be accounted");
+    assert_eq!(m.completed, 1, "only the live request completes");
+    assert_eq!(m.chunks_sent, 0, "no chunks for abandoned streams");
+}
+
+/// Emits each request as its own "invocation" (batch_size 1), like the
+/// engine's sub-batch plan.  A request with `class_label == -1` is
+/// poison: processing aborts when it is reached, whatever batch it
+/// landed in — already-emitted requests keep their clips.
+struct SplitEmitProcessor;
+
+impl BatchProcessor for SplitEmitProcessor {
+    fn process(&mut self, reqs: &[GenRequest])
+               -> anyhow::Result<Vec<(Tensor, RequestMetrics)>> {
+        let mut out = Vec::new();
+        self.process_streaming(reqs, &mut |_, clip, rm| {
+            out.push((clip, rm));
+        })?;
+        Ok(out)
+    }
+
+    fn process_streaming(
+        &mut self, reqs: &[GenRequest],
+        emit: &mut dyn FnMut(usize, Tensor, RequestMetrics))
+        -> anyhow::Result<()> {
+        for (i, r) in reqs.iter().enumerate() {
+            anyhow::ensure!(r.class_label != -1,
+                            "sub-batch {i} exploded");
+            emit(i, clip_for_seed(r.seed), RequestMetrics {
+                queue_ms: r.queue_wait_ms(),
+                compute_ms: 1.0,
+                steps: r.steps,
+                batch_size: 1,
+            });
+        }
+        Ok(())
+    }
+}
+
+fn split_harness() -> Harness {
+    let queue = Arc::new(RequestQueue::new(64));
+    let metrics = Arc::new(Mutex::new(ServerMetrics::new()));
+    let pool = EnginePool::start_with(
+        1, Arc::clone(&queue), Arc::clone(&metrics), 4,
+        Duration::from_millis(40),
+        move |_| Ok(SplitEmitProcessor))
+        .expect("pool start");
+    let gateway = Arc::new(Gateway::new(Arc::clone(&queue),
+                                        Arc::clone(&metrics),
+                                        serve_cfg(2, 8)));
+    Harness { queue, metrics, gateway, pool }
+}
+
+#[test]
+fn per_invocation_metrics_follow_the_emission_stride() {
+    let h = split_harness();
+    // two compatible requests in one dispatched batch, emitted as two
+    // batch_size-1 invocations: the batch window coalesces them
+    let rx1 = h.gateway.submit(0, 1, 4, "s90").unwrap();
+    let rx2 = h.gateway.submit(0, 2, 4, "s90").unwrap();
+    rx1.recv().unwrap().unwrap();
+    rx2.recv().unwrap().unwrap();
+    h.queue.close();
+    drop(h.pool);
+    let m = h.metrics.lock().unwrap();
+    assert_eq!(m.completed, 2);
+    // one record_batch per emission-contract invocation
+    assert_eq!(m.batches, 2);
+    assert!((m.batch_size.mean() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn partial_failure_keeps_already_emitted_clips() {
+    let h = split_harness();
+    let rx1 = h.gateway.submit(0, 10, 4, "s90").unwrap();
+    let rx2 = h.gateway.submit(-1, 11, 4, "s90").unwrap(); // poison
+    // the first request was emitted before the failure: it succeeds
+    let first = rx1.recv().unwrap().expect("emitted clip must stand");
+    assert_eq!(first.clip, clip_for_seed(10));
+    // the second surfaces the processor error
+    let err = rx2.recv().unwrap().expect_err("unfinished request must \
+                                              fail");
+    assert!(err.to_string().contains("exploded"), "{err}");
+    h.queue.close();
+    drop(h.pool);
+}
+
+// ---------------- the TCP frontend --------------------------------------
+
+fn tcp_harness(serve: ServeConfig, work: Duration)
+               -> (Harness, NetFrontend, String) {
+    let h = harness(2, 2, serve, work);
+    let net = NetFrontend::start(Arc::clone(&h.gateway), "127.0.0.1:0")
+        .expect("bind ephemeral port");
+    let addr = net.local_addr().to_string();
+    (h, net, addr)
+}
+
+#[test]
+fn tcp_streaming_client_end_to_end() {
+    let (h, mut net, addr) =
+        tcp_harness(serve_cfg(1, 8), Duration::from_millis(5));
+    let mut client = NetClient::connect(&addr).unwrap();
+
+    // streaming submit: multiple chunks arrive before completion
+    let id = client.submit(3, 4242, 4, "s90", true).unwrap();
+    assert!(id > 0);
+    let mut seen = Vec::new();
+    let streamed = client.collect_stream_with(id, |c| {
+        seen.push((c.seq, c.frame_start, c.frame_end, c.last));
+    }).unwrap();
+    assert!(seen.len() >= 2,
+            "expected >= 2 chunks before completion, got {seen:?}");
+    assert_eq!(seen.len(), CLIP_SHAPE[0]);
+    assert!(seen.windows(2).all(|w| w[0].0 + 1 == w[1].0),
+            "chunks out of order over TCP: {seen:?}");
+
+    // one-shot resubmit over the same connection: byte-identical
+    let clip_id = client.submit(3, 4242, 4, "s90", false).unwrap();
+    assert!(clip_id > id, "ids must keep increasing");
+    let oneshot = client.collect_clip(clip_id).unwrap();
+    assert_eq!(streamed.clip, oneshot.clip,
+               "TCP-reassembled clip must equal the one-shot clip");
+    assert_eq!(streamed.clip, clip_for_seed(4242),
+               "JSON transport must be bit-exact for f32");
+
+    // metrics verb reports the streaming section
+    let snap = client.metrics_snapshot().unwrap();
+    let streaming = snap.get("streaming").expect("streaming section");
+    assert!(streaming.get("streams").unwrap().as_usize().unwrap() >= 1);
+    assert!(streaming.get("chunks_sent").unwrap().as_usize().unwrap()
+            >= CLIP_SHAPE[0]);
+
+    drop(client);
+    net.shutdown();
+    h.queue.close();
+    drop(h.pool);
+}
+
+#[test]
+fn tcp_cancel_verb_kills_a_queued_stream() {
+    // one busy shard + a queued victim: cancel must hit while queued
+    let serve = serve_cfg(1, 8);
+    let queue = Arc::new(RequestQueue::new(64));
+    let metrics = Arc::new(Mutex::new(ServerMetrics::new()));
+    let pool = EnginePool::start_with(
+        1, Arc::clone(&queue), Arc::clone(&metrics), 1, Duration::ZERO,
+        move |_| Ok(SeedClipProcessor {
+            work: Duration::from_millis(150),
+        }))
+        .expect("pool start");
+    let gateway = Arc::new(Gateway::new(Arc::clone(&queue),
+                                        Arc::clone(&metrics), serve));
+    let mut net = NetFrontend::start(Arc::clone(&gateway), "127.0.0.1:0")
+        .unwrap();
+    let mut client = NetClient::connect(&net.local_addr().to_string())
+        .unwrap();
+
+    let blocker = client.submit(0, 1, 4, "s90", true).unwrap();
+    let victim = client.submit(0, 2, 4, "s90", true).unwrap();
+    assert!(client.cancel(victim).unwrap(),
+            "victim should still be registered");
+    // the blocker streams normally...
+    let resp = client.collect_stream(blocker).unwrap();
+    assert_eq!(resp.clip, clip_for_seed(1));
+    // ...the victim's stream terminates without completing
+    let err = client.collect_stream(victim)
+        .expect_err("cancelled stream must not reassemble");
+    let msg = err.to_string();
+    assert!(msg.contains("before any chunk") || msg.contains("early")
+            || msg.contains("failed"), "unexpected error: {msg}");
+
+    drop(client);
+    net.shutdown();
+    queue.close();
+    drop(pool);
+    assert_eq!(metrics.lock().unwrap().cancelled_streams, 1);
+}
+
+#[test]
+fn tcp_rejects_malformed_frames_and_closes() {
+    let (h, mut net, addr) =
+        tcp_harness(serve_cfg(1, 8), Duration::ZERO);
+    let mut sock = std::net::TcpStream::connect(&addr).unwrap();
+    // valid length prefix, garbage JSON body
+    use std::io::Write;
+    sock.write_all(&(3u32).to_be_bytes()).unwrap();
+    sock.write_all(b"{x}").unwrap();
+    let reply = read_frame(&mut sock, net::MAX_FRAME_LEN)
+        .unwrap().expect("server should report the framing error");
+    assert_eq!(reply.get("type").and_then(|v| v.as_str()),
+               Some("error"));
+    // ...and then close the connection (framing is unrecoverable)
+    assert!(read_frame(&mut sock, net::MAX_FRAME_LEN).unwrap().is_none(),
+            "connection must close after a malformed frame");
+    net.shutdown();
+    h.queue.close();
+    drop(h.pool);
+}
+
+#[test]
+fn tcp_rejects_oversized_frames_and_closes() {
+    let (h, mut net, addr) =
+        tcp_harness(serve_cfg(1, 8), Duration::ZERO);
+    let mut sock = std::net::TcpStream::connect(&addr).unwrap();
+    use std::io::Write;
+    sock.write_all(&((net::MAX_FRAME_LEN as u32) + 1).to_be_bytes())
+        .unwrap();
+    sock.flush().unwrap();
+    let reply = read_frame(&mut sock, net::MAX_FRAME_LEN)
+        .unwrap().expect("server should report the oversized frame");
+    assert_eq!(reply.get("type").and_then(|v| v.as_str()),
+               Some("error"));
+    assert!(reply.get("error").unwrap().as_str().unwrap()
+                .contains("oversized"));
+    assert!(read_frame(&mut sock, net::MAX_FRAME_LEN).unwrap().is_none(),
+            "connection must close after an oversized frame");
+    net.shutdown();
+    h.queue.close();
+    drop(h.pool);
+}
+
+#[test]
+fn tcp_rejects_out_of_range_steps() {
+    // compute is uninterruptible once a denoise loop starts, so the
+    // frontend must bound per-request steps
+    let (h, mut net, addr) =
+        tcp_harness(serve_cfg(1, 8), Duration::ZERO);
+    let mut client = NetClient::connect(&addr).unwrap();
+    let err = client.submit(0, 1, 0, "s90", true)
+        .expect_err("steps=0 must be rejected");
+    assert!(err.to_string().contains("out of range"), "{err}");
+    let err = client.submit(0, 1, net::MAX_NET_STEPS + 1, "s90", false)
+        .expect_err("huge steps must be rejected");
+    assert!(err.to_string().contains("out of range"), "{err}");
+    // in-range submits still work afterwards
+    let id = client.submit(0, 3, 4, "s90", true).unwrap();
+    assert!(client.collect_stream(id).is_ok());
+    drop(client);
+    net.shutdown();
+    h.queue.close();
+    drop(h.pool);
+}
+
+#[test]
+fn tcp_unknown_op_keeps_the_connection_alive() {
+    let (h, mut net, addr) =
+        tcp_harness(serve_cfg(1, 8), Duration::ZERO);
+    let mut client = NetClient::connect(&addr).unwrap();
+    client.send(&Json::obj().push("op", "frobnicate")).unwrap();
+    let reply = client.next_frame().unwrap();
+    assert_eq!(reply.get("type").and_then(|v| v.as_str()),
+               Some("error"));
+    // framing stayed intact: the next verb still works
+    let snap = client.metrics_snapshot().unwrap();
+    assert!(snap.get("streaming").is_some());
+    drop(client);
+    net.shutdown();
+    h.queue.close();
+    drop(h.pool);
+}
+
+#[test]
+fn framing_helpers_roundtrip_over_a_buffer() {
+    // pure-buffer sanity check for the helpers the tests above lean on
+    let j = Json::obj().push("op", "submit").push("seed", 7.0);
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &j).unwrap();
+    write_frame(&mut buf, &Json::obj().push("op", "metrics")).unwrap();
+    let mut cur = std::io::Cursor::new(buf);
+    assert_eq!(read_frame(&mut cur, net::MAX_FRAME_LEN).unwrap().unwrap(),
+               j);
+    assert!(read_frame(&mut cur, net::MAX_FRAME_LEN).unwrap().is_some());
+    assert!(read_frame(&mut cur, net::MAX_FRAME_LEN).unwrap().is_none());
+}
