@@ -130,6 +130,68 @@ fn main() -> Result<()> {
         }
     }
 
+    // ------- native pure-Rust kernels (always runs: no artifacts) ----
+    // CI's smoke row: the native sparse/linear kernel must beat the
+    // native full-softmax kernel, or block skipping is structurally
+    // broken.  CPU wall-clock, not a GPU proxy — same caveat as above.
+    // N=512 (not 256): t_n=32 keeps 3/2/1 blocks at s90/s95/s97, so
+    // the three tier rows measure genuinely different work — at t_n=16
+    // s95 and s97 would both round to kept=1 and differ only by noise.
+    println!("\n=== Fig. 4 companion: native pure-Rust kernels (N=512, \
+              d=64; artifact-free) ===\n");
+    {
+        use sla2::runtime::native::attention::{self, Sla2Params};
+        let (n, d, b_q, b_k) = (512usize, 64usize, 32usize, 16usize);
+        let t_m = n / b_q;
+        let mut rng = Pcg32::seeded(9);
+        let q = rng.normal_vec(n * d);
+        let k = rng.normal_vec(n * d);
+        let v = rng.normal_vec(n * d);
+        let eye: Vec<f32> = (0..d * d)
+            .map(|i| if i % (d + 1) == 0 { 1.0 } else { 0.0 })
+            .collect();
+        let alpha = vec![0.0f32; t_m];
+        let c = flops::full_attention_flops(n, d);
+        let mut t = Table::new(&["kernel", "sparsity", "mean ms",
+                                 "p99 ms", "speedup vs native full"]);
+        let full = run_for("native_full", 2, 0.5, 30, || {
+            attention::full_attention(&q, &k, &v, n, d);
+        });
+        let mut emit = |name: &str, sparsity: f64,
+                        b: &sla2::util::bench::BenchResult| {
+            t.row(vec![name.into(), format!("{:.0}%", sparsity * 100.0),
+                       format!("{:.2}", b.mean_ms()),
+                       format!("{:.2}", b.summary.p99 * 1e3),
+                       format!("{:.2}x",
+                               full.summary.mean / b.summary.mean)]);
+            json_rows.push(b.to_json()
+                .push("section", "native_measured")
+                .push("method", name)
+                .push("sparsity", sparsity)
+                .push("eff_gops", c / b.summary.mean / 1e9)
+                .push("speedup_vs_full",
+                      full.summary.mean / b.summary.mean));
+        };
+        emit("native_full", 0.0, &full);
+        for (tier, k_pct, quant) in [("s90", 0.10, true),
+                                     ("s95", 0.05, true),
+                                     ("s97", 0.03, true),
+                                     ("s95_noquant", 0.05, false)] {
+            let p = Sla2Params { proj_q: &eye, proj_k: &eye,
+                                 alpha_logit: &alpha };
+            let t_n = n / b_k;
+            let kept = attention::top_k_count(k_pct, t_n);
+            let sparsity = 1.0 - kept as f64 / t_n as f64;
+            let b = run_for(&format!("native_sla2_{tier}"), 2, 0.5, 30,
+                            || {
+                attention::sla2_attention(&q, &k, &v, &p, k_pct, n, d,
+                                          b_q, b_k, quant);
+            });
+            emit(&format!("native_sla2_{tier}"), sparsity, &b);
+        }
+        t.print();
+    }
+
     if let Some(path) = args.json_path("BENCH_fig4_kernel.json") {
         let report = bench::report("fig4_kernel", json_rows);
         bench::write_json(&path, &report)?;

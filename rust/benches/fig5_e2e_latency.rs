@@ -41,6 +41,10 @@ fn main() -> Result<()> {
     let artifacts = args.str("artifacts", "artifacts");
     let model = args.str("model", "dit-tiny");
     let steps = args.usize("steps", 6);
+    // "xla" replays AOT artifacts (skips sections when absent);
+    // "--backend native" measures the pure-Rust SLA2 backend and runs
+    // every measured section artifact-free
+    let backend = args.str("backend", "xla");
     let mut json_rows: Vec<Json> = Vec::new();
 
     // ---------------- modelled paper bars ----------------------------
@@ -104,6 +108,7 @@ fn main() -> Result<()> {
             model: model.clone(),
             variant: variant.to_string(),
             tier: tier.to_string(),
+            backend: backend.clone(),
             sample_steps: steps,
             max_batch: 1,
             batch_window_ms: 0,
@@ -119,7 +124,13 @@ fn main() -> Result<()> {
             }
         };
         let req = [GenRequest::new(0, 1, 7, steps, tier)];
-        engine.generate(&req)?; // warm: compile outside the timer
+        // warm: compile outside the timer; a combination this backend
+        // cannot serve (e.g. native has no vsa/sla/vmoba) skips its
+        // row instead of aborting the whole bench
+        if let Err(err) = engine.generate(&req) {
+            println!("  {variant}@{tier}: SKIP ({err:#})");
+            continue;
+        }
         let t0 = std::time::Instant::now();
         let reps = 2;
         for r in 0..reps {
@@ -169,6 +180,7 @@ fn main() -> Result<()> {
             model: model.clone(),
             variant: "sla2".into(),
             tier: "s90".into(),
+            backend: backend.clone(),
             sample_steps: steps,
             max_batch: 1,       // per-request dispatch: pure fan-out
             batch_window_ms: 0,
@@ -245,6 +257,7 @@ fn main() -> Result<()> {
             model: model.clone(),
             variant: "sla2".into(),
             tier: "s90".into(),
+            backend: backend.clone(),
             sample_steps: steps,
             max_batch: 1,
             batch_window_ms: 0,
@@ -332,6 +345,7 @@ fn main() -> Result<()> {
         model: model.clone(),
         variant: "sla2".into(),
         tier: "s90".into(),
+        backend: backend.clone(),
         sample_steps: steps,
         max_batch: 1,
         batch_window_ms: 0,

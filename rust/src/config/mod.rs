@@ -91,6 +91,11 @@ pub struct ServeConfig {
     pub model: String,
     pub variant: String,
     pub tier: String,
+    /// compute backend: `"xla"` (AOT artifacts through PJRT, the
+    /// default) or `"native"` (pure-Rust CPU SLA2 — no artifacts
+    /// needed; uses the manifest's weights when present, a seeded init
+    /// otherwise)
+    pub backend: String,
     pub sample_steps: usize,
     pub max_batch: usize,
     /// how long the batcher waits to fill a batch before dispatching
@@ -125,6 +130,7 @@ impl Default for ServeConfig {
             model: "dit-tiny".into(),
             variant: "sla2".into(),
             tier: "s90".into(),
+            backend: "xla".into(),
             sample_steps: 8,
             max_batch: 2,
             batch_window_ms: 5,
@@ -146,6 +152,7 @@ impl ServeConfig {
             model: args.str("model", &d.model),
             variant: args.str("variant", &d.variant),
             tier: args.str("tier", &d.tier),
+            backend: args.str("backend", &d.backend),
             sample_steps: args.usize("steps", d.sample_steps),
             max_batch: args.usize("max-batch", d.max_batch),
             batch_window_ms: args.u64("batch-window-ms", d.batch_window_ms),
@@ -174,6 +181,7 @@ impl ServeConfig {
             model: s("model", &d.model),
             variant: s("variant", &d.variant),
             tier: s("tier", &d.tier),
+            backend: s("backend", &d.backend),
             sample_steps: u("sample_steps", d.sample_steps),
             max_batch: u("max_batch", d.max_batch),
             batch_window_ms: u("batch_window_ms",
@@ -286,6 +294,15 @@ mod tests {
         let s = ServeConfig::from_json(&j);
         assert_eq!(s.model, "m");
         assert_eq!(s.max_batch, 8);
+    }
+
+    #[test]
+    fn backend_knob_parses_with_default() {
+        assert_eq!(ServeConfig::default().backend, "xla");
+        let a = Args::parse_from(["--backend", "native"].map(String::from));
+        assert_eq!(ServeConfig::from_args(&a).backend, "native");
+        let j = Json::parse(r#"{"backend":"native"}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).backend, "native");
     }
 
     #[test]

@@ -1,64 +1,56 @@
-//! The engine: owns the PJRT runtime and turns request batches into
-//! clips by driving the diffusion sampling loop over denoise HLOs.
+//! The engine: owns a [`ComputeBackend`] and turns request batches
+//! into clips by driving the diffusion sampling loop over denoise
+//! forwards.
 //!
-//! Runs on ONE thread (PjRtClient is `Rc`-based); the sharded pool
-//! (`coordinator::pool`) runs one engine per shard thread.  Model
-//! parameters are converted to XLA literals once at startup and reused
-//! across every step of every request; inside the sampling loop the
-//! stacked-latent buffer, the per-step `ts` tensor and the label
-//! literal are all allocated once per batch and reused across steps —
-//! the per-step cost is only the literal conversion of the data that
-//! actually changed.
+//! Runs on ONE thread (the XLA backend's PjRtClient is `Rc`-based);
+//! the sharded pool (`coordinator::pool`) runs one engine per shard
+//! thread.  The engine is backend-agnostic: it owns noise init, the
+//! batch-size plan, the Euler loop and the emission order, and asks
+//! the backend for (a) its batch-size capability and (b) one velocity
+//! evaluation per step.  Inside the sampling loop the stacked-latent
+//! buffer and the per-step `ts` tensor are allocated once per batch
+//! and mutated across steps — the per-step cost is the backend's
+//! conversion/evaluation of the tensors that actually changed.
 
 use std::time::Instant;
 
 use anyhow::{Context, Result};
-use xla::Literal;
 
-use super::batcher::{denoise_artifact_name, plan_batches,
-                     supported_batch_sizes};
+use super::batcher::plan_support;
 use super::pool::BatchProcessor;
 use super::request::{GenRequest, RequestMetrics};
 use crate::config::{ModelConfig, ServeConfig};
 use crate::diffusion;
-use crate::runtime::Runtime;
+use crate::runtime::ComputeBackend;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 
 pub struct Engine {
-    runtime: Runtime,
+    backend: Box<dyn ComputeBackend>,
     pub model: ModelConfig,
     pub serve: ServeConfig,
-    /// model parameters, pre-converted to literals (hot-loop reuse)
-    params: Vec<Literal>,
 }
 
 impl Engine {
+    /// Build the backend `serve.backend` names ("xla" | "native") and
+    /// wrap it.  For "xla", `artifacts_dir` must hold a manifest; for
+    /// "native" a manifest is used when present (shared weights with
+    /// XLA) and a built-in config + seeded init otherwise.
     pub fn new(artifacts_dir: &str, serve: ServeConfig) -> Result<Engine> {
-        let runtime = Runtime::load(artifacts_dir)?;
-        let model = runtime.manifest().config(&serve.model)?.clone();
-        // host-side parameter tensors are process-shared: the file
-        // read + f32 decode happens once, not once per shard; only
-        // the (Rc-based, thread-confined) literal conversion is ours
-        let params = crate::runtime::shared()
-            .params(runtime.manifest(), &serve.model)?;
-        let params = params.iter()
-            .map(crate::runtime::tensor_to_literal)
-            .collect::<Result<Vec<_>>>()
-            .context("params -> literals")?;
-        Ok(Engine { runtime, model, serve, params })
+        let backend = crate::runtime::make_backend(artifacts_dir, &serve)?;
+        let model = backend.model().clone();
+        Ok(Engine { backend, model, serve })
     }
 
-    /// Replace the parameter set (e.g. after training).
+    /// Replace the parameter set (e.g. after training).  Tensors are
+    /// in canonical flatten order.
     pub fn set_params(&mut self, params: &[Tensor]) -> Result<()> {
-        self.params = params.iter()
-            .map(crate::runtime::tensor_to_literal)
-            .collect::<Result<Vec<_>>>()?;
-        Ok(())
+        self.backend.set_params(params)
     }
 
-    pub fn runtime(&self) -> &Runtime {
-        &self.runtime
+    /// The compute backend (platform, counters, capability queries).
+    pub fn backend(&self) -> &dyn ComputeBackend {
+        &*self.backend
     }
 
     fn variant_for_tier<'a>(&'a self, tier: &str) -> &'a str {
@@ -82,6 +74,10 @@ impl Engine {
     /// sub-batch are delivered while later sub-batches are still
     /// denoising.  Emission is in input order; an error aborts the
     /// remaining sub-batches but everything already emitted stands.
+    ///
+    /// The sub-batch plan is a backend capability query: exact
+    /// manifest sizes for XLA (min-launch cover), one single launch
+    /// for the native backend ([`crate::runtime::BatchSupport::Any`]).
     pub fn generate_streaming(
         &self, reqs: &[GenRequest],
         emit: &mut dyn FnMut(usize, Tensor, RequestMetrics))
@@ -89,27 +85,21 @@ impl Engine {
         let first = reqs.first().context("empty batch")?;
         let tier = &first.tier;
         let variant = self.variant_for_tier(tier);
-        let sizes = supported_batch_sizes(self.runtime.manifest(),
-                                          &self.model.name, variant, tier);
-        anyhow::ensure!(!sizes.is_empty(),
-                        "no denoise artifacts for {}/{}/{} — re-run `make \
-                         artifacts`", self.model.name, variant, tier);
-        let plan = plan_batches(reqs.len(),
-                                if sizes.contains(&1) { &sizes }
-                                else { &[1] });
+        let support = self.backend.supported_batch_sizes(variant, tier);
+        let plan = plan_support(reqs.len(), &support)
+            .with_context(|| format!("planning {}/{}/{}",
+                                     self.model.name, variant, tier))?;
         let mut cursor = 0;
         let dispatch_start = Instant::now();
         for batch_size in plan {
             let chunk = &reqs[cursor..cursor + batch_size];
-            let artifact = denoise_artifact_name(
-                &self.model.name, variant, tier, batch_size);
             let t0 = Instant::now();
             // requests in later sub-batches waited in the engine for
             // the earlier ones: count that toward queue wait so no
             // latency goes unreported
             let chunk_wait_ms =
                 t0.duration_since(dispatch_start).as_secs_f64() * 1e3;
-            let clips = self.sample_batch(&artifact, chunk)?;
+            let clips = self.sample_batch(variant, tier, chunk)?;
             let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
             for (j, (req, clip)) in chunk.iter().zip(clips).enumerate() {
                 emit(cursor + j, clip, RequestMetrics {
@@ -129,13 +119,18 @@ impl Engine {
 
     /// The diffusion sampling loop for one fixed-size sub-batch.
     ///
-    /// Allocation discipline: the stacked latent `x`, the per-step
-    /// `ts` tensor and the label literal are each allocated ONCE and
-    /// mutated/reused across all steps; the loop only converts the two
-    /// tensors whose data changed into fresh literals.
-    fn sample_batch(&self, artifact: &str, reqs: &[GenRequest])
+    /// Allocation discipline: the stacked latent `x` and the per-step
+    /// `ts` tensor are each allocated ONCE and mutated/reused across
+    /// all steps; per-step conversion of the changed tensors is the
+    /// backend's concern.
+    fn sample_batch(&self, variant: &str, tier: &str, reqs: &[GenRequest])
                     -> Result<Vec<Tensor>> {
         let b = reqs.len();
+        // warm the backend BEFORE building noise: XLA compiles the
+        // executable here (instead of inside step 1), and the native
+        // backend rejects an unimplemented variant/tier before any
+        // per-request work happens
+        self.backend.compile(variant, tier, b)?;
         let [t, h, w, c] = self.model.video;
         let clip_len = t * h * w * c;
         // initial noise latents from per-request seeds, written
@@ -153,8 +148,7 @@ impl Engine {
             }
         }
         let labels: Vec<i32> = reqs.iter().map(|r| r.class_label).collect();
-        let ys_lit = crate::runtime::tensor_to_literal(
-            &Tensor::from_i32(&[b], labels)?)?;
+        let ys = Tensor::from_i32(&[b], labels)?;
         let mut ts = Tensor::from_f32(&[b], vec![0.0; b])?;
 
         let grid = diffusion::timestep_grid(reqs[0].steps);
@@ -163,12 +157,7 @@ impl Engine {
             for v in ts.f32s_mut()? {
                 *v = t_cur;
             }
-            let x_lit = crate::runtime::tensor_to_literal(&x)?;
-            let ts_lit = crate::runtime::tensor_to_literal(&ts)?;
-            let vel = self.runtime.execute_literal_refs_with_prefix(
-                artifact, &self.params, &[&x_lit, &ts_lit, &ys_lit])?
-                .into_iter().next()
-                .context("denoise returned nothing")?;
+            let vel = self.backend.execute(variant, tier, &x, &ts, &ys)?;
             diffusion::euler_step(&mut x, &vel, t_cur, t_next);
         }
         x.unstack()
@@ -189,7 +178,6 @@ impl BatchProcessor for Engine {
     }
 
     fn counters(&self) -> (u64, u64) {
-        let (compiles, executions) = self.runtime.counters();
-        (compiles as u64, executions as u64)
+        self.backend.counters()
     }
 }

@@ -41,6 +41,8 @@ pub struct ServerMetrics {
     /// the live queue, attached by the server for per-class depth
     /// gauges (lock order: metrics -> queue, never the reverse)
     queue: Option<Arc<RequestQueue>>,
+    /// compute backend name ("xla" | "native"), attached by the server
+    backend: Option<String>,
 }
 
 impl Default for ServerMetrics {
@@ -68,6 +70,7 @@ impl ServerMetrics {
             shards: Vec::new(),
             dispatch: None,
             queue: None,
+            backend: None,
         }
     }
 
@@ -84,6 +87,13 @@ impl ServerMetrics {
     /// Wire in the live queue so snapshots can report per-class depth.
     pub fn attach_queue(&mut self, queue: Arc<RequestQueue>) {
         self.queue = Some(queue);
+    }
+
+    /// Record which compute backend serves this server's requests;
+    /// `"native"` additionally surfaces the process-wide native-kernel
+    /// counters in every snapshot.
+    pub fn attach_backend(&mut self, backend: &str) {
+        self.backend = Some(backend.to_string());
     }
 
     pub fn record_batch(&mut self, size: usize, steps: usize,
@@ -170,6 +180,16 @@ impl ServerMetrics {
                 .push("cold_routes",
                       d.cold_routes.load(Ordering::Relaxed) as usize));
         }
+        if let Some(b) = &self.backend {
+            j = j.push("backend", b.as_str());
+            // the native-kernel counters are process-wide (shared by
+            // every native backend in this process, like the compile
+            // cache) — surfaced whenever a native server is attached
+            if b == "native" {
+                j = j.push("native_kernels",
+                           crate::runtime::native::stats().snapshot());
+            }
+        }
         if let Some(q) = &self.queue {
             let depths: Vec<Json> = q.class_depths().into_iter()
                 .map(|(k, n)| Json::obj()
@@ -217,8 +237,25 @@ mod tests {
         assert!(s.get("shards").is_none());
         assert!(s.get("dispatch").is_none());
         assert!(s.get("queue_depth_per_class").is_none());
+        assert!(s.get("backend").is_none());
         // the process-wide compile-cache section is always present
         assert!(s.get("compile_cache").is_some());
+    }
+
+    #[test]
+    fn backend_section_surfaces_name_and_native_counters() {
+        let mut m = ServerMetrics::new();
+        m.attach_backend("xla");
+        let s = m.snapshot();
+        assert_eq!(s.get("backend").unwrap().as_str(), Some("xla"));
+        assert!(s.get("native_kernels").is_none(),
+                "xla servers must not imply native kernel activity");
+        m.attach_backend("native");
+        let s = m.snapshot();
+        assert_eq!(s.get("backend").unwrap().as_str(), Some("native"));
+        let nk = s.get("native_kernels").expect("native counters");
+        assert!(nk.get("sparse_tiles").is_some());
+        assert!(nk.get("denoise_forwards").is_some());
     }
 
     #[test]

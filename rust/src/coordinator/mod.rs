@@ -46,10 +46,14 @@
 //! ```
 //!
 //! **Shard model** — `ServeConfig::num_shards` worker threads (default:
-//! available cores minus one).  Each shard owns a full `Runtime`; the
-//! `Send + Sync` halves of startup (manifest parse, parameter decode)
-//! are process-shared, and nothing PJRT-related ever crosses a thread
-//! boundary.
+//! available cores minus one).  Each shard owns a full
+//! [`crate::runtime::ComputeBackend`] (`ServeConfig::backend`: PJRT
+//! `Runtime` for `"xla"`, the pure-Rust SLA2 implementation for
+//! `"native"`); the `Send + Sync` halves of startup (manifest parse,
+//! parameter decode) are process-shared, and nothing PJRT-related ever
+//! crosses a thread boundary.  The native backend serves any batch
+//! size in one launch, so its engines skip sub-batch splitting
+//! entirely.
 //!
 //! **Scheduling** — requests are bucketed by compatibility class
 //! `(tier, steps)` at push time ([`queue::ClassKey`]).  The
@@ -106,7 +110,7 @@ pub mod request;
 pub mod server;
 pub mod stream;
 
-pub use batcher::plan_batches;
+pub use batcher::{plan_batches, plan_batches_greedy, plan_support};
 pub use engine::Engine;
 pub use loadgen::{run_trace, TraceConfig, TraceReport};
 pub use metrics::ServerMetrics;

@@ -1,8 +1,9 @@
-//! Sharded engine pool: N worker shards, each owning its own PJRT
-//! runtime (the `xla` client is `Rc`-based and never crosses threads,
-//! so every shard compiles and caches its own executables), fed by a
-//! dispatcher that pops compatible batches off the shared
-//! [`RequestQueue`] and routes each to an idle shard.
+//! Sharded engine pool: N worker shards, each owning its own compute
+//! backend (for XLA the `Rc`-based client never crosses threads, so
+//! every shard compiles and caches its own executables; the native
+//! backend has nothing to compile but keeps the same one-engine-per-
+//! thread shape), fed by a dispatcher that pops compatible batches off
+//! the shared [`RequestQueue`] and routes each to an idle shard.
 //!
 //! Dispatch policy: the dispatcher claims a free shard FIRST, then
 //! pops a batch.  While every shard is busy, requests stay in the

@@ -127,7 +127,11 @@ impl Server {
         let queue = Arc::new(RequestQueue::with_policy(
             serve.queue_capacity, policy));
         let metrics = Arc::new(Mutex::new(ServerMetrics::new()));
-        metrics.lock().unwrap().attach_queue(Arc::clone(&queue));
+        {
+            let mut m = metrics.lock().unwrap();
+            m.attach_queue(Arc::clone(&queue));
+            m.attach_backend(&serve.backend);
+        }
         let dir = artifacts_dir.to_string();
         let cfg = serve.clone();
         let pool = EnginePool::start_with(
@@ -141,9 +145,10 @@ impl Server {
                 if shard == 0 {
                     crate::info!(
                         "engine up: model={} variant={} tier={} \
-                         platform={}", engine.model.name,
+                         backend={} platform={}", engine.model.name,
                         engine.serve.variant, engine.serve.tier,
-                        engine.runtime().platform());
+                        engine.backend().name(),
+                        engine.backend().platform());
                 }
                 Ok(engine)
             })?;

@@ -23,7 +23,12 @@ use sla2::util::cli::Args;
 use sla2::util::rng::Pcg32;
 
 const USAGE: &str = "\
-usage: sla2 <command> [--artifacts DIR] [flags]
+usage: sla2 <command> [--artifacts DIR] [--backend xla|native] [flags]
+
+every serving command takes --backend: \"xla\" (default) replays the
+AOT HLO artifacts through PJRT; \"native\" runs the pure-Rust SLA2
+forward on the CPU — no artifacts needed (weights come from the
+manifest when present, a seeded init otherwise).
 
 commands:
   info          show manifest contents and runtime platform

@@ -1,0 +1,266 @@
+//! The compute-backend abstraction: one denoise forward, any engine.
+//!
+//! [`ComputeBackend`] is the seam between the serving coordinator and
+//! whatever actually evaluates the DiT velocity: the engine's sampling
+//! loop owns noise init / Euler integration / batching and calls
+//! [`ComputeBackend::execute`] once per denoise step.  Two
+//! implementations exist:
+//!
+//! * [`XlaBackend`] — the original path: AOT HLO artifacts executed
+//!   through PJRT ([`super::Runtime`]).  Static shapes, so each batch
+//!   size is its own executable ([`BatchSupport::Exact`]).
+//! * [`crate::runtime::native::NativeBackend`] — a pure-Rust CPU
+//!   implementation of the SLA2 forward math (router, block-sparse
+//!   softmax, linear branch, alpha mix, int8 fake-quant).  No
+//!   artifacts, no compiles, any batch size in one launch
+//!   ([`BatchSupport::Any`]).
+//!
+//! `ServeConfig::backend` ("xla" | "native") picks the implementation
+//! via [`make_backend`]; everything downstream of the engine (pool,
+//! scheduler, streaming, TCP) is backend-agnostic.
+
+use std::cell::RefCell;
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use crate::config::{ModelConfig, ServeConfig};
+use crate::tensor::Tensor;
+
+use super::executor::{tensor_to_literal, Runtime};
+
+/// How a backend constrains the batch sizes it can serve for one
+/// (variant, tier) combination.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchSupport {
+    /// Only these exact sizes run (static-shape XLA executables; one
+    /// artifact per size).  Empty = the combination is unavailable.
+    Exact(Vec<usize>),
+    /// Any batch size runs in a single launch (the native backend).
+    Any,
+}
+
+/// A compute backend evaluates ONE denoise forward pass; the engine
+/// owns everything around it (sampling loop, batching, reply path).
+///
+/// Implementations may be `!Send` (the PJRT client is `Rc`-based);
+/// like the engine that owns them, backends are built on their shard's
+/// thread and never migrate.  Interior mutability covers caches and
+/// counters, so every method takes `&self`.
+pub trait ComputeBackend {
+    /// Short stable identifier: `"xla"` or `"native"` (surfaced in
+    /// metrics and logs).
+    fn name(&self) -> &'static str;
+
+    /// Human-readable execution platform (e.g. PJRT's platform name,
+    /// or the native thread-pool width).
+    fn platform(&self) -> String;
+
+    /// The model geometry this backend was loaded for.
+    fn model(&self) -> &ModelConfig;
+
+    /// Batch sizes servable for (variant, tier).
+    fn supported_batch_sizes(&self, variant: &str, tier: &str)
+                             -> BatchSupport;
+
+    /// Warm whatever the backend needs for this shape (XLA: compile
+    /// the executable).  Optional — `execute` warms lazily too.
+    fn compile(&self, variant: &str, tier: &str, batch: usize)
+               -> Result<()>;
+
+    /// One denoise forward: `x` is the stacked latent `(b, T, H, W,
+    /// C)`, `ts` the per-request timestep `(b,)` f32, `ys` the class
+    /// labels `(b,)` i32.  Returns the velocity prediction, shaped
+    /// like `x`.
+    fn execute(&self, variant: &str, tier: &str, x: &Tensor, ts: &Tensor,
+               ys: &Tensor) -> Result<Tensor>;
+
+    /// Replace the parameter set (canonical flatten order — the order
+    /// `manifest.params` records and the trainer emits).
+    fn set_params(&self, params: &[Tensor]) -> Result<()>;
+
+    /// Cumulative (compiles, executions) for the metrics rollup.
+    fn counters(&self) -> (u64, u64);
+}
+
+/// Build the backend `serve.backend` names.  `artifacts_dir` is
+/// required for `"xla"`; `"native"` uses it when a manifest is present
+/// (shared config + params) and falls back to its built-in model
+/// configs + seeded parameters otherwise.
+pub fn make_backend(artifacts_dir: &str, serve: &ServeConfig)
+                    -> Result<Box<dyn ComputeBackend>> {
+    match serve.backend.as_str() {
+        "xla" => Ok(Box::new(XlaBackend::load(artifacts_dir,
+                                              &serve.model)?)),
+        "native" => Ok(Box::new(super::native::NativeBackend::load(
+            artifacts_dir, &serve.model)?)),
+        other => anyhow::bail!(
+            "unknown backend {other:?} (expected \"xla\" or \"native\")"),
+    }
+}
+
+/// The artifact name for a (model, variant, tier, batch) combination —
+/// single source of naming truth, mirrored by aot.py.
+pub fn denoise_artifact_name(model: &str, variant: &str, tier: &str,
+                             batch: usize) -> String {
+    format!("denoise_{model}_{variant}_{tier}_b{batch}")
+}
+
+/// Batch sizes the manifest carries for (model, variant, tier).
+pub fn manifest_batch_sizes(manifest: &super::Manifest, model: &str,
+                            variant: &str, tier: &str) -> Vec<usize> {
+    let prefix = format!("denoise_{model}_{variant}_{tier}_b");
+    let mut sizes: Vec<usize> = manifest
+        .artifacts
+        .keys()
+        .filter_map(|name| name.strip_prefix(&prefix))
+        .filter_map(|suffix| suffix.parse().ok())
+        .collect();
+    sizes.sort_unstable();
+    sizes
+}
+
+/// The PJRT/XLA implementation of [`ComputeBackend`]: wraps a
+/// [`Runtime`] plus the model parameters pre-converted to literals, so
+/// the per-step cost is only the conversion of the tensors that
+/// actually changed (`x`, `ts`) — the artifact name and the label
+/// literal are cached across the steps of a sub-batch (the sampling
+/// loop calls `execute` with identical `ys` every step; re-converting
+/// it per step would regress the engine's old label-literal hoist).
+pub struct XlaBackend {
+    runtime: Runtime,
+    model: ModelConfig,
+    /// model parameters as literals (hot-loop reuse across every step
+    /// of every request)
+    params: RefCell<Vec<Literal>>,
+    /// per-sub-batch invariants, reused while (variant, tier, batch,
+    /// labels) stay the same
+    step_cache: RefCell<Option<StepCache>>,
+}
+
+struct StepCache {
+    variant: String,
+    tier: String,
+    batch: usize,
+    ys: Vec<i32>,
+    ys_lit: Literal,
+    artifact: String,
+}
+
+impl XlaBackend {
+    pub fn load(artifacts_dir: &str, model: &str) -> Result<XlaBackend> {
+        let runtime = Runtime::load(artifacts_dir)?;
+        let model = runtime.manifest().config(model)?.clone();
+        // host-side parameter tensors are process-shared: the file
+        // read + f32 decode happens once, not once per shard; only
+        // the (Rc-based, thread-confined) literal conversion is ours
+        let params = super::shared()
+            .params(runtime.manifest(), &model.name)?;
+        let params = params.iter()
+            .map(tensor_to_literal)
+            .collect::<Result<Vec<_>>>()
+            .context("params -> literals")?;
+        Ok(XlaBackend {
+            runtime,
+            model,
+            params: RefCell::new(params),
+            step_cache: RefCell::new(None),
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    fn model(&self) -> &ModelConfig {
+        &self.model
+    }
+
+    fn supported_batch_sizes(&self, variant: &str, tier: &str)
+                             -> BatchSupport {
+        BatchSupport::Exact(manifest_batch_sizes(
+            self.runtime.manifest(), &self.model.name, variant, tier))
+    }
+
+    fn compile(&self, variant: &str, tier: &str, batch: usize)
+               -> Result<()> {
+        let name = denoise_artifact_name(&self.model.name, variant, tier,
+                                         batch);
+        self.runtime.executable(&name).map(|_| ())
+    }
+
+    fn execute(&self, variant: &str, tier: &str, x: &Tensor, ts: &Tensor,
+               ys: &Tensor) -> Result<Tensor> {
+        let batch = *x.shape.first().context("x must be batched")?;
+        let labels = ys.i32s()?;
+        let mut cache = self.step_cache.borrow_mut();
+        let hit = matches!(&*cache, Some(c) if c.batch == batch
+                           && c.ys == labels && c.variant == variant
+                           && c.tier == tier);
+        if !hit {
+            *cache = Some(StepCache {
+                variant: variant.to_string(),
+                tier: tier.to_string(),
+                batch,
+                ys: labels.to_vec(),
+                ys_lit: tensor_to_literal(ys)?,
+                artifact: denoise_artifact_name(&self.model.name,
+                                                variant, tier, batch),
+            });
+        }
+        let c = cache.as_ref().expect("populated above");
+        let x_lit = tensor_to_literal(x)?;
+        let ts_lit = tensor_to_literal(ts)?;
+        self.runtime
+            .execute_literal_refs_with_prefix(
+                &c.artifact, &self.params.borrow(),
+                &[&x_lit, &ts_lit, &c.ys_lit])?
+            .into_iter()
+            .next()
+            .with_context(|| format!("{}: denoise returned nothing",
+                                     c.artifact))
+    }
+
+    fn set_params(&self, params: &[Tensor]) -> Result<()> {
+        *self.params.borrow_mut() = params.iter()
+            .map(tensor_to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
+
+    fn counters(&self) -> (u64, u64) {
+        let (compiles, executions) = self.runtime.counters();
+        (compiles as u64, executions as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_naming() {
+        assert_eq!(denoise_artifact_name("dit-tiny", "sla2", "s90", 2),
+                   "denoise_dit-tiny_sla2_s90_b2");
+    }
+
+    #[test]
+    fn make_backend_rejects_unknown_name() {
+        let serve = ServeConfig {
+            backend: "cuda".into(),
+            ..ServeConfig::default()
+        };
+        let err = make_backend("/nonexistent", &serve).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown backend"));
+    }
+}

@@ -140,6 +140,7 @@ impl Runtime {
             bail!("{name}: expected {} inputs, got {} (prefix {} + {})",
                   spec.inputs.len(), total, prefix.len(), rest.len());
         }
+        let n_outputs = spec.outputs.len();
         let exe = self.executable(name)?;
         let refs: Vec<&Literal> =
             prefix.iter().chain(rest.iter().copied()).collect();
@@ -154,6 +155,12 @@ impl Runtime {
             .map_err(|e| anyhow::anyhow!("{name}: to_literal: {e}"))?;
         let elems = root.to_tuple()
             .map_err(|e| anyhow::anyhow!("{name}: untuple: {e}"))?;
+        // same output-count validation as `execute`: the hot path must
+        // not silently hand back a tuple the manifest never declared
+        if elems.len() != n_outputs {
+            bail!("{name}: manifest declares {n_outputs} outputs, \
+                   runtime returned {}", elems.len());
+        }
         elems.iter().map(literal_to_tensor).collect()
     }
 

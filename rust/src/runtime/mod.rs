@@ -1,4 +1,10 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Execution backends: PJRT/XLA artifact replay and the native
+//! pure-Rust SLA2 implementation, behind one [`ComputeBackend`] trait.
+//!
+//! [`backend`] defines the trait and the [`XlaBackend`] wrapper;
+//! [`native`] is the artifact-free CPU implementation; the rest of
+//! this module is the PJRT substrate ([`Runtime`], manifest parsing,
+//! the shared compile cache).
 //!
 //! The `xla` crate's `PjRtClient` is `Rc`-based (`!Send`), so a
 //! [`Runtime`] is confined to one thread — the coordinator runs it on a
@@ -16,10 +22,16 @@
 //! once, and per-artifact compiles are single-flighted across shards.
 
 mod artifact;
+pub mod backend;
 pub mod compile_cache;
 mod executor;
 pub mod hlo_audit;
+pub mod native;
 
 pub use artifact::{ArtifactSpec, Manifest, ParamsLayout, TensorSpec};
+pub use backend::{denoise_artifact_name, make_backend,
+                  manifest_batch_sizes, BatchSupport, ComputeBackend,
+                  XlaBackend};
 pub use compile_cache::{shared, CacheStats, SharedArtifacts};
 pub use executor::{tensor_to_literal, Runtime};
+pub use native::NativeBackend;

@@ -1,0 +1,554 @@
+//! Native SLA2 attention: the paper's forward math (Secs. 3–5) on
+//! host f32 slices, mirroring the Pallas kernel + jax references in
+//! `python/compile/kernels/` (`sla2_fwd.py`, `router.py`, `quant.py`,
+//! `ref.py`) operation-for-operation:
+//!
+//! * **router** — `P_c = softmax(proj_q(pool(Q)) proj_k(pool(K))^T /
+//!   sqrt d)`, hard Top-k per row (ties broken by rank, stable);
+//! * **sparse branch** `O_s` — FlashAttention-style online softmax
+//!   over the kept tiles only (never materializing N x N), optionally
+//!   through the INT8 fake-quant points of Alg. 2 (SageAttention
+//!   scheme: per-row Q/K scales, fixed 1/127 P scale, per-column V
+//!   scales within each tile);
+//! * **linear branch** `O_l` — running `H = sum phi(K_j)^T V_j`,
+//!   `Z = sum colsum(phi(K_j))` over the complement tiles, normalized
+//!   per query row;
+//! * **combination** — `O = a ⊙ O_s + (1-a) ⊙ O_l` with
+//!   `a = sigmoid(alpha_logit)` per query block (Eq. 13).
+//!
+//! All functions are single-head: `q`, `k`, `v` are `(n, d)` row-major
+//! slices.  Tile loops run in ascending `j` order like the kernel's
+//! `fori_loop`, so f32 accumulation order matches the lowered HLO.
+
+use super::linalg::{dot, matmul, matmul_nt, matmul_tn, sigmoid,
+                    softmax_rows};
+use super::stats;
+
+pub const NEG_INF: f32 = -1e30;
+/// Linear-branch denominator guard (ref.py EPS).
+const EPS_LINEAR: f32 = 1e-9;
+/// Quantization scale guard (quant.py EPS).
+const EPS_QUANT: f32 = 1e-8;
+const INT8_MAX: f32 = 127.0;
+
+/// Router + mixing parameters for one head (shared across heads of a
+/// block in the DiT — same layout as `model.py`).
+pub struct Sla2Params<'a> {
+    pub proj_q: &'a [f32],      // (d, d)
+    pub proj_k: &'a [f32],      // (d, d)
+    pub alpha_logit: &'a [f32], // (t_m,) pre-sigmoid mixing logits
+}
+
+/// Vanilla softmax attention — the 0%-sparsity baseline and the
+/// parity oracle (`ref.full_attention`).
+pub fn full_attention(q: &[f32], k: &[f32], v: &[f32], n: usize,
+                      d: usize) -> Vec<f32> {
+    stats().full_heads.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut s = matmul_nt(q, k, n, d, n);
+    for x in s.iter_mut() {
+        *x *= scale;
+    }
+    softmax_rows(&mut s, n);
+    matmul(&s, v, n, n, d)
+}
+
+/// SageAttention K-smoothing: subtract the per-feature mean over
+/// tokens (softmax-invariant, shrinks the INT8 dynamic range).
+pub fn smooth_k(k: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let mut mean = vec![0.0f32; d];
+    for row in k.chunks_exact(d) {
+        for (m, v) in mean.iter_mut().zip(row) {
+            *m += v;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f32;
+    }
+    let mut out = Vec::with_capacity(k.len());
+    for row in k.chunks_exact(d) {
+        out.extend(row.iter().zip(&mean).map(|(v, m)| v - m));
+    }
+    out
+}
+
+/// Linear-attention feature map: softmax over the feature dim (the
+/// paper's phi) — strictly positive, so the normalizer never vanishes.
+pub fn phi_softmax(x: &[f32], d: usize) -> Vec<f32> {
+    let mut out = x.to_vec();
+    softmax_rows(&mut out, d);
+    out
+}
+
+/// Mean-pool consecutive `block` rows: `(n, d) -> (n/block, d)`.
+pub fn pool_blocks(x: &[f32], n: usize, d: usize, block: usize)
+                   -> Vec<f32> {
+    let t = n / block;
+    let mut out = vec![0.0f32; t * d];
+    for (bi, chunk) in x.chunks_exact(block * d).enumerate() {
+        let orow = &mut out[bi * d..(bi + 1) * d];
+        for row in chunk.chunks_exact(d) {
+            for (o, v) in orow.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        for o in orow.iter_mut() {
+            *o /= block as f32;
+        }
+    }
+    out
+}
+
+/// Number of key blocks the sparse branch keeps per query block (at
+/// least 1 so no softmax row is empty) — mirrors `router.top_k_count`.
+pub fn top_k_count(k_pct: f64, t_n: usize) -> usize {
+    ((k_pct * t_n as f64).round() as usize).max(1)
+}
+
+/// The learnable router `R(Q, K) -> M_c` (Sec. 4, hard Top-k):
+/// `(t_m * t_n)` row-major mask, 1 = sparse branch.  Ties broken by
+/// index (stable sort), matching jnp's stable argsort rank trick.
+/// With identity projections this IS the SLA magnitude heuristic
+/// (Sec. 8, insight 1.c).
+pub fn router_mask(q: &[f32], k: &[f32], proj_q: &[f32], proj_k: &[f32],
+                   k_pct: f64, n: usize, d: usize, b_q: usize,
+                   b_k: usize) -> Vec<u8> {
+    let (t_m, t_n) = (n / b_q, n / b_k);
+    let qb = matmul(&pool_blocks(q, n, d, b_q), proj_q, t_m, d, d);
+    let kb = matmul(&pool_blocks(k, n, d, b_k), proj_k, t_n, d, d);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut p_c = matmul_nt(&qb, &kb, t_m, d, t_n);
+    for v in p_c.iter_mut() {
+        *v *= scale;
+    }
+    softmax_rows(&mut p_c, t_n);
+    let kc = top_k_count(k_pct, t_n);
+    let mut mask = vec![0u8; t_m * t_n];
+    let mut idx: Vec<usize> = Vec::with_capacity(t_n);
+    for (row, mrow) in p_c.chunks_exact(t_n)
+        .zip(mask.chunks_exact_mut(t_n))
+    {
+        idx.clear();
+        idx.extend(0..t_n);
+        // stable sort on descending score == jnp.argsort(-p) ranks
+        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a])
+            .unwrap_or(std::cmp::Ordering::Equal));
+        for &j in &idx[..kc] {
+            mrow[j] = 1;
+        }
+    }
+    mask
+}
+
+/// Symmetric per-row INT8 fake-quantization: returns the int8-valued
+/// f32 matrix and one scale per row (`x ≈ x_q * scale`).
+///
+/// Rounding: `f32::round` (half away from zero) vs jnp's half-to-even
+/// — they differ only on exact .5 boundaries, which random inputs hit
+/// with probability ~0; parity tests budget for the stray flip.
+fn quantize_rows_int8(x: &[f32], cols: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut xq = Vec::with_capacity(x.len());
+    let mut scales = Vec::with_capacity(x.len() / cols);
+    for row in x.chunks_exact(cols) {
+        let amax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let scale = amax / INT8_MAX + EPS_QUANT;
+        scales.push(scale);
+        xq.extend(row.iter()
+            .map(|v| (v / scale).round().clamp(-INT8_MAX, INT8_MAX)));
+    }
+    (xq, scales)
+}
+
+/// Per-column INT8 quantization of one V tile (`quantize_int8(v,
+/// axis=0)`): returns `(v_q, s_v)` with one scale per feature column.
+fn quantize_v_tile(v: &[f32], d: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut col_amax = vec![0.0f32; d];
+    for row in v.chunks_exact(d) {
+        for (m, x) in col_amax.iter_mut().zip(row) {
+            *m = m.max(x.abs());
+        }
+    }
+    let s_v: Vec<f32> = col_amax.iter()
+        .map(|a| a / INT8_MAX + EPS_QUANT)
+        .collect();
+    let mut vq = Vec::with_capacity(v.len());
+    for row in v.chunks_exact(d) {
+        vq.extend(row.iter().zip(&s_v)
+            .map(|(x, s)| (x / s).round().clamp(-INT8_MAX, INT8_MAX)));
+    }
+    (vq, s_v)
+}
+
+/// INT8-simulated `P_ij V_j` (Alg. 2 line 17): P has a fixed 1/127
+/// scale (it lives in [0, 1] post online-softmax rescaling); `vq`/`sv`
+/// come pre-quantized per tile from [`quantize_v_tile`].
+fn quant_matmul_pv(p: &[f32], vq: &[f32], sv: &[f32], rows: usize,
+                   b_k: usize, d: usize) -> Vec<f32> {
+    let pq: Vec<f32> = p.iter()
+        .map(|x| (x * INT8_MAX).round().clamp(0.0, INT8_MAX))
+        .collect();
+    let mut out = matmul(&pq, vq, rows, b_k, d);
+    for row in out.chunks_exact_mut(d) {
+        for (o, s) in row.iter_mut().zip(sv) {
+            *o *= s / INT8_MAX;
+        }
+    }
+    out
+}
+
+/// Loop-invariant INT8 state of one key tile: quantized K (per-row
+/// scales) and V (per-column scales) — hoisted out of the query-block
+/// loop, which would otherwise redo this `t_m` times per tile.
+struct QuantTile {
+    kq: Vec<f32>,
+    sk: Vec<f32>,
+    vq: Vec<f32>,
+    sv: Vec<f32>,
+}
+
+/// Full SLA2 op for one head (Eq. 13): route, run both branches, mix.
+///
+/// `mask` is the `(t_m * t_n)` block mask (1 = sparse).  `quant`
+/// enables the INT8 fake-quant forward of Sec. 5.  K-smoothing is
+/// applied before BOTH branches (Alg. 2 line 2).
+#[allow(clippy::too_many_arguments)]
+pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
+                             mask: &[u8], alpha_logit: &[f32], n: usize,
+                             d: usize, b_q: usize, b_k: usize,
+                             quant: bool) -> Vec<f32> {
+    use std::sync::atomic::Ordering::Relaxed;
+    let (t_m, t_n) = (n / b_q, n / b_k);
+    debug_assert_eq!(mask.len(), t_m * t_n);
+    debug_assert_eq!(alpha_logit.len(), t_m);
+    let kept: u64 = mask.iter().map(|&m| m as u64).sum();
+    let st = stats();
+    st.attn_heads.fetch_add(1, Relaxed);
+    st.sparse_tiles.fetch_add(kept, Relaxed);
+    st.linear_tiles.fetch_add((t_m * t_n) as u64 - kept, Relaxed);
+    if quant {
+        st.quant_heads.fetch_add(1, Relaxed);
+    }
+
+    let k_sm = smooth_k(k, n, d);
+    let qphi = phi_softmax(q, d);
+    let kphi = phi_softmax(&k_sm, d);
+    let scale = 1.0 / (d as f32).sqrt();
+
+    // per-tile INT8 K/V quantization — loop-invariant across query
+    // blocks (depends only on j), so hoist it like h_tiles/z_tiles
+    // instead of re-quantizing each kept tile t_m times
+    let quant_tiles: Option<Vec<QuantTile>> = quant.then(|| {
+        (0..t_n)
+            .map(|j| {
+                let (kq, sk) = quantize_rows_int8(
+                    &k_sm[j * b_k * d..(j + 1) * b_k * d], d);
+                let (vq, sv) = quantize_v_tile(
+                    &v[j * b_k * d..(j + 1) * b_k * d], d);
+                QuantTile { kq, sk, vq, sv }
+            })
+            .collect()
+    });
+
+    // per-key-block linear states H_j = phi(K_j)^T V_j, Z_j =
+    // colsum(phi(K_j)) — computed once, combined per query block in
+    // ascending j order (the kernel's fori_loop order)
+    let mut h_tiles = Vec::with_capacity(t_n);
+    let mut z_tiles = Vec::with_capacity(t_n);
+    for j in 0..t_n {
+        let kp = &kphi[j * b_k * d..(j + 1) * b_k * d];
+        let vt = &v[j * b_k * d..(j + 1) * b_k * d];
+        h_tiles.push(matmul_tn(kp, vt, b_k, d, d));
+        let mut z = vec![0.0f32; d];
+        for row in kp.chunks_exact(d) {
+            for (zz, x) in z.iter_mut().zip(row) {
+                *zz += x;
+            }
+        }
+        z_tiles.push(z);
+    }
+
+    let mut out = vec![0.0f32; n * d];
+    for i in 0..t_m {
+        let qi = &q[i * b_q * d..(i + 1) * b_q * d];
+        // hoisted Alg. 2 line 13: quant(Q_i) is loop-invariant
+        let q_quant = quant.then(|| quantize_rows_int8(qi, d));
+
+        // ---- sparse branch: online softmax over kept tiles ----------
+        let mut m_i = vec![NEG_INF; b_q];
+        let mut l_i = vec![0.0f32; b_q];
+        let mut acc = vec![0.0f32; b_q * d];
+        // ---- linear branch: complement accumulation -----------------
+        let mut h = vec![0.0f32; d * d];
+        let mut z = vec![0.0f32; d];
+
+        for j in 0..t_n {
+            if mask[i * t_n + j] == 0 {
+                for (hh, x) in h.iter_mut().zip(&h_tiles[j]) {
+                    *hh += x;
+                }
+                for (zz, x) in z.iter_mut().zip(&z_tiles[j]) {
+                    *zz += x;
+                }
+                continue;
+            }
+            let kj = &k_sm[j * b_k * d..(j + 1) * b_k * d];
+            let vj = &v[j * b_k * d..(j + 1) * b_k * d];
+            let mut s = match (&q_quant, &quant_tiles) {
+                (Some((qq, sq)), Some(qt)) => {
+                    let tile = &qt[j];
+                    let mut s = matmul_nt(qq, &tile.kq, b_q, d, b_k);
+                    for (r, srow) in s.chunks_exact_mut(b_k).enumerate() {
+                        for (x, skv) in srow.iter_mut().zip(&tile.sk) {
+                            *x *= sq[r] * skv;
+                        }
+                    }
+                    s
+                }
+                _ => matmul_nt(qi, kj, b_q, d, b_k),
+            };
+            for x in s.iter_mut() {
+                *x *= scale;
+            }
+            // one online-softmax step (Alg. 2 lines 13-18)
+            let mut p = s;
+            let mut corr = vec![0.0f32; b_q];
+            for r in 0..b_q {
+                let srow = &mut p[r * b_k..(r + 1) * b_k];
+                let row_max = srow.iter().cloned()
+                    .fold(f32::NEG_INFINITY, f32::max);
+                let m_new = m_i[r].max(row_max);
+                let mut sum = 0.0f32;
+                for x in srow.iter_mut() {
+                    *x = (*x - m_new).exp();
+                    sum += *x;
+                }
+                corr[r] = (m_i[r] - m_new).exp();
+                l_i[r] = corr[r] * l_i[r] + sum;
+                m_i[r] = m_new;
+            }
+            let pv = match &quant_tiles {
+                Some(qt) => quant_matmul_pv(&p, &qt[j].vq, &qt[j].sv,
+                                            b_q, b_k, d),
+                None => matmul(&p, vj, b_q, b_k, d),
+            };
+            for r in 0..b_q {
+                let arow = &mut acc[r * d..(r + 1) * d];
+                let prow = &pv[r * d..(r + 1) * d];
+                for (a, x) in arow.iter_mut().zip(prow) {
+                    *a = corr[r] * *a + x;
+                }
+            }
+        }
+
+        // Alg. 2 lines 23-24 + the Eq. 13 alpha mix
+        let a = sigmoid(alpha_logit[i]);
+        for r in 0..b_q {
+            let l_safe = if l_i[r] > 0.0 { l_i[r] } else { 1.0 };
+            let qp = &qphi[(i * b_q + r) * d..(i * b_q + r + 1) * d];
+            let den = dot(qp, &z) + EPS_LINEAR;
+            // o_l row = (phi(q) @ H) / den — row-vector times matrix
+            let mut ol = vec![0.0f32; d];
+            for (dd, &qv) in qp.iter().enumerate() {
+                let hrow = &h[dd * d..(dd + 1) * d];
+                for (o, hv) in ol.iter_mut().zip(hrow) {
+                    *o += qv * hv;
+                }
+            }
+            let orow = &mut out[(i * b_q + r) * d..(i * b_q + r + 1) * d];
+            for (c, o) in orow.iter_mut().enumerate() {
+                let o_s = acc[r * d + c] / l_safe;
+                *o = a * o_s + (1.0 - a) * ol[c] / den;
+            }
+        }
+    }
+    out
+}
+
+/// SLA2 with the learnable router (the full op `model.py` dispatches
+/// to for the `sla2` / `sla2_noquant` variants).
+#[allow(clippy::too_many_arguments)]
+pub fn sla2_attention(q: &[f32], k: &[f32], v: &[f32], p: &Sla2Params,
+                      k_pct: f64, n: usize, d: usize, b_q: usize,
+                      b_k: usize, quant: bool) -> Vec<f32> {
+    // router sees the UN-smoothed K (sla2.py order); smoothing is
+    // softmax-invariant for the router scores anyway
+    let mask = router_mask(q, k, p.proj_q, p.proj_k, k_pct, n, d, b_q,
+                           b_k);
+    sla2_attention_masked(q, k, v, &mask, p.alpha_logit, n, d, b_q, b_k,
+                          quant)
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    pub fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+        let num: f64 = a.iter().zip(b)
+            .map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+        let den: f64 = b.iter().map(|y| (*y as f64).powi(2)).sum();
+        num.sqrt() / (den.sqrt() + 1e-9)
+    }
+
+    /// Dense masked-softmax reference (`ref.block_sparse_attention`).
+    fn dense_sparse_ref(q: &[f32], k: &[f32], v: &[f32], mask: &[u8],
+                        n: usize, d: usize, b_q: usize, b_k: usize)
+                        -> Vec<f32> {
+        let t_n = n / b_k;
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut s = matmul_nt(q, k, n, d, n);
+        for i in 0..n {
+            for j in 0..n {
+                let m = mask[(i / b_q) * t_n + j / b_k];
+                s[i * n + j] = if m > 0 { s[i * n + j] * scale }
+                               else { NEG_INF };
+            }
+        }
+        softmax_rows(&mut s, n);
+        matmul(&s, v, n, n, d)
+    }
+
+    /// Dense masked-linear reference
+    /// (`ref.dense_masked_linear_attention`).
+    fn dense_linear_ref(q: &[f32], k: &[f32], v: &[f32], mask: &[u8],
+                        n: usize, d: usize, b_q: usize, b_k: usize)
+                        -> Vec<f32> {
+        let t_n = n / b_k;
+        let qp = phi_softmax(q, d);
+        let kp = phi_softmax(k, d);
+        let mut w = matmul_nt(&qp, &kp, n, d, n);
+        for i in 0..n {
+            for j in 0..n {
+                if mask[(i / b_q) * t_n + j / b_k] > 0 {
+                    w[i * n + j] = 0.0;
+                }
+            }
+        }
+        for row in w.chunks_exact_mut(n) {
+            let den: f32 = row.iter().sum::<f32>() + EPS_LINEAR;
+            for x in row.iter_mut() {
+                *x /= den;
+            }
+        }
+        matmul(&w, v, n, n, d)
+    }
+
+    fn qkv(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::seeded(seed);
+        (rng.normal_vec(n * d), rng.normal_vec(n * d), rng.normal_vec(n * d))
+    }
+
+    #[test]
+    fn router_keeps_exactly_kc_blocks_per_row() {
+        let (n, d, b_q, b_k) = (32, 16, 8, 4);
+        let (q, k, _) = qkv(n, d, 1);
+        let eye: Vec<f32> = (0..d * d)
+            .map(|i| if i % (d + 1) == 0 { 1.0 } else { 0.0 })
+            .collect();
+        for k_pct in [0.05, 0.10, 0.5] {
+            let mask = router_mask(&q, &k, &eye, &eye, k_pct, n, d, b_q,
+                                   b_k);
+            let kc = top_k_count(k_pct, n / b_k);
+            for row in mask.chunks_exact(n / b_k) {
+                assert_eq!(row.iter().map(|&m| m as usize).sum::<usize>(),
+                           kc);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_branch_matches_dense_masked_softmax() {
+        let (n, d, b_q, b_k) = (32, 16, 8, 4);
+        let (q, k, v) = qkv(n, d, 2);
+        let (t_m, t_n) = (n / b_q, n / b_k);
+        // adversarial mask (not router-derived), >= 1 kept per row
+        let mut rng = Pcg32::seeded(3);
+        let mut mask = vec![0u8; t_m * t_n];
+        for row in mask.chunks_exact_mut(t_n) {
+            row[rng.below(t_n as u32) as usize] = 1;
+            for m in row.iter_mut() {
+                if rng.f32() < 0.4 {
+                    *m = 1;
+                }
+            }
+        }
+        // alpha ~ 1: isolate the sparse branch (sigmoid(30) = 1 - 1e-13)
+        let alpha = vec![30.0f32; t_m];
+        // compare against the smoothed K the op applies internally
+        let k_sm = smooth_k(&k, n, d);
+        let got = sla2_attention_masked(&q, &k, &v, &mask, &alpha, n, d,
+                                        b_q, b_k, false);
+        let want = dense_sparse_ref(&q, &k_sm, &v, &mask, n, d, b_q, b_k);
+        assert!(rel_err(&got, &want) < 1e-5,
+                "sparse branch diverged: {}", rel_err(&got, &want));
+    }
+
+    #[test]
+    fn linear_branch_matches_dense_masked_linear() {
+        let (n, d, b_q, b_k) = (32, 16, 8, 4);
+        let (q, k, v) = qkv(n, d, 4);
+        let (t_m, t_n) = (n / b_q, n / b_k);
+        let mut rng = Pcg32::seeded(5);
+        let mut mask = vec![0u8; t_m * t_n];
+        for row in mask.chunks_exact_mut(t_n) {
+            // keep one block sparse (router invariant), rest linear
+            row[rng.below(t_n as u32) as usize] = 1;
+        }
+        // alpha ~ 0: isolate the linear branch
+        let alpha = vec![-30.0f32; t_m];
+        let k_sm = smooth_k(&k, n, d);
+        let got = sla2_attention_masked(&q, &k, &v, &mask, &alpha, n, d,
+                                        b_q, b_k, false);
+        let want = dense_linear_ref(&q, &k_sm, &v, &mask, n, d, b_q, b_k);
+        assert!(rel_err(&got, &want) < 1e-5,
+                "linear branch diverged: {}", rel_err(&got, &want));
+    }
+
+    #[test]
+    fn alpha_mixes_the_branches() {
+        let (n, d, b_q, b_k) = (32, 16, 8, 4);
+        let (q, k, v) = qkv(n, d, 6);
+        let (t_m, t_n) = (n / b_q, n / b_k);
+        let mut mask = vec![0u8; t_m * t_n];
+        for row in mask.chunks_exact_mut(t_n) {
+            row[0] = 1;
+            row[3] = 1;
+        }
+        let run = |logit: f32| sla2_attention_masked(
+            &q, &k, &v, &mask, &vec![logit; t_m], n, d, b_q, b_k, false);
+        let (o_s, o_l, o_mid) = (run(30.0), run(-30.0), run(0.0));
+        let want: Vec<f32> = o_s.iter().zip(&o_l)
+            .map(|(s, l)| 0.5 * s + 0.5 * l)
+            .collect();
+        assert!(rel_err(&o_mid, &want) < 1e-5);
+    }
+
+    #[test]
+    fn quant_path_is_close_but_not_identical() {
+        let (n, d, b_q, b_k) = (64, 32, 8, 4);
+        let (q, k, v) = qkv(n, d, 7);
+        let eye: Vec<f32> = (0..d * d)
+            .map(|i| if i % (d + 1) == 0 { 1.0 } else { 0.0 })
+            .collect();
+        let alpha = vec![0.5f32; n / b_q];
+        let p = Sla2Params { proj_q: &eye, proj_k: &eye,
+                             alpha_logit: &alpha };
+        let exact = sla2_attention(&q, &k, &v, &p, 0.25, n, d, b_q, b_k,
+                                   false);
+        let quant = sla2_attention(&q, &k, &v, &p, 0.25, n, d, b_q, b_k,
+                                   true);
+        let err = rel_err(&quant, &exact);
+        assert!(err > 1e-7, "quant path must actually quantize");
+        assert!(err < 5e-2, "INT8 fake-quant error too large: {err}");
+    }
+
+    #[test]
+    fn full_attention_row_stochastic_sanity() {
+        let (n, d) = (16, 8);
+        let (q, k, _) = qkv(n, d, 8);
+        // v = all-ones => softmax(scores) @ v = all-ones exactly
+        let v = vec![1.0f32; n * d];
+        let o = full_attention(&q, &k, &v, n, d);
+        assert!(o.iter().all(|x| (x - 1.0).abs() < 1e-5));
+    }
+}

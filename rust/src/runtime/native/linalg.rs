@@ -1,0 +1,193 @@
+//! Small dense-math substrate for the native backend: row-major f32
+//! matmuls and the handful of elementwise ops the DiT forward needs.
+//!
+//! Numerics mirror the jax source of truth (`python/compile/model.py`,
+//! `kernels/ref.py`): layer-norm uses the population variance with eps
+//! 1e-6, gelu is the tanh approximation (jax.nn.gelu's default), and
+//! softmax subtracts the row max before exponentiating.
+
+/// `a (m, k) @ b (k, n) -> (m, n)`, row-major.  ikj loop order so the
+/// inner loop runs over contiguous rows of `b` and `out`
+/// (auto-vectorizes; no blocking — the serving models are small).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+              -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `a (m, k) @ b (n, k)^T -> (m, n)` — row-by-row dot products
+/// (attention scores `Q K^T` without materializing a transpose).
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+                 -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            out[i * n + j] = dot(arow, brow);
+        }
+    }
+    out
+}
+
+/// `a (k, m)^T @ b (k, n) -> (m, n)` — the linear branch's
+/// `phi(K)^T V` tile update.
+pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize)
+                 -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `x (m, n) + bias (n,)` broadcast over rows, in place.
+pub fn add_bias(x: &mut [f32], bias: &[f32]) {
+    for row in x.chunks_exact_mut(bias.len()) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Row-wise softmax over the last dimension, in place.
+pub fn softmax_rows(x: &mut [f32], n_cols: usize) {
+    for row in x.chunks_exact_mut(n_cols) {
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            denom += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= denom;
+        }
+    }
+}
+
+/// Parameter-free layer norm per row (population variance, eps 1e-6 —
+/// mirrors `model.py::_layer_norm`).
+pub fn layer_norm_rows(x: &[f32], n_cols: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(x.len());
+    for row in x.chunks_exact(n_cols) {
+        let mu = row.iter().sum::<f32>() / n_cols as f32;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>()
+            / n_cols as f32;
+        let inv = 1.0 / (var + 1e-6).sqrt();
+        out.extend(row.iter().map(|v| (v - mu) * inv));
+    }
+    out
+}
+
+/// AdaLN modulation `x * (1 + scale) + shift`, shift/scale broadcast
+/// over rows, in place.
+pub fn modulate_rows(x: &mut [f32], shift: &[f32], scale: &[f32]) {
+    for row in x.chunks_exact_mut(shift.len()) {
+        for ((v, sh), sc) in row.iter_mut().zip(shift).zip(scale) {
+            *v = *v * (1.0 + sc) + sh;
+        }
+    }
+}
+
+/// jax.nn.gelu default (approximate=True): the tanh form.
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_against_hand_result() {
+        // (2,3) @ (3,2)
+        let a = [1., 2., 3., 4., 5., 6.];
+        let b = [7., 8., 9., 10., 11., 12.];
+        assert_eq!(matmul(&a, &b, 2, 3, 2), vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn transposed_variants_agree_with_plain_matmul() {
+        let a: Vec<f32> = (0..12).map(|i| i as f32 * 0.5 - 2.0).collect();
+        let b: Vec<f32> = (0..12).map(|i| (i as f32).sin()).collect();
+        // a (3,4) @ bt (3,4)^T == a @ transpose(bt)
+        let mut bt_t = vec![0.0; 12];
+        for r in 0..3 {
+            for c in 0..4 {
+                bt_t[c * 3 + r] = b[r * 4 + c];
+            }
+        }
+        assert_eq!(matmul_nt(&a, &b, 3, 4, 3), matmul(&a, &bt_t, 3, 4, 3));
+        // at (4,3): a^T @ b (4,3) == transpose(a) @ b
+        let mut a_t = vec![0.0; 12];
+        for r in 0..4 {
+            for c in 0..3 {
+                a_t[c * 4 + r] = a[r * 3 + c];
+            }
+        }
+        assert_eq!(matmul_tn(&a, &b, 4, 3, 3), matmul(&a_t, &b, 3, 4, 3));
+    }
+
+    #[test]
+    fn softmax_rows_normalize() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut x, 3);
+        for row in x.chunks_exact(3) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+            assert!(row.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0];
+        let y = layer_norm_rows(&x, 4);
+        for row in y.chunks_exact(4) {
+            let mu = row.iter().sum::<f32>() / 4.0;
+            let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>()
+                / 4.0;
+            assert!(mu.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gelu_matches_known_points() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.841_192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158_808).abs() < 1e-4);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+    }
+}

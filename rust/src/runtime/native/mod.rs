@@ -1,0 +1,359 @@
+//! Native pure-Rust compute backend: the SLA2 denoise forward on host
+//! CPU, no XLA, no artifacts.
+//!
+//! This backend exists so the WHOLE serving stack — pool, class
+//! scheduler, chunked streaming, TCP frontend — runs end-to-end on any
+//! host: integration tests stop self-skipping when `make artifacts`
+//! has not run, and benches get real (if CPU-scale) numbers.
+//!
+//! * [`attention`] — the paper's forward math (router, block-sparse
+//!   online softmax, linear branch, INT8 fake-quant, alpha mix);
+//! * [`model`] — the DiT forward + canonical parameter layout;
+//! * [`NativeBackend`] — the [`ComputeBackend`] implementation:
+//!   batch-parallel over the process-wide
+//!   [`crate::util::threadpool::shared_map`] pool (head-parallel for
+//!   single-sample batches), serves ANY batch size in one launch.
+//!
+//! Parameters come from `manifest.json` + `params_<cfg>.bin` when an
+//! artifacts dir is present (so native and XLA run the SAME weights,
+//! which is what the parity tests pin); otherwise from a deterministic
+//! seeded init over built-in model configs.
+
+pub mod attention;
+pub mod linalg;
+pub mod model;
+
+use std::cell::{Cell, RefCell};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+use once_cell::sync::Lazy;
+
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::threadpool::{shared_map, shared_pool_width};
+
+use super::backend::{BatchSupport, ComputeBackend};
+pub use model::{AttnMode, NativeParams};
+
+/// Process-wide native-kernel counters (all backends in this process
+/// share them, like the compile cache) — surfaced in
+/// `ServerMetrics::snapshot` under `native_kernels`.
+#[derive(Debug, Default)]
+pub struct NativeKernelStats {
+    /// per-sample DiT forwards
+    pub denoise_forwards: AtomicU64,
+    /// SLA2 head-attention invocations
+    pub attn_heads: AtomicU64,
+    /// full-softmax head invocations (dense tier / full variant)
+    pub full_heads: AtomicU64,
+    /// SLA2 heads that ran the INT8 fake-quant sparse path
+    pub quant_heads: AtomicU64,
+    /// (query-block, key-block) tiles routed to the sparse branch
+    pub sparse_tiles: AtomicU64,
+    /// tiles routed to the linear branch
+    pub linear_tiles: AtomicU64,
+}
+
+impl NativeKernelStats {
+    pub fn snapshot(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed) as usize;
+        Json::obj()
+            .push("denoise_forwards", g(&self.denoise_forwards))
+            .push("attn_heads", g(&self.attn_heads))
+            .push("full_heads", g(&self.full_heads))
+            .push("quant_heads", g(&self.quant_heads))
+            .push("sparse_tiles", g(&self.sparse_tiles))
+            .push("linear_tiles", g(&self.linear_tiles))
+    }
+
+    /// Achieved block sparsity across every routed tile so far.
+    pub fn observed_sparsity(&self) -> f64 {
+        let s = self.sparse_tiles.load(Ordering::Relaxed) as f64;
+        let l = self.linear_tiles.load(Ordering::Relaxed) as f64;
+        if s + l == 0.0 { 0.0 } else { l / (s + l) }
+    }
+}
+
+static KERNEL_STATS: Lazy<NativeKernelStats> =
+    Lazy::new(NativeKernelStats::default);
+
+/// The process-wide native-kernel counters.
+pub fn stats() -> &'static NativeKernelStats {
+    &KERNEL_STATS
+}
+
+/// Built-in model geometries for artifact-free deployments — mirrors
+/// `model.py::CONFIGS` (the manifest remains the source of truth when
+/// present).
+pub fn builtin_config(name: &str) -> Option<ModelConfig> {
+    let mk = |name: &str, video: [usize; 4], patch: [usize; 3],
+              dim: usize, depth: usize, heads: usize, head_dim: usize,
+              b_q: usize, b_k: usize| {
+        let n_tokens = (video[0] / patch[0]) * (video[1] / patch[1])
+            * (video[2] / patch[2]);
+        let mut cfg = ModelConfig {
+            name: name.into(), video, patch, dim, depth, heads, head_dim,
+            b_q, b_k, n_tokens,
+            t_m: n_tokens / b_q,
+            t_n: n_tokens / b_k,
+            num_classes: 10,
+            param_count: 0,
+        };
+        cfg.param_count = builtin_param_count(&cfg);
+        cfg
+    };
+    match name {
+        "dit-tiny" => Some(mk("dit-tiny", [4, 8, 8, 3], [2, 2, 2], 64, 2,
+                              2, 32, 8, 4)),
+        "dit-small" => Some(mk("dit-small", [8, 16, 16, 3], [2, 2, 2],
+                               256, 6, 4, 64, 32, 16)),
+        _ => None,
+    }
+}
+
+/// Exact parameter count of the canonical layout (mirrors
+/// `model.param_count` at mlp_ratio 4).
+fn builtin_param_count(cfg: &ModelConfig) -> usize {
+    let (d, hd) = (cfg.dim, cfg.heads * cfg.head_dim);
+    let pd = model::patch_dim(cfg);
+    let per_block = 6 * d * d + 6 * d            // ada
+        + d * 3 * hd + 3 * hd                    // qkv
+        + hd * d + d                             // out
+        + d * 4 * d + 4 * d + 4 * d * d + d      // mlp
+        + 3 * cfg.head_dim * cfg.head_dim        // proj_q/k/o
+        + cfg.t_m;                               // alpha_logit
+    pd * d + d                                   // patch
+        + 2 * (d * d + d)                        // t mlp
+        + (cfg.num_classes + 1) * d              // y_embed
+        + d * 2 * d + 2 * d                      // final ada
+        + d * pd + pd                            // final proj
+        + cfg.depth * per_block
+}
+
+/// Default seed for the artifact-free parameter init (the same seed
+/// aot.py uses for its PRNG key, for symmetry — the streams differ).
+pub const INIT_SEED: u64 = 42;
+
+/// Pure-Rust CPU implementation of [`ComputeBackend`].
+pub struct NativeBackend {
+    model: ModelConfig,
+    params: RefCell<Arc<NativeParams>>,
+    executions: Cell<u64>,
+    threads: usize,
+    /// where the weights came from (logged; pinned by tests)
+    params_source: &'static str,
+}
+
+impl NativeBackend {
+    /// Load for `model`: manifest-backed when `artifacts_dir` has one
+    /// (shared parse + decode, same weights as the XLA backend),
+    /// built-in config + seeded init otherwise.
+    pub fn load(artifacts_dir: impl AsRef<Path>, model: &str)
+                -> Result<NativeBackend> {
+        let dir = artifacts_dir.as_ref();
+        let (cfg, params, source) = if dir.join("manifest.json").exists()
+        {
+            let manifest = crate::runtime::shared().manifest(dir)?;
+            let cfg = manifest.config(model)?.clone();
+            let flat = crate::runtime::shared().params(&manifest, model)?;
+            let params = NativeParams::from_flat(&cfg, &flat)
+                .context("manifest params -> native")?;
+            (cfg, params, "manifest")
+        } else {
+            let cfg = builtin_config(model).with_context(|| format!(
+                "no artifacts at {dir:?} and no built-in native config \
+                 for model {model:?} (have: dit-tiny, dit-small)"))?;
+            let params = NativeParams::init_seeded(&cfg, INIT_SEED);
+            (cfg, params, "seeded-init")
+        };
+        Ok(NativeBackend {
+            model: cfg,
+            params: RefCell::new(Arc::new(params)),
+            executions: Cell::new(0),
+            threads: shared_pool_width(),
+            params_source: source,
+        })
+    }
+
+    /// `"manifest"` or `"seeded-init"` — where the weights came from.
+    pub fn params_source(&self) -> &'static str {
+        self.params_source
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn platform(&self) -> String {
+        format!("native-cpu ({} threads, params: {})", self.threads,
+                self.params_source)
+    }
+
+    fn model(&self) -> &ModelConfig {
+        &self.model
+    }
+
+    fn supported_batch_sizes(&self, _variant: &str, _tier: &str)
+                             -> BatchSupport {
+        BatchSupport::Any
+    }
+
+    fn compile(&self, variant: &str, tier: &str, _batch: usize)
+               -> Result<()> {
+        // nothing to compile — validate the combination resolves
+        model::attn_mode(variant, tier).map(|_| ())
+    }
+
+    fn execute(&self, variant: &str, tier: &str, x: &Tensor, ts: &Tensor,
+               ys: &Tensor) -> Result<Tensor> {
+        let cfg = &self.model;
+        ensure!(x.shape.len() == 5 && x.shape[1..] == cfg.video[..],
+                "latent shape {:?} does not match model {} video {:?}",
+                x.shape, cfg.name, cfg.video);
+        let b = x.shape[0];
+        ensure!(b >= 1, "empty batch");
+        ensure!(ts.shape == [b] && ys.shape == [b],
+                "ts/ys must be ({b},), got {:?}/{:?}", ts.shape,
+                ys.shape);
+        let mode = model::attn_mode(variant, tier)?;
+        let xs = x.f32s()?;
+        let tss = ts.f32s()?.to_vec();
+        let yss = ys.i32s()?.to_vec();
+        self.executions.set(self.executions.get() + 1);
+        let clip_len = cfg.video_numel();
+        let params = Arc::clone(&self.params.borrow());
+
+        let outs: Vec<Result<Vec<f32>>> = if b >= 2 {
+            // batch-parallel: one pool job per sample; jobs run the
+            // forward with head-parallelism OFF (no nested fan-out)
+            let samples: Arc<Vec<Vec<f32>>> = Arc::new(
+                xs.chunks_exact(clip_len).map(|s| s.to_vec()).collect());
+            let cfg = cfg.clone();
+            shared_map(b, move |i| {
+                model::denoise_forward(&cfg, &params, &samples[i],
+                                       tss[i], yss[i], mode, false)
+            })
+        } else {
+            // single sample: parallelize INSIDE the forward (heads)
+            vec![model::denoise_forward(cfg, &params, xs, tss[0],
+                                        yss[0], mode, true)]
+        };
+        let mut data = Vec::with_capacity(b * clip_len);
+        for o in outs {
+            data.extend(o?);
+        }
+        let mut shape = vec![b];
+        shape.extend_from_slice(&cfg.video);
+        Tensor::from_f32(&shape, data)
+    }
+
+    fn set_params(&self, params: &[Tensor]) -> Result<()> {
+        let np = NativeParams::from_flat(&self.model, params)?;
+        *self.params.borrow_mut() = Arc::new(np);
+        Ok(())
+    }
+
+    fn counters(&self) -> (u64, u64) {
+        (0, self.executions.get())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn loads_builtin_config_without_artifacts() {
+        let b = NativeBackend::load("/nonexistent-artifacts", "dit-tiny")
+            .unwrap();
+        assert_eq!(b.name(), "native");
+        assert_eq!(b.params_source(), "seeded-init");
+        assert_eq!(b.model().n_tokens, 32);
+        assert!(b.model().param_count > 100_000);
+        assert_eq!(b.supported_batch_sizes("sla2", "s90"),
+                   BatchSupport::Any);
+        assert!(NativeBackend::load("/nonexistent", "dit-base").is_err());
+    }
+
+    #[test]
+    fn execute_validates_shapes_and_counts_executions() {
+        let b = NativeBackend::load("/nonexistent", "dit-tiny").unwrap();
+        let cfg = b.model().clone();
+        let mut rng = Pcg32::seeded(3);
+        let x = Tensor::randn(&[2, cfg.video[0], cfg.video[1],
+                                cfg.video[2], cfg.video[3]], &mut rng);
+        let ts = Tensor::from_f32(&[2], vec![0.5, 0.5]).unwrap();
+        let ys = Tensor::from_i32(&[2], vec![1, 2]).unwrap();
+        let v = b.execute("sla2", "s90", &x, &ts, &ys).unwrap();
+        assert_eq!(v.shape, x.shape);
+        assert_eq!(b.counters(), (0, 1));
+        // wrong latent shape
+        let bad = Tensor::zeros(&[1, 2, 2, 2, 3]);
+        let ts1 = Tensor::from_f32(&[1], vec![0.5]).unwrap();
+        let ys1 = Tensor::from_i32(&[1], vec![0]).unwrap();
+        assert!(b.execute("sla2", "s90", &bad, &ts1, &ys1).is_err());
+        // unknown variant
+        assert!(b.execute("vsa", "s95", &x, &ts, &ys).is_err());
+    }
+
+    #[test]
+    fn batched_execute_equals_per_sample_execute() {
+        // the native forward is per-sample independent, so ANY batch
+        // split yields identical values — stronger than the XLA
+        // backend, where different batch executables may differ in
+        // float association
+        let b = NativeBackend::load("/nonexistent", "dit-tiny").unwrap();
+        let cfg = b.model().clone();
+        let mut rng = Pcg32::seeded(4);
+        let x3 = Tensor::randn(&[3, cfg.video[0], cfg.video[1],
+                                 cfg.video[2], cfg.video[3]], &mut rng);
+        let ts3 = Tensor::from_f32(&[3], vec![0.8, 0.5, 0.2]).unwrap();
+        let ys3 = Tensor::from_i32(&[3], vec![0, 1, 2]).unwrap();
+        let batched = b.execute("sla2_noquant", "s90", &x3, &ts3, &ys3)
+            .unwrap();
+        let clip_len = cfg.video_numel();
+        for i in 0..3 {
+            let xi = Tensor::from_f32(
+                &[1, cfg.video[0], cfg.video[1], cfg.video[2],
+                  cfg.video[3]],
+                x3.f32s().unwrap()[i * clip_len..(i + 1) * clip_len]
+                    .to_vec()).unwrap();
+            let tsi = Tensor::from_f32(
+                &[1], vec![ts3.f32s().unwrap()[i]]).unwrap();
+            let ysi = Tensor::from_i32(
+                &[1], vec![ys3.i32s().unwrap()[i]]).unwrap();
+            let vi = b.execute("sla2_noquant", "s90", &xi, &tsi, &ysi)
+                .unwrap();
+            assert_eq!(vi.f32s().unwrap(),
+                       &batched.f32s().unwrap()
+                           [i * clip_len..(i + 1) * clip_len],
+                       "sample {i} diverged between batch sizes");
+        }
+    }
+
+    #[test]
+    fn kernel_stats_accumulate() {
+        let before = stats().denoise_forwards
+            .load(Ordering::Relaxed);
+        let b = NativeBackend::load("/nonexistent", "dit-tiny").unwrap();
+        let cfg = b.model().clone();
+        let mut rng = Pcg32::seeded(5);
+        let x = Tensor::randn(&[1, cfg.video[0], cfg.video[1],
+                                cfg.video[2], cfg.video[3]], &mut rng);
+        let ts = Tensor::from_f32(&[1], vec![0.5]).unwrap();
+        let ys = Tensor::from_i32(&[1], vec![1]).unwrap();
+        b.execute("sla2", "s90", &x, &ts, &ys).unwrap();
+        assert!(stats().denoise_forwards.load(Ordering::Relaxed)
+                > before);
+        let snap = stats().snapshot();
+        assert!(snap.get("sparse_tiles").unwrap().as_usize().unwrap()
+                > 0);
+    }
+}

@@ -1,0 +1,621 @@
+//! Native DiT forward pass + typed parameter set.
+//!
+//! Mirrors `python/compile/model.py` operation-for-operation: AdaLN-
+//! zero blocks over patchified video latents, conditioned on a
+//! diffusion timestep and class label, with the attention op dispatched
+//! per head to the chosen variant (full softmax or SLA2).
+//!
+//! [`NativeParams`] is parsed from the **canonical flatten order** —
+//! jax's `tree_flatten` order (dict keys sorted, lists in sequence)
+//! that `model.flatten_params` defines and both `manifest.params` and
+//! the trainer's state vector follow:
+//!
+//! ```text
+//! blocks/<i>/{ada_b, ada_w, attn_alpha_logit, attn_proj_k,
+//!             attn_proj_o, attn_proj_q, mlp_b1, mlp_b2, mlp_w1,
+//!             mlp_w2, out_b, out_w, qkv_b, qkv_w}   for i in 0..depth
+//! final_ada_b, final_ada_w, final_b, final_w,
+//! patch_b, patch_w, t_b1, t_b2, t_w1, t_w2, y_embed
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+use super::attention::{self, Sla2Params};
+use super::linalg::{add_bias, gelu, layer_norm_rows, matmul,
+                    modulate_rows};
+
+/// Which attention op the forward runs (per head).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AttnMode {
+    /// Vanilla softmax attention (the `full` variant / `dense` tier).
+    Full,
+    /// SLA2: learned router + sparse/linear branches + alpha mix;
+    /// `quant` enables the INT8 fake-quant sparse path (Sec. 5).
+    Sla2 { k_pct: f64, quant: bool },
+}
+
+/// One transformer block's parameters (canonical key order).
+#[derive(Debug, Clone)]
+pub struct BlockParams {
+    pub ada_b: Vec<f32>,       // (6d,)
+    pub ada_w: Vec<f32>,       // (d, 6d)
+    pub alpha_logit: Vec<f32>, // (t_m,)
+    pub proj_k: Vec<f32>,      // (head_dim, head_dim)
+    pub proj_o: Vec<f32>,      // (head_dim, head_dim) — SLA baseline
+    pub proj_q: Vec<f32>,      // (head_dim, head_dim)
+    pub mlp_b1: Vec<f32>,      // (mh,)
+    pub mlp_b2: Vec<f32>,      // (d,)
+    pub mlp_w1: Vec<f32>,      // (d, mh)
+    pub mlp_w2: Vec<f32>,      // (mh, d)
+    pub out_b: Vec<f32>,       // (d,)
+    pub out_w: Vec<f32>,       // (heads*head_dim, d)
+    pub qkv_b: Vec<f32>,       // (3*heads*head_dim,)
+    pub qkv_w: Vec<f32>,       // (d, 3*heads*head_dim)
+}
+
+/// The full DiT parameter set, host-resident.
+#[derive(Debug, Clone)]
+pub struct NativeParams {
+    pub blocks: Vec<BlockParams>,
+    pub final_ada_b: Vec<f32>, // (2d,)
+    pub final_ada_w: Vec<f32>, // (d, 2d)
+    pub final_b: Vec<f32>,     // (patch_dim,)
+    pub final_w: Vec<f32>,     // (d, patch_dim)
+    pub patch_b: Vec<f32>,     // (d,)
+    pub patch_w: Vec<f32>,     // (patch_dim, d)
+    pub t_b1: Vec<f32>,        // (d,)
+    pub t_b2: Vec<f32>,        // (d,)
+    pub t_w1: Vec<f32>,        // (d, d)
+    pub t_w2: Vec<f32>,        // (d, d)
+    pub y_embed: Vec<f32>,     // (num_classes + 1, d)
+    /// MLP hidden width, derived from `mlp_w1` (the manifest does not
+    /// record `mlp_ratio`; python defaults to 4)
+    pub mlp_hidden: usize,
+}
+
+/// Latent-patch feature size `pt*ph*pw*C` (mirrors
+/// `ModelConfig.patch_dim` on the python side).
+pub fn patch_dim(cfg: &ModelConfig) -> usize {
+    cfg.patch.iter().product::<usize>() * cfg.video[3]
+}
+
+impl NativeParams {
+    /// Tensors this model needs in canonical flatten order.
+    pub fn expected_len(cfg: &ModelConfig) -> usize {
+        cfg.depth * 14 + 11
+    }
+
+    /// Parse from tensors in canonical flatten order (manifest params
+    /// / trainer state).  Every shape is validated, so a contract
+    /// drift surfaces as a readable error instead of garbage clips.
+    pub fn from_flat(cfg: &ModelConfig, tensors: &[Tensor])
+                     -> Result<NativeParams> {
+        ensure!(tensors.len() == Self::expected_len(cfg),
+                "expected {} parameter tensors for {} (depth {}), got {}",
+                Self::expected_len(cfg), cfg.name, cfg.depth,
+                tensors.len());
+        let mut it = tensors.iter();
+        let (d, hd) = (cfg.dim, cfg.heads * cfg.head_dim);
+        let pd = patch_dim(cfg);
+        let mut take = |name: &str, shape: &[usize]| -> Result<Vec<f32>> {
+            let t = it.next().expect("length checked above");
+            ensure!(t.shape == shape,
+                    "param {name}: expected shape {shape:?}, got {:?} — \
+                     canonical flatten order drifted", t.shape);
+            Ok(t.f32s().with_context(|| format!("param {name}"))?.to_vec())
+        };
+        let mut blocks = Vec::with_capacity(cfg.depth);
+        let mut mlp_hidden = 4 * d;
+        for b in 0..cfg.depth {
+            let ada_b = take(&format!("blocks/{b}/ada_b"), &[6 * d])?;
+            let ada_w = take(&format!("blocks/{b}/ada_w"), &[d, 6 * d])?;
+            let alpha_logit =
+                take(&format!("blocks/{b}/attn_alpha_logit"), &[cfg.t_m])?;
+            let proj_k = take(&format!("blocks/{b}/attn_proj_k"),
+                              &[cfg.head_dim, cfg.head_dim])?;
+            let proj_o = take(&format!("blocks/{b}/attn_proj_o"),
+                              &[cfg.head_dim, cfg.head_dim])?;
+            let proj_q = take(&format!("blocks/{b}/attn_proj_q"),
+                              &[cfg.head_dim, cfg.head_dim])?;
+            // mlp width comes from the tensor itself (mlp_ratio is not
+            // in the manifest); the b1/w1 pair must agree
+            let mlp_b1_t = &tensors[b * 14 + 6];
+            ensure!(mlp_b1_t.shape.len() == 1,
+                    "blocks/{b}/mlp_b1 must be rank 1");
+            mlp_hidden = mlp_b1_t.shape[0];
+            let mlp_b1 = take(&format!("blocks/{b}/mlp_b1"),
+                              &[mlp_hidden])?;
+            let mlp_b2 = take(&format!("blocks/{b}/mlp_b2"), &[d])?;
+            let mlp_w1 = take(&format!("blocks/{b}/mlp_w1"),
+                              &[d, mlp_hidden])?;
+            let mlp_w2 = take(&format!("blocks/{b}/mlp_w2"),
+                              &[mlp_hidden, d])?;
+            let out_b = take(&format!("blocks/{b}/out_b"), &[d])?;
+            let out_w = take(&format!("blocks/{b}/out_w"), &[hd, d])?;
+            let qkv_b = take(&format!("blocks/{b}/qkv_b"), &[3 * hd])?;
+            let qkv_w = take(&format!("blocks/{b}/qkv_w"), &[d, 3 * hd])?;
+            blocks.push(BlockParams {
+                ada_b, ada_w, alpha_logit, proj_k, proj_o, proj_q,
+                mlp_b1, mlp_b2, mlp_w1, mlp_w2, out_b, out_w, qkv_b,
+                qkv_w,
+            });
+        }
+        Ok(NativeParams {
+            blocks,
+            final_ada_b: take("final_ada_b", &[2 * d])?,
+            final_ada_w: take("final_ada_w", &[d, 2 * d])?,
+            final_b: take("final_b", &[pd])?,
+            final_w: take("final_w", &[d, pd])?,
+            patch_b: take("patch_b", &[d])?,
+            patch_w: take("patch_w", &[pd, d])?,
+            t_b1: take("t_b1", &[d])?,
+            t_b2: take("t_b2", &[d])?,
+            t_w1: take("t_w1", &[d, d])?,
+            t_w2: take("t_w2", &[d, d])?,
+            y_embed: take("y_embed", &[cfg.num_classes + 1, d])?,
+            mlp_hidden,
+        })
+    }
+
+    /// Seeded parameter init mirroring `model.init_params` semantics
+    /// (AdaLN-zero: gates start at 0; identity router projections;
+    /// alpha at the kept-mass prior).  The value STREAM differs from
+    /// jax's PRNG — this init exists for artifact-free deployments,
+    /// where determinism (not bit-parity with python) is the contract.
+    pub fn init_seeded(cfg: &ModelConfig, seed: u64) -> NativeParams {
+        let mut rng = Pcg32::seeded(seed);
+        let (d, hd) = (cfg.dim, cfg.heads * cfg.head_dim);
+        let pd = patch_dim(cfg);
+        let mh = 4 * d;
+        let mut dense = |fan_in: usize, fan_out: usize| -> Vec<f32> {
+            let std = 1.0 / (fan_in as f32).sqrt();
+            (0..fan_in * fan_out).map(|_| rng.normal() * std).collect()
+        };
+        let eye = |k: usize, scale: f32| -> Vec<f32> {
+            (0..k * k)
+                .map(|i| if i % (k + 1) == 0 { scale } else { 0.0 })
+                .collect()
+        };
+        let patch_w = dense(pd, d);
+        let t_w1 = dense(d, d);
+        let t_w2 = dense(d, d);
+        let blocks = (0..cfg.depth)
+            .map(|_| BlockParams {
+                ada_b: vec![0.0; 6 * d],
+                ada_w: vec![0.0; d * 6 * d],
+                alpha_logit: vec![-2.2; cfg.t_m],
+                proj_k: eye(cfg.head_dim, 1.0),
+                proj_o: eye(cfg.head_dim, 0.5),
+                proj_q: eye(cfg.head_dim, 1.0),
+                mlp_b1: vec![0.0; mh],
+                mlp_b2: vec![0.0; d],
+                mlp_w1: dense(d, mh),
+                mlp_w2: dense(mh, d),
+                out_b: vec![0.0; d],
+                out_w: dense(hd, d),
+                qkv_b: vec![0.0; 3 * hd],
+                qkv_w: dense(d, 3 * hd),
+            })
+            .collect();
+        let mut rng2 = rng;
+        let y_embed = (0..(cfg.num_classes + 1) * d)
+            .map(|_| rng2.normal() * 0.02)
+            .collect();
+        NativeParams {
+            blocks,
+            final_ada_b: vec![0.0; 2 * d],
+            final_ada_w: vec![0.0; d * 2 * d],
+            final_b: vec![0.0; pd],
+            final_w: vec![0.0; d * pd],
+            patch_b: vec![0.0; d],
+            patch_w,
+            t_b1: vec![0.0; d],
+            t_b2: vec![0.0; d],
+            t_w1,
+            t_w2,
+            y_embed,
+            mlp_hidden: mh,
+        }
+    }
+}
+
+/// `(T, H, W, C) -> (n_tokens, patch_dim)` — mirrors `model.patchify`.
+pub fn patchify(x: &[f32], cfg: &ModelConfig) -> Vec<f32> {
+    let [t, h, w, c] = cfg.video;
+    let [pt, ph, pw] = cfg.patch;
+    let (gt, gh, gw) = (t / pt, h / ph, w / pw);
+    let pd = patch_dim(cfg);
+    let mut out = vec![0.0f32; cfg.n_tokens * pd];
+    for tt in 0..gt {
+        for hh in 0..gh {
+            for ww in 0..gw {
+                let tok = (tt * gh + hh) * gw + ww;
+                for dt in 0..pt {
+                    for dh in 0..ph {
+                        for dw in 0..pw {
+                            for cc in 0..c {
+                                let src = (((tt * pt + dt) * h
+                                    + hh * ph + dh) * w
+                                    + ww * pw + dw) * c + cc;
+                                let dst = tok * pd
+                                    + ((dt * ph + dh) * pw + dw) * c + cc;
+                                out[dst] = x[src];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `(n_tokens, patch_dim) -> (T, H, W, C)` — inverse of [`patchify`].
+pub fn unpatchify(tokens: &[f32], cfg: &ModelConfig) -> Vec<f32> {
+    let [t, h, w, c] = cfg.video;
+    let [pt, ph, pw] = cfg.patch;
+    let (gt, gh, gw) = (t / pt, h / ph, w / pw);
+    let pd = patch_dim(cfg);
+    let mut out = vec![0.0f32; t * h * w * c];
+    for tt in 0..gt {
+        for hh in 0..gh {
+            for ww in 0..gw {
+                let tok = (tt * gh + hh) * gw + ww;
+                for dt in 0..pt {
+                    for dh in 0..ph {
+                        for dw in 0..pw {
+                            for cc in 0..c {
+                                let dst = (((tt * pt + dt) * h
+                                    + hh * ph + dh) * w
+                                    + ww * pw + dw) * c + cc;
+                                let src = tok * pd
+                                    + ((dt * ph + dh) * pw + dw) * c + cc;
+                                out[dst] = tokens[src];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Sinusoidal embedding of a scalar diffusion time in [0, 1]
+/// (`model.timestep_embedding`).
+pub fn timestep_embedding(t: f32, dim: usize) -> Vec<f32> {
+    let half = dim / 2;
+    let mut out = vec![0.0f32; 2 * half];
+    for i in 0..half {
+        let freq = (-(10000.0f32).ln() * i as f32 / half as f32).exp();
+        let arg = t * 1000.0 * freq;
+        out[i] = arg.cos();
+        out[half + i] = arg.sin();
+    }
+    out
+}
+
+/// One head's attention dispatch.
+fn head_attention(cfg: &ModelConfig, blk: &BlockParams, q: &[f32],
+                  k: &[f32], v: &[f32], mode: AttnMode) -> Vec<f32> {
+    let (n, d) = (cfg.n_tokens, cfg.head_dim);
+    match mode {
+        AttnMode::Full => attention::full_attention(q, k, v, n, d),
+        AttnMode::Sla2 { k_pct, quant } => attention::sla2_attention(
+            q, k, v,
+            &Sla2Params {
+                proj_q: &blk.proj_q,
+                proj_k: &blk.proj_k,
+                alpha_logit: &blk.alpha_logit,
+            },
+            k_pct, n, d, cfg.b_q, cfg.b_k, quant),
+    }
+}
+
+/// DiT forward for ONE sample: `x` is the flat `(T, H, W, C)` noisy
+/// latent, `t` the diffusion time, `y` the class label (out-of-range
+/// labels clamp to the null class, matching jax's clipped indexing).
+/// Returns the flat velocity prediction.
+///
+/// `parallel_heads` fans the per-block head attentions out over the
+/// shared native pool — callers already running ON that pool (the
+/// batch-parallel path) must pass `false` or risk the classic nested
+/// fan-out deadlock.
+pub fn denoise_forward(cfg: &ModelConfig, params: &Arc<NativeParams>,
+                       x: &[f32], t: f32, y: i32, mode: AttnMode,
+                       parallel_heads: bool) -> Result<Vec<f32>> {
+    ensure!(x.len() == cfg.video_numel(),
+            "latent has {} elements, model {} wants {}", x.len(),
+            cfg.name, cfg.video_numel());
+    super::stats().denoise_forwards
+        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let p = params.as_ref();
+    let (n, d) = (cfg.n_tokens, cfg.dim);
+    let hd = cfg.heads * cfg.head_dim;
+    let pd = patch_dim(cfg);
+
+    // patch embedding + conditioning vector
+    let mut tokens = matmul(&patchify(x, cfg), &p.patch_w, n, pd, d);
+    add_bias(&mut tokens, &p.patch_b);
+    let mut temb = matmul(&timestep_embedding(t, d), &p.t_w1, 1, d, d);
+    add_bias(&mut temb, &p.t_b1);
+    for v in temb.iter_mut() {
+        *v = v.tanh();
+    }
+    let mut cond = matmul(&temb, &p.t_w2, 1, d, d);
+    add_bias(&mut cond, &p.t_b2);
+    let yi = (y.max(0) as usize).min(cfg.num_classes);
+    for (cv, ye) in cond.iter_mut().zip(&p.y_embed[yi * d..(yi + 1) * d])
+    {
+        *cv += ye;
+    }
+
+    let mut hstate = tokens;
+    for bi in 0..p.blocks.len() {
+        let blk = &p.blocks[bi];
+        let mut ada = matmul(&cond, &blk.ada_w, 1, d, 6 * d);
+        add_bias(&mut ada, &blk.ada_b);
+        let (sh1, sc1) = (&ada[..d], &ada[d..2 * d]);
+        let g1 = &ada[2 * d..3 * d];
+        let (sh2, sc2) = (&ada[3 * d..4 * d], &ada[4 * d..5 * d]);
+        let g2 = &ada[5 * d..6 * d];
+
+        // attention sub-block
+        let mut a_in = layer_norm_rows(&hstate, d);
+        modulate_rows(&mut a_in, sh1, sc1);
+        let mut qkv = matmul(&a_in, &blk.qkv_w, n, d, 3 * hd);
+        add_bias(&mut qkv, &blk.qkv_b);
+        // row layout per token: [q heads | k heads | v heads]
+        let hdim = cfg.head_dim;
+        let extract = |which: usize, head: usize| -> Vec<f32> {
+            let mut out = Vec::with_capacity(n * hdim);
+            for tok in 0..n {
+                let base = tok * 3 * hd + which * hd + head * hdim;
+                out.extend_from_slice(&qkv[base..base + hdim]);
+            }
+            out
+        };
+        let heads_out: Vec<Vec<f32>> = if parallel_heads
+            && cfg.heads >= 2
+        {
+            let inputs: Arc<Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>> =
+                Arc::new((0..cfg.heads)
+                    .map(|hh| (extract(0, hh), extract(1, hh),
+                               extract(2, hh)))
+                    .collect());
+            let params = Arc::clone(params);
+            let cfg = cfg.clone();
+            crate::util::threadpool::shared_map(cfg.heads, move |hh| {
+                let (q, k, v) = &inputs[hh];
+                head_attention(&cfg, &params.blocks[bi], q, k, v, mode)
+            })
+        } else {
+            (0..cfg.heads)
+                .map(|hh| head_attention(
+                    cfg, blk, &extract(0, hh), &extract(1, hh),
+                    &extract(2, hh), mode))
+                .collect()
+        };
+        let mut concat = vec![0.0f32; n * hd];
+        for (hh, ho) in heads_out.iter().enumerate() {
+            for tok in 0..n {
+                concat[tok * hd + hh * hdim..tok * hd + (hh + 1) * hdim]
+                    .copy_from_slice(&ho[tok * hdim..(tok + 1) * hdim]);
+            }
+        }
+        let mut attn = matmul(&concat, &blk.out_w, n, hd, d);
+        add_bias(&mut attn, &blk.out_b);
+        for (hrow, arow) in hstate.chunks_exact_mut(d)
+            .zip(attn.chunks_exact(d))
+        {
+            for ((hv, av), gv) in hrow.iter_mut().zip(arow).zip(g1) {
+                *hv += gv * av;
+            }
+        }
+
+        // MLP sub-block
+        let mut m_in = layer_norm_rows(&hstate, d);
+        modulate_rows(&mut m_in, sh2, sc2);
+        let mut hidden = matmul(&m_in, &blk.mlp_w1, n, d, p.mlp_hidden);
+        add_bias(&mut hidden, &blk.mlp_b1);
+        for v in hidden.iter_mut() {
+            *v = gelu(*v);
+        }
+        let mut mlp = matmul(&hidden, &blk.mlp_w2, n, p.mlp_hidden, d);
+        add_bias(&mut mlp, &blk.mlp_b2);
+        for (hrow, mrow) in hstate.chunks_exact_mut(d)
+            .zip(mlp.chunks_exact(d))
+        {
+            for ((hv, mv), gv) in hrow.iter_mut().zip(mrow).zip(g2) {
+                *hv += gv * mv;
+            }
+        }
+    }
+
+    // final AdaLN + projection back to patches
+    let mut fada = matmul(&cond, &p.final_ada_w, 1, d, 2 * d);
+    add_bias(&mut fada, &p.final_ada_b);
+    let (fsh, fsc) = (&fada[..d], &fada[d..]);
+    let mut out_tokens = layer_norm_rows(&hstate, d);
+    modulate_rows(&mut out_tokens, fsh, fsc);
+    let mut out = matmul(&out_tokens, &p.final_w, n, d, pd);
+    add_bias(&mut out, &p.final_b);
+    Ok(unpatchify(&out, cfg))
+}
+
+/// Map a sparsity tier to the fraction of key blocks kept (mirrors
+/// aot.py's `TIERS` plus the `dense` keep-everything tier).  `None`
+/// for unknown tiers — the XLA backend fails those with a
+/// missing-artifact error, and the native backend must not silently
+/// serve dense attention for a typo'd tier instead.
+pub fn tier_k_pct(tier: &str) -> Option<f64> {
+    match tier {
+        "s90" => Some(0.10),
+        "s95" => Some(0.05),
+        "s97" => Some(0.03),
+        "dense" => Some(1.0),
+        _ => None,
+    }
+}
+
+/// Resolve (variant, tier) to the attention mode the forward runs.
+pub fn attn_mode(variant: &str, tier: &str) -> Result<AttnMode> {
+    let k_pct = tier_k_pct(tier).with_context(|| format!(
+        "unknown tier {tier:?} (have: s90, s95, s97, dense)"))?;
+    match variant {
+        "full" => Ok(AttnMode::Full),
+        // NOTE: sla2 at k_pct=1.0 is NOT plain full attention — every
+        // block goes sparse, the linear branch is empty, and the mix
+        // yields `a ⊙ O_full` (alpha-scaled), exactly like the python
+        // model.  Running the real kernel preserves that semantics.
+        "sla2" => Ok(AttnMode::Sla2 { k_pct, quant: true }),
+        "sla2_noquant" => Ok(AttnMode::Sla2 { k_pct, quant: false }),
+        other => bail!("native backend does not implement attention \
+                        variant {other:?} (have: full, sla2, \
+                        sla2_noquant)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "dit-tiny".into(),
+            video: [4, 8, 8, 3],
+            patch: [2, 2, 2],
+            dim: 64,
+            depth: 2,
+            heads: 2,
+            head_dim: 32,
+            b_q: 8,
+            b_k: 4,
+            n_tokens: 32,
+            t_m: 4,
+            t_n: 8,
+            num_classes: 10,
+            param_count: 0,
+        }
+    }
+
+    #[test]
+    fn patchify_roundtrip() {
+        let cfg = tiny();
+        let mut rng = Pcg32::seeded(1);
+        let x = rng.normal_vec(cfg.video_numel());
+        let tokens = patchify(&x, &cfg);
+        assert_eq!(tokens.len(), cfg.n_tokens * patch_dim(&cfg));
+        assert_eq!(unpatchify(&tokens, &cfg), x);
+    }
+
+    #[test]
+    fn timestep_embedding_endpoints() {
+        let e = timestep_embedding(0.0, 8);
+        assert_eq!(e.len(), 8);
+        // t=0: cos(0)=1, sin(0)=0
+        assert!(e[..4].iter().all(|v| (v - 1.0).abs() < 1e-6));
+        assert!(e[4..].iter().all(|v| v.abs() < 1e-6));
+        let e1 = timestep_embedding(0.5, 8);
+        assert!(e1.iter().any(|v| (v - 1.0).abs() > 1e-3));
+    }
+
+    #[test]
+    fn init_is_deterministic_and_parses_flat() {
+        let cfg = tiny();
+        let a = NativeParams::init_seeded(&cfg, 42);
+        let b = NativeParams::init_seeded(&cfg, 42);
+        assert_eq!(a.patch_w, b.patch_w);
+        assert_eq!(a.blocks[1].qkv_w, b.blocks[1].qkv_w);
+        let c = NativeParams::init_seeded(&cfg, 43);
+        assert_ne!(a.patch_w, c.patch_w);
+        assert_eq!(a.mlp_hidden, 4 * cfg.dim);
+    }
+
+    #[test]
+    fn from_flat_validates_count_and_shapes() {
+        let cfg = tiny();
+        assert_eq!(NativeParams::expected_len(&cfg), 39);
+        let err = NativeParams::from_flat(&cfg, &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("39"));
+    }
+
+    #[test]
+    fn adaln_zero_init_predicts_zero_velocity() {
+        // AdaLN-zero + zero final projection: the untrained model's
+        // velocity is exactly 0 for every variant — the property the
+        // XLA artifacts exhibit too (see table1's warm_params note)
+        let cfg = tiny();
+        let p = Arc::new(NativeParams::init_seeded(&cfg, 42));
+        let mut rng = Pcg32::seeded(9);
+        let x = rng.normal_vec(cfg.video_numel());
+        for mode in [AttnMode::Full,
+                     AttnMode::Sla2 { k_pct: 0.10, quant: true }] {
+            let vel = denoise_forward(&cfg, &p, &x, 0.7, 3, mode, false)
+                .unwrap();
+            assert!(vel.iter().all(|v| *v == 0.0),
+                    "AdaLN-zero init must gate everything off");
+        }
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_variant_sensitive() {
+        let cfg = tiny();
+        // perturb the gates so attention actually reaches the output
+        let mut p = NativeParams::init_seeded(&cfg, 42);
+        let mut rng = Pcg32::seeded(11);
+        for blk in &mut p.blocks {
+            for v in blk.ada_w.iter_mut() {
+                *v = rng.normal() * 0.05;
+            }
+        }
+        for v in p.final_w.iter_mut() {
+            *v = rng.normal() * 0.05;
+        }
+        let p = Arc::new(p);
+        let x = rng.normal_vec(cfg.video_numel());
+        let full = denoise_forward(&cfg, &p, &x, 0.5, 1, AttnMode::Full,
+                                   false).unwrap();
+        let again = denoise_forward(&cfg, &p, &x, 0.5, 1, AttnMode::Full,
+                                    false).unwrap();
+        assert_eq!(full, again);
+        let sla2 = denoise_forward(
+            &cfg, &p, &x, 0.5, 1,
+            AttnMode::Sla2 { k_pct: 0.10, quant: false }, false).unwrap();
+        assert_ne!(full, sla2,
+                   "sparse attention must differ from full attention \
+                    once gates are non-zero");
+        // head-parallel path must be value-identical to sequential
+        let par = denoise_forward(&cfg, &p, &x, 0.5, 1, AttnMode::Full,
+                                  true).unwrap();
+        assert_eq!(full, par);
+    }
+
+    #[test]
+    fn tier_and_variant_resolution() {
+        assert_eq!(tier_k_pct("s95"), Some(0.05));
+        assert_eq!(tier_k_pct("dense"), Some(1.0));
+        assert_eq!(tier_k_pct("s99"), None);
+        assert_eq!(attn_mode("full", "dense").unwrap(), AttnMode::Full);
+        // sla2 at the dense tier stays SLA2 (alpha-scaled full, python
+        // semantics) — the engine's variant_for_tier rewrites dense
+        // requests to "full" before they reach a backend
+        assert_eq!(attn_mode("sla2", "dense").unwrap(),
+                   AttnMode::Sla2 { k_pct: 1.0, quant: true });
+        assert_eq!(attn_mode("sla2", "s97").unwrap(),
+                   AttnMode::Sla2 { k_pct: 0.03, quant: true });
+        assert_eq!(attn_mode("sla2_noquant", "s90").unwrap(),
+                   AttnMode::Sla2 { k_pct: 0.10, quant: false });
+        assert!(attn_mode("vsa", "s95").is_err());
+        // a typo'd tier must ERROR, not silently serve dense attention
+        assert!(attn_mode("sla2", "s99").is_err());
+        // unimplemented variants error even at the dense tier
+        assert!(attn_mode("vsa", "dense").is_err());
+    }
+}

@@ -1,10 +1,14 @@
 //! Fixed-size thread pool over std mpsc (tokio is not in the offline
-//! registry; the coordinator's event loop is thread + channel based).
+//! registry; the coordinator's event loop is thread + channel based),
+//! plus the process-wide [`shared_map`] fan-out helper that the video
+//! metric passes and the native compute backend both build on.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+use once_cell::sync::Lazy;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -99,6 +103,62 @@ impl Drop for ThreadPool {
     }
 }
 
+/// ONE process-wide pool for data-parallel fan-outs (metric frame
+/// passes, native denoise batches/heads) — `Mutex`-wrapped because
+/// `ThreadPool` holds an mpsc sender (`!Sync`); the lock is only held
+/// while enqueueing jobs, never while they run.
+static SHARED_POOL: Lazy<Mutex<ThreadPool>> =
+    Lazy::new(|| Mutex::new(ThreadPool::new(shared_pool_width())));
+
+/// Worker count of [`shared_map`]'s pool (also a sizing hint for
+/// callers deciding whether fanning out is worth it).
+pub fn shared_pool_width() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 8)
+}
+
+/// Fan `f(i)` for `i in 0..count` out over the shared pool; results
+/// come back in index order, so reductions over them are
+/// deterministic regardless of completion order.  `f` must own (Arc)
+/// whatever it reads — jobs are `'static`.
+///
+/// Do NOT call from a job already running on this pool: the caller
+/// blocks on the result channel, and nested fan-out can occupy every
+/// worker with blocked parents (classic pool deadlock).  A panicking
+/// job is surfaced as a panic here, not a silently missing result.
+pub fn shared_map<R, F>(count: usize, f: F) -> Vec<R>
+where
+    R: Send + 'static,
+    F: Fn(usize) -> R + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let (tx, rx) = channel::<(usize, R)>();
+    {
+        let pool = SHARED_POOL.lock().unwrap();
+        for i in 0..count {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            pool.submit(move || {
+                let v = (*f)(i);
+                let _ = tx.send((i, v));
+            });
+        }
+    }
+    drop(tx);
+    let mut out: Vec<Option<R>> = (0..count).map(|_| None).collect();
+    let mut received = 0usize;
+    for (i, v) in rx {
+        out[i] = Some(v);
+        received += 1;
+    }
+    assert_eq!(received, count,
+               "shared fan-out lost {} result(s) — a job panicked",
+               count - received);
+    out.into_iter().map(|o| o.expect("indexed result")).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,6 +208,17 @@ mod tests {
         pool.wait_idle();
         assert_eq!(sum.load(Ordering::Relaxed), 155);
         assert_eq!(pool.submitted(), 12);
+    }
+
+    #[test]
+    fn shared_map_orders_results_and_runs_everything() {
+        let out = shared_map(16, |i| i * i);
+        assert_eq!(out, (0..16).map(|i| i * i).collect::<Vec<_>>());
+        // reentrant top-level calls are fine (only nesting inside a
+        // job is forbidden)
+        let out2 = shared_map(3, |i| shared_pool_width() + i);
+        assert_eq!(out2.len(), 3);
+        assert_eq!(shared_map(0, |i| i), Vec::<usize>::new());
     }
 
     #[test]

@@ -14,13 +14,10 @@
 //! Absolute values are NOT comparable to VBench scores; Table 1/2
 //! claims are about *ordering across methods*, which these preserve.
 
-use std::sync::mpsc::channel;
-use std::sync::{Arc, Mutex};
-
-use once_cell::sync::Lazy;
+use std::sync::Arc;
 
 use crate::tensor::Tensor;
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::shared_map;
 
 #[derive(Debug, Clone)]
 pub struct QualityReport {
@@ -31,17 +28,6 @@ pub struct QualityReport {
     pub subject_consistency: f64,
 }
 
-/// Shared pool for frame-parallel metric passes.  `Mutex`-wrapped
-/// because `ThreadPool` holds an mpsc sender (`!Sync`); the lock is
-/// only held while enqueueing jobs, never while they run.
-static METRICS_POOL: Lazy<Mutex<ThreadPool>> = Lazy::new(|| {
-    let n = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .clamp(2, 8);
-    Mutex::new(ThreadPool::new(n))
-});
-
 /// Below this many elements the thread-pool handoff costs more than
 /// the frame pass itself; run serially.
 const PARALLEL_THRESHOLD: usize = 4096;
@@ -51,45 +37,18 @@ const PARALLEL_THRESHOLD: usize = 4096;
 /// handoff dwarfs the pass itself.
 const MIN_FRAME_ELEMS: usize = 256;
 
-/// Fan `f(ti)` out over the shared pool, one job per frame index.
-/// Results come back indexed by frame, so reductions over them are
-/// deterministic regardless of completion order.  `f` must own (Arc)
-/// whatever slice data it reads — the callers below wrap their clip
-/// copies.  Do NOT call from a job already running on the pool: the
-/// caller blocks on the result channel, and nested fan-out can then
-/// occupy every worker with blocked parents (classic pool deadlock).
+/// Fan `f(ti)` out over the process-wide shared pool
+/// (`util::threadpool::shared_map`), one job per frame index; results
+/// come back in frame order.  `f` must own (Arc) whatever slice data
+/// it reads — the callers below wrap their clip copies.  The nested
+/// fan-out prohibition and panic surfacing live with the shared
+/// helper.
 fn frame_map<R, F>(t: usize, f: F) -> Vec<R>
 where
     R: Send + 'static,
     F: Fn(usize) -> R + Send + Sync + 'static,
 {
-    let f = Arc::new(f);
-    let (tx, rx) = channel::<(usize, R)>();
-    {
-        let pool = METRICS_POOL.lock().unwrap();
-        for ti in 0..t {
-            let f = Arc::clone(&f);
-            let tx = tx.clone();
-            pool.submit(move || {
-                let v = (*f)(ti);
-                let _ = tx.send((ti, v));
-            });
-        }
-    }
-    drop(tx);
-    let mut out: Vec<Option<R>> = (0..t).map(|_| None).collect();
-    let mut received = 0usize;
-    for (ti, v) in rx {
-        out[ti] = Some(v);
-        received += 1;
-    }
-    // a panicked job drops its sender without sending; surface that
-    // as a failure instead of silently scoring the frame 0.0 (the
-    // serial path propagates the same panic)
-    assert_eq!(received, t,
-               "frame pass lost {} result(s) — a metric job panicked",
-               t - received);
-    out.into_iter().map(|o| o.expect("indexed result")).collect()
+    shared_map(t, f)
 }
 
 /// Should a `t`-frame pass over `n` elements fan out?  Below the

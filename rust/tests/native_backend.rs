@@ -1,0 +1,341 @@
+//! Native-backend suite: SLA2 math parity against the full-softmax
+//! oracle, and the artifact-FREE end-to-end serve path (pool dispatch,
+//! class scheduler, chunked streaming, TCP frontend) that CI can run
+//! on any host — no `make artifacts` required.
+//!
+//! When artifacts ARE present, the tail of this file additionally pins
+//! native-vs-XLA parity on the same manifest weights.
+
+mod common;
+
+use sla2::config::ServeConfig;
+use sla2::coordinator::engine::Engine;
+use sla2::coordinator::request::GenRequest;
+use sla2::coordinator::{NetClient, Server};
+use sla2::runtime::native::attention::{self, Sla2Params};
+use sla2::runtime::native::NativeBackend;
+use sla2::runtime::{ComputeBackend, XlaBackend};
+use sla2::tensor::Tensor;
+use sla2::util::rng::Pcg32;
+
+/// A path no test creates: forces the native backend's builtin-config
+/// + seeded-init path and makes the XLA backend fail loudly.
+const NO_ARTIFACTS: &str = "definitely-missing-artifacts";
+
+fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+    let num: f64 = a.iter().zip(b)
+        .map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+    let den: f64 = b.iter().map(|y| (*y as f64).powi(2)).sum();
+    num.sqrt() / (den.sqrt() + 1e-9)
+}
+
+fn eye(d: usize) -> Vec<f32> {
+    (0..d * d).map(|i| if i % (d + 1) == 0 { 1.0 } else { 0.0 }).collect()
+}
+
+/// Build (q, k, v) whose attention is concentrated inside one key
+/// block per query block: query block `i` points along basis vector
+/// `e_i`, key block `2i` matches it (hot), odd key blocks point along
+/// unrelated directions (cold).  The probability mass outside the hot
+/// block is then exponentially small, so the paper's decomposition
+/// bound (error <= dropped mass) makes sparse+linear reconstruct full
+/// attention almost exactly — the property this parity test pins.
+fn peaked_qkv(n: usize, d: usize, b_q: usize, b_k: usize, amp: f32,
+              seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (t_m, t_n) = (n / b_q, n / b_k);
+    assert_eq!(t_n, 2 * t_m, "construction pairs block i with block 2i");
+    assert!(d >= t_m + t_n / 2, "needs enough orthogonal directions");
+    let mut rng = Pcg32::seeded(seed);
+    let noise = 0.01f32;
+    let mut q = vec![0.0f32; n * d];
+    for i in 0..t_m {
+        for r in 0..b_q {
+            let row = &mut q[(i * b_q + r) * d..(i * b_q + r + 1) * d];
+            for v in row.iter_mut() {
+                *v = noise * rng.normal();
+            }
+            row[i] += amp;
+        }
+    }
+    let mut k = vec![0.0f32; n * d];
+    for j in 0..t_n {
+        // hot blocks are even: block 2i matches query direction i;
+        // odd blocks get directions no query points along
+        let dir = if j % 2 == 0 { j / 2 } else { t_m + j / 2 };
+        for r in 0..b_k {
+            let row = &mut k[(j * b_k + r) * d..(j * b_k + r + 1) * d];
+            for v in row.iter_mut() {
+                *v = noise * rng.normal();
+            }
+            row[dir] += amp;
+        }
+    }
+    let v = rng.normal_vec(n * d);
+    (q, k, v)
+}
+
+/// Acceptance criterion: at >= 90% block sparsity the native
+/// sparse+linear output matches the naive full-softmax reference
+/// within rel_err < 1e-3 on seeded inputs.
+#[test]
+fn native_sla2_matches_full_softmax_at_high_sparsity() {
+    // dit-tiny-like tile geometry, s95 tier: t_n = 16, keep 1 block
+    // per row => 93.75% block sparsity
+    let (n, d, b_q, b_k) = (64usize, 32usize, 8usize, 4usize);
+    let k_pct = 0.05;
+    let (t_m, t_n) = (n / b_q, n / b_k);
+    let kc = attention::top_k_count(k_pct, t_n);
+    let sparsity = 1.0 - kc as f64 / t_n as f64;
+    assert!(sparsity >= 0.90, "test must run at >=90% sparsity, got \
+                               {sparsity}");
+
+    let (q, k, v) = peaked_qkv(n, d, b_q, b_k, 9.0, 42);
+    let proj = eye(d);
+    // the router (identity projections = SLA magnitude heuristic) must
+    // find the hot block for every query block
+    let mask = attention::router_mask(&q, &k, &proj, &proj, k_pct, n, d,
+                                      b_q, b_k);
+    for i in 0..t_m {
+        assert_eq!(mask[i * t_n + 2 * i], 1,
+                   "router missed the hot block for query block {i}");
+    }
+
+    // alpha ~ 1: concentrated attention means the oracle mixing ratio
+    // (kept probability mass, Eq. 7) is ~1
+    let alpha = vec![12.0f32; t_m];
+    let p = Sla2Params { proj_q: &proj, proj_k: &proj,
+                         alpha_logit: &alpha };
+    let full = attention::full_attention(&q, &k, &v, n, d);
+
+    let sla2 = attention::sla2_attention(&q, &k, &v, &p, k_pct, n, d,
+                                         b_q, b_k, false);
+    let err = rel_err(&sla2, &full);
+    assert!(err < 1e-3,
+            "sparse+linear vs full softmax rel_err {err} at \
+             {sparsity:.4} sparsity (acceptance bound 1e-3)");
+
+    // the INT8 fake-quant path stays within quantization noise (the
+    // peaked construction maximizes per-row dynamic range, so this
+    // bound is looser than the random-input quant test's)
+    let sla2_q = attention::sla2_attention(&q, &k, &v, &p, k_pct, n, d,
+                                           b_q, b_k, true);
+    let err_q = rel_err(&sla2_q, &full);
+    assert!(err_q < 1e-1, "quant path rel_err {err_q}");
+    assert!(rel_err(&sla2_q, &sla2) > 1e-7,
+            "quant path must actually quantize");
+}
+
+/// The native engine plans ONE launch for any batch size
+/// (`BatchSupport::Any`) and keeps clips a pure function of the seed.
+#[test]
+fn native_engine_single_launch_any_batch() {
+    let serve = ServeConfig {
+        backend: "native".into(),
+        model: "dit-tiny".into(),
+        variant: "sla2".into(),
+        tier: "s90".into(),
+        sample_steps: 2,
+        ..ServeConfig::default()
+    };
+    let engine = Engine::new(NO_ARTIFACTS, serve).expect(
+        "native engine must start without artifacts");
+    assert_eq!(engine.backend().name(), "native");
+    let reqs: Vec<GenRequest> = (0..3)
+        .map(|i| GenRequest::new(i, i as i32, 100 + i, 2, "s90"))
+        .collect();
+    let out = engine.generate(&reqs).unwrap();
+    assert_eq!(out.len(), 3);
+    for (clip, rm) in &out {
+        assert_eq!(clip.shape, vec![4, 8, 8, 3]);
+        assert_eq!(rm.batch_size, 3,
+                   "native backend must serve n=3 as a single launch");
+    }
+    // same seed, different batch composition => identical clip
+    let solo = engine
+        .generate(&[GenRequest::new(9, 1, 101, 2, "s90")])
+        .unwrap();
+    assert_eq!(solo[0].0, out[1].0,
+               "clip must be a pure function of (seed, steps, tier)");
+    let (compiles, executions) = engine.backend().counters();
+    assert_eq!(compiles, 0, "native backend never compiles");
+    assert!(executions >= 4, "2 steps x 2 generate calls");
+}
+
+/// Satellite e2e: the FULL serve path — sharded pool dispatch, class
+/// scheduler with mixed tiers, chunked streaming, and the TCP
+/// frontend — in one artifact-free run on the native backend.
+#[test]
+fn native_e2e_pool_scheduler_streaming_and_tcp() {
+    let serve = ServeConfig {
+        backend: "native".into(),
+        model: "dit-tiny".into(),
+        variant: "sla2".into(),
+        tier: "s90".into(),
+        sample_steps: 2,
+        max_batch: 2,
+        batch_window_ms: 5,
+        queue_capacity: 64,
+        num_shards: 2,
+        scheduler: "class".into(),
+        bypass_threshold_ms: 10,
+        listen_addr: "127.0.0.1:0".into(),
+        chunk_frames: 1,
+        ..ServeConfig::default()
+    };
+    let server = Server::start(NO_ARTIFACTS, serve).expect(
+        "native server must start without artifacts");
+    assert_eq!(server.num_shards(), 2);
+    let addr = server.local_addr().expect("tcp frontend bound");
+
+    // -- pool dispatch + class scheduler: a mixed-tier burst ---------
+    let rxs: Vec<_> = (0..4)
+        .map(|i| server.submit(i, 200 + i as u64, 2, "s90").unwrap())
+        .collect();
+    let dense_rx = server.submit(7, 999, 2, "dense").unwrap();
+    let mut clips = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap().expect("sparse request served");
+        assert_eq!(resp.clip.shape, vec![4, 8, 8, 3]);
+        clips.push(resp.clip);
+    }
+    let dense = dense_rx.recv().unwrap().expect("dense request served");
+    assert_eq!(dense.metrics.batch_size, 1,
+               "dense tier cannot batch with sla2 requests");
+
+    // determinism across resubmission (and across shard placement)
+    let again = server.submit(0, 200, 2, "s90").unwrap()
+        .recv().unwrap().unwrap();
+    assert_eq!(again.clip, clips[0]);
+
+    // -- chunked streaming, in process -------------------------------
+    let stream = server.submit_streaming(2, 321, 2, "s90").unwrap();
+    let id = stream.id();
+    let mut chunks = Vec::new();
+    while let Some(item) = stream.recv() {
+        let c = item.expect("stream errored");
+        let last = c.last;
+        chunks.push(c);
+        if last {
+            break;
+        }
+    }
+    assert!(chunks.len() >= 2,
+            "a 4-frame clip at chunk_frames=1 must stream in several \
+             chunks, got {}", chunks.len());
+    let streamed =
+        sla2::coordinator::stream::assemble_response(id, chunks).unwrap();
+    let oneshot = server.submit(2, 321, 2, "s90").unwrap()
+        .recv().unwrap().unwrap();
+    assert_eq!(streamed.clip, oneshot.clip,
+               "streamed clip diverged from one-shot clip");
+
+    // -- the TCP frontend, same wire protocol as the XLA path --------
+    let mut client = NetClient::connect(&addr.to_string()).unwrap();
+    let net_id = client.submit(2, 321, 2, "s90", true).unwrap();
+    let mut net_chunks = 0usize;
+    let net_resp = client
+        .collect_stream_with(net_id, |_| net_chunks += 1)
+        .unwrap();
+    assert!(net_chunks >= 2, "expected chunked delivery over TCP");
+    assert_eq!(net_resp.clip, oneshot.clip,
+               "TCP clip diverged from in-process clip");
+
+    // -- observability: backend + native kernel counters -------------
+    let snap = client.metrics_snapshot().unwrap();
+    assert_eq!(snap.get("backend").unwrap().as_str(), Some("native"));
+    assert_eq!(snap.get("scheduler").unwrap().as_str(), Some("class"));
+    assert_eq!(snap.get("num_shards").unwrap().as_usize(), Some(2));
+    assert!(snap.get("completed").unwrap().as_usize().unwrap() >= 7);
+    assert_eq!(snap.get("compiles").unwrap().as_usize(), Some(0));
+    let nk = snap.get("native_kernels").expect("native kernel section");
+    assert!(nk.get("denoise_forwards").unwrap().as_usize().unwrap() > 0);
+    assert!(nk.get("sparse_tiles").unwrap().as_usize().unwrap() > 0,
+            "sla2 requests must route tiles to the sparse branch");
+    assert!(nk.get("linear_tiles").unwrap().as_usize().unwrap() > 0,
+            "sla2 requests must route tiles to the linear branch");
+    assert!(nk.get("full_heads").unwrap().as_usize().unwrap() > 0,
+            "the dense-tier request must run full attention");
+    drop(client);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// artifact-gated: native vs XLA on the SAME weights
+// ---------------------------------------------------------------------
+
+/// Single-head kernel parity: the AOT `attn_*` micro-artifacts against
+/// the native attention functions, same inputs, same (identity-init)
+/// router parameters.
+#[test]
+fn native_matches_xla_attn_micro_artifacts() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let rt = sla2::runtime::Runtime::load(&dir).unwrap();
+    let (n, d, b_q, b_k) = (256usize, 64usize, 32usize, 16usize);
+    let (t_m, t_n) = (n / b_q, n / b_k);
+    let mut rng = Pcg32::seeded(14);
+    let q = Tensor::randn(&[n, d], &mut rng);
+    let k = Tensor::randn(&[n, d], &mut rng);
+    let v = Tensor::randn(&[n, d], &mut rng);
+    // aot.py's micro-artifacts embed init_sla2_params(d, t_m,
+    // k_pct=kept_frac): identity projections, alpha at the kept-mass
+    // prior logit
+    let proj = eye(d);
+    for (artifact, k_pct, quant, tol) in [
+        ("attn_sla2_noquant_s95_n256", 0.05, false, 1e-4),
+        ("attn_sla2_s95_n256", 0.05, true, 1e-3),
+        ("attn_sla2_s90_n256", 0.10, true, 1e-3),
+    ] {
+        if rt.manifest().artifact(artifact).is_err() {
+            eprintln!("SKIP {artifact}: not in manifest");
+            continue;
+        }
+        let kept = attention::top_k_count(k_pct, t_n) as f64;
+        let kf = kept / t_n as f64;
+        let logit = (kf / (1.0 - kf)).ln() as f32;
+        let alpha = vec![logit; t_m];
+        let p = Sla2Params { proj_q: &proj, proj_k: &proj,
+                             alpha_logit: &alpha };
+        let native = attention::sla2_attention(
+            q.f32s().unwrap(), k.f32s().unwrap(), v.f32s().unwrap(),
+            &p, k_pct, n, d, b_q, b_k, quant);
+        let xla = rt.execute(artifact,
+                             &[q.clone(), k.clone(), v.clone()])
+            .unwrap();
+        let err = rel_err(&native, xla[0].f32s().unwrap());
+        assert!(err < tol,
+                "{artifact}: native vs XLA rel_err {err} (tol {tol})");
+    }
+}
+
+/// Whole-model parity: native and XLA backends load the SAME manifest
+/// weights and must agree on the denoise forward within 1e-4.
+#[test]
+fn native_matches_xla_denoise_on_manifest_weights() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let dir = dir.to_str().unwrap();
+    let xla = XlaBackend::load(dir, "dit-tiny").unwrap();
+    let native = NativeBackend::load(dir, "dit-tiny").unwrap();
+    assert_eq!(native.params_source(), "manifest",
+               "with artifacts present the native backend must share \
+                the XLA weights");
+    let cfg = native.model().clone();
+    let mut rng = Pcg32::seeded(15);
+    let x = Tensor::randn(&[1, cfg.video[0], cfg.video[1], cfg.video[2],
+                            cfg.video[3]], &mut rng);
+    let ts = Tensor::from_f32(&[1], vec![0.5]).unwrap();
+    let ys = Tensor::from_i32(&[1], vec![3]).unwrap();
+    for (variant, tier) in [("sla2", "s90"), ("full", "dense")] {
+        if matches!(xla.supported_batch_sizes(variant, tier),
+                    sla2::runtime::BatchSupport::Exact(ref s)
+                        if !s.contains(&1))
+        {
+            eprintln!("SKIP {variant}/{tier}: no b1 artifact");
+            continue;
+        }
+        let vx = xla.execute(variant, tier, &x, &ts, &ys).unwrap();
+        let vn = native.execute(variant, tier, &x, &ts, &ys).unwrap();
+        let err = vn.rel_err(&vx).unwrap();
+        assert!(err < 1e-4,
+                "{variant}/{tier}: native vs XLA denoise rel_err {err}");
+    }
+}
