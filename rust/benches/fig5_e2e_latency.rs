@@ -43,8 +43,10 @@ fn main() -> Result<()> {
     let steps = args.usize("steps", 6);
     // "xla" replays AOT artifacts (skips sections when absent);
     // "--backend native" measures the pure-Rust SLA2 backend and runs
-    // every measured section artifact-free
+    // every measured section artifact-free.  --quant-mode picks how
+    // the native backend's sla2 INT8 points execute (int8|sim|off).
     let backend = args.str("backend", "xla");
+    let quant_mode = args.str("quant-mode", "int8");
     let mut json_rows: Vec<Json> = Vec::new();
 
     // ---------------- modelled paper bars ----------------------------
@@ -109,6 +111,7 @@ fn main() -> Result<()> {
             variant: variant.to_string(),
             tier: tier.to_string(),
             backend: backend.clone(),
+            quant_mode: quant_mode.clone(),
             sample_steps: steps,
             max_batch: 1,
             batch_window_ms: 0,
@@ -181,6 +184,7 @@ fn main() -> Result<()> {
             variant: "sla2".into(),
             tier: "s90".into(),
             backend: backend.clone(),
+            quant_mode: quant_mode.clone(),
             sample_steps: steps,
             max_batch: 1,       // per-request dispatch: pure fan-out
             batch_window_ms: 0,
@@ -258,6 +262,7 @@ fn main() -> Result<()> {
             variant: "sla2".into(),
             tier: "s90".into(),
             backend: backend.clone(),
+            quant_mode: quant_mode.clone(),
             sample_steps: steps,
             max_batch: 1,
             batch_window_ms: 0,
@@ -346,6 +351,7 @@ fn main() -> Result<()> {
         variant: "sla2".into(),
         tier: "s90".into(),
         backend: backend.clone(),
+        quant_mode: quant_mode.clone(),
         sample_steps: steps,
         max_batch: 1,
         batch_window_ms: 0,

@@ -96,6 +96,13 @@ pub struct ServeConfig {
     /// needed; uses the manifest's weights when present, a seeded init
     /// otherwise)
     pub backend: String,
+    /// native backend only — how the `sla2` variant's INT8
+    /// quantization points execute: `"int8"` (default; real `i8 x i8
+    /// -> i32` integer kernels), `"sim"` (the f32 fake-quant
+    /// simulation, kept as the parity/measurement baseline) or
+    /// `"off"` (no quantization).  Ignored by `"xla"`, whose
+    /// artifacts bake the quantization into the lowered HLO.
+    pub quant_mode: String,
     pub sample_steps: usize,
     pub max_batch: usize,
     /// how long the batcher waits to fill a batch before dispatching
@@ -131,6 +138,7 @@ impl Default for ServeConfig {
             variant: "sla2".into(),
             tier: "s90".into(),
             backend: "xla".into(),
+            quant_mode: "int8".into(),
             sample_steps: 8,
             max_batch: 2,
             batch_window_ms: 5,
@@ -153,6 +161,7 @@ impl ServeConfig {
             variant: args.str("variant", &d.variant),
             tier: args.str("tier", &d.tier),
             backend: args.str("backend", &d.backend),
+            quant_mode: args.str("quant-mode", &d.quant_mode),
             sample_steps: args.usize("steps", d.sample_steps),
             max_batch: args.usize("max-batch", d.max_batch),
             batch_window_ms: args.u64("batch-window-ms", d.batch_window_ms),
@@ -182,6 +191,7 @@ impl ServeConfig {
             variant: s("variant", &d.variant),
             tier: s("tier", &d.tier),
             backend: s("backend", &d.backend),
+            quant_mode: s("quant_mode", &d.quant_mode),
             sample_steps: u("sample_steps", d.sample_steps),
             max_batch: u("max_batch", d.max_batch),
             batch_window_ms: u("batch_window_ms",
@@ -303,6 +313,16 @@ mod tests {
         assert_eq!(ServeConfig::from_args(&a).backend, "native");
         let j = Json::parse(r#"{"backend":"native"}"#).unwrap();
         assert_eq!(ServeConfig::from_json(&j).backend, "native");
+    }
+
+    #[test]
+    fn quant_mode_knob_parses_with_default() {
+        assert_eq!(ServeConfig::default().quant_mode, "int8");
+        let a = Args::parse_from(
+            ["--quant-mode", "sim"].map(String::from));
+        assert_eq!(ServeConfig::from_args(&a).quant_mode, "sim");
+        let j = Json::parse(r#"{"quant_mode":"off"}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).quant_mode, "off");
     }
 
     #[test]

@@ -43,6 +43,9 @@ pub struct ServerMetrics {
     queue: Option<Arc<RequestQueue>>,
     /// compute backend name ("xla" | "native"), attached by the server
     backend: Option<String>,
+    /// the native backend's quant_mode knob ("int8" | "sim" | "off"),
+    /// attached by the server alongside `backend`
+    quant_mode: Option<String>,
 }
 
 impl Default for ServerMetrics {
@@ -71,6 +74,7 @@ impl ServerMetrics {
             dispatch: None,
             queue: None,
             backend: None,
+            quant_mode: None,
         }
     }
 
@@ -94,6 +98,13 @@ impl ServerMetrics {
     /// counters in every snapshot.
     pub fn attach_backend(&mut self, backend: &str) {
         self.backend = Some(backend.to_string());
+    }
+
+    /// Record the configured quant mode (surfaced next to `backend`
+    /// for native servers, so dashboards can tell real-INT8 serving
+    /// from the f32 simulation at a glance).
+    pub fn attach_quant_mode(&mut self, mode: &str) {
+        self.quant_mode = Some(mode.to_string());
     }
 
     pub fn record_batch(&mut self, size: usize, steps: usize,
@@ -186,6 +197,9 @@ impl ServerMetrics {
             // every native backend in this process, like the compile
             // cache) — surfaced whenever a native server is attached
             if b == "native" {
+                if let Some(qm) = &self.quant_mode {
+                    j = j.push("quant_mode", qm.as_str());
+                }
                 j = j.push("native_kernels",
                            crate::runtime::native::stats().snapshot());
             }
@@ -251,11 +265,16 @@ mod tests {
         assert!(s.get("native_kernels").is_none(),
                 "xla servers must not imply native kernel activity");
         m.attach_backend("native");
+        m.attach_quant_mode("int8");
         let s = m.snapshot();
         assert_eq!(s.get("backend").unwrap().as_str(), Some("native"));
+        assert_eq!(s.get("quant_mode").unwrap().as_str(), Some("int8"));
         let nk = s.get("native_kernels").expect("native counters");
         assert!(nk.get("sparse_tiles").is_some());
         assert!(nk.get("denoise_forwards").is_some());
+        // per-mode counters: real-int8 vs simulated heads
+        assert!(nk.get("int8_heads").is_some());
+        assert!(nk.get("sim_heads").is_some());
     }
 
     #[test]

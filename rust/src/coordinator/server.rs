@@ -131,6 +131,7 @@ impl Server {
             let mut m = metrics.lock().unwrap();
             m.attach_queue(Arc::clone(&queue));
             m.attach_backend(&serve.backend);
+            m.attach_quant_mode(&serve.quant_mode);
         }
         let dir = artifacts_dir.to_string();
         let cfg = serve.clone();

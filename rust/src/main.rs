@@ -28,7 +28,11 @@ usage: sla2 <command> [--artifacts DIR] [--backend xla|native] [flags]
 every serving command takes --backend: \"xla\" (default) replays the
 AOT HLO artifacts through PJRT; \"native\" runs the pure-Rust SLA2
 forward on the CPU — no artifacts needed (weights come from the
-manifest when present, a seeded init otherwise).
+manifest when present, a seeded init otherwise).  The native backend
+also takes --quant-mode int8|sim|off: \"int8\" (default) serves the
+sla2 variant through real i8 x i8 -> i32 integer kernels, \"sim\" is
+the f32 fake-quant simulation (parity/measurement baseline), \"off\"
+disables quantization.  See docs/KERNELS.md.
 
 commands:
   info          show manifest contents and runtime platform

@@ -11,13 +11,19 @@
 //!   size is its own executable ([`BatchSupport::Exact`]).
 //! * [`crate::runtime::native::NativeBackend`] — a pure-Rust CPU
 //!   implementation of the SLA2 forward math (router, block-sparse
-//!   softmax, linear branch, alpha mix, int8 fake-quant).  No
-//!   artifacts, no compiles, any batch size in one launch
-//!   ([`BatchSupport::Any`]).
+//!   softmax, linear branch, alpha mix) with REAL integer INT8
+//!   kernels for the quantized sparse branch (`i8` operand buffers,
+//!   `i8 x i8 -> i32` GEMMs, per-tile dequant — see
+//!   `docs/KERNELS.md`).  No artifacts, no compiles, any batch size
+//!   in one launch ([`BatchSupport::Any`]).
 //!
 //! `ServeConfig::backend` ("xla" | "native") picks the implementation
 //! via [`make_backend`]; everything downstream of the engine (pool,
 //! scheduler, streaming, TCP) is backend-agnostic.
+//! `ServeConfig::quant_mode` ("int8" | "sim" | "off") additionally
+//! picks how the native backend executes the `sla2` variant's
+//! quantization points; the XLA backend ignores it — its artifacts
+//! bake the (simulated) quantization into the lowered HLO.
 
 use std::cell::RefCell;
 
@@ -86,14 +92,20 @@ pub trait ComputeBackend {
 /// Build the backend `serve.backend` names.  `artifacts_dir` is
 /// required for `"xla"`; `"native"` uses it when a manifest is present
 /// (shared config + params) and falls back to its built-in model
-/// configs + seeded parameters otherwise.
+/// configs + seeded parameters otherwise.  `serve.quant_mode` is
+/// validated here for the native backend (an unknown mode fails
+/// loudly at startup, not at the first sla2 request).
 pub fn make_backend(artifacts_dir: &str, serve: &ServeConfig)
                     -> Result<Box<dyn ComputeBackend>> {
     match serve.backend.as_str() {
         "xla" => Ok(Box::new(XlaBackend::load(artifacts_dir,
                                               &serve.model)?)),
-        "native" => Ok(Box::new(super::native::NativeBackend::load(
-            artifacts_dir, &serve.model)?)),
+        "native" => {
+            let mode = super::native::QuantMode::parse(
+                &serve.quant_mode)?;
+            Ok(Box::new(super::native::NativeBackend::load_with_mode(
+                artifacts_dir, &serve.model, mode)?))
+        }
         other => anyhow::bail!(
             "unknown backend {other:?} (expected \"xla\" or \"native\")"),
     }

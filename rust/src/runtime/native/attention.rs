@@ -7,9 +7,17 @@
 //!   sqrt d)`, hard Top-k per row (ties broken by rank, stable);
 //! * **sparse branch** `O_s` — FlashAttention-style online softmax
 //!   over the kept tiles only (never materializing N x N), optionally
-//!   through the INT8 fake-quant points of Alg. 2 (SageAttention
+//!   through the INT8 quantization points of Alg. 2 (SageAttention
 //!   scheme: per-row Q/K scales, fixed 1/127 P scale, per-column V
-//!   scales within each tile);
+//!   scales within each tile).  [`QuantMode`] picks how those points
+//!   execute: [`QuantMode::Int8`] stores the quantized operands as
+//!   `i8` and runs the real `i8 x i8 -> i32` GEMMs
+//!   ([`gemm_i8_nt`]/[`gemm_i8_i32`]), dequantizing once per tile via
+//!   the hoisted scales; [`QuantMode::Sim`] is the f32 fake-quant
+//!   simulation (identical int8-valued operands, f32 matmuls) kept as
+//!   the parity oracle — the two are bit-identical whenever f32 can
+//!   accumulate the integer products exactly, which holds for every
+//!   served head shape (see `docs/KERNELS.md`);
 //! * **linear branch** `O_l` — running `H = sum phi(K_j)^T V_j`,
 //!   `Z = sum colsum(phi(K_j))` over the complement tiles, normalized
 //!   per query row;
@@ -20,8 +28,10 @@
 //! slices.  Tile loops run in ascending `j` order like the kernel's
 //! `fori_loop`, so f32 accumulation order matches the lowered HLO.
 
-use super::linalg::{dot, matmul, matmul_nt, matmul_tn, sigmoid,
-                    softmax_rows};
+use anyhow::bail;
+
+use super::linalg::{dot, gemm_i8_i32, gemm_i8_nt, matmul, matmul_nt,
+                    matmul_tn, sigmoid, softmax_rows};
 use super::stats;
 
 pub const NEG_INF: f32 = -1e30;
@@ -30,6 +40,61 @@ const EPS_LINEAR: f32 = 1e-9;
 /// Quantization scale guard (quant.py EPS).
 const EPS_QUANT: f32 = 1e-8;
 const INT8_MAX: f32 = 127.0;
+
+/// How the INT8 quantization points of Alg. 2 (Sec. 5) execute in the
+/// sparse branch — the `quant_mode` serving knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    /// Real integer kernels: K/V tiles and Q blocks live in `i8`
+    /// buffers, `Q Kᵀ` / `P V` run as `i8 x i8 -> i32` GEMMs, and the
+    /// `i32` tiles are dequantized once via the hoisted per-row /
+    /// per-column scales.  The default serving mode.
+    Int8,
+    /// The f32 fake-quant simulation: identical int8-valued operands,
+    /// but every matmul stays f32.  Pays quantization error without
+    /// the integer speed — kept as the parity oracle for `Int8`
+    /// (bit-identical on every served head shape) and as the
+    /// measurement baseline in `fig4_kernel_speed`'s `int8_vs_sim`
+    /// section.
+    Sim,
+    /// No quantization: the exact f32 sparse branch (the
+    /// `sla2_noquant` variant).
+    Off,
+}
+
+impl QuantMode {
+    /// Parse the `quant_mode` config string.
+    ///
+    /// ```
+    /// use sla2::runtime::native::attention::QuantMode;
+    /// assert_eq!(QuantMode::parse("int8").unwrap(), QuantMode::Int8);
+    /// assert_eq!(QuantMode::parse("sim").unwrap(), QuantMode::Sim);
+    /// assert_eq!(QuantMode::parse("off").unwrap(), QuantMode::Off);
+    /// assert!(QuantMode::parse("fp4").is_err());
+    /// ```
+    pub fn parse(s: &str) -> anyhow::Result<QuantMode> {
+        match s {
+            "int8" => Ok(QuantMode::Int8),
+            "sim" => Ok(QuantMode::Sim),
+            "off" => Ok(QuantMode::Off),
+            other => bail!("unknown quant_mode {other:?} (expected \
+                            \"int8\", \"sim\" or \"off\")"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QuantMode::Int8 => "int8",
+            QuantMode::Sim => "sim",
+            QuantMode::Off => "off",
+        }
+    }
+
+    /// Whether the sparse branch quantizes at all (Int8 or Sim).
+    pub fn is_quantized(self) -> bool {
+        !matches!(self, QuantMode::Off)
+    }
+}
 
 /// Router + mixing parameters for one head (shared across heads of a
 /// block in the DiT — same layout as `model.py`).
@@ -140,30 +205,58 @@ pub fn router_mask(q: &[f32], k: &[f32], proj_q: &[f32], proj_k: &[f32],
     mask
 }
 
-/// Symmetric per-row INT8 fake-quantization: returns the int8-valued
-/// f32 matrix and one scale per row (`x ≈ x_q * scale`).
+/// Symmetric per-row INT8 quantization: returns the `i8` matrix and
+/// one scale per row (`x ≈ x_q * scale`, `scale = amax/127 + ε`).
+///
+/// The symmetric-scale bound (property-tested, derived in
+/// `docs/KERNELS.md`): every element satisfies
+/// `|x - scale * x_q| <= scale / 2` — the scale strictly exceeds
+/// `amax/127`, so `|x/scale| < 127` and the clamp never bites.
 ///
 /// Rounding: `f32::round` (half away from zero) vs jnp's half-to-even
 /// — they differ only on exact .5 boundaries, which random inputs hit
 /// with probability ~0; parity tests budget for the stray flip.
-fn quantize_rows_int8(x: &[f32], cols: usize) -> (Vec<f32>, Vec<f32>) {
+///
+/// ```
+/// use sla2::runtime::native::attention::quantize_rows_int8;
+/// let x = [1.0f32, -2.0, 0.5, 0.25];
+/// let (xq, scales) = quantize_rows_int8(&x, 2);
+/// assert_eq!(xq, vec![63, -127, 127, 63]); // per-row amax -> ±127
+/// for (i, (&v, &q)) in x.iter().zip(&xq).enumerate() {
+///     let s = scales[i / 2];
+///     assert!((v - s * q as f32).abs() <= 0.5 * s);
+/// }
+/// ```
+pub fn quantize_rows_int8(x: &[f32], cols: usize)
+                          -> (Vec<i8>, Vec<f32>) {
     let mut xq = Vec::with_capacity(x.len());
     let mut scales = Vec::with_capacity(x.len() / cols);
     for row in x.chunks_exact(cols) {
         let amax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
         let scale = amax / INT8_MAX + EPS_QUANT;
         scales.push(scale);
-        xq.extend(row.iter()
-            .map(|v| (v / scale).round().clamp(-INT8_MAX, INT8_MAX)));
+        xq.extend(row.iter().map(|v| {
+            (v / scale).round().clamp(-INT8_MAX, INT8_MAX) as i8
+        }));
     }
     (xq, scales)
 }
 
 /// Per-column INT8 quantization of one V tile (`quantize_int8(v,
 /// axis=0)`): returns `(v_q, s_v)` with one scale per feature column.
-fn quantize_v_tile(v: &[f32], d: usize) -> (Vec<f32>, Vec<f32>) {
-    let mut col_amax = vec![0.0f32; d];
-    for row in v.chunks_exact(d) {
+///
+/// ```
+/// use sla2::runtime::native::attention::quantize_cols_int8;
+/// // one column spanning [−4, 2], one spanning [−1, 8]
+/// let v = [2.0f32, 8.0, -4.0, -1.0];
+/// let (vq, sv) = quantize_cols_int8(&v, 2);
+/// assert_eq!(vq, vec![63, 127, -127, -16]);
+/// assert!((sv[0] - 4.0 / 127.0).abs() < 1e-6);
+/// ```
+pub fn quantize_cols_int8(v: &[f32], cols: usize)
+                          -> (Vec<i8>, Vec<f32>) {
+    let mut col_amax = vec![0.0f32; cols];
+    for row in v.chunks_exact(cols) {
         for (m, x) in col_amax.iter_mut().zip(row) {
             *m = m.max(x.abs());
         }
@@ -172,22 +265,50 @@ fn quantize_v_tile(v: &[f32], d: usize) -> (Vec<f32>, Vec<f32>) {
         .map(|a| a / INT8_MAX + EPS_QUANT)
         .collect();
     let mut vq = Vec::with_capacity(v.len());
-    for row in v.chunks_exact(d) {
-        vq.extend(row.iter().zip(&s_v)
-            .map(|(x, s)| (x / s).round().clamp(-INT8_MAX, INT8_MAX)));
+    for row in v.chunks_exact(cols) {
+        vq.extend(row.iter().zip(&s_v).map(|(x, s)| {
+            (x / s).round().clamp(-INT8_MAX, INT8_MAX) as i8
+        }));
     }
     (vq, s_v)
 }
 
-/// INT8-simulated `P_ij V_j` (Alg. 2 line 17): P has a fixed 1/127
-/// scale (it lives in [0, 1] post online-softmax rescaling); `vq`/`sv`
-/// come pre-quantized per tile from [`quantize_v_tile`].
-fn quant_matmul_pv(p: &[f32], vq: &[f32], sv: &[f32], rows: usize,
-                   b_k: usize, d: usize) -> Vec<f32> {
+/// Inverse of [`quantize_rows_int8`]: `x ≈ x_q * scale` per row.
+///
+/// ```
+/// use sla2::runtime::native::attention::{dequantize_rows_int8,
+///                                        quantize_rows_int8};
+/// let x = [0.75f32, -0.25, 1.5, 3.0];
+/// let (xq, s) = quantize_rows_int8(&x, 2);
+/// let back = dequantize_rows_int8(&xq, &s, 2);
+/// for (v, b) in x.iter().zip(&back) {
+///     assert!((v - b).abs() <= 0.5 * s[1].max(s[0]));
+/// }
+/// ```
+pub fn dequantize_rows_int8(xq: &[i8], scales: &[f32], cols: usize)
+                            -> Vec<f32> {
+    debug_assert_eq!(xq.len(), scales.len() * cols);
+    xq.chunks_exact(cols)
+        .zip(scales)
+        .flat_map(|(row, &s)| row.iter().map(move |&q| q as f32 * s))
+        .collect()
+}
+
+/// Widen an `i8` buffer to int8-valued f32s — the sim path's operands
+/// (identical values to the integer path's, by construction).
+fn widen_i8(x: &[i8]) -> Vec<f32> {
+    x.iter().map(|&v| v as f32).collect()
+}
+
+/// f32-simulated `P_ij V_j` (Alg. 2 line 17): P has a fixed 1/127
+/// scale (it lives in [0, 1] post online-softmax rescaling); `vq_f` /
+/// `sv` come pre-quantized per tile (int8-valued f32 mirror).
+fn sim_matmul_pv(p: &[f32], vq_f: &[f32], sv: &[f32], rows: usize,
+                 b_k: usize, d: usize) -> Vec<f32> {
     let pq: Vec<f32> = p.iter()
         .map(|x| (x * INT8_MAX).round().clamp(0.0, INT8_MAX))
         .collect();
-    let mut out = matmul(&pq, vq, rows, b_k, d);
+    let mut out = matmul(&pq, vq_f, rows, b_k, d);
     for row in out.chunks_exact_mut(d) {
         for (o, s) in row.iter_mut().zip(sv) {
             *o *= s / INT8_MAX;
@@ -196,26 +317,61 @@ fn quant_matmul_pv(p: &[f32], vq: &[f32], sv: &[f32], rows: usize,
     out
 }
 
+/// Real-INT8 `P_ij V_j`: quantize P to `i8` with the fixed 1/127
+/// scale, run the integer GEMM, dequantize once per column.  Computes
+/// `(sv[c] / 127) * acc` with the exact operations [`sim_matmul_pv`]
+/// applies to identical integer values, so the two paths agree
+/// bit-for-bit while the f32 accumulation stays exact.
+fn int8_matmul_pv(p: &[f32], vq: &[i8], sv: &[f32], rows: usize,
+                  b_k: usize, d: usize) -> Vec<f32> {
+    let pq: Vec<i8> = p.iter()
+        .map(|x| (x * INT8_MAX).round().clamp(0.0, INT8_MAX) as i8)
+        .collect();
+    let pvi = gemm_i8_i32(&pq, vq, rows, b_k, d);
+    let mut out = Vec::with_capacity(rows * d);
+    for row in pvi.chunks_exact(d) {
+        out.extend(row.iter().zip(sv)
+            .map(|(&acc, s)| acc as f32 * (s / INT8_MAX)));
+    }
+    out
+}
+
 /// Loop-invariant INT8 state of one key tile: quantized K (per-row
 /// scales) and V (per-column scales) — hoisted out of the query-block
-/// loop, which would otherwise redo this `t_m` times per tile.
+/// loop, which would otherwise redo this `t_m` times per tile.  The
+/// `i8` buffers are the integer GEMM operands; the `_f` mirrors are
+/// the same values widened to f32, populated only for
+/// [`QuantMode::Sim`] so the fake-quant path is not pessimized by
+/// per-tile widening.
 struct QuantTile {
-    kq: Vec<f32>,
+    kq: Vec<i8>,
     sk: Vec<f32>,
-    vq: Vec<f32>,
+    vq: Vec<i8>,
     sv: Vec<f32>,
+    kq_f: Vec<f32>,
+    vq_f: Vec<f32>,
+}
+
+/// Loop-invariant quantized Q state of one query block (Alg. 2 line
+/// 13, hoisted): `i8` values, per-row scales, and the sim-mode f32
+/// mirror.
+struct QuantBlock {
+    qq: Vec<i8>,
+    sq: Vec<f32>,
+    qq_f: Vec<f32>,
 }
 
 /// Full SLA2 op for one head (Eq. 13): route, run both branches, mix.
 ///
 /// `mask` is the `(t_m * t_n)` block mask (1 = sparse).  `quant`
-/// enables the INT8 fake-quant forward of Sec. 5.  K-smoothing is
-/// applied before BOTH branches (Alg. 2 line 2).
+/// picks how the INT8 points of Sec. 5 execute in the sparse branch
+/// (real integer GEMMs, f32 simulation, or no quantization).
+/// K-smoothing is applied before BOTH branches (Alg. 2 line 2).
 #[allow(clippy::too_many_arguments)]
 pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
                              mask: &[u8], alpha_logit: &[f32], n: usize,
                              d: usize, b_q: usize, b_k: usize,
-                             quant: bool) -> Vec<f32> {
+                             quant: QuantMode) -> Vec<f32> {
     use std::sync::atomic::Ordering::Relaxed;
     let (t_m, t_n) = (n / b_q, n / b_k);
     debug_assert_eq!(mask.len(), t_m * t_n);
@@ -225,8 +381,16 @@ pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
     st.attn_heads.fetch_add(1, Relaxed);
     st.sparse_tiles.fetch_add(kept, Relaxed);
     st.linear_tiles.fetch_add((t_m * t_n) as u64 - kept, Relaxed);
-    if quant {
-        st.quant_heads.fetch_add(1, Relaxed);
+    match quant {
+        QuantMode::Int8 => {
+            st.quant_heads.fetch_add(1, Relaxed);
+            st.int8_heads.fetch_add(1, Relaxed);
+        }
+        QuantMode::Sim => {
+            st.quant_heads.fetch_add(1, Relaxed);
+            st.sim_heads.fetch_add(1, Relaxed);
+        }
+        QuantMode::Off => {}
     }
 
     let k_sm = smooth_k(k, n, d);
@@ -236,18 +400,32 @@ pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
 
     // per-tile INT8 K/V quantization — loop-invariant across query
     // blocks (depends only on j), so hoist it like h_tiles/z_tiles
-    // instead of re-quantizing each kept tile t_m times
-    let quant_tiles: Option<Vec<QuantTile>> = quant.then(|| {
-        (0..t_n)
-            .map(|j| {
-                let (kq, sk) = quantize_rows_int8(
-                    &k_sm[j * b_k * d..(j + 1) * b_k * d], d);
-                let (vq, sv) = quantize_v_tile(
-                    &v[j * b_k * d..(j + 1) * b_k * d], d);
-                QuantTile { kq, sk, vq, sv }
-            })
-            .collect()
-    });
+    // instead of re-quantizing each kept tile t_m times.  Only tiles
+    // SOME query block routes to the sparse branch get quantized: at
+    // high sparsity most tiles are linear-only and the quantization
+    // work would be dead (None is never read — guarded by the mask).
+    let tile_kept: Vec<bool> = (0..t_n)
+        .map(|j| (0..t_m).any(|i| mask[i * t_n + j] == 1))
+        .collect();
+    let quant_tiles: Option<Vec<Option<QuantTile>>> =
+        quant.is_quantized().then(|| {
+            (0..t_n)
+                .map(|j| {
+                    tile_kept[j].then(|| {
+                        let (kq, sk) = quantize_rows_int8(
+                            &k_sm[j * b_k * d..(j + 1) * b_k * d], d);
+                        let (vq, sv) = quantize_cols_int8(
+                            &v[j * b_k * d..(j + 1) * b_k * d], d);
+                        let (kq_f, vq_f) = if quant == QuantMode::Sim {
+                            (widen_i8(&kq), widen_i8(&vq))
+                        } else {
+                            (Vec::new(), Vec::new())
+                        };
+                        QuantTile { kq, sk, vq, sv, kq_f, vq_f }
+                    })
+                })
+                .collect()
+        });
 
     // per-key-block linear states H_j = phi(K_j)^T V_j, Z_j =
     // colsum(phi(K_j)) — computed once, combined per query block in
@@ -271,7 +449,16 @@ pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
     for i in 0..t_m {
         let qi = &q[i * b_q * d..(i + 1) * b_q * d];
         // hoisted Alg. 2 line 13: quant(Q_i) is loop-invariant
-        let q_quant = quant.then(|| quantize_rows_int8(qi, d));
+        let q_quant: Option<QuantBlock> =
+            quant.is_quantized().then(|| {
+                let (qq, sq) = quantize_rows_int8(qi, d);
+                let qq_f = if quant == QuantMode::Sim {
+                    widen_i8(&qq)
+                } else {
+                    Vec::new()
+                };
+                QuantBlock { qq, sq, qq_f }
+            });
 
         // ---- sparse branch: online softmax over kept tiles ----------
         let mut m_i = vec![NEG_INF; b_q];
@@ -293,13 +480,28 @@ pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
             }
             let kj = &k_sm[j * b_k * d..(j + 1) * b_k * d];
             let vj = &v[j * b_k * d..(j + 1) * b_k * d];
+            // Alg. 2 line 14: S = dequant(quant(Q) quant(K)^T).  The
+            // int8 path widens the exact i32 accumulators to f32 and
+            // applies the identical per-(row, col) scale product the
+            // sim path applies to its (equal-valued) f32 sums, so the
+            // two modes agree bit-for-bit while the sums stay within
+            // f32's exact-integer range (docs/KERNELS.md).
             let mut s = match (&q_quant, &quant_tiles) {
-                (Some((qq, sq)), Some(qt)) => {
-                    let tile = &qt[j];
-                    let mut s = matmul_nt(qq, &tile.kq, b_q, d, b_k);
-                    for (r, srow) in s.chunks_exact_mut(b_k).enumerate() {
+                (Some(qb), Some(qt)) => {
+                    // mask == 1 here, so the tile was quantized above
+                    let tile = qt[j].as_ref().expect("kept tile");
+                    let mut s = if quant == QuantMode::Int8 {
+                        gemm_i8_nt(&qb.qq, &tile.kq, b_q, d, b_k)
+                            .into_iter()
+                            .map(|x| x as f32)
+                            .collect()
+                    } else {
+                        matmul_nt(&qb.qq_f, &tile.kq_f, b_q, d, b_k)
+                    };
+                    for (r, srow) in s.chunks_exact_mut(b_k).enumerate()
+                    {
                         for (x, skv) in srow.iter_mut().zip(&tile.sk) {
-                            *x *= sq[r] * skv;
+                            *x *= qb.sq[r] * skv;
                         }
                     }
                     s
@@ -327,8 +529,16 @@ pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
                 m_i[r] = m_new;
             }
             let pv = match &quant_tiles {
-                Some(qt) => quant_matmul_pv(&p, &qt[j].vq, &qt[j].sv,
-                                            b_q, b_k, d),
+                Some(qt) => {
+                    let tile = qt[j].as_ref().expect("kept tile");
+                    if quant == QuantMode::Int8 {
+                        int8_matmul_pv(&p, &tile.vq, &tile.sv, b_q, b_k,
+                                       d)
+                    } else {
+                        sim_matmul_pv(&p, &tile.vq_f, &tile.sv, b_q,
+                                      b_k, d)
+                    }
+                }
                 None => matmul(&p, vj, b_q, b_k, d),
             };
             for r in 0..b_q {
@@ -340,24 +550,20 @@ pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
             }
         }
 
-        // Alg. 2 lines 23-24 + the Eq. 13 alpha mix
+        // Alg. 2 lines 23-24 + the Eq. 13 alpha mix.  The whole query
+        // block's o_l = phi(Q_i) @ H is one (b_q, d) x (d, d) matmul
+        // (same ikj accumulation order as the old per-row loops).
         let a = sigmoid(alpha_logit[i]);
+        let qp_block = &qphi[i * b_q * d..(i + 1) * b_q * d];
+        let ol = matmul(qp_block, &h, b_q, d, d);
         for r in 0..b_q {
             let l_safe = if l_i[r] > 0.0 { l_i[r] } else { 1.0 };
-            let qp = &qphi[(i * b_q + r) * d..(i * b_q + r + 1) * d];
+            let qp = &qp_block[r * d..(r + 1) * d];
             let den = dot(qp, &z) + EPS_LINEAR;
-            // o_l row = (phi(q) @ H) / den — row-vector times matrix
-            let mut ol = vec![0.0f32; d];
-            for (dd, &qv) in qp.iter().enumerate() {
-                let hrow = &h[dd * d..(dd + 1) * d];
-                for (o, hv) in ol.iter_mut().zip(hrow) {
-                    *o += qv * hv;
-                }
-            }
             let orow = &mut out[(i * b_q + r) * d..(i * b_q + r + 1) * d];
             for (c, o) in orow.iter_mut().enumerate() {
                 let o_s = acc[r * d + c] / l_safe;
-                *o = a * o_s + (1.0 - a) * ol[c] / den;
+                *o = a * o_s + (1.0 - a) * ol[r * d + c] / den;
             }
         }
     }
@@ -369,7 +575,7 @@ pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
 #[allow(clippy::too_many_arguments)]
 pub fn sla2_attention(q: &[f32], k: &[f32], v: &[f32], p: &Sla2Params,
                       k_pct: f64, n: usize, d: usize, b_q: usize,
-                      b_k: usize, quant: bool) -> Vec<f32> {
+                      b_k: usize, quant: QuantMode) -> Vec<f32> {
     // router sees the UN-smoothed K (sla2.py order); smoothing is
     // softmax-invariant for the router scores anyway
     let mask = router_mask(q, k, p.proj_q, p.proj_k, k_pct, n, d, b_q,
@@ -477,7 +683,7 @@ pub(crate) mod tests {
         // compare against the smoothed K the op applies internally
         let k_sm = smooth_k(&k, n, d);
         let got = sla2_attention_masked(&q, &k, &v, &mask, &alpha, n, d,
-                                        b_q, b_k, false);
+                                        b_q, b_k, QuantMode::Off);
         let want = dense_sparse_ref(&q, &k_sm, &v, &mask, n, d, b_q, b_k);
         assert!(rel_err(&got, &want) < 1e-5,
                 "sparse branch diverged: {}", rel_err(&got, &want));
@@ -498,7 +704,7 @@ pub(crate) mod tests {
         let alpha = vec![-30.0f32; t_m];
         let k_sm = smooth_k(&k, n, d);
         let got = sla2_attention_masked(&q, &k, &v, &mask, &alpha, n, d,
-                                        b_q, b_k, false);
+                                        b_q, b_k, QuantMode::Off);
         let want = dense_linear_ref(&q, &k_sm, &v, &mask, n, d, b_q, b_k);
         assert!(rel_err(&got, &want) < 1e-5,
                 "linear branch diverged: {}", rel_err(&got, &want));
@@ -515,7 +721,8 @@ pub(crate) mod tests {
             row[3] = 1;
         }
         let run = |logit: f32| sla2_attention_masked(
-            &q, &k, &v, &mask, &vec![logit; t_m], n, d, b_q, b_k, false);
+            &q, &k, &v, &mask, &vec![logit; t_m], n, d, b_q, b_k,
+            QuantMode::Off);
         let (o_s, o_l, o_mid) = (run(30.0), run(-30.0), run(0.0));
         let want: Vec<f32> = o_s.iter().zip(&o_l)
             .map(|(s, l)| 0.5 * s + 0.5 * l)
@@ -534,13 +741,45 @@ pub(crate) mod tests {
         let p = Sla2Params { proj_q: &eye, proj_k: &eye,
                              alpha_logit: &alpha };
         let exact = sla2_attention(&q, &k, &v, &p, 0.25, n, d, b_q, b_k,
-                                   false);
-        let quant = sla2_attention(&q, &k, &v, &p, 0.25, n, d, b_q, b_k,
-                                   true);
-        let err = rel_err(&quant, &exact);
-        assert!(err > 1e-7, "quant path must actually quantize");
-        assert!(err < 5e-2, "INT8 fake-quant error too large: {err}");
+                                   QuantMode::Off);
+        for mode in [QuantMode::Int8, QuantMode::Sim] {
+            let quant = sla2_attention(&q, &k, &v, &p, 0.25, n, d, b_q,
+                                       b_k, mode);
+            let err = rel_err(&quant, &exact);
+            assert!(err > 1e-7,
+                    "{mode:?} path must actually quantize");
+            assert!(err < 5e-2,
+                    "{mode:?} INT8 error too large: {err}");
+        }
     }
+
+    #[test]
+    fn int8_and_sim_modes_are_bit_identical() {
+        // in-crate smoke for the f32-exactness argument
+        // (docs/KERNELS.md): the integer path reproduces the f32
+        // fake-quant simulation BIT-for-bit, not just within rel_err.
+        // The full parity suite (dit-tiny AND dit-small head shapes,
+        // several k_pct) lives in rust/tests/native_backend.rs.
+        let (n, d, b_q, b_k) = (64, 32, 8, 4);
+        let (q, k, v) = qkv(n, d, 21);
+        let eye: Vec<f32> = (0..d * d)
+            .map(|i| if i % (d + 1) == 0 { 1.0 } else { 0.0 })
+            .collect();
+        let alpha = vec![0.3f32; n / b_q];
+        let p = Sla2Params { proj_q: &eye, proj_k: &eye,
+                             alpha_logit: &alpha };
+        let int8 = sla2_attention(&q, &k, &v, &p, 0.25, n, d, b_q, b_k,
+                                  QuantMode::Int8);
+        let sim = sla2_attention(&q, &k, &v, &p, 0.25, n, d, b_q, b_k,
+                                 QuantMode::Sim);
+        assert_eq!(int8, sim,
+                   "int8 and sim quant modes diverged on a shape where \
+                    the i32 accumulators are f32-exact");
+    }
+
+    // NOTE: the symmetric-scale roundtrip bound is property-tested in
+    // rust/tests/native_backend.rs (util::proptest harness) — no unit
+    // copy here, one place to update if the bound changes.
 
     #[test]
     fn full_attention_row_stochastic_sanity() {

@@ -1,25 +1,161 @@
-//! Small dense-math substrate for the native backend: row-major f32
-//! matmuls and the handful of elementwise ops the DiT forward needs.
+//! Dense-math substrate for the native backend: row-major f32 matmuls
+//! (cache-blocked), the portable `i8 x i8 -> i32` integer GEMMs behind
+//! the real-INT8 attention path, and the handful of elementwise ops
+//! the DiT forward needs.
 //!
 //! Numerics mirror the jax source of truth (`python/compile/model.py`,
 //! `kernels/ref.py`): layer-norm uses the population variance with eps
 //! 1e-6, gelu is the tanh approximation (jax.nn.gelu's default), and
-//! softmax subtracts the row max before exponentiating.
+//! softmax subtracts the row max before exponentiating.  The f32
+//! matmuls accumulate each output element in ascending-`k` order no
+//! matter how the loops are blocked, so blocking never changes a bit
+//! of the result (pinned by `blocked_matmul_is_bit_identical_to_naive`
+//! below); the integer GEMMs are free to reassociate because integer
+//! addition is exact.  See `docs/KERNELS.md` for the blocking scheme
+//! and the f32-exactness argument the INT8 parity tests rely on.
+
+/// Depth of the `b` panel [`matmul`] keeps hot across all `m` rows.
+const MATMUL_KC: usize = 128;
+/// Width of the `b` panel: a `MATMUL_KC x MATMUL_NC` f32 block is
+/// 128 KiB — L2-resident on anything this backend targets.
+const MATMUL_NC: usize = 256;
+/// Column-panel width for [`gemm_i8_nt`]: the panel of `b` rows reused
+/// across every row of `a` stays within L1.
+const GEMM_I8_NB: usize = 64;
 
 /// `a (m, k) @ b (k, n) -> (m, n)`, row-major.  ikj loop order so the
 /// inner loop runs over contiguous rows of `b` and `out`
-/// (auto-vectorizes; no blocking — the serving models are small).
+/// (auto-vectorizes); shapes wider than one `KC x NC` panel are
+/// cache-blocked over `k` and `n` with bit-identical accumulation
+/// order (ascending `k` per output element either way).
+///
+/// ```
+/// use sla2::runtime::native::linalg::matmul;
+/// let a = [1., 2., 3., 4., 5., 6.]; // (2, 3)
+/// let b = [7., 8., 9., 10., 11., 12.]; // (3, 2)
+/// assert_eq!(matmul(&a, &b, 2, 3, 2), vec![58., 64., 139., 154.]);
+/// ```
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
               -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     let mut out = vec![0.0f32; m * n];
+    if k <= MATMUL_KC && n <= MATMUL_NC {
+        // single-panel shapes (every attention tile, dit-tiny layers):
+        // the straight ikj loop, no blocking overhead
+        for i in 0..m {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        return out;
+    }
+    // blocked: one KC x NC panel of `b` stays cache-hot across all m
+    // rows of `a` (the dit-small MLP walks 1 MiB of weights per call
+    // otherwise).  Per output element the adds still run in ascending
+    // kk order (nb fixed, kb ascending, kk ascending), so the result
+    // is bit-identical to the naive loop above.
+    for nb in (0..n).step_by(MATMUL_NC) {
+        let ne = (nb + MATMUL_NC).min(n);
+        for kb in (0..k).step_by(MATMUL_KC) {
+            let ke = (kb + MATMUL_KC).min(k);
+            for i in 0..m {
+                let orow = &mut out[i * n + nb..i * n + ne];
+                for kk in kb..ke {
+                    let av = a[i * k + kk];
+                    let brow = &b[kk * n + nb..kk * n + ne];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Unrolled `i8` dot product with `i32` accumulation — the inner
+/// kernel of [`gemm_i8_nt`].  Four independent accumulator lanes break
+/// the add dependency chain (integer adds reassociate exactly, unlike
+/// the strict sequential-`k` f32 [`dot`]), which is what lets the
+/// compiler vectorize the widening multiply-adds.
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n4 = a.len() & !3;
+    let mut acc = [0i32; 4];
+    for (ca, cb) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4))
+    {
+        acc[0] += ca[0] as i32 * cb[0] as i32;
+        acc[1] += ca[1] as i32 * cb[1] as i32;
+        acc[2] += ca[2] as i32 * cb[2] as i32;
+        acc[3] += ca[3] as i32 * cb[3] as i32;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (&x, &y) in a[n4..].iter().zip(&b[n4..]) {
+        s += x as i32 * y as i32;
+    }
+    s
+}
+
+/// Integer `a (m, k) @ b (n, k)^T -> (m, n)` with `i32` accumulation —
+/// the real-INT8 `Q Kᵀ` product of Alg. 2 (both operands row-major
+/// along `k`, like [`matmul_nt`]).  Cache-blocked over `n` so a panel
+/// of `b` rows is reused across every row of `a`; the inner kernel is
+/// the unrolled [`dot_i8`].  Accumulation is exact (no rounding), so
+/// dequantizing the `i32` result with the hoisted scales reproduces
+/// the f32 fake-quant path bit-for-bit whenever the f32 path itself
+/// is exact (see `docs/KERNELS.md`).
+///
+/// ```
+/// use sla2::runtime::native::linalg::gemm_i8_nt;
+/// let a: Vec<i8> = vec![1, 2, 3, 4]; // (2, 2)
+/// let b: Vec<i8> = vec![5, 6, 7, 8]; // (2, 2), transposed operand
+/// assert_eq!(gemm_i8_nt(&a, &b, 2, 2, 2), vec![17, 23, 39, 53]);
+/// ```
+pub fn gemm_i8_nt(a: &[i8], b: &[i8], m: usize, k: usize, n: usize)
+                  -> Vec<i32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = vec![0i32; m * n];
+    for jb in (0..n).step_by(GEMM_I8_NB) {
+        let je = (jb + GEMM_I8_NB).min(n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in jb..je {
+                out[i * n + j] = dot_i8(arow, &b[j * k..(j + 1) * k]);
+            }
+        }
+    }
+    out
+}
+
+/// Integer `a (m, k) @ b (k, n) -> (m, n)` with `i32` accumulation —
+/// the real-INT8 `P V` product of Alg. 2.  ikj loop order: the inner
+/// loop widens and multiply-adds contiguous rows of `b` into the
+/// `i32` output row, which auto-vectorizes.
+///
+/// ```
+/// use sla2::runtime::native::linalg::gemm_i8_i32;
+/// let a: Vec<i8> = vec![1, 2, 3, 4]; // (2, 2)
+/// let b: Vec<i8> = vec![5, 6, 7, 8]; // (2, 2)
+/// assert_eq!(gemm_i8_i32(&a, &b, 2, 2, 2), vec![19, 22, 43, 50]);
+/// ```
+pub fn gemm_i8_i32(a: &[i8], b: &[i8], m: usize, k: usize, n: usize)
+                   -> Vec<i32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0i32; m * n];
     for i in 0..m {
         let orow = &mut out[i * n..(i + 1) * n];
         for (kk, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
+            let av = av as i32;
             let brow = &b[kk * n..(kk + 1) * n];
             for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
+                *o += av * bv as i32;
             }
         }
     }
@@ -158,6 +294,73 @@ mod tests {
             }
         }
         assert_eq!(matmul_tn(&a, &b, 4, 3, 3), matmul(&a_t, &b, 3, 4, 3));
+    }
+
+    #[test]
+    fn blocked_matmul_is_bit_identical_to_naive() {
+        // shapes straddling the KC/NC panel boundaries, including
+        // non-multiples — the blocked path must reproduce the naive
+        // ikj accumulation order EXACTLY (no rel_err tolerance)
+        for (m, k, n) in [(3, 300, 70), (5, 129, 257), (2, 128, 256),
+                          (1, 400, 513), (7, 131, 300)] {
+            let a: Vec<f32> = (0..m * k)
+                .map(|i| ((i * 2654435761usize) as f32).sin())
+                .collect();
+            let b: Vec<f32> = (0..k * n)
+                .map(|i| ((i * 40503usize) as f32).cos())
+                .collect();
+            let mut naive = vec![0.0f32; m * n];
+            for i in 0..m {
+                for kk in 0..k {
+                    let av = a[i * k + kk];
+                    for j in 0..n {
+                        naive[i * n + j] += av * b[kk * n + j];
+                    }
+                }
+            }
+            assert_eq!(matmul(&a, &b, m, k, n), naive,
+                       "blocked matmul diverged at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn integer_gemms_match_naive_i32_references() {
+        let mut state = 0x243F_6A88u32;
+        let mut next_i8 = || {
+            state = state.wrapping_mul(1664525).wrapping_add(1013904223);
+            (state >> 24) as i8 // full [-128, 127] range
+        };
+        for (m, k, n) in [(1, 1, 1), (2, 3, 2), (32, 64, 16),
+                          (5, 7, 130), (8, 16, 64)] {
+            let a: Vec<i8> = (0..m * k).map(|_| next_i8()).collect();
+            let bt: Vec<i8> = (0..n * k).map(|_| next_i8()).collect();
+            let b: Vec<i8> = (0..k * n).map(|_| next_i8()).collect();
+            let mut want_nt = vec![0i32; m * n];
+            let mut want = vec![0i32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    for kk in 0..k {
+                        want_nt[i * n + j] +=
+                            a[i * k + kk] as i32 * bt[j * k + kk] as i32;
+                        want[i * n + j] +=
+                            a[i * k + kk] as i32 * b[kk * n + j] as i32;
+                    }
+                }
+            }
+            assert_eq!(gemm_i8_nt(&a, &bt, m, k, n), want_nt,
+                       "gemm_i8_nt diverged at ({m},{k},{n})");
+            assert_eq!(gemm_i8_i32(&a, &b, m, k, n), want,
+                       "gemm_i8_i32 diverged at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn dot_i8_handles_remainders_and_sign() {
+        assert_eq!(dot_i8(&[], &[]), 0);
+        assert_eq!(dot_i8(&[3], &[-4]), -12);
+        let a: Vec<i8> = vec![127; 9];
+        let b: Vec<i8> = vec![-128; 9];
+        assert_eq!(dot_i8(&a, &b), 9 * 127 * -128);
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! has not run, and benches get real (if CPU-scale) numbers.
 //!
 //! * [`attention`] — the paper's forward math (router, block-sparse
-//!   online softmax, linear branch, INT8 fake-quant, alpha mix);
+//!   online softmax, linear branch, real-INT8 integer kernels,
+//!   alpha mix);
 //! * [`model`] — the DiT forward + canonical parameter layout;
 //! * [`NativeBackend`] — the [`ComputeBackend`] implementation:
 //!   batch-parallel over the process-wide
@@ -18,6 +19,14 @@
 //! artifacts dir is present (so native and XLA run the SAME weights,
 //! which is what the parity tests pin); otherwise from a deterministic
 //! seeded init over built-in model configs.
+//!
+//! The `sla2` variant's INT8 points run in one of three
+//! [`QuantMode`]s (`ServeConfig::quant_mode`): `"int8"` (default) is
+//! the real integer path — `i8` operand buffers, `i8 x i8 -> i32`
+//! GEMMs, per-tile dequant; `"sim"` is the f32 fake-quant simulation
+//! kept as the parity oracle; `"off"` disables quantization.  See
+//! `docs/KERNELS.md` for the paper-to-code map and the argument for
+//! why `"int8"` and `"sim"` agree bit-for-bit on served head shapes.
 
 pub mod attention;
 pub mod linalg;
@@ -36,6 +45,7 @@ use crate::tensor::Tensor;
 use crate::util::threadpool::{shared_map, shared_pool_width};
 
 use super::backend::{BatchSupport, ComputeBackend};
+pub use attention::QuantMode;
 pub use model::{AttnMode, NativeParams};
 
 /// Process-wide native-kernel counters (all backends in this process
@@ -49,8 +59,14 @@ pub struct NativeKernelStats {
     pub attn_heads: AtomicU64,
     /// full-softmax head invocations (dense tier / full variant)
     pub full_heads: AtomicU64,
-    /// SLA2 heads that ran the INT8 fake-quant sparse path
+    /// SLA2 heads that ran a quantized sparse path (int8 + sim)
     pub quant_heads: AtomicU64,
+    /// quantized heads served by the REAL integer kernels
+    /// (`quant_mode = "int8"`)
+    pub int8_heads: AtomicU64,
+    /// quantized heads served by the f32 fake-quant simulation
+    /// (`quant_mode = "sim"`)
+    pub sim_heads: AtomicU64,
     /// (query-block, key-block) tiles routed to the sparse branch
     pub sparse_tiles: AtomicU64,
     /// tiles routed to the linear branch
@@ -66,6 +82,8 @@ impl NativeKernelStats {
             .push("attn_heads", g(&self.attn_heads))
             .push("full_heads", g(&self.full_heads))
             .push("quant_heads", g(&self.quant_heads))
+            .push("int8_heads", g(&self.int8_heads))
+            .push("sim_heads", g(&self.sim_heads))
             .push("sparse_tiles", g(&self.sparse_tiles))
             .push("linear_tiles", g(&self.linear_tiles))
     }
@@ -146,14 +164,26 @@ pub struct NativeBackend {
     threads: usize,
     /// where the weights came from (logged; pinned by tests)
     params_source: &'static str,
+    /// how the `sla2` variant's INT8 points execute
+    quant_mode: QuantMode,
 }
 
 impl NativeBackend {
     /// Load for `model`: manifest-backed when `artifacts_dir` has one
     /// (shared parse + decode, same weights as the XLA backend),
-    /// built-in config + seeded init otherwise.
+    /// built-in config + seeded init otherwise.  Quantized serving
+    /// defaults to the real integer kernels ([`QuantMode::Int8`]);
+    /// use [`NativeBackend::load_with_mode`] to pick another mode.
     pub fn load(artifacts_dir: impl AsRef<Path>, model: &str)
                 -> Result<NativeBackend> {
+        Self::load_with_mode(artifacts_dir, model, QuantMode::Int8)
+    }
+
+    /// [`NativeBackend::load`] with an explicit `quant_mode` — the
+    /// `ServeConfig::quant_mode` knob lands here via `make_backend`.
+    pub fn load_with_mode(artifacts_dir: impl AsRef<Path>, model: &str,
+                          quant_mode: QuantMode)
+                          -> Result<NativeBackend> {
         let dir = artifacts_dir.as_ref();
         let (cfg, params, source) = if dir.join("manifest.json").exists()
         {
@@ -176,12 +206,18 @@ impl NativeBackend {
             executions: Cell::new(0),
             threads: shared_pool_width(),
             params_source: source,
+            quant_mode,
         })
     }
 
     /// `"manifest"` or `"seeded-init"` — where the weights came from.
     pub fn params_source(&self) -> &'static str {
         self.params_source
+    }
+
+    /// How this backend executes the `sla2` variant's INT8 points.
+    pub fn quant_mode(&self) -> QuantMode {
+        self.quant_mode
     }
 }
 
@@ -191,8 +227,9 @@ impl ComputeBackend for NativeBackend {
     }
 
     fn platform(&self) -> String {
-        format!("native-cpu ({} threads, params: {})", self.threads,
-                self.params_source)
+        format!("native-cpu ({} threads, params: {}, quant: {})",
+                self.threads, self.params_source,
+                self.quant_mode.as_str())
     }
 
     fn model(&self) -> &ModelConfig {
@@ -207,7 +244,7 @@ impl ComputeBackend for NativeBackend {
     fn compile(&self, variant: &str, tier: &str, _batch: usize)
                -> Result<()> {
         // nothing to compile — validate the combination resolves
-        model::attn_mode(variant, tier).map(|_| ())
+        model::attn_mode(variant, tier, self.quant_mode).map(|_| ())
     }
 
     fn execute(&self, variant: &str, tier: &str, x: &Tensor, ts: &Tensor,
@@ -221,7 +258,7 @@ impl ComputeBackend for NativeBackend {
         ensure!(ts.shape == [b] && ys.shape == [b],
                 "ts/ys must be ({b},), got {:?}/{:?}", ts.shape,
                 ys.shape);
-        let mode = model::attn_mode(variant, tier)?;
+        let mode = model::attn_mode(variant, tier, self.quant_mode)?;
         let xs = x.f32s()?;
         let tss = ts.f32s()?.to_vec();
         let yss = ys.i32s()?.to_vec();
@@ -280,6 +317,19 @@ mod tests {
         assert_eq!(b.supported_batch_sizes("sla2", "s90"),
                    BatchSupport::Any);
         assert!(NativeBackend::load("/nonexistent", "dit-base").is_err());
+    }
+
+    #[test]
+    fn quant_mode_defaults_to_int8_and_threads_through() {
+        let b = NativeBackend::load("/nonexistent", "dit-tiny").unwrap();
+        assert_eq!(b.quant_mode(), QuantMode::Int8);
+        assert!(b.platform().contains("quant: int8"));
+        let b = NativeBackend::load_with_mode("/nonexistent", "dit-tiny",
+                                              QuantMode::Sim).unwrap();
+        assert_eq!(b.quant_mode(), QuantMode::Sim);
+        assert!(b.platform().contains("quant: sim"));
+        // the mode only gates the sla2 variant; full still compiles
+        b.compile("full", "dense", 1).unwrap();
     }
 
     #[test]

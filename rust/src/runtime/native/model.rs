@@ -26,7 +26,7 @@ use crate::config::ModelConfig;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 
-use super::attention::{self, Sla2Params};
+use super::attention::{self, QuantMode, Sla2Params};
 use super::linalg::{add_bias, gelu, layer_norm_rows, matmul,
                     modulate_rows};
 
@@ -36,8 +36,9 @@ pub enum AttnMode {
     /// Vanilla softmax attention (the `full` variant / `dense` tier).
     Full,
     /// SLA2: learned router + sparse/linear branches + alpha mix;
-    /// `quant` enables the INT8 fake-quant sparse path (Sec. 5).
-    Sla2 { k_pct: f64, quant: bool },
+    /// `quant` picks how the INT8 points of Sec. 5 execute in the
+    /// sparse path (real integer GEMMs, f32 simulation, or none).
+    Sla2 { k_pct: f64, quant: QuantMode },
 }
 
 /// One transformer block's parameters (canonical key order).
@@ -465,7 +466,11 @@ pub fn tier_k_pct(tier: &str) -> Option<f64> {
 }
 
 /// Resolve (variant, tier) to the attention mode the forward runs.
-pub fn attn_mode(variant: &str, tier: &str) -> Result<AttnMode> {
+/// `quant_mode` is the backend's configured `quant_mode` knob — it
+/// applies to the `sla2` variant only (`sla2_noquant` always runs the
+/// exact f32 sparse branch, `full` never quantizes).
+pub fn attn_mode(variant: &str, tier: &str, quant_mode: QuantMode)
+                 -> Result<AttnMode> {
     let k_pct = tier_k_pct(tier).with_context(|| format!(
         "unknown tier {tier:?} (have: s90, s95, s97, dense)"))?;
     match variant {
@@ -474,8 +479,10 @@ pub fn attn_mode(variant: &str, tier: &str) -> Result<AttnMode> {
         // block goes sparse, the linear branch is empty, and the mix
         // yields `a ⊙ O_full` (alpha-scaled), exactly like the python
         // model.  Running the real kernel preserves that semantics.
-        "sla2" => Ok(AttnMode::Sla2 { k_pct, quant: true }),
-        "sla2_noquant" => Ok(AttnMode::Sla2 { k_pct, quant: false }),
+        "sla2" => Ok(AttnMode::Sla2 { k_pct, quant: quant_mode }),
+        "sla2_noquant" => {
+            Ok(AttnMode::Sla2 { k_pct, quant: QuantMode::Off })
+        }
         other => bail!("native backend does not implement attention \
                         variant {other:?} (have: full, sla2, \
                         sla2_noquant)"),
@@ -556,7 +563,8 @@ mod tests {
         let mut rng = Pcg32::seeded(9);
         let x = rng.normal_vec(cfg.video_numel());
         for mode in [AttnMode::Full,
-                     AttnMode::Sla2 { k_pct: 0.10, quant: true }] {
+                     AttnMode::Sla2 { k_pct: 0.10,
+                                      quant: QuantMode::Int8 }] {
             let vel = denoise_forward(&cfg, &p, &x, 0.7, 3, mode, false)
                 .unwrap();
             assert!(vel.iter().all(|v| *v == 0.0),
@@ -587,7 +595,8 @@ mod tests {
         assert_eq!(full, again);
         let sla2 = denoise_forward(
             &cfg, &p, &x, 0.5, 1,
-            AttnMode::Sla2 { k_pct: 0.10, quant: false }, false).unwrap();
+            AttnMode::Sla2 { k_pct: 0.10, quant: QuantMode::Off },
+            false).unwrap();
         assert_ne!(full, sla2,
                    "sparse attention must differ from full attention \
                     once gates are non-zero");
@@ -602,20 +611,28 @@ mod tests {
         assert_eq!(tier_k_pct("s95"), Some(0.05));
         assert_eq!(tier_k_pct("dense"), Some(1.0));
         assert_eq!(tier_k_pct("s99"), None);
-        assert_eq!(attn_mode("full", "dense").unwrap(), AttnMode::Full);
+        let qm = QuantMode::Int8;
+        assert_eq!(attn_mode("full", "dense", qm).unwrap(),
+                   AttnMode::Full);
         // sla2 at the dense tier stays SLA2 (alpha-scaled full, python
         // semantics) — the engine's variant_for_tier rewrites dense
         // requests to "full" before they reach a backend
-        assert_eq!(attn_mode("sla2", "dense").unwrap(),
-                   AttnMode::Sla2 { k_pct: 1.0, quant: true });
-        assert_eq!(attn_mode("sla2", "s97").unwrap(),
-                   AttnMode::Sla2 { k_pct: 0.03, quant: true });
-        assert_eq!(attn_mode("sla2_noquant", "s90").unwrap(),
-                   AttnMode::Sla2 { k_pct: 0.10, quant: false });
-        assert!(attn_mode("vsa", "s95").is_err());
+        assert_eq!(attn_mode("sla2", "dense", qm).unwrap(),
+                   AttnMode::Sla2 { k_pct: 1.0, quant: qm });
+        assert_eq!(attn_mode("sla2", "s97", qm).unwrap(),
+                   AttnMode::Sla2 { k_pct: 0.03, quant: qm });
+        // the configured mode reaches the sla2 variant...
+        assert_eq!(attn_mode("sla2", "s90", QuantMode::Sim).unwrap(),
+                   AttnMode::Sla2 { k_pct: 0.10,
+                                    quant: QuantMode::Sim });
+        // ...but sla2_noquant pins Off regardless of the knob
+        assert_eq!(attn_mode("sla2_noquant", "s90", qm).unwrap(),
+                   AttnMode::Sla2 { k_pct: 0.10,
+                                    quant: QuantMode::Off });
+        assert!(attn_mode("vsa", "s95", qm).is_err());
         // a typo'd tier must ERROR, not silently serve dense attention
-        assert!(attn_mode("sla2", "s99").is_err());
+        assert!(attn_mode("sla2", "s99", qm).is_err());
         // unimplemented variants error even at the dense tier
-        assert!(attn_mode("vsa", "dense").is_err());
+        assert!(attn_mode("vsa", "dense", qm).is_err());
     }
 }

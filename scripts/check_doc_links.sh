@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# Documentation link check (CI `doc-links` job; run from the repo
+# root).  Two classes of reference must resolve to a real file:
+#
+#   1. relative markdown links `[text](path)` in docs/*.md and
+#      README.md (http(s) links and pure #anchors are skipped;
+#      a trailing #anchor on a relative link is stripped);
+#   2. backtick path references to `rust/src/...`,
+#      `python/compile/...`, `docs/...`, `examples/...` or
+#      `rust/tests/...` — docs that name source files must not rot.
+#
+# Exit code 0 iff every reference resolves.
+set -u
+fail=0
+
+check_path() {
+    # $1 = markdown file, $2 = referenced path (repo-root or
+    # doc-relative)
+    local md="$1" ref="$2"
+    if [ -e "$ref" ] || [ -e "$(dirname "$md")/$ref" ]; then
+        return 0
+    fi
+    echo "BROKEN: $md -> $ref"
+    fail=1
+}
+
+for md in README.md docs/*.md; do
+    [ -f "$md" ] || continue
+    # markdown links: capture the (...) target, drop web links and
+    # pure anchors, strip trailing anchors
+    while IFS= read -r link; do
+        [ -n "$link" ] || continue
+        check_path "$md" "${link%%#*}"
+    done < <(grep -oE '\]\([^)]+\)' "$md" \
+                 | sed -E 's/^\]\(//; s/\)$//' \
+                 | grep -vE '^(https?:|mailto:|#)' || true)
+    # backtick source-path references
+    while IFS= read -r ref; do
+        [ -n "$ref" ] || continue
+        check_path "$md" "$ref"
+    done < <(grep -oE '`(rust/(src|tests|benches)|python/compile|docs|examples|scripts)/[A-Za-z0-9_./-]+`' "$md" \
+                 | tr -d '`' | sort -u || true)
+done
+
+if [ "$fail" -eq 0 ]; then
+    echo "doc-links: all references resolve"
+fi
+exit "$fail"
