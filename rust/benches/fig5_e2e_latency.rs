@@ -18,6 +18,12 @@
 //!     reply path (`submit_streaming`) vs the monolithic one-shot
 //!     reply: when the first frames reach the client vs the full clip
 //!     (`stream_ttfc` rows).
+//!   * **Overload shedding (measured)** — goodput, shed rate, degraded
+//!     rate and the p99 of ADMITTED work at 1x/2x/4x offered load,
+//!     with admission control on vs off (`overload_shed` rows): typed
+//!     `overloaded` turn-aways plus tier degradation keep admitted
+//!     latency bounded where the unprotected server lets the queue
+//!     grow without limit.
 //!
 //! Run: `cargo bench --bench fig5_e2e_latency [--json PATH|none]`
 //! Writes `BENCH_fig5_e2e.json` by default.
@@ -28,7 +34,7 @@ use anyhow::Result;
 use sla2::config::{default_num_shards, ServeConfig};
 use sla2::coordinator::engine::Engine;
 use sla2::coordinator::request::GenRequest;
-use sla2::coordinator::Server;
+use sla2::coordinator::{run_trace, Server, TraceConfig};
 use sla2::costmodel::{device, e2e, flops};
 use sla2::util::bench::{self, Table};
 use sla2::util::cli::Args;
@@ -414,6 +420,102 @@ fn main() -> Result<()> {
             t.print();
         }
     }
+
+    // ---------------- overload shedding ------------------------------
+    // Open-loop Poisson traces at multiples of the server's measured
+    // capacity, with admission control off (shed_watermark 1.0, the
+    // default) vs on.  The protected server turns away excess work
+    // with a typed `overloaded` (clients see retry_after_ms) and
+    // reroutes degradable requests to a cheaper sparsity tier; the
+    // payoff is a bounded p99 for the work it DOES admit.  The trace
+    // mixes s90 (degradable to s95) with s97 (bottom of the ladder,
+    // can only shed) so both counters exercise at overload.
+    println!("\n=== Fig. 5 companion: overload shedding & tier \
+              degradation (model {model}, {steps} steps) ===\n");
+    let mut t = Table::new(&["shedding", "load", "offered", "completed",
+                             "goodput rps", "shed", "degraded",
+                             "p99 admitted ms"]);
+    for shedding in [false, true] {
+        let serve = ServeConfig {
+            model: model.clone(),
+            variant: "sla2".into(),
+            tier: "s90".into(),
+            backend: backend.clone(),
+            quant_mode: quant_mode.clone(),
+            sample_steps: steps,
+            max_batch: 2,
+            batch_window_ms: 0,
+            queue_capacity: 64,
+            num_shards: 1,
+            // watermark at 4 queued requests, so 2x load trips it
+            // decisively; 1.0 disables admission
+            shed_watermark: if shedding { 0.0625 } else { 1.0 },
+            ..ServeConfig::default()
+        };
+        let server = match Server::start(&artifacts, serve) {
+            Ok(s) => s,
+            Err(err) => {
+                println!("  shedding={shedding}: SKIP ({err:#})");
+                continue;
+            }
+        };
+        // warm every tier the trace (or degradation) can route to,
+        // then probe capacity closed-loop
+        for tier in ["s90", "s95", "s97"] {
+            if let Ok(rx) = server.submit(1, 7, steps, tier) {
+                let _ = rx.recv();
+            }
+        }
+        let t0 = Instant::now();
+        let probe = 3;
+        for i in 0..probe {
+            if let Ok(rx) = server.submit(1, 50 + i, steps, "s90") {
+                let _ = rx.recv();
+            }
+        }
+        let capacity_rps = probe as f64
+            / t0.elapsed().as_secs_f64().max(1e-6);
+        for mult in [1usize, 2, 4] {
+            let trace = TraceConfig {
+                rps: capacity_rps * mult as f64,
+                n_requests: 8 * mult,
+                tiers: vec!["s90".into(), "s97".into()],
+                steps,
+                seed: 11 * mult as u64,
+                deadline_ms: 0,
+                allow_degrade: shedding,
+            };
+            let report = run_trace(&server, &trace)?;
+            let offered = report.offered.max(1) as f64;
+            let p99_ms = report.latency.as_ref()
+                .map(|l| l.p99 * 1e3)
+                .unwrap_or(0.0);
+            t.row(vec![format!("{}", if shedding { "on" } else { "off" }),
+                       format!("{mult}x"),
+                       format!("{}", report.offered),
+                       format!("{}", report.completed),
+                       format!("{:.2}", report.throughput_rps()),
+                       format!("{}", report.shed),
+                       format!("{}", report.degraded),
+                       format!("{p99_ms:.1}")]);
+            json_rows.push(Json::obj()
+                .push("section", "overload_shed")
+                .push("shedding", shedding)
+                .push("load_mult", mult)
+                .push("offered", report.offered)
+                .push("offered_rps", capacity_rps * mult as f64)
+                .push("completed", report.completed)
+                .push("goodput_rps", report.throughput_rps())
+                .push("shed", report.shed)
+                .push("shed_rate", report.shed as f64 / offered)
+                .push("degraded", report.degraded)
+                .push("degraded_rate", report.degraded as f64 / offered)
+                .push("rejected", report.rejected)
+                .push("p99_admitted_ms", p99_ms));
+        }
+        server.shutdown();
+    }
+    t.print();
 
     if let Some(path) = args.json_path("BENCH_fig5_e2e.json") {
         let report = bench::report("fig5_e2e", json_rows);

@@ -129,6 +129,39 @@ pub struct ServeConfig {
     /// chunks buffered per stream before the producer blocks
     /// (bounded backpressure; floored at 1)
     pub stream_buffer_chunks: usize,
+    /// default per-request deadline applied when a submission carries
+    /// none; 0 = no deadline
+    pub default_deadline_ms: u64,
+    /// admission control: shed (or degrade) once queue depth reaches
+    /// this fraction of `queue_capacity`; >= 1.0 disables depth-based
+    /// shedding (the default — the queue's own capacity still bounds
+    /// admission)
+    pub shed_watermark: f64,
+    /// admission control: shed (or degrade) once the queue's summed
+    /// estimated work (requests x class cost) reaches this value;
+    /// 0 disables work-based shedding
+    pub work_watermark: f64,
+    /// how many times a request whose shard panicked is re-queued
+    /// before it fails with a terminal `shard_failed`; 0 = never retry
+    pub retry_budget: u32,
+    /// base for the exponential jittered retry backoff (attempt 1
+    /// waits ~`retry_backoff_ms`, capped at 2 s)
+    pub retry_backoff_ms: u64,
+    /// quarantine a shard after this many panics inside
+    /// `quarantine_window_ms`; 0 disables quarantine
+    pub quarantine_failures: u32,
+    /// sliding window over which shard panics are counted
+    pub quarantine_window_ms: u64,
+    /// how long a quarantined shard sits out before rebuilding its
+    /// backend and re-admitting itself
+    pub quarantine_cooldown_ms: u64,
+    /// deterministic fault-injection plan (chaos testing), e.g.
+    /// `"panic:shard=1:nth=3,slow:ms=200:rate=0.1,drop-conn:rate=0.05"`;
+    /// empty = no faults (production default)
+    pub fault_plan: String,
+    /// seed for the fault plan's per-site RNG streams — the same plan
+    /// + seed replays the same faults
+    pub fault_seed: u64,
 }
 
 impl Default for ServeConfig {
@@ -149,6 +182,16 @@ impl Default for ServeConfig {
             listen_addr: String::new(),
             chunk_frames: 1,
             stream_buffer_chunks: 8,
+            default_deadline_ms: 0,
+            shed_watermark: 1.0,
+            work_watermark: 0.0,
+            retry_budget: 2,
+            retry_backoff_ms: 20,
+            quarantine_failures: 3,
+            quarantine_window_ms: 10_000,
+            quarantine_cooldown_ms: 250,
+            fault_plan: String::new(),
+            fault_seed: 0,
         }
     }
 }
@@ -175,6 +218,23 @@ impl ServeConfig {
             stream_buffer_chunks:
                 args.usize("stream-buffer-chunks",
                            d.stream_buffer_chunks).max(1),
+            default_deadline_ms: args.u64("default-deadline-ms",
+                                          d.default_deadline_ms),
+            shed_watermark: args.f64("shed-watermark", d.shed_watermark),
+            work_watermark: args.f64("work-watermark", d.work_watermark),
+            retry_budget: args.u64("retry-budget",
+                                   d.retry_budget as u64) as u32,
+            retry_backoff_ms: args.u64("retry-backoff-ms",
+                                       d.retry_backoff_ms),
+            quarantine_failures:
+                args.u64("quarantine-failures",
+                         d.quarantine_failures as u64) as u32,
+            quarantine_window_ms: args.u64("quarantine-window-ms",
+                                           d.quarantine_window_ms),
+            quarantine_cooldown_ms: args.u64("quarantine-cooldown-ms",
+                                             d.quarantine_cooldown_ms),
+            fault_plan: args.str("fault-plan", &d.fault_plan),
+            fault_seed: args.u64("fault-seed", d.fault_seed),
         }
     }
 
@@ -185,6 +245,9 @@ impl ServeConfig {
         };
         let u = |k: &str, dv: usize| {
             j.get(k).and_then(|v| v.as_usize()).unwrap_or(dv)
+        };
+        let f = |k: &str, dv: f64| {
+            j.get(k).and_then(|v| v.as_f64()).unwrap_or(dv)
         };
         ServeConfig {
             model: s("model", &d.model),
@@ -205,6 +268,25 @@ impl ServeConfig {
             chunk_frames: u("chunk_frames", d.chunk_frames),
             stream_buffer_chunks:
                 u("stream_buffer_chunks", d.stream_buffer_chunks).max(1),
+            default_deadline_ms: u("default_deadline_ms",
+                                   d.default_deadline_ms as usize) as u64,
+            shed_watermark: f("shed_watermark", d.shed_watermark),
+            work_watermark: f("work_watermark", d.work_watermark),
+            retry_budget: u("retry_budget",
+                            d.retry_budget as usize) as u32,
+            retry_backoff_ms: u("retry_backoff_ms",
+                                d.retry_backoff_ms as usize) as u64,
+            quarantine_failures:
+                u("quarantine_failures",
+                  d.quarantine_failures as usize) as u32,
+            quarantine_window_ms:
+                u("quarantine_window_ms",
+                  d.quarantine_window_ms as usize) as u64,
+            quarantine_cooldown_ms:
+                u("quarantine_cooldown_ms",
+                  d.quarantine_cooldown_ms as usize) as u64,
+            fault_plan: s("fault_plan", &d.fault_plan),
+            fault_seed: u("fault_seed", d.fault_seed as usize) as u64,
         }
     }
 }
@@ -364,6 +446,52 @@ mod tests {
         assert_eq!(s.listen_addr, "0.0.0.0:9000");
         assert_eq!(s.chunk_frames, 0); // 0 = whole clip in one chunk
         assert_eq!(s.stream_buffer_chunks, 4);
+    }
+
+    #[test]
+    fn fault_tolerance_knobs_parse_with_defaults() {
+        let d = ServeConfig::default();
+        assert_eq!(d.default_deadline_ms, 0);
+        assert_eq!(d.shed_watermark, 1.0);
+        assert_eq!(d.work_watermark, 0.0);
+        assert_eq!(d.retry_budget, 2);
+        assert_eq!(d.retry_backoff_ms, 20);
+        assert_eq!(d.quarantine_failures, 3);
+        assert_eq!(d.quarantine_window_ms, 10_000);
+        assert_eq!(d.quarantine_cooldown_ms, 250);
+        assert_eq!(d.fault_plan, "");
+        assert_eq!(d.fault_seed, 0);
+        let a = Args::parse_from(
+            ["--shed-watermark", "0.8", "--work-watermark", "64",
+             "--retry-budget", "1", "--retry-backoff-ms", "5",
+             "--quarantine-failures", "2",
+             "--quarantine-window-ms", "500",
+             "--quarantine-cooldown-ms", "50",
+             "--default-deadline-ms", "750",
+             "--fault-plan", "panic:shard=0:nth=2",
+             "--fault-seed", "7"].map(String::from));
+        let s = ServeConfig::from_args(&a);
+        assert_eq!(s.shed_watermark, 0.8);
+        assert_eq!(s.work_watermark, 64.0);
+        assert_eq!(s.retry_budget, 1);
+        assert_eq!(s.retry_backoff_ms, 5);
+        assert_eq!(s.quarantine_failures, 2);
+        assert_eq!(s.quarantine_window_ms, 500);
+        assert_eq!(s.quarantine_cooldown_ms, 50);
+        assert_eq!(s.default_deadline_ms, 750);
+        assert_eq!(s.fault_plan, "panic:shard=0:nth=2");
+        assert_eq!(s.fault_seed, 7);
+        let j = Json::parse(
+            r#"{"shed_watermark":0.5,"work_watermark":8,
+                "retry_budget":0,"fault_plan":"slow:ms=10",
+                "fault_seed":3,"default_deadline_ms":100}"#).unwrap();
+        let s = ServeConfig::from_json(&j);
+        assert_eq!(s.shed_watermark, 0.5);
+        assert_eq!(s.work_watermark, 8.0);
+        assert_eq!(s.retry_budget, 0);
+        assert_eq!(s.fault_plan, "slow:ms=10");
+        assert_eq!(s.fault_seed, 3);
+        assert_eq!(s.default_deadline_ms, 100);
     }
 
     #[test]

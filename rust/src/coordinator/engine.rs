@@ -17,12 +17,14 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::batcher::plan_support;
+use super::error::ServeError;
 use super::pool::BatchProcessor;
 use super::request::{GenRequest, RequestMetrics};
 use crate::config::{ModelConfig, ServeConfig};
 use crate::diffusion;
-use crate::runtime::ComputeBackend;
+use crate::runtime::{ComputeBackend, FaultyBackend};
 use crate::tensor::Tensor;
+use crate::util::faults::FaultInjector;
 use crate::util::rng::Pcg32;
 
 pub struct Engine {
@@ -37,7 +39,20 @@ impl Engine {
     /// "native" a manifest is used when present (shared weights with
     /// XLA) and a built-in config + seeded init otherwise.
     pub fn new(artifacts_dir: &str, serve: ServeConfig) -> Result<Engine> {
-        let backend = crate::runtime::make_backend(artifacts_dir, &serve)?;
+        Engine::new_with_injector(artifacts_dir, serve,
+                                  FaultInjector::inert())
+    }
+
+    /// [`Engine::new`] with a deterministic fault injector wrapped
+    /// around the backend (chaos testing; see [`crate::util::faults`]).
+    /// An inert injector adds no wrapper and no per-call overhead.
+    pub fn new_with_injector(artifacts_dir: &str, serve: ServeConfig,
+                             injector: FaultInjector) -> Result<Engine> {
+        let mut backend =
+            crate::runtime::make_backend(artifacts_dir, &serve)?;
+        if !injector.is_inert() {
+            backend = Box::new(FaultyBackend::new(backend, injector));
+        }
         let model = backend.model().clone();
         Ok(Engine { backend, model, serve })
     }
@@ -59,28 +74,51 @@ impl Engine {
 
     /// Serve a set of COMPATIBLE requests (same tier + steps).
     /// Returns `(clip, metrics)` per request, input order preserved.
+    /// A typed per-request failure (a mid-flight deadline expiry)
+    /// fails the whole call — direct callers (benches, tests) do not
+    /// set deadlines, so this path never sees one in practice.
     pub fn generate(&self, reqs: &[GenRequest])
                     -> Result<Vec<(Tensor, RequestMetrics)>> {
         let mut out = Vec::with_capacity(reqs.len());
-        self.generate_streaming(reqs, &mut |_, clip, rm| {
-            out.push((clip, rm));
+        let mut failed: Option<ServeError> = None;
+        self.generate_streaming(reqs, &mut |_, result, rm| {
+            match result {
+                Ok(clip) => out.push((clip, rm)),
+                Err(e) => failed = failed.take().or(Some(e)),
+            }
         })?;
-        Ok(out)
+        match failed {
+            Some(e) => Err(e.into()),
+            None => Ok(out),
+        }
     }
 
     /// Streaming core of [`Engine::generate`]: run the batch plan and
-    /// hand each request's `(index, clip, metrics)` to `emit` the
-    /// moment its sub-batch finishes sampling — requests in the first
-    /// sub-batch are delivered while later sub-batches are still
-    /// denoising.  Emission is in input order; an error aborts the
-    /// remaining sub-batches but everything already emitted stands.
+    /// hand each request's `(index, Ok(clip) | Err(failure), metrics)`
+    /// to `emit` the moment its sub-batch finishes sampling — requests
+    /// in the first sub-batch are delivered while later sub-batches
+    /// are still denoising.  Emission is in input order; an error
+    /// aborts the remaining sub-batches but everything already emitted
+    /// stands.
+    ///
+    /// Deadline semantics: requests already expired when their
+    /// sub-batch starts resolve to `Err(DeadlineExceeded)`.  A
+    /// sub-batch whose EVERY request has expired skips its denoise
+    /// launches entirely, and [`Engine::sample_batch`] re-checks
+    /// between denoise steps so a deadline passing mid-loop aborts the
+    /// remaining steps — both paths hand the shard slot back early
+    /// instead of finishing work nobody can use.  (When only some of
+    /// a sub-batch's requests expire, the launch still runs — the
+    /// batch shares one tensor layout — and only the live requests
+    /// get clips.)
     ///
     /// The sub-batch plan is a backend capability query: exact
     /// manifest sizes for XLA (min-launch cover), one single launch
     /// for the native backend ([`crate::runtime::BatchSupport::Any`]).
     pub fn generate_streaming(
         &self, reqs: &[GenRequest],
-        emit: &mut dyn FnMut(usize, Tensor, RequestMetrics))
+        emit: &mut dyn FnMut(usize, Result<Tensor, ServeError>,
+                             RequestMetrics))
         -> Result<()> {
         let first = reqs.first().context("empty batch")?;
         let tier = &first.tier;
@@ -99,10 +137,8 @@ impl Engine {
             // latency goes unreported
             let chunk_wait_ms =
                 t0.duration_since(dispatch_start).as_secs_f64() * 1e3;
-            let clips = self.sample_batch(variant, tier, chunk)?;
-            let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
-            for (j, (req, clip)) in chunk.iter().zip(clips).enumerate() {
-                emit(cursor + j, clip, RequestMetrics {
+            let rm_for = |req: &GenRequest, compute_ms: f64| {
+                RequestMetrics {
                     // queue wait measured directly at dequeue (stamped
                     // by the queue) — never negative, never
                     // reconstructed from wall-clock arithmetic
@@ -110,7 +146,42 @@ impl Engine {
                     compute_ms,
                     steps: req.steps,
                     batch_size,
-                });
+                }
+            };
+            let expired_now: Vec<bool> =
+                chunk.iter().map(|r| r.expired(t0)).collect();
+            if expired_now.iter().all(|&e| e) {
+                // the whole sub-batch is dead on arrival: resolve it
+                // without a single denoise launch
+                for (j, req) in chunk.iter().enumerate() {
+                    emit(cursor + j, Err(ServeError::DeadlineExceeded),
+                         rm_for(req, 0.0));
+                }
+                cursor += batch_size;
+                continue;
+            }
+            match self.sample_batch(variant, tier, chunk)? {
+                Some(clips) => {
+                    let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    for (j, (req, clip)) in
+                        chunk.iter().zip(clips).enumerate() {
+                        let result = if expired_now[j] {
+                            Err(ServeError::DeadlineExceeded)
+                        } else {
+                            Ok(clip)
+                        };
+                        emit(cursor + j, result, rm_for(req, compute_ms));
+                    }
+                }
+                None => {
+                    // every deadline in the sub-batch passed mid-loop;
+                    // the remaining steps were abandoned
+                    let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    for (j, req) in chunk.iter().enumerate() {
+                        emit(cursor + j, Err(ServeError::DeadlineExceeded),
+                             rm_for(req, compute_ms));
+                    }
+                }
             }
             cursor += batch_size;
         }
@@ -118,13 +189,16 @@ impl Engine {
     }
 
     /// The diffusion sampling loop for one fixed-size sub-batch.
+    /// `Ok(None)` means every request's deadline passed mid-loop and
+    /// the remaining steps were abandoned (the early-slot-release
+    /// path); `Ok(Some(clips))` is the normal result.
     ///
     /// Allocation discipline: the stacked latent `x` and the per-step
     /// `ts` tensor are each allocated ONCE and mutated/reused across
     /// all steps; per-step conversion of the changed tensors is the
     /// backend's concern.
     fn sample_batch(&self, variant: &str, tier: &str, reqs: &[GenRequest])
-                    -> Result<Vec<Tensor>> {
+                    -> Result<Option<Vec<Tensor>>> {
         let b = reqs.len();
         // warm the backend BEFORE building noise: XLA compiles the
         // executable here (instead of inside step 1), and the native
@@ -151,8 +225,16 @@ impl Engine {
         let ys = Tensor::from_i32(&[b], labels)?;
         let mut ts = Tensor::from_f32(&[b], vec![0.0; b])?;
 
+        // deadline re-check between steps only matters if any request
+        // actually carries one — the common no-deadline batch pays a
+        // single bool check per step
+        let any_deadline = reqs.iter().any(|r| r.deadline.is_some());
         let grid = diffusion::timestep_grid(reqs[0].steps);
         for step in grid.windows(2) {
+            if any_deadline
+                && reqs.iter().all(|r| r.expired(Instant::now())) {
+                return Ok(None);
+            }
             let (t_cur, t_next) = (step[0], step[1]);
             for v in ts.f32s_mut()? {
                 *v = t_cur;
@@ -160,7 +242,7 @@ impl Engine {
             let vel = self.backend.execute(variant, tier, &x, &ts, &ys)?;
             diffusion::euler_step(&mut x, &vel, t_cur, t_next);
         }
-        x.unstack()
+        x.unstack().map(Some)
     }
 }
 
@@ -172,7 +254,8 @@ impl BatchProcessor for Engine {
 
     fn process_streaming(
         &mut self, reqs: &[GenRequest],
-        emit: &mut dyn FnMut(usize, Tensor, RequestMetrics))
+        emit: &mut dyn FnMut(usize, Result<Tensor, ServeError>,
+                             RequestMetrics))
         -> Result<()> {
         self.generate_streaming(reqs, emit)
     }

@@ -1,0 +1,192 @@
+//! Typed failure taxonomy for the serving path.
+//!
+//! Every request submitted to the coordinator resolves to exactly one
+//! of {clip, [`ServeError`]}.  The enum replaces the ad-hoc string
+//! errors that used to travel through the reply channels: callers (and
+//! the TCP frontend) can now branch on *kind* — retry `Overloaded`
+//! after `retry_after_ms`, give up on `BadRequest`, resubmit a
+//! retryable `ShardFailed` — instead of grepping messages.
+//!
+//! Wire mapping: [`ServeError::code`] is the stable machine-readable
+//! string carried in the `code` field of `error`/`rejected` frames
+//! (see the `coordinator::net` module docs); [`std::fmt::Display`]
+//! keeps the human-readable message.
+
+use thiserror::Error;
+
+/// Terminal failure of a generation request.
+#[derive(Debug, Clone, PartialEq, Eq, Error)]
+pub enum ServeError {
+    /// Admission control shed the request: the queue is past its
+    /// watermark.  `retry_after_ms` is the server's drain estimate —
+    /// clients should back off at least that long before resubmitting.
+    #[error("server overloaded — retry in {retry_after_ms} ms")]
+    Overloaded { retry_after_ms: u64 },
+
+    /// The request's deadline passed before a clip could be delivered
+    /// (dropped at dequeue, or aborted mid-flight between sub-batches
+    /// or denoise steps).
+    #[error("deadline exceeded")]
+    DeadlineExceeded,
+
+    /// The shard serving this request failed.  `retryable` is true for
+    /// transient failures (a panic that took the batch down) where a
+    /// resubmit may succeed on a healthy shard; false for deterministic
+    /// failures (the same input would fail again) and exhausted retry
+    /// budgets.
+    #[error("generation failed: {reason}")]
+    ShardFailed { retryable: bool, reason: String },
+
+    /// The client cancelled the request (dropped stream, `cancel`
+    /// verb, or disconnect).
+    #[error("request cancelled")]
+    Cancelled,
+
+    /// The request itself was invalid (malformed frame, out-of-range
+    /// parameter).  Never retryable: the same request fails again.
+    #[error("bad request: {0}")]
+    BadRequest(String),
+
+    /// The server is winding down and no longer admits work.
+    #[error("server shutting down")]
+    ShuttingDown,
+}
+
+impl ServeError {
+    /// Transient shard failure (a resubmit may land on a healthy
+    /// shard).
+    pub fn shard_transient(reason: impl Into<String>) -> ServeError {
+        ServeError::ShardFailed { retryable: true, reason: reason.into() }
+    }
+
+    /// Deterministic shard failure (retrying cannot help).
+    pub fn shard_fatal(reason: impl Into<String>) -> ServeError {
+        ServeError::ShardFailed { retryable: false, reason: reason.into() }
+    }
+
+    /// Stable machine-readable code (the wire protocol's `code`
+    /// field).  Never reword these: clients branch on them.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Overloaded { .. } => "overloaded",
+            ServeError::DeadlineExceeded => "deadline_exceeded",
+            ServeError::ShardFailed { .. } => "shard_failed",
+            ServeError::Cancelled => "cancelled",
+            ServeError::BadRequest(_) => "bad_request",
+            ServeError::ShuttingDown => "shutting_down",
+        }
+    }
+
+    /// Whether resubmitting the same request can succeed.
+    pub fn retryable(&self) -> bool {
+        match self {
+            ServeError::Overloaded { .. } => true,
+            ServeError::DeadlineExceeded => false,
+            ServeError::ShardFailed { retryable, .. } => *retryable,
+            ServeError::Cancelled => false,
+            ServeError::BadRequest(_) => false,
+            ServeError::ShuttingDown => false,
+        }
+    }
+
+    /// Suggested client backoff, when the server has one.
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        match self {
+            ServeError::Overloaded { retry_after_ms } =>
+                Some(*retry_after_ms),
+            _ => None,
+        }
+    }
+
+    /// Reconstruct a `ServeError` from its wire form (`code` plus the
+    /// optional `retryable`/`retry_after_ms` fields and the human
+    /// message).  Unknown codes map to a non-retryable `ShardFailed`
+    /// so old clients still terminate.
+    pub fn from_wire(code: &str, message: &str, retryable: bool,
+                     retry_after_ms: u64) -> ServeError {
+        match code {
+            "overloaded" => ServeError::Overloaded { retry_after_ms },
+            "deadline_exceeded" => ServeError::DeadlineExceeded,
+            "cancelled" => ServeError::Cancelled,
+            "bad_request" => ServeError::BadRequest(message.to_string()),
+            "shutting_down" => ServeError::ShuttingDown,
+            _ => ServeError::ShardFailed {
+                retryable,
+                reason: message.to_string(),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_and_distinct() {
+        let all = [
+            ServeError::Overloaded { retry_after_ms: 10 },
+            ServeError::DeadlineExceeded,
+            ServeError::shard_transient("boom"),
+            ServeError::Cancelled,
+            ServeError::BadRequest("nope".into()),
+            ServeError::ShuttingDown,
+        ];
+        let codes: Vec<&str> = all.iter().map(|e| e.code()).collect();
+        assert_eq!(codes, ["overloaded", "deadline_exceeded",
+                           "shard_failed", "cancelled", "bad_request",
+                           "shutting_down"]);
+        let mut dedup = codes.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), codes.len());
+    }
+
+    #[test]
+    fn retryability() {
+        assert!(ServeError::Overloaded { retry_after_ms: 1 }.retryable());
+        assert!(ServeError::shard_transient("panic").retryable());
+        assert!(!ServeError::shard_fatal("bad shape").retryable());
+        assert!(!ServeError::DeadlineExceeded.retryable());
+        assert!(!ServeError::BadRequest("x".into()).retryable());
+        assert!(!ServeError::Cancelled.retryable());
+        assert!(!ServeError::ShuttingDown.retryable());
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let cases = [
+            ServeError::Overloaded { retry_after_ms: 250 },
+            ServeError::DeadlineExceeded,
+            ServeError::ShardFailed { retryable: true,
+                                      reason: "generation failed: boom"
+                                          .into() },
+            ServeError::Cancelled,
+            ServeError::BadRequest("bad request: oversized frame".into()),
+            ServeError::ShuttingDown,
+        ];
+        for e in cases {
+            let back = ServeError::from_wire(
+                e.code(), &e.to_string(), e.retryable(),
+                e.retry_after_ms().unwrap_or(0));
+            assert_eq!(back.code(), e.code());
+            assert_eq!(back.retryable(), e.retryable());
+            assert_eq!(back.retry_after_ms(), e.retry_after_ms());
+        }
+    }
+
+    #[test]
+    fn unknown_wire_code_degrades_to_shard_failed() {
+        let e = ServeError::from_wire("martian", "???", false, 0);
+        assert_eq!(e.code(), "shard_failed");
+        assert!(!e.retryable());
+    }
+
+    #[test]
+    fn messages_keep_the_legacy_prefix() {
+        // pre-existing clients grep for "generation failed"
+        let e = ServeError::shard_transient("batch processor panicked");
+        assert!(e.to_string().contains("generation failed"));
+        assert!(e.to_string().contains("batch processor panicked"));
+    }
+}

@@ -1,15 +1,16 @@
 //! Poisson load generator: drive the server with a realistic open-loop
 //! request trace and measure latency / throughput / rejection under
 //! offered load — the serving-paper methodology for exercising the
-//! dynamic batcher and backpressure path.
+//! dynamic batcher, admission control and backpressure path.
 
 use std::sync::mpsc::Receiver;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::error::ServeError;
 use super::request::GenResponse;
-use super::server::Server;
+use super::server::{Server, SubmitOpts};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use crate::util::stats::Summary;
@@ -23,12 +24,18 @@ pub struct TraceConfig {
     pub tiers: Vec<String>,
     pub steps: usize,
     pub seed: u64,
+    /// per-request deadline carried on every submission (ms);
+    /// 0 = none beyond the server default
+    pub deadline_ms: u64,
+    /// opt every request into tier degradation under overload
+    pub allow_degrade: bool,
 }
 
 impl Default for TraceConfig {
     fn default() -> Self {
         TraceConfig { rps: 4.0, n_requests: 16,
-                      tiers: vec!["s90".into()], steps: 4, seed: 17 }
+                      tiers: vec!["s90".into()], steps: 4, seed: 17,
+                      deadline_ms: 0, allow_degrade: false }
     }
 }
 
@@ -36,15 +43,29 @@ impl Default for TraceConfig {
 pub struct TraceReport {
     pub offered: usize,
     pub accepted: usize,
+    /// turned away at submit, any typed error (includes `shed`)
     pub rejected: usize,
+    /// subset of `rejected` turned away by the admission watermarks
+    /// (the server's `failures.shed` delta over the trace)
+    pub shed: usize,
+    /// accepted but rerouted to a cheaper tier by admission control
+    /// (the server's `failures.degraded` delta over the trace)
+    pub degraded: usize,
     pub completed: usize,
+    /// accepted but resolved `deadline_exceeded`
+    pub expired: usize,
+    /// accepted but resolved with any other typed error
     pub failed: usize,
-    /// end-to-end request latency (submit -> response), seconds
+    /// end-to-end request latency (submit -> response), seconds —
+    /// completed (admitted, non-expired) requests only, so `p99` is
+    /// the p99 of ADMITTED work under shedding
     pub latency: Option<Summary>,
     pub wall_s: f64,
 }
 
 impl TraceReport {
+    /// Completed requests per wall-clock second — the goodput the
+    /// overload bench sweeps.
     pub fn throughput_rps(&self) -> f64 {
         self.completed as f64 / self.wall_s.max(1e-9)
     }
@@ -54,7 +75,10 @@ impl TraceReport {
             .push("offered", self.offered)
             .push("accepted", self.accepted)
             .push("rejected", self.rejected)
+            .push("shed", self.shed)
+            .push("degraded", self.degraded)
             .push("completed", self.completed)
+            .push("expired", self.expired)
             .push("failed", self.failed)
             .push("wall_s", self.wall_s)
             .push("throughput_rps", self.throughput_rps());
@@ -67,12 +91,29 @@ impl TraceReport {
     }
 }
 
+/// Read one counter out of a metrics snapshot's `failures` section.
+fn failures_counter(snap: &Json, key: &str) -> usize {
+    snap.get("failures")
+        .and_then(|f| f.get(key))
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0)
+}
+
 /// Replay a Poisson trace against a running server (open loop: arrivals
 /// do not wait for completions, so overload genuinely queues/rejects).
 pub fn run_trace(server: &Server, cfg: &TraceConfig) -> Result<TraceReport> {
+    // shed/degraded are server-side decisions: read them as snapshot
+    // deltas so the report works on a server that has already run
+    // other traces
+    let before = server.metrics_snapshot();
+    let (shed0, degraded0) = (failures_counter(&before, "shed"),
+                              failures_counter(&before, "degraded"));
+    let opts = SubmitOpts { deadline_ms: cfg.deadline_ms,
+                            allow_degrade: cfg.allow_degrade };
     let mut rng = Pcg32::seeded(cfg.seed);
     let start = Instant::now();
-    let mut inflight: Vec<(Instant, Receiver<Result<GenResponse>>)> =
+    let mut inflight: Vec<(Instant,
+                           Receiver<Result<GenResponse, ServeError>>)> =
         Vec::new();
     let mut rejected = 0usize;
     let mut next_arrival = Instant::now();
@@ -86,25 +127,33 @@ pub fn run_trace(server: &Server, cfg: &TraceConfig) -> Result<TraceReport> {
         let tier = cfg.tiers[rng.below(cfg.tiers.len() as u32) as usize]
             .clone();
         let label = rng.below(10) as i32;
-        match server.submit(label, cfg.seed + i as u64, cfg.steps, &tier) {
+        match server.submit_with(label, cfg.seed + i as u64, cfg.steps,
+                                 &tier, opts) {
             Ok(rx) => inflight.push((Instant::now(), rx)),
-            Err(_) => rejected += 1, // backpressure: drop, keep offering
+            Err(_) => rejected += 1, // shed/backpressure: keep offering
         }
     }
     let mut latencies = Vec::with_capacity(inflight.len());
+    let mut expired = 0usize;
     let mut failed = 0usize;
     for (t0, rx) in inflight {
         match rx.recv() {
             Ok(Ok(_)) => latencies.push(t0.elapsed().as_secs_f64()),
+            Ok(Err(ServeError::DeadlineExceeded)) => expired += 1,
             _ => failed += 1,
         }
     }
     let completed = latencies.len();
+    let after = server.metrics_snapshot();
     Ok(TraceReport {
         offered: cfg.n_requests,
         accepted: cfg.n_requests - rejected,
         rejected,
+        shed: failures_counter(&after, "shed").saturating_sub(shed0),
+        degraded: failures_counter(&after, "degraded")
+            .saturating_sub(degraded0),
         completed,
+        expired,
         failed,
         latency: if latencies.is_empty() { None }
                  else { Some(Summary::of(&latencies)) },
@@ -120,20 +169,26 @@ mod tests {
     fn trace_config_defaults_sane() {
         let c = TraceConfig::default();
         assert!(c.rps > 0.0 && c.n_requests > 0 && !c.tiers.is_empty());
+        assert_eq!(c.deadline_ms, 0);
+        assert!(!c.allow_degrade);
     }
 
     #[test]
     fn report_json_roundtrips() {
         let r = TraceReport {
-            offered: 10, accepted: 8, rejected: 2, completed: 7,
-            failed: 1, latency: Some(Summary::of(&[0.1, 0.2, 0.3])),
+            offered: 10, accepted: 8, rejected: 2, shed: 1, degraded: 1,
+            completed: 7, expired: 0, failed: 1,
+            latency: Some(Summary::of(&[0.1, 0.2, 0.3])),
             wall_s: 2.0,
         };
         let j = r.to_json();
         assert_eq!(j.get("rejected").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("shed").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("degraded").unwrap().as_usize(), Some(1));
         assert!((j.get("throughput_rps").unwrap().as_f64().unwrap() - 3.5)
             .abs() < 1e-9);
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("completed").unwrap().as_usize(), Some(7));
+        assert_eq!(parsed.get("expired").unwrap().as_usize(), Some(0));
     }
 }

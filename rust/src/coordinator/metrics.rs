@@ -1,12 +1,13 @@
 //! Server-level metrics: counters + latency distributions + the
-//! per-shard rollup (compiles, executions, batches, utilization) +
-//! scheduler observability (per-class queue depths, warm/cold
-//! dispatch routing, compile-cache dedup) + streaming delivery
-//! (streams opened, chunks sent, cancelled streams, first-chunk
-//! latency).
+//! per-shard rollup (compiles, executions, batches, utilization,
+//! health state) + scheduler observability (per-class queue depths,
+//! warm/cold dispatch routing, compile-cache dedup) + streaming
+//! delivery (streams opened, chunks sent, cancelled streams,
+//! first-chunk latency) + the failure/overload rollup (sheds,
+//! degrades, deadline expiries, retries, quarantine flaps).
 
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 use super::pool::{DispatchStats, ShardStats};
@@ -34,6 +35,19 @@ pub struct ServerMetrics {
     pub cancelled_streams: u64,
     /// submit -> first-chunk-delivery latency, streaming requests only
     pub first_chunk_ms: Online,
+    /// requests shed by admission control (typed `Overloaded` reply);
+    /// disjoint from `rejected`, which counts hard queue-full/closed
+    pub shed: u64,
+    /// requests rerouted to a cheaper tier instead of being shed
+    pub degraded: u64,
+    /// requests that failed with `DeadlineExceeded` mid-flight (the
+    /// queue's dequeue-time drops are reported separately from the
+    /// attached queue)
+    pub deadline_expired: u64,
+    /// shard-panic survivors requeued for another attempt
+    pub retries: u64,
+    /// requests that terminally failed with `ShardFailed`
+    pub failed: u64,
     /// per-shard counters, attached by the engine pool at startup
     shards: Vec<Arc<ShardStats>>,
     /// dispatcher routing counters, attached by the engine pool
@@ -55,6 +69,17 @@ impl Default for ServerMetrics {
 }
 
 impl ServerMetrics {
+    /// Lock the shared metrics, RECOVERING from poison.  Shard threads
+    /// take this lock inside `catch_unwind` scopes: a panic while
+    /// holding it poisons the mutex, and a plain `.unwrap()` would
+    /// then cascade that one panic into every other shard thread that
+    /// touches metrics.  Metrics are monotonic counters and running
+    /// means — a half-applied update is at worst one off — so
+    /// recovering the guard is always safe.
+    pub fn lock(m: &Mutex<ServerMetrics>) -> MutexGuard<'_, ServerMetrics> {
+        m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
     pub fn new() -> ServerMetrics {
         ServerMetrics {
             started: Instant::now(),
@@ -70,6 +95,11 @@ impl ServerMetrics {
             chunks_sent: 0,
             cancelled_streams: 0,
             first_chunk_ms: Online::new(),
+            shed: 0,
+            degraded: 0,
+            deadline_expired: 0,
+            retries: 0,
+            failed: 0,
             shards: Vec::new(),
             dispatch: None,
             queue: None,
@@ -133,6 +163,31 @@ impl ServerMetrics {
         self.cancelled_streams += 1;
     }
 
+    /// Admission control shed a request with a typed `Overloaded`.
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
+    /// Admission control rerouted a request to a cheaper tier.
+    pub fn record_degraded(&mut self) {
+        self.degraded += 1;
+    }
+
+    /// A request expired mid-flight (between sub-batches or steps).
+    pub fn record_deadline_expired(&mut self) {
+        self.deadline_expired += 1;
+    }
+
+    /// A shard-panic survivor was requeued for another attempt.
+    pub fn record_retry(&mut self) {
+        self.retries += 1;
+    }
+
+    /// A request terminally failed with `ShardFailed`.
+    pub fn record_failed(&mut self) {
+        self.failed += 1;
+    }
+
     pub fn throughput_rps(&self) -> f64 {
         self.completed as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
     }
@@ -163,6 +218,19 @@ impl ServerMetrics {
                 .push("chunks_sent", self.chunks_sent as usize)
                 .push("cancelled_streams", self.cancelled_streams as usize)
                 .push("mean_first_chunk_ms", self.first_chunk_ms.mean()));
+        {
+            let mut f = Json::obj()
+                .push("shed", self.shed as usize)
+                .push("degraded", self.degraded as usize)
+                .push("deadline_expired", self.deadline_expired as usize)
+                .push("retries", self.retries as usize)
+                .push("failed", self.failed as usize);
+            if let Some(q) = &self.queue {
+                f = f.push("queue_expired_drops",
+                           q.expired_drops() as usize);
+            }
+            j = j.push("failures", f);
+        }
         if !self.shards.is_empty() {
             j = j.push("num_shards", self.shards.len())
                 .push("compiles", compiles as usize)
@@ -180,7 +248,12 @@ impl ServerMetrics {
                           s.executions.load(Ordering::Relaxed) as usize)
                     .push("busy_ms",
                           s.busy_us.load(Ordering::Relaxed) as f64 / 1e3)
-                    .push("utilization", s.utilization(uptime_s)))
+                    .push("utilization", s.utilization(uptime_s))
+                    .push("state", s.state_name())
+                    .push("panics",
+                          s.panics.load(Ordering::Relaxed) as usize)
+                    .push("quarantines",
+                          s.quarantines.load(Ordering::Relaxed) as usize))
                 .collect();
             j = j.push("shards", shards);
         }
@@ -328,6 +401,43 @@ mod tests {
     }
 
     #[test]
+    fn failures_section_rolls_up_overload_and_deadline_counters() {
+        let mut m = ServerMetrics::new();
+        m.record_shed();
+        m.record_shed();
+        m.record_degraded();
+        m.record_deadline_expired();
+        m.record_retry();
+        m.record_retry();
+        m.record_retry();
+        m.record_failed();
+        let s = m.snapshot();
+        let f = s.get("failures").unwrap();
+        assert_eq!(f.get("shed").unwrap().as_usize(), Some(2));
+        assert_eq!(f.get("degraded").unwrap().as_usize(), Some(1));
+        assert_eq!(f.get("deadline_expired").unwrap().as_usize(), Some(1));
+        assert_eq!(f.get("retries").unwrap().as_usize(), Some(3));
+        assert_eq!(f.get("failed").unwrap().as_usize(), Some(1));
+        // no queue attached: the dequeue-drop gauge is absent
+        assert!(f.get("queue_expired_drops").is_none());
+    }
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(ServerMetrics::new()));
+        let m2 = Arc::clone(&m);
+        // poison the mutex by panicking while holding it
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison");
+        }).join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        let mut g = ServerMetrics::lock(&m);
+        g.record_shed();
+        assert_eq!(g.shed, 1);
+    }
+
+    #[test]
     fn shard_rollup_sums_counters() {
         let mut m = ServerMetrics::new();
         let a = Arc::new(ShardStats::default());
@@ -346,5 +456,10 @@ mod tests {
         let shards = s.get("shards").unwrap().as_arr().unwrap();
         assert_eq!(shards.len(), 2);
         assert_eq!(shards[0].get("batches").unwrap().as_usize(), Some(4));
+        // health fields ride on every shard row
+        assert_eq!(shards[0].get("state").unwrap().as_str(), Some("up"));
+        assert_eq!(shards[0].get("panics").unwrap().as_usize(), Some(0));
+        assert_eq!(shards[0].get("quarantines").unwrap().as_usize(),
+                   Some(0));
     }
 }

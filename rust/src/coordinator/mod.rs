@@ -94,6 +94,21 @@
 //! streaming chunks / cancel / metrics over length-prefixed
 //! JSON-over-TCP (`ServeConfig::listen_addr`).
 //!
+//! **Failure model** — every failure a caller can observe is a typed
+//! [`error::ServeError`] (`overloaded`, `deadline_exceeded`,
+//! `shard_failed`, `cancelled`, `bad_request`, `shutting_down`), and
+//! every accepted request resolves to exactly one of {clip, typed
+//! error}.  The gateway sheds load at configurable queue-depth /
+//! estimated-work watermarks (or reroutes `allow_degrade` requests to
+//! a cheaper sparsity tier instead); expired deadlines are dropped at
+//! dequeue and re-checked between sub-batches and denoise steps; a
+//! panicking shard is caught, its batch retried within a bounded
+//! jittered-backoff budget, and a shard failing repeatedly inside a
+//! window is quarantined (backend rebuilt, then re-admitted).  A
+//! deterministic fault-injection plan ([`crate::util::faults`],
+//! `--fault-plan`) drives the chaos test suite over exactly these
+//! paths.
+//!
 //! Requests are whole video generations; all requests in a batch share
 //! the timestep schedule (diffusion jobs are fixed-length, so static
 //! per-batch scheduling is optimal — there is no analogue of
@@ -101,6 +116,7 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod error;
 pub mod loadgen;
 pub mod metrics;
 pub mod net;
@@ -112,11 +128,12 @@ pub mod stream;
 
 pub use batcher::{plan_batches, plan_batches_greedy, plan_support};
 pub use engine::Engine;
+pub use error::ServeError;
 pub use loadgen::{run_trace, TraceConfig, TraceReport};
 pub use metrics::ServerMetrics;
 pub use net::{NetClient, NetFrontend};
 pub use pool::{BatchProcessor, DispatchStats, EnginePool, ShardStats};
 pub use queue::{ClassKey, RequestQueue, SchedPolicy};
 pub use request::{GenRequest, GenResponse, ReplySink, RequestMetrics};
-pub use server::{Gateway, Server};
+pub use server::{Gateway, Server, SubmitOpts};
 pub use stream::{ClipChunk, ClipStream, StreamCancel};

@@ -16,14 +16,16 @@
 //! | op        | fields                                             |
 //! |-----------|----------------------------------------------------|
 //! | `submit`  | `class`, `seed`, `steps` (1..=[`MAX_NET_STEPS`]),  |
-//! |           | `tier`, `stream` (bool)                            |
+//! |           | `tier`, `stream` (bool), `deadline_ms` (0 = server |
+//! |           | default), `allow_degrade` (bool)                   |
 //! | `cancel`  | `id` — cancel an in-flight streaming request       |
 //! | `metrics` | none — request a metrics snapshot                  |
 //!
 //! Server -> client frames (the `"type"` field):
 //!
-//! * `accepted` / `rejected` — submit ack: `{id}` or `{error}`
-//!   (rejection = backpressure or shutdown).
+//! * `accepted` / `rejected` — submit ack: `{id}` or a typed failure
+//!   (see the error fields below; rejection = shed, backpressure or
+//!   shutdown).
 //! * `chunk` — one streamed frame range: `id`, `seq`, `frame_start`,
 //!   `frame_end`, `total_frames`, `last`, `frames` (tensor), and the
 //!   request `metrics`; chunks for an id arrive in `seq` order.
@@ -32,10 +34,19 @@
 //! * `clip` — non-streaming result: `{id, clip, metrics}`.
 //! * `metrics` — `{snapshot}`.
 //! * `cancel_ok` — `{id, found}`.
-//! * `error` — `{error}` and, for request-scoped failures, `{id}`.
-//!   Framing-level errors (malformed JSON, oversized frame) close the
-//!   connection after this frame, since the byte stream can no longer
-//!   be trusted.
+//! * `error` — a typed failure and, for request-scoped failures,
+//!   `{id}`.  Framing-level errors (malformed JSON, oversized frame)
+//!   send a `bad_request` error frame and then close the connection,
+//!   since the byte stream can no longer be trusted.
+//!
+//! Typed failures (`rejected` and `error` frames) carry:
+//!
+//! * `error` — human-readable message,
+//! * `code` — machine-readable [`ServeError`] code: `overloaded` |
+//!   `deadline_exceeded` | `shard_failed` | `cancelled` |
+//!   `bad_request` | `shutting_down`,
+//! * `retryable` — whether retrying the same request may succeed,
+//! * `retry_after_ms` — backoff hint, present on `overloaded` only.
 //!
 //! Tensors are `{"shape": [..], "data": [f32 as double, ..]}` —
 //! lossless for f32 (every f32 is exactly representable as a double
@@ -57,18 +68,21 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::net::{IpAddr, Ipv4Addr, Shutdown, SocketAddr, TcpListener,
+               TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
+use super::error::ServeError;
 use super::request::{GenResponse, RequestMetrics};
-use super::server::Gateway;
+use super::server::{Gateway, SubmitOpts};
 use super::stream::{self, ClipChunk, StreamCancel};
 use crate::tensor::Tensor;
+use crate::util::faults::{FaultAction, FaultInjector, FaultPlan};
 use crate::util::json::Json;
 
 /// Hard cap on a single frame (header `n`), both directions.  Far
@@ -192,12 +206,33 @@ pub fn chunk_from_json(j: &Json) -> Result<ClipChunk> {
     })
 }
 
-fn error_frame(id: Option<u64>, msg: &str) -> Json {
+/// The typed failure fields shared by `error` and `rejected` frames.
+fn push_error_fields(mut j: Json, err: &ServeError) -> Json {
+    j = j.push("error", format!("{err}"))
+         .push("code", err.code())
+         .push("retryable", err.retryable());
+    if let Some(ms) = err.retry_after_ms() {
+        j = j.push("retry_after_ms", ms as usize);
+    }
+    j
+}
+
+fn error_frame(id: Option<u64>, err: &ServeError) -> Json {
     let mut j = Json::obj().push("type", "error");
     if let Some(id) = id {
         j = j.push("id", id as usize);
     }
-    j.push("error", msg)
+    push_error_fields(j, err)
+}
+
+fn rejected_frame(err: &ServeError) -> Json {
+    push_error_fields(Json::obj().push("type", "rejected"), err)
+}
+
+/// A request-scoped internal failure (serialization and the like):
+/// terminal, non-retryable.
+fn internal_error_frame(id: u64, msg: &str) -> Json {
+    error_frame(Some(id), &ServeError::shard_fatal(msg.to_string()))
 }
 
 // ---------------- server side -------------------------------------------
@@ -215,6 +250,15 @@ impl NetFrontend {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
     /// start the accept loop.
     pub fn start(gateway: Arc<Gateway>, addr: &str) -> Result<NetFrontend> {
+        NetFrontend::start_with_faults(gateway, addr, FaultPlan::none())
+    }
+
+    /// [`NetFrontend::start`] with a fault plan: each accepted
+    /// connection gets a deterministic net-site [`FaultInjector`]
+    /// keyed by its accept ordinal, so `drop-conn` chaos runs replay
+    /// per (plan, seed).
+    pub fn start_with_faults(gateway: Arc<Gateway>, addr: &str,
+                             plan: FaultPlan) -> Result<NetFrontend> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("bind {addr}"))?;
         let local_addr = listener.local_addr()?;
@@ -223,6 +267,7 @@ impl NetFrontend {
         let accept_thread = std::thread::Builder::new()
             .name("sla2-net-accept".into())
             .spawn(move || {
+                let mut conn_ordinal: u64 = 0;
                 for conn in listener.incoming() {
                     if stop2.load(Ordering::Relaxed) {
                         break;
@@ -230,12 +275,20 @@ impl NetFrontend {
                     match conn {
                         Ok(sock) => {
                             let gw = Arc::clone(&gateway);
+                            let injector = if plan.has_net_faults() {
+                                plan.net_injector(conn_ordinal)
+                            } else {
+                                FaultInjector::inert()
+                            };
+                            conn_ordinal += 1;
                             // connection threads are detached: they
                             // exit when their socket closes or the
                             // queue shuts down
                             let _ = std::thread::Builder::new()
                                 .name("sla2-net-conn".into())
-                                .spawn(move || handle_conn(gw, sock));
+                                .spawn(move || {
+                                    handle_conn(gw, sock, injector)
+                                });
                         }
                         Err(e) => {
                             crate::warn_!("accept failed: {e}");
@@ -277,8 +330,12 @@ impl Drop for NetFrontend {
 
 /// One connection: read request frames, fan responses back through a
 /// single writer thread (one frame at a time, whatever request it
-/// belongs to).
-fn handle_conn(gw: Arc<Gateway>, sock: TcpStream) {
+/// belongs to).  The writer is also the connection's fault-injection
+/// site: each outbound frame is one net-framing event, so a
+/// `drop-conn` clause severs the connection mid-conversation exactly
+/// where a flaky network would.
+fn handle_conn(gw: Arc<Gateway>, sock: TcpStream,
+               mut injector: FaultInjector) {
     let _ = sock.set_nodelay(true);
     let write_sock = match sock.try_clone() {
         Ok(s) => s,
@@ -293,6 +350,16 @@ fn handle_conn(gw: Arc<Gateway>, sock: TcpStream) {
         .spawn(move || {
             let mut w = BufWriter::new(write_sock);
             while let Ok(frame) = out_rx.recv() {
+                match injector.check() {
+                    FaultAction::DropConn => {
+                        // kill BOTH halves so the reader unblocks and
+                        // the cancel-on-disconnect sweep runs
+                        let _ = w.get_ref().shutdown(Shutdown::Both);
+                        break;
+                    }
+                    FaultAction::Slow(d) => std::thread::sleep(d),
+                    FaultAction::Panic | FaultAction::None => {}
+                }
                 if write_frame(&mut w, &frame).is_err()
                     || w.flush().is_err()
                 {
@@ -312,8 +379,12 @@ fn handle_conn(gw: Arc<Gateway>, sock: TcpStream) {
                 handle_request(&gw, &req, &out_tx, &active);
             }
             Err(e) => {
-                // framing is broken: report and drop the connection
-                let _ = out_tx.send(error_frame(None, &format!("{e:#}")));
+                // framing is broken: tell the client WHY with a typed
+                // bad_request frame, then drop the connection (the
+                // writer drains the channel before exiting, so the
+                // frame goes out first)
+                let _ = out_tx.send(error_frame(
+                    None, &ServeError::BadRequest(format!("{e:#}"))));
                 break;
             }
         }
@@ -354,11 +425,15 @@ fn handle_request(gw: &Arc<Gateway>, req: &Json, out_tx: &Sender<Json>,
                 .push("found", found));
         }
         Some(op) => {
-            let _ = out_tx.send(error_frame(None, &format!(
-                "unknown op {op:?} (valid: submit, cancel, metrics)")));
+            let _ = out_tx.send(error_frame(
+                None, &ServeError::BadRequest(format!(
+                    "unknown op {op:?} (valid: submit, cancel, \
+                     metrics)"))));
         }
         None => {
-            let _ = out_tx.send(error_frame(None, "request has no \"op\""));
+            let _ = out_tx.send(error_frame(
+                None,
+                &ServeError::BadRequest("request has no \"op\"".into())));
         }
     }
 }
@@ -376,15 +451,19 @@ fn handle_submit(gw: &Arc<Gateway>, req: &Json, out_tx: &Sender<Json>,
         .unwrap_or(&serve.tier).to_string();
     let streaming = req.get("stream").and_then(|v| v.as_bool())
         .unwrap_or(true);
+    let opts = SubmitOpts {
+        deadline_ms: req.get("deadline_ms").and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as u64,
+        allow_degrade: req.get("allow_degrade").and_then(|v| v.as_bool())
+            .unwrap_or(false),
+    };
     if steps == 0 || steps > MAX_NET_STEPS {
-        let _ = out_tx.send(Json::obj()
-            .push("type", "rejected")
-            .push("error", format!(
-                "steps {steps} out of range (1..={MAX_NET_STEPS})")));
+        let _ = out_tx.send(rejected_frame(&ServeError::BadRequest(
+            format!("steps {steps} out of range (1..={MAX_NET_STEPS})"))));
         return;
     }
     if streaming {
-        match gw.submit_streaming(class, seed, steps, &tier) {
+        match gw.submit_streaming_with(class, seed, steps, &tier, opts) {
             Ok(stream) => {
                 let id = stream.id();
                 active.lock().unwrap().insert(id, stream.cancel_handle());
@@ -401,13 +480,11 @@ fn handle_submit(gw: &Arc<Gateway>, req: &Json, out_tx: &Sender<Json>,
                     });
             }
             Err(e) => {
-                let _ = out_tx.send(Json::obj()
-                    .push("type", "rejected")
-                    .push("error", format!("{e}")));
+                let _ = out_tx.send(rejected_frame(&e));
             }
         }
     } else {
-        match gw.submit_tracked(class, seed, steps, &tier) {
+        match gw.submit_tracked_with(class, seed, steps, &tier, opts) {
             Ok((id, rx)) => {
                 // ack with the real gateway id: clip/error frames are
                 // tagged with it, so pipelined one-shot submits on one
@@ -422,18 +499,15 @@ fn handle_submit(gw: &Arc<Gateway>, req: &Json, out_tx: &Sender<Json>,
                     .spawn(move || {
                         let frame = match rx.recv() {
                             Ok(Ok(resp)) => clip_frame(&resp),
-                            Ok(Err(e)) => error_frame(Some(id),
-                                                      &format!("{e:#}")),
-                            Err(_) => error_frame(
-                                Some(id), "server dropped the request"),
+                            Ok(Err(e)) => error_frame(Some(id), &e),
+                            Err(_) => internal_error_frame(
+                                id, "server dropped the request"),
                         };
                         let _ = out.send(frame);
                     });
             }
             Err(e) => {
-                let _ = out_tx.send(Json::obj()
-                    .push("type", "rejected")
-                    .push("error", format!("{e}")));
+                let _ = out_tx.send(rejected_frame(&e));
             }
         }
     }
@@ -446,7 +520,7 @@ fn clip_frame(resp: &GenResponse) -> Json {
             .push("id", resp.id as usize)
             .push("clip", t)
             .push("metrics", metrics_to_json(&resp.metrics)),
-        Err(e) => error_frame(Some(resp.id), &format!("{e:#}")),
+        Err(e) => internal_error_frame(resp.id, &format!("{e:#}")),
     }
 }
 
@@ -460,14 +534,16 @@ fn pump_stream(id: u64, stream: stream::ClipStream, out: &Sender<Json>) {
                 complete = chunk.last;
                 let frame = match chunk_to_json(&chunk) {
                     Ok(f) => f,
-                    Err(e) => error_frame(Some(id), &format!("{e:#}")),
+                    Err(e) => internal_error_frame(id, &format!("{e:#}")),
                 };
                 if out.send(frame).is_err() {
                     return; // connection gone; drop cancels the stream
                 }
             }
             Err(e) => {
-                let _ = out.send(error_frame(Some(id), &format!("{e:#}")));
+                // typed terminal failure (deadline, shard death, shed
+                // on retry-requeue, ...) — forwarded verbatim
+                let _ = out.send(error_frame(Some(id), &e));
                 break;
             }
         }
@@ -476,6 +552,18 @@ fn pump_stream(id: u64, stream: stream::ClipStream, out: &Sender<Json>) {
         .push("type", "done")
         .push("id", id as usize)
         .push("complete", complete));
+}
+
+/// Decode the typed failure carried by a `rejected` / `error` frame
+/// back into a [`ServeError`] (frames from servers predating the
+/// `code` field decode as non-retryable `shard_failed`).
+pub fn error_from_frame(f: &Json) -> ServeError {
+    ServeError::from_wire(
+        f.get("code").and_then(|v| v.as_str()).unwrap_or(""),
+        f.get("error").and_then(|v| v.as_str()).unwrap_or("unknown"),
+        f.get("retryable").and_then(|v| v.as_bool()).unwrap_or(false),
+        f.get("retry_after_ms").and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as u64)
 }
 
 // ---------------- client side -------------------------------------------
@@ -532,16 +620,29 @@ impl NetClient {
     }
 
     /// Submit; `Ok(id)` on accept (streaming and one-shot submits both
-    /// ack with the gateway-allocated request id), `Err` on rejection.
+    /// ack with the gateway-allocated request id).  On rejection the
+    /// `Err` wraps the typed [`ServeError`] — downcast to inspect the
+    /// code / `retry_after_ms`.
     pub fn submit(&mut self, class: i32, seed: u64, steps: usize,
                   tier: &str, streaming: bool) -> Result<u64> {
+        self.submit_with(class, seed, steps, tier, streaming,
+                         SubmitOpts::default())
+    }
+
+    /// [`NetClient::submit`] with per-request options (deadline,
+    /// degradation opt-in) carried on the wire.
+    pub fn submit_with(&mut self, class: i32, seed: u64, steps: usize,
+                       tier: &str, streaming: bool, opts: SubmitOpts)
+                       -> Result<u64> {
         self.send(&Json::obj()
             .push("op", "submit")
             .push("class", class as i64)
             .push("seed", seed as f64)
             .push("steps", steps)
             .push("tier", tier)
-            .push("stream", streaming))?;
+            .push("stream", streaming)
+            .push("deadline_ms", opts.deadline_ms as usize)
+            .push("allow_degrade", opts.allow_degrade))?;
         let ack = self.wait_for(|f| {
             matches!(f.get("type").and_then(|v| v.as_str()),
                      Some("accepted") | Some("rejected"))
@@ -549,9 +650,11 @@ impl NetClient {
         match ack.get("type").and_then(|v| v.as_str()) {
             Some("accepted") => Ok(ack.get("id")
                 .and_then(|v| v.as_usize()).unwrap_or(0) as u64),
-            _ => bail!("rejected: {}",
-                       ack.get("error").and_then(|v| v.as_str())
-                           .unwrap_or("unknown")),
+            _ => {
+                let e = error_from_frame(&ack);
+                Err(anyhow::Error::new(e.clone())
+                    .context(format!("submit rejected: {e}")))
+            }
         }
     }
 
@@ -582,9 +685,11 @@ impl NetClient {
                 Some("done") => {
                     return stream::assemble_response(id, chunks);
                 }
-                _ => bail!("stream {id} failed: {}",
-                           f.get("error").and_then(|v| v.as_str())
-                               .unwrap_or("unknown")),
+                _ => {
+                    let e = error_from_frame(&f);
+                    return Err(anyhow::Error::new(e.clone())
+                        .context(format!("stream {id} failed: {e}")));
+                }
             }
         }
     }
@@ -610,9 +715,11 @@ impl NetClient {
                 metrics: f.get("metrics").map(metrics_from_json)
                     .unwrap_or_default(),
             }),
-            _ => bail!("request {id} failed: {}",
-                       f.get("error").and_then(|v| v.as_str())
-                           .unwrap_or("unknown")),
+            _ => {
+                let e = error_from_frame(&f);
+                Err(anyhow::Error::new(e.clone())
+                    .context(format!("request {id} failed: {e}")))
+            }
         }
     }
 
@@ -677,6 +784,31 @@ mod tests {
         buf.extend_from_slice(b"{}");
         assert!(read_frame(&mut Cursor::new(&buf), MAX_FRAME_LEN)
                     .is_err());
+    }
+
+    #[test]
+    fn typed_error_frames_roundtrip_through_the_wire() {
+        let err = ServeError::Overloaded { retry_after_ms: 75 };
+        let text = rejected_frame(&err).to_string();
+        let f = Json::parse(&text).unwrap();
+        assert_eq!(f.get("code").and_then(|v| v.as_str()),
+                   Some("overloaded"));
+        assert_eq!(f.get("retryable").and_then(|v| v.as_bool()),
+                   Some(true));
+        assert_eq!(error_from_frame(&f), err);
+
+        let err = ServeError::BadRequest("no \"op\"".into());
+        let f = Json::parse(&error_frame(None, &err).to_string()).unwrap();
+        assert_eq!(f.get("code").and_then(|v| v.as_str()),
+                   Some("bad_request"));
+        assert_eq!(error_from_frame(&f), err);
+
+        // legacy frame without a code decodes as terminal shard_failed
+        let legacy = Json::obj().push("type", "error")
+            .push("error", "boom");
+        let back = error_from_frame(&legacy);
+        assert_eq!(back.code(), "shard_failed");
+        assert!(!back.retryable());
     }
 
     #[test]

@@ -31,6 +31,19 @@
 //! abandoned is skipped without compute, and per-invocation metrics
 //! are recorded on the emission stride.
 //!
+//! **Failure containment and recovery** — a panicking processor fails
+//! only its own batch (`catch_unwind`); requests already emitted keep
+//! their clips.  Surviving requests of a panicked batch are REQUEUED
+//! with jittered backoff up to [`PoolConfig::retry_budget`] times
+//! before they terminally fail with a typed
+//! [`ServeError::ShardFailed`].  Each shard tracks its own panic
+//! history: [`PoolConfig::quarantine_failures`] panics inside
+//! [`PoolConfig::quarantine_window`] quarantine the shard — it stops
+//! announcing idle (so the dispatcher simply never routes to it),
+//! rebuilds its backend via the factory, waits out
+//! [`PoolConfig::quarantine_cooldown`], and re-admits itself.  Shard
+//! states and flap counters surface in `ServerMetrics::snapshot`.
+//!
 //! With `num_shards = 1` the pool degenerates to the old single
 //! engine-thread behavior: one consumer, strict FIFO-compatible
 //! batching, identical per-seed clips.
@@ -42,7 +55,7 @@
 
 use std::collections::HashSet;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{channel, Receiver, SendError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -50,11 +63,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use super::error::ServeError;
 use super::metrics::ServerMetrics;
-use super::queue::{ClassKey, RequestQueue};
+use super::queue::{ClassKey, QueueError, RequestQueue};
 use super::request::{Envelope, GenRequest, ReplySink, RequestMetrics};
 use super::stream;
 use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
 
 /// What a shard needs to turn a batch of COMPATIBLE requests into
 /// clips.  [`crate::coordinator::Engine`] implements this over PJRT;
@@ -79,9 +94,13 @@ pub trait BatchProcessor {
         (0, 0)
     }
 
-    /// Streaming variant: emit each request's `(index, clip, metrics)`
-    /// AS SOON AS IT IS READY instead of returning everything at the
-    /// end.  Emission must preserve input order and the `batch_size`
+    /// Streaming variant: emit each request's
+    /// `(index, Ok(clip) | Err(typed failure), metrics)` AS SOON AS IT
+    /// IS READY instead of returning everything at the end.  An `Err`
+    /// emission resolves that request terminally (e.g. a mid-flight
+    /// `DeadlineExceeded`); its metrics still carry the invocation's
+    /// `batch_size` so the per-invocation stride stays intact.
+    /// Emission must preserve input order and the `batch_size`
     /// grouping contract of [`BatchProcessor::process`].  The default
     /// delegates to `process` and emits the whole batch at completion,
     /// so non-streaming processors (mocks, simple engines) need no
@@ -90,15 +109,20 @@ pub trait BatchProcessor {
     /// than time-to-last-chunk for split batches.
     fn process_streaming(
         &mut self, reqs: &[GenRequest],
-        emit: &mut dyn FnMut(usize, Tensor, RequestMetrics))
+        emit: &mut dyn FnMut(usize, Result<Tensor, ServeError>,
+                             RequestMetrics))
         -> Result<()> {
         for (i, (clip, rm)) in self.process(reqs)?.into_iter().enumerate()
         {
-            emit(i, clip, rm);
+            emit(i, Ok(clip), rm);
         }
         Ok(())
     }
 }
+
+/// Shard health states (the quarantine state machine's nodes).
+pub const SHARD_UP: u8 = 0;
+pub const SHARD_QUARANTINED: u8 = 1;
 
 /// Per-shard counters, updated lock-free by the owning shard and read
 /// by [`ServerMetrics::snapshot`].
@@ -110,6 +134,12 @@ pub struct ShardStats {
     pub executions: AtomicU64,
     /// cumulative wall time spent serving batches, in microseconds
     pub busy_us: AtomicU64,
+    /// processor panics contained on this shard
+    pub panics: AtomicU64,
+    /// times this shard was quarantined (the flap counter)
+    pub quarantines: AtomicU64,
+    /// current health state ([`SHARD_UP`] | [`SHARD_QUARANTINED`])
+    pub state: AtomicU8,
 }
 
 impl ShardStats {
@@ -117,6 +147,13 @@ impl ShardStats {
     pub fn utilization(&self, uptime_s: f64) -> f64 {
         (self.busy_us.load(Ordering::Relaxed) as f64 / 1e6)
             / uptime_s.max(1e-9)
+    }
+
+    pub fn state_name(&self) -> &'static str {
+        match self.state.load(Ordering::Relaxed) {
+            SHARD_QUARANTINED => "quarantined",
+            _ => "up",
+        }
     }
 }
 
@@ -136,6 +173,42 @@ pub struct DispatchStats {
     pub cold_routes: AtomicU64,
 }
 
+/// Failure-handling knobs for the pool (retry + quarantine).
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// requests per dispatched batch
+    pub max_batch: usize,
+    /// straggler-coalescing window after the first arrival
+    pub batch_window: Duration,
+    /// how many times a shard-panic survivor is requeued before it
+    /// terminally fails (0 = fail on first panic)
+    pub retry_budget: u32,
+    /// base retry backoff; attempt `n` waits `base * 2^(n-1)` plus a
+    /// deterministic jitter in `[0, base/2]`, capped at 2 s
+    pub retry_backoff_ms: u64,
+    /// panics within `quarantine_window` that trip a quarantine
+    /// (0 disables quarantine entirely)
+    pub quarantine_failures: u32,
+    /// sliding window for counting a shard's recent panics
+    pub quarantine_window: Duration,
+    /// how long a quarantined shard sits out before re-admission
+    pub quarantine_cooldown: Duration,
+}
+
+impl Default for PoolConfig {
+    fn default() -> PoolConfig {
+        PoolConfig {
+            max_batch: 8,
+            batch_window: Duration::ZERO,
+            retry_budget: 2,
+            retry_backoff_ms: 20,
+            quarantine_failures: 3,
+            quarantine_window: Duration::from_secs(10),
+            quarantine_cooldown: Duration::from_millis(250),
+        }
+    }
+}
+
 /// The running pool: shard worker threads + the dispatcher.
 ///
 /// [`EnginePool::join`] (and `Drop`) closes the queue itself before
@@ -150,16 +223,33 @@ pub struct EnginePool {
 }
 
 impl EnginePool {
+    /// [`EnginePool::start_with_config`] with default failure knobs —
+    /// the pre-existing entry point most callers use.
+    pub fn start_with<P, F>(num_shards: usize, queue: Arc<RequestQueue>,
+                            metrics: Arc<Mutex<ServerMetrics>>,
+                            max_batch: usize, batch_window: Duration,
+                            factory: F) -> Result<EnginePool>
+    where
+        P: BatchProcessor + 'static,
+        F: Fn(usize) -> Result<P> + Clone + Send + 'static,
+    {
+        let cfg = PoolConfig { max_batch, batch_window,
+                               ..PoolConfig::default() };
+        Self::start_with_config(num_shards, queue, metrics, cfg, factory)
+    }
+
     /// Spawn `num_shards` workers, each building its own processor via
     /// `factory(shard_id)` ON ITS OWN THREAD (so `Rc`-based runtimes
     /// never migrate), then start the dispatcher.  Blocks until every
     /// shard reports ready so callers get load errors synchronously;
     /// on any failure the already-started shards are wound down before
-    /// the error is returned.
-    pub fn start_with<P, F>(num_shards: usize, queue: Arc<RequestQueue>,
-                            metrics: Arc<Mutex<ServerMetrics>>,
-                            max_batch: usize, batch_window: Duration,
-                            factory: F) -> Result<EnginePool>
+    /// the error is returned.  The factory is retained per shard for
+    /// quarantine rebuilds.
+    pub fn start_with_config<P, F>(num_shards: usize,
+                                   queue: Arc<RequestQueue>,
+                                   metrics: Arc<Mutex<ServerMetrics>>,
+                                   cfg: PoolConfig, factory: F)
+                                   -> Result<EnginePool>
     where
         P: BatchProcessor + 'static,
         F: Fn(usize) -> Result<P> + Clone + Send + 'static,
@@ -179,6 +269,8 @@ impl EnginePool {
             let idle_tx = idle_tx.clone();
             let ready_tx = ready_tx.clone();
             let metrics = Arc::clone(&metrics);
+            let queue = Arc::clone(&queue);
+            let cfg = cfg.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("sla2-shard-{shard}"))
                 .spawn(move || {
@@ -197,8 +289,8 @@ impl EnginePool {
                     // not a startup hang
                     drop(ready_tx);
                     crate::info!("shard {shard} up");
-                    shard_loop(shard, proc, batch_rx, idle_tx, &metrics,
-                               &st);
+                    shard_loop(shard, proc, &factory, batch_rx, idle_tx,
+                               &queue, &cfg, &metrics, &st);
                     crate::info!("shard {shard} shut down");
                 })?;
             shards.push(handle);
@@ -231,12 +323,14 @@ impl EnginePool {
 
         let dispatch = Arc::new(DispatchStats::default());
         {
-            let mut m = metrics.lock().unwrap();
+            let mut m = ServerMetrics::lock(&metrics);
             m.attach_shards(stats.clone());
             m.attach_dispatch(Arc::clone(&dispatch));
         }
         let q = Arc::clone(&queue);
         let d = Arc::clone(&dispatch);
+        let max_batch = cfg.max_batch;
+        let batch_window = cfg.batch_window;
         let dispatcher = std::thread::Builder::new()
             .name("sla2-dispatch".into())
             .spawn(move || {
@@ -328,8 +422,8 @@ fn dispatch_loop(queue: &RequestQueue, idle_rx: Receiver<usize>,
                 None => match idle_rx.recv() {
                     Ok(i) => i,
                     Err(_) => {
-                        fail_batch(batch, "engine pool has no live \
-                                           shards");
+                        fail_batch(batch, ServeError::shard_fatal(
+                            "engine pool has no live shards"));
                         return;
                     }
                 },
@@ -356,12 +450,23 @@ fn dispatch_loop(queue: &RequestQueue, idle_rx: Receiver<usize>,
     // dropping batch_txs here winds down the shards
 }
 
-/// One shard: announce idle, serve the next batch, repeat.
-fn shard_loop<P: BatchProcessor>(shard: usize, mut proc: P,
-                                 batch_rx: Receiver<Vec<Envelope>>,
-                                 idle_tx: Sender<usize>,
-                                 metrics: &Mutex<ServerMetrics>,
-                                 stats: &ShardStats) {
+/// One shard: announce idle, serve the next batch, repeat — plus the
+/// quarantine state machine.  `quarantine_failures` panics inside
+/// `quarantine_window` flip the shard to QUARANTINED: it withholds its
+/// idle announcement (so the dispatcher routes around it without any
+/// dispatcher-side state), rebuilds its processor through the factory,
+/// sleeps out the cooldown, and re-admits itself as UP.
+#[allow(clippy::too_many_arguments)]
+fn shard_loop<P, F>(shard: usize, mut proc: P, factory: &F,
+                    batch_rx: Receiver<Vec<Envelope>>,
+                    idle_tx: Sender<usize>, queue: &Arc<RequestQueue>,
+                    cfg: &PoolConfig, metrics: &Mutex<ServerMetrics>,
+                    stats: &ShardStats)
+where
+    P: BatchProcessor + 'static,
+    F: Fn(usize) -> Result<P>,
+{
+    let mut recent_panics: Vec<Instant> = Vec::new();
     loop {
         if idle_tx.send(shard).is_err() {
             break; // dispatcher gone
@@ -370,24 +475,71 @@ fn shard_loop<P: BatchProcessor>(shard: usize, mut proc: P,
             Ok(b) => b,
             Err(_) => break, // dispatcher gone
         };
-        serve_batch(&mut proc, batch, metrics, stats);
+        let panicked = serve_batch(&mut proc, batch, queue, cfg, metrics,
+                                   stats);
         let (compiles, executions) = proc.counters();
         stats.compiles.store(compiles, Ordering::Relaxed);
         stats.executions.store(executions, Ordering::Relaxed);
+        if !panicked {
+            continue;
+        }
+        stats.panics.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        recent_panics.push(now);
+        recent_panics.retain(|t| now.duration_since(*t)
+                             <= cfg.quarantine_window);
+        if cfg.quarantine_failures == 0
+            || recent_panics.len() < cfg.quarantine_failures as usize {
+            continue;
+        }
+        // quarantine: this shard stops announcing idle, so the
+        // dispatcher simply never routes to it while we recover
+        crate::warn_!("shard {shard} quarantined after {} panics in \
+                       {:?}; rebuilding backend",
+                      recent_panics.len(), cfg.quarantine_window);
+        stats.quarantines.fetch_add(1, Ordering::Relaxed);
+        stats.state.store(SHARD_QUARANTINED, Ordering::Relaxed);
+        recent_panics.clear();
+        std::thread::sleep(cfg.quarantine_cooldown);
+        loop {
+            match factory(shard) {
+                Ok(p) => {
+                    proc = p;
+                    break;
+                }
+                Err(e) => {
+                    crate::warn_!("shard {shard} rebuild failed: {e:#}; \
+                                   retrying after cooldown");
+                    // a dead dispatcher means shutdown: stop rebuilding
+                    if matches!(batch_rx.try_recv(),
+                                Err(TryRecvError::Disconnected)) {
+                        return;
+                    }
+                    std::thread::sleep(cfg.quarantine_cooldown);
+                }
+            }
+        }
+        stats.state.store(SHARD_UP, Ordering::Relaxed);
+        crate::info!("shard {shard} re-admitted after quarantine");
     }
 }
 
+/// Serve one dispatched batch.  Returns true when the processor
+/// PANICKED (the shard's quarantine accounting input); orderly errors
+/// return false.
 fn serve_batch<P: BatchProcessor>(proc: &mut P, batch: Vec<Envelope>,
+                                  queue: &Arc<RequestQueue>,
+                                  cfg: &PoolConfig,
                                   metrics: &Mutex<ServerMetrics>,
-                                  stats: &ShardStats) {
+                                  stats: &ShardStats) -> bool {
     // cancel fast path: a batch whose every consumer is gone is pure
     // dead work — release the shard slot without touching the engine
     if batch.iter().all(|e| e.reply.is_cancelled()) {
-        let mut m = metrics.lock().unwrap();
+        let mut m = ServerMetrics::lock(metrics);
         for _ in &batch {
             m.record_cancelled_stream();
         }
-        return; // dropping the envelopes ends the streams
+        return false; // dropping the envelopes ends the streams
     }
     let reqs: Vec<GenRequest> =
         batch.iter().map(|e| e.request.clone()).collect();
@@ -404,15 +556,21 @@ fn serve_batch<P: BatchProcessor>(proc: &mut P, batch: Vec<Envelope>,
         let mut emitted = 0usize;
         let mut next_invocation_start = 0usize;
         catch_unwind(AssertUnwindSafe(move || {
-            let mut emit = |i: usize, clip: Tensor, rm: RequestMetrics| {
+            let mut emit = |i: usize,
+                            result: Result<Tensor, ServeError>,
+                            rm: RequestMetrics| {
                 // one record per ENGINE INVOCATION: the batch-size
                 // planner may split a dispatched batch into
                 // sub-batches, each with its own compute_ms —
                 // emissions within a sub-batch are contiguous and
-                // share batch_size, so stride over them
+                // share batch_size, so stride over them.  Error
+                // emissions advance the stride but only successful
+                // invocations count as served batches.
                 if emitted == next_invocation_start {
-                    metrics.lock().unwrap().record_batch(
-                        rm.batch_size, rm.steps, rm.compute_ms);
+                    if result.is_ok() {
+                        ServerMetrics::lock(metrics).record_batch(
+                            rm.batch_size, rm.steps, rm.compute_ms);
+                    }
                     next_invocation_start += rm.batch_size.max(1);
                 }
                 emitted += 1;
@@ -421,7 +579,10 @@ fn serve_batch<P: BatchProcessor>(proc: &mut P, batch: Vec<Envelope>,
                                    a batch of {}", batch.len());
                     return;
                 }
-                deliver(&batch[i], clip, rm, metrics);
+                match result {
+                    Ok(clip) => deliver(&batch[i], clip, rm, metrics),
+                    Err(err) => deliver_error(&batch[i], err, metrics),
+                }
                 delivered[i] = true;
             };
             proc.process_streaming(&reqs, &mut emit)
@@ -429,22 +590,26 @@ fn serve_batch<P: BatchProcessor>(proc: &mut P, batch: Vec<Envelope>,
     };
     let elapsed = t0.elapsed();
     stats.busy_us.fetch_add(elapsed.as_micros() as u64, Ordering::Relaxed);
-    let failure = match outcome {
+    let (failure, panicked) = match outcome {
         Ok(Ok(())) => {
             if delivered.iter().all(|d| *d) {
-                None
+                (None, false)
             } else {
-                Some("processor finished without emitting every \
-                      request".to_string())
+                (Some(ServeError::shard_fatal(
+                    "processor finished without emitting every request")),
+                 false)
             }
         }
         Ok(Err(e)) => {
             crate::warn_!("batch failed: {e:#}");
-            Some(format!("{e:#}"))
+            // an orderly error is deterministic: the same input would
+            // fail the same way, so survivors are NOT requeued
+            (Some(ServeError::shard_fatal(format!("{e:#}"))), false)
         }
         Err(_) => {
             crate::warn_!("batch processor panicked");
-            Some("batch processor panicked".to_string())
+            (Some(ServeError::shard_transient("batch processor panicked")),
+             true)
         }
     };
     let served = delivered.iter().filter(|d| **d).count();
@@ -452,13 +617,81 @@ fn serve_batch<P: BatchProcessor>(proc: &mut P, batch: Vec<Envelope>,
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.requests.fetch_add(served as u64, Ordering::Relaxed);
     }
-    if let Some(msg) = failure {
-        for (env, done) in batch.iter().zip(&delivered) {
-            if !*done {
-                env.reply.fail(&msg);
+    if let Some(err) = failure {
+        let retryable = err.retryable();
+        for (env, done) in batch.into_iter().zip(&delivered) {
+            if *done {
+                continue;
+            }
+            if retryable {
+                retry_or_fail(env, queue, cfg, metrics);
+            } else {
+                ServerMetrics::lock(metrics).record_failed();
+                env.reply.fail(err.clone());
             }
         }
     }
+    panicked
+}
+
+/// A shard-panic survivor: requeue it with jittered backoff if budget
+/// remains, else fail it terminally.  The backoff sleep happens on a
+/// short-lived helper thread so the shard itself is never blocked.
+fn retry_or_fail(mut env: Envelope, queue: &Arc<RequestQueue>,
+                 cfg: &PoolConfig, metrics: &Mutex<ServerMetrics>) {
+    if env.request.retries >= cfg.retry_budget {
+        ServerMetrics::lock(metrics).record_failed();
+        env.reply.fail(ServeError::ShardFailed {
+            retryable: false,
+            reason: format!("batch processor panicked; retry budget \
+                             exhausted after {} attempts",
+                            env.request.retries + 1),
+        });
+        return;
+    }
+    env.request.retries += 1;
+    env.request.dequeued_at = None;
+    ServerMetrics::lock(metrics).record_retry();
+    let backoff = retry_backoff(cfg.retry_backoff_ms, env.request.id,
+                                env.request.retries);
+    let queue = Arc::clone(queue);
+    let spawned = std::thread::Builder::new()
+        .name("sla2-retry".into())
+        .spawn(move || {
+            std::thread::sleep(backoff);
+            if env.request.expired(Instant::now()) {
+                env.reply.fail(ServeError::DeadlineExceeded);
+                return;
+            }
+            if let Err((env, qe)) = queue.push_or_return(env) {
+                let err = match qe {
+                    QueueError::Closed => ServeError::ShuttingDown,
+                    QueueError::Full(_) => ServeError::Overloaded {
+                        retry_after_ms: backoff.as_millis() as u64,
+                    },
+                };
+                env.reply.fail(err);
+            }
+        });
+    if let Err(e) = spawned {
+        crate::warn_!("retry helper thread failed to spawn: {e}");
+        // the envelope moved into the closure that never ran — the
+        // failed Builder::spawn returns only the io::Error, so the
+        // reply channel closes and the client observes a drop.  This
+        // path needs the system to be out of threads, at which point
+        // serving is lost anyway.
+    }
+}
+
+/// Deterministic jittered exponential backoff: `base * 2^(attempt-1)`
+/// plus a `[0, base/2]` jitter seeded from (request id, attempt), all
+/// capped at 2 s.  Determinism keeps the chaos suite replayable.
+fn retry_backoff(base_ms: u64, id: u64, attempt: u32) -> Duration {
+    let base = base_ms.max(1);
+    let exp = base.saturating_mul(1u64 << (attempt.min(6) - 1).min(63));
+    let jitter = Pcg32::new(id, attempt as u64).below(
+        (base / 2 + 1) as u32) as u64;
+    Duration::from_millis((exp + jitter).min(2_000))
 }
 
 /// Deliver one finished clip through its reply sink.  The one-shot
@@ -482,11 +715,13 @@ fn deliver(env: &Envelope, clip: Tensor, rm: RequestMetrics,
                     // contract); chunk streams record post-delivery
                     // instead, since chunk/cancel counts are only
                     // known once delivery finishes
-                    metrics.lock().unwrap().record_completion(queue_ms);
+                    ServerMetrics::lock(metrics)
+                        .record_completion(queue_ms);
                     let _ = tx.send(Ok(r));
                 }
                 Err(e) => {
-                    let _ = tx.send(Err(e));
+                    let _ = tx.send(Err(ServeError::shard_fatal(
+                        format!("{e:#}"))));
                 }
             }
         }
@@ -497,20 +732,35 @@ fn deliver(env: &Envelope, clip: Tensor, rm: RequestMetrics,
                 .as_secs_f64() * 1e3;
             match cs.send_clip(clip, &rm) {
                 stream::SendOutcome::Delivered(chunks) => {
-                    let mut m = metrics.lock().unwrap();
+                    let mut m = ServerMetrics::lock(metrics);
                     m.record_stream_delivery(chunks, first_chunk_ms);
                     m.record_completion(queue_ms);
                 }
                 stream::SendOutcome::Cancelled => {
-                    metrics.lock().unwrap().record_cancelled_stream();
+                    ServerMetrics::lock(metrics).record_cancelled_stream();
                 }
             }
         }
     }
 }
 
-fn fail_batch(batch: Vec<Envelope>, msg: &str) {
+/// Resolve one request with a typed error emitted BY the processor
+/// (e.g. a mid-flight deadline expiry) and account for it.
+fn deliver_error(env: &Envelope, err: ServeError,
+                 metrics: &Mutex<ServerMetrics>) {
+    {
+        let mut m = ServerMetrics::lock(metrics);
+        match &err {
+            ServeError::DeadlineExceeded => m.record_deadline_expired(),
+            ServeError::Cancelled => m.record_cancelled_stream(),
+            _ => m.record_failed(),
+        }
+    }
+    env.reply.fail(err);
+}
+
+fn fail_batch(batch: Vec<Envelope>, err: ServeError) {
     for env in batch {
-        env.reply.fail(msg);
+        env.reply.fail(err.clone());
     }
 }

@@ -24,9 +24,11 @@
 //!   bounded number of jumps — no starvation.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use super::error::ServeError;
 use super::request::{Envelope, GenRequest};
 
 /// Upper bound on consecutive cost-aware bypasses.  After this many
@@ -143,6 +145,21 @@ impl Inner {
     }
 }
 
+/// Queue-side view of the overload watermarks, computed under one
+/// lock so depth and estimated work are a consistent snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionState {
+    /// pending requests across all classes
+    pub depth: usize,
+    /// Σ over classes of `len × ClassKey::cost()` — the work proxy
+    pub estimated_work: f64,
+    /// true when either watermark is tripped
+    pub overloaded: bool,
+    /// deterministic drain estimate clients should back off for;
+    /// meaningful only when `overloaded`
+    pub retry_after_ms: u64,
+}
+
 /// MPSC: many frontend producers, one consumer (the pool dispatcher).
 #[derive(Debug)]
 pub struct RequestQueue {
@@ -150,6 +167,9 @@ pub struct RequestQueue {
     cv: Condvar,
     capacity: usize,
     policy: SchedPolicy,
+    /// requests dropped at dequeue because their deadline had passed
+    /// (each was failed with [`ServeError::DeadlineExceeded`])
+    expired_drops: AtomicU64,
 }
 
 impl RequestQueue {
@@ -170,6 +190,7 @@ impl RequestQueue {
             cv: Condvar::new(),
             capacity,
             policy,
+            expired_drops: AtomicU64::new(0),
         }
     }
 
@@ -181,12 +202,21 @@ impl RequestQueue {
     /// frontend surfaces to clients.  Capacity counts pending requests
     /// across ALL classes.
     pub fn push(&self, env: Envelope) -> Result<(), QueueError> {
+        self.push_or_return(env).map_err(|(_, e)| e)
+    }
+
+    /// Like [`RequestQueue::push`], but hands the envelope back on
+    /// rejection so the caller can resolve its reply sink with a typed
+    /// error instead of silently dropping the channel (the retry
+    /// path's requirement: every request resolves exactly once).
+    pub fn push_or_return(&self, env: Envelope)
+                          -> Result<(), (Envelope, QueueError)> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
-            return Err(QueueError::Closed);
+            return Err((env, QueueError::Closed));
         }
         if g.len >= self.capacity {
-            return Err(QueueError::Full(g.len));
+            return Err((env, QueueError::Full(g.len)));
         }
         let key = ClassKey::of(&env.request);
         let seq = g.next_seq;
@@ -221,6 +251,46 @@ impl RequestQueue {
             .collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
         v
+    }
+
+    /// Requests dropped at dequeue because their deadline had passed.
+    pub fn expired_drops(&self) -> u64 {
+        self.expired_drops.load(Ordering::Relaxed)
+    }
+
+    /// Evaluate the overload watermarks (admission control's input).
+    ///
+    /// * `shed_watermark` — fraction of capacity past which the queue
+    ///   reports overload; `>= 1.0` disables the depth check (the hard
+    ///   `Full` rejection still applies at capacity).
+    /// * `work_watermark` — ceiling on the estimated-work proxy
+    ///   (Σ `len × ClassKey::cost()` across classes); `0` disables.
+    ///
+    /// `retry_after_ms` is a deterministic drain estimate: a base of
+    /// 25 ms plus 25 ms per request beyond the depth watermark, capped
+    /// at 2 s — so clients spread out instead of retrying in lockstep
+    /// with the same period regardless of backlog.
+    pub fn admission(&self, shed_watermark: f64, work_watermark: f64)
+                     -> AdmissionState {
+        let g = self.inner.lock().unwrap();
+        let depth = g.len;
+        let estimated_work: f64 = g.buckets.iter()
+            .map(|b| b.items.len() as f64 * b.key.cost())
+            .sum();
+        drop(g);
+        let depth_limit = (shed_watermark * self.capacity as f64)
+            .ceil() as usize;
+        let depth_over = shed_watermark < 1.0 && depth >= depth_limit.max(1);
+        let work_over = work_watermark > 0.0
+            && estimated_work >= work_watermark;
+        let overloaded = depth_over || work_over;
+        let excess = depth.saturating_sub(depth_limit.min(depth)) as u64;
+        let retry_after_ms = if overloaded {
+            (25 + 25 * excess).min(2_000)
+        } else {
+            0
+        };
+        AdmissionState { depth, estimated_work, overloaded, retry_after_ms }
     }
 
     pub fn close(&self) {
@@ -282,10 +352,23 @@ impl RequestQueue {
         g.len -= batch.len();
         drop(g);
         // stamp the dequeue so queue wait is measured directly
-        // (submit -> here) instead of being reconstructed later
+        // (submit -> here) instead of being reconstructed later,
+        // and drop requests whose deadline already passed: failing
+        // them here costs one reply send instead of a denoise run
         let now = Instant::now();
-        for env in &mut batch {
+        let mut expired = 0u64;
+        batch.retain_mut(|env| {
             env.request.dequeued_at = Some(now);
+            if env.request.expired(now) {
+                env.reply.fail(ServeError::DeadlineExceeded);
+                expired += 1;
+                false
+            } else {
+                true
+            }
+        });
+        if expired > 0 {
+            self.expired_drops.fetch_add(expired, Ordering::Relaxed);
         }
         Some(batch)
     }
@@ -342,18 +425,19 @@ mod tests {
     use crate::coordinator::request::{GenRequest, GenResponse};
     use std::sync::mpsc::{channel, Receiver};
 
+    type Reply = Receiver<Result<GenResponse, ServeError>>;
+
     /// Build an envelope AND hand back its reply receiver so tests
     /// keep it alive for the envelope's lifetime (no `mem::forget`
     /// leak; a dropped receiver would make reply sends fail).
-    fn env(id: u64, tier: &str, steps: usize)
-           -> (Envelope, Receiver<anyhow::Result<GenResponse>>) {
+    fn env(id: u64, tier: &str, steps: usize) -> (Envelope, Reply) {
         let (tx, rx) = channel();
         (Envelope::oneshot(GenRequest::new(id, 0, id, steps, tier), tx),
          rx)
     }
 
     /// Push a fresh envelope, stashing the receiver in `keep`.
-    fn push(q: &RequestQueue, keep: &mut Vec<Receiver<anyhow::Result<GenResponse>>>,
+    fn push(q: &RequestQueue, keep: &mut Vec<Reply>,
             id: u64, tier: &str, steps: usize) -> Result<(), QueueError> {
         let (e, rx) = env(id, tier, steps);
         keep.push(rx);
@@ -593,6 +677,76 @@ mod tests {
         let b = q.pop_batch(4, Duration::from_millis(10),
                             Duration::ZERO).unwrap();
         assert_eq!(ids(&b), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn expired_requests_are_dropped_at_dequeue_with_a_typed_error() {
+        let q = RequestQueue::new(8);
+        let (tx, rx_dead) = channel();
+        let dead = GenRequest::new(1, 0, 1, 8, "s95").with_deadline_ms(1);
+        q.push(Envelope::oneshot(dead, tx)).unwrap();
+        let mut keep = Vec::new();
+        push(&q, &mut keep, 2, "s95", 8).unwrap(); // no deadline
+        std::thread::sleep(Duration::from_millis(5));
+        let b = q.pop_batch(4, Duration::from_millis(10),
+                            Duration::ZERO).unwrap();
+        // the expired request never reaches a shard; the live one does
+        assert_eq!(ids(&b), vec![2]);
+        assert_eq!(q.expired_drops(), 1);
+        match rx_dead.recv().unwrap() {
+            Err(ServeError::DeadlineExceeded) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn admission_depth_watermark() {
+        let q = RequestQueue::new(10);
+        let mut keep = Vec::new();
+        for i in 0..5 {
+            push(&q, &mut keep, i, "s90", 8).unwrap();
+        }
+        // watermark at half capacity: 5 pending trips it
+        let a = q.admission(0.5, 0.0);
+        assert!(a.overloaded);
+        assert_eq!(a.depth, 5);
+        assert!(a.retry_after_ms >= 25);
+        // watermark disabled: never overloaded from depth
+        let a = q.admission(1.0, 0.0);
+        assert!(!a.overloaded);
+        assert_eq!(a.retry_after_ms, 0);
+    }
+
+    #[test]
+    fn admission_work_watermark_weights_expensive_classes() {
+        let q = RequestQueue::new(64);
+        let mut keep = Vec::new();
+        push(&q, &mut keep, 1, "dense", 8).unwrap();
+        push(&q, &mut keep, 2, "s97", 8).unwrap();
+        let a = q.admission(1.0, 0.0);
+        let want = ClassKey { tier: "dense".into(), steps: 8 }.cost()
+            + ClassKey { tier: "s97".into(), steps: 8 }.cost();
+        assert!((a.estimated_work - want).abs() < 1e-9);
+        assert!(!a.overloaded);
+        // a work ceiling below the current load trips overload even
+        // though the depth watermark is disabled
+        let a = q.admission(1.0, want * 0.5);
+        assert!(a.overloaded);
+    }
+
+    #[test]
+    fn retry_after_grows_with_backlog() {
+        let q = RequestQueue::new(100);
+        let mut keep = Vec::new();
+        for i in 0..10 {
+            push(&q, &mut keep, i, "s90", 8).unwrap();
+        }
+        let shallow = q.admission(0.05, 0.0).retry_after_ms;
+        for i in 10..40 {
+            push(&q, &mut keep, i, "s90", 8).unwrap();
+        }
+        let deep = q.admission(0.05, 0.0).retry_after_ms;
+        assert!(deep > shallow, "deep={deep} shallow={shallow}");
     }
 
     #[test]

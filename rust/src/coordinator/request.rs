@@ -5,11 +5,14 @@
 //! clip in one [`GenResponse`]) or a [`ChunkSender`] feeding a
 //! [`crate::coordinator::stream::ClipStream`].  The one-shot variant
 //! is delivered THROUGH the chunking path (split + reassemble), so
-//! both sinks exercise the same stream invariants.
+//! both sinks exercise the same stream invariants.  Failures travel as
+//! typed [`ServeError`]s — every request resolves to exactly one of
+//! {clip, `ServeError`}.
 
 use std::sync::mpsc::Sender;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use super::error::ServeError;
 use super::stream::ChunkSender;
 use crate::tensor::Tensor;
 
@@ -30,19 +33,55 @@ pub struct GenRequest {
     /// queue; `None` for requests that never crossed the queue (direct
     /// `Engine::generate` calls in benches and tests)
     pub dequeued_at: Option<Instant>,
+    /// absolute deadline; past it the request fails with
+    /// [`ServeError::DeadlineExceeded`] instead of being served.
+    /// Checked at dequeue, between sub-batches, and between denoise
+    /// steps so an expired request frees its shard slot early.
+    pub deadline: Option<Instant>,
+    /// opt-in to tier degradation under overload: instead of a shed,
+    /// admission control may move the request to a cheaper sparsity
+    /// tier (recorded in `degraded_from`)
+    pub allow_degrade: bool,
+    /// retry attempts consumed so far (shard-panic requeues)
+    pub retries: u32,
+    /// original tier when admission control degraded this request
+    pub degraded_from: Option<String>,
 }
 
 impl GenRequest {
     pub fn new(id: u64, class_label: i32, seed: u64, steps: usize,
                tier: &str) -> GenRequest {
         GenRequest { id, class_label, seed, steps, tier: tier.into(),
-                     submitted_at: Instant::now(), dequeued_at: None }
+                     submitted_at: Instant::now(), dequeued_at: None,
+                     deadline: None, allow_degrade: false, retries: 0,
+                     degraded_from: None }
+    }
+
+    /// Builder: set a deadline `ms` milliseconds from submit time
+    /// (`0` = no deadline).
+    pub fn with_deadline_ms(mut self, ms: u64) -> GenRequest {
+        if ms > 0 {
+            self.deadline =
+                Some(self.submitted_at + Duration::from_millis(ms));
+        }
+        self
+    }
+
+    /// Builder: opt in to tier degradation under overload.
+    pub fn with_allow_degrade(mut self, allow: bool) -> GenRequest {
+        self.allow_degrade = allow;
+        self
     }
 
     /// Two requests can share a batch iff they run the same artifact
     /// and walk the same timestep grid.
     pub fn compatible(&self, other: &GenRequest) -> bool {
         self.tier == other.tier && self.steps == other.steps
+    }
+
+    /// True once the deadline (if any) has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.map(|d| now >= d).unwrap_or(false)
     }
 
     /// Queue wait in milliseconds, measured submit -> dequeue.
@@ -76,7 +115,7 @@ pub struct GenResponse {
 /// Where a served request's output goes.
 pub enum ReplySink {
     /// classic API: the full clip in one message
-    Oneshot(Sender<anyhow::Result<GenResponse>>),
+    Oneshot(Sender<Result<GenResponse, ServeError>>),
     /// streaming API: frame-range chunks as they become ready
     Stream(ChunkSender),
 }
@@ -93,16 +132,15 @@ impl ReplySink {
         }
     }
 
-    /// Deliver a terminal failure.  Never blocks: a dropped one-shot
-    /// receiver makes `send` a no-op, and the stream side uses a
-    /// non-blocking error push.
-    pub fn fail(&self, msg: &str) {
+    /// Deliver a typed terminal failure.  Never blocks: a dropped
+    /// one-shot receiver makes `send` a no-op, and the stream side
+    /// uses a non-blocking error push.
+    pub fn fail(&self, err: ServeError) {
         match self {
             ReplySink::Oneshot(tx) => {
-                let _ = tx.send(Err(anyhow::anyhow!(
-                    "generation failed: {msg}")));
+                let _ = tx.send(Err(err));
             }
-            ReplySink::Stream(cs) => cs.send_error(msg),
+            ReplySink::Stream(cs) => cs.send_error(err),
         }
     }
 }
@@ -116,7 +154,8 @@ pub struct Envelope {
 impl Envelope {
     /// Envelope with a classic one-shot reply channel.
     pub fn oneshot(request: GenRequest,
-                   reply: Sender<anyhow::Result<GenResponse>>) -> Envelope {
+                   reply: Sender<Result<GenResponse, ServeError>>)
+                   -> Envelope {
         Envelope { request, reply: ReplySink::Oneshot(reply) }
     }
 
@@ -157,5 +196,31 @@ mod tests {
         // goes negative thanks to saturating_duration_since
         r.dequeued_at = Some(r.submitted_at);
         assert_eq!(r.queue_wait_ms(), 0.0);
+    }
+
+    #[test]
+    fn deadlines() {
+        let r = GenRequest::new(1, 0, 0, 8, "s95");
+        assert!(r.deadline.is_none());
+        assert!(!r.expired(Instant::now() + Duration::from_secs(3600)));
+
+        let r = GenRequest::new(2, 0, 0, 8, "s95").with_deadline_ms(0);
+        assert!(r.deadline.is_none(), "0 = no deadline");
+
+        let r = GenRequest::new(3, 0, 0, 8, "s95").with_deadline_ms(50);
+        assert!(!r.expired(r.submitted_at));
+        assert!(r.expired(r.submitted_at + Duration::from_millis(51)));
+    }
+
+    #[test]
+    fn typed_failure_reaches_the_oneshot_receiver() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let env = Envelope::oneshot(GenRequest::new(1, 0, 0, 4, "s90"), tx);
+        env.reply.fail(ServeError::Overloaded { retry_after_ms: 40 });
+        match rx.recv().unwrap() {
+            Err(ServeError::Overloaded { retry_after_ms }) =>
+                assert_eq!(retry_after_ms, 40),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
     }
 }

@@ -2,13 +2,21 @@
 //! listener + lifecycle.
 //!
 //! [`Gateway`] is the transport-independent submission surface (id
-//! allocation, metrics accounting, queue push); [`Server`] wires it to
-//! an [`EnginePool`] of PJRT shards and — when
+//! allocation, admission control, metrics accounting, queue push);
+//! [`Server`] wires it to an [`EnginePool`] of PJRT shards and — when
 //! `ServeConfig::listen_addr` is set — a [`super::net::NetFrontend`]
 //! that exposes the same verbs over length-prefixed JSON-over-TCP.
 //! Tests drive `Gateway` + a mock pool directly, so the whole reply
 //! path (including the network frontend) is exercised without
 //! artifacts.
+//!
+//! Admission control runs BEFORE the queue push: when the queue is
+//! past the configured depth/work watermarks, a submission is either
+//! shed with a typed [`ServeError::Overloaded`] (carrying a
+//! `retry_after_ms` hint that grows with the backlog) or — when the
+//! caller opted in with [`SubmitOpts::allow_degrade`] — rerouted one
+//! step down the sparsity-tier cost ladder instead of being turned
+//! away.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -18,18 +26,48 @@ use std::time::Duration;
 use anyhow::Result;
 
 use super::engine::Engine;
+use super::error::ServeError;
 use super::metrics::ServerMetrics;
 use super::net::NetFrontend;
-use super::pool::EnginePool;
+use super::pool::{EnginePool, PoolConfig};
 use super::queue::{QueueError, RequestQueue, SchedPolicy};
 use super::request::{Envelope, GenRequest, GenResponse};
 use super::stream::{self, ClipStream};
 use crate::config::ServeConfig;
+use crate::util::faults::FaultPlan;
+
+/// Per-submission options beyond the core `(class, seed, steps,
+/// tier)` tuple.  `Default` is the legacy behavior: no deadline
+/// beyond the server-wide `ServeConfig::default_deadline_ms`, no
+/// degradation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOpts {
+    /// per-request deadline in milliseconds from submission;
+    /// 0 = fall back to `ServeConfig::default_deadline_ms`
+    pub deadline_ms: u64,
+    /// under overload, reroute to a cheaper sparsity tier instead of
+    /// shedding (the original tier is recorded in
+    /// `GenRequest::degraded_from`)
+    pub allow_degrade: bool,
+}
+
+/// One step down the tier cost ladder (the [`super::queue::ClassKey`]
+/// cost ordering: dense is the most expensive, higher sparsity is
+/// cheaper).  Tiers already at the bottom — and unknown tiers — have
+/// nowhere to go.
+fn degrade_tier(tier: &str) -> Option<&'static str> {
+    match tier {
+        "dense" => Some("s90"),
+        "s90" => Some("s95"),
+        "s95" => Some("s97"),
+        _ => None,
+    }
+}
 
 /// Transport-independent request frontend: every submission surface
 /// (in-process handles, the TCP frontend, load generators) goes
-/// through here so ids, accounting and backpressure behave
-/// identically.
+/// through here so ids, accounting, admission control and
+/// backpressure behave identically.
 pub struct Gateway {
     queue: Arc<RequestQueue>,
     metrics: Arc<Mutex<ServerMetrics>>,
@@ -48,12 +86,86 @@ impl Gateway {
         &self.serve
     }
 
+    /// Admission decision for one request: `Ok(None)` = admit on the
+    /// requested tier, `Ok(Some(t))` = admit degraded onto tier `t`,
+    /// `Err(Overloaded)` = shed.  Watermarks at their defaults
+    /// (`shed_watermark >= 1.0`, `work_watermark == 0`) admit
+    /// everything — the queue's own capacity is then the only limit.
+    fn admit(&self, tier: &str, allow_degrade: bool)
+             -> Result<Option<String>, ServeError> {
+        let adm = self.queue.admission(self.serve.shed_watermark,
+                                       self.serve.work_watermark);
+        if !adm.overloaded {
+            return Ok(None);
+        }
+        if allow_degrade {
+            if let Some(cheaper) = degrade_tier(tier) {
+                ServerMetrics::lock(&self.metrics).record_degraded();
+                return Ok(Some(cheaper.to_string()));
+            }
+        }
+        ServerMetrics::lock(&self.metrics).record_shed();
+        Err(ServeError::Overloaded { retry_after_ms: adm.retry_after_ms })
+    }
+
+    /// Build the request a submission admits as: final tier (possibly
+    /// degraded), effective deadline, degradation provenance.
+    fn build_request(&self, id: u64, class_label: i32, seed: u64,
+                     steps: usize, tier: &str, opts: SubmitOpts)
+                     -> Result<GenRequest, ServeError> {
+        let degraded_to = self.admit(tier, opts.allow_degrade)?;
+        let final_tier =
+            degraded_to.as_deref().unwrap_or(tier).to_string();
+        let deadline_ms = if opts.deadline_ms > 0 {
+            opts.deadline_ms
+        } else {
+            self.serve.default_deadline_ms
+        };
+        let mut req =
+            GenRequest::new(id, class_label, seed, steps, &final_tier)
+                .with_deadline_ms(deadline_ms)
+                .with_allow_degrade(opts.allow_degrade);
+        if degraded_to.is_some() {
+            req.degraded_from = Some(tier.to_string());
+        }
+        Ok(req)
+    }
+
+    /// Map a queue-push failure to its typed error.  `Full` means the
+    /// hard capacity bound fired (admission watermarks sit below it,
+    /// when enabled), so the retry hint comes from the same backlog
+    /// formula, floored so callers never get "retry in 0 ms" from a
+    /// full queue.
+    fn push_error(&self, e: QueueError) -> ServeError {
+        match e {
+            QueueError::Closed => ServeError::ShuttingDown,
+            QueueError::Full(_) => {
+                let adm = self.queue.admission(
+                    self.serve.shed_watermark, self.serve.work_watermark);
+                ServeError::Overloaded {
+                    retry_after_ms: adm.retry_after_ms.max(25),
+                }
+            }
+        }
+    }
+
     /// Submit a generation request; returns the reply channel.
-    /// `Err` = backpressure (queue full) or shutdown.
+    /// `Err` = shed / backpressure ([`ServeError::Overloaded`]) or
+    /// shutdown ([`ServeError::ShuttingDown`]).
     pub fn submit(&self, class_label: i32, seed: u64, steps: usize,
                   tier: &str)
-                  -> Result<Receiver<Result<GenResponse>>, QueueError> {
-        self.submit_tracked(class_label, seed, steps, tier)
+                  -> Result<Receiver<Result<GenResponse, ServeError>>,
+                            ServeError> {
+        self.submit_with(class_label, seed, steps, tier,
+                         SubmitOpts::default())
+    }
+
+    /// [`Gateway::submit`] with explicit per-request options.
+    pub fn submit_with(&self, class_label: i32, seed: u64, steps: usize,
+                       tier: &str, opts: SubmitOpts)
+                       -> Result<Receiver<Result<GenResponse, ServeError>>,
+                                 ServeError> {
+        self.submit_tracked_with(class_label, seed, steps, tier, opts)
             .map(|(_, rx)| rx)
     }
 
@@ -61,17 +173,31 @@ impl Gateway {
     /// id, so multiplexing frontends can correlate the eventual reply.
     pub fn submit_tracked(&self, class_label: i32, seed: u64,
                           steps: usize, tier: &str)
-                          -> Result<(u64, Receiver<Result<GenResponse>>),
-                                    QueueError> {
+                          -> Result<(u64,
+                                     Receiver<Result<GenResponse,
+                                                     ServeError>>),
+                                    ServeError> {
+        self.submit_tracked_with(class_label, seed, steps, tier,
+                                 SubmitOpts::default())
+    }
+
+    /// [`Gateway::submit_tracked`] with explicit per-request options.
+    pub fn submit_tracked_with(&self, class_label: i32, seed: u64,
+                               steps: usize, tier: &str, opts: SubmitOpts)
+                               -> Result<(u64,
+                                          Receiver<Result<GenResponse,
+                                                          ServeError>>),
+                                         ServeError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        ServerMetrics::lock(&self.metrics).requests += 1;
+        let req = self.build_request(id, class_label, seed, steps, tier,
+                                     opts)?;
         let (tx, rx) = channel();
-        let req = GenRequest::new(id, class_label, seed, steps, tier);
-        self.metrics.lock().unwrap().requests += 1;
         match self.queue.push(Envelope::oneshot(req, tx)) {
             Ok(()) => Ok((id, rx)),
             Err(e) => {
-                self.metrics.lock().unwrap().rejected += 1;
-                Err(e)
+                ServerMetrics::lock(&self.metrics).rejected += 1;
+                Err(self.push_error(e))
             }
         }
     }
@@ -82,26 +208,36 @@ impl Gateway {
     /// Dropping the returned [`ClipStream`] cancels the request.
     pub fn submit_streaming(&self, class_label: i32, seed: u64,
                             steps: usize, tier: &str)
-                            -> Result<ClipStream, QueueError> {
+                            -> Result<ClipStream, ServeError> {
+        self.submit_streaming_with(class_label, seed, steps, tier,
+                                   SubmitOpts::default())
+    }
+
+    /// [`Gateway::submit_streaming`] with explicit per-request options.
+    pub fn submit_streaming_with(&self, class_label: i32, seed: u64,
+                                 steps: usize, tier: &str,
+                                 opts: SubmitOpts)
+                                 -> Result<ClipStream, ServeError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        ServerMetrics::lock(&self.metrics).requests += 1;
+        let req = self.build_request(id, class_label, seed, steps, tier,
+                                     opts)?;
         let (chunks, handle) = stream::channel(
             id, self.serve.chunk_frames, self.serve.stream_buffer_chunks);
-        let req = GenRequest::new(id, class_label, seed, steps, tier);
-        self.metrics.lock().unwrap().requests += 1;
         match self.queue.push(Envelope::stream(req, chunks)) {
             Ok(()) => {
-                self.metrics.lock().unwrap().streams += 1;
+                ServerMetrics::lock(&self.metrics).streams += 1;
                 Ok(handle)
             }
             Err(e) => {
-                self.metrics.lock().unwrap().rejected += 1;
-                Err(e)
+                ServerMetrics::lock(&self.metrics).rejected += 1;
+                Err(self.push_error(e))
             }
         }
     }
 
     pub fn metrics_snapshot(&self) -> crate::util::json::Json {
-        self.metrics.lock().unwrap().snapshot()
+        ServerMetrics::lock(&self.metrics).snapshot()
     }
 
     pub fn pending(&self) -> usize {
@@ -121,28 +257,47 @@ impl Server {
     /// and, when `serve.listen_addr` is non-empty, the TCP frontend.
     /// Blocks until every shard is ready or failed, so callers get
     /// load errors synchronously.
+    ///
+    /// When `serve.fault_plan` is non-empty it is parsed into a
+    /// deterministic [`FaultPlan`]: execute-site clauses wrap each
+    /// shard's backend, net-site clauses arm the TCP frontend's
+    /// connection injectors.  A malformed plan fails startup.
     pub fn start(artifacts_dir: &str, serve: ServeConfig) -> Result<Server> {
+        let fault_plan = FaultPlan::parse(&serve.fault_plan,
+                                          serve.fault_seed)?;
         let policy = SchedPolicy::from_config(&serve.scheduler,
                                               serve.bypass_threshold_ms);
         let queue = Arc::new(RequestQueue::with_policy(
             serve.queue_capacity, policy));
         let metrics = Arc::new(Mutex::new(ServerMetrics::new()));
         {
-            let mut m = metrics.lock().unwrap();
+            let mut m = ServerMetrics::lock(&metrics);
             m.attach_queue(Arc::clone(&queue));
             m.attach_backend(&serve.backend);
             m.attach_quant_mode(&serve.quant_mode);
         }
+        let pool_cfg = PoolConfig {
+            max_batch: serve.max_batch,
+            batch_window: Duration::from_millis(serve.batch_window_ms),
+            retry_budget: serve.retry_budget,
+            retry_backoff_ms: serve.retry_backoff_ms,
+            quarantine_failures: serve.quarantine_failures,
+            quarantine_window:
+                Duration::from_millis(serve.quarantine_window_ms),
+            quarantine_cooldown:
+                Duration::from_millis(serve.quarantine_cooldown_ms),
+        };
         let dir = artifacts_dir.to_string();
         let cfg = serve.clone();
-        let pool = EnginePool::start_with(
+        let plan = fault_plan.clone();
+        let pool = EnginePool::start_with_config(
             serve.num_shards.max(1),
             Arc::clone(&queue),
             Arc::clone(&metrics),
-            serve.max_batch,
-            Duration::from_millis(serve.batch_window_ms),
+            pool_cfg,
             move |shard| {
-                let engine = Engine::new(&dir, cfg.clone())?;
+                let engine = Engine::new_with_injector(
+                    &dir, cfg.clone(), plan.execute_injector(shard))?;
                 if shard == 0 {
                     crate::info!(
                         "engine up: model={} variant={} tier={} \
@@ -157,8 +312,8 @@ impl Server {
         let net = if serve.listen_addr.is_empty() {
             None
         } else {
-            let frontend = NetFrontend::start(Arc::clone(&gateway),
-                                              &serve.listen_addr)?;
+            let frontend = NetFrontend::start_with_faults(
+                Arc::clone(&gateway), &serve.listen_addr, fault_plan)?;
             crate::info!("tcp frontend on {}", frontend.local_addr());
             Some(frontend)
         };
@@ -166,17 +321,28 @@ impl Server {
     }
 
     /// Submit a generation request; returns the reply channel.
-    /// `Err` = backpressure (queue full) or shutdown.
+    /// `Err` = shed / backpressure or shutdown.
     pub fn submit(&self, class_label: i32, seed: u64, steps: usize,
                   tier: &str)
-                  -> Result<Receiver<Result<GenResponse>>, QueueError> {
+                  -> Result<Receiver<Result<GenResponse, ServeError>>,
+                            ServeError> {
         self.gateway.submit(class_label, seed, steps, tier)
+    }
+
+    /// [`Server::submit`] with explicit per-request options
+    /// (deadline, degradation opt-in).
+    pub fn submit_with(&self, class_label: i32, seed: u64, steps: usize,
+                       tier: &str, opts: SubmitOpts)
+                       -> Result<Receiver<Result<GenResponse, ServeError>>,
+                                 ServeError> {
+        self.gateway.submit_with(class_label, seed, steps, tier, opts)
     }
 
     /// Submit with the server's default tier.
     pub fn submit_default(&self, class_label: i32, seed: u64)
-                          -> Result<Receiver<Result<GenResponse>>,
-                                    QueueError> {
+                          -> Result<Receiver<Result<GenResponse,
+                                                    ServeError>>,
+                                    ServeError> {
         let serve = self.gateway.serve_config();
         self.gateway.submit(class_label, seed, serve.sample_steps,
                             &serve.tier)
@@ -186,8 +352,17 @@ impl Server {
     /// as the engine finishes them; dropping the stream cancels.
     pub fn submit_streaming(&self, class_label: i32, seed: u64,
                             steps: usize, tier: &str)
-                            -> Result<ClipStream, QueueError> {
+                            -> Result<ClipStream, ServeError> {
         self.gateway.submit_streaming(class_label, seed, steps, tier)
+    }
+
+    /// [`Server::submit_streaming`] with explicit per-request options.
+    pub fn submit_streaming_with(&self, class_label: i32, seed: u64,
+                                 steps: usize, tier: &str,
+                                 opts: SubmitOpts)
+                                 -> Result<ClipStream, ServeError> {
+        self.gateway.submit_streaming_with(class_label, seed, steps,
+                                           tier, opts)
     }
 
     pub fn metrics_snapshot(&self) -> crate::util::json::Json {
@@ -229,5 +404,89 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.wind_down();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gateway_with(capacity: usize, serve: ServeConfig) -> Gateway {
+        let queue = Arc::new(RequestQueue::new(capacity));
+        let metrics = Arc::new(Mutex::new(ServerMetrics::new()));
+        Gateway::new(queue, metrics, serve)
+    }
+
+    #[test]
+    fn default_watermarks_admit_up_to_capacity() {
+        let g = gateway_with(2, ServeConfig::default());
+        assert!(g.submit(0, 1, 4, "s90").is_ok());
+        assert!(g.submit(0, 2, 4, "s90").is_ok());
+        let err = g.submit(0, 3, 4, "s90").unwrap_err();
+        assert_eq!(err.code(), "overloaded");
+        assert!(err.retry_after_ms().unwrap() >= 25);
+    }
+
+    #[test]
+    fn shed_watermark_sheds_with_typed_overloaded() {
+        let serve = ServeConfig { shed_watermark: 0.5,
+                                  ..ServeConfig::default() };
+        let g = gateway_with(4, serve);
+        assert!(g.submit(0, 1, 4, "s90").is_ok());
+        assert!(g.submit(0, 2, 4, "s90").is_ok());
+        // depth 2 >= ceil(0.5 * 4) -> shed
+        let err = g.submit(0, 3, 4, "s90").unwrap_err();
+        assert!(matches!(err, ServeError::Overloaded { .. }));
+        let snap = g.metrics_snapshot();
+        let failures = snap.get("failures").unwrap();
+        assert_eq!(failures.get("shed").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn allow_degrade_reroutes_to_a_cheaper_tier_instead_of_shedding() {
+        let serve = ServeConfig { shed_watermark: 0.25,
+                                  ..ServeConfig::default() };
+        let g = gateway_with(4, serve);
+        assert!(g.submit(0, 1, 4, "dense").is_ok());
+        // over the watermark: a degradable request is admitted one
+        // tier cheaper...
+        let opts = SubmitOpts { allow_degrade: true,
+                                ..SubmitOpts::default() };
+        assert!(g.submit_with(0, 2, 4, "dense", opts).is_ok());
+        // ...and lands in the queue rather than being turned away
+        assert_eq!(g.pending(), 2);
+        let snap = g.metrics_snapshot();
+        let failures = snap.get("failures").unwrap();
+        assert_eq!(failures.get("degraded").unwrap()
+                       .as_usize().unwrap(), 1);
+        assert_eq!(failures.get("shed").unwrap().as_usize().unwrap(), 0);
+        // a request already at the bottom of the ladder still sheds
+        let err = g.submit_with(0, 3, 4, "s97", opts).unwrap_err();
+        assert_eq!(err.code(), "overloaded");
+    }
+
+    #[test]
+    fn degrade_ladder_walks_dense_to_s97() {
+        assert_eq!(degrade_tier("dense"), Some("s90"));
+        assert_eq!(degrade_tier("s90"), Some("s95"));
+        assert_eq!(degrade_tier("s95"), Some("s97"));
+        assert_eq!(degrade_tier("s97"), None);
+        assert_eq!(degrade_tier("mystery"), None);
+    }
+
+    #[test]
+    fn submit_opts_deadline_is_stamped_on_the_request() {
+        let serve = ServeConfig { default_deadline_ms: 0,
+                                  ..ServeConfig::default() };
+        let g = gateway_with(4, serve);
+        let opts = SubmitOpts { deadline_ms: 60_000,
+                                ..SubmitOpts::default() };
+        let req = g.build_request(1, 0, 1, 4, "s90", opts).unwrap();
+        assert!(req.deadline.is_some());
+        assert!(req.degraded_from.is_none());
+        let req = g.build_request(
+            2, 0, 1, 4, "s90", SubmitOpts::default()).unwrap();
+        assert!(req.deadline.is_none(),
+                "no per-request or server default deadline");
     }
 }

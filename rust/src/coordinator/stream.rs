@@ -39,6 +39,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use super::error::ServeError;
 use super::request::{GenResponse, RequestMetrics};
 use crate::tensor::Tensor;
 
@@ -79,7 +80,7 @@ pub enum SendOutcome {
 pub struct ChunkSender {
     id: u64,
     chunk_frames: usize,
-    tx: SyncSender<Result<ClipChunk>>,
+    tx: SyncSender<Result<ClipChunk, ServeError>>,
     cancelled: Arc<AtomicBool>,
 }
 
@@ -88,7 +89,7 @@ pub struct ChunkSender {
 #[derive(Debug)]
 pub struct ClipStream {
     id: u64,
-    rx: Receiver<Result<ClipChunk>>,
+    rx: Receiver<Result<ClipChunk, ServeError>>,
     cancelled: Arc<AtomicBool>,
 }
 
@@ -146,7 +147,7 @@ impl ChunkSender {
                                       self.chunk_frames) {
             Ok(c) => c,
             Err(e) => {
-                self.send_error(&format!("{e:#}"));
+                self.send_error(ServeError::shard_fatal(format!("{e:#}")));
                 return SendOutcome::Cancelled;
             }
         };
@@ -168,13 +169,12 @@ impl ChunkSender {
         SendOutcome::Delivered(sent)
     }
 
-    /// Push a terminal error onto the stream.  Uses `try_send` so the
-    /// failure path can never block on a stalled consumer: if the
-    /// buffer is full the stream simply ends without a `last` chunk,
-    /// which the consumer reports as "stream ended early".
-    pub fn send_error(&self, msg: &str) {
-        let _ = self.tx.try_send(Err(anyhow::anyhow!(
-            "generation failed: {msg}")));
+    /// Push a typed terminal error onto the stream.  Uses `try_send`
+    /// so the failure path can never block on a stalled consumer: if
+    /// the buffer is full the stream simply ends without a `last`
+    /// chunk, which the consumer reports as "stream ended early".
+    pub fn send_error(&self, err: ServeError) {
+        let _ = self.tx.try_send(Err(err));
     }
 }
 
@@ -185,12 +185,13 @@ impl ClipStream {
 
     /// Next chunk, blocking.  `None` once the producer is done (after
     /// the `last` chunk, a cancellation, or a producer-side drop).
-    pub fn recv(&self) -> Option<Result<ClipChunk>> {
+    pub fn recv(&self) -> Option<Result<ClipChunk, ServeError>> {
         self.rx.recv().ok()
     }
 
     /// Non-blocking variant: `Ok(None)` = nothing buffered yet.
-    pub fn try_recv(&self) -> Result<Option<Result<ClipChunk>>> {
+    pub fn try_recv(&self)
+                    -> Result<Option<Result<ClipChunk, ServeError>>> {
         match self.rx.try_recv() {
             Ok(item) => Ok(Some(item)),
             Err(TryRecvError::Empty) => Ok(None),
@@ -211,8 +212,9 @@ impl ClipStream {
     }
 
     /// Drain the stream and reassemble the full clip — the one-shot
-    /// view of a streaming submit.  Errors if the producer reported a
-    /// failure or the stream ended before its `last` chunk.
+    /// view of a streaming submit.  Errors (with the typed
+    /// [`ServeError`] as the cause) if the producer reported a failure
+    /// or the stream ended before its `last` chunk.
     pub fn collect(self) -> Result<GenResponse> {
         let mut chunks = Vec::new();
         while let Some(item) = self.recv() {
@@ -428,9 +430,23 @@ mod tests {
     #[test]
     fn mid_stream_error_surfaces_in_collect() {
         let (tx, rx) = channel(6, 1, 8);
-        tx.send_error("shard died");
+        tx.send_error(ServeError::shard_transient("shard died"));
         drop(tx);
-        let err = rx.collect().unwrap_err().to_string();
-        assert!(err.contains("shard died"), "{err}");
+        let err = rx.collect().unwrap_err();
+        assert!(err.to_string().contains("shard died"), "{err}");
+        // the typed error survives the anyhow wrap
+        let typed = err.downcast_ref::<ServeError>().unwrap();
+        assert_eq!(typed.code(), "shard_failed");
+        assert!(typed.retryable());
+    }
+
+    #[test]
+    fn recv_yields_the_typed_error() {
+        let (tx, rx) = channel(8, 1, 8);
+        tx.send_error(ServeError::DeadlineExceeded);
+        match rx.recv() {
+            Some(Err(ServeError::DeadlineExceeded)) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
     }
 }

@@ -34,6 +34,29 @@ sla2 variant through real i8 x i8 -> i32 integer kernels, \"sim\" is
 the f32 fake-quant simulation (parity/measurement baseline), \"off\"
 disables quantization.  See docs/KERNELS.md.
 
+fault tolerance (every serving command; docs/ARCHITECTURE.md):
+  --default-deadline-ms N   per-request deadline when the client sets
+                            none (0 = unlimited); expired requests get
+                            a typed deadline_exceeded
+  --shed-watermark F        shed above F x queue_capacity queued
+                            requests with a typed `overloaded` +
+                            retry_after_ms (1.0 = never shed)
+  --work-watermark W        also shed when estimated queued work
+                            (dense=1.0/request, sNN cheaper) exceeds W
+                            (0 = off)
+  --retry-budget N          requeues after a shard panic before the
+                            request fails (default 2)
+  --retry-backoff-ms B      base of the jittered exponential retry
+                            backoff (default 20)
+  --quarantine-failures K   K panics inside --quarantine-window-ms
+                            quarantine a shard: it is routed around,
+                            its backend rebuilt, and re-admitted after
+                            --quarantine-cooldown-ms (K=0 disables)
+  --fault-plan SPEC         deterministic fault injection, e.g.
+                            \"panic:shard=1:nth=3,slow:ms=200:rate=0.1,\
+drop-conn:rate=0.05\" (see util::faults)
+  --fault-seed S            RNG seed for the plan's rate draws
+
 commands:
   info          show manifest contents and runtime platform
   generate      --model dit-tiny --variant sla2 --tier s90 --steps 8
@@ -183,7 +206,8 @@ fn train(artifacts: &str, args: &Args) -> Result<()> {
 }
 
 /// Open-loop Poisson load test against the serving stack:
-/// `sla2 loadtest --model dit-tiny --rps 6 --requests 24 --steps 2`
+/// `sla2 loadtest --model dit-tiny --rps 6 --requests 24 --steps 2
+///  [--deadline-ms 500] [--allow-degrade true] [--shed-watermark 0.5]`
 fn loadtest(artifacts: &str, args: &Args) -> Result<()> {
     use sla2::coordinator::{run_trace, TraceConfig};
     let serve = ServeConfig::from_args(args);
@@ -193,6 +217,8 @@ fn loadtest(artifacts: &str, args: &Args) -> Result<()> {
         tiers: vec![serve.tier.clone()],
         steps: args.usize("steps", serve.sample_steps),
         seed: args.u64("seed", 17),
+        deadline_ms: args.u64("deadline-ms", 0),
+        allow_degrade: args.bool("allow-degrade", false),
     };
     println!("load test: {} requests at {} rps (Poisson), model {}, \
               tier {}, {} steps, max_batch {}",

@@ -32,6 +32,7 @@ use xla::Literal;
 
 use crate::config::{ModelConfig, ServeConfig};
 use crate::tensor::Tensor;
+use crate::util::faults::{FaultAction, FaultInjector};
 
 use super::executor::{tensor_to_literal, Runtime};
 
@@ -108,6 +109,73 @@ pub fn make_backend(artifacts_dir: &str, serve: &ServeConfig)
         }
         other => anyhow::bail!(
             "unknown backend {other:?} (expected \"xla\" or \"native\")"),
+    }
+}
+
+/// A [`ComputeBackend`] decorator that injects deterministic faults
+/// at the execute site (chaos testing; see [`crate::util::faults`]).
+/// A `panic` clause unwinds out of `execute` exactly like a real
+/// shard bug would, so the pool's `catch_unwind` containment, retry
+/// and quarantine paths are exercised end to end; a `slow` clause
+/// stalls before delegating.  Everything else passes straight
+/// through.  The injector's fault stream is deterministic per
+/// (plan, seed, shard), so a failing chaos run replays exactly.
+pub struct FaultyBackend {
+    inner: Box<dyn ComputeBackend>,
+    injector: RefCell<FaultInjector>,
+}
+
+impl FaultyBackend {
+    pub fn new(inner: Box<dyn ComputeBackend>, injector: FaultInjector)
+               -> FaultyBackend {
+        FaultyBackend { inner, injector: RefCell::new(injector) }
+    }
+}
+
+impl ComputeBackend for FaultyBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn platform(&self) -> String {
+        format!("{} (fault-injected)", self.inner.platform())
+    }
+
+    fn model(&self) -> &ModelConfig {
+        self.inner.model()
+    }
+
+    fn supported_batch_sizes(&self, variant: &str, tier: &str)
+                             -> BatchSupport {
+        self.inner.supported_batch_sizes(variant, tier)
+    }
+
+    fn compile(&self, variant: &str, tier: &str, batch: usize)
+               -> Result<()> {
+        self.inner.compile(variant, tier, batch)
+    }
+
+    fn execute(&self, variant: &str, tier: &str, x: &Tensor, ts: &Tensor,
+               ys: &Tensor) -> Result<Tensor> {
+        let action = self.injector.borrow_mut().check();
+        match action {
+            FaultAction::Panic => {
+                panic!("injected fault: panic at execute site");
+            }
+            FaultAction::Slow(d) => std::thread::sleep(d),
+            // drop-conn clauses never reach an execute-site injector
+            // (the plan parser pins them to the net site)
+            FaultAction::DropConn | FaultAction::None => {}
+        }
+        self.inner.execute(variant, tier, x, ts, ys)
+    }
+
+    fn set_params(&self, params: &[Tensor]) -> Result<()> {
+        self.inner.set_params(params)
+    }
+
+    fn counters(&self) -> (u64, u64) {
+        self.inner.counters()
     }
 }
 

@@ -31,7 +31,7 @@ pub mod native;
 pub use artifact::{ArtifactSpec, Manifest, ParamsLayout, TensorSpec};
 pub use backend::{denoise_artifact_name, make_backend,
                   manifest_batch_sizes, BatchSupport, ComputeBackend,
-                  XlaBackend};
+                  FaultyBackend, XlaBackend};
 pub use compile_cache::{shared, CacheStats, SharedArtifacts};
 pub use executor::{tensor_to_literal, Runtime};
 pub use native::NativeBackend;

@@ -1,0 +1,350 @@
+//! Deterministic, seeded fault injection for chaos testing.
+//!
+//! A [`FaultPlan`] is parsed from a compact spec string (the
+//! `--fault-plan` flag / `SLA2_FAULT_PLAN` env var):
+//!
+//! ```text
+//! panic:shard=1:nth=3,slow:ms=200:rate=0.1,drop-conn:rate=0.05
+//! ```
+//!
+//! Comma-separated fault clauses; each clause is a kind followed by
+//! `key=value` modifiers:
+//!
+//! | kind        | site            | modifiers                          |
+//! |-------------|-----------------|------------------------------------|
+//! | `panic`     | backend execute | `shard=K` (only shard K), `nth=N` (the N-th execute at that site, 1-based), `rate=P` (each execute, prob P) |
+//! | `slow`      | backend execute | `ms=D` (sleep D ms; required), plus `shard`/`nth`/`rate` |
+//! | `drop-conn` | net framing     | `nth=N`, `rate=P`                  |
+//!
+//! A clause with neither `nth` nor `rate` fires on EVERY event at its
+//! site.  Determinism: every probabilistic draw comes from a
+//! [`Pcg32`] seeded from `(plan seed, site stream)`, and `nth`
+//! counters are per-injector — so a given (plan, seed, shard id,
+//! event order) always injects the same faults.  That is what lets
+//! the chaos suite assert exact invariants per seed.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Pcg32;
+
+/// What a fault check decided at a given event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// proceed normally
+    None,
+    /// panic (the harness expects `catch_unwind` containment upstream)
+    Panic,
+    /// sleep this long, then proceed
+    Slow(Duration),
+    /// drop the connection (net framing site only)
+    DropConn,
+}
+
+/// Where a fault clause applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Site {
+    Execute,
+    Net,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct Clause {
+    site: Site,
+    /// action when the clause fires (Panic / Slow / DropConn)
+    action: ClauseAction,
+    /// restrict to one shard (Execute site only)
+    shard: Option<usize>,
+    /// fire on exactly the N-th event (1-based) at the site
+    nth: Option<u64>,
+    /// fire with this probability per event
+    rate: Option<f64>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ClauseAction {
+    Panic,
+    Slow(u64),
+    DropConn,
+}
+
+/// A parsed fault plan plus its seed.  Cheap to clone; spawn one
+/// [`FaultInjector`] per site (per shard backend, per connection).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    clauses: Vec<Clause>,
+    seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse the spec string.  Empty (or whitespace) spec = no faults.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut clauses = Vec::new();
+        for raw in spec.split(',') {
+            let raw = raw.trim();
+            if raw.is_empty() {
+                continue;
+            }
+            let mut parts = raw.split(':');
+            let kind = parts.next().unwrap();
+            let (mut shard, mut nth, mut rate, mut ms) =
+                (None, None, None, None);
+            for kv in parts {
+                let (k, v) = kv.split_once('=').with_context(
+                    || format!("fault clause {raw:?}: modifier {kv:?} \
+                                is not key=value"))?;
+                match k {
+                    "shard" => shard = Some(v.parse::<usize>().with_context(
+                        || format!("fault clause {raw:?}: bad shard {v:?}"))?),
+                    "nth" => {
+                        let n: u64 = v.parse().with_context(
+                            || format!("fault clause {raw:?}: bad nth \
+                                        {v:?}"))?;
+                        if n == 0 {
+                            bail!("fault clause {raw:?}: nth is 1-based");
+                        }
+                        nth = Some(n);
+                    }
+                    "rate" => {
+                        let r: f64 = v.parse().with_context(
+                            || format!("fault clause {raw:?}: bad rate \
+                                        {v:?}"))?;
+                        if !(0.0..=1.0).contains(&r) {
+                            bail!("fault clause {raw:?}: rate {r} not \
+                                   in [0, 1]");
+                        }
+                        rate = Some(r);
+                    }
+                    "ms" => ms = Some(v.parse::<u64>().with_context(
+                        || format!("fault clause {raw:?}: bad ms {v:?}"))?),
+                    other => bail!("fault clause {raw:?}: unknown \
+                                    modifier {other:?}"),
+                }
+            }
+            let (site, action) = match kind {
+                "panic" => (Site::Execute, ClauseAction::Panic),
+                "slow" => (Site::Execute, ClauseAction::Slow(
+                    ms.with_context(|| format!(
+                        "fault clause {raw:?}: slow needs ms=<dur>"))?)),
+                "drop-conn" => (Site::Net, ClauseAction::DropConn),
+                other => bail!("unknown fault kind {other:?} (expected \
+                                panic | slow | drop-conn)"),
+            };
+            if site == Site::Net && shard.is_some() {
+                bail!("fault clause {raw:?}: shard= does not apply to \
+                       net faults");
+            }
+            clauses.push(Clause { site, action, shard, nth, rate });
+        }
+        Ok(FaultPlan { clauses, seed })
+    }
+
+    /// A plan that injects nothing (what an empty `--fault-plan`
+    /// resolves to).
+    pub fn none() -> FaultPlan {
+        FaultPlan { clauses: Vec::new(), seed: 0 }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clauses.is_empty()
+    }
+
+    /// True if any clause targets backend execute (panic / slow).
+    pub fn has_execute_faults(&self) -> bool {
+        self.clauses.iter().any(|c| c.site == Site::Execute)
+    }
+
+    /// True if any clause targets net framing (drop-conn).
+    pub fn has_net_faults(&self) -> bool {
+        self.clauses.iter().any(|c| c.site == Site::Net)
+    }
+
+    /// Injector for shard `shard`'s backend-execute site.
+    pub fn execute_injector(&self, shard: usize) -> FaultInjector {
+        FaultInjector::new(self, Site::Execute, Some(shard),
+                           // distinct RNG stream per shard
+                           0x45_5845u64 ^ ((shard as u64) << 8))
+    }
+
+    /// Injector for one connection's framing site.  `conn` should be a
+    /// stable per-connection ordinal so plans replay deterministically.
+    pub fn net_injector(&self, conn: u64) -> FaultInjector {
+        FaultInjector::new(self, Site::Net, None, 0x4e_4554u64 ^ (conn << 8))
+    }
+}
+
+/// Per-site fault decision stream.  NOT shared across threads: each
+/// shard / connection owns its own injector so `nth` counters and RNG
+/// draws are ordered by that site's own event sequence.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    clauses: Vec<Clause>,
+    rng: Pcg32,
+    shard: Option<usize>,
+    count: u64,
+}
+
+impl FaultInjector {
+    fn new(plan: &FaultPlan, site: Site, shard: Option<usize>,
+           stream: u64) -> FaultInjector {
+        let clauses = plan.clauses.iter()
+            .filter(|c| c.site == site)
+            .filter(|c| match (c.shard, shard) {
+                (Some(want), Some(have)) => want == have,
+                (Some(_), None) => false,
+                (None, _) => true,
+            })
+            .cloned()
+            .collect();
+        FaultInjector {
+            clauses,
+            rng: Pcg32::new(plan.seed, stream),
+            shard,
+            count: 0,
+        }
+    }
+
+    /// An injector that never fires (for sites with no plan).
+    pub fn inert() -> FaultInjector {
+        FaultInjector { clauses: Vec::new(), rng: Pcg32::seeded(0),
+                        shard: None, count: 0 }
+    }
+
+    pub fn is_inert(&self) -> bool {
+        self.clauses.is_empty()
+    }
+
+    /// Which shard this injector watches (None for net injectors).
+    pub fn shard(&self) -> Option<usize> {
+        self.shard
+    }
+
+    /// Record one event at this site and decide the fault action.
+    /// First matching clause wins (plan order).  Every rate clause
+    /// draws from the RNG on every event regardless of earlier
+    /// matches, keeping the decision stream independent of clause
+    /// order side effects.
+    pub fn check(&mut self) -> FaultAction {
+        if self.clauses.is_empty() {
+            return FaultAction::None;
+        }
+        self.count += 1;
+        let mut fired: Option<ClauseAction> = None;
+        for c in &self.clauses {
+            let hit = match (c.nth, c.rate) {
+                (Some(n), _) => self.count == n,
+                (None, Some(p)) => self.rng.f64() < p,
+                (None, None) => true,
+            };
+            if hit && fired.is_none() {
+                fired = Some(c.action);
+            }
+        }
+        match fired {
+            None => FaultAction::None,
+            Some(ClauseAction::Panic) => FaultAction::Panic,
+            Some(ClauseAction::Slow(ms)) =>
+                FaultAction::Slow(Duration::from_millis(ms)),
+            Some(ClauseAction::DropConn) => FaultAction::DropConn,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let plan = FaultPlan::parse("", 7).unwrap();
+        assert!(plan.is_empty());
+        assert!(!plan.has_execute_faults());
+        let mut inj = plan.execute_injector(0);
+        for _ in 0..100 {
+            assert_eq!(inj.check(), FaultAction::None);
+        }
+    }
+
+    #[test]
+    fn nth_panic_targets_one_shard_and_one_event() {
+        let plan = FaultPlan::parse("panic:shard=1:nth=3", 1).unwrap();
+        let mut s0 = plan.execute_injector(0);
+        let mut s1 = plan.execute_injector(1);
+        for _ in 0..10 {
+            assert_eq!(s0.check(), FaultAction::None);
+        }
+        assert_eq!(s1.check(), FaultAction::None);
+        assert_eq!(s1.check(), FaultAction::None);
+        assert_eq!(s1.check(), FaultAction::Panic);
+        assert_eq!(s1.check(), FaultAction::None);
+    }
+
+    #[test]
+    fn rate_draws_are_deterministic_per_seed() {
+        let plan = FaultPlan::parse("slow:ms=5:rate=0.3", 42).unwrap();
+        let run = |p: &FaultPlan| {
+            let mut inj = p.execute_injector(2);
+            (0..64).map(|_| inj.check() != FaultAction::None)
+                   .collect::<Vec<bool>>()
+        };
+        let a = run(&plan);
+        let b = run(&plan);
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&x| x), "rate 0.3 over 64 events fired 0x");
+        assert!(!a.iter().all(|&x| x), "rate 0.3 fired every time");
+        // a different seed gives a different decision stream
+        let other = FaultPlan::parse("slow:ms=5:rate=0.3", 43).unwrap();
+        assert_ne!(run(&other), a);
+    }
+
+    #[test]
+    fn slow_carries_its_duration() {
+        let plan = FaultPlan::parse("slow:ms=200:nth=1", 0).unwrap();
+        let mut inj = plan.execute_injector(0);
+        assert_eq!(inj.check(),
+                   FaultAction::Slow(Duration::from_millis(200)));
+        assert_eq!(inj.check(), FaultAction::None);
+    }
+
+    #[test]
+    fn drop_conn_lives_on_the_net_site() {
+        let plan = FaultPlan::parse(
+            "panic:shard=1:nth=3,drop-conn:nth=2", 9).unwrap();
+        assert!(plan.has_execute_faults());
+        assert!(plan.has_net_faults());
+        let mut net = plan.net_injector(0);
+        assert_eq!(net.check(), FaultAction::None);
+        assert_eq!(net.check(), FaultAction::DropConn);
+        // the panic clause does not leak into the net site
+        for _ in 0..20 {
+            assert_eq!(net.check(), FaultAction::None);
+        }
+    }
+
+    #[test]
+    fn full_example_plan_parses() {
+        let plan = FaultPlan::parse(
+            "panic:shard=1:nth=3,slow:ms=200:rate=0.1,drop-conn:rate=0.05",
+            17).unwrap();
+        assert_eq!(plan.clauses.len(), 3);
+        assert!(plan.has_execute_faults() && plan.has_net_faults());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in ["explode", "panic:nth=0", "slow:nth=1",
+                    "panic:rate=1.5", "panic:shard", "slow:ms=abc",
+                    "drop-conn:shard=1", "panic:bogus=1"] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn clause_with_no_modifier_always_fires() {
+        let plan = FaultPlan::parse("panic", 0).unwrap();
+        let mut inj = plan.execute_injector(5);
+        assert_eq!(inj.check(), FaultAction::Panic);
+        assert_eq!(inj.check(), FaultAction::Panic);
+    }
+}

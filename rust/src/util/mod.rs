@@ -5,11 +5,13 @@
 //! lives here instead: JSON ([`json`]), a PCG RNG ([`rng`]), CLI
 //! parsing ([`cli`]), descriptive statistics ([`stats`]), a thread pool
 //! ([`threadpool`]), leveled logging ([`logging`]), a property-testing
-//! mini-framework ([`proptest`]) and the criterion-style bench harness
-//! ([`bench`]).
+//! mini-framework ([`proptest`]), the criterion-style bench harness
+//! ([`bench`]) and deterministic fault injection for chaos tests
+//! ([`faults`]).
 
 pub mod bench;
 pub mod cli;
+pub mod faults;
 pub mod json;
 pub mod logging;
 pub mod proptest;

@@ -1,0 +1,449 @@
+//! Deterministic chaos suite: drive the serving stack through seeded
+//! fault storms (no PJRT artifacts — host-only mock processors, same
+//! idiom as `streaming.rs`) and assert the fault-tolerance invariants:
+//!
+//!   1. every submitted request resolves to EXACTLY ONE of
+//!      {clip, typed error} — nothing hangs, nothing is dropped;
+//!   2. no shard slot leaks — after the storm, fresh requests still
+//!      complete on every shard;
+//!   3. the pool returns to all-idle — the queue drains and every
+//!      shard ends the test in the `up` state.
+//!
+//! The storm is parameterized by two env vars so CI can sweep seeds:
+//!   `SLA2_CHAOS_SEED`  (default 1)  — the fault plan's RNG seed
+//!   `SLA2_FAULT_PLAN`  (default below) — a `--fault-plan` spec
+//!
+//! Plans used here must have FINITE panic clauses (`nth=`-based, not
+//! always-firing) so liveness invariants 2 and 3 are satisfiable;
+//! invariant 1 holds under any plan.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use sla2::config::ServeConfig;
+use sla2::coordinator::error::ServeError;
+use sla2::coordinator::pool::{BatchProcessor, EnginePool, PoolConfig};
+use sla2::coordinator::queue::RequestQueue;
+use sla2::coordinator::request::{GenRequest, RequestMetrics};
+use sla2::coordinator::stream::{self, ClipChunk, ClipStream};
+use sla2::coordinator::{Gateway, ServerMetrics};
+use sla2::tensor::Tensor;
+use sla2::util::faults::{FaultAction, FaultInjector, FaultPlan};
+use sla2::util::rng::Pcg32;
+
+const CLIP_SHAPE: [usize; 4] = [4, 2, 2, 3];
+
+/// Two one-shot panics per shard stream plus a low-rate slowdown.
+/// With 2 shards that is 4 panic events total; the storm's retry
+/// budget (8) covers even a request unlucky enough to ride EVERY
+/// panicked batch, so every request must eventually complete.  CI
+/// override plans should keep at most 2 `nth=` panic clauses so no
+/// shard trips quarantine (which rebuilds the injector and re-arms
+/// its `nth` counters).
+const DEFAULT_STORM: &str = "panic:nth=2,panic:nth=5,slow:ms=3:rate=0.2";
+
+fn chaos_seed() -> u64 {
+    std::env::var("SLA2_CHAOS_SEED").ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+fn fault_spec() -> String {
+    std::env::var("SLA2_FAULT_PLAN")
+        .unwrap_or_else(|_| DEFAULT_STORM.to_string())
+}
+
+fn clip_for_seed(seed: u64) -> Tensor {
+    let mut rng = Pcg32::seeded(seed);
+    Tensor::randn(&CLIP_SHAPE, &mut rng)
+}
+
+fn metrics_for(r: &GenRequest, batch_size: usize) -> RequestMetrics {
+    RequestMetrics { queue_ms: r.queue_wait_ms(), compute_ms: 0.0,
+                     steps: r.steps, batch_size }
+}
+
+/// Host-only processor with a fault-plan execute site in front of it —
+/// the mock analogue of `FaultyBackend` wrapping a real backend.
+struct FaultyClipProcessor {
+    injector: FaultInjector,
+}
+
+impl BatchProcessor for FaultyClipProcessor {
+    fn process(&mut self, reqs: &[GenRequest])
+               -> anyhow::Result<Vec<(Tensor, RequestMetrics)>> {
+        match self.injector.check() {
+            FaultAction::Panic => {
+                panic!("injected fault: panic at execute site")
+            }
+            FaultAction::Slow(d) => std::thread::sleep(d),
+            FaultAction::DropConn | FaultAction::None => {}
+        }
+        Ok(reqs.iter()
+            .map(|r| (clip_for_seed(r.seed), metrics_for(r, reqs.len())))
+            .collect())
+    }
+}
+
+struct Harness {
+    queue: Arc<RequestQueue>,
+    metrics: Arc<Mutex<ServerMetrics>>,
+    gateway: Arc<Gateway>,
+    pool: EnginePool,
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        tier: "s90".into(),
+        sample_steps: 4,
+        chunk_frames: 1,
+        stream_buffer_chunks: 8,
+        queue_capacity: 128,
+        ..ServeConfig::default()
+    }
+}
+
+/// Build a pool whose processors are produced by `factory` — retained
+/// per shard, so quarantine rebuilds go through it again.
+fn harness_with<P, F>(shards: usize, cfg: PoolConfig, factory: F)
+                      -> Harness
+where
+    P: BatchProcessor + 'static,
+    F: Fn(usize) -> anyhow::Result<P> + Clone + Send + 'static,
+{
+    let serve = serve_cfg();
+    let queue = Arc::new(RequestQueue::new(serve.queue_capacity));
+    let metrics = Arc::new(Mutex::new(ServerMetrics::new()));
+    metrics.lock().unwrap().attach_queue(Arc::clone(&queue));
+    let pool = EnginePool::start_with_config(
+        shards, Arc::clone(&queue), Arc::clone(&metrics), cfg, factory)
+        .expect("pool start");
+    let gateway = Arc::new(Gateway::new(Arc::clone(&queue),
+                                        Arc::clone(&metrics), serve));
+    Harness { queue, metrics, gateway, pool }
+}
+
+/// Drain a stream to its terminal state.  Panics if the producer
+/// vanished without either a `last` chunk or a typed error — that is
+/// exactly the resolution invariant this suite exists to enforce.
+fn drain_stream(s: &ClipStream) -> Result<Vec<ClipChunk>, ServeError> {
+    let mut chunks = Vec::new();
+    loop {
+        match s.recv() {
+            Some(Ok(c)) => {
+                let last = c.last;
+                chunks.push(c);
+                if last {
+                    return Ok(chunks);
+                }
+            }
+            Some(Err(e)) => return Err(e),
+            None => panic!("stream {} ended without a last chunk or a \
+                            typed error", s.id()),
+        }
+    }
+}
+
+// ---------------- the storm --------------------------------------------
+
+#[test]
+fn chaos_storm_resolves_every_request_and_leaks_no_slots() {
+    let seed = chaos_seed();
+    let plan = FaultPlan::parse(&fault_spec(), seed)
+        .expect("SLA2_FAULT_PLAN must parse");
+    let cfg = PoolConfig {
+        max_batch: 4,
+        batch_window: Duration::from_millis(2),
+        retry_budget: 8,
+        retry_backoff_ms: 2,
+        ..PoolConfig::default()
+    };
+    let shards = 2;
+    let p = plan.clone();
+    let h = harness_with(shards, cfg, move |shard| {
+        Ok(FaultyClipProcessor { injector: p.execute_injector(shard) })
+    });
+
+    // mixed storm: one-shot and streaming submissions interleaved
+    const N: usize = 32;
+    let mut oneshots = Vec::new();
+    let mut streams = Vec::new();
+    for i in 0..N {
+        let seed = 1000 + i as u64;
+        if i % 4 == 3 {
+            streams.push(h.gateway
+                .submit_streaming(0, seed, 4, "s90")
+                .expect("storm submit"));
+        } else {
+            oneshots.push((seed,
+                           h.gateway.submit(0, seed, 4, "s90")
+                               .expect("storm submit")));
+        }
+    }
+
+    // invariant 1: exactly-one resolution per request
+    let (mut completed, mut failed) = (0usize, 0usize);
+    for (seed, rx) in oneshots {
+        match rx.recv().expect("request dropped without resolution") {
+            Ok(resp) => {
+                assert_eq!(resp.clip, clip_for_seed(seed),
+                           "fault injection corrupted a served clip");
+                completed += 1;
+            }
+            Err(e) => {
+                assert!(!e.code().is_empty(), "untyped failure: {e}");
+                failed += 1;
+            }
+        }
+    }
+    for s in &streams {
+        match drain_stream(s) {
+            Ok(chunks) => {
+                let id = chunks[0].id;
+                stream::assemble_response(id, chunks)
+                    .expect("delivered chunk set must reassemble");
+                completed += 1;
+            }
+            Err(e) => {
+                assert!(!e.code().is_empty(), "untyped failure: {e}");
+                failed += 1;
+            }
+        }
+    }
+    assert_eq!(completed + failed, N,
+               "every request resolves exactly once");
+    // the default (and CI) plans have finite panic clauses and the
+    // retry budget covers them: the storm must not lose work
+    assert_eq!(failed, 0, "finite-panic plan must not fail requests");
+
+    // invariant 2: no shard slot leaked — fresh requests on every
+    // shard still complete after the storm
+    for i in 0..(shards as u64 * 2) {
+        let rx = h.gateway.submit(0, 9000 + i, 4, "s90").unwrap();
+        let resp = rx.recv().unwrap()
+            .expect("post-storm request failed: slot leak or dead shard");
+        assert_eq!(resp.clip, clip_for_seed(9000 + i));
+    }
+
+    // invariant 3: pool returns to all-idle
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while h.gateway.pending() > 0 {
+        assert!(Instant::now() < deadline,
+                "queue never drained: {} pending", h.gateway.pending());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    for st in h.pool.stats() {
+        assert_eq!(st.state_name(), "up",
+                   "a shard ended the storm quarantined");
+    }
+
+    h.queue.close();
+    drop(h.pool);
+    let m = h.metrics.lock().unwrap();
+    assert_eq!(m.completed as usize, completed + shards * 2);
+    assert_eq!(m.failed as usize, failed);
+}
+
+#[test]
+fn storm_fault_decisions_replay_identically_per_seed() {
+    let spec = fault_spec();
+    let seed = chaos_seed();
+    let decisions = |seed: u64| -> Vec<Vec<FaultAction>> {
+        let plan = FaultPlan::parse(&spec, seed).unwrap();
+        (0..2).map(|shard| {
+            let mut inj = plan.execute_injector(shard);
+            (0..64).map(|_| inj.check()).collect()
+        }).collect()
+    };
+    assert_eq!(decisions(seed), decisions(seed),
+               "a (plan, seed) pair must replay the same fault stream");
+}
+
+// ---------------- retry ------------------------------------------------
+
+#[test]
+fn single_panic_is_retried_within_budget_and_succeeds() {
+    let plan = FaultPlan::parse("panic:nth=1", 0).unwrap();
+    let cfg = PoolConfig {
+        max_batch: 1,
+        retry_budget: 2,
+        retry_backoff_ms: 1,
+        ..PoolConfig::default()
+    };
+    let p = plan.clone();
+    let h = harness_with(1, cfg, move |shard| {
+        Ok(FaultyClipProcessor { injector: p.execute_injector(shard) })
+    });
+    let rx = h.gateway.submit(0, 4242, 4, "s90").unwrap();
+    let resp = rx.recv().unwrap()
+        .expect("one panic is inside the retry budget");
+    assert_eq!(resp.clip, clip_for_seed(4242));
+
+    h.queue.close();
+    drop(h.pool);
+    let m = h.metrics.lock().unwrap();
+    assert_eq!(m.retries, 1);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.completed, 1);
+}
+
+#[test]
+fn panic_beyond_retry_budget_fails_with_typed_error() {
+    // an always-panicking shard, quarantine disabled so the test only
+    // exercises the retry path
+    let plan = FaultPlan::parse("panic", 0).unwrap();
+    let cfg = PoolConfig {
+        max_batch: 1,
+        retry_budget: 1,
+        retry_backoff_ms: 1,
+        quarantine_failures: 0,
+        ..PoolConfig::default()
+    };
+    let p = plan.clone();
+    let h = harness_with(1, cfg, move |shard| {
+        Ok(FaultyClipProcessor { injector: p.execute_injector(shard) })
+    });
+    let rx = h.gateway.submit(0, 7, 4, "s90").unwrap();
+    let err = rx.recv().unwrap()
+        .expect_err("an always-panicking shard must fail the request");
+    assert_eq!(err.code(), "shard_failed");
+    assert!(!err.retryable(), "budget exhaustion is terminal");
+    assert!(err.to_string().contains("retry budget"), "{err}");
+
+    h.queue.close();
+    drop(h.pool);
+    let m = h.metrics.lock().unwrap();
+    assert_eq!(m.retries, 1, "budget 1 = exactly one requeue");
+    assert_eq!(m.failed, 1);
+    assert_eq!(m.completed, 0);
+}
+
+// ---------------- quarantine -------------------------------------------
+
+/// Panics while the shared strike counter is non-zero; the counter
+/// survives quarantine rebuilds (the factory clones its handle), so a
+/// rebuilt shard heals once the strikes run out — a transiently sick
+/// backend.
+struct StrikeProcessor {
+    strikes: Arc<AtomicU64>,
+}
+
+impl BatchProcessor for StrikeProcessor {
+    fn process(&mut self, reqs: &[GenRequest])
+               -> anyhow::Result<Vec<(Tensor, RequestMetrics)>> {
+        if self.strikes
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst,
+                          |v| v.checked_sub(1))
+            .is_ok()
+        {
+            panic!("injected strike");
+        }
+        Ok(reqs.iter()
+            .map(|r| (clip_for_seed(r.seed), metrics_for(r, reqs.len())))
+            .collect())
+    }
+}
+
+#[test]
+fn quarantine_trips_rebuilds_and_readmits() {
+    let strikes = Arc::new(AtomicU64::new(2));
+    let cfg = PoolConfig {
+        max_batch: 1,
+        retry_budget: 4, // the request must outlive the quarantine
+        retry_backoff_ms: 1,
+        quarantine_failures: 2,
+        quarantine_window: Duration::from_secs(10),
+        quarantine_cooldown: Duration::from_millis(5),
+        ..PoolConfig::default()
+    };
+    let s = Arc::clone(&strikes);
+    let h = harness_with(1, cfg, move |_| {
+        Ok(StrikeProcessor { strikes: Arc::clone(&s) })
+    });
+    let rx = h.gateway.submit(0, 99, 4, "s90").unwrap();
+    // two panics trip the quarantine; the rebuilt shard re-admits
+    // itself and serves the (retried) request
+    let resp = rx.recv().unwrap()
+        .expect("request must survive a shard quarantine cycle");
+    assert_eq!(resp.clip, clip_for_seed(99));
+
+    let st = &h.pool.stats()[0];
+    assert_eq!(st.panics.load(Ordering::Relaxed), 2);
+    assert_eq!(st.quarantines.load(Ordering::Relaxed), 1,
+               "2 panics inside the window must quarantine once");
+    assert_eq!(st.state_name(), "up", "the shard must re-admit itself");
+    assert_eq!(strikes.load(Ordering::SeqCst), 0);
+
+    // the flap surfaces in the metrics snapshot
+    let snap = h.gateway.metrics_snapshot();
+    let shards = snap.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(shards[0].get("state").and_then(|v| v.as_str()),
+               Some("up"));
+    assert_eq!(shards[0].get("quarantines").and_then(|v| v.as_usize()),
+               Some(1));
+    h.queue.close();
+    drop(h.pool);
+}
+
+// ---------------- mid-stream shard death (satellite) -------------------
+
+/// Emits the first request's clip, then panics — a shard dying halfway
+/// through a dispatched batch.
+struct EmitThenPanicProcessor;
+
+impl BatchProcessor for EmitThenPanicProcessor {
+    fn process(&mut self, _reqs: &[GenRequest])
+               -> anyhow::Result<Vec<(Tensor, RequestMetrics)>> {
+        anyhow::bail!("one-shot path unused: this mock only streams")
+    }
+
+    fn process_streaming(
+        &mut self, reqs: &[GenRequest],
+        emit: &mut dyn FnMut(usize, Result<Tensor, ServeError>,
+                             RequestMetrics))
+        -> anyhow::Result<()> {
+        emit(0, Ok(clip_for_seed(reqs[0].seed)), metrics_for(&reqs[0], 1));
+        panic!("injected mid-batch panic");
+    }
+}
+
+#[test]
+fn shard_panic_mid_stream_delivers_typed_error_not_hang() {
+    let cfg = PoolConfig {
+        max_batch: 2,
+        // wide coalescing window: both streams must ride ONE batch so
+        // the panic lands between them
+        batch_window: Duration::from_millis(200),
+        retry_budget: 0, // fail the survivor terminally, first panic
+        quarantine_failures: 0,
+        ..PoolConfig::default()
+    };
+    let h = harness_with(1, cfg, move |_| Ok(EmitThenPanicProcessor));
+    let first = h.gateway.submit_streaming(0, 111, 4, "s90").unwrap();
+    let second = h.gateway.submit_streaming(0, 222, 4, "s90").unwrap();
+
+    // the first request's chunks were emitted before the panic: they
+    // survive and reassemble bit-for-bit
+    let chunks = drain_stream(&first)
+        .expect("chunks delivered before the panic must survive");
+    assert_eq!(chunks.len(), CLIP_SHAPE[0], "chunk_frames=1 delivery");
+    let resp = stream::assemble_response(first.id(), chunks).unwrap();
+    assert_eq!(resp.clip, clip_for_seed(111));
+
+    // the second stream resolves with a TERMINAL typed error — recv()
+    // returning (not hanging) is the point of this test
+    let err = drain_stream(&second)
+        .expect_err("the unserved stream must fail, not hang");
+    assert_eq!(err.code(), "shard_failed");
+    assert!(!err.retryable());
+    assert!(matches!(second.recv(), None),
+            "a failed stream must be closed after its terminal error");
+
+    h.queue.close();
+    drop(h.pool);
+    let m = h.metrics.lock().unwrap();
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.failed, 1);
+    assert_eq!(m.chunks_sent, CLIP_SHAPE[0] as u64);
+}

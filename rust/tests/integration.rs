@@ -169,11 +169,13 @@ fn loadgen_under_overload_rejects_but_never_loses() {
         tiers: vec!["s90".into()],
         steps: 2,
         seed: 3,
+        ..TraceConfig::default()
     };
     let report = run_trace(&server, &trace).unwrap();
     // conservation: every offered request is accounted for exactly once
     assert_eq!(report.accepted + report.rejected, report.offered);
-    assert_eq!(report.completed + report.failed, report.accepted);
+    assert_eq!(report.completed + report.expired + report.failed,
+               report.accepted);
     assert_eq!(report.failed, 0, "accepted requests must complete");
     assert!(report.completed >= 1);
     server.shutdown();

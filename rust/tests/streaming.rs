@@ -9,6 +9,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use sla2::config::ServeConfig;
+use sla2::coordinator::error::ServeError;
 use sla2::coordinator::net::{self, read_frame, write_frame};
 use sla2::coordinator::pool::{BatchProcessor, EnginePool};
 use sla2::coordinator::queue::RequestQueue;
@@ -192,20 +193,23 @@ impl BatchProcessor for SplitEmitProcessor {
     fn process(&mut self, reqs: &[GenRequest])
                -> anyhow::Result<Vec<(Tensor, RequestMetrics)>> {
         let mut out = Vec::new();
-        self.process_streaming(reqs, &mut |_, clip, rm| {
-            out.push((clip, rm));
+        self.process_streaming(reqs, &mut |_, result, rm| {
+            if let Ok(clip) = result {
+                out.push((clip, rm));
+            }
         })?;
         Ok(out)
     }
 
     fn process_streaming(
         &mut self, reqs: &[GenRequest],
-        emit: &mut dyn FnMut(usize, Tensor, RequestMetrics))
+        emit: &mut dyn FnMut(usize, Result<Tensor, ServeError>,
+                             RequestMetrics))
         -> anyhow::Result<()> {
         for (i, r) in reqs.iter().enumerate() {
             anyhow::ensure!(r.class_label != -1,
                             "sub-batch {i} exploded");
-            emit(i, clip_for_seed(r.seed), RequestMetrics {
+            emit(i, Ok(clip_for_seed(r.seed)), RequestMetrics {
                 queue_ms: r.queue_wait_ms(),
                 compute_ms: 1.0,
                 steps: r.steps,
@@ -256,9 +260,13 @@ fn partial_failure_keeps_already_emitted_clips() {
     // the first request was emitted before the failure: it succeeds
     let first = rx1.recv().unwrap().expect("emitted clip must stand");
     assert_eq!(first.clip, clip_for_seed(10));
-    // the second surfaces the processor error
+    // the second surfaces the processor error as a typed terminal
+    // failure (orderly processor errors are deterministic — they are
+    // NOT retried)
     let err = rx2.recv().unwrap().expect_err("unfinished request must \
                                               fail");
+    assert_eq!(err.code(), "shard_failed");
+    assert!(!err.retryable());
     assert!(err.to_string().contains("exploded"), "{err}");
     h.queue.close();
     drop(h.pool);
@@ -369,6 +377,13 @@ fn tcp_rejects_malformed_frames_and_closes() {
         .unwrap().expect("server should report the framing error");
     assert_eq!(reply.get("type").and_then(|v| v.as_str()),
                Some("error"));
+    // the failure is TYPED: a bad_request the client can tell apart
+    // from a shard death or an overload shed
+    assert_eq!(reply.get("code").and_then(|v| v.as_str()),
+               Some("bad_request"));
+    assert_eq!(reply.get("retryable").and_then(|v| v.as_bool()),
+               Some(false));
+    assert_eq!(net::error_from_frame(&reply).code(), "bad_request");
     // ...and then close the connection (framing is unrecoverable)
     assert!(read_frame(&mut sock, net::MAX_FRAME_LEN).unwrap().is_none(),
             "connection must close after a malformed frame");
@@ -390,6 +405,8 @@ fn tcp_rejects_oversized_frames_and_closes() {
         .unwrap().expect("server should report the oversized frame");
     assert_eq!(reply.get("type").and_then(|v| v.as_str()),
                Some("error"));
+    assert_eq!(reply.get("code").and_then(|v| v.as_str()),
+               Some("bad_request"));
     assert!(reply.get("error").unwrap().as_str().unwrap()
                 .contains("oversized"));
     assert!(read_frame(&mut sock, net::MAX_FRAME_LEN).unwrap().is_none(),
