@@ -24,6 +24,12 @@
 //!     `overloaded` turn-aways plus tier degradation keep admitted
 //!     latency bounded where the unprotected server lets the queue
 //!     grow without limit.
+//!   * **Stall recovery (measured)** — wedged backend calls (injected
+//!     `hang` faults) at 0/1/2 hangs with the shard watchdog off vs on
+//!     (`stall_recovery` rows): off, every hang permanently eats a
+//!     shard slot and its rider request; on, the watchdog fences the
+//!     wedged worker, retries the stolen batch on a replacement, and
+//!     completion/goodput recover.
 //!
 //! Run: `cargo bench --bench fig5_e2e_latency [--json PATH|none]`
 //! Writes `BENCH_fig5_e2e.json` by default.
@@ -514,6 +520,125 @@ fn main() -> Result<()> {
                 .push("p99_admitted_ms", p99_ms));
         }
         server.shutdown();
+    }
+    t.print();
+
+    // ---------------- stall recovery (watchdog) ----------------------
+    // Injected `hang` clauses wedge a shard mid-run: the backend call
+    // never returns and the shard slot is pinned.  With the watchdog
+    // off that slot (and the request riding it) is simply lost — the
+    // surviving shard carries the rest.  With it on, the stale
+    // heartbeat is detected, the wedged worker is fenced, its batch
+    // retries on a replacement, and every request completes.  One-shot
+    // `nth=` counters re-arm when a replacement rebuilds its injector,
+    // so the stalls column can exceed the injected hang count: that is
+    // sustained recovery under a repeatedly-wedging backend, not a
+    // miscount.  No warm-up pass: warming would consume the `nth=`
+    // counters, and the compile cost rides the first request of every
+    // row equally.
+    let stall_requests = args.usize("stall-requests", 8);
+    println!("\n=== Fig. 5 companion: stall recovery, watchdog off vs \
+              on (model {model}, {steps} steps, 2 shards, \
+              {stall_requests} requests) ===\n");
+    let mut t = Table::new(&["watchdog", "hangs", "offered", "completed",
+                             "lost", "stalls", "goodput rps", "p99 ms"]);
+    for watchdog in [false, true] {
+        for hangs in [0usize, 1, 2] {
+            let fault_plan = match hangs {
+                0 => String::new(),
+                1 => "hang:shard=0:nth=2".to_string(),
+                _ => "hang:shard=0:nth=2,hang:shard=1:nth=2".to_string(),
+            };
+            let serve = ServeConfig {
+                model: model.clone(),
+                variant: "sla2".into(),
+                tier: "s90".into(),
+                backend: backend.clone(),
+                quant_mode: quant_mode.clone(),
+                sample_steps: steps,
+                max_batch: 1,
+                batch_window_ms: 0,
+                queue_capacity: stall_requests + 4,
+                num_shards: 2,
+                retry_budget: 3,
+                retry_backoff_ms: 5,
+                quarantine_cooldown_ms: 20,
+                stall_threshold_ms: if watchdog { 300 } else { 0 },
+                fault_plan,
+                ..ServeConfig::default()
+            };
+            let server = match Server::start(&artifacts, serve) {
+                Ok(s) => s,
+                Err(err) => {
+                    println!("  watchdog={watchdog} hangs={hangs}: \
+                              SKIP ({err:#})");
+                    continue;
+                }
+            };
+            let t0 = Instant::now();
+            let rxs: Vec<_> = (0..stall_requests)
+                .filter_map(|i| {
+                    server.submit((i % 10) as i32, 300 + i as u64,
+                                  steps, "s90").ok()
+                })
+                .collect();
+            let offered = rxs.len();
+            // per-reply collector threads: a request wedged behind a
+            // hung shard (watchdog off) never resolves, so every wait
+            // is bounded by a shared deadline instead of recv()
+            let deadline = std::time::Duration::from_secs(
+                20 + 2 * steps as u64);
+            let waiters: Vec<_> = rxs.into_iter()
+                .map(|rx| {
+                    std::thread::spawn(move || {
+                        let t = Instant::now();
+                        match rx.recv_timeout(deadline) {
+                            Ok(Ok(_)) =>
+                                Some(t.elapsed().as_secs_f64() * 1e3),
+                            _ => None,
+                        }
+                    })
+                })
+                .collect();
+            let lat_ms: Vec<f64> = waiters.into_iter()
+                .filter_map(|w| w.join().ok().flatten())
+                .collect();
+            let wall = t0.elapsed().as_secs_f64();
+            let completed = lat_ms.len();
+            let lost = offered - completed;
+            let goodput = completed as f64 / wall.max(1e-9);
+            let p99_ms = if lat_ms.is_empty() {
+                0.0
+            } else {
+                Summary::of(&lat_ms).p99
+            };
+            let stalls = server.metrics_snapshot()
+                .get("stalls").and_then(|v| v.as_usize())
+                .unwrap_or(0);
+            t.row(vec![format!("{}", if watchdog { "on" } else { "off" }),
+                       format!("{hangs}"), format!("{offered}"),
+                       format!("{completed}"), format!("{lost}"),
+                       format!("{stalls}"), format!("{goodput:.2}"),
+                       format!("{p99_ms:.1}")]);
+            json_rows.push(Json::obj()
+                .push("section", "stall_recovery")
+                .push("watchdog", watchdog)
+                .push("hangs", hangs)
+                .push("offered", offered)
+                .push("completed", completed)
+                .push("lost", lost)
+                .push("stalls", stalls)
+                .push("goodput_rps", goodput)
+                .push("p99_ms", p99_ms));
+            if watchdog || hangs == 0 {
+                server.shutdown();
+            } else {
+                // a hung shard thread never exits and the watchdog is
+                // off, so shutdown (which joins shards) would hang the
+                // bench — leak the server and let process exit reap it
+                std::mem::forget(server);
+            }
+        }
     }
     t.print();
 

@@ -155,6 +155,24 @@ pub struct ServeConfig {
     /// how long a quarantined shard sits out before rebuilding its
     /// backend and re-admitting itself
     pub quarantine_cooldown_ms: u64,
+    /// watchdog: fail a shard's in-flight batch once its progress
+    /// heartbeat (stamped per denoise step and per backend execute)
+    /// is older than this, abandon the wedged thread and spawn a
+    /// fenced replacement; 0 disables the watchdog.  Must comfortably
+    /// exceed the slowest single denoise step (including a first-time
+    /// XLA compile) or healthy shards get shot.
+    pub stall_threshold_ms: u64,
+    /// graceful shutdown: how long `Server::drain` waits for in-flight
+    /// work (queue + busy shards + open streams) before forcing exit
+    pub drain_timeout_ms: u64,
+    /// TCP frontend: frames buffered per connection writer before the
+    /// producer side blocks (bounded slow-client backpressure;
+    /// floored at 1)
+    pub net_send_queue: usize,
+    /// TCP frontend: a connection whose writer cannot enqueue a frame
+    /// for this long is declared a slow client — its streams are
+    /// cancelled (freeing shard slots) and the connection is dropped
+    pub write_stall_ms: u64,
     /// deterministic fault-injection plan (chaos testing), e.g.
     /// `"panic:shard=1:nth=3,slow:ms=200:rate=0.1,drop-conn:rate=0.05"`;
     /// empty = no faults (production default)
@@ -190,6 +208,10 @@ impl Default for ServeConfig {
             quarantine_failures: 3,
             quarantine_window_ms: 10_000,
             quarantine_cooldown_ms: 250,
+            stall_threshold_ms: 0,
+            drain_timeout_ms: 5_000,
+            net_send_queue: 64,
+            write_stall_ms: 2_000,
             fault_plan: String::new(),
             fault_seed: 0,
         }
@@ -233,6 +255,13 @@ impl ServeConfig {
                                            d.quarantine_window_ms),
             quarantine_cooldown_ms: args.u64("quarantine-cooldown-ms",
                                              d.quarantine_cooldown_ms),
+            stall_threshold_ms: args.u64("stall-threshold-ms",
+                                         d.stall_threshold_ms),
+            drain_timeout_ms: args.u64("drain-timeout-ms",
+                                       d.drain_timeout_ms),
+            net_send_queue: args.usize("net-send-queue",
+                                       d.net_send_queue).max(1),
+            write_stall_ms: args.u64("write-stall-ms", d.write_stall_ms),
             fault_plan: args.str("fault-plan", &d.fault_plan),
             fault_seed: args.u64("fault-seed", d.fault_seed),
         }
@@ -285,6 +314,13 @@ impl ServeConfig {
             quarantine_cooldown_ms:
                 u("quarantine_cooldown_ms",
                   d.quarantine_cooldown_ms as usize) as u64,
+            stall_threshold_ms: u("stall_threshold_ms",
+                                  d.stall_threshold_ms as usize) as u64,
+            drain_timeout_ms: u("drain_timeout_ms",
+                                d.drain_timeout_ms as usize) as u64,
+            net_send_queue: u("net_send_queue", d.net_send_queue).max(1),
+            write_stall_ms: u("write_stall_ms",
+                              d.write_stall_ms as usize) as u64,
             fault_plan: s("fault_plan", &d.fault_plan),
             fault_seed: u("fault_seed", d.fault_seed as usize) as u64,
         }
@@ -492,6 +528,32 @@ mod tests {
         assert_eq!(s.fault_plan, "slow:ms=10");
         assert_eq!(s.fault_seed, 3);
         assert_eq!(s.default_deadline_ms, 100);
+    }
+
+    #[test]
+    fn liveness_knobs_parse_with_defaults() {
+        let d = ServeConfig::default();
+        assert_eq!(d.stall_threshold_ms, 0, "watchdog is opt-in");
+        assert_eq!(d.drain_timeout_ms, 5_000);
+        assert_eq!(d.net_send_queue, 64);
+        assert_eq!(d.write_stall_ms, 2_000);
+        let a = Args::parse_from(
+            ["--stall-threshold-ms", "400", "--drain-timeout-ms", "900",
+             "--net-send-queue", "0", "--write-stall-ms", "150"]
+                .map(String::from));
+        let s = ServeConfig::from_args(&a);
+        assert_eq!(s.stall_threshold_ms, 400);
+        assert_eq!(s.drain_timeout_ms, 900);
+        assert_eq!(s.net_send_queue, 1, "send queue must floor at 1");
+        assert_eq!(s.write_stall_ms, 150);
+        let j = Json::parse(
+            r#"{"stall_threshold_ms":250,"drain_timeout_ms":1000,
+                "net_send_queue":16,"write_stall_ms":80}"#).unwrap();
+        let s = ServeConfig::from_json(&j);
+        assert_eq!(s.stall_threshold_ms, 250);
+        assert_eq!(s.drain_timeout_ms, 1000);
+        assert_eq!(s.net_send_queue, 16);
+        assert_eq!(s.write_stall_ms, 80);
     }
 
     #[test]

@@ -22,7 +22,9 @@ use crate::runtime::BatchSupport;
 /// 1, which guarantees a solution exists.  Returned descending.
 pub fn plan_batches(n: usize, sizes: &[usize]) -> Vec<usize> {
     assert!(sizes.contains(&1), "size-1 artifact must exist");
-    plan_batches_any(n, sizes).expect("size 1 covers every n")
+    // size 1 covers every n, so the DP cannot fail — but fall back to
+    // all-1 launches rather than panic in the serving path
+    plan_batches_any(n, sizes).unwrap_or_else(|| vec![1; n])
 }
 
 /// The DP core of [`plan_batches`] without the size-1 requirement:
@@ -105,6 +107,7 @@ pub fn plan_support(n: usize, support: &BatchSupport)
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::proptest::check;

@@ -12,6 +12,8 @@
 //! and mutated across steps — the per-step cost is the backend's
 //! conversion/evaluation of the tensors that actually changed.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -31,6 +33,11 @@ pub struct Engine {
     backend: Box<dyn ComputeBackend>,
     pub model: ModelConfig,
     pub serve: ServeConfig,
+    /// pool-watchdog heartbeat, installed via
+    /// [`BatchProcessor::set_beat`]; stamped after every compile and
+    /// denoise-step execute so a long batch reads as alive while a
+    /// wedged backend call goes silent
+    beat: Option<Arc<AtomicU64>>,
 }
 
 impl Engine {
@@ -54,7 +61,15 @@ impl Engine {
             backend = Box::new(FaultyBackend::new(backend, injector));
         }
         let model = backend.model().clone();
-        Ok(Engine { backend, model, serve })
+        Ok(Engine { backend, model, serve, beat: None })
+    }
+
+    /// Stamp the shard's progress heartbeat, when serving under a
+    /// pool watchdog (no-op otherwise).
+    fn stamp_beat(&self) {
+        if let Some(b) = &self.beat {
+            b.store(super::pool::now_ms(), Ordering::Relaxed);
+        }
     }
 
     /// Replace the parameter set (e.g. after training).  Tensors are
@@ -205,6 +220,9 @@ impl Engine {
         // backend rejects an unimplemented variant/tier before any
         // per-request work happens
         self.backend.compile(variant, tier, b)?;
+        // a first-time compile can dwarf a denoise step; it finishing
+        // is progress the watchdog should see
+        self.stamp_beat();
         let [t, h, w, c] = self.model.video;
         let clip_len = t * h * w * c;
         // initial noise latents from per-request seeds, written
@@ -240,6 +258,7 @@ impl Engine {
                 *v = t_cur;
             }
             let vel = self.backend.execute(variant, tier, &x, &ts, &ys)?;
+            self.stamp_beat();
             diffusion::euler_step(&mut x, &vel, t_cur, t_next);
         }
         x.unstack().map(Some)
@@ -262,5 +281,9 @@ impl BatchProcessor for Engine {
 
     fn counters(&self) -> (u64, u64) {
         self.backend.counters()
+    }
+
+    fn set_beat(&mut self, beat: Arc<AtomicU64>) {
+        self.beat = Some(beat);
     }
 }

@@ -50,6 +50,13 @@ pub enum ServeError {
     /// The server is winding down and no longer admits work.
     #[error("server shutting down")]
     ShuttingDown,
+
+    /// The shard serving this request stopped making progress (its
+    /// heartbeat went stale) and the watchdog failed the in-flight
+    /// batch.  Always retryable: the replacement shard is healthy and
+    /// the input was never the problem.
+    #[error("shard stalled: {reason}")]
+    ShardStalled { reason: String },
 }
 
 impl ServeError {
@@ -64,6 +71,11 @@ impl ServeError {
         ServeError::ShardFailed { retryable: false, reason: reason.into() }
     }
 
+    /// Watchdog-detected stall (heartbeat stale past the threshold).
+    pub fn shard_stalled(reason: impl Into<String>) -> ServeError {
+        ServeError::ShardStalled { reason: reason.into() }
+    }
+
     /// Stable machine-readable code (the wire protocol's `code`
     /// field).  Never reword these: clients branch on them.
     pub fn code(&self) -> &'static str {
@@ -74,6 +86,7 @@ impl ServeError {
             ServeError::Cancelled => "cancelled",
             ServeError::BadRequest(_) => "bad_request",
             ServeError::ShuttingDown => "shutting_down",
+            ServeError::ShardStalled { .. } => "shard_stalled",
         }
     }
 
@@ -86,6 +99,7 @@ impl ServeError {
             ServeError::Cancelled => false,
             ServeError::BadRequest(_) => false,
             ServeError::ShuttingDown => false,
+            ServeError::ShardStalled { .. } => true,
         }
     }
 
@@ -110,6 +124,9 @@ impl ServeError {
             "cancelled" => ServeError::Cancelled,
             "bad_request" => ServeError::BadRequest(message.to_string()),
             "shutting_down" => ServeError::ShuttingDown,
+            "shard_stalled" => ServeError::ShardStalled {
+                reason: message.to_string(),
+            },
             _ => ServeError::ShardFailed {
                 retryable,
                 reason: message.to_string(),
@@ -119,6 +136,7 @@ impl ServeError {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -131,11 +149,12 @@ mod tests {
             ServeError::Cancelled,
             ServeError::BadRequest("nope".into()),
             ServeError::ShuttingDown,
+            ServeError::shard_stalled("no beat for 600 ms"),
         ];
         let codes: Vec<&str> = all.iter().map(|e| e.code()).collect();
         assert_eq!(codes, ["overloaded", "deadline_exceeded",
                            "shard_failed", "cancelled", "bad_request",
-                           "shutting_down"]);
+                           "shutting_down", "shard_stalled"]);
         let mut dedup = codes.clone();
         dedup.sort();
         dedup.dedup();
@@ -151,6 +170,8 @@ mod tests {
         assert!(!ServeError::BadRequest("x".into()).retryable());
         assert!(!ServeError::Cancelled.retryable());
         assert!(!ServeError::ShuttingDown.retryable());
+        assert!(ServeError::shard_stalled("stale beat").retryable(),
+                "a stall is the shard's fault, never the request's");
     }
 
     #[test]
@@ -164,6 +185,7 @@ mod tests {
             ServeError::Cancelled,
             ServeError::BadRequest("bad request: oversized frame".into()),
             ServeError::ShuttingDown,
+            ServeError::shard_stalled("no beat for 600 ms"),
         ];
         for e in cases {
             let back = ServeError::from_wire(

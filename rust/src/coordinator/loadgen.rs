@@ -162,6 +162,7 @@ pub fn run_trace(server: &Server, cfg: &TraceConfig) -> Result<TraceReport> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -6,7 +6,7 @@
 //! first-chunk latency) + the failure/overload rollup (sheds,
 //! degrades, deadline expiries, retries, quarantine flaps).
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
@@ -60,6 +60,9 @@ pub struct ServerMetrics {
     /// the native backend's quant_mode knob ("int8" | "sim" | "off"),
     /// attached by the server alongside `backend`
     quant_mode: Option<String>,
+    /// the gateway's drain latch, attached at gateway construction;
+    /// drives the health section's `draining`/`ready` fields
+    draining: Option<Arc<AtomicBool>>,
 }
 
 impl Default for ServerMetrics {
@@ -105,6 +108,7 @@ impl ServerMetrics {
             queue: None,
             backend: None,
             quant_mode: None,
+            draining: None,
         }
     }
 
@@ -135,6 +139,12 @@ impl ServerMetrics {
     /// from the f32 simulation at a glance).
     pub fn attach_quant_mode(&mut self, mode: &str) {
         self.quant_mode = Some(mode.to_string());
+    }
+
+    /// Wire in the gateway's drain latch so snapshots report liveness
+    /// and readiness (called from `Gateway::new`).
+    pub fn attach_health(&mut self, draining: Arc<AtomicBool>) {
+        self.draining = Some(draining);
     }
 
     pub fn record_batch(&mut self, size: usize, steps: usize,
@@ -219,17 +229,38 @@ impl ServerMetrics {
                 .push("cancelled_streams", self.cancelled_streams as usize)
                 .push("mean_first_chunk_ms", self.first_chunk_ms.mean()));
         {
+            let stalls: u64 = self.shards.iter()
+                .map(|s| s.stalls.load(Ordering::Relaxed))
+                .sum();
             let mut f = Json::obj()
                 .push("shed", self.shed as usize)
                 .push("degraded", self.degraded as usize)
                 .push("deadline_expired", self.deadline_expired as usize)
                 .push("retries", self.retries as usize)
-                .push("failed", self.failed as usize);
+                .push("failed", self.failed as usize)
+                .push("stalls", stalls as usize);
             if let Some(q) = &self.queue {
                 f = f.push("queue_expired_drops",
                            q.expired_drops() as usize);
             }
             j = j.push("failures", f);
+        }
+        {
+            // liveness/readiness: `live` is trivially true when this
+            // snapshot could be produced; `ready` means the server is
+            // admitting work (not draining) and — when a pool is
+            // attached — at least one shard is UP to serve it
+            let draining = self.draining.as_ref()
+                .map(|d| d.load(Ordering::Relaxed))
+                .unwrap_or(false);
+            let some_shard_up = self.shards.is_empty()
+                || self.shards.iter().any(|s| {
+                    s.state.load(Ordering::Relaxed) == super::pool::SHARD_UP
+                });
+            j = j.push("health", Json::obj()
+                .push("live", true)
+                .push("ready", !draining && some_shard_up)
+                .push("draining", draining));
         }
         if !self.shards.is_empty() {
             j = j.push("num_shards", self.shards.len())
@@ -253,7 +284,14 @@ impl ServerMetrics {
                     .push("panics",
                           s.panics.load(Ordering::Relaxed) as usize)
                     .push("quarantines",
-                          s.quarantines.load(Ordering::Relaxed) as usize))
+                          s.quarantines.load(Ordering::Relaxed) as usize)
+                    .push("generation",
+                          s.generation.load(Ordering::Relaxed) as usize)
+                    .push("stalls",
+                          s.stalls.load(Ordering::Relaxed) as usize)
+                    // absent until the shard serves its first batch
+                    .push_opt("last_beat_age_ms",
+                              s.beat_age_ms().map(|a| a as usize)))
                 .collect();
             j = j.push("shards", shards);
         }
@@ -301,6 +339,7 @@ impl ServerMetrics {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -418,8 +457,45 @@ mod tests {
         assert_eq!(f.get("deadline_expired").unwrap().as_usize(), Some(1));
         assert_eq!(f.get("retries").unwrap().as_usize(), Some(3));
         assert_eq!(f.get("failed").unwrap().as_usize(), Some(1));
+        assert_eq!(f.get("stalls").unwrap().as_usize(), Some(0));
         // no queue attached: the dequeue-drop gauge is absent
         assert!(f.get("queue_expired_drops").is_none());
+    }
+
+    #[test]
+    fn health_section_tracks_drain_and_shard_readiness() {
+        let mut m = ServerMetrics::new();
+        // nothing attached: live and ready (mock/gateway-only servers)
+        let h = m.snapshot();
+        let h = h.get("health").unwrap();
+        assert!(h.get("live").unwrap().as_bool().unwrap());
+        assert!(h.get("ready").unwrap().as_bool().unwrap());
+        assert!(!h.get("draining").unwrap().as_bool().unwrap());
+
+        let draining = Arc::new(AtomicBool::new(false));
+        m.attach_health(Arc::clone(&draining));
+        let shard = Arc::new(ShardStats::default());
+        m.attach_shards(vec![Arc::clone(&shard)]);
+        let h = m.snapshot();
+        assert!(h.get("health").unwrap()
+                 .get("ready").unwrap().as_bool().unwrap());
+
+        // every shard down -> not ready, still live
+        shard.state.store(super::super::pool::SHARD_QUARANTINED,
+                          Ordering::Relaxed);
+        let h = m.snapshot();
+        assert!(!h.get("health").unwrap()
+                  .get("ready").unwrap().as_bool().unwrap());
+        assert!(h.get("health").unwrap()
+                 .get("live").unwrap().as_bool().unwrap());
+
+        // draining -> not ready even with a healthy shard
+        shard.state.store(super::super::pool::SHARD_UP, Ordering::Relaxed);
+        draining.store(true, Ordering::Relaxed);
+        let h = m.snapshot();
+        let h = h.get("health").unwrap();
+        assert!(!h.get("ready").unwrap().as_bool().unwrap());
+        assert!(h.get("draining").unwrap().as_bool().unwrap());
     }
 
     #[test]
@@ -461,5 +537,24 @@ mod tests {
         assert_eq!(shards[0].get("panics").unwrap().as_usize(), Some(0));
         assert_eq!(shards[0].get("quarantines").unwrap().as_usize(),
                    Some(0));
+        // liveness fields too: generation/stalls always, beat age only
+        // once the shard has stamped a heartbeat
+        assert_eq!(shards[0].get("generation").unwrap().as_usize(),
+                   Some(0));
+        assert_eq!(shards[0].get("stalls").unwrap().as_usize(), Some(0));
+        assert!(shards[0].get("last_beat_age_ms").is_none());
+    }
+
+    #[test]
+    fn shard_row_reports_beat_age_once_stamped() {
+        let mut m = ServerMetrics::new();
+        let s = Arc::new(ShardStats::default());
+        s.beat();
+        m.attach_shards(vec![s]);
+        let snap = m.snapshot();
+        let shards = snap.get("shards").unwrap().as_arr().unwrap();
+        let age = shards[0].get("last_beat_age_ms").unwrap()
+            .as_usize().unwrap();
+        assert!(age < 60_000, "a just-stamped beat must read as fresh");
     }
 }

@@ -96,23 +96,49 @@
 //!
 //! **Failure model** — every failure a caller can observe is a typed
 //! [`error::ServeError`] (`overloaded`, `deadline_exceeded`,
-//! `shard_failed`, `cancelled`, `bad_request`, `shutting_down`), and
-//! every accepted request resolves to exactly one of {clip, typed
-//! error}.  The gateway sheds load at configurable queue-depth /
-//! estimated-work watermarks (or reroutes `allow_degrade` requests to
-//! a cheaper sparsity tier instead); expired deadlines are dropped at
-//! dequeue and re-checked between sub-batches and denoise steps; a
-//! panicking shard is caught, its batch retried within a bounded
-//! jittered-backoff budget, and a shard failing repeatedly inside a
-//! window is quarantined (backend rebuilt, then re-admitted).  A
-//! deterministic fault-injection plan ([`crate::util::faults`],
-//! `--fault-plan`) drives the chaos test suite over exactly these
-//! paths.
+//! `shard_failed`, `shard_stalled`, `cancelled`, `bad_request`,
+//! `shutting_down`), and every accepted request resolves to exactly
+//! one of {clip, typed error}.  The gateway sheds load at configurable
+//! queue-depth / estimated-work watermarks (or reroutes
+//! `allow_degrade` requests to a cheaper sparsity tier instead);
+//! expired deadlines are dropped at dequeue and re-checked between
+//! sub-batches and denoise steps; a panicking shard is caught, its
+//! batch retried within a bounded jittered-backoff budget, and a shard
+//! failing repeatedly inside a window is quarantined (backend rebuilt,
+//! then re-admitted).  A deterministic fault-injection plan
+//! ([`crate::util::faults`], `--fault-plan`) drives the chaos test
+//! suite over exactly these paths.
+//!
+//! **Liveness** — crashes are caught by `catch_unwind`; HANGS are
+//! caught by the pool watchdog.  Shards stamp a monotonic progress
+//! beat at batch start and after every compile / denoise-step execute;
+//! when a beat goes stale past `ServeConfig::stall_threshold_ms` the
+//! watchdog fences the shard (bumps its generation so any late
+//! emission or slot release from the wedged thread is a no-op), fails
+//! the stolen in-flight batch with retryable `shard_stalled`, abandons
+//! the wedged thread (never joins it) and spawns a replacement worker
+//! under the quarantine machinery.  Graceful shutdown mirrors this:
+//! SIGTERM / ctrl-c / the `drain` wire verb flip admission to typed
+//! `shutting_down`, in-flight work drains up to
+//! `ServeConfig::drain_timeout_ms`, open streams are flushed with
+//! their terminal frame and idle connections get a `goaway`.  The
+//! `health` verb / metrics section reports live / ready / draining
+//! plus per-shard state, generation and last-beat age.  On the output
+//! side, the native backend refuses to emit a clip containing NaN/Inf
+//! (typed shard failure + `nonfinite_outputs` counter) so numerical
+//! corruption surfaces as an error, not as garbage video.
 //!
 //! Requests are whole video generations; all requests in a batch share
 //! the timestep schedule (diffusion jobs are fixed-length, so static
 //! per-batch scheduling is optimal — there is no analogue of
 //! continuous batching's early-exit requests).
+
+// The serving layer is the part of the codebase where a stray panic
+// becomes an outage: unwraps are banned outside tests (each test
+// module opts back in with an explicit `allow`).  Production paths use
+// poison-recovering locks (`pool::lock_recover`, `ServerMetrics::
+// lock`) and typed error propagation instead.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod batcher;
 pub mod engine;

@@ -20,6 +20,10 @@
 //! |           | default), `allow_degrade` (bool)                   |
 //! | `cancel`  | `id` — cancel an in-flight streaming request       |
 //! | `metrics` | none — request a metrics snapshot                  |
+//! | `health`  | none — liveness/readiness probe (cheap; safe for   |
+//! |           | load balancers to poll)                            |
+//! | `drain`   | none — begin graceful drain: admission flips to    |
+//! |           | typed `shutting_down`, in-flight work completes    |
 //!
 //! Server -> client frames (the `"type"` field):
 //!
@@ -34,6 +38,12 @@
 //! * `clip` — non-streaming result: `{id, clip, metrics}`.
 //! * `metrics` — `{snapshot}`.
 //! * `cancel_ok` — `{id, found}`.
+//! * `health` — `{health: {live, ready, draining}}` (the snapshot's
+//!   health section).
+//! * `drain_ok` — `{draining: true}`, ack for the `drain` verb.
+//! * `goaway` — unsolicited drain notice: the server has begun
+//!   draining; finish consuming in-flight streams (they complete) and
+//!   do not submit again on this connection.
 //! * `error` — a typed failure and, for request-scoped failures,
 //!   `{id}`.  Framing-level errors (malformed JSON, oversized frame)
 //!   send a `bad_request` error frame and then close the connection,
@@ -43,8 +53,8 @@
 //!
 //! * `error` — human-readable message,
 //! * `code` — machine-readable [`ServeError`] code: `overloaded` |
-//!   `deadline_exceeded` | `shard_failed` | `cancelled` |
-//!   `bad_request` | `shutting_down`,
+//!   `deadline_exceeded` | `shard_failed` | `shard_stalled` |
+//!   `cancelled` | `bad_request` | `shutting_down`,
 //! * `retryable` — whether retrying the same request may succeed,
 //! * `retry_after_ms` — backoff hint, present on `overloaded` only.
 //!
@@ -65,19 +75,34 @@
 //! connection cancels every stream it still owns, so abandoned
 //! clients release their shard slots (see
 //! [`crate::coordinator::stream`]).
+//!
+//! # Slow-client protection
+//!
+//! The outbound path is BOUNDED: the writer consumes a
+//! `sync_channel(ServeConfig::net_send_queue)` of frames, and a sender
+//! (the reader answering a verb, or a pump thread moving chunks) waits
+//! at most `ServeConfig::write_stall_ms` for queue space.  A client
+//! that stops reading fills its queue, the next send times out, and
+//! the connection is declared slow: every stream it owns is cancelled
+//! through the normal cancel path (freeing shard slots) and the socket
+//! is severed.  One stuck client can therefore never wedge a pump
+//! thread or hold shard-side work hostage — it costs exactly one
+//! bounded queue of frames, then it is gone.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Shutdown, SocketAddr, TcpListener,
                TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::error::ServeError;
+use super::pool::lock_recover;
 use super::request::{GenResponse, RequestMetrics};
 use super::server::{Gateway, SubmitOpts};
 use super::stream::{self, ClipChunk, StreamCancel};
@@ -237,6 +262,85 @@ fn internal_error_frame(id: u64, msg: &str) -> Json {
 
 // ---------------- server side -------------------------------------------
 
+/// Per-connection outbound handle: a BOUNDED frame queue shared by the
+/// reader and every pump thread, plus the machinery to declare the
+/// client slow and tear the connection down (see the module docs'
+/// "Slow-client protection").
+#[derive(Clone)]
+struct ConnTx {
+    tx: SyncSender<Json>,
+    /// how long a sender may wait for queue space before the client is
+    /// declared slow
+    stall: Duration,
+    /// streams this connection still owns, by id — the `cancel` verb,
+    /// the disconnect sweep and slow-client teardown all drain it
+    active: Arc<Mutex<HashMap<u64, StreamCancel>>>,
+    /// the raw socket, for severing a slow connection (unblocks the
+    /// reader)
+    sock: Arc<TcpStream>,
+    /// latched once the connection has been declared slow
+    dead: Arc<AtomicBool>,
+}
+
+impl ConnTx {
+    /// Queue `frame` for the writer, waiting up to `stall` for space.
+    /// Returns false when the connection is gone — including when this
+    /// very call declared it slow: a queue that stays full past the
+    /// stall budget triggers [`ConnTx::kill_slow`], so the caller must
+    /// simply stop, never block.
+    fn send(&self, frame: Json) -> bool {
+        if self.dead.load(Ordering::Relaxed) {
+            return false;
+        }
+        let deadline = Instant::now() + self.stall;
+        let mut frame = frame;
+        loop {
+            match self.tx.try_send(frame) {
+                Ok(()) => return true,
+                Err(TrySendError::Disconnected(_)) => return false,
+                Err(TrySendError::Full(f)) => {
+                    if Instant::now() >= deadline {
+                        self.kill_slow();
+                        return false;
+                    }
+                    frame = f;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+
+    /// Slow-client teardown: cancel every stream the connection owns
+    /// (frees shard slots through the normal cancel path) and sever
+    /// the socket so both the reader and the writer unwind.  Latched:
+    /// concurrent senders hitting the stall race to one teardown.
+    fn kill_slow(&self) {
+        if self.dead.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        let cancels: Vec<StreamCancel> =
+            lock_recover(&self.active).drain().map(|(_, c)| c).collect();
+        crate::warn_!(
+            "slow client: outbound queue stalled over {:?}; cancelling \
+             {} stream(s) and dropping the connection",
+            self.stall, cancels.len());
+        for c in cancels {
+            c.cancel();
+        }
+        let _ = self.sock.shutdown(Shutdown::Both);
+    }
+}
+
+/// The unsolicited drain notice pushed to connections when the server
+/// begins draining.
+fn goaway_frame() -> Json {
+    Json::obj()
+        .push("type", "goaway")
+        .push("reason",
+              "server draining: in-flight streams will complete; do \
+               not submit again on this connection")
+}
+
 /// The listening half: accepts connections and serves the protocol
 /// against a [`Gateway`].  Owned by [`super::server::Server`]; tests
 /// start one over a mock-backed gateway directly.
@@ -244,6 +348,9 @@ pub struct NetFrontend {
     local_addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    /// live connections by accept ordinal, for [`Self::announce_drain`]
+    conns: Arc<Mutex<HashMap<u64, ConnTx>>>,
+    draining: Arc<AtomicBool>,
 }
 
 impl NetFrontend {
@@ -264,6 +371,11 @@ impl NetFrontend {
         let local_addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let conns: Arc<Mutex<HashMap<u64, ConnTx>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let conns2 = Arc::clone(&conns);
+        let draining = Arc::new(AtomicBool::new(false));
+        let draining2 = Arc::clone(&draining);
         let accept_thread = std::thread::Builder::new()
             .name("sla2-net-accept".into())
             .spawn(move || {
@@ -280,14 +392,19 @@ impl NetFrontend {
                             } else {
                                 FaultInjector::inert()
                             };
+                            let ordinal = conn_ordinal;
                             conn_ordinal += 1;
+                            let registry = Arc::clone(&conns2);
+                            let draining = Arc::clone(&draining2);
                             // connection threads are detached: they
                             // exit when their socket closes or the
                             // queue shuts down
                             let _ = std::thread::Builder::new()
                                 .name("sla2-net-conn".into())
                                 .spawn(move || {
-                                    handle_conn(gw, sock, injector)
+                                    handle_conn(gw, sock, injector,
+                                                registry, ordinal,
+                                                draining)
                                 });
                         }
                         Err(e) => {
@@ -297,12 +414,29 @@ impl NetFrontend {
                 }
             })?;
         Ok(NetFrontend { local_addr, stop,
-                         accept_thread: Some(accept_thread) })
+                         accept_thread: Some(accept_thread),
+                         conns, draining })
     }
 
     /// The bound address (port 0 resolved to the real port).
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
+    }
+
+    /// Push a `goaway` frame to every live connection and mark the
+    /// frontend draining (connections accepted from now on get the
+    /// goaway as their first frame).  Best-effort and non-blocking: a
+    /// connection whose outbound queue is full (a slow client mid
+    /// teardown) is skipped — its submits get typed `shutting_down`
+    /// rejections anyway.  Admission itself is flipped by the caller
+    /// ([`super::server::Server::drain`] / the `drain` verb).
+    pub fn announce_drain(&self) {
+        self.draining.store(true, Ordering::Relaxed);
+        let conns = lock_recover(&self.conns);
+        crate::info!("net: goaway to {} connection(s)", conns.len());
+        for conn in conns.values() {
+            let _ = conn.tx.try_send(goaway_frame());
+        }
     }
 
     /// Stop accepting.  Existing connections wind down on their own
@@ -333,18 +467,24 @@ impl Drop for NetFrontend {
 /// belongs to).  The writer is also the connection's fault-injection
 /// site: each outbound frame is one net-framing event, so a
 /// `drop-conn` clause severs the connection mid-conversation exactly
-/// where a flaky network would.
+/// where a flaky network would, and a `slow-client` clause stalls the
+/// writes so the bounded outbound queue backs up like a stuck reader.
 fn handle_conn(gw: Arc<Gateway>, sock: TcpStream,
-               mut injector: FaultInjector) {
+               mut injector: FaultInjector,
+               registry: Arc<Mutex<HashMap<u64, ConnTx>>>, ordinal: u64,
+               draining: Arc<AtomicBool>) {
     let _ = sock.set_nodelay(true);
-    let write_sock = match sock.try_clone() {
-        Ok(s) => s,
-        Err(e) => {
+    let (write_sock, raw_sock) = match (sock.try_clone(),
+                                        sock.try_clone()) {
+        (Ok(w), Ok(r)) => (w, r),
+        (Err(e), _) | (_, Err(e)) => {
             crate::warn_!("connection clone failed: {e}");
             return;
         }
     };
-    let (out_tx, out_rx) = channel::<Json>();
+    let serve = gw.serve_config();
+    let (out_tx, out_rx) =
+        sync_channel::<Json>(serve.net_send_queue.max(1));
     let writer = std::thread::Builder::new()
         .name("sla2-net-write".into())
         .spawn(move || {
@@ -357,8 +497,14 @@ fn handle_conn(gw: Arc<Gateway>, sock: TcpStream,
                         let _ = w.get_ref().shutdown(Shutdown::Both);
                         break;
                     }
-                    FaultAction::Slow(d) => std::thread::sleep(d),
-                    FaultAction::Panic | FaultAction::None => {}
+                    // slow-client chaos: the WRITE stalls, frames pile
+                    // up in the bounded queue, senders hit the stall
+                    // budget — exactly how a peer that stopped reading
+                    // presents
+                    FaultAction::Slow(d)
+                    | FaultAction::SlowClient(d) => std::thread::sleep(d),
+                    FaultAction::Panic | FaultAction::Hang
+                    | FaultAction::None => {}
                 }
                 if write_frame(&mut w, &frame).is_err()
                     || w.flush().is_err()
@@ -367,23 +513,31 @@ fn handle_conn(gw: Arc<Gateway>, sock: TcpStream,
                 }
             }
         });
-    // streaming requests this connection still owns, by id — used by
-    // the `cancel` verb and the disconnect sweep
-    let active: Arc<Mutex<HashMap<u64, StreamCancel>>> =
-        Arc::new(Mutex::new(HashMap::new()));
+    let conn = ConnTx {
+        tx: out_tx,
+        stall: Duration::from_millis(serve.write_stall_ms.max(1)),
+        active: Arc::new(Mutex::new(HashMap::new())),
+        sock: Arc::new(raw_sock),
+        dead: Arc::new(AtomicBool::new(false)),
+    };
+    lock_recover(&registry).insert(ordinal, conn.clone());
+    if draining.load(Ordering::Relaxed) {
+        // the server is already draining: say so up front
+        conn.send(goaway_frame());
+    }
     let mut reader = BufReader::new(sock);
     loop {
         match read_frame(&mut reader, MAX_FRAME_LEN) {
             Ok(None) => break, // client closed
             Ok(Some(req)) => {
-                handle_request(&gw, &req, &out_tx, &active);
+                handle_request(&gw, &req, &conn);
             }
             Err(e) => {
                 // framing is broken: tell the client WHY with a typed
                 // bad_request frame, then drop the connection (the
                 // writer drains the channel before exiting, so the
                 // frame goes out first)
-                let _ = out_tx.send(error_frame(
+                conn.send(error_frame(
                     None, &ServeError::BadRequest(format!("{e:#}"))));
                 break;
             }
@@ -391,55 +545,74 @@ fn handle_conn(gw: Arc<Gateway>, sock: TcpStream,
     }
     // cancel-on-disconnect: whatever this client still had in flight
     // is dead work now
-    for (_, cancel) in active.lock().unwrap().drain() {
+    for (_, cancel) in lock_recover(&conn.active).drain() {
         cancel.cancel();
     }
-    drop(out_tx);
+    // deregister BEFORE joining the writer: the registry holds a
+    // ConnTx clone, and the writer only exits once every sender of
+    // the bounded queue is gone
+    lock_recover(&registry).remove(&ordinal);
+    drop(conn);
     if let Ok(w) = writer {
         let _ = w.join();
     }
 }
 
-fn handle_request(gw: &Arc<Gateway>, req: &Json, out_tx: &Sender<Json>,
-                  active: &Arc<Mutex<HashMap<u64, StreamCancel>>>) {
+fn handle_request(gw: &Arc<Gateway>, req: &Json, conn: &ConnTx) {
     match req.get("op").and_then(|v| v.as_str()) {
-        Some("submit") => handle_submit(gw, req, out_tx, active),
+        Some("submit") => handle_submit(gw, req, conn),
         Some("metrics") => {
-            let _ = out_tx.send(Json::obj()
+            conn.send(Json::obj()
                 .push("type", "metrics")
                 .push("snapshot", gw.metrics_snapshot()));
+        }
+        Some("health") => {
+            // the snapshot's health section IS the probe payload:
+            // live / ready / draining, derived from the same state
+            // the operator sees in `metrics`
+            let snap = gw.metrics_snapshot();
+            let health = snap.get("health").cloned()
+                .unwrap_or_else(Json::obj);
+            conn.send(Json::obj()
+                .push("type", "health")
+                .push("health", health));
+        }
+        Some("drain") => {
+            gw.begin_drain();
+            conn.send(Json::obj()
+                .push("type", "drain_ok")
+                .push("draining", true));
         }
         Some("cancel") => {
             let id = req.get("id").and_then(|v| v.as_usize())
                 .unwrap_or(0) as u64;
-            let found = match active.lock().unwrap().get(&id) {
+            let found = match lock_recover(&conn.active).get(&id) {
                 Some(c) => {
                     c.cancel();
                     true
                 }
                 None => false,
             };
-            let _ = out_tx.send(Json::obj()
+            conn.send(Json::obj()
                 .push("type", "cancel_ok")
                 .push("id", id as usize)
                 .push("found", found));
         }
         Some(op) => {
-            let _ = out_tx.send(error_frame(
+            conn.send(error_frame(
                 None, &ServeError::BadRequest(format!(
                     "unknown op {op:?} (valid: submit, cancel, \
-                     metrics)"))));
+                     metrics, health, drain)"))));
         }
         None => {
-            let _ = out_tx.send(error_frame(
+            conn.send(error_frame(
                 None,
                 &ServeError::BadRequest("request has no \"op\"".into())));
         }
     }
 }
 
-fn handle_submit(gw: &Arc<Gateway>, req: &Json, out_tx: &Sender<Json>,
-                 active: &Arc<Mutex<HashMap<u64, StreamCancel>>>) {
+fn handle_submit(gw: &Arc<Gateway>, req: &Json, conn: &ConnTx) {
     let serve = gw.serve_config();
     let class = req.get("class").and_then(|v| v.as_i64()).unwrap_or(0)
         as i32;
@@ -458,7 +631,7 @@ fn handle_submit(gw: &Arc<Gateway>, req: &Json, out_tx: &Sender<Json>,
             .unwrap_or(false),
     };
     if steps == 0 || steps > MAX_NET_STEPS {
-        let _ = out_tx.send(rejected_frame(&ServeError::BadRequest(
+        conn.send(rejected_frame(&ServeError::BadRequest(
             format!("steps {steps} out of range (1..={MAX_NET_STEPS})"))));
         return;
     }
@@ -466,21 +639,21 @@ fn handle_submit(gw: &Arc<Gateway>, req: &Json, out_tx: &Sender<Json>,
         match gw.submit_streaming_with(class, seed, steps, &tier, opts) {
             Ok(stream) => {
                 let id = stream.id();
-                active.lock().unwrap().insert(id, stream.cancel_handle());
-                let _ = out_tx.send(Json::obj()
+                lock_recover(&conn.active)
+                    .insert(id, stream.cancel_handle());
+                conn.send(Json::obj()
                     .push("type", "accepted")
                     .push("id", id as usize));
-                let out = out_tx.clone();
-                let reg = Arc::clone(active);
+                let out = conn.clone();
                 let _ = std::thread::Builder::new()
                     .name("sla2-net-pump".into())
                     .spawn(move || {
                         pump_stream(id, stream, &out);
-                        reg.lock().unwrap().remove(&id);
+                        lock_recover(&out.active).remove(&id);
                     });
             }
             Err(e) => {
-                let _ = out_tx.send(rejected_frame(&e));
+                conn.send(rejected_frame(&e));
             }
         }
     } else {
@@ -490,10 +663,10 @@ fn handle_submit(gw: &Arc<Gateway>, req: &Json, out_tx: &Sender<Json>,
                 // tagged with it, so pipelined one-shot submits on one
                 // connection stay correlatable even though pump
                 // threads race to the writer in completion order
-                let _ = out_tx.send(Json::obj()
+                conn.send(Json::obj()
                     .push("type", "accepted")
                     .push("id", id as usize));
-                let out = out_tx.clone();
+                let out = conn.clone();
                 let _ = std::thread::Builder::new()
                     .name("sla2-net-pump".into())
                     .spawn(move || {
@@ -503,11 +676,11 @@ fn handle_submit(gw: &Arc<Gateway>, req: &Json, out_tx: &Sender<Json>,
                             Err(_) => internal_error_frame(
                                 id, "server dropped the request"),
                         };
-                        let _ = out.send(frame);
+                        out.send(frame);
                     });
             }
             Err(e) => {
-                let _ = out_tx.send(rejected_frame(&e));
+                conn.send(rejected_frame(&e));
             }
         }
     }
@@ -525,8 +698,10 @@ fn clip_frame(resp: &GenResponse) -> Json {
 }
 
 /// Move chunks from a [`ClipStream`] to the connection writer until
-/// the stream ends, then emit the `done` terminal.
-fn pump_stream(id: u64, stream: stream::ClipStream, out: &Sender<Json>) {
+/// the stream ends, then emit the `done` terminal.  A send that fails
+/// means the connection is gone or was just declared slow — either
+/// way the pump stops and dropping the stream cancels the request.
+fn pump_stream(id: u64, stream: stream::ClipStream, out: &ConnTx) {
     let mut complete = false;
     while let Some(item) = stream.recv() {
         match item {
@@ -536,19 +711,19 @@ fn pump_stream(id: u64, stream: stream::ClipStream, out: &Sender<Json>) {
                     Ok(f) => f,
                     Err(e) => internal_error_frame(id, &format!("{e:#}")),
                 };
-                if out.send(frame).is_err() {
+                if !out.send(frame) {
                     return; // connection gone; drop cancels the stream
                 }
             }
             Err(e) => {
                 // typed terminal failure (deadline, shard death, shed
                 // on retry-requeue, ...) — forwarded verbatim
-                let _ = out.send(error_frame(Some(id), &e));
+                out.send(error_frame(Some(id), &e));
                 break;
             }
         }
     }
-    let _ = out.send(Json::obj()
+    out.send(Json::obj()
         .push("type", "done")
         .push("id", id as usize)
         .push("complete", complete));
@@ -606,7 +781,9 @@ impl NetClient {
     fn wait_for(&mut self, pred: impl Fn(&Json) -> bool) -> Result<Json> {
         for i in 0..self.pending.len() {
             if pred(&self.pending[i]) {
-                return Ok(self.pending.remove(i).unwrap());
+                if let Some(f) = self.pending.remove(i) {
+                    return Ok(f);
+                }
             }
         }
         loop {
@@ -732,6 +909,26 @@ impl NetClient {
         Ok(f.req("snapshot")?.clone())
     }
 
+    /// Probe liveness/readiness; returns the server's health object
+    /// (`{live, ready, draining}`).
+    pub fn health(&mut self) -> Result<Json> {
+        self.send(&Json::obj().push("op", "health"))?;
+        let f = self.wait_for(|f| {
+            f.get("type").and_then(|v| v.as_str()) == Some("health")
+        })?;
+        Ok(f.req("health")?.clone())
+    }
+
+    /// Ask the server to begin a graceful drain (admission flips to
+    /// typed `shutting_down`; in-flight work completes).
+    pub fn drain(&mut self) -> Result<()> {
+        self.send(&Json::obj().push("op", "drain"))?;
+        self.wait_for(|f| {
+            f.get("type").and_then(|v| v.as_str()) == Some("drain_ok")
+        })?;
+        Ok(())
+    }
+
     /// Cancel an in-flight streaming request; `Ok(found)`.
     pub fn cancel(&mut self, id: u64) -> Result<bool> {
         self.send(&Json::obj()
@@ -747,6 +944,7 @@ impl NetClient {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use std::io::Cursor;

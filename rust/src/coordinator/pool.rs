@@ -44,6 +44,27 @@
 //! [`PoolConfig::quarantine_cooldown`], and re-admits itself.  Shard
 //! states and flap counters surface in `ServerMetrics::snapshot`.
 //!
+//! **Liveness (watchdog + generation fencing)** — crashes are loud,
+//! stalls are silent: a wedged backend execute pins its shard thread
+//! forever and `catch_unwind` never fires.  Every shard therefore
+//! stamps a monotonic progress heartbeat (at batch start and, via
+//! [`BatchProcessor::set_beat`], at every denoise step / backend
+//! execute), and every dispatched batch is registered in a shared
+//! per-shard IN-FLIGHT SLOT that holds the not-yet-resolved reply
+//! envelopes.  When [`PoolConfig::stall_threshold`] is non-zero a
+//! supervisor thread polls the beats; a shard with an in-flight batch
+//! whose beat has gone stale is declared STALLED: the supervisor bumps
+//! the shard's generation token (fencing the wedged thread), steals
+//! the unresolved envelopes out of the slot and fails them with the
+//! retryable [`ServeError::ShardStalled`] (requeued within the normal
+//! retry budget), ABANDONS the wedged thread (it is never joined), and
+//! spawns a replacement worker through the same factory/rebuild path
+//! quarantine uses.  A zombie thread that later wakes finds every
+//! reply sink revoked — its emissions take nothing out of the slot —
+//! and exits at the next loop edge instead of re-announcing idle, so
+//! no reply is ever delivered twice and no shard slot is released
+//! twice.
+//!
 //! With `num_shards = 1` the pool degenerates to the old single
 //! engine-thread behavior: one consumer, strict FIFO-compatible
 //! batching, identical per-seed clips.
@@ -55,13 +76,14 @@
 
 use std::collections::HashSet;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{channel, Receiver, SendError, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
+use once_cell::sync::Lazy;
 
 use super::error::ServeError;
 use super::metrics::ServerMetrics;
@@ -118,6 +140,32 @@ pub trait BatchProcessor {
         }
         Ok(())
     }
+
+    /// Install the shard's progress-heartbeat stamp.  Called once when
+    /// the shard (or a watchdog replacement) comes up; long-running
+    /// processors stamp it at every denoise step / backend execute so
+    /// the watchdog can tell slow-but-alive from wedged.  The default
+    /// ignores it — simple processors are covered by the batch-start
+    /// beat the shard loop stamps.
+    fn set_beat(&mut self, _beat: Arc<AtomicU64>) {}
+}
+
+/// Milliseconds since the process-wide pool epoch — the heartbeat
+/// clock.  Monotonic (`Instant`-backed) and cheap enough to stamp per
+/// denoise step.  Never returns 0, so a zero beat always means "never
+/// stamped".  `pub(crate)` so processors handed a beat via
+/// [`BatchProcessor::set_beat`] stamp it on the same clock.
+pub(crate) fn now_ms() -> u64 {
+    static EPOCH: Lazy<Instant> = Lazy::new(Instant::now);
+    (EPOCH.elapsed().as_millis() as u64).max(1)
+}
+
+///// Lock, RECOVERING from poison: the liveness structures are touched
+/// from inside `catch_unwind` scopes, and all of them tolerate a
+/// half-applied update (the slot's take-semantics make double
+/// resolution impossible regardless).
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// Shard health states (the quarantine state machine's nodes).
@@ -140,6 +188,19 @@ pub struct ShardStats {
     pub quarantines: AtomicU64,
     /// current health state ([`SHARD_UP`] | [`SHARD_QUARANTINED`])
     pub state: AtomicU8,
+    /// generation (fencing) token: bumped by the watchdog when it
+    /// abandons a wedged worker, so the zombie thread can recognize
+    /// that a replacement owns the shard and exit instead of
+    /// re-announcing idle
+    pub generation: AtomicU64,
+    /// last progress heartbeat, in [`now_ms`] time; 0 = never stamped.
+    /// `Arc`ed so [`BatchProcessor::set_beat`] can hand the stamp to
+    /// the engine's denoise loop without threading `ShardStats`
+    /// through it.
+    pub last_beat: Arc<AtomicU64>,
+    /// watchdog-detected stalls on this shard (each one fenced the
+    /// previous worker generation)
+    pub stalls: AtomicU64,
 }
 
 impl ShardStats {
@@ -155,6 +216,37 @@ impl ShardStats {
             _ => "up",
         }
     }
+
+    /// Stamp a progress heartbeat now.
+    pub fn beat(&self) {
+        self.last_beat.store(now_ms(), Ordering::Relaxed);
+    }
+
+    /// Milliseconds since the last heartbeat; `None` when the shard
+    /// has never stamped one (it has not served anything yet).
+    pub fn beat_age_ms(&self) -> Option<u64> {
+        match self.last_beat.load(Ordering::Relaxed) {
+            0 => None,
+            beat => Some(now_ms().saturating_sub(beat)),
+        }
+    }
+}
+
+/// Shared per-shard in-flight tracking: the reply envelopes of the
+/// batch currently being served, each taken (under the lock) by
+/// whoever resolves it — the serving thread's emissions, the batch's
+/// failure handling, or the watchdog's steal.  Take-semantics make
+/// exactly-once resolution structural: once an envelope is gone, a
+/// zombie emission for the same index is a no-op.
+#[derive(Debug, Default)]
+struct InFlight {
+    /// generation that registered the current batch
+    gen: u64,
+    /// one entry per request; `None` once resolved
+    envs: Vec<Option<Envelope>>,
+    /// true from batch registration until the batch is fully resolved
+    /// (or stolen by the watchdog)
+    active: bool,
 }
 
 /// Dispatcher-level routing counters, updated lock-free by the
@@ -193,6 +285,12 @@ pub struct PoolConfig {
     pub quarantine_window: Duration,
     /// how long a quarantined shard sits out before re-admission
     pub quarantine_cooldown: Duration,
+    /// heartbeat staleness past which the watchdog declares a busy
+    /// shard STALLED and fences its worker.  `ZERO` (the default)
+    /// disables the watchdog entirely — it must comfortably exceed the
+    /// slowest legitimate single step (including a first-time compile)
+    /// or healthy shards get shot.
+    pub stall_threshold: Duration,
 }
 
 impl Default for PoolConfig {
@@ -205,8 +303,33 @@ impl Default for PoolConfig {
             quarantine_failures: 3,
             quarantine_window: Duration::from_secs(10),
             quarantine_cooldown: Duration::from_millis(250),
+            stall_threshold: Duration::ZERO,
         }
     }
+}
+
+/// Everything a shard worker needs to run [`shard_loop`], bundled so
+/// the original thread, watchdog replacements, and the watchdog itself
+/// share one signature.  `Clone` hands each its own set of `Arc`s.
+#[derive(Clone)]
+struct ShardCtx {
+    shard: usize,
+    /// shared (not owned) so a watchdog replacement can take over
+    /// consumption after the previous generation is abandoned
+    batch_rx: Arc<Mutex<Receiver<Vec<Envelope>>>>,
+    idle_tx: Sender<usize>,
+    queue: Arc<RequestQueue>,
+    cfg: PoolConfig,
+    metrics: Arc<Mutex<ServerMetrics>>,
+    stats: Arc<ShardStats>,
+    inflight: Arc<Mutex<InFlight>>,
+}
+
+/// True when `my_gen` is no longer the shard's live generation: the
+/// watchdog fenced this worker and a replacement owns the shard, so
+/// the caller must exit without announcing idle or touching counters.
+fn fenced(ctx: &ShardCtx, my_gen: u64) -> bool {
+    ctx.stats.generation.load(Ordering::Relaxed) != my_gen
 }
 
 /// The running pool: shard worker threads + the dispatcher.
@@ -217,9 +340,15 @@ impl Default for PoolConfig {
 pub struct EnginePool {
     queue: Arc<RequestQueue>,
     dispatcher: Option<JoinHandle<()>>,
-    shards: Vec<JoinHandle<()>>,
+    /// one slot per shard; the watchdog swaps in a replacement's
+    /// handle when it abandons a wedged worker, `None` once joined
+    handles: Arc<Mutex<Vec<Option<JoinHandle<()>>>>>,
+    watchdog: Option<JoinHandle<()>>,
+    watchdog_stop: Arc<AtomicBool>,
     stats: Vec<Arc<ShardStats>>,
     dispatch: Arc<DispatchStats>,
+    inflights: Vec<Arc<Mutex<InFlight>>>,
+    stall_threshold: Duration,
 }
 
 impl EnginePool {
@@ -260,21 +389,32 @@ impl EnginePool {
         let mut batch_txs: Vec<Sender<Vec<Envelope>>> = Vec::new();
         let mut shards = Vec::new();
         let mut stats = Vec::new();
+        let mut inflights = Vec::new();
+        let mut ctxs: Vec<ShardCtx> = Vec::new();
         for shard in 0..num_shards {
             let (batch_tx, batch_rx) = channel::<Vec<Envelope>>();
             batch_txs.push(batch_tx);
             let st = Arc::new(ShardStats::default());
             stats.push(Arc::clone(&st));
+            let inf = Arc::new(Mutex::new(InFlight::default()));
+            inflights.push(Arc::clone(&inf));
+            let ctx = ShardCtx {
+                shard,
+                batch_rx: Arc::new(Mutex::new(batch_rx)),
+                idle_tx: idle_tx.clone(),
+                queue: Arc::clone(&queue),
+                cfg: cfg.clone(),
+                metrics: Arc::clone(&metrics),
+                stats: st,
+                inflight: inf,
+            };
+            ctxs.push(ctx.clone());
             let factory = factory.clone();
-            let idle_tx = idle_tx.clone();
             let ready_tx = ready_tx.clone();
-            let metrics = Arc::clone(&metrics);
-            let queue = Arc::clone(&queue);
-            let cfg = cfg.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("sla2-shard-{shard}"))
                 .spawn(move || {
-                    let proc = match factory(shard) {
+                    let proc = match factory(ctx.shard) {
                         Ok(p) => {
                             let _ = ready_tx.send(Ok(()));
                             p
@@ -288,10 +428,9 @@ impl EnginePool {
                     // dies before reporting surfaces as a disconnect,
                     // not a startup hang
                     drop(ready_tx);
-                    crate::info!("shard {shard} up");
-                    shard_loop(shard, proc, &factory, batch_rx, idle_tx,
-                               &queue, &cfg, &metrics, &st);
-                    crate::info!("shard {shard} shut down");
+                    crate::info!("shard {} up", ctx.shard);
+                    shard_loop(&ctx, proc, &factory, 0);
+                    crate::info!("shard {} shut down", ctx.shard);
                 })?;
             shards.push(handle);
         }
@@ -337,8 +476,27 @@ impl EnginePool {
                 dispatch_loop(&q, idle_rx, batch_txs, max_batch,
                               batch_window, &d);
             })?;
-        Ok(EnginePool { queue, dispatcher: Some(dispatcher), shards,
-                        stats, dispatch })
+
+        let handles = Arc::new(Mutex::new(
+            shards.into_iter().map(Some).collect::<Vec<_>>()));
+        let watchdog_stop = Arc::new(AtomicBool::new(false));
+        let stall_threshold = cfg.stall_threshold;
+        let watchdog = if stall_threshold > Duration::ZERO {
+            let factory = factory.clone();
+            let handles = Arc::clone(&handles);
+            let stop = Arc::clone(&watchdog_stop);
+            Some(std::thread::Builder::new()
+                .name("sla2-watchdog".into())
+                .spawn(move || {
+                    watchdog_loop(&ctxs, &factory, &handles, &stop,
+                                  stall_threshold);
+                })?)
+        } else {
+            None
+        };
+        Ok(EnginePool { queue, dispatcher: Some(dispatcher), handles,
+                        watchdog, watchdog_stop, stats, dispatch,
+                        inflights, stall_threshold })
     }
 
     pub fn num_shards(&self) -> usize {
@@ -353,15 +511,60 @@ impl EnginePool {
         &self.dispatch
     }
 
+    /// Number of shards currently serving a batch — the drain path's
+    /// "work still in flight" signal (queued work is counted by the
+    /// queue itself).
+    pub fn in_flight(&self) -> usize {
+        self.inflights.iter()
+            .filter(|inf| lock_recover(inf).active)
+            .count()
+    }
+
+    /// True when a shard looks permanently stuck: an in-flight batch
+    /// whose heartbeat is stale past the stall threshold.  Only
+    /// meaningful with the watchdog enabled; without one we have no
+    /// staleness definition and optimistically report healthy.
+    fn wedged(&self, shard: usize) -> bool {
+        if self.stall_threshold.is_zero() {
+            return false;
+        }
+        let active = lock_recover(&self.inflights[shard]).active;
+        active
+            && match self.stats[shard].beat_age_ms() {
+                Some(age) => age > self.stall_threshold.as_millis() as u64,
+                None => false,
+            }
+    }
+
     /// Graceful shutdown: close the queue (idempotent), then join the
     /// dispatcher and every shard — each finishes its in-flight batch
-    /// and already-queued requests are drained, not dropped.
+    /// and already-queued requests are drained, not dropped.  The
+    /// watchdog keeps running until the dispatcher is down (so a shard
+    /// that wedges during the drain still gets replaced and the drain
+    /// completes); a shard still wedged after that is ABANDONED, never
+    /// joined — joining a thread stuck in a hung backend call would
+    /// hang shutdown itself.
     pub fn join(&mut self) {
         self.queue.close();
         if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
-        for h in self.shards.drain(..) {
+        self.watchdog_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.watchdog.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<Option<JoinHandle<()>>> = {
+            let mut hs = lock_recover(&self.handles);
+            hs.iter_mut().map(|h| h.take()).collect()
+        };
+        for (shard, h) in handles.into_iter().enumerate() {
+            let Some(h) = h else { continue };
+            if self.wedged(shard) {
+                crate::warn_!("shard {shard} still wedged at shutdown; \
+                               abandoning its thread");
+                drop(h);
+                continue;
+            }
             let _ = h.join();
         }
     }
@@ -456,82 +659,117 @@ fn dispatch_loop(queue: &RequestQueue, idle_rx: Receiver<usize>,
 /// idle announcement (so the dispatcher routes around it without any
 /// dispatcher-side state), rebuilds its processor through the factory,
 /// sleeps out the cooldown, and re-admits itself as UP.
-#[allow(clippy::too_many_arguments)]
-fn shard_loop<P, F>(shard: usize, mut proc: P, factory: &F,
-                    batch_rx: Receiver<Vec<Envelope>>,
-                    idle_tx: Sender<usize>, queue: &Arc<RequestQueue>,
-                    cfg: &PoolConfig, metrics: &Mutex<ServerMetrics>,
-                    stats: &ShardStats)
+///
+/// `my_gen` is the fencing token this worker was born with (0 for the
+/// original thread, the bumped generation for watchdog replacements).
+/// Every loop edge checks it against the shard's live generation: a
+/// mismatch means the watchdog declared this worker wedged and handed
+/// the shard to a replacement — the zombie exits WITHOUT announcing
+/// idle (the replacement owns that) and without touching counters.
+fn shard_loop<P, F>(ctx: &ShardCtx, mut proc: P, factory: &F, my_gen: u64)
 where
     P: BatchProcessor + 'static,
     F: Fn(usize) -> Result<P>,
 {
+    proc.set_beat(Arc::clone(&ctx.stats.last_beat));
     let mut recent_panics: Vec<Instant> = Vec::new();
     loop {
-        if idle_tx.send(shard).is_err() {
+        if fenced(ctx, my_gen) {
+            return;
+        }
+        if ctx.idle_tx.send(ctx.shard).is_err() {
             break; // dispatcher gone
         }
-        let batch = match batch_rx.recv() {
-            Ok(b) => b,
-            Err(_) => break, // dispatcher gone
+        // the receiver is shared with (potential) replacement workers;
+        // hold its lock only for the recv — the slot machinery, not
+        // this lock, is what serializes generations
+        let batch = {
+            let rx = lock_recover(&ctx.batch_rx);
+            match rx.recv() {
+                Ok(b) => b,
+                Err(_) => break, // dispatcher gone
+            }
         };
-        let panicked = serve_batch(&mut proc, batch, queue, cfg, metrics,
-                                   stats);
+        let panicked = serve_batch(ctx, &mut proc, my_gen, batch);
+        if fenced(ctx, my_gen) {
+            return; // stolen mid-serve: a replacement owns the shard
+        }
         let (compiles, executions) = proc.counters();
-        stats.compiles.store(compiles, Ordering::Relaxed);
-        stats.executions.store(executions, Ordering::Relaxed);
+        ctx.stats.compiles.store(compiles, Ordering::Relaxed);
+        ctx.stats.executions.store(executions, Ordering::Relaxed);
         if !panicked {
             continue;
         }
-        stats.panics.fetch_add(1, Ordering::Relaxed);
+        ctx.stats.panics.fetch_add(1, Ordering::Relaxed);
         let now = Instant::now();
         recent_panics.push(now);
         recent_panics.retain(|t| now.duration_since(*t)
-                             <= cfg.quarantine_window);
-        if cfg.quarantine_failures == 0
-            || recent_panics.len() < cfg.quarantine_failures as usize {
+                             <= ctx.cfg.quarantine_window);
+        if ctx.cfg.quarantine_failures == 0
+            || recent_panics.len() < ctx.cfg.quarantine_failures as usize {
             continue;
         }
         // quarantine: this shard stops announcing idle, so the
         // dispatcher simply never routes to it while we recover
-        crate::warn_!("shard {shard} quarantined after {} panics in \
+        crate::warn_!("shard {} quarantined after {} panics in \
                        {:?}; rebuilding backend",
-                      recent_panics.len(), cfg.quarantine_window);
-        stats.quarantines.fetch_add(1, Ordering::Relaxed);
-        stats.state.store(SHARD_QUARANTINED, Ordering::Relaxed);
+                      ctx.shard, recent_panics.len(),
+                      ctx.cfg.quarantine_window);
+        ctx.stats.quarantines.fetch_add(1, Ordering::Relaxed);
+        ctx.stats.state.store(SHARD_QUARANTINED, Ordering::Relaxed);
         recent_panics.clear();
-        std::thread::sleep(cfg.quarantine_cooldown);
-        loop {
-            match factory(shard) {
-                Ok(p) => {
-                    proc = p;
-                    break;
+        std::thread::sleep(ctx.cfg.quarantine_cooldown);
+        match rebuild_processor(ctx, factory) {
+            Some(p) => proc = p,
+            None => return, // shutdown mid-rebuild
+        }
+        proc.set_beat(Arc::clone(&ctx.stats.last_beat));
+        ctx.stats.state.store(SHARD_UP, Ordering::Relaxed);
+        crate::info!("shard {} re-admitted after quarantine", ctx.shard);
+    }
+}
+
+/// Rebuild a shard's processor through its factory, retrying with
+/// cooldown sleeps until it succeeds; `None` means shutdown was
+/// detected (dead dispatcher → disconnected batch channel) and the
+/// caller should exit instead.
+fn rebuild_processor<P, F>(ctx: &ShardCtx, factory: &F) -> Option<P>
+where
+    P: BatchProcessor + 'static,
+    F: Fn(usize) -> Result<P>,
+{
+    loop {
+        match factory(ctx.shard) {
+            Ok(p) => return Some(p),
+            Err(e) => {
+                crate::warn_!("shard {} rebuild failed: {e:#}; \
+                               retrying after cooldown", ctx.shard);
+                let disconnected = matches!(
+                    lock_recover(&ctx.batch_rx).try_recv(),
+                    Err(TryRecvError::Disconnected));
+                if disconnected {
+                    return None;
                 }
-                Err(e) => {
-                    crate::warn_!("shard {shard} rebuild failed: {e:#}; \
-                                   retrying after cooldown");
-                    // a dead dispatcher means shutdown: stop rebuilding
-                    if matches!(batch_rx.try_recv(),
-                                Err(TryRecvError::Disconnected)) {
-                        return;
-                    }
-                    std::thread::sleep(cfg.quarantine_cooldown);
-                }
+                std::thread::sleep(ctx.cfg.quarantine_cooldown);
             }
         }
-        stats.state.store(SHARD_UP, Ordering::Relaxed);
-        crate::info!("shard {shard} re-admitted after quarantine");
     }
 }
 
 /// Serve one dispatched batch.  Returns true when the processor
 /// PANICKED (the shard's quarantine accounting input); orderly errors
 /// return false.
-fn serve_batch<P: BatchProcessor>(proc: &mut P, batch: Vec<Envelope>,
-                                  queue: &Arc<RequestQueue>,
-                                  cfg: &PoolConfig,
-                                  metrics: &Mutex<ServerMetrics>,
-                                  stats: &ShardStats) -> bool {
+///
+/// The reply envelopes live in the shard's shared in-flight slot for
+/// the whole batch: every resolution — a clip or typed-error emission,
+/// end-of-batch failure handling, or the watchdog's steal — TAKES the
+/// envelope out under the slot lock and delivers outside it, so each
+/// request resolves exactly once no matter which thread gets there
+/// first.
+fn serve_batch<P: BatchProcessor>(ctx: &ShardCtx, proc: &mut P,
+                                  my_gen: u64, batch: Vec<Envelope>)
+                                  -> bool {
+    let metrics = &*ctx.metrics;
     // cancel fast path: a batch whose every consumer is gone is pure
     // dead work — release the shard slot without touching the engine
     if batch.iter().all(|e| e.reply.is_cancelled()) {
@@ -543,22 +781,56 @@ fn serve_batch<P: BatchProcessor>(proc: &mut P, batch: Vec<Envelope>,
     }
     let reqs: Vec<GenRequest> =
         batch.iter().map(|e| e.request.clone()).collect();
+    let n = batch.len();
+    // register the batch in the slot and stamp the batch-start beat in
+    // ONE critical section, so the watchdog can never observe an
+    // active batch without a fresh heartbeat behind it
+    {
+        let mut inf = lock_recover(&ctx.inflight);
+        if fenced(ctx, my_gen) {
+            // fenced between recv and registration — a replacement
+            // owns the shard; treat the whole batch as stalled work
+            // (retryable) rather than serving under a dead generation
+            drop(inf);
+            resolve_failed(ctx, batch,
+                           &ServeError::shard_stalled(
+                               "batch landed on a fenced shard worker"));
+            return false;
+        }
+        inf.gen = my_gen;
+        inf.envs = batch.into_iter().map(Some).collect();
+        inf.active = true;
+        ctx.stats.beat();
+    }
     let t0 = Instant::now();
     // delivery bookkeeping lives OUTSIDE the catch_unwind closure so a
     // mid-batch panic still knows which requests were already served
-    let mut delivered = vec![false; batch.len()];
+    let mut delivered = vec![false; n];
+    let mut served = 0usize;
     // a panicking processor must not take the whole shard down: turn
     // the panic into per-request errors and keep serving.  Requests
     // emitted before the panic keep their (already delivered) clips.
     let outcome = {
         let delivered = &mut delivered;
-        let batch = &batch;
+        let served = &mut served;
         let mut emitted = 0usize;
         let mut next_invocation_start = 0usize;
         catch_unwind(AssertUnwindSafe(move || {
             let mut emit = |i: usize,
                             result: Result<Tensor, ServeError>,
                             rm: RequestMetrics| {
+                if i >= n || delivered[i] {
+                    crate::warn_!("processor emitted bogus index {i} for \
+                                   a batch of {n}");
+                    return;
+                }
+                let Some(env) = take_env(ctx, my_gen, i) else {
+                    // the watchdog stole this envelope (and already
+                    // failed it): the emission is a fenced no-op
+                    return;
+                };
+                delivered[i] = true;
+                *served += 1;
                 // one record per ENGINE INVOCATION: the batch-size
                 // planner may split a dispatched batch into
                 // sub-batches, each with its own compute_ms —
@@ -574,25 +846,23 @@ fn serve_batch<P: BatchProcessor>(proc: &mut P, batch: Vec<Envelope>,
                     next_invocation_start += rm.batch_size.max(1);
                 }
                 emitted += 1;
-                if i >= batch.len() || delivered[i] {
-                    crate::warn_!("processor emitted bogus index {i} for \
-                                   a batch of {}", batch.len());
-                    return;
-                }
                 match result {
-                    Ok(clip) => deliver(&batch[i], clip, rm, metrics),
-                    Err(err) => deliver_error(&batch[i], err, metrics),
+                    Ok(clip) => deliver(&env, clip, rm, metrics),
+                    Err(err) => deliver_error(&env, err, metrics),
                 }
-                delivered[i] = true;
             };
             proc.process_streaming(&reqs, &mut emit)
         }))
     };
     let elapsed = t0.elapsed();
-    stats.busy_us.fetch_add(elapsed.as_micros() as u64, Ordering::Relaxed);
+    ctx.stats.busy_us.fetch_add(elapsed.as_micros() as u64,
+                                Ordering::Relaxed);
+    // empty when every request was emitted — or when the watchdog
+    // fenced us and owns whatever was left
+    let leftover = take_remaining(ctx, my_gen);
     let (failure, panicked) = match outcome {
         Ok(Ok(())) => {
-            if delivered.iter().all(|d| *d) {
+            if leftover.is_empty() {
                 (None, false)
             } else {
                 (Some(ServeError::shard_fatal(
@@ -612,40 +882,183 @@ fn serve_batch<P: BatchProcessor>(proc: &mut P, batch: Vec<Envelope>,
              true)
         }
     };
-    let served = delivered.iter().filter(|d| **d).count();
     if served > 0 {
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        stats.requests.fetch_add(served as u64, Ordering::Relaxed);
+        ctx.stats.batches.fetch_add(1, Ordering::Relaxed);
+        ctx.stats.requests.fetch_add(served as u64, Ordering::Relaxed);
     }
     if let Some(err) = failure {
-        let retryable = err.retryable();
-        for (env, done) in batch.into_iter().zip(&delivered) {
-            if *done {
-                continue;
-            }
-            if retryable {
-                retry_or_fail(env, queue, cfg, metrics);
-            } else {
-                ServerMetrics::lock(metrics).record_failed();
-                env.reply.fail(err.clone());
-            }
-        }
+        resolve_failed(ctx, leftover, &err);
     }
     panicked
 }
 
-/// A shard-panic survivor: requeue it with jittered backoff if budget
-/// remains, else fail it terminally.  The backoff sleep happens on a
-/// short-lived helper thread so the shard itself is never blocked.
+/// Take request `i`'s envelope out of the in-flight slot, if
+/// generation `my_gen` still owns it.  `None` means it was already
+/// resolved or the watchdog stole it — either way the caller's
+/// delivery must become a no-op.
+fn take_env(ctx: &ShardCtx, my_gen: u64, i: usize) -> Option<Envelope> {
+    let mut inf = lock_recover(&ctx.inflight);
+    if inf.gen != my_gen || fenced(ctx, my_gen) {
+        return None;
+    }
+    inf.envs.get_mut(i).and_then(|e| e.take())
+}
+
+/// End-of-batch cleanup for generation `my_gen`: take every envelope
+/// still unresolved and deactivate the slot.  Returns empty when the
+/// watchdog fenced this generation — it stole the leftovers and owns
+/// their resolution.
+fn take_remaining(ctx: &ShardCtx, my_gen: u64) -> Vec<Envelope> {
+    let mut inf = lock_recover(&ctx.inflight);
+    if inf.gen != my_gen || fenced(ctx, my_gen) {
+        return Vec::new();
+    }
+    inf.active = false;
+    inf.envs.iter_mut().filter_map(|e| e.take()).collect()
+}
+
+/// Resolve a set of undelivered envelopes with `err`: consumers that
+/// already cancelled are recorded as cancellations (never requeued —
+/// nobody is listening), retryable failures re-enter the queue within
+/// the retry budget, and everything else fails terminally.
+fn resolve_failed(ctx: &ShardCtx, envs: Vec<Envelope>, err: &ServeError) {
+    let retryable = err.retryable();
+    for env in envs {
+        if env.reply.is_cancelled() {
+            ServerMetrics::lock(&ctx.metrics).record_cancelled_stream();
+        } else if retryable {
+            retry_or_fail(env, &ctx.queue, &ctx.cfg, &ctx.metrics, err);
+        } else {
+            ServerMetrics::lock(&ctx.metrics).record_failed();
+            env.reply.fail(err.clone());
+        }
+    }
+}
+
+/// The pool supervisor: polls every shard's heartbeat and, when a
+/// shard with an in-flight batch stops beating past `threshold`,
+/// fences the wedged worker, fails its stolen work as retryable
+/// [`ServeError::ShardStalled`], and brings up a replacement through
+/// the factory.  The wedged thread is abandoned, never joined.
+fn watchdog_loop<P, F>(ctxs: &[ShardCtx], factory: &F,
+                       handles: &Mutex<Vec<Option<JoinHandle<()>>>>,
+                       stop: &AtomicBool, threshold: Duration)
+where
+    P: BatchProcessor + 'static,
+    F: Fn(usize) -> Result<P> + Clone + Send + 'static,
+{
+    let poll = (threshold / 4).clamp(Duration::from_millis(10),
+                                     Duration::from_millis(250));
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(poll);
+        for ctx in ctxs {
+            let Some(stolen) = steal_if_stalled(ctx, threshold) else {
+                continue;
+            };
+            let new_gen = ctx.stats.generation.load(Ordering::Relaxed);
+            crate::warn_!("watchdog: shard {} stalled (no beat for over \
+                           {} ms); fencing generation {} and spawning \
+                           replacement",
+                          ctx.shard, threshold.as_millis(), new_gen - 1);
+            resolve_failed(ctx, stolen, &ServeError::shard_stalled(
+                format!("no progress beat for over {} ms",
+                        threshold.as_millis())));
+            let replacement =
+                spawn_replacement(ctx.clone(), factory.clone(), new_gen);
+            // swapping the handle out drops the wedged thread's handle:
+            // the zombie is detached and reaped at process exit
+            lock_recover(handles)[ctx.shard] = replacement;
+        }
+    }
+}
+
+/// The trip condition and the fence, in ONE critical section on the
+/// slot lock: if the shard has an in-flight batch of the current
+/// generation whose heartbeat has gone stale past `threshold`, bump
+/// the generation (revoking the wedged worker — any later emission or
+/// cleanup of its generation no-ops), steal the unresolved envelopes,
+/// and deactivate the slot.  `None` = healthy.
+fn steal_if_stalled(ctx: &ShardCtx, threshold: Duration)
+                    -> Option<Vec<Envelope>> {
+    let mut inf = lock_recover(&ctx.inflight);
+    let cur = ctx.stats.generation.load(Ordering::Relaxed);
+    if !inf.active || inf.gen != cur {
+        return None;
+    }
+    let stale = match ctx.stats.beat_age_ms() {
+        Some(age) => age > threshold.as_millis() as u64,
+        None => false,
+    };
+    if !stale {
+        return None;
+    }
+    ctx.stats.generation.store(cur + 1, Ordering::Relaxed);
+    ctx.stats.stalls.fetch_add(1, Ordering::Relaxed);
+    ctx.stats.quarantines.fetch_add(1, Ordering::Relaxed);
+    ctx.stats.state.store(SHARD_QUARANTINED, Ordering::Relaxed);
+    inf.active = false;
+    Some(inf.envs.iter_mut().filter_map(|e| e.take()).collect())
+}
+
+/// Bring up a replacement worker for a fenced shard: cooldown, rebuild
+/// through the factory (retrying like the quarantine path), then run
+/// the normal shard loop under the new generation.  The replacement is
+/// tracked in the pool's handle table so shutdown joins it like any
+/// other shard.
+fn spawn_replacement<P, F>(ctx: ShardCtx, factory: F, my_gen: u64)
+                           -> Option<JoinHandle<()>>
+where
+    P: BatchProcessor + 'static,
+    F: Fn(usize) -> Result<P> + Clone + Send + 'static,
+{
+    let shard = ctx.shard;
+    std::thread::Builder::new()
+        .name(format!("sla2-shard-{shard}-g{my_gen}"))
+        .spawn(move || {
+            std::thread::sleep(ctx.cfg.quarantine_cooldown);
+            let proc = match rebuild_processor(&ctx, &factory) {
+                Some(p) => p,
+                None => return, // shutdown mid-rebuild
+            };
+            ctx.stats.beat();
+            ctx.stats.state.store(SHARD_UP, Ordering::Relaxed);
+            crate::info!("shard {} replacement up (generation {})",
+                         ctx.shard, my_gen);
+            shard_loop(&ctx, proc, &factory, my_gen);
+            crate::info!("shard {} generation {} shut down",
+                         ctx.shard, my_gen);
+        })
+        .map_err(|e| {
+            crate::warn_!("shard {shard} replacement thread failed to \
+                           spawn: {e}");
+        })
+        .ok()
+}
+
+/// A retryable-failure survivor (shard panic or watchdog stall):
+/// requeue it with jittered backoff if budget remains, else fail it
+/// terminally with a typed error matching `cause`.  The backoff sleep
+/// happens on a short-lived helper thread so the shard itself is never
+/// blocked.
 fn retry_or_fail(mut env: Envelope, queue: &Arc<RequestQueue>,
-                 cfg: &PoolConfig, metrics: &Mutex<ServerMetrics>) {
+                 cfg: &PoolConfig, metrics: &Mutex<ServerMetrics>,
+                 cause: &ServeError) {
     if env.request.retries >= cfg.retry_budget {
+        let attempts = env.request.retries + 1;
         ServerMetrics::lock(metrics).record_failed();
-        env.reply.fail(ServeError::ShardFailed {
-            retryable: false,
-            reason: format!("batch processor panicked; retry budget \
-                             exhausted after {} attempts",
-                            env.request.retries + 1),
+        env.reply.fail(match cause {
+            // keep the stall typed all the way to the terminal error
+            // so clients can tell "your shard kept wedging" from
+            // "your batch kept crashing"
+            ServeError::ShardStalled { .. } => ServeError::ShardStalled {
+                reason: format!("shard stalled; retry budget exhausted \
+                                 after {attempts} attempts"),
+            },
+            _ => ServeError::ShardFailed {
+                retryable: false,
+                reason: format!("batch processor panicked; retry budget \
+                                 exhausted after {attempts} attempts"),
+            },
         });
         return;
     }

@@ -29,6 +29,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::error::ServeError;
+use super::pool::lock_recover;
 use super::request::{Envelope, GenRequest};
 
 /// Upper bound on consecutive cost-aware bypasses.  After this many
@@ -211,7 +212,7 @@ impl RequestQueue {
     /// path's requirement: every request resolves exactly once).
     pub fn push_or_return(&self, env: Envelope)
                           -> Result<(), (Envelope, QueueError)> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         if g.closed {
             return Err((env, QueueError::Closed));
         }
@@ -234,7 +235,7 @@ impl RequestQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len
+        lock_recover(&self.inner).len
     }
 
     pub fn is_empty(&self) -> bool {
@@ -244,7 +245,7 @@ impl RequestQueue {
     /// Pending depth per class, sorted by key — the per-class gauge
     /// `ServerMetrics::snapshot` reports.
     pub fn class_depths(&self) -> Vec<(ClassKey, usize)> {
-        let g = self.inner.lock().unwrap();
+        let g = lock_recover(&self.inner);
         let mut v: Vec<(ClassKey, usize)> = g.buckets.iter()
             .filter(|b| !b.items.is_empty())
             .map(|b| (b.key.clone(), b.items.len()))
@@ -272,7 +273,7 @@ impl RequestQueue {
     /// with the same period regardless of backlog.
     pub fn admission(&self, shed_watermark: f64, work_watermark: f64)
                      -> AdmissionState {
-        let g = self.inner.lock().unwrap();
+        let g = lock_recover(&self.inner);
         let depth = g.len;
         let estimated_work: f64 = g.buckets.iter()
             .map(|b| b.items.len() as f64 * b.key.cost())
@@ -294,7 +295,7 @@ impl RequestQueue {
     }
 
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_recover(&self.inner).closed = true;
         self.cv.notify_all();
     }
 
@@ -314,7 +315,7 @@ impl RequestQueue {
     pub fn pop_batch(&self, max_batch: usize, wait: Duration,
                      window: Duration) -> Option<Vec<Envelope>> {
         let deadline = Instant::now() + wait;
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         while g.len == 0 {
             if g.closed {
                 return None;
@@ -323,7 +324,8 @@ impl RequestQueue {
             if now >= deadline {
                 return Some(Vec::new()); // timeout, no work
             }
-            let (ng, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            let (ng, _) = self.cv.wait_timeout(g, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
             g = ng;
         }
         // batch window: give stragglers a chance to coalesce
@@ -334,17 +336,23 @@ impl RequestQueue {
                 if now >= wdeadline {
                     break;
                 }
-                let (ng, _) =
-                    self.cv.wait_timeout(g, wdeadline - now).unwrap();
+                let (ng, _) = self.cv.wait_timeout(g, wdeadline - now)
+                    .unwrap_or_else(|p| p.into_inner());
                 g = ng;
             }
         }
-        let bi = self.schedule(&mut g).expect("non-empty queue");
+        // `schedule` only returns None on an empty queue, which the
+        // loop above rules out — but an empty batch is the safe answer
+        let Some(bi) = self.schedule(&mut g) else {
+            return Some(Vec::new());
+        };
         let take = g.buckets[bi].items.len().min(max_batch.max(1));
         let mut batch = Vec::with_capacity(take);
-        for _ in 0..take {
-            let (_, env) = g.buckets[bi].items.pop_front().expect("take");
-            batch.push(env);
+        while batch.len() < take {
+            match g.buckets[bi].items.pop_front() {
+                Some((_, env)) => batch.push(env),
+                None => break,
+            }
         }
         if g.buckets[bi].items.is_empty() {
             g.buckets.swap_remove(bi);
@@ -403,8 +411,7 @@ impl RequestQueue {
                 (waited >= bypass_threshold)
                     .then_some((i, b.key.cost(), *seq))
             })
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()
-                .then(a.2.cmp(&b.2)))
+            .min_by(|a, b| a.1.total_cmp(&b.1).then(a.2.cmp(&b.2)))
             .map(|(i, _, _)| i);
         match jump {
             Some(i) => {
@@ -420,6 +427,7 @@ impl RequestQueue {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::coordinator::request::{GenRequest, GenResponse};

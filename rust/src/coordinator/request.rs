@@ -172,6 +172,7 @@ impl std::fmt::Debug for Envelope {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

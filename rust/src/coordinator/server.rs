@@ -18,10 +18,10 @@
 //! step down the sparsity-tier cost ladder instead of being turned
 //! away.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -73,17 +73,35 @@ pub struct Gateway {
     metrics: Arc<Mutex<ServerMetrics>>,
     next_id: AtomicU64,
     serve: ServeConfig,
+    /// drain latch: once set, every new submission is rejected with a
+    /// typed [`ServeError::ShuttingDown`] while in-flight work runs to
+    /// completion.  Shared with the metrics snapshot (health section)
+    /// and the TCP frontend (goaway frames).
+    draining: Arc<AtomicBool>,
 }
 
 impl Gateway {
     pub fn new(queue: Arc<RequestQueue>,
                metrics: Arc<Mutex<ServerMetrics>>,
                serve: ServeConfig) -> Gateway {
-        Gateway { queue, metrics, next_id: AtomicU64::new(1), serve }
+        let draining = Arc::new(AtomicBool::new(false));
+        ServerMetrics::lock(&metrics).attach_health(Arc::clone(&draining));
+        Gateway { queue, metrics, next_id: AtomicU64::new(1), serve,
+                  draining }
     }
 
     pub fn serve_config(&self) -> &ServeConfig {
         &self.serve
+    }
+
+    /// Flip admission to draining (idempotent): new work is rejected
+    /// with [`ServeError::ShuttingDown`], in-flight work keeps going.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed)
     }
 
     /// Admission decision for one request: `Ok(None)` = admit on the
@@ -93,6 +111,10 @@ impl Gateway {
     /// everything — the queue's own capacity is then the only limit.
     fn admit(&self, tier: &str, allow_degrade: bool)
              -> Result<Option<String>, ServeError> {
+        if self.draining.load(Ordering::Relaxed) {
+            ServerMetrics::lock(&self.metrics).rejected += 1;
+            return Err(ServeError::ShuttingDown);
+        }
         let adm = self.queue.admission(self.serve.shed_watermark,
                                        self.serve.work_watermark);
         if !adm.overloaded {
@@ -286,6 +308,8 @@ impl Server {
                 Duration::from_millis(serve.quarantine_window_ms),
             quarantine_cooldown:
                 Duration::from_millis(serve.quarantine_cooldown_ms),
+            stall_threshold:
+                Duration::from_millis(serve.stall_threshold_ms),
         };
         let dir = artifacts_dir.to_string();
         let cfg = serve.clone();
@@ -383,6 +407,55 @@ impl Server {
         self.net.as_ref().map(|n| n.local_addr())
     }
 
+    /// Whether admission has been flipped to `shutting_down` — set by
+    /// [`Server::drain`] or the wire `drain` verb.  The serve loop
+    /// polls this so a remote drain request triggers the full local
+    /// drain-and-exit sequence.
+    pub fn is_draining(&self) -> bool {
+        self.gateway.is_draining()
+    }
+
+    /// Graceful drain: flip admission to [`ServeError::ShuttingDown`]
+    /// (the TCP frontend additionally sends `goaway` to idle
+    /// connections), then wait — up to `ServeConfig::drain_timeout_ms`
+    /// — for the queue to empty and every shard to finish its
+    /// in-flight batch.  Returns true when everything completed inside
+    /// the window; false means the timeout fired with work still in
+    /// flight (callers normally proceed to [`Server::shutdown`], which
+    /// still drains queued work but blocks until it is done).
+    ///
+    /// Open [`ClipStream`]s are not cut off: their in-flight clips
+    /// finish streaming and every stream ends with its normal terminal
+    /// frame (final chunk or typed error) before this returns true.
+    pub fn drain(&self) -> bool {
+        self.gateway.begin_drain();
+        if let Some(n) = &self.net {
+            n.announce_drain();
+        }
+        crate::info!("drain: admission closed; waiting for in-flight \
+                      work (timeout {} ms)",
+                     self.gateway.serve.drain_timeout_ms);
+        let timeout =
+            Duration::from_millis(self.gateway.serve.drain_timeout_ms);
+        let t0 = Instant::now();
+        loop {
+            let quiesced = self.gateway.pending() == 0
+                && self.pool.as_ref()
+                    .map(|p| p.in_flight() == 0)
+                    .unwrap_or(true);
+            if quiesced {
+                crate::info!("drain complete in {:?}", t0.elapsed());
+                return true;
+            }
+            if t0.elapsed() >= timeout {
+                crate::warn_!("drain timeout after {timeout:?} with \
+                               work still in flight");
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
     /// Graceful shutdown: stop accepting connections, close the
     /// queue, then join the dispatcher and every shard (each finishes
     /// its in-flight batch first).
@@ -408,6 +481,7 @@ impl Drop for Server {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -472,6 +546,25 @@ mod tests {
         assert_eq!(degrade_tier("s95"), Some("s97"));
         assert_eq!(degrade_tier("s97"), None);
         assert_eq!(degrade_tier("mystery"), None);
+    }
+
+    #[test]
+    fn drain_rejects_new_work_with_typed_shutting_down() {
+        let g = gateway_with(4, ServeConfig::default());
+        assert!(g.submit(0, 1, 4, "s90").is_ok());
+        assert!(!g.is_draining());
+        g.begin_drain();
+        g.begin_drain(); // idempotent
+        assert!(g.is_draining());
+        let err = g.submit(0, 2, 4, "s90").unwrap_err();
+        assert_eq!(err.code(), "shutting_down");
+        assert!(!err.retryable());
+        // already-queued work is untouched by the admission flip
+        assert_eq!(g.pending(), 1);
+        let snap = g.metrics_snapshot();
+        let health = snap.get("health").unwrap();
+        assert!(health.get("draining").unwrap().as_bool().unwrap());
+        assert!(!health.get("ready").unwrap().as_bool().unwrap());
     }
 
     #[test]

@@ -295,7 +295,9 @@ pub fn assemble_response(id: u64, chunks: Vec<ClipChunk>)
     if chunks.len() == 1 {
         // single whole-clip chunk (the one-shot wrapper's shape):
         // validate and move the tensor out without copying it
-        let c = chunks.into_iter().next().unwrap();
+        let Some(c) = chunks.into_iter().next() else {
+            anyhow::bail!("stream ended before any chunk");
+        };
         anyhow::ensure!(c.id == id, "chunk for request {} on stream {id}",
                         c.id);
         anyhow::ensure!(c.seq == 0 && c.frame_start == 0
@@ -333,11 +335,14 @@ pub fn assemble_response(id: u64, chunks: Vec<ClipChunk>)
                     "incomplete clip: {cursor} of {total} frames");
     let mut shape = vec![total];
     shape.extend_from_slice(&inner);
-    let metrics = chunks.last().unwrap().metrics.clone();
+    let metrics = chunks.last()
+        .context("stream ended before any chunk")?
+        .metrics.clone();
     Ok(GenResponse { id, clip: Tensor::from_f32(&shape, data)?, metrics })
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::rng::Pcg32;

@@ -11,6 +11,8 @@
 //!   costmodel                 print the paper-calibrated Fig.4/Fig.5
 //!                             curves without touching PJRT
 
+use std::sync::atomic::{AtomicBool, Ordering};
+
 use anyhow::Result;
 
 use sla2::config::{ServeConfig, TrainConfig};
@@ -54,8 +56,23 @@ fault tolerance (every serving command; docs/ARCHITECTURE.md):
                             --quarantine-cooldown-ms (K=0 disables)
   --fault-plan SPEC         deterministic fault injection, e.g.
                             \"panic:shard=1:nth=3,slow:ms=200:rate=0.1,\
-drop-conn:rate=0.05\" (see util::faults)
+drop-conn:rate=0.05,hang:shard=0:nth=2\" (see util::faults)
   --fault-seed S            RNG seed for the plan's rate draws
+
+liveness (every serving command; docs/ARCHITECTURE.md):
+  --stall-threshold-ms N    watchdog: a shard whose progress beat is
+                            older than N ms is fenced, its batch
+                            failed with retryable shard_stalled, and a
+                            replacement worker spawned (0 = off)
+  --drain-timeout-ms N      graceful-drain budget used by SIGTERM /
+                            ctrl-c / the wire `drain` verb (default
+                            5000)
+  --net-send-queue N        per-connection bounded outbound frame
+                            queue (default 64)
+  --write-stall-ms N        a client that keeps its outbound queue
+                            full this long is declared slow: its
+                            streams are cancelled and the connection
+                            dropped (default 2000)
 
 commands:
   info          show manifest contents and runtime platform
@@ -160,7 +177,36 @@ fn serve_demo(artifacts: &str, args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Network serving: bind the TCP frontend and block.
+/// Process shutdown latch: set by SIGINT/SIGTERM, polled by the
+/// serve-net loop.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Install SIGINT/SIGTERM handlers that flip [`SHUTDOWN`].  The crate
+/// deliberately carries no libc dependency, so this binds the classic
+/// `signal(2)` entry point directly — a store to a static atomic is
+/// async-signal-safe, and the serve loop does the actual work.
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    extern "C" fn on_signal(_sig: i32) {
+        SHUTDOWN.store(true, Ordering::Relaxed);
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+/// Network serving: bind the TCP frontend and serve until SIGTERM /
+/// ctrl-c / a wire `drain` verb / `--duration-s`, then drain
+/// gracefully and exit.
 /// `sla2 serve-net --listen-addr 127.0.0.1:7341 --model dit-tiny`
 fn serve_net(artifacts: &str, args: &Args) -> Result<()> {
     let mut serve = ServeConfig::from_args(args);
@@ -172,13 +218,32 @@ fn serve_net(artifacts: &str, args: &Args) -> Result<()> {
     println!("serving on {addr} — try:");
     println!("  cargo run --release --bin sla2-stream-client -- \
               --addr {addr} --steps 4");
+    install_signal_handlers();
     let duration_s = args.u64("duration-s", 0);
-    if duration_s == 0 {
-        loop {
-            std::thread::sleep(std::time::Duration::from_secs(3600));
+    let deadline = (duration_s > 0).then(|| {
+        std::time::Instant::now()
+            + std::time::Duration::from_secs(duration_s)
+    });
+    loop {
+        if SHUTDOWN.load(Ordering::Relaxed) {
+            println!("signal received; draining");
+            break;
         }
+        if server.is_draining() {
+            // a client sent the `drain` verb: finish the job locally
+            println!("drain requested over the wire");
+            break;
+        }
+        if deadline.is_some_and(|d| std::time::Instant::now() >= d) {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(200));
     }
-    std::thread::sleep(std::time::Duration::from_secs(duration_s));
+    if server.drain() {
+        println!("drain complete");
+    } else {
+        println!("drain timed out with work still in flight");
+    }
     println!("{}", server.metrics_snapshot());
     server.shutdown();
     Ok(())

@@ -163,9 +163,18 @@ impl ComputeBackend for FaultyBackend {
                 panic!("injected fault: panic at execute site");
             }
             FaultAction::Slow(d) => std::thread::sleep(d),
-            // drop-conn clauses never reach an execute-site injector
+            // a wedged execute: stall forever.  The thread is
+            // unrecoverable by design — the pool's watchdog detects
+            // the stale heartbeat, fences this shard's generation and
+            // abandons the thread, so the loop never returns.
+            FaultAction::Hang => loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            },
+            // net-site clauses never reach an execute-site injector
             // (the plan parser pins them to the net site)
-            FaultAction::DropConn | FaultAction::None => {}
+            FaultAction::DropConn
+            | FaultAction::SlowClient(_)
+            | FaultAction::None => {}
         }
         self.inner.execute(variant, tier, x, ts, ys)
     }

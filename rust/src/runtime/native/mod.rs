@@ -71,6 +71,10 @@ pub struct NativeKernelStats {
     pub sparse_tiles: AtomicU64,
     /// tiles routed to the linear branch
     pub linear_tiles: AtomicU64,
+    /// executes rejected because a sample's output contained NaN/Inf
+    /// (the numerical-integrity guard turning garbage into a typed
+    /// shard failure instead of streaming it to a client)
+    pub nonfinite_outputs: AtomicU64,
 }
 
 impl NativeKernelStats {
@@ -86,6 +90,7 @@ impl NativeKernelStats {
             .push("sim_heads", g(&self.sim_heads))
             .push("sparse_tiles", g(&self.sparse_tiles))
             .push("linear_tiles", g(&self.linear_tiles))
+            .push("nonfinite_outputs", g(&self.nonfinite_outputs))
     }
 
     /// Achieved block sparsity across every routed tile so far.
@@ -282,8 +287,22 @@ impl ComputeBackend for NativeBackend {
                                         yss[0], mode, true)]
         };
         let mut data = Vec::with_capacity(b * clip_len);
-        for o in outs {
-            data.extend(o?);
+        for (i, o) in outs.into_iter().enumerate() {
+            let o = o?;
+            // numerical-integrity guard: never hand garbage up the
+            // stack — a NaN/Inf velocity would silently poison the
+            // Euler integration and stream a corrupt clip to the
+            // client.  Failing the execute turns it into an orderly,
+            // contained shard failure instead.
+            if let Some(bad) = o.iter().find(|v| !v.is_finite()) {
+                KERNEL_STATS.nonfinite_outputs
+                    .fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!(
+                    "non-finite output ({bad}) in sample {i} of \
+                     {variant}/{tier} execute (batch {b}): refusing to \
+                     emit a corrupt clip");
+            }
+            data.extend(o);
         }
         let mut shape = vec![b];
         shape.extend_from_slice(&cfg.video);
@@ -386,6 +405,30 @@ mod tests {
                            [i * clip_len..(i + 1) * clip_len],
                        "sample {i} diverged between batch sizes");
         }
+    }
+
+    #[test]
+    fn nonfinite_outputs_fail_the_execute_and_bump_the_counter() {
+        let b = NativeBackend::load("/nonexistent", "dit-tiny").unwrap();
+        let cfg = b.model().clone();
+        // a NaN in the input latent propagates through the forward
+        // (patch embed -> attention -> residuals), so the output
+        // contains NaN and the guard must refuse to emit it
+        let mut x = Tensor::zeros(&[1, cfg.video[0], cfg.video[1],
+                                    cfg.video[2], cfg.video[3]]);
+        x.f32s_mut().unwrap()[0] = f32::NAN;
+        let ts = Tensor::from_f32(&[1], vec![0.5]).unwrap();
+        let ys = Tensor::from_i32(&[1], vec![1]).unwrap();
+        let before = stats().nonfinite_outputs.load(Ordering::Relaxed);
+        let err = b.execute("sla2", "s90", &x, &ts, &ys).unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"),
+                "unexpected error: {err:#}");
+        assert!(stats().nonfinite_outputs.load(Ordering::Relaxed)
+                > before);
+        // a clean latent on the same backend still serves
+        let ok = Tensor::zeros(&[1, cfg.video[0], cfg.video[1],
+                                 cfg.video[2], cfg.video[3]]);
+        assert!(b.execute("sla2", "s90", &ok, &ts, &ys).is_ok());
     }
 
     #[test]

@@ -10,11 +10,13 @@
 //! Comma-separated fault clauses; each clause is a kind followed by
 //! `key=value` modifiers:
 //!
-//! | kind        | site            | modifiers                          |
-//! |-------------|-----------------|------------------------------------|
-//! | `panic`     | backend execute | `shard=K` (only shard K), `nth=N` (the N-th execute at that site, 1-based), `rate=P` (each execute, prob P) |
-//! | `slow`      | backend execute | `ms=D` (sleep D ms; required), plus `shard`/`nth`/`rate` |
-//! | `drop-conn` | net framing     | `nth=N`, `rate=P`                  |
+//! | kind          | site            | modifiers                          |
+//! |---------------|-----------------|------------------------------------|
+//! | `panic`       | backend execute | `shard=K` (only shard K), `nth=N` (the N-th execute at that site, 1-based), `rate=P` (each execute, prob P) |
+//! | `slow`        | backend execute | `ms=D` (sleep D ms; required), plus `shard`/`nth`/`rate` |
+//! | `hang`        | backend execute | `shard`/`nth`/`rate` — stall INDEFINITELY (not a bounded `slow`); only the watchdog's fenced replacement recovers the shard |
+//! | `drop-conn`   | net framing     | `nth=N`, `rate=P`                  |
+//! | `slow-client` | net writer      | `ms=D` (stall the connection writer D ms; required), plus `nth`/`rate` — models a slow-loris client that stops draining its socket |
 //!
 //! A clause with neither `nth` nor `rate` fires on EVERY event at its
 //! site.  Determinism: every probabilistic draw comes from a
@@ -38,8 +40,15 @@ pub enum FaultAction {
     Panic,
     /// sleep this long, then proceed
     Slow(Duration),
+    /// stall indefinitely (execute site only) — the injected analogue
+    /// of a wedged PJRT call; recovery is the watchdog's job, not the
+    /// injector's
+    Hang,
     /// drop the connection (net framing site only)
     DropConn,
+    /// stall the connection's WRITER this long (net site only) — a
+    /// slow-loris client that stops draining its socket
+    SlowClient(Duration),
 }
 
 /// Where a fault clause applies.
@@ -66,7 +75,9 @@ struct Clause {
 enum ClauseAction {
     Panic,
     Slow(u64),
+    Hang,
     DropConn,
+    SlowClient(u64),
 }
 
 /// A parsed fault plan plus its seed.  Cheap to clone; spawn one
@@ -127,9 +138,22 @@ impl FaultPlan {
                 "slow" => (Site::Execute, ClauseAction::Slow(
                     ms.with_context(|| format!(
                         "fault clause {raw:?}: slow needs ms=<dur>"))?)),
+                "hang" => {
+                    if ms.is_some() {
+                        bail!("fault clause {raw:?}: hang takes no ms= \
+                               (it stalls indefinitely; use slow for a \
+                               bounded stall)");
+                    }
+                    (Site::Execute, ClauseAction::Hang)
+                }
                 "drop-conn" => (Site::Net, ClauseAction::DropConn),
+                "slow-client" => (Site::Net, ClauseAction::SlowClient(
+                    ms.with_context(|| format!(
+                        "fault clause {raw:?}: slow-client needs \
+                         ms=<dur>"))?)),
                 other => bail!("unknown fault kind {other:?} (expected \
-                                panic | slow | drop-conn)"),
+                                panic | slow | hang | drop-conn | \
+                                slow-client)"),
             };
             if site == Site::Net && shard.is_some() {
                 bail!("fault clause {raw:?}: shard= does not apply to \
@@ -150,12 +174,14 @@ impl FaultPlan {
         self.clauses.is_empty()
     }
 
-    /// True if any clause targets backend execute (panic / slow).
+    /// True if any clause targets backend execute (panic / slow /
+    /// hang).
     pub fn has_execute_faults(&self) -> bool {
         self.clauses.iter().any(|c| c.site == Site::Execute)
     }
 
-    /// True if any clause targets net framing (drop-conn).
+    /// True if any clause targets the net site (drop-conn /
+    /// slow-client).
     pub fn has_net_faults(&self) -> bool {
         self.clauses.iter().any(|c| c.site == Site::Net)
     }
@@ -246,7 +272,10 @@ impl FaultInjector {
             Some(ClauseAction::Panic) => FaultAction::Panic,
             Some(ClauseAction::Slow(ms)) =>
                 FaultAction::Slow(Duration::from_millis(ms)),
+            Some(ClauseAction::Hang) => FaultAction::Hang,
             Some(ClauseAction::DropConn) => FaultAction::DropConn,
+            Some(ClauseAction::SlowClient(ms)) =>
+                FaultAction::SlowClient(Duration::from_millis(ms)),
         }
     }
 }
@@ -335,9 +364,53 @@ mod tests {
     fn rejects_malformed_specs() {
         for bad in ["explode", "panic:nth=0", "slow:nth=1",
                     "panic:rate=1.5", "panic:shard", "slow:ms=abc",
-                    "drop-conn:shard=1", "panic:bogus=1"] {
+                    "drop-conn:shard=1", "panic:bogus=1",
+                    "hang:ms=5", "slow-client", "slow-client:shard=1:ms=5"] {
             assert!(FaultPlan::parse(bad, 0).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn hang_is_an_execute_fault_distinct_from_slow() {
+        let plan = FaultPlan::parse("hang:shard=0:nth=2", 3).unwrap();
+        assert!(plan.has_execute_faults());
+        assert!(!plan.has_net_faults());
+        let mut s0 = plan.execute_injector(0);
+        assert_eq!(s0.check(), FaultAction::None);
+        assert_eq!(s0.check(), FaultAction::Hang);
+        assert_eq!(s0.check(), FaultAction::None);
+        // other shards never see a shard-pinned hang
+        let mut s1 = plan.execute_injector(1);
+        for _ in 0..5 {
+            assert_eq!(s1.check(), FaultAction::None);
+        }
+    }
+
+    #[test]
+    fn slow_client_stalls_the_net_writer_site() {
+        let plan = FaultPlan::parse(
+            "slow-client:ms=40:nth=2,hang:nth=1", 11).unwrap();
+        assert!(plan.has_net_faults());
+        let mut net = plan.net_injector(0);
+        assert_eq!(net.check(), FaultAction::None);
+        assert_eq!(net.check(),
+                   FaultAction::SlowClient(Duration::from_millis(40)));
+        // the hang clause stays on the execute site
+        assert_eq!(net.check(), FaultAction::None);
+    }
+
+    #[test]
+    fn slow_client_rate_draws_replay_per_seed() {
+        let plan = FaultPlan::parse("slow-client:ms=5:rate=0.4", 21)
+            .unwrap();
+        let run = |p: &FaultPlan| {
+            let mut inj = p.net_injector(3);
+            (0..64).map(|_| inj.check() != FaultAction::None)
+                   .collect::<Vec<bool>>()
+        };
+        let a = run(&plan);
+        assert_eq!(a, run(&plan), "same plan+seed must replay exactly");
+        assert!(a.iter().any(|&x| x) && !a.iter().all(|&x| x));
     }
 
     #[test]

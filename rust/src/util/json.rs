@@ -112,6 +112,16 @@ impl Json {
         }
         self
     }
+
+    /// [`Json::push`] only when `val` is `Some` — for fields that
+    /// should be absent (not null) when there is nothing to report.
+    pub fn push_opt(self, key: &str,
+                    val: Option<impl Into<Json>>) -> Json {
+        match val {
+            Some(v) => self.push(key, v),
+            None => self,
+        }
+    }
 }
 
 impl From<f64> for Json {

@@ -17,7 +17,7 @@
 //! always-firing) so liveness invariants 2 and 3 are satisfiable;
 //! invariant 1 holds under any plan.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -40,7 +40,12 @@ const CLIP_SHAPE: [usize; 4] = [4, 2, 2, 3];
 /// panicked batch, so every request must eventually complete.  CI
 /// override plans should keep at most 2 `nth=` panic clauses so no
 /// shard trips quarantine (which rebuilds the injector and re-arms
-/// its `nth` counters).
+/// its `nth` counters).  `hang` clauses are allowed — the storm runs
+/// with the watchdog enabled, so a wedged shard is fenced and
+/// replaced — but should be `shard=`-scoped to one shard: each
+/// replacement re-arms the plan's `nth` counters, so an unscoped hang
+/// can re-wedge every shard each generation and burn the retry
+/// budget.
 const DEFAULT_STORM: &str = "panic:nth=2,panic:nth=5,slow:ms=3:rate=0.2";
 
 fn chaos_seed() -> u64 {
@@ -78,7 +83,13 @@ impl BatchProcessor for FaultyClipProcessor {
                 panic!("injected fault: panic at execute site")
             }
             FaultAction::Slow(d) => std::thread::sleep(d),
-            FaultAction::DropConn | FaultAction::None => {}
+            // a hung backend call: never returns, holds the shard slot
+            // — only the pool watchdog can recover from this
+            FaultAction::Hang => loop {
+                std::thread::sleep(Duration::from_millis(50));
+            },
+            FaultAction::DropConn | FaultAction::SlowClient(_)
+            | FaultAction::None => {}
         }
         Ok(reqs.iter()
             .map(|r| (clip_for_seed(r.seed), metrics_for(r, reqs.len())))
@@ -157,6 +168,11 @@ fn chaos_storm_resolves_every_request_and_leaks_no_slots() {
         batch_window: Duration::from_millis(2),
         retry_budget: 8,
         retry_backoff_ms: 2,
+        // watchdog on, so env plans may include `hang` clauses: a
+        // wedged shard is fenced and its batch retried instead of
+        // deadlocking the storm
+        stall_threshold: Duration::from_millis(400),
+        quarantine_cooldown: Duration::from_millis(5),
         ..PoolConfig::default()
     };
     let shards = 2;
@@ -446,4 +462,304 @@ fn shard_panic_mid_stream_delivers_typed_error_not_hang() {
     assert_eq!(m.completed, 1);
     assert_eq!(m.failed, 1);
     assert_eq!(m.chunks_sent, CLIP_SHAPE[0] as u64);
+}
+
+// ---------------- liveness: watchdog, fencing, drain -------------------
+
+/// Pool config for the watchdog tests: a short stall threshold, fast
+/// retries, fast replacement cooldown.
+fn watchdog_cfg() -> PoolConfig {
+    PoolConfig {
+        max_batch: 1,
+        retry_budget: 2,
+        retry_backoff_ms: 1,
+        quarantine_cooldown: Duration::from_millis(2),
+        stall_threshold: Duration::from_millis(120),
+        ..PoolConfig::default()
+    }
+}
+
+/// Poll `cond` up to 5 s; panic with `what` if it never holds.
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting: {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn watchdog_trips_on_a_hang_plan_and_the_retry_completes() {
+    // first processor instance hangs its first execute (the plan's
+    // `hang:nth=1`); watchdog replacements rebuild through the factory
+    // and get an inert injector — a backend that is healthy again
+    let plan = FaultPlan::parse("hang:nth=1", 3).unwrap();
+    let built = Arc::new(AtomicU64::new(0));
+    let p = plan.clone();
+    let b = Arc::clone(&built);
+    let h = harness_with(1, watchdog_cfg(), move |shard| {
+        let injector = if b.fetch_add(1, Ordering::SeqCst) == 0 {
+            p.execute_injector(shard)
+        } else {
+            FaultInjector::inert()
+        };
+        Ok(FaultyClipProcessor { injector })
+    });
+
+    let rx = h.gateway.submit(0, 555, 4, "s90").unwrap();
+    // the hung worker never returns; only the watchdog can save this
+    let resp = rx.recv().unwrap()
+        .expect("stalled batch must be retried on the replacement");
+    assert_eq!(resp.clip, clip_for_seed(555),
+               "retried request must serve bit-for-bit");
+
+    let st = &h.pool.stats()[0];
+    assert_eq!(st.stalls.load(Ordering::Relaxed), 1,
+               "exactly one stall detected");
+    assert!(st.generation.load(Ordering::Relaxed) >= 1,
+            "the fence must bump the shard generation");
+    wait_until("shard re-admitted", || st.state_name() == "up");
+    assert!(built.load(Ordering::SeqCst) >= 2, "a replacement was built");
+
+    h.queue.close();
+    drop(h.pool);
+    let m = h.metrics.lock().unwrap();
+    assert_eq!(m.retries, 1, "the stolen batch is requeued once");
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.failed, 0);
+}
+
+/// Blocks its first batch until `gate` flips — a controllable hang, so
+/// tests can release the zombie AFTER the watchdog has fenced it and
+/// observe that its late emissions are no-ops.
+struct GateProcessor {
+    gate: Option<Arc<AtomicBool>>,
+}
+
+impl BatchProcessor for GateProcessor {
+    fn process(&mut self, reqs: &[GenRequest])
+               -> anyhow::Result<Vec<(Tensor, RequestMetrics)>> {
+        if let Some(g) = self.gate.take() {
+            while !g.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        Ok(reqs.iter()
+            .map(|r| (clip_for_seed(r.seed), metrics_for(r, reqs.len())))
+            .collect())
+    }
+}
+
+/// Harness whose FIRST processor instance hangs on `gate`; watchdog
+/// replacements are healthy.
+fn gated_harness(gate: &Arc<AtomicBool>) -> Harness {
+    let built = Arc::new(AtomicU64::new(0));
+    let g = Arc::clone(gate);
+    harness_with(1, watchdog_cfg(), move |_| {
+        let first = built.fetch_add(1, Ordering::SeqCst) == 0;
+        Ok(GateProcessor { gate: first.then(|| Arc::clone(&g)) })
+    })
+}
+
+#[test]
+fn fenced_zombie_cannot_double_reply_or_double_release_its_slot() {
+    let gate = Arc::new(AtomicBool::new(false));
+    let h = gated_harness(&gate);
+
+    let rx = h.gateway.submit(0, 777, 4, "s90").unwrap();
+    // the reply arrives from the REPLACEMENT worker while the original
+    // is still wedged behind the gate
+    let resp = rx.recv().unwrap().expect("replacement must serve");
+    assert_eq!(resp.clip, clip_for_seed(777));
+    assert_eq!(h.pool.stats()[0].stalls.load(Ordering::Relaxed), 1);
+
+    // now wake the zombie: it finishes its batch and tries to emit,
+    // but its generation is fenced — the emission and its idle
+    // announcement must both be no-ops
+    gate.store(true, Ordering::SeqCst);
+    std::thread::sleep(Duration::from_millis(100));
+    assert!(rx.try_recv().is_err(),
+            "a fenced worker must never deliver a second reply");
+
+    // the slot was released exactly once: the pool still serves
+    // fresh requests correctly and returns to idle
+    for i in 0..2u64 {
+        let rx = h.gateway.submit(0, 8800 + i, 4, "s90").unwrap();
+        let resp = rx.recv().unwrap().expect("post-fence request");
+        assert_eq!(resp.clip, clip_for_seed(8800 + i));
+    }
+    wait_until("pool idle", || h.pool.in_flight() == 0);
+
+    h.queue.close();
+    drop(h.pool);
+    let m = h.metrics.lock().unwrap();
+    assert_eq!(m.completed, 3,
+               "the fenced batch must not be double-counted");
+    assert_eq!(m.retries, 1);
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn cancel_while_stalled_releases_the_slot_exactly_once() {
+    let gate = Arc::new(AtomicBool::new(false));
+    let h = gated_harness(&gate);
+
+    let stream = h.gateway.submit_streaming(0, 321, 4, "s90").unwrap();
+    // wait for dispatch: the wedged worker now owns the request
+    wait_until("request dispatched", || h.pool.in_flight() == 1);
+    // client walks away while the shard is stalled
+    drop(stream);
+
+    // the watchdog steals the batch, sees the cancellation, and
+    // records it WITHOUT burning a retry
+    let st = &h.pool.stats()[0];
+    wait_until("watchdog trip", || {
+        st.stalls.load(Ordering::Relaxed) == 1
+    });
+    wait_until("slot released", || h.pool.in_flight() == 0);
+
+    // exactly once: the replacement still serves fresh work
+    let rx = h.gateway.submit(0, 654, 4, "s90").unwrap();
+    let resp = rx.recv().unwrap().expect("post-cancel request");
+    assert_eq!(resp.clip, clip_for_seed(654));
+
+    gate.store(true, Ordering::SeqCst); // release the zombie
+    h.queue.close();
+    drop(h.pool);
+    let m = h.metrics.lock().unwrap();
+    assert_eq!(m.cancelled_streams, 1,
+               "a cancelled-while-stalled stream is recorded as a \
+                cancellation");
+    assert_eq!(m.retries, 0,
+               "cancelled work must not be requeued");
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.failed, 0);
+}
+
+/// Serves correctly but slowly — in-flight work for the drain test.
+struct SlowClipProcessor {
+    delay: Duration,
+}
+
+impl BatchProcessor for SlowClipProcessor {
+    fn process(&mut self, reqs: &[GenRequest])
+               -> anyhow::Result<Vec<(Tensor, RequestMetrics)>> {
+        std::thread::sleep(self.delay);
+        Ok(reqs.iter()
+            .map(|r| (clip_for_seed(r.seed), metrics_for(r, reqs.len())))
+            .collect())
+    }
+}
+
+#[test]
+fn drain_completes_in_flight_work_then_rejects_with_shutting_down() {
+    let cfg = PoolConfig { max_batch: 1, ..PoolConfig::default() };
+    let h = harness_with(1, cfg, move |_| {
+        Ok(SlowClipProcessor { delay: Duration::from_millis(120) })
+    });
+
+    let stream = h.gateway.submit_streaming(0, 42, 4, "s90").unwrap();
+    wait_until("request dispatched", || h.pool.in_flight() == 1);
+
+    h.gateway.begin_drain();
+    // admission is now typed shutting_down ...
+    let err = h.gateway.submit(0, 43, 4, "s90")
+        .expect_err("draining gateway must reject new work");
+    assert_eq!(err.code(), "shutting_down");
+    assert!(!err.retryable());
+    // ... and the health section reflects it
+    let snap = h.gateway.metrics_snapshot();
+    let health = snap.get("health").unwrap();
+    assert!(health.get("draining").unwrap().as_bool().unwrap());
+    assert!(!health.get("ready").unwrap().as_bool().unwrap());
+
+    // the in-flight stream still completes bit-for-bit, with its
+    // normal terminal chunk
+    let chunks = drain_stream(&stream)
+        .expect("in-flight work must complete through a drain");
+    let resp = stream::assemble_response(stream.id(), chunks).unwrap();
+    assert_eq!(resp.clip, clip_for_seed(42));
+
+    wait_until("quiesced", || {
+        h.gateway.pending() == 0 && h.pool.in_flight() == 0
+    });
+    h.queue.close();
+    drop(h.pool);
+    let m = h.metrics.lock().unwrap();
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.rejected, 1, "the post-drain submit was rejected");
+}
+
+// ---------------- slow-client protection (net) -------------------------
+
+#[test]
+fn slow_client_is_cancelled_and_dropped_without_wedging_the_server() {
+    use sla2::coordinator::net::NetFrontend;
+    use sla2::coordinator::NetClient;
+
+    // tiny outbound queue + tight stall budget + a stream buffer of 1
+    // so a client that stops reading quickly blocks the shard's
+    // delivery — the exact hostage scenario the teardown must break
+    let serve = ServeConfig {
+        tier: "s90".into(),
+        sample_steps: 4,
+        chunk_frames: 1,
+        stream_buffer_chunks: 1,
+        queue_capacity: 128,
+        net_send_queue: 1,
+        write_stall_ms: 100,
+        ..ServeConfig::default()
+    };
+    let queue = Arc::new(RequestQueue::new(serve.queue_capacity));
+    let metrics = Arc::new(Mutex::new(ServerMetrics::new()));
+    metrics.lock().unwrap().attach_queue(Arc::clone(&queue));
+    let mut pool = EnginePool::start_with_config(
+        1, Arc::clone(&queue), Arc::clone(&metrics),
+        PoolConfig { max_batch: 1, ..PoolConfig::default() },
+        move |_| Ok(FaultyClipProcessor {
+            injector: FaultInjector::inert(),
+        }))
+        .expect("pool start");
+    let gateway = Arc::new(Gateway::new(Arc::clone(&queue),
+                                        Arc::clone(&metrics), serve));
+
+    // connection 0's writer stalls 10 s on its second frame (the first
+    // chunk) — a client that read the ack and then stopped draining
+    let plan = FaultPlan::parse("slow-client:shard=0:ms=10000:nth=2", 5)
+        .unwrap();
+    let mut net = NetFrontend::start_with_faults(
+        Arc::clone(&gateway), "127.0.0.1:0", plan).expect("net start");
+    let addr = net.local_addr().to_string();
+
+    let mut stuck = NetClient::connect(&addr).unwrap();
+    // the ack (frame 1) gets through; the client then reads NOTHING
+    let _id = stuck.submit(0, 2024, 4, "s90", true)
+        .expect("submit accepted before the stall");
+
+    // the server must declare the client slow, cancel its stream
+    // (freeing the shard), and move on
+    wait_until("slow client cancelled", || {
+        let m = metrics.lock().unwrap();
+        m.cancelled_streams == 1
+    });
+
+    // the shard slot is free again: a well-behaved client on a fresh
+    // connection completes bit-for-bit
+    let mut good = NetClient::connect(&addr).unwrap();
+    let id = good.submit(0, 4096, 4, "s90", true).unwrap();
+    let resp = good.collect_stream(id)
+        .expect("a healthy client must be unaffected by the slow one");
+    assert_eq!(resp.clip, clip_for_seed(4096));
+
+    // liveness probe still answers on the healthy connection
+    let health = good.health().unwrap();
+    assert_eq!(health.get("live").and_then(|v| v.as_bool()), Some(true));
+
+    net.shutdown();
+    queue.close();
+    pool.join();
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.cancelled_streams, 1);
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.failed, 0);
 }
