@@ -16,6 +16,13 @@
 
 use anyhow::Result;
 use sla2::costmodel::{device, flops};
+
+/// The SAME harness the conformance tests gate on (naive full-softmax
+/// reference, peaked-input generator, rel_err) — so the shoot-out's
+/// accuracy column is measured against the identical oracle.
+#[path = "../tests/common/conformance.rs"]
+#[allow(dead_code)]
+mod conformance;
 use sla2::runtime::Runtime;
 use sla2::tensor::Tensor;
 use sla2::util::bench::{self, run_for, Table};
@@ -317,6 +324,80 @@ fn main() -> Result<()> {
                  g_sim.summary.mean / g_int8.summary.mean,
                  p_sim.summary.mean / p_int8.summary.mean,
                  op_s90_speedup.unwrap_or(f64::NAN));
+    }
+
+    // ------- variant shoot-out: rel_err x speedup per variant/tier ---
+    // The tentpole's evaluation: every first-class native variant
+    // (`sla2` learnable-routed sparse+linear, `sparge2` top-k+top-p
+    // sparse-only, `svg_ear` error-aware routed) on the SAME peaked
+    // inputs the conformance suite gates on, reporting accuracy (rel
+    // err vs naive full softmax) against measured speedup over the
+    // native full-softmax kernel at each served tier.  CPU wall-clock,
+    // not a GPU proxy — same caveat as the sections above.
+    println!("\n=== Fig. 4 companion: variant shoot-out (sla2 vs \
+              sparge2 vs svg_ear; peaked inputs, dit-small head N=256, \
+              d=64; artifact-free) ===\n");
+    {
+        use sla2::runtime::native::attention::{self, QuantMode,
+                                               Sla2Params};
+        use std::hint::black_box;
+        let shape = conformance::SHAPES[1]; // dit-small-head
+        let (n, d, b_q, b_k) = (shape.n, shape.d, shape.b_q, shape.b_k);
+        let (t_m, t_n) = shape.tiles();
+        let (q, k, v) = conformance::peaked_qkv(
+            n, d, b_q, b_k, conformance::PEAK_AMP, 42);
+        let full_ref = conformance::naive_attention(&q, &k, &v, n, d);
+        let eye = conformance::eye(d);
+        let alpha = vec![12.0f32; t_m];
+        let full_b = run_for("shootout_full", 2, 0.5, 30, || {
+            black_box(attention::full_attention(&q, &k, &v, n, d));
+        });
+        let mut t = Table::new(&["variant", "tier", "sparsity",
+                                 "rel_err", "mean ms",
+                                 "speedup vs full"]);
+        for (tier, k_pct) in [("s90", 0.10), ("s95", 0.05),
+                              ("s97", 0.03)] {
+            let kept = attention::top_k_count(k_pct, t_n);
+            let sparsity = 1.0 - kept as f64 / t_n as f64;
+            let p = Sla2Params { proj_q: &eye, proj_k: &eye,
+                                 alpha_logit: &alpha };
+            for variant in ["sla2", "sparge2", "svg_ear"] {
+                let run = || match variant {
+                    "sla2" => attention::sla2_attention(
+                        &q, &k, &v, &p, k_pct, n, d, b_q, b_k,
+                        QuantMode::Int8),
+                    "sparge2" => attention::sparge2_attention(
+                        &q, &k, &v, k_pct, attention::SPARGE2_TOP_P,
+                        n, d, b_q, b_k, QuantMode::Int8),
+                    _ => attention::svg_ear_attention(
+                        &q, &k, &v, k_pct, n, d, b_q, b_k,
+                        QuantMode::Int8),
+                };
+                let err = conformance::rel_err(&run(), &full_ref);
+                let b = run_for(&format!("shootout_{variant}_{tier}"),
+                                2, 0.5, 30, || {
+                    black_box(run());
+                });
+                let speedup = full_b.summary.mean / b.summary.mean;
+                t.row(vec![variant.into(), tier.into(),
+                           format!("{:.1}%", sparsity * 100.0),
+                           format!("{err:.2e}"),
+                           format!("{:.3}", b.mean_ms()),
+                           format!("{speedup:.2}x")]);
+                json_rows.push(Json::obj()
+                    .push("section", "variant_shootout")
+                    .push("variant", variant)
+                    .push("tier", tier)
+                    .push("sparsity", sparsity)
+                    .push("rel_err", err)
+                    .push("mean_ms", b.mean_ms())
+                    .push("speedup_vs_full", speedup));
+            }
+        }
+        t.print();
+        println!("accuracy bar: conformance gates rel_err < 1e-3 (f32) \
+                  at >= 90% sparsity; the rows above run the INT8 \
+                  path, whose allowance is 1e-1\n");
     }
 
     if let Some(path) = args.json_path("BENCH_fig4_kernel.json") {

@@ -89,6 +89,13 @@ pub fn default_num_shards() -> usize {
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub model: String,
+    /// default attention variant: on the native backend one of
+    /// [`crate::runtime::native::model::SUPPORTED_VARIANTS`] (`"sla2"`,
+    /// `"sla2_noquant"`, `"sparge2"`, `"svg_ear"`, `"full"`; validated
+    /// at server startup), on `"xla"` whatever the artifact manifest
+    /// provides.  Requests may override it per submission
+    /// ([`crate::coordinator::SubmitOpts::variant`]); the dense tier
+    /// always serves full softmax regardless
     pub variant: String,
     pub tier: String,
     /// compute backend: `"xla"` (AOT artifacts through PJRT, the

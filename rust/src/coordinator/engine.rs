@@ -83,11 +83,23 @@ impl Engine {
         &*self.backend
     }
 
-    fn variant_for_tier<'a>(&'a self, tier: &str) -> &'a str {
-        if tier == "dense" { "full" } else { &self.serve.variant }
+    /// The attention variant a request actually runs: the dense tier
+    /// always serves full softmax (a sparse variant at keep-everything
+    /// would waste the routing work), otherwise the request's own
+    /// override wins and the server-wide `--variant` knob is the
+    /// fallback.  Batches are class-homogeneous (variant is part of
+    /// [`GenRequest::compatible`] and the scheduler's `ClassKey`), so
+    /// resolving from any one request of a batch is resolving for all.
+    fn effective_variant<'a>(&'a self, req: &'a GenRequest) -> &'a str {
+        if req.tier == "dense" {
+            "full"
+        } else {
+            req.variant.as_deref().unwrap_or(&self.serve.variant)
+        }
     }
 
-    /// Serve a set of COMPATIBLE requests (same tier + steps).
+    /// Serve a set of COMPATIBLE requests (same tier, steps and
+    /// variant).
     /// Returns `(clip, metrics)` per request, input order preserved.
     /// A typed per-request failure (a mid-flight deadline expiry)
     /// fails the whole call — direct callers (benches, tests) do not
@@ -137,7 +149,7 @@ impl Engine {
         -> Result<()> {
         let first = reqs.first().context("empty batch")?;
         let tier = &first.tier;
-        let variant = self.variant_for_tier(tier);
+        let variant = self.effective_variant(first);
         let support = self.backend.supported_batch_sizes(variant, tier);
         let plan = plan_support(reqs.len(), &support)
             .with_context(|| format!("planning {}/{}/{}",

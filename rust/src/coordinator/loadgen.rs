@@ -109,7 +109,8 @@ pub fn run_trace(server: &Server, cfg: &TraceConfig) -> Result<TraceReport> {
     let (shed0, degraded0) = (failures_counter(&before, "shed"),
                               failures_counter(&before, "degraded"));
     let opts = SubmitOpts { deadline_ms: cfg.deadline_ms,
-                            allow_degrade: cfg.allow_degrade };
+                            allow_degrade: cfg.allow_degrade,
+                            variant: None };
     let mut rng = Pcg32::seeded(cfg.seed);
     let start = Instant::now();
     let mut inflight: Vec<(Instant,
@@ -128,7 +129,7 @@ pub fn run_trace(server: &Server, cfg: &TraceConfig) -> Result<TraceReport> {
             .clone();
         let label = rng.below(10) as i32;
         match server.submit_with(label, cfg.seed + i as u64, cfg.steps,
-                                 &tier, opts) {
+                                 &tier, opts.clone()) {
             Ok(rx) => inflight.push((Instant::now(), rx)),
             Err(_) => rejected += 1, // shed/backpressure: keep offering
         }

@@ -60,6 +60,11 @@ pub struct ServerMetrics {
     /// the native backend's quant_mode knob ("int8" | "sim" | "off"),
     /// attached by the server alongside `backend`
     quant_mode: Option<String>,
+    /// the server-wide default attention variant ("sla2" | "sparge2" |
+    /// "svg_ear" | ...), attached by the server; per-request overrides
+    /// show up in the per-class queue depths and the per-variant
+    /// native-kernel counters instead
+    variant: Option<String>,
     /// the gateway's drain latch, attached at gateway construction;
     /// drives the health section's `draining`/`ready` fields
     draining: Option<Arc<AtomicBool>>,
@@ -108,6 +113,7 @@ impl ServerMetrics {
             queue: None,
             backend: None,
             quant_mode: None,
+            variant: None,
             draining: None,
         }
     }
@@ -139,6 +145,14 @@ impl ServerMetrics {
     /// from the f32 simulation at a glance).
     pub fn attach_quant_mode(&mut self, mode: &str) {
         self.quant_mode = Some(mode.to_string());
+    }
+
+    /// Record the server's default attention variant (surfaced next to
+    /// `backend` so dashboards can tell a sparge2 shoot-out run from
+    /// regular sla2 serving; per-request overrides surface through the
+    /// per-class queue depths and per-variant kernel counters).
+    pub fn attach_variant(&mut self, variant: &str) {
+        self.variant = Some(variant.to_string());
     }
 
     /// Wire in the gateway's drain latch so snapshots report liveness
@@ -304,6 +318,9 @@ impl ServerMetrics {
         }
         if let Some(b) = &self.backend {
             j = j.push("backend", b.as_str());
+            if let Some(v) = &self.variant {
+                j = j.push("variant", v.as_str());
+            }
             // the native-kernel counters are process-wide (shared by
             // every native backend in this process, like the compile
             // cache) — surfaced whenever a native server is attached
@@ -320,6 +337,8 @@ impl ServerMetrics {
                 .map(|(k, n)| Json::obj()
                     .push("tier", k.tier)
                     .push("steps", k.steps)
+                    // absent = the server default variant
+                    .push_opt("variant", k.variant)
                     .push("depth", n))
                 .collect();
             j = j.push("scheduler", q.policy_name())
@@ -378,15 +397,22 @@ mod tests {
                 "xla servers must not imply native kernel activity");
         m.attach_backend("native");
         m.attach_quant_mode("int8");
+        m.attach_variant("sparge2");
         let s = m.snapshot();
         assert_eq!(s.get("backend").unwrap().as_str(), Some("native"));
         assert_eq!(s.get("quant_mode").unwrap().as_str(), Some("int8"));
+        assert_eq!(s.get("variant").unwrap().as_str(), Some("sparge2"));
         let nk = s.get("native_kernels").expect("native counters");
         assert!(nk.get("sparse_tiles").is_some());
         assert!(nk.get("denoise_forwards").is_some());
         // per-mode counters: real-int8 vs simulated heads
         assert!(nk.get("int8_heads").is_some());
         assert!(nk.get("sim_heads").is_some());
+        // per-variant head counters (the variant shoot-out dimension)
+        assert!(nk.get("sla2_heads").is_some());
+        assert!(nk.get("sparge2_heads").is_some());
+        assert!(nk.get("svg_ear_heads").is_some());
+        assert!(nk.get("ear_compensated_blocks").is_some());
     }
 
     #[test]
@@ -425,6 +451,10 @@ mod tests {
         let (tx, _rx) = std::sync::mpsc::channel();
         q.push(Envelope::oneshot(GenRequest::new(1, 0, 1, 8, "s90"), tx))
             .unwrap();
+        let (tx, _rx2) = std::sync::mpsc::channel();
+        q.push(Envelope::oneshot(
+            GenRequest::new(2, 0, 1, 8, "s90")
+                .with_variant(Some("svg_ear".into())), tx)).unwrap();
         m.attach_queue(Arc::clone(&q));
 
         let s = m.snapshot();
@@ -434,9 +464,20 @@ mod tests {
         assert_eq!(s.get("scheduler").unwrap().as_str(), Some("class"));
         let depths =
             s.get("queue_depth_per_class").unwrap().as_arr().unwrap();
-        assert_eq!(depths.len(), 1);
-        assert_eq!(depths[0].get("tier").unwrap().as_str(), Some("s90"));
-        assert_eq!(depths[0].get("depth").unwrap().as_usize(), Some(1));
+        // the variant override splits the scheduling class, and the
+        // override-tagged row carries a "variant" field while the
+        // default-variant row omits it
+        assert_eq!(depths.len(), 2);
+        for row in depths {
+            assert_eq!(row.get("tier").unwrap().as_str(), Some("s90"));
+            assert_eq!(row.get("depth").unwrap().as_usize(), Some(1));
+            if let Some(v) = row.get("variant") {
+                assert_eq!(v.as_str(), Some("svg_ear"));
+            } // absent = the default-variant class
+        }
+        assert_eq!(depths.iter()
+                       .filter(|r| r.get("variant").is_some()).count(),
+                   1);
     }
 
     #[test]

@@ -629,6 +629,11 @@ fn handle_submit(gw: &Arc<Gateway>, req: &Json, conn: &ConnTx) {
             .unwrap_or(0.0) as u64,
         allow_degrade: req.get("allow_degrade").and_then(|v| v.as_bool())
             .unwrap_or(false),
+        // absent = serve the server's configured default variant; an
+        // unknown name comes back as a typed bad_request reject frame
+        // (gateway admission validates against the backend's set)
+        variant: req.get("variant").and_then(|v| v.as_str())
+            .map(String::from),
     };
     if steps == 0 || steps > MAX_NET_STEPS {
         conn.send(rejected_frame(&ServeError::BadRequest(
@@ -819,7 +824,8 @@ impl NetClient {
             .push("tier", tier)
             .push("stream", streaming)
             .push("deadline_ms", opts.deadline_ms as usize)
-            .push("allow_degrade", opts.allow_degrade))?;
+            .push("allow_degrade", opts.allow_degrade)
+            .push_opt("variant", opts.variant))?;
         let ack = self.wait_for(|f| {
             matches!(f.get("type").and_then(|v| v.as_str()),
                      Some("accepted") | Some("rejected"))

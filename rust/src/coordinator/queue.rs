@@ -45,18 +45,25 @@ pub const MAX_BYPASS_STREAK: u32 = 4;
 pub struct ClassKey {
     pub tier: String,
     pub steps: usize,
+    /// attention-variant override (`None` = server default) — part of
+    /// the key because shards compile per (variant, tier), so mixed
+    /// variants must not share a batch
+    pub variant: Option<String>,
 }
 
 impl ClassKey {
     pub fn of(req: &GenRequest) -> ClassKey {
-        ClassKey { tier: req.tier.clone(), steps: req.steps }
+        ClassKey { tier: req.tier.clone(), steps: req.steps,
+                   variant: req.variant.clone() }
     }
 
     /// Relative service-cost proxy used by the bypass policy — NOT a
     /// latency estimate.  Monotone in what matters: more steps cost
     /// more, dense attention costs more than any sparse tier, higher
     /// sparsity costs less.  Sparse tiers are parsed from their
-    /// "sNN" name; unknown tiers land in the middle.
+    /// "sNN" name; unknown tiers land in the middle.  The variant is
+    /// deliberately NOT weighted: all implemented variants run the
+    /// same tile budget per tier, so tier x steps stays the proxy.
     pub fn cost(&self) -> f64 {
         let tier_weight = match self.tier.as_str() {
             "dense" => 1.0,
@@ -589,13 +596,42 @@ mod tests {
 
     #[test]
     fn class_cost_orders_dense_above_sparse() {
-        let dense = ClassKey { tier: "dense".into(), steps: 8 };
-        let s90 = ClassKey { tier: "s90".into(), steps: 8 };
-        let s97 = ClassKey { tier: "s97".into(), steps: 8 };
-        let s90_short = ClassKey { tier: "s90".into(), steps: 4 };
+        let key = |tier: &str, steps| ClassKey {
+            tier: tier.into(), steps, variant: None,
+        };
+        let dense = key("dense", 8);
+        let s90 = key("s90", 8);
+        let s97 = key("s97", 8);
+        let s90_short = key("s90", 4);
         assert!(dense.cost() > s90.cost());
         assert!(s90.cost() > s97.cost());
         assert!(s90.cost() > s90_short.cost());
+        // same tier budget => same cost regardless of variant, but a
+        // DIFFERENT class (shards compile per variant)
+        let s90_sparge = ClassKey { tier: "s90".into(), steps: 8,
+                                    variant: Some("sparge2".into()) };
+        assert_eq!(s90.cost(), s90_sparge.cost());
+        assert_ne!(s90, s90_sparge);
+    }
+
+    #[test]
+    fn variant_overrides_split_scheduling_classes() {
+        // two requests differing only in variant land in different
+        // buckets and never share a pop_batch
+        let q = RequestQueue::new(8);
+        let (tx1, _rx1) = channel();
+        q.push(Envelope::oneshot(
+            GenRequest::new(1, 0, 1, 8, "s90"), tx1)).unwrap();
+        let (tx2, _rx2) = channel();
+        q.push(Envelope::oneshot(
+            GenRequest::new(2, 0, 2, 8, "s90")
+                .with_variant(Some("sparge2".into())), tx2)).unwrap();
+        let depths = q.class_depths();
+        assert_eq!(depths.len(), 2, "variants must split classes");
+        let b = q.pop_batch(4, Duration::from_millis(10),
+                            Duration::ZERO).unwrap();
+        assert_eq!(b.len(), 1,
+                   "mixed-variant requests must not share a batch");
     }
 
     #[test]
@@ -732,8 +768,10 @@ mod tests {
         push(&q, &mut keep, 1, "dense", 8).unwrap();
         push(&q, &mut keep, 2, "s97", 8).unwrap();
         let a = q.admission(1.0, 0.0);
-        let want = ClassKey { tier: "dense".into(), steps: 8 }.cost()
-            + ClassKey { tier: "s97".into(), steps: 8 }.cost();
+        let want = ClassKey { tier: "dense".into(), steps: 8,
+                              variant: None }.cost()
+            + ClassKey { tier: "s97".into(), steps: 8,
+                         variant: None }.cost();
         assert!((a.estimated_work - want).abs() < 1e-9);
         assert!(!a.overloaded);
         // a work ceiling below the current load trips overload even

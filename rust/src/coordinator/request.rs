@@ -28,6 +28,12 @@ pub struct GenRequest {
     pub steps: usize,
     /// sparsity tier: "s90" | "s95" | "s97" | "dense"
     pub tier: String,
+    /// attention-variant override (`"sla2"`, `"sparge2"`, ...);
+    /// `None` = the server's configured default.  Validated against
+    /// the backend's supported set at admission (Gateway), so a bogus
+    /// variant is a typed reject instead of a shard compile failure.
+    /// Part of batch compatibility — shards compile per variant.
+    pub variant: Option<String>,
     pub submitted_at: Instant,
     /// stamped by `RequestQueue::pop_batch` when the request leaves the
     /// queue; `None` for requests that never crossed the queue (direct
@@ -52,8 +58,9 @@ impl GenRequest {
     pub fn new(id: u64, class_label: i32, seed: u64, steps: usize,
                tier: &str) -> GenRequest {
         GenRequest { id, class_label, seed, steps, tier: tier.into(),
-                     submitted_at: Instant::now(), dequeued_at: None,
-                     deadline: None, allow_degrade: false, retries: 0,
+                     variant: None, submitted_at: Instant::now(),
+                     dequeued_at: None, deadline: None,
+                     allow_degrade: false, retries: 0,
                      degraded_from: None }
     }
 
@@ -73,10 +80,19 @@ impl GenRequest {
         self
     }
 
+    /// Builder: override the attention variant (`None` = server
+    /// default).
+    pub fn with_variant(mut self, variant: Option<String>) -> GenRequest {
+        self.variant = variant;
+        self
+    }
+
     /// Two requests can share a batch iff they run the same artifact
-    /// and walk the same timestep grid.
+    /// (tier AND variant select the compiled executable) and walk the
+    /// same timestep grid.
     pub fn compatible(&self, other: &GenRequest) -> bool {
         self.tier == other.tier && self.steps == other.steps
+            && self.variant == other.variant
     }
 
     /// True once the deadline (if any) has passed at `now`.
@@ -185,6 +201,17 @@ mod tests {
         assert!(a.compatible(&b));
         assert!(!a.compatible(&c)); // different step count
         assert!(!a.compatible(&d)); // different tier
+        // variant overrides select different compiled executables, so
+        // they split batches; two identical overrides still share
+        let e = GenRequest::new(5, 0, 0, 8, "s95")
+            .with_variant(Some("sparge2".into()));
+        let f = GenRequest::new(6, 1, 2, 8, "s95")
+            .with_variant(Some("sparge2".into()));
+        assert!(!a.compatible(&e)); // default vs override
+        assert!(e.compatible(&f));
+        let g = GenRequest::new(7, 0, 0, 8, "s95")
+            .with_variant(Some("svg_ear".into()));
+        assert!(!e.compatible(&g)); // different overrides
     }
 
     #[test]

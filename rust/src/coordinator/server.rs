@@ -39,8 +39,8 @@ use crate::util::faults::FaultPlan;
 /// Per-submission options beyond the core `(class, seed, steps,
 /// tier)` tuple.  `Default` is the legacy behavior: no deadline
 /// beyond the server-wide `ServeConfig::default_deadline_ms`, no
-/// degradation.
-#[derive(Debug, Clone, Copy, Default)]
+/// degradation, the server's configured attention variant.
+#[derive(Debug, Clone, Default)]
 pub struct SubmitOpts {
     /// per-request deadline in milliseconds from submission;
     /// 0 = fall back to `ServeConfig::default_deadline_ms`
@@ -49,6 +49,32 @@ pub struct SubmitOpts {
     /// shedding (the original tier is recorded in
     /// `GenRequest::degraded_from`)
     pub allow_degrade: bool,
+    /// attention-variant override (`"sla2"`, `"sparge2"`, `"svg_ear"`,
+    /// ...); `None` = the server-wide `ServeConfig::variant`.
+    /// Validated at admission against the backend's supported set —
+    /// an unknown variant is a typed [`ServeError::BadRequest`], not
+    /// a shard compile failure (which would burn retries and could
+    /// quarantine healthy shards)
+    pub variant: Option<String>,
+}
+
+/// Validate an attention-variant name against what `backend` can
+/// compile.  The native backend's set is closed
+/// ([`crate::runtime::native::model::SUPPORTED_VARIANTS`]); other
+/// backends (xla) resolve variants from their artifact manifest at
+/// compile time, so the gateway stays permissive for them.  Rejecting
+/// here turns a client typo into a typed [`ServeError::BadRequest`]
+/// instead of a repeated shard compile failure that would burn the
+/// retry budget and could quarantine healthy shards.
+fn validate_variant(backend: &str, variant: &str)
+                    -> Result<(), ServeError> {
+    use crate::runtime::native::model::SUPPORTED_VARIANTS;
+    if backend == "native" && !SUPPORTED_VARIANTS.contains(&variant) {
+        return Err(ServeError::BadRequest(format!(
+            "unknown attention variant {variant:?} for the native \
+             backend (supported: {})", SUPPORTED_VARIANTS.join(", "))));
+    }
+    Ok(())
 }
 
 /// One step down the tier cost ladder (the [`super::queue::ClassKey`]
@@ -131,10 +157,17 @@ impl Gateway {
     }
 
     /// Build the request a submission admits as: final tier (possibly
-    /// degraded), effective deadline, degradation provenance.
+    /// degraded), effective deadline, variant override, degradation
+    /// provenance.
     fn build_request(&self, id: u64, class_label: i32, seed: u64,
                      steps: usize, tier: &str, opts: SubmitOpts)
                      -> Result<GenRequest, ServeError> {
+        if let Some(v) = &opts.variant {
+            if let Err(e) = validate_variant(&self.serve.backend, v) {
+                ServerMetrics::lock(&self.metrics).rejected += 1;
+                return Err(e);
+            }
+        }
         let degraded_to = self.admit(tier, opts.allow_degrade)?;
         let final_tier =
             degraded_to.as_deref().unwrap_or(tier).to_string();
@@ -146,7 +179,8 @@ impl Gateway {
         let mut req =
             GenRequest::new(id, class_label, seed, steps, &final_tier)
                 .with_deadline_ms(deadline_ms)
-                .with_allow_degrade(opts.allow_degrade);
+                .with_allow_degrade(opts.allow_degrade)
+                .with_variant(opts.variant);
         if degraded_to.is_some() {
             req.degraded_from = Some(tier.to_string());
         }
@@ -285,6 +319,10 @@ impl Server {
     /// shard's backend, net-site clauses arm the TCP frontend's
     /// connection injectors.  A malformed plan fails startup.
     pub fn start(artifacts_dir: &str, serve: ServeConfig) -> Result<Server> {
+        // fail fast on an unservable default variant instead of having
+        // every shard's first compile fail at batch time
+        validate_variant(&serve.backend, &serve.variant)
+            .map_err(|e| anyhow::anyhow!("serve config: {e}"))?;
         let fault_plan = FaultPlan::parse(&serve.fault_plan,
                                           serve.fault_seed)?;
         let policy = SchedPolicy::from_config(&serve.scheduler,
@@ -297,6 +335,7 @@ impl Server {
             m.attach_queue(Arc::clone(&queue));
             m.attach_backend(&serve.backend);
             m.attach_quant_mode(&serve.quant_mode);
+            m.attach_variant(&serve.variant);
         }
         let pool_cfg = PoolConfig {
             max_batch: serve.max_batch,
@@ -526,7 +565,7 @@ mod tests {
         // tier cheaper...
         let opts = SubmitOpts { allow_degrade: true,
                                 ..SubmitOpts::default() };
-        assert!(g.submit_with(0, 2, 4, "dense", opts).is_ok());
+        assert!(g.submit_with(0, 2, 4, "dense", opts.clone()).is_ok());
         // ...and lands in the queue rather than being turned away
         assert_eq!(g.pending(), 2);
         let snap = g.metrics_snapshot();
@@ -565,6 +604,42 @@ mod tests {
         let health = snap.get("health").unwrap();
         assert!(health.get("draining").unwrap().as_bool().unwrap());
         assert!(!health.get("ready").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn native_gateway_rejects_unknown_variant_with_typed_bad_request() {
+        let serve = ServeConfig { backend: "native".into(),
+                                  ..ServeConfig::default() };
+        let g = gateway_with(4, serve);
+        let opts = SubmitOpts { variant: Some("vsa".into()),
+                                ..SubmitOpts::default() };
+        let err = g.submit_with(0, 1, 4, "s90", opts).unwrap_err();
+        assert_eq!(err.code(), "bad_request");
+        assert!(!err.retryable());
+        // the reject names the full supported set so clients can
+        // self-correct without a round trip to the docs
+        for v in crate::runtime::native::model::SUPPORTED_VARIANTS {
+            assert!(err.to_string().contains(v),
+                    "reject should list {v:?}: {err}");
+        }
+        let snap = g.metrics_snapshot();
+        assert_eq!(snap.get("rejected").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(g.pending(), 0, "nothing reached the queue");
+
+        // a known variant override is admitted and stamped on the
+        // request (so the scheduler/engine see it)
+        let opts = SubmitOpts { variant: Some("sparge2".into()),
+                                ..SubmitOpts::default() };
+        let req = g.build_request(7, 0, 1, 4, "s90", opts).unwrap();
+        assert_eq!(req.variant.as_deref(), Some("sparge2"));
+
+        // non-native backends resolve variants at compile time, so
+        // the gateway stays permissive for them
+        let g = gateway_with(4, ServeConfig { backend: "xla".into(),
+                                              ..ServeConfig::default() });
+        let opts = SubmitOpts { variant: Some("vsa".into()),
+                                ..SubmitOpts::default() };
+        assert!(g.submit_with(0, 1, 4, "s90", opts).is_ok());
     }
 
     #[test]

@@ -24,6 +24,13 @@
 //! * **combination** — `O = a ⊙ O_s + (1-a) ⊙ O_l` with
 //!   `a = sigmoid(alpha_logit)` per query block (Eq. 13).
 //!
+//! Two training-free comparison variants share all of this machinery
+//! through the same masked core (docs/KERNELS.md, "Variant
+//! dispatch"): [`sparge2_attention`] — hybrid top-k ∪ top-p block
+//! mask feeding the sparse branch only — and [`svg_ear_attention`] —
+//! top-k plus error-aware linear compensation, with the mix weight
+//! derived from the pooled kept mass instead of a learned alpha.
+//!
 //! All functions are single-head: `q`, `k`, `v` are `(n, d)` row-major
 //! slices.  Tile loops run in ascending `j` order like the kernel's
 //! `fori_loop`, so f32 accumulation order matches the lowered HLO.
@@ -170,6 +177,46 @@ pub fn top_k_count(k_pct: f64, t_n: usize) -> usize {
     ((k_pct * t_n as f64).round() as usize).max(1)
 }
 
+/// Pooled block-score matrix `softmax(proj_q(pool(Q))
+/// proj_k(pool(K))^T / sqrt d)`: `(t_m * t_n)` row-major, each row a
+/// distribution over key blocks.  `proj = None` skips the projections
+/// — the training-free variants' scores.  Skipping is bit-identical
+/// to projecting by an exact identity matrix (an f32 dot product
+/// against 0/1 columns only ever adds exact zeros), which is what
+/// lets the sparge2-at-p=0 property test pin this against
+/// [`router_mask`] with identity projections.
+pub fn pooled_block_scores(q: &[f32], k: &[f32],
+                           proj: Option<(&[f32], &[f32])>, n: usize,
+                           d: usize, b_q: usize, b_k: usize)
+                           -> Vec<f32> {
+    let (t_m, t_n) = (n / b_q, n / b_k);
+    let mut qb = pool_blocks(q, n, d, b_q);
+    let mut kb = pool_blocks(k, n, d, b_k);
+    if let Some((proj_q, proj_k)) = proj {
+        qb = matmul(&qb, proj_q, t_m, d, d);
+        kb = matmul(&kb, proj_k, t_n, d, d);
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut p_c = matmul_nt(&qb, &kb, t_m, d, t_n);
+    for v in p_c.iter_mut() {
+        *v *= scale;
+    }
+    softmax_rows(&mut p_c, t_n);
+    p_c
+}
+
+/// Key-block indices of one score row sorted by descending score,
+/// ties broken by index (stable sort == jnp's stable argsort rank
+/// trick).  Every mask builder sorts this same way, so top-k and
+/// top-p selections are prefixes of one shared order and their union
+/// is just the longer prefix.
+fn sorted_row_indices(row: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a])
+        .unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
 /// The learnable router `R(Q, K) -> M_c` (Sec. 4, hard Top-k):
 /// `(t_m * t_n)` row-major mask, 1 = sparse branch.  Ties broken by
 /// index (stable sort), matching jnp's stable argsort rank trick.
@@ -179,30 +226,113 @@ pub fn router_mask(q: &[f32], k: &[f32], proj_q: &[f32], proj_k: &[f32],
                    k_pct: f64, n: usize, d: usize, b_q: usize,
                    b_k: usize) -> Vec<u8> {
     let (t_m, t_n) = (n / b_q, n / b_k);
-    let qb = matmul(&pool_blocks(q, n, d, b_q), proj_q, t_m, d, d);
-    let kb = matmul(&pool_blocks(k, n, d, b_k), proj_k, t_n, d, d);
-    let scale = 1.0 / (d as f32).sqrt();
-    let mut p_c = matmul_nt(&qb, &kb, t_m, d, t_n);
-    for v in p_c.iter_mut() {
-        *v *= scale;
-    }
-    softmax_rows(&mut p_c, t_n);
+    let p_c = pooled_block_scores(q, k, Some((proj_q, proj_k)), n, d,
+                                  b_q, b_k);
     let kc = top_k_count(k_pct, t_n);
     let mut mask = vec![0u8; t_m * t_n];
-    let mut idx: Vec<usize> = Vec::with_capacity(t_n);
     for (row, mrow) in p_c.chunks_exact(t_n)
         .zip(mask.chunks_exact_mut(t_n))
     {
-        idx.clear();
-        idx.extend(0..t_n);
-        // stable sort on descending score == jnp.argsort(-p) ranks
-        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a])
-            .unwrap_or(std::cmp::Ordering::Equal));
-        for &j in &idx[..kc] {
+        for &j in &sorted_row_indices(row)[..kc] {
             mrow[j] = 1;
         }
     }
     mask
+}
+
+/// Cumulative softmax mass a `sparge2` top-p prefix must reach before
+/// it stops growing.
+pub const SPARGE2_TOP_P: f64 = 0.90;
+
+/// Error tolerance for `svg_ear` routing: query blocks whose estimated
+/// sparse-approximation error (1 − kept pooled mass) stays at or below
+/// this serve sparse-only; higher-error blocks route their complement
+/// through the H/Z linear branch as compensation.
+pub const SVG_EAR_TAU: f32 = 0.02;
+
+/// Minimal score-sorted prefix length whose cumulative mass reaches
+/// `top_p`: 0 when `top_p <= 0` (a mass of zero already qualifies),
+/// the full row when even all blocks fall short of `top_p`.
+/// Accumulates in sorted order in f64; the minimal-prefix property
+/// test recomputes this exact loop, so keep it dumb.
+fn top_p_count(row: &[f32], idx: &[usize], top_p: f64) -> usize {
+    let mut cum = 0.0f64;
+    let mut np = 0;
+    for &j in idx {
+        if cum >= top_p {
+            break;
+        }
+        cum += row[j] as f64;
+        np += 1;
+    }
+    np
+}
+
+/// The `sparge2` hybrid mask (SpargeAttention2-style, training-free):
+/// per row, top-k ∪ top-p over the parameter-free pooled scores.
+/// Both selections are prefixes of the same stable descending sort,
+/// so the union is the longer prefix — `max(kc, np)` blocks.
+/// `top_p = 0` degenerates to pure top-k (bit-equal to
+/// [`router_mask`] with identity projections, property-tested), and
+/// the `kc >= 1` floor from [`top_k_count`] means no row ever
+/// empties.
+#[allow(clippy::too_many_arguments)]
+pub fn sparge2_mask(q: &[f32], k: &[f32], k_pct: f64, top_p: f64,
+                    n: usize, d: usize, b_q: usize, b_k: usize)
+                    -> Vec<u8> {
+    let (t_m, t_n) = (n / b_q, n / b_k);
+    let p_c = pooled_block_scores(q, k, None, n, d, b_q, b_k);
+    let kc = top_k_count(k_pct, t_n);
+    let mut mask = vec![0u8; t_m * t_n];
+    for (row, mrow) in p_c.chunks_exact(t_n)
+        .zip(mask.chunks_exact_mut(t_n))
+    {
+        let idx = sorted_row_indices(row);
+        let keep = kc.max(top_p_count(row, &idx, top_p)).min(t_n);
+        for &j in &idx[..keep] {
+            mrow[j] = 1;
+        }
+    }
+    mask
+}
+
+/// Parameter-free error-aware routing (the `svg_ear` variant,
+/// SVG-EAR-style): a top-k mask over the un-projected pooled scores
+/// plus one mix weight per query block derived from the same scores.
+/// The pooled softmax row is a cheap proxy for the true attention
+/// mass, so `err_i = 1 − Σ_{kept j} p_c[i][j]` estimates the softmax
+/// mass the sparse branch discards for block i.  `err <= τ` ⇒ mix
+/// 1.0 (pure sparse — the linear branch is skipped entirely);
+/// otherwise mix = kept mass, so the linear compensation weight
+/// `1 − mix` tracks the estimated error.  No RNG, no learned state:
+/// identical inputs give identical routing (property-tested).
+pub fn svg_ear_routing(q: &[f32], k: &[f32], k_pct: f64, n: usize,
+                       d: usize, b_q: usize, b_k: usize)
+                       -> (Vec<u8>, Vec<f32>) {
+    let (t_m, t_n) = (n / b_q, n / b_k);
+    let p_c = pooled_block_scores(q, k, None, n, d, b_q, b_k);
+    let kc = top_k_count(k_pct, t_n);
+    let mut mask = vec![0u8; t_m * t_n];
+    let mut mix = Vec::with_capacity(t_m);
+    for (row, mrow) in p_c.chunks_exact(t_n)
+        .zip(mask.chunks_exact_mut(t_n))
+    {
+        for &j in &sorted_row_indices(row)[..kc] {
+            mrow[j] = 1;
+        }
+        // sum kept mass in ascending j (mask order), not sort order,
+        // so the estimate is independent of tie-break details
+        let kept_mass: f32 = row.iter().zip(mrow.iter())
+            .filter(|&(_, &m)| m == 1)
+            .map(|(p, _)| *p)
+            .sum();
+        mix.push(if 1.0 - kept_mass <= SVG_EAR_TAU {
+            1.0
+        } else {
+            kept_mass.clamp(0.0, 1.0)
+        });
+    }
+    (mask, mix)
 }
 
 /// Symmetric per-row INT8 quantization: returns the `i8` matrix and
@@ -361,7 +491,8 @@ struct QuantBlock {
     qq_f: Vec<f32>,
 }
 
-/// Full SLA2 op for one head (Eq. 13): route, run both branches, mix.
+/// Full SLA2 op for one head (Eq. 13): route, run both branches, mix
+/// with `a = sigmoid(alpha_logit)` per query block.
 ///
 /// `mask` is the `(t_m * t_n)` block mask (1 = sparse).  `quant`
 /// picks how the INT8 points of Sec. 5 execute in the sparse branch
@@ -372,10 +503,33 @@ pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
                              mask: &[u8], alpha_logit: &[f32], n: usize,
                              d: usize, b_q: usize, b_k: usize,
                              quant: QuantMode) -> Vec<f32> {
+    let mix: Vec<f32> =
+        alpha_logit.iter().map(|&l| sigmoid(l)).collect();
+    masked_attention_core(q, k, v, mask, &mix, n, d, b_q, b_k, quant)
+}
+
+/// The shared masked sparse+linear engine every variant dispatches
+/// into: online-softmax sparse branch over the masked-in tiles (with
+/// the Alg. 2 INT8 points per `quant`), H/Z linear branch over each
+/// query block's complement, combined per block as
+/// `O_i = mix[i] ⊙ O_s + (1 − mix[i]) ⊙ O_l`.
+///
+/// `mix[i]` is the post-sigmoid weight: `sla2` passes
+/// `sigmoid(alpha_logit)`, `svg_ear` its error-derived kept-mass
+/// weights, `sparge2` all-1.0.  A weight of exactly 1.0
+/// short-circuits the linear branch for that block — the `(1 − mix)`
+/// term is an exact f32 zero and the denominator is finite, so
+/// skipping is value-identical while the sparse-only variants never
+/// pay for phi/H/Z.
+#[allow(clippy::too_many_arguments)]
+fn masked_attention_core(q: &[f32], k: &[f32], v: &[f32],
+                         mask: &[u8], mix: &[f32], n: usize,
+                         d: usize, b_q: usize, b_k: usize,
+                         quant: QuantMode) -> Vec<f32> {
     use std::sync::atomic::Ordering::Relaxed;
     let (t_m, t_n) = (n / b_q, n / b_k);
     debug_assert_eq!(mask.len(), t_m * t_n);
-    debug_assert_eq!(alpha_logit.len(), t_m);
+    debug_assert_eq!(mix.len(), t_m);
     let kept: u64 = mask.iter().map(|&m| m as u64).sum();
     let st = stats();
     st.attn_heads.fetch_add(1, Relaxed);
@@ -394,8 +548,20 @@ pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
     }
 
     let k_sm = smooth_k(k, n, d);
-    let qphi = phi_softmax(q, d);
-    let kphi = phi_softmax(&k_sm, d);
+    // phi features and per-tile H/Z exist only to serve blocks that
+    // actually mix in the linear branch; an all-1.0 mix (sparge2, or
+    // svg_ear under its error tolerance) skips the whole apparatus
+    let needs_linear = mix.iter().any(|&a| a < 1.0);
+    let qphi = if needs_linear {
+        phi_softmax(q, d)
+    } else {
+        Vec::new()
+    };
+    let kphi = if needs_linear {
+        phi_softmax(&k_sm, d)
+    } else {
+        Vec::new()
+    };
     let scale = 1.0 / (d as f32).sqrt();
 
     // per-tile INT8 K/V quantization — loop-invariant across query
@@ -432,22 +598,25 @@ pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
     // ascending j order (the kernel's fori_loop order)
     let mut h_tiles = Vec::with_capacity(t_n);
     let mut z_tiles = Vec::with_capacity(t_n);
-    for j in 0..t_n {
-        let kp = &kphi[j * b_k * d..(j + 1) * b_k * d];
-        let vt = &v[j * b_k * d..(j + 1) * b_k * d];
-        h_tiles.push(matmul_tn(kp, vt, b_k, d, d));
-        let mut z = vec![0.0f32; d];
-        for row in kp.chunks_exact(d) {
-            for (zz, x) in z.iter_mut().zip(row) {
-                *zz += x;
+    if needs_linear {
+        for j in 0..t_n {
+            let kp = &kphi[j * b_k * d..(j + 1) * b_k * d];
+            let vt = &v[j * b_k * d..(j + 1) * b_k * d];
+            h_tiles.push(matmul_tn(kp, vt, b_k, d, d));
+            let mut z = vec![0.0f32; d];
+            for row in kp.chunks_exact(d) {
+                for (zz, x) in z.iter_mut().zip(row) {
+                    *zz += x;
+                }
             }
+            z_tiles.push(z);
         }
-        z_tiles.push(z);
     }
 
     let mut out = vec![0.0f32; n * d];
     for i in 0..t_m {
         let qi = &q[i * b_q * d..(i + 1) * b_q * d];
+        let block_linear = mix[i] < 1.0;
         // hoisted Alg. 2 line 13: quant(Q_i) is loop-invariant
         let q_quant: Option<QuantBlock> =
             quant.is_quantized().then(|| {
@@ -464,17 +633,23 @@ pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
         let mut m_i = vec![NEG_INF; b_q];
         let mut l_i = vec![0.0f32; b_q];
         let mut acc = vec![0.0f32; b_q * d];
-        // ---- linear branch: complement accumulation -----------------
-        let mut h = vec![0.0f32; d * d];
-        let mut z = vec![0.0f32; d];
+        // ---- linear branch: complement accumulation (only for
+        //      blocks that actually mix, i.e. mix[i] < 1.0) ----------
+        let (mut h, mut z) = if block_linear {
+            (vec![0.0f32; d * d], vec![0.0f32; d])
+        } else {
+            (Vec::new(), Vec::new())
+        };
 
         for j in 0..t_n {
             if mask[i * t_n + j] == 0 {
-                for (hh, x) in h.iter_mut().zip(&h_tiles[j]) {
-                    *hh += x;
-                }
-                for (zz, x) in z.iter_mut().zip(&z_tiles[j]) {
-                    *zz += x;
+                if block_linear {
+                    for (hh, x) in h.iter_mut().zip(&h_tiles[j]) {
+                        *hh += x;
+                    }
+                    for (zz, x) in z.iter_mut().zip(&z_tiles[j]) {
+                        *zz += x;
+                    }
                 }
                 continue;
             }
@@ -550,20 +725,36 @@ pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
             }
         }
 
-        // Alg. 2 lines 23-24 + the Eq. 13 alpha mix.  The whole query
+        // Alg. 2 lines 23-24 + the Eq. 13 mix.  The whole query
         // block's o_l = phi(Q_i) @ H is one (b_q, d) x (d, d) matmul
         // (same ikj accumulation order as the old per-row loops).
-        let a = sigmoid(alpha_logit[i]);
-        let qp_block = &qphi[i * b_q * d..(i + 1) * b_q * d];
-        let ol = matmul(qp_block, &h, b_q, d, d);
-        for r in 0..b_q {
-            let l_safe = if l_i[r] > 0.0 { l_i[r] } else { 1.0 };
-            let qp = &qp_block[r * d..(r + 1) * d];
-            let den = dot(qp, &z) + EPS_LINEAR;
-            let orow = &mut out[(i * b_q + r) * d..(i * b_q + r + 1) * d];
-            for (c, o) in orow.iter_mut().enumerate() {
-                let o_s = acc[r * d + c] / l_safe;
-                *o = a * o_s + (1.0 - a) * ol[r * d + c] / den;
+        // mix[i] == 1.0 collapses to the pure sparse output — the
+        // `(1 − mix)` term would be an exact zero times a finite
+        // value (den >= EPS_LINEAR), so the fast path is
+        // value-identical to mixing.
+        if block_linear {
+            let a = mix[i];
+            let qp_block = &qphi[i * b_q * d..(i + 1) * b_q * d];
+            let ol = matmul(qp_block, &h, b_q, d, d);
+            for r in 0..b_q {
+                let l_safe = if l_i[r] > 0.0 { l_i[r] } else { 1.0 };
+                let qp = &qp_block[r * d..(r + 1) * d];
+                let den = dot(qp, &z) + EPS_LINEAR;
+                let orow =
+                    &mut out[(i * b_q + r) * d..(i * b_q + r + 1) * d];
+                for (c, o) in orow.iter_mut().enumerate() {
+                    let o_s = acc[r * d + c] / l_safe;
+                    *o = a * o_s + (1.0 - a) * ol[r * d + c] / den;
+                }
+            }
+        } else {
+            for r in 0..b_q {
+                let l_safe = if l_i[r] > 0.0 { l_i[r] } else { 1.0 };
+                let orow =
+                    &mut out[(i * b_q + r) * d..(i * b_q + r + 1) * d];
+                for (c, o) in orow.iter_mut().enumerate() {
+                    *o = acc[r * d + c] / l_safe;
+                }
             }
         }
     }
@@ -576,12 +767,49 @@ pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
 pub fn sla2_attention(q: &[f32], k: &[f32], v: &[f32], p: &Sla2Params,
                       k_pct: f64, n: usize, d: usize, b_q: usize,
                       b_k: usize, quant: QuantMode) -> Vec<f32> {
+    stats().sla2_heads
+        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     // router sees the UN-smoothed K (sla2.py order); smoothing is
     // softmax-invariant for the router scores anyway
     let mask = router_mask(q, k, p.proj_q, p.proj_k, k_pct, n, d, b_q,
                            b_k);
     sla2_attention_masked(q, k, v, &mask, p.alpha_logit, n, d, b_q, b_k,
                           quant)
+}
+
+/// The `sparge2` variant: hybrid top-k+top-p mask, sparse branch
+/// only.  The complement is dropped outright (no linear
+/// compensation) — true to SpargeAttention2, which bets the top-p
+/// union already captured the mass worth keeping.  Shares the
+/// online-softmax + INT8 machinery with `sla2` via
+/// [`sla2_attention_masked`]'s core.
+#[allow(clippy::too_many_arguments)]
+pub fn sparge2_attention(q: &[f32], k: &[f32], v: &[f32], k_pct: f64,
+                         top_p: f64, n: usize, d: usize, b_q: usize,
+                         b_k: usize, quant: QuantMode) -> Vec<f32> {
+    stats().sparge2_heads
+        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let mask = sparge2_mask(q, k, k_pct, top_p, n, d, b_q, b_k);
+    let mix = vec![1.0f32; n / b_q];
+    masked_attention_core(q, k, v, &mask, &mix, n, d, b_q, b_k, quant)
+}
+
+/// The `svg_ear` variant: top-k sparse branch plus error-aware linear
+/// compensation — [`svg_ear_routing`] decides per query block whether
+/// the pooled-mass error estimate warrants routing the complement
+/// through the H/Z branch.  Parameter-free: no learned projections,
+/// no learned alpha.
+#[allow(clippy::too_many_arguments)]
+pub fn svg_ear_attention(q: &[f32], k: &[f32], v: &[f32], k_pct: f64,
+                         n: usize, d: usize, b_q: usize, b_k: usize,
+                         quant: QuantMode) -> Vec<f32> {
+    use std::sync::atomic::Ordering::Relaxed;
+    let (mask, mix) = svg_ear_routing(q, k, k_pct, n, d, b_q, b_k);
+    let compensated = mix.iter().filter(|&&a| a < 1.0).count() as u64;
+    let st = stats();
+    st.svg_ear_heads.fetch_add(1, Relaxed);
+    st.ear_compensated_blocks.fetch_add(compensated, Relaxed);
+    masked_attention_core(q, k, v, &mask, &mix, n, d, b_q, b_k, quant)
 }
 
 #[cfg(test)]
@@ -779,7 +1007,114 @@ pub(crate) mod tests {
 
     // NOTE: the symmetric-scale roundtrip bound is property-tested in
     // rust/tests/native_backend.rs (util::proptest harness) — no unit
-    // copy here, one place to update if the bound changes.
+    // copy here, one place to update if the bound changes.  Likewise
+    // the sparge2/svg_ear mask invariants (minimal top-p prefix,
+    // union never empties, p=0 bit-equals top-k, routing determinism)
+    // — the unit tests below cover the shapes of behavior, the
+    // property tests the invariants.
+
+    /// Block-aligned one-hot inputs: every token of query block i
+    /// points at the basis vector of key block 2i (needs t_n = 2 t_m
+    /// and d >= t_n), so pooled scores are amp at j = 2i and 0
+    /// elsewhere — maximally peaked rows for routing tests.  v is
+    /// random so outputs are informative.
+    fn onehot_qkv(n: usize, d: usize, b_q: usize, b_k: usize,
+                  amp: f32, seed: u64)
+                  -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (t_m, t_n) = (n / b_q, n / b_k);
+        assert_eq!(t_n, 2 * t_m);
+        assert!(d >= t_n);
+        let mut q = vec![0.0f32; n * d];
+        for i in 0..t_m {
+            for r in 0..b_q {
+                q[(i * b_q + r) * d + 2 * i] = amp;
+            }
+        }
+        let mut k = vec![0.0f32; n * d];
+        for j in 0..t_n {
+            for r in 0..b_k {
+                k[(j * b_k + r) * d + j] = 1.0;
+            }
+        }
+        let mut rng = Pcg32::seeded(seed);
+        let v = rng.normal_vec(n * d);
+        (q, k, v)
+    }
+
+    #[test]
+    fn sparge2_topp_widens_on_flat_scores_only() {
+        let (n, d, b_q, b_k) = (32, 16, 8, 4);
+        let t_n = n / b_k;
+        // flat pooled scores (all-zero q/k): every block carries
+        // exactly 1/t_n mass, so reaching p = 0.9 needs all t_n
+        let q0 = vec![0.0f32; n * d];
+        let k0 = vec![0.0f32; n * d];
+        let flat = sparge2_mask(&q0, &k0, 0.10, 0.90, n, d, b_q, b_k);
+        for row in flat.chunks_exact(t_n) {
+            assert_eq!(row.iter().map(|&m| m as usize).sum::<usize>(),
+                       t_n, "uniform rows must widen to the full row");
+        }
+        // peaked scores: the top block alone carries ~all the mass,
+        // so top-p adds nothing beyond top-k's kc = 1
+        let (q, k, _) = onehot_qkv(n, d, b_q, b_k, 40.0, 9);
+        let peaked = sparge2_mask(&q, &k, 0.10, 0.90, n, d, b_q, b_k);
+        for (i, row) in peaked.chunks_exact(t_n).enumerate() {
+            assert_eq!(row.iter().map(|&m| m as usize).sum::<usize>(),
+                       1);
+            assert_eq!(row[2 * i], 1, "hot block must be the kept one");
+        }
+    }
+
+    #[test]
+    fn sparge2_matches_dense_masked_softmax_on_its_own_mask() {
+        let (n, d, b_q, b_k) = (32, 16, 8, 4);
+        let (q, k, v) = qkv(n, d, 10);
+        let mask = sparge2_mask(&q, &k, 0.25, 0.5, n, d, b_q, b_k);
+        let got = sparge2_attention(&q, &k, &v, 0.25, 0.5, n, d, b_q,
+                                    b_k, QuantMode::Off);
+        let k_sm = smooth_k(&k, n, d);
+        let want = dense_sparse_ref(&q, &k_sm, &v, &mask, n, d, b_q,
+                                    b_k);
+        assert!(rel_err(&got, &want) < 1e-5,
+                "sparge2 sparse-only output diverged: {}",
+                rel_err(&got, &want));
+    }
+
+    #[test]
+    fn svg_ear_compensates_exactly_the_high_error_blocks() {
+        let (n, d, b_q, b_k) = (32, 16, 8, 4);
+        let t_n = n / b_k;
+        // flat rows: kept mass = kc/t_n = 0.125, err = 0.875 > tau
+        // => every block compensates with mix = kept mass
+        let q0 = vec![0.0f32; n * d];
+        let k0 = vec![0.0f32; n * d];
+        let (_, mix) = svg_ear_routing(&q0, &k0, 0.10, n, d, b_q, b_k);
+        for &a in &mix {
+            assert!((a - 1.0 / t_n as f32).abs() < 1e-6,
+                    "uniform rows must mix by kept mass, got {a}");
+        }
+        // peaked rows: kept mass ~ 1, err < tau => pure sparse
+        let (q, k, _) = onehot_qkv(n, d, b_q, b_k, 40.0, 11);
+        let (_, mix) = svg_ear_routing(&q, &k, 0.10, n, d, b_q, b_k);
+        assert!(mix.iter().all(|&a| a == 1.0),
+                "peaked rows must serve sparse-only: {mix:?}");
+    }
+
+    #[test]
+    fn svg_ear_equals_sparge2_when_no_block_compensates() {
+        // on peaked inputs both variants keep the same top-k mask and
+        // svg_ear's mix is all-1.0, so the two ops must agree
+        // bit-for-bit through the shared core (including Int8)
+        let (n, d, b_q, b_k) = (32, 16, 8, 4);
+        let (q, k, v) = onehot_qkv(n, d, b_q, b_k, 40.0, 12);
+        for mode in [QuantMode::Off, QuantMode::Int8] {
+            let ear = svg_ear_attention(&q, &k, &v, 0.10, n, d, b_q,
+                                        b_k, mode);
+            let sp = sparge2_attention(&q, &k, &v, 0.10, 0.0, n, d,
+                                       b_q, b_k, mode);
+            assert_eq!(ear, sp, "{mode:?} outputs diverged");
+        }
+    }
 
     #[test]
     fn full_attention_row_stochastic_sanity() {

@@ -20,7 +20,14 @@
 //! which is what the parity tests pin); otherwise from a deterministic
 //! seeded init over built-in model configs.
 //!
-//! The `sla2` variant's INT8 points run in one of three
+//! The backend implements the closed variant set
+//! [`model::SUPPORTED_VARIANTS`] — `full`, the paper's
+//! `sla2`/`sla2_noquant`, and the training-free comparison variants
+//! `sparge2` (hybrid top-k ∪ top-p, sparse-only) and `svg_ear`
+//! (error-aware linear compensation), all sharing one masked
+//! sparse+linear core (docs/KERNELS.md, "Variant dispatch").
+//!
+//! The quantizing variants' INT8 points run in one of three
 //! [`QuantMode`]s (`ServeConfig::quant_mode`): `"int8"` (default) is
 //! the real integer path — `i8` operand buffers, `i8 x i8 -> i32`
 //! GEMMs, per-tile dequant; `"sim"` is the f32 fake-quant simulation
@@ -55,10 +62,23 @@ pub use model::{AttnMode, NativeParams};
 pub struct NativeKernelStats {
     /// per-sample DiT forwards
     pub denoise_forwards: AtomicU64,
-    /// SLA2 head-attention invocations
+    /// masked sparse(+linear) head-attention invocations, all
+    /// variants combined
     pub attn_heads: AtomicU64,
     /// full-softmax head invocations (dense tier / full variant)
     pub full_heads: AtomicU64,
+    /// heads served by the `sla2`/`sla2_noquant` variants (learned
+    /// router + alpha mix)
+    pub sla2_heads: AtomicU64,
+    /// heads served by the `sparge2` variant (top-k ∪ top-p mask,
+    /// sparse branch only)
+    pub sparge2_heads: AtomicU64,
+    /// heads served by the `svg_ear` variant (error-aware routing)
+    pub svg_ear_heads: AtomicU64,
+    /// `svg_ear` query blocks whose error estimate exceeded the
+    /// tolerance and routed their complement through the linear
+    /// branch as compensation
+    pub ear_compensated_blocks: AtomicU64,
     /// SLA2 heads that ran a quantized sparse path (int8 + sim)
     pub quant_heads: AtomicU64,
     /// quantized heads served by the REAL integer kernels
@@ -69,7 +89,10 @@ pub struct NativeKernelStats {
     pub sim_heads: AtomicU64,
     /// (query-block, key-block) tiles routed to the sparse branch
     pub sparse_tiles: AtomicU64,
-    /// tiles routed to the linear branch
+    /// tiles NOT routed to the sparse branch: linear-branch
+    /// compensation for `sla2`/`svg_ear`, dropped outright for
+    /// `sparge2` — either way they are the skipped fraction that
+    /// [`NativeKernelStats::observed_sparsity`] measures
     pub linear_tiles: AtomicU64,
     /// executes rejected because a sample's output contained NaN/Inf
     /// (the numerical-integrity guard turning garbage into a typed
@@ -85,6 +108,11 @@ impl NativeKernelStats {
             .push("denoise_forwards", g(&self.denoise_forwards))
             .push("attn_heads", g(&self.attn_heads))
             .push("full_heads", g(&self.full_heads))
+            .push("sla2_heads", g(&self.sla2_heads))
+            .push("sparge2_heads", g(&self.sparge2_heads))
+            .push("svg_ear_heads", g(&self.svg_ear_heads))
+            .push("ear_compensated_blocks",
+                  g(&self.ear_compensated_blocks))
             .push("quant_heads", g(&self.quant_heads))
             .push("int8_heads", g(&self.int8_heads))
             .push("sim_heads", g(&self.sim_heads))
@@ -368,8 +396,18 @@ mod tests {
         let ts1 = Tensor::from_f32(&[1], vec![0.5]).unwrap();
         let ys1 = Tensor::from_i32(&[1], vec![0]).unwrap();
         assert!(b.execute("sla2", "s90", &bad, &ts1, &ys1).is_err());
-        // unknown variant
-        assert!(b.execute("vsa", "s95", &x, &ts, &ys).is_err());
+        // unknown variant: both compile and execute reject it, and
+        // the error lists the WHOLE supported set so operators can
+        // discover the variants that do exist
+        for err in [format!("{:#}", b.compile("vsa", "s95", 2)
+                        .unwrap_err()),
+                    format!("{:#}", b.execute("vsa", "s95", &x, &ts,
+                                              &ys).unwrap_err())] {
+            for v in model::SUPPORTED_VARIANTS {
+                assert!(err.contains(v),
+                        "error must list {v:?}, got: {err}");
+            }
+        }
     }
 
     #[test]
@@ -448,5 +486,22 @@ mod tests {
         let snap = stats().snapshot();
         assert!(snap.get("sparse_tiles").unwrap().as_usize().unwrap()
                 > 0);
+        // per-variant counters: each variant's execute bumps its own
+        // head counter (process-wide, so assert deltas)
+        for (variant, counter) in
+            [("sla2", &stats().sla2_heads),
+             ("sparge2", &stats().sparge2_heads),
+             ("svg_ear", &stats().svg_ear_heads)]
+        {
+            let before = counter.load(Ordering::Relaxed);
+            b.execute(variant, "s90", &x, &ts, &ys).unwrap();
+            assert!(counter.load(Ordering::Relaxed) > before,
+                    "{variant} execute must bump its head counter");
+        }
+        for key in ["sla2_heads", "sparge2_heads", "svg_ear_heads",
+                    "ear_compensated_blocks"] {
+            assert!(stats().snapshot().get(key).is_some(),
+                    "snapshot must carry {key}");
+        }
     }
 }

@@ -3,7 +3,9 @@
 //! Mirrors `python/compile/model.py` operation-for-operation: AdaLN-
 //! zero blocks over patchified video latents, conditioned on a
 //! diffusion timestep and class label, with the attention op dispatched
-//! per head to the chosen variant (full softmax or SLA2).
+//! per head to the chosen variant (full softmax, SLA2, or the
+//! training-free comparison variants `sparge2` / `svg_ear` — see
+//! [`SUPPORTED_VARIANTS`]).
 //!
 //! [`NativeParams`] is parsed from the **canonical flatten order** —
 //! jax's `tree_flatten` order (dict keys sorted, lists in sequence)
@@ -30,6 +32,13 @@ use super::attention::{self, QuantMode, Sla2Params};
 use super::linalg::{add_bias, gelu, layer_norm_rows, matmul,
                     modulate_rows};
 
+/// Attention variants the native backend implements — the closed set
+/// `attn_mode` resolves and both the serving config validation and
+/// the per-request variant check admit.  Keep in sync with the
+/// [`AttnMode`] arms and the README knob table.
+pub const SUPPORTED_VARIANTS: [&str; 5] =
+    ["full", "sla2", "sla2_noquant", "sparge2", "svg_ear"];
+
 /// Which attention op the forward runs (per head).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum AttnMode {
@@ -39,6 +48,14 @@ pub enum AttnMode {
     /// `quant` picks how the INT8 points of Sec. 5 execute in the
     /// sparse path (real integer GEMMs, f32 simulation, or none).
     Sla2 { k_pct: f64, quant: QuantMode },
+    /// SpargeAttention2-style hybrid top-k ∪ top-p block mask feeding
+    /// the sparse branch only (training-free: no projections, no
+    /// alpha, the complement is dropped).
+    Sparge2 { k_pct: f64, top_p: f64, quant: QuantMode },
+    /// SVG-EAR-style parameter-free error-aware routing: top-k sparse
+    /// branch plus linear compensation on query blocks whose pooled
+    /// kept-mass error estimate exceeds the tolerance.
+    SvgEar { k_pct: f64, quant: QuantMode },
 }
 
 /// One transformer block's parameters (canonical key order).
@@ -316,6 +333,16 @@ fn head_attention(cfg: &ModelConfig, blk: &BlockParams, q: &[f32],
                 alpha_logit: &blk.alpha_logit,
             },
             k_pct, n, d, cfg.b_q, cfg.b_k, quant),
+        // the training-free variants never read block parameters —
+        // that is the point of the comparison
+        AttnMode::Sparge2 { k_pct, top_p, quant } => {
+            attention::sparge2_attention(q, k, v, k_pct, top_p, n, d,
+                                         cfg.b_q, cfg.b_k, quant)
+        }
+        AttnMode::SvgEar { k_pct, quant } => {
+            attention::svg_ear_attention(q, k, v, k_pct, n, d, cfg.b_q,
+                                         cfg.b_k, quant)
+        }
     }
 }
 
@@ -467,8 +494,10 @@ pub fn tier_k_pct(tier: &str) -> Option<f64> {
 
 /// Resolve (variant, tier) to the attention mode the forward runs.
 /// `quant_mode` is the backend's configured `quant_mode` knob — it
-/// applies to the `sla2` variant only (`sla2_noquant` always runs the
-/// exact f32 sparse branch, `full` never quantizes).
+/// applies to the quantizing variants (`sla2`, `sparge2`, `svg_ear`);
+/// `sla2_noquant` always runs the exact f32 sparse branch and `full`
+/// never quantizes.  Unknown variants fail with the full supported
+/// set spelled out so operators can discover what exists.
 pub fn attn_mode(variant: &str, tier: &str, quant_mode: QuantMode)
                  -> Result<AttnMode> {
     let k_pct = tier_k_pct(tier).with_context(|| format!(
@@ -483,9 +512,15 @@ pub fn attn_mode(variant: &str, tier: &str, quant_mode: QuantMode)
         "sla2_noquant" => {
             Ok(AttnMode::Sla2 { k_pct, quant: QuantMode::Off })
         }
+        "sparge2" => Ok(AttnMode::Sparge2 {
+            k_pct,
+            top_p: attention::SPARGE2_TOP_P,
+            quant: quant_mode,
+        }),
+        "svg_ear" => Ok(AttnMode::SvgEar { k_pct, quant: quant_mode }),
         other => bail!("native backend does not implement attention \
-                        variant {other:?} (have: full, sla2, \
-                        sla2_noquant)"),
+                        variant {other:?} (supported: {})",
+                       SUPPORTED_VARIANTS.join(", ")),
     }
 }
 
@@ -564,7 +599,12 @@ mod tests {
         let x = rng.normal_vec(cfg.video_numel());
         for mode in [AttnMode::Full,
                      AttnMode::Sla2 { k_pct: 0.10,
-                                      quant: QuantMode::Int8 }] {
+                                      quant: QuantMode::Int8 },
+                     AttnMode::Sparge2 { k_pct: 0.10,
+                                         top_p: 0.9,
+                                         quant: QuantMode::Int8 },
+                     AttnMode::SvgEar { k_pct: 0.10,
+                                        quant: QuantMode::Int8 }] {
             let vel = denoise_forward(&cfg, &p, &x, 0.7, 3, mode, false)
                 .unwrap();
             assert!(vel.iter().all(|v| *v == 0.0),
@@ -629,10 +669,29 @@ mod tests {
         assert_eq!(attn_mode("sla2_noquant", "s90", qm).unwrap(),
                    AttnMode::Sla2 { k_pct: 0.10,
                                     quant: QuantMode::Off });
-        assert!(attn_mode("vsa", "s95", qm).is_err());
+        // the training-free variants resolve with the configured
+        // quant mode and sparge2 picks up the top-p constant
+        assert_eq!(attn_mode("sparge2", "s90", qm).unwrap(),
+                   AttnMode::Sparge2 {
+                       k_pct: 0.10,
+                       top_p: attention::SPARGE2_TOP_P,
+                       quant: qm,
+                   });
+        assert_eq!(attn_mode("svg_ear", "s95", QuantMode::Off).unwrap(),
+                   AttnMode::SvgEar { k_pct: 0.05,
+                                      quant: QuantMode::Off });
         // a typo'd tier must ERROR, not silently serve dense attention
         assert!(attn_mode("sla2", "s99", qm).is_err());
-        // unimplemented variants error even at the dense tier
-        assert!(attn_mode("vsa", "dense", qm).is_err());
+        // unimplemented variants error even at the dense tier, and the
+        // message lists the whole supported set so operators can
+        // discover the variants that DO exist
+        for tier in ["s95", "dense"] {
+            let err = format!("{:#}",
+                              attn_mode("vsa", tier, qm).unwrap_err());
+            for v in SUPPORTED_VARIANTS {
+                assert!(err.contains(v),
+                        "error must list {v:?}, got: {err}");
+            }
+        }
     }
 }

@@ -9,9 +9,14 @@
 //!   3. the pool returns to all-idle — the queue drains and every
 //!      shard ends the test in the `up` state.
 //!
-//! The storm is parameterized by two env vars so CI can sweep seeds:
-//!   `SLA2_CHAOS_SEED`  (default 1)  — the fault plan's RNG seed
-//!   `SLA2_FAULT_PLAN`  (default below) — a `--fault-plan` spec
+//! The storm is parameterized by three env vars so CI can sweep seeds:
+//!   `SLA2_CHAOS_SEED`     (default 1) — the fault plan's RNG seed
+//!   `SLA2_FAULT_PLAN`     (default below) — a `--fault-plan` spec
+//!   `SLA2_CHAOS_VARIANTS` (default "sla2,sparge2,svg_ear") —
+//!       comma-separated attention-variant overrides the storm cycles
+//!       through, so requests split across per-variant scheduling
+//!       classes (each class compiles its own executable) while the
+//!       exactly-once invariants must keep holding
 //!
 //! Plans used here must have FINITE panic clauses (`nth=`-based, not
 //! always-firing) so liveness invariants 2 and 3 are satisfiable;
@@ -57,6 +62,21 @@ fn chaos_seed() -> u64 {
 fn fault_spec() -> String {
     std::env::var("SLA2_FAULT_PLAN")
         .unwrap_or_else(|_| DEFAULT_STORM.to_string())
+}
+
+/// Attention-variant overrides the storm cycles through.  The mock
+/// processors ignore the variant (clips are a pure function of the
+/// seed), which is exactly what makes this a scheduling test: variants
+/// split the queue into per-variant compile classes and force
+/// variant-homogeneous batches, and conservation must survive the
+/// extra class fragmentation under faults.
+fn chaos_variants() -> Vec<String> {
+    std::env::var("SLA2_CHAOS_VARIANTS")
+        .unwrap_or_else(|_| "sla2,sparge2,svg_ear".to_string())
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
 }
 
 fn clip_for_seed(seed: u64) -> Tensor {
@@ -181,7 +201,24 @@ fn chaos_storm_resolves_every_request_and_leaks_no_slots() {
         Ok(FaultyClipProcessor { injector: p.execute_injector(shard) })
     });
 
-    // mixed storm: one-shot and streaming submissions interleaved
+    // mixed storm: one-shot and streaming submissions interleaved,
+    // cycling through per-request variant overrides so the scheduler
+    // juggles several per-variant compile classes at once (plus the
+    // default class, from requests with no override)
+    let variants = chaos_variants();
+    assert!(!variants.is_empty(), "SLA2_CHAOS_VARIANTS must name at \
+                                   least one variant");
+    let opts_for = |i: usize| {
+        if i % (variants.len() + 1) == variants.len() {
+            // every (len+1)-th request rides the server default
+            sla2::coordinator::SubmitOpts::default()
+        } else {
+            sla2::coordinator::SubmitOpts {
+                variant: Some(variants[i % (variants.len() + 1)].clone()),
+                ..Default::default()
+            }
+        }
+    };
     const N: usize = 32;
     let mut oneshots = Vec::new();
     let mut streams = Vec::new();
@@ -189,11 +226,12 @@ fn chaos_storm_resolves_every_request_and_leaks_no_slots() {
         let seed = 1000 + i as u64;
         if i % 4 == 3 {
             streams.push(h.gateway
-                .submit_streaming(0, seed, 4, "s90")
+                .submit_streaming_with(0, seed, 4, "s90", opts_for(i))
                 .expect("storm submit"));
         } else {
             oneshots.push((seed,
-                           h.gateway.submit(0, seed, 4, "s90")
+                           h.gateway.submit_with(0, seed, 4, "s90",
+                                                 opts_for(i))
                                .expect("storm submit")));
         }
     }

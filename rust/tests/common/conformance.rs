@@ -1,0 +1,185 @@
+//! Shared attention-conformance harness: one parity suite that every
+//! native attention variant (`sla2`, `sparge2`, `svg_ear`, ...) runs
+//! unchanged.
+//!
+//! The contract it pins is the acceptance criterion from the paper's
+//! evaluation: at >= 90% block sparsity, a variant's output matches
+//! the naive full-softmax reference within `rel_err < 1e-3` on seeded
+//! peaked inputs (exact f32 path; the INT8 path gets a quantization
+//! allowance), across both served head geometries and several seeds.
+//!
+//! Self-contained on purpose: only `sla2::` and `std`, no sibling test
+//! modules — benches include this file directly via `#[path]` so the
+//! fig4 variant shoot-out measures rel_err with the SAME reference
+//! and input generator the tests gate on.
+
+use sla2::runtime::native::attention;
+use sla2::util::rng::Pcg32;
+
+/// One attention head geometry the conformance suite runs on.
+#[derive(Debug, Clone, Copy)]
+pub struct HeadShape {
+    pub name: &'static str,
+    /// tokens
+    pub n: usize,
+    /// head dim
+    pub d: usize,
+    /// query block size
+    pub b_q: usize,
+    /// key block size
+    pub b_k: usize,
+}
+
+impl HeadShape {
+    /// (query blocks, key blocks)
+    pub fn tiles(&self) -> (usize, usize) {
+        (self.n / self.b_q, self.n / self.b_k)
+    }
+}
+
+/// The served head geometries every variant must pass on.  The
+/// "dit-tiny-like" shape keeps dit-tiny's tile sizes but enough key
+/// blocks (t_n = 16) that the s95 keep-1 mask reaches 93.75% block
+/// sparsity — true dit-tiny (t_n = 8) tops out at 87.5%, below the
+/// acceptance bar.  "dit-small-head" is dit-small's real head shape.
+pub const SHAPES: [HeadShape; 2] = [
+    HeadShape { name: "dit-tiny-like", n: 64, d: 32, b_q: 8, b_k: 4 },
+    HeadShape { name: "dit-small-head", n: 256, d: 64, b_q: 32, b_k: 16 },
+];
+
+/// Input seeds the suite sweeps (>= 3, per the acceptance criterion).
+pub const SEEDS: [u64; 3] = [42, 1337, 2024];
+
+/// Peak amplitude for [`peaked_qkv`] in the conformance sweep: large
+/// enough that the mass outside the hot block is < 1e-4 even on the
+/// d = 64 shape (score gap amp^2/sqrt(d) = 12.5), so a pure top-k
+/// variant with no linear compensation can meet the 1e-3 bound.
+pub const PEAK_AMP: f32 = 10.0;
+
+/// Relative L2 error of `a` against reference `b`.
+pub fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+    let num: f64 = a.iter().zip(b)
+        .map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+    let den: f64 = b.iter().map(|y| (*y as f64).powi(2)).sum();
+    num.sqrt() / (den.sqrt() + 1e-9)
+}
+
+/// Exact d x d identity matrix (f32).
+pub fn eye(d: usize) -> Vec<f32> {
+    (0..d * d).map(|i| if i % (d + 1) == 0 { 1.0 } else { 0.0 }).collect()
+}
+
+/// Naive O(N^2) full-softmax attention on the host — the reference
+/// every variant is measured against.
+pub fn naive_attention(q: &[f32], k: &[f32], v: &[f32], n: usize,
+                       d: usize) -> Vec<f32> {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0.0f32; n * d];
+    let mut row = vec![0.0f32; n];
+    for i in 0..n {
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..n {
+            let mut s = 0.0;
+            for a in 0..d {
+                s += q[i * d + a] * k[j * d + a];
+            }
+            row[j] = s * scale;
+            mx = mx.max(row[j]);
+        }
+        let mut denom = 0.0;
+        for j in 0..n {
+            row[j] = (row[j] - mx).exp();
+            denom += row[j];
+        }
+        for j in 0..n {
+            let p = row[j] / denom;
+            for a in 0..d {
+                out[i * d + a] += p * v[j * d + a];
+            }
+        }
+    }
+    out
+}
+
+/// Build (q, k, v) whose attention is concentrated inside one key
+/// block per query block: query block `i` points along basis vector
+/// `e_i`, key block `2i` matches it (hot), odd key blocks point along
+/// unrelated directions (cold).  The probability mass outside the hot
+/// block is then exponentially small, so the paper's decomposition
+/// bound (error <= dropped mass) makes a >= 90%-sparse variant
+/// reconstruct full attention almost exactly — the property the
+/// conformance suite pins.
+pub fn peaked_qkv(n: usize, d: usize, b_q: usize, b_k: usize, amp: f32,
+                  seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (t_m, t_n) = (n / b_q, n / b_k);
+    assert_eq!(t_n, 2 * t_m, "construction pairs block i with block 2i");
+    assert!(d >= t_m + t_n / 2, "needs enough orthogonal directions");
+    let mut rng = Pcg32::seeded(seed);
+    let noise = 0.01f32;
+    let mut q = vec![0.0f32; n * d];
+    for i in 0..t_m {
+        for r in 0..b_q {
+            let row = &mut q[(i * b_q + r) * d..(i * b_q + r + 1) * d];
+            for v in row.iter_mut() {
+                *v = noise * rng.normal();
+            }
+            row[i] += amp;
+        }
+    }
+    let mut k = vec![0.0f32; n * d];
+    for j in 0..t_n {
+        // hot blocks are even: block 2i matches query direction i;
+        // odd blocks get directions no query points along
+        let dir = if j % 2 == 0 { j / 2 } else { t_m + j / 2 };
+        for r in 0..b_k {
+            let row = &mut k[(j * b_k + r) * d..(j * b_k + r + 1) * d];
+            for v in row.iter_mut() {
+                *v = noise * rng.normal();
+            }
+            row[dir] += amp;
+        }
+    }
+    let v = rng.normal_vec(n * d);
+    (q, k, v)
+}
+
+/// Block sparsity a tier's `k_pct` yields on `shape` (fraction of key
+/// blocks NOT kept by the top-k budget).
+pub fn block_sparsity(k_pct: f64, shape: &HeadShape) -> f64 {
+    let (_, t_n) = shape.tiles();
+    1.0 - attention::top_k_count(k_pct, t_n) as f64 / t_n as f64
+}
+
+/// Run one variant through the shared parity suite: peaked inputs on
+/// every shape in [`SHAPES`] x every seed in [`SEEDS`], output
+/// compared to [`naive_attention`] under `tol`.  `min_sparsity`
+/// asserts the claim is earned — the suite refuses to pass a variant
+/// whose `k_pct` keeps too many blocks on these geometries.
+///
+/// `attn` is the variant under test: `(q, k, v, shape) -> output`.
+pub fn check_conformance<F>(label: &str, k_pct: f64, min_sparsity: f64,
+                            tol: f64, attn: F)
+where
+    F: Fn(&[f32], &[f32], &[f32], &HeadShape) -> Vec<f32>,
+{
+    for shape in &SHAPES {
+        let sparsity = block_sparsity(k_pct, shape);
+        assert!(sparsity >= min_sparsity,
+                "{label} on {}: k_pct={k_pct} reaches only {sparsity:.4} \
+                 block sparsity (suite requires >= {min_sparsity})",
+                shape.name);
+        for &seed in &SEEDS {
+            let (q, k, v) = peaked_qkv(shape.n, shape.d, shape.b_q,
+                                       shape.b_k, PEAK_AMP, seed);
+            let full = naive_attention(&q, &k, &v, shape.n, shape.d);
+            let out = attn(&q, &k, &v, shape);
+            assert_eq!(out.len(), full.len(),
+                       "{label} on {}: wrong output size", shape.name);
+            let err = rel_err(&out, &full);
+            assert!(err < tol,
+                    "{label} on {} seed {seed}: rel_err {err} vs full \
+                     softmax at {sparsity:.4} sparsity (bound {tol})",
+                    shape.name);
+        }
+    }
+}

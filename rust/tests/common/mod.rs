@@ -6,6 +6,18 @@
 
 use std::path::PathBuf;
 
+/// The shared attention-conformance harness (naive full-softmax
+/// reference, rel_err, seeded peaked-input generator, per-shape parity
+/// runner).  Self-contained so benches can include the same file via
+/// `#[path]`.
+#[allow(dead_code)] // each test bin uses the slice it needs
+pub mod conformance;
+
+/// Back-compat alias: the full-softmax oracle now lives in the
+/// conformance harness.
+#[allow(unused_imports)]
+pub use conformance::naive_attention;
+
 pub fn artifacts_dir() -> Option<PathBuf> {
     let dir = std::env::var("SLA2_ARTIFACTS")
         .unwrap_or_else(|_| format!("{}/artifacts",
@@ -19,35 +31,3 @@ pub fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
-/// Naive O(N^2) softmax attention on the host — the cross-language
-/// oracle for the HLO kernels.
-#[allow(dead_code)] // used by runtime_artifacts.rs, not every test bin
-pub fn naive_attention(q: &[f32], k: &[f32], v: &[f32], n: usize,
-                       d: usize) -> Vec<f32> {
-    let scale = 1.0 / (d as f32).sqrt();
-    let mut out = vec![0.0f32; n * d];
-    let mut row = vec![0.0f32; n];
-    for i in 0..n {
-        let mut mx = f32::NEG_INFINITY;
-        for j in 0..n {
-            let mut s = 0.0;
-            for a in 0..d {
-                s += q[i * d + a] * k[j * d + a];
-            }
-            row[j] = s * scale;
-            mx = mx.max(row[j]);
-        }
-        let mut denom = 0.0;
-        for j in 0..n {
-            row[j] = (row[j] - mx).exp();
-            denom += row[j];
-        }
-        for j in 0..n {
-            let p = row[j] / denom;
-            for a in 0..d {
-                out[i * d + a] += p * v[j * d + a];
-            }
-        }
-    }
-    out
-}
