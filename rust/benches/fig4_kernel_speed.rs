@@ -400,8 +400,191 @@ fn main() -> Result<()> {
                   path, whose allowance is 1e-1\n");
     }
 
+    // ------- SIMD dispatch vs forced-scalar --------------------------
+    // The ISA-dispatch payoff, measured on THIS host: the dispatched
+    // kernels (whatever `simd::active()` resolved to) against the same
+    // calls pinned to the portable scalar reference via the
+    // thread-local override.  Integer rows are bit-identical across
+    // ISAs, f32 rows parity-bounded (docs/KERNELS.md §7), so every
+    // speedup is pure instruction-level parallelism.  On a host with
+    // no SIMD (active = scalar) the ratios read ~1.0x by construction.
+    {
+        use sla2::runtime::native::attention::{self, quantize_rows_int8,
+                                               QuantMode, Sla2Params};
+        use sla2::runtime::native::simd::{self, KernelIsa};
+        use sla2::runtime::native::{linalg, stats};
+        use std::hint::black_box;
+        use std::sync::atomic::Ordering;
+
+        let isa = simd::active();
+        println!("\n=== Fig. 4 companion: SIMD dispatch ({isa}) vs \
+                  forced-scalar (dit-small head N=256, d=64, b_q=32, \
+                  b_k=16; artifact-free) ===\n");
+        let (n, d, b_q, b_k) = (256usize, 64usize, 32usize, 16usize);
+        let t_m = n / b_q;
+        let mut rng = Pcg32::seeded(13);
+        let q = rng.normal_vec(n * d);
+        let k = rng.normal_vec(n * d);
+        let v = rng.normal_vec(n * d);
+        let eye: Vec<f32> = (0..d * d)
+            .map(|i| if i % (d + 1) == 0 { 1.0 } else { 0.0 })
+            .collect();
+        let alpha = vec![0.0f32; t_m];
+        let mut t = Table::new(&["scope", "tier", "scalar ms",
+                                 "simd ms", "simd speedup"]);
+        let mut emit = |scope: &str, tier: &str,
+                        scalar: &sla2::util::bench::BenchResult,
+                        simd_b: &sla2::util::bench::BenchResult| {
+            let speedup = scalar.summary.mean / simd_b.summary.mean;
+            t.row(vec![scope.into(), tier.into(),
+                       format!("{:.3}", scalar.mean_ms()),
+                       format!("{:.3}", simd_b.mean_ms()),
+                       format!("{speedup:.2}x")]);
+            json_rows.push(Json::obj()
+                .push("section", "simd_vs_scalar")
+                .push("scope", scope)
+                .push("tier", tier)
+                .push("isa", isa.name())
+                .push("scalar_mean_ms", scalar.mean_ms())
+                .push("simd_mean_ms", simd_b.mean_ms())
+                .push("speedup_simd_vs_scalar", speedup));
+            speedup
+        };
+
+        // (a) GEMM micro on the attention loop's own tile operands;
+        // REPS per timed closure amortizes timer overhead (and the
+        // per-closure cost of arming the thread-local ISA override)
+        const REPS: usize = 64;
+        let (qq, _) = quantize_rows_int8(&q[..b_q * d], d);
+        let (kq, _) = quantize_rows_int8(&k[..b_k * d], d);
+        let qq_f: Vec<f32> = qq.iter().map(|&x| x as f32).collect();
+        let kq_f: Vec<f32> = kq.iter().map(|&x| x as f32).collect();
+        let s_qk = run_for("simd_gemm_qk_scalar", 2, 0.5, 30, || {
+            simd::with_forced_isa(KernelIsa::Scalar, || {
+                for _ in 0..REPS {
+                    black_box(linalg::gemm_i8_nt(&qq, &kq, b_q, d, b_k));
+                }
+            });
+        });
+        let v_qk = run_for("simd_gemm_qk", 2, 0.5, 30, || {
+            for _ in 0..REPS {
+                black_box(linalg::gemm_i8_nt(&qq, &kq, b_q, d, b_k));
+            }
+        });
+        let headline_gemm = emit("gemm_i8_qk", "tile", &s_qk, &v_qk);
+        let pq: Vec<i8> = (0..b_q * b_k).map(|i| (i % 128) as i8)
+            .collect();
+        let vq: Vec<i8> = kq[..b_k * d].to_vec();
+        let s_pv = run_for("simd_gemm_pv_scalar", 2, 0.5, 30, || {
+            simd::with_forced_isa(KernelIsa::Scalar, || {
+                for _ in 0..REPS {
+                    black_box(linalg::gemm_i8_i32(&pq, &vq, b_q, b_k, d));
+                }
+            });
+        });
+        let v_pv = run_for("simd_gemm_pv", 2, 0.5, 30, || {
+            for _ in 0..REPS {
+                black_box(linalg::gemm_i8_i32(&pq, &vq, b_q, b_k, d));
+            }
+        });
+        emit("gemm_i8_pv", "tile", &s_pv, &v_pv);
+        let s_f32 = run_for("simd_matmul_nt_scalar", 2, 0.5, 30, || {
+            simd::with_forced_isa(KernelIsa::Scalar, || {
+                for _ in 0..REPS {
+                    black_box(linalg::matmul_nt(&qq_f, &kq_f, b_q, d,
+                                                b_k));
+                }
+            });
+        });
+        let v_f32 = run_for("simd_matmul_nt", 2, 0.5, 30, || {
+            for _ in 0..REPS {
+                black_box(linalg::matmul_nt(&qq_f, &kq_f, b_q, d, b_k));
+            }
+        });
+        emit("matmul_nt_f32", "tile", &s_f32, &v_f32);
+
+        // (b) the whole sla2 op per served tier, dispatched vs scalar
+        let mut op_s90 = f64::NAN;
+        for (tier, k_pct) in [("s90", 0.10), ("s95", 0.05),
+                              ("s97", 0.03)] {
+            let p = Sla2Params { proj_q: &eye, proj_k: &eye,
+                                 alpha_logit: &alpha };
+            let b_scalar = run_for(&format!("simd_op_{tier}_scalar"), 2,
+                                   0.5, 30, || {
+                simd::with_forced_isa(KernelIsa::Scalar, || {
+                    black_box(attention::sla2_attention(
+                        &q, &k, &v, &p, k_pct, n, d, b_q, b_k,
+                        QuantMode::Int8));
+                });
+            });
+            let b_simd = run_for(&format!("simd_op_{tier}"), 2, 0.5, 30,
+                                 || {
+                black_box(attention::sla2_attention(
+                    &q, &k, &v, &p, k_pct, n, d, b_q, b_k,
+                    QuantMode::Int8));
+            });
+            let s = emit("attention_op", tier, &b_scalar, &b_simd);
+            if tier == "s90" {
+                op_s90 = s;
+            }
+        }
+        t.print();
+        println!("headline: {isa} integer QK GEMM {headline_gemm:.2}x \
+                  vs scalar; whole sla2 op {op_s90:.2}x at s90\n");
+
+        // (c) intra-head parallelism: b=1 long-sequence regime, where
+        // head-level fan-out has nothing to fan — query-block chunks of
+        // ONE head spread across the shared pool instead.  Both sides
+        // run the dispatched ISA: this row isolates the split win.
+        let pool_w = sla2::util::threadpool::shared_pool_width();
+        let n_long = 4096usize;
+        println!("=== Fig. 4 companion: intra-head split (b=1, N=4096, \
+                  d=64; splits={pool_w}) ===\n");
+        let ql = rng.normal_vec(n_long * d);
+        let kl = rng.normal_vec(n_long * d);
+        let vl = rng.normal_vec(n_long * d);
+        let alpha_l = vec![0.0f32; n_long / b_q];
+        let p = Sla2Params { proj_q: &eye, proj_k: &eye,
+                             alpha_logit: &alpha_l };
+        let b_seq = run_for("intra_head_seq", 1, 1.0, 10, || {
+            black_box(attention::sla2_attention(
+                &ql, &kl, &vl, &p, 0.05, n_long, d, b_q, b_k,
+                QuantMode::Int8));
+        });
+        let before = stats().intra_head_splits.load(Ordering::Relaxed);
+        let b_par = run_for("intra_head_split", 1, 1.0, 10, || {
+            black_box(attention::sla2_attention_split(
+                &ql, &kl, &vl, &p, 0.05, n_long, d, b_q, b_k,
+                QuantMode::Int8, pool_w));
+        });
+        let split_bumps =
+            stats().intra_head_splits.load(Ordering::Relaxed) - before;
+        let speedup = b_seq.summary.mean / b_par.summary.mean;
+        println!("  seq {:.2} ms, split {:.2} ms => {speedup:.2}x \
+                  (splits counter +{split_bumps})\n",
+                 b_seq.mean_ms(), b_par.mean_ms());
+        json_rows.push(Json::obj()
+            .push("section", "intra_head_split")
+            .push("scope", "attention_op")
+            .push("tier", "s95")
+            .push("n", n_long)
+            .push("splits", pool_w)
+            .push("intra_head_splits", split_bumps as usize)
+            .push("seq_mean_ms", b_seq.mean_ms())
+            .push("split_mean_ms", b_par.mean_ms())
+            .push("speedup_split_vs_seq", speedup));
+    }
+
     if let Some(path) = args.json_path("BENCH_fig4_kernel.json") {
-        let report = bench::report("fig4_kernel", json_rows);
+        let host = Json::obj()
+            .push("kernel_isa",
+                  sla2::runtime::native::simd::active().name())
+            .push("cores", std::thread::available_parallelism()
+                .map(|c| c.get()).unwrap_or(1))
+            .push("shared_pool_width",
+                  sla2::util::threadpool::shared_pool_width());
+        let report = bench::report("fig4_kernel", json_rows)
+            .push("host", host);
         bench::write_json(&path, &report)?;
         println!("wrote {path}");
     }

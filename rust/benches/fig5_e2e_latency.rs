@@ -643,7 +643,18 @@ fn main() -> Result<()> {
     t.print();
 
     if let Some(path) = args.json_path("BENCH_fig5_e2e.json") {
-        let report = bench::report("fig5_e2e", json_rows);
+        // host stanza: makes latency rows comparable across runners
+        // (an avx2 8-core box and a scalar 2-core box are different
+        // experiments, not a regression)
+        let host = Json::obj()
+            .push("kernel_isa",
+                  sla2::runtime::native::simd::active().name())
+            .push("cores", std::thread::available_parallelism()
+                .map(|c| c.get()).unwrap_or(1))
+            .push("shared_pool_width",
+                  sla2::util::threadpool::shared_pool_width());
+        let report = bench::report("fig5_e2e", json_rows)
+            .push("host", host);
         bench::write_json(&path, &report)?;
         println!("\nwrote {path}");
     }

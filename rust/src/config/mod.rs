@@ -110,6 +110,14 @@ pub struct ServeConfig {
     /// `"off"` (no quantization).  Ignored by `"xla"`, whose
     /// artifacts bake the quantization into the lowered HLO.
     pub quant_mode: String,
+    /// native backend only — which SIMD instruction set the kernel
+    /// layer dispatches to: `"auto"` (default; runtime feature
+    /// detection picks the best available), `"avx2"`, `"sse41"`,
+    /// `"neon"` or `"scalar"` (the portable reference).  Requesting an
+    /// ISA the host cannot run fails at startup.  The
+    /// `SLA2_FORCE_SCALAR` env var overrides everything (CI's
+    /// forced-scalar conformance leg).  Ignored by `"xla"`.
+    pub kernel_isa: String,
     pub sample_steps: usize,
     pub max_batch: usize,
     /// how long the batcher waits to fill a batch before dispatching
@@ -197,6 +205,7 @@ impl Default for ServeConfig {
             tier: "s90".into(),
             backend: "xla".into(),
             quant_mode: "int8".into(),
+            kernel_isa: "auto".into(),
             sample_steps: 8,
             max_batch: 2,
             batch_window_ms: 5,
@@ -234,6 +243,7 @@ impl ServeConfig {
             tier: args.str("tier", &d.tier),
             backend: args.str("backend", &d.backend),
             quant_mode: args.str("quant-mode", &d.quant_mode),
+            kernel_isa: args.str("kernel-isa", &d.kernel_isa),
             sample_steps: args.usize("steps", d.sample_steps),
             max_batch: args.usize("max-batch", d.max_batch),
             batch_window_ms: args.u64("batch-window-ms", d.batch_window_ms),
@@ -291,6 +301,7 @@ impl ServeConfig {
             tier: s("tier", &d.tier),
             backend: s("backend", &d.backend),
             quant_mode: s("quant_mode", &d.quant_mode),
+            kernel_isa: s("kernel_isa", &d.kernel_isa),
             sample_steps: u("sample_steps", d.sample_steps),
             max_batch: u("max_batch", d.max_batch),
             batch_window_ms: u("batch_window_ms",
@@ -448,6 +459,16 @@ mod tests {
         assert_eq!(ServeConfig::from_args(&a).quant_mode, "sim");
         let j = Json::parse(r#"{"quant_mode":"off"}"#).unwrap();
         assert_eq!(ServeConfig::from_json(&j).quant_mode, "off");
+    }
+
+    #[test]
+    fn kernel_isa_knob_parses_with_default() {
+        assert_eq!(ServeConfig::default().kernel_isa, "auto");
+        let a = Args::parse_from(
+            ["--kernel-isa", "scalar"].map(String::from));
+        assert_eq!(ServeConfig::from_args(&a).kernel_isa, "scalar");
+        let j = Json::parse(r#"{"kernel_isa":"avx2"}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).kernel_isa, "avx2");
     }
 
     #[test]

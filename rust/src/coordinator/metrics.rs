@@ -60,6 +60,11 @@ pub struct ServerMetrics {
     /// the native backend's quant_mode knob ("int8" | "sim" | "off"),
     /// attached by the server alongside `backend`
     quant_mode: Option<String>,
+    /// the SIMD instruction set the native kernel layer resolved at
+    /// startup ("avx2" | "sse41" | "neon" | "scalar"), attached by the
+    /// server alongside `backend`; `--kernel-isa` requests and the
+    /// `SLA2_FORCE_SCALAR` override are already folded in
+    kernel_isa: Option<String>,
     /// the server-wide default attention variant ("sla2" | "sparge2" |
     /// "svg_ear" | ...), attached by the server; per-request overrides
     /// show up in the per-class queue depths and the per-variant
@@ -113,6 +118,7 @@ impl ServerMetrics {
             queue: None,
             backend: None,
             quant_mode: None,
+            kernel_isa: None,
             variant: None,
             draining: None,
         }
@@ -145,6 +151,14 @@ impl ServerMetrics {
     /// from the f32 simulation at a glance).
     pub fn attach_quant_mode(&mut self, mode: &str) {
         self.quant_mode = Some(mode.to_string());
+    }
+
+    /// Record the SIMD ISA the native kernel layer resolved at startup
+    /// (surfaced next to `backend`, so a metrics scrape can tell an
+    /// AVX2 box from a scalar-fallback or force-scalar run without
+    /// shelling into the host).
+    pub fn attach_kernel_isa(&mut self, isa: &str) {
+        self.kernel_isa = Some(isa.to_string());
     }
 
     /// Record the server's default attention variant (surfaced next to
@@ -328,6 +342,9 @@ impl ServerMetrics {
                 if let Some(qm) = &self.quant_mode {
                     j = j.push("quant_mode", qm.as_str());
                 }
+                if let Some(isa) = &self.kernel_isa {
+                    j = j.push("kernel_isa", isa.as_str());
+                }
                 j = j.push("native_kernels",
                            crate::runtime::native::stats().snapshot());
             }
@@ -397,12 +414,17 @@ mod tests {
                 "xla servers must not imply native kernel activity");
         m.attach_backend("native");
         m.attach_quant_mode("int8");
+        m.attach_kernel_isa("avx2");
         m.attach_variant("sparge2");
         let s = m.snapshot();
         assert_eq!(s.get("backend").unwrap().as_str(), Some("native"));
         assert_eq!(s.get("quant_mode").unwrap().as_str(), Some("int8"));
+        assert_eq!(s.get("kernel_isa").unwrap().as_str(), Some("avx2"));
         assert_eq!(s.get("variant").unwrap().as_str(), Some("sparge2"));
         let nk = s.get("native_kernels").expect("native counters");
+        assert!(nk.get("isa").is_some(),
+                "kernel counters carry the resolved ISA too");
+        assert!(nk.get("intra_head_splits").is_some());
         assert!(nk.get("sparse_tiles").is_some());
         assert!(nk.get("denoise_forwards").is_some());
         // per-mode counters: real-int8 vs simulated heads

@@ -335,6 +335,15 @@ impl Server {
             m.attach_queue(Arc::clone(&queue));
             m.attach_backend(&serve.backend);
             m.attach_quant_mode(&serve.quant_mode);
+            if serve.backend == "native" {
+                // resolve the ISA through `request` (not `active`): a
+                // bare `active()` here would pin detection before the
+                // shards' own `--kernel-isa` request could take effect
+                let isa = crate::runtime::native::simd::request(
+                    &serve.kernel_isa)
+                    .map_err(|e| anyhow::anyhow!("serve config: {e}"))?;
+                m.attach_kernel_isa(isa.name());
+            }
             m.attach_variant(&serve.variant);
         }
         let pool_cfg = PoolConfig {

@@ -34,7 +34,10 @@ manifest when present, a seeded init otherwise).  The native backend
 also takes --quant-mode int8|sim|off: \"int8\" (default) serves the
 sla2 variant through real i8 x i8 -> i32 integer kernels, \"sim\" is
 the f32 fake-quant simulation (parity/measurement baseline), \"off\"
-disables quantization.  See docs/KERNELS.md.
+disables quantization.  --kernel-isa auto|avx2|sse41|neon|scalar pins
+the SIMD dispatch (default \"auto\" = runtime detection; \"scalar\" is
+the portable reference); the SLA2_FORCE_SCALAR env var overrides
+everything.  See docs/KERNELS.md.
 
 fault tolerance (every serving command; docs/ARCHITECTURE.md):
   --default-deadline-ms N   per-request deadline when the client sets

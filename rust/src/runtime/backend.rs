@@ -93,9 +93,10 @@ pub trait ComputeBackend {
 /// Build the backend `serve.backend` names.  `artifacts_dir` is
 /// required for `"xla"`; `"native"` uses it when a manifest is present
 /// (shared config + params) and falls back to its built-in model
-/// configs + seeded parameters otherwise.  `serve.quant_mode` is
-/// validated here for the native backend (an unknown mode fails
-/// loudly at startup, not at the first sla2 request).
+/// configs + seeded parameters otherwise.  `serve.quant_mode` and
+/// `serve.kernel_isa` are validated here for the native backend (an
+/// unknown mode or an ISA this host cannot run fails loudly at
+/// startup, not at the first sla2 request).
 pub fn make_backend(artifacts_dir: &str, serve: &ServeConfig)
                     -> Result<Box<dyn ComputeBackend>> {
     match serve.backend.as_str() {
@@ -104,6 +105,7 @@ pub fn make_backend(artifacts_dir: &str, serve: &ServeConfig)
         "native" => {
             let mode = super::native::QuantMode::parse(
                 &serve.quant_mode)?;
+            super::native::simd::request(&serve.kernel_isa)?;
             Ok(Box::new(super::native::NativeBackend::load_with_mode(
                 artifacts_dir, &serve.model, mode)?))
         }

@@ -12,7 +12,7 @@
 //!   scales within each tile).  [`QuantMode`] picks how those points
 //!   execute: [`QuantMode::Int8`] stores the quantized operands as
 //!   `i8` and runs the real `i8 x i8 -> i32` GEMMs
-//!   ([`gemm_i8_nt`]/[`gemm_i8_i32`]), dequantizing once per tile via
+//!   (`gemm_i8_nt`/`gemm_i8_i32`), dequantizing once per tile via
 //!   the hoisted scales; [`QuantMode::Sim`] is the f32 fake-quant
 //!   simulation (identical int8-valued operands, f32 matmuls) kept as
 //!   the parity oracle — the two are bit-identical whenever f32 can
@@ -34,11 +34,21 @@
 //! All functions are single-head: `q`, `k`, `v` are `(n, d)` row-major
 //! slices.  Tile loops run in ascending `j` order like the kernel's
 //! `fori_loop`, so f32 accumulation order matches the lowered HLO.
+//!
+//! **Intra-head parallelism:** query blocks carry no cross-block
+//! state, so the `*_attention_split` entry points partition them into
+//! contiguous chunks fanned across `util::threadpool::shared_map` —
+//! the long-sequence/few-heads regime where head-level fan-out leaves
+//! cores idle (docs/KERNELS.md §7).  Stitched chunks are bit-identical
+//! to the sequential loop; per-head hoists (routing, K smoothing,
+//! tile quantization, H/Z states) are computed once and shared
+//! read-only.
 
 use anyhow::bail;
 
-use super::linalg::{dot, gemm_i8_i32, gemm_i8_nt, matmul, matmul_nt,
-                    matmul_tn, sigmoid, softmax_rows};
+use super::linalg::{dot, gemm_i8_i32_into, gemm_i8_nt_into, matmul,
+                    matmul_into, matmul_nt, matmul_nt_into, matmul_tn,
+                    sigmoid, softmax_rows};
 use super::stats;
 
 pub const NEG_INF: f32 = -1e30;
@@ -115,14 +125,50 @@ pub struct Sla2Params<'a> {
 /// parity oracle (`ref.full_attention`).
 pub fn full_attention(q: &[f32], k: &[f32], v: &[f32], n: usize,
                       d: usize) -> Vec<f32> {
-    stats().full_heads.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    full_attention_split(q, k, v, n, d, 1)
+}
+
+/// [`full_attention`] with an intra-head fan-out factor: query rows
+/// split into `splits` contiguous chunks mapped over the shared pool.
+/// Each output row depends only on its own query row (per-row softmax,
+/// per-row `P V` products with a fixed accumulation order), so the
+/// stitched result is bit-identical to `splits = 1`.  Callers already
+/// running ON the pool must pass 1 (nested fan-out deadlocks).
+pub fn full_attention_split(q: &[f32], k: &[f32], v: &[f32], n: usize,
+                            d: usize, splits: usize) -> Vec<f32> {
+    use std::sync::atomic::Ordering::Relaxed;
+    stats().full_heads.fetch_add(1, Relaxed);
     let scale = 1.0 / (d as f32).sqrt();
-    let mut s = matmul_nt(q, k, n, d, n);
-    for x in s.iter_mut() {
-        *x *= scale;
+    let splits = splits.clamp(1, n.max(1));
+    if splits == 1 {
+        let mut s = matmul_nt(q, k, n, d, n);
+        for x in s.iter_mut() {
+            *x *= scale;
+        }
+        softmax_rows(&mut s, n);
+        return matmul(&s, v, n, n, d);
     }
-    softmax_rows(&mut s, n);
-    matmul(&s, v, n, n, d)
+    stats().intra_head_splits.fetch_add(1, Relaxed);
+    let per = n.div_ceil(splits);
+    let chunks = n.div_ceil(per);
+    let shared = std::sync::Arc::new((q.to_vec(), k.to_vec(),
+                                      v.to_vec()));
+    let parts =
+        crate::util::threadpool::shared_map(chunks, move |ci| {
+            let (q, k, v) = shared.as_ref();
+            let (r0, r1) = (ci * per, ((ci + 1) * per).min(n));
+            let mut s = matmul_nt(&q[r0 * d..r1 * d], k, r1 - r0, d, n);
+            for x in s.iter_mut() {
+                *x *= scale;
+            }
+            softmax_rows(&mut s, n);
+            matmul(&s, v, r1 - r0, n, d)
+        });
+    let mut out = Vec::with_capacity(n * d);
+    for p in parts {
+        out.extend_from_slice(&p);
+    }
+    out
 }
 
 /// SageAttention K-smoothing: subtract the per-feature mean over
@@ -432,38 +478,42 @@ fn widen_i8(x: &[i8]) -> Vec<f32> {
 
 /// f32-simulated `P_ij V_j` (Alg. 2 line 17): P has a fixed 1/127
 /// scale (it lives in [0, 1] post online-softmax rescaling); `vq_f` /
-/// `sv` come pre-quantized per tile (int8-valued f32 mirror).
+/// `sv` come pre-quantized per tile (int8-valued f32 mirror).  `pq`
+/// and `out` are caller scratch, reused across every (query block,
+/// tile) pair of a chunk.
 fn sim_matmul_pv(p: &[f32], vq_f: &[f32], sv: &[f32], rows: usize,
-                 b_k: usize, d: usize) -> Vec<f32> {
-    let pq: Vec<f32> = p.iter()
-        .map(|x| (x * INT8_MAX).round().clamp(0.0, INT8_MAX))
-        .collect();
-    let mut out = matmul(&pq, vq_f, rows, b_k, d);
+                 b_k: usize, d: usize, pq: &mut Vec<f32>,
+                 out: &mut Vec<f32>) {
+    pq.clear();
+    pq.extend(p.iter()
+        .map(|x| (x * INT8_MAX).round().clamp(0.0, INT8_MAX)));
+    matmul_into(pq, vq_f, rows, b_k, d, out);
     for row in out.chunks_exact_mut(d) {
         for (o, s) in row.iter_mut().zip(sv) {
             *o *= s / INT8_MAX;
         }
     }
-    out
 }
 
 /// Real-INT8 `P_ij V_j`: quantize P to `i8` with the fixed 1/127
 /// scale, run the integer GEMM, dequantize once per column.  Computes
 /// `(sv[c] / 127) * acc` with the exact operations [`sim_matmul_pv`]
 /// applies to identical integer values, so the two paths agree
-/// bit-for-bit while the f32 accumulation stays exact.
+/// bit-for-bit while the f32 accumulation stays exact.  `pq` / `pvi` /
+/// `out` are caller scratch, reused across tiles.
+#[allow(clippy::too_many_arguments)]
 fn int8_matmul_pv(p: &[f32], vq: &[i8], sv: &[f32], rows: usize,
-                  b_k: usize, d: usize) -> Vec<f32> {
-    let pq: Vec<i8> = p.iter()
-        .map(|x| (x * INT8_MAX).round().clamp(0.0, INT8_MAX) as i8)
-        .collect();
-    let pvi = gemm_i8_i32(&pq, vq, rows, b_k, d);
-    let mut out = Vec::with_capacity(rows * d);
+                  b_k: usize, d: usize, pq: &mut Vec<i8>,
+                  pvi: &mut Vec<i32>, out: &mut Vec<f32>) {
+    pq.clear();
+    pq.extend(p.iter()
+        .map(|x| (x * INT8_MAX).round().clamp(0.0, INT8_MAX) as i8));
+    gemm_i8_i32_into(pq, vq, rows, b_k, d, pvi);
+    out.clear();
     for row in pvi.chunks_exact(d) {
         out.extend(row.iter().zip(sv)
             .map(|(&acc, s)| acc as f32 * (s / INT8_MAX)));
     }
-    out
 }
 
 /// Loop-invariant INT8 state of one key tile: quantized K (per-row
@@ -505,27 +555,39 @@ pub fn sla2_attention_masked(q: &[f32], k: &[f32], v: &[f32],
                              quant: QuantMode) -> Vec<f32> {
     let mix: Vec<f32> =
         alpha_logit.iter().map(|&l| sigmoid(l)).collect();
-    masked_attention_core(q, k, v, mask, &mix, n, d, b_q, b_k, quant)
+    masked_attention_core(q, k, v, mask, &mix, n, d, b_q, b_k, quant, 1)
 }
 
-/// The shared masked sparse+linear engine every variant dispatches
-/// into: online-softmax sparse branch over the masked-in tiles (with
-/// the Alg. 2 INT8 points per `quant`), H/Z linear branch over each
-/// query block's complement, combined per block as
-/// `O_i = mix[i] ⊙ O_s + (1 − mix[i]) ⊙ O_l`.
-///
-/// `mix[i]` is the post-sigmoid weight: `sla2` passes
-/// `sigmoid(alpha_logit)`, `svg_ear` its error-derived kept-mass
-/// weights, `sparge2` all-1.0.  A weight of exactly 1.0
-/// short-circuits the linear branch for that block — the `(1 − mix)`
-/// term is an exact f32 zero and the denominator is finite, so
-/// skipping is value-identical while the sparse-only variants never
-/// pay for phi/H/Z.
+/// Loop-invariant state of one masked-core invocation — everything
+/// computed ONCE per head and shared read-only by every query-block
+/// chunk: smoothed K, phi features, per-tile INT8 quantization, H/Z
+/// linear tile states.  Owned (not borrowed) so the intra-head fan
+/// can move it into an `Arc` for the pool's `'static` closures; the
+/// q/k/v copies are O(n·d), noise next to the attention work itself.
+struct CoreState {
+    q: Vec<f32>,
+    k_sm: Vec<f32>,
+    v: Vec<f32>,
+    mask: Vec<u8>,
+    mix: Vec<f32>,
+    qphi: Vec<f32>,
+    quant_tiles: Option<Vec<Option<QuantTile>>>,
+    h_tiles: Vec<Vec<f32>>,
+    z_tiles: Vec<Vec<f32>>,
+    d: usize,
+    b_q: usize,
+    b_k: usize,
+    t_m: usize,
+    t_n: usize,
+    scale: f32,
+    quant: QuantMode,
+}
+
+/// Hoist the per-head loop invariants (and bump the per-head stats).
 #[allow(clippy::too_many_arguments)]
-fn masked_attention_core(q: &[f32], k: &[f32], v: &[f32],
-                         mask: &[u8], mix: &[f32], n: usize,
-                         d: usize, b_q: usize, b_k: usize,
-                         quant: QuantMode) -> Vec<f32> {
+fn build_core_state(q: &[f32], k: &[f32], v: &[f32], mask: &[u8],
+                    mix: &[f32], n: usize, d: usize, b_q: usize,
+                    b_k: usize, quant: QuantMode) -> CoreState {
     use std::sync::atomic::Ordering::Relaxed;
     let (t_m, t_n) = (n / b_q, n / b_k);
     debug_assert_eq!(mask.len(), t_m * t_n);
@@ -613,15 +675,57 @@ fn masked_attention_core(q: &[f32], k: &[f32], v: &[f32],
         }
     }
 
-    let mut out = vec![0.0f32; n * d];
-    for i in 0..t_m {
-        let qi = &q[i * b_q * d..(i + 1) * b_q * d];
-        let block_linear = mix[i] < 1.0;
+    CoreState {
+        q: q.to_vec(),
+        k_sm,
+        v: v.to_vec(),
+        mask: mask.to_vec(),
+        mix: mix.to_vec(),
+        qphi,
+        quant_tiles,
+        h_tiles,
+        z_tiles,
+        d,
+        b_q,
+        b_k,
+        t_m,
+        t_n,
+        scale,
+        quant,
+    }
+}
+
+/// Compute query blocks `i0..i1` into `out` (exactly those blocks'
+/// rows).  Blocks carry no cross-`i` state, so any partition of
+/// `0..t_m` stitches bit-identically to the sequential loop — the
+/// invariant the intra-head fan rests on.  All tile scratch lives
+/// here and is reused across the chunk's (query block × tile) pairs:
+/// the sparse branch allocates nothing per pair.
+fn core_rows(st: &CoreState, i0: usize, i1: usize, out: &mut [f32]) {
+    let (d, b_q, b_k, t_n) = (st.d, st.b_q, st.b_k, st.t_n);
+    debug_assert_eq!(out.len(), (i1 - i0) * b_q * d);
+    let mut s: Vec<f32> = Vec::new(); // score tile, becomes P in place
+    let mut s_i32: Vec<i32> = Vec::new(); // int8 Q·Kᵀ accumulators
+    let mut pq_i8: Vec<i8> = Vec::new(); // quantized P (int8 path)
+    let mut pq_f: Vec<f32> = Vec::new(); // quantized P (sim path)
+    let mut pvi: Vec<i32> = Vec::new(); // int8 P·V accumulators
+    let mut pv: Vec<f32> = Vec::new(); // dequantized P·V tile
+    let mut ol: Vec<f32> = Vec::new(); // phi(Q_i) @ H
+    let mut corr = vec![0.0f32; b_q];
+    let mut m_i = vec![NEG_INF; b_q];
+    let mut l_i = vec![0.0f32; b_q];
+    let mut acc = vec![0.0f32; b_q * d];
+    let mut h: Vec<f32> = Vec::new();
+    let mut z: Vec<f32> = Vec::new();
+
+    for i in i0..i1 {
+        let qi = &st.q[i * b_q * d..(i + 1) * b_q * d];
+        let block_linear = st.mix[i] < 1.0;
         // hoisted Alg. 2 line 13: quant(Q_i) is loop-invariant
         let q_quant: Option<QuantBlock> =
-            quant.is_quantized().then(|| {
+            st.quant.is_quantized().then(|| {
                 let (qq, sq) = quantize_rows_int8(qi, d);
-                let qq_f = if quant == QuantMode::Sim {
+                let qq_f = if st.quant == QuantMode::Sim {
                     widen_i8(&qq)
                 } else {
                     Vec::new()
@@ -630,67 +734,73 @@ fn masked_attention_core(q: &[f32], k: &[f32], v: &[f32],
             });
 
         // ---- sparse branch: online softmax over kept tiles ----------
-        let mut m_i = vec![NEG_INF; b_q];
-        let mut l_i = vec![0.0f32; b_q];
-        let mut acc = vec![0.0f32; b_q * d];
+        for x in m_i.iter_mut() {
+            *x = NEG_INF;
+        }
+        for x in l_i.iter_mut() {
+            *x = 0.0;
+        }
+        for x in acc.iter_mut() {
+            *x = 0.0;
+        }
         // ---- linear branch: complement accumulation (only for
         //      blocks that actually mix, i.e. mix[i] < 1.0) ----------
-        let (mut h, mut z) = if block_linear {
-            (vec![0.0f32; d * d], vec![0.0f32; d])
-        } else {
-            (Vec::new(), Vec::new())
-        };
+        if block_linear {
+            h.clear();
+            h.resize(d * d, 0.0);
+            z.clear();
+            z.resize(d, 0.0);
+        }
 
         for j in 0..t_n {
-            if mask[i * t_n + j] == 0 {
+            if st.mask[i * t_n + j] == 0 {
                 if block_linear {
-                    for (hh, x) in h.iter_mut().zip(&h_tiles[j]) {
+                    for (hh, x) in h.iter_mut().zip(&st.h_tiles[j]) {
                         *hh += x;
                     }
-                    for (zz, x) in z.iter_mut().zip(&z_tiles[j]) {
+                    for (zz, x) in z.iter_mut().zip(&st.z_tiles[j]) {
                         *zz += x;
                     }
                 }
                 continue;
             }
-            let kj = &k_sm[j * b_k * d..(j + 1) * b_k * d];
-            let vj = &v[j * b_k * d..(j + 1) * b_k * d];
+            let kj = &st.k_sm[j * b_k * d..(j + 1) * b_k * d];
+            let vj = &st.v[j * b_k * d..(j + 1) * b_k * d];
             // Alg. 2 line 14: S = dequant(quant(Q) quant(K)^T).  The
             // int8 path widens the exact i32 accumulators to f32 and
             // applies the identical per-(row, col) scale product the
             // sim path applies to its (equal-valued) f32 sums, so the
             // two modes agree bit-for-bit while the sums stay within
             // f32's exact-integer range (docs/KERNELS.md).
-            let mut s = match (&q_quant, &quant_tiles) {
+            match (&q_quant, &st.quant_tiles) {
                 (Some(qb), Some(qt)) => {
                     // mask == 1 here, so the tile was quantized above
                     let tile = qt[j].as_ref().expect("kept tile");
-                    let mut s = if quant == QuantMode::Int8 {
-                        gemm_i8_nt(&qb.qq, &tile.kq, b_q, d, b_k)
-                            .into_iter()
-                            .map(|x| x as f32)
-                            .collect()
+                    if st.quant == QuantMode::Int8 {
+                        gemm_i8_nt_into(&qb.qq, &tile.kq, b_q, d, b_k,
+                                        &mut s_i32);
+                        s.clear();
+                        s.extend(s_i32.iter().map(|&x| x as f32));
                     } else {
-                        matmul_nt(&qb.qq_f, &tile.kq_f, b_q, d, b_k)
-                    };
+                        matmul_nt_into(&qb.qq_f, &tile.kq_f, b_q, d,
+                                       b_k, &mut s);
+                    }
                     for (r, srow) in s.chunks_exact_mut(b_k).enumerate()
                     {
                         for (x, skv) in srow.iter_mut().zip(&tile.sk) {
                             *x *= qb.sq[r] * skv;
                         }
                     }
-                    s
                 }
-                _ => matmul_nt(qi, kj, b_q, d, b_k),
-            };
-            for x in s.iter_mut() {
-                *x *= scale;
+                _ => matmul_nt_into(qi, kj, b_q, d, b_k, &mut s),
             }
-            // one online-softmax step (Alg. 2 lines 13-18)
-            let mut p = s;
-            let mut corr = vec![0.0f32; b_q];
+            for x in s.iter_mut() {
+                *x *= st.scale;
+            }
+            // one online-softmax step (Alg. 2 lines 13-18): `s`
+            // becomes P in place
             for r in 0..b_q {
-                let srow = &mut p[r * b_k..(r + 1) * b_k];
+                let srow = &mut s[r * b_k..(r + 1) * b_k];
                 let row_max = srow.iter().cloned()
                     .fold(f32::NEG_INFINITY, f32::max);
                 let m_new = m_i[r].max(row_max);
@@ -703,19 +813,20 @@ fn masked_attention_core(q: &[f32], k: &[f32], v: &[f32],
                 l_i[r] = corr[r] * l_i[r] + sum;
                 m_i[r] = m_new;
             }
-            let pv = match &quant_tiles {
+            match &st.quant_tiles {
                 Some(qt) => {
                     let tile = qt[j].as_ref().expect("kept tile");
-                    if quant == QuantMode::Int8 {
-                        int8_matmul_pv(&p, &tile.vq, &tile.sv, b_q, b_k,
-                                       d)
+                    if st.quant == QuantMode::Int8 {
+                        int8_matmul_pv(&s, &tile.vq, &tile.sv, b_q,
+                                       b_k, d, &mut pq_i8, &mut pvi,
+                                       &mut pv);
                     } else {
-                        sim_matmul_pv(&p, &tile.vq_f, &tile.sv, b_q,
-                                      b_k, d)
+                        sim_matmul_pv(&s, &tile.vq_f, &tile.sv, b_q,
+                                      b_k, d, &mut pq_f, &mut pv);
                     }
                 }
-                None => matmul(&p, vj, b_q, b_k, d),
-            };
+                None => matmul_into(&s, vj, b_q, b_k, d, &mut pv),
+            }
             for r in 0..b_q {
                 let arow = &mut acc[r * d..(r + 1) * d];
                 let prow = &pv[r * d..(r + 1) * d];
@@ -732,16 +843,16 @@ fn masked_attention_core(q: &[f32], k: &[f32], v: &[f32],
         // `(1 − mix)` term would be an exact zero times a finite
         // value (den >= EPS_LINEAR), so the fast path is
         // value-identical to mixing.
+        let ob = (i - i0) * b_q * d;
         if block_linear {
-            let a = mix[i];
-            let qp_block = &qphi[i * b_q * d..(i + 1) * b_q * d];
-            let ol = matmul(qp_block, &h, b_q, d, d);
+            let a = st.mix[i];
+            let qp_block = &st.qphi[i * b_q * d..(i + 1) * b_q * d];
+            matmul_into(qp_block, &h, b_q, d, d, &mut ol);
             for r in 0..b_q {
                 let l_safe = if l_i[r] > 0.0 { l_i[r] } else { 1.0 };
                 let qp = &qp_block[r * d..(r + 1) * d];
                 let den = dot(qp, &z) + EPS_LINEAR;
-                let orow =
-                    &mut out[(i * b_q + r) * d..(i * b_q + r + 1) * d];
+                let orow = &mut out[ob + r * d..ob + (r + 1) * d];
                 for (c, o) in orow.iter_mut().enumerate() {
                     let o_s = acc[r * d + c] / l_safe;
                     *o = a * o_s + (1.0 - a) * ol[r * d + c] / den;
@@ -750,13 +861,63 @@ fn masked_attention_core(q: &[f32], k: &[f32], v: &[f32],
         } else {
             for r in 0..b_q {
                 let l_safe = if l_i[r] > 0.0 { l_i[r] } else { 1.0 };
-                let orow =
-                    &mut out[(i * b_q + r) * d..(i * b_q + r + 1) * d];
+                let orow = &mut out[ob + r * d..ob + (r + 1) * d];
                 for (c, o) in orow.iter_mut().enumerate() {
                     *o = acc[r * d + c] / l_safe;
                 }
             }
         }
+    }
+}
+
+/// The shared masked sparse+linear engine every variant dispatches
+/// into: online-softmax sparse branch over the masked-in tiles (with
+/// the Alg. 2 INT8 points per `quant`), H/Z linear branch over each
+/// query block's complement, combined per block as
+/// `O_i = mix[i] ⊙ O_s + (1 − mix[i]) ⊙ O_l`.
+///
+/// `mix[i]` is the post-sigmoid weight: `sla2` passes
+/// `sigmoid(alpha_logit)`, `svg_ear` its error-derived kept-mass
+/// weights, `sparge2` all-1.0.  A weight of exactly 1.0
+/// short-circuits the linear branch for that block — the `(1 − mix)`
+/// term is an exact f32 zero and the denominator is finite, so
+/// skipping is value-identical while the sparse-only variants never
+/// pay for phi/H/Z.
+///
+/// `splits > 1` fans contiguous query-block chunks across the shared
+/// pool (intra-head parallelism for the long-sequence/few-heads
+/// regime) — bit-identical to `splits = 1` by the [`core_rows`]
+/// independence invariant.  Callers already running ON the pool must
+/// pass 1 (nested fan-out deadlocks).
+#[allow(clippy::too_many_arguments)]
+fn masked_attention_core(q: &[f32], k: &[f32], v: &[f32], mask: &[u8],
+                         mix: &[f32], n: usize, d: usize, b_q: usize,
+                         b_k: usize, quant: QuantMode, splits: usize)
+                         -> Vec<f32> {
+    let st = build_core_state(q, k, v, mask, mix, n, d, b_q, b_k,
+                              quant);
+    let t_m = st.t_m;
+    let splits = splits.clamp(1, t_m.max(1));
+    if splits == 1 {
+        let mut out = vec![0.0f32; n * d];
+        core_rows(&st, 0, t_m, &mut out);
+        return out;
+    }
+    stats().intra_head_splits
+        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let per = t_m.div_ceil(splits);
+    let chunks = t_m.div_ceil(per);
+    let st = std::sync::Arc::new(st);
+    let parts =
+        crate::util::threadpool::shared_map(chunks, move |ci| {
+            let (i0, i1) = (ci * per, ((ci + 1) * per).min(st.t_m));
+            let mut part = vec![0.0f32; (i1 - i0) * st.b_q * st.d];
+            core_rows(&st, i0, i1, &mut part);
+            part
+        });
+    let mut out = Vec::with_capacity(n * d);
+    for p in parts {
+        out.extend_from_slice(&p);
     }
     out
 }
@@ -767,14 +928,31 @@ fn masked_attention_core(q: &[f32], k: &[f32], v: &[f32],
 pub fn sla2_attention(q: &[f32], k: &[f32], v: &[f32], p: &Sla2Params,
                       k_pct: f64, n: usize, d: usize, b_q: usize,
                       b_k: usize, quant: QuantMode) -> Vec<f32> {
+    sla2_attention_split(q, k, v, p, k_pct, n, d, b_q, b_k, quant, 1)
+}
+
+/// [`sla2_attention`] with an intra-head fan-out factor: `splits > 1`
+/// fans contiguous query-block chunks across the shared pool,
+/// bit-identical to `splits = 1` (query blocks carry no cross-block
+/// state).  Routing and the per-head hoists run once; only the
+/// query-block loop fans out.  Callers already running ON the pool
+/// must pass 1 (nested fan-out deadlocks).
+#[allow(clippy::too_many_arguments)]
+pub fn sla2_attention_split(q: &[f32], k: &[f32], v: &[f32],
+                            p: &Sla2Params, k_pct: f64, n: usize,
+                            d: usize, b_q: usize, b_k: usize,
+                            quant: QuantMode, splits: usize)
+                            -> Vec<f32> {
     stats().sla2_heads
         .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     // router sees the UN-smoothed K (sla2.py order); smoothing is
     // softmax-invariant for the router scores anyway
     let mask = router_mask(q, k, p.proj_q, p.proj_k, k_pct, n, d, b_q,
                            b_k);
-    sla2_attention_masked(q, k, v, &mask, p.alpha_logit, n, d, b_q, b_k,
-                          quant)
+    let mix: Vec<f32> =
+        p.alpha_logit.iter().map(|&l| sigmoid(l)).collect();
+    masked_attention_core(q, k, v, &mask, &mix, n, d, b_q, b_k, quant,
+                          splits)
 }
 
 /// The `sparge2` variant: hybrid top-k+top-p mask, sparse branch
@@ -787,11 +965,24 @@ pub fn sla2_attention(q: &[f32], k: &[f32], v: &[f32], p: &Sla2Params,
 pub fn sparge2_attention(q: &[f32], k: &[f32], v: &[f32], k_pct: f64,
                          top_p: f64, n: usize, d: usize, b_q: usize,
                          b_k: usize, quant: QuantMode) -> Vec<f32> {
+    sparge2_attention_split(q, k, v, k_pct, top_p, n, d, b_q, b_k,
+                            quant, 1)
+}
+
+/// [`sparge2_attention`] with an intra-head fan-out factor (same
+/// `splits` contract as [`sla2_attention_split`]).
+#[allow(clippy::too_many_arguments)]
+pub fn sparge2_attention_split(q: &[f32], k: &[f32], v: &[f32],
+                               k_pct: f64, top_p: f64, n: usize,
+                               d: usize, b_q: usize, b_k: usize,
+                               quant: QuantMode, splits: usize)
+                               -> Vec<f32> {
     stats().sparge2_heads
         .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let mask = sparge2_mask(q, k, k_pct, top_p, n, d, b_q, b_k);
     let mix = vec![1.0f32; n / b_q];
-    masked_attention_core(q, k, v, &mask, &mix, n, d, b_q, b_k, quant)
+    masked_attention_core(q, k, v, &mask, &mix, n, d, b_q, b_k, quant,
+                          splits)
 }
 
 /// The `svg_ear` variant: top-k sparse branch plus error-aware linear
@@ -803,13 +994,24 @@ pub fn sparge2_attention(q: &[f32], k: &[f32], v: &[f32], k_pct: f64,
 pub fn svg_ear_attention(q: &[f32], k: &[f32], v: &[f32], k_pct: f64,
                          n: usize, d: usize, b_q: usize, b_k: usize,
                          quant: QuantMode) -> Vec<f32> {
+    svg_ear_attention_split(q, k, v, k_pct, n, d, b_q, b_k, quant, 1)
+}
+
+/// [`svg_ear_attention`] with an intra-head fan-out factor (same
+/// `splits` contract as [`sla2_attention_split`]).
+#[allow(clippy::too_many_arguments)]
+pub fn svg_ear_attention_split(q: &[f32], k: &[f32], v: &[f32],
+                               k_pct: f64, n: usize, d: usize,
+                               b_q: usize, b_k: usize, quant: QuantMode,
+                               splits: usize) -> Vec<f32> {
     use std::sync::atomic::Ordering::Relaxed;
     let (mask, mix) = svg_ear_routing(q, k, k_pct, n, d, b_q, b_k);
     let compensated = mix.iter().filter(|&&a| a < 1.0).count() as u64;
     let st = stats();
     st.svg_ear_heads.fetch_add(1, Relaxed);
     st.ear_compensated_blocks.fetch_add(compensated, Relaxed);
-    masked_attention_core(q, k, v, &mask, &mix, n, d, b_q, b_k, quant)
+    masked_attention_core(q, k, v, &mask, &mix, n, d, b_q, b_k, quant,
+                          splits)
 }
 
 #[cfg(test)]
@@ -1114,6 +1316,49 @@ pub(crate) mod tests {
                                        b_q, b_k, mode);
             assert_eq!(ear, sp, "{mode:?} outputs diverged");
         }
+    }
+
+    #[test]
+    fn intra_head_split_is_bit_identical_and_counted() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let (n, d, b_q, b_k) = (64, 32, 8, 4);
+        let (q, k, v) = qkv(n, d, 33);
+        let eye: Vec<f32> = (0..d * d)
+            .map(|i| if i % (d + 1) == 0 { 1.0 } else { 0.0 })
+            .collect();
+        let alpha = vec![0.4f32; n / b_q];
+        let p = Sla2Params { proj_q: &eye, proj_k: &eye,
+                             alpha_logit: &alpha };
+        for quant in [QuantMode::Off, QuantMode::Int8] {
+            let seq = sla2_attention(&q, &k, &v, &p, 0.25, n, d, b_q,
+                                     b_k, quant);
+            // t_m = 8 here: exercise even, uneven, one-block-per-chunk
+            // and over-subscribed (clamped) fan-outs
+            for splits in [2usize, 3, 8, 64] {
+                let before = stats().intra_head_splits.load(Relaxed);
+                let par = sla2_attention_split(&q, &k, &v, &p, 0.25, n,
+                                               d, b_q, b_k, quant,
+                                               splits);
+                assert_eq!(par, seq,
+                           "{quant:?} splits={splits} must stitch \
+                            bit-identically");
+                assert!(stats().intra_head_splits.load(Relaxed) > before,
+                        "fanning must bump the intra_head_splits stat");
+            }
+        }
+        // the other entry points share the same invariant
+        assert_eq!(full_attention_split(&q, &k, &v, n, d, 4),
+                   full_attention(&q, &k, &v, n, d));
+        assert_eq!(
+            sparge2_attention_split(&q, &k, &v, 0.25, 0.5, n, d, b_q,
+                                    b_k, QuantMode::Int8, 4),
+            sparge2_attention(&q, &k, &v, 0.25, 0.5, n, d, b_q, b_k,
+                              QuantMode::Int8));
+        assert_eq!(
+            svg_ear_attention_split(&q, &k, &v, 0.10, n, d, b_q, b_k,
+                                    QuantMode::Off, 4),
+            svg_ear_attention(&q, &k, &v, 0.10, n, d, b_q, b_k,
+                              QuantMode::Off));
     }
 
     #[test]

@@ -1,18 +1,26 @@
 //! Dense-math substrate for the native backend: row-major f32 matmuls
-//! (cache-blocked), the portable `i8 x i8 -> i32` integer GEMMs behind
-//! the real-INT8 attention path, and the handful of elementwise ops
-//! the DiT forward needs.
+//! (cache-blocked), the `i8 x i8 -> i32` integer GEMMs behind the
+//! real-INT8 attention path, and the handful of elementwise ops the
+//! DiT forward needs.  Every hot inner loop routes through the
+//! runtime-dispatched SIMD primitives in [`super::simd`] (AVX2 /
+//! SSE4.1 / NEON, scalar fallback).
 //!
 //! Numerics mirror the jax source of truth (`python/compile/model.py`,
 //! `kernels/ref.py`): layer-norm uses the population variance with eps
 //! 1e-6, gelu is the tanh approximation (jax.nn.gelu's default), and
-//! softmax subtracts the row max before exponentiating.  The f32
-//! matmuls accumulate each output element in ascending-`k` order no
-//! matter how the loops are blocked, so blocking never changes a bit
-//! of the result (pinned by `blocked_matmul_is_bit_identical_to_naive`
-//! below); the integer GEMMs are free to reassociate because integer
-//! addition is exact.  See `docs/KERNELS.md` for the blocking scheme
-//! and the f32-exactness argument the INT8 parity tests rely on.
+//! softmax subtracts the row max before exponentiating.  [`matmul`]
+//! and [`matmul_tn`] accumulate each output element in ascending-`k`
+//! order no matter how the loops are blocked OR vectorized (SIMD lanes
+//! are independent output columns with unfused mul+add), so neither
+//! blocking nor the ISA changes a bit of the result (pinned by
+//! `blocked_matmul_is_bit_identical_to_naive` and
+//! `f32_matmuls_bit_identical_across_isas` below).  The integer GEMMs
+//! are free to reassociate because integer addition is exact.  The
+//! horizontal-reduction kernels [`dot`] / [`matmul_nt`] are
+//! parity-bounded instead (rel_err < 1e-6 vs scalar; strict
+//! sequential below one SIMD chunk) — see `docs/KERNELS.md` §7 for
+//! the dispatch table and the f32-exactness argument the INT8 parity
+//! tests rely on.
 
 /// Depth of the `b` panel [`matmul`] keeps hot across all `m` rows.
 const MATMUL_KC: usize = 128;
@@ -23,11 +31,14 @@ const MATMUL_NC: usize = 256;
 /// across every row of `a` stays within L1.
 const GEMM_I8_NB: usize = 64;
 
+use super::simd;
+
 /// `a (m, k) @ b (k, n) -> (m, n)`, row-major.  ikj loop order so the
-/// inner loop runs over contiguous rows of `b` and `out`
-/// (auto-vectorizes); shapes wider than one `KC x NC` panel are
-/// cache-blocked over `k` and `n` with bit-identical accumulation
-/// order (ascending `k` per output element either way).
+/// inner loop runs over contiguous rows of `b` and `out` (the SIMD
+/// [`simd::axpy_f32`] panel); shapes wider than one `KC x NC` panel
+/// are cache-blocked over `k` and `n` with bit-identical accumulation
+/// order (ascending `k` per output element either way, and the SIMD
+/// lanes are independent output columns).
 ///
 /// ```
 /// use sla2::runtime::native::linalg::matmul;
@@ -37,22 +48,30 @@ const GEMM_I8_NB: usize = 64;
 /// ```
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
               -> Vec<f32> {
+    let mut out = Vec::new();
+    matmul_into(a, b, m, k, n, &mut out);
+    out
+}
+
+/// [`matmul`] into a caller-owned buffer (cleared and resized) — the
+/// attention hot loops reuse one scratch per shard instead of
+/// allocating per (query block, tile) pair.
+pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
+                   out: &mut Vec<f32>) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
+    out.clear();
+    out.resize(m * n, 0.0);
     if k <= MATMUL_KC && n <= MATMUL_NC {
         // single-panel shapes (every attention tile, dit-tiny layers):
         // the straight ikj loop, no blocking overhead
         for i in 0..m {
             let orow = &mut out[i * n..(i + 1) * n];
             for (kk, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
-                let brow = &b[kk * n..(kk + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
+                simd::axpy_f32(orow, av, &b[kk * n..(kk + 1) * n]);
             }
         }
-        return out;
+        return;
     }
     // blocked: one KC x NC panel of `b` stays cache-hot across all m
     // rows of `a` (the dit-small MLP walks 1 MiB of weights per call
@@ -67,38 +86,23 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
                 let orow = &mut out[i * n + nb..i * n + ne];
                 for kk in kb..ke {
                     let av = a[i * k + kk];
-                    let brow = &b[kk * n + nb..kk * n + ne];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += av * bv;
-                    }
+                    simd::axpy_f32(orow, av,
+                                   &b[kk * n + nb..kk * n + ne]);
                 }
             }
         }
     }
-    out
 }
 
-/// Unrolled `i8` dot product with `i32` accumulation — the inner
-/// kernel of [`gemm_i8_nt`].  Four independent accumulator lanes break
-/// the add dependency chain (integer adds reassociate exactly, unlike
-/// the strict sequential-`k` f32 [`dot`]), which is what lets the
-/// compiler vectorize the widening multiply-adds.
+/// `i8` dot product with `i32` accumulation — the inner kernel of
+/// [`gemm_i8_nt`], dispatched to the active ISA ([`simd::dot_i8`]:
+/// AVX2 `_mm256_madd_epi16`, SSE4.1 `_mm_madd_epi16`, NEON
+/// `vmull_s8`, or the unrolled scalar reference).  Integer adds
+/// reassociate exactly, so every ISA is bit-identical — unlike the
+/// parity-bounded f32 [`dot`].
 pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     debug_assert_eq!(a.len(), b.len());
-    let n4 = a.len() & !3;
-    let mut acc = [0i32; 4];
-    for (ca, cb) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4))
-    {
-        acc[0] += ca[0] as i32 * cb[0] as i32;
-        acc[1] += ca[1] as i32 * cb[1] as i32;
-        acc[2] += ca[2] as i32 * cb[2] as i32;
-        acc[3] += ca[3] as i32 * cb[3] as i32;
-    }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for (&x, &y) in a[n4..].iter().zip(&b[n4..]) {
-        s += x as i32 * y as i32;
-    }
-    s
+    simd::dot_i8(a, b)
 }
 
 /// Integer `a (m, k) @ b (n, k)^T -> (m, n)` with `i32` accumulation —
@@ -118,9 +122,21 @@ pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
 /// ```
 pub fn gemm_i8_nt(a: &[i8], b: &[i8], m: usize, k: usize, n: usize)
                   -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    gemm_i8_nt_into(a, b, m, k, n, &mut out);
+    out
+}
+
+/// [`gemm_i8_nt`] writing into a caller-owned buffer — the attention
+/// sparse branch calls this once per (query block, kept tile) pair,
+/// so the allocation-free form keeps the hot loop off the allocator.
+/// `out` is resized to `m * n` and fully overwritten.
+pub fn gemm_i8_nt_into(a: &[i8], b: &[i8], m: usize, k: usize,
+                       n: usize, out: &mut Vec<i32>) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
-    let mut out = vec![0i32; m * n];
+    out.clear();
+    out.resize(m * n, 0);
     for jb in (0..n).step_by(GEMM_I8_NB) {
         let je = (jb + GEMM_I8_NB).min(n);
         for i in 0..m {
@@ -130,13 +146,12 @@ pub fn gemm_i8_nt(a: &[i8], b: &[i8], m: usize, k: usize, n: usize)
             }
         }
     }
-    out
 }
 
 /// Integer `a (m, k) @ b (k, n) -> (m, n)` with `i32` accumulation —
 /// the real-INT8 `P V` product of Alg. 2.  ikj loop order: the inner
-/// loop widens and multiply-adds contiguous rows of `b` into the
-/// `i32` output row, which auto-vectorizes.
+/// loop ([`simd::axpy_i8_i32`]) widens and multiply-adds contiguous
+/// rows of `b` into the `i32` output row.
 ///
 /// ```
 /// use sla2::runtime::native::linalg::gemm_i8_i32;
@@ -146,29 +161,50 @@ pub fn gemm_i8_nt(a: &[i8], b: &[i8], m: usize, k: usize, n: usize)
 /// ```
 pub fn gemm_i8_i32(a: &[i8], b: &[i8], m: usize, k: usize, n: usize)
                    -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    gemm_i8_i32_into(a, b, m, k, n, &mut out);
+    out
+}
+
+/// [`gemm_i8_i32`] writing into a caller-owned buffer (see
+/// [`gemm_i8_nt_into`] for why).  `out` is resized to `m * n` and
+/// fully overwritten.
+pub fn gemm_i8_i32_into(a: &[i8], b: &[i8], m: usize, k: usize,
+                        n: usize, out: &mut Vec<i32>) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0i32; m * n];
+    out.clear();
+    out.resize(m * n, 0);
     for i in 0..m {
         let orow = &mut out[i * n..(i + 1) * n];
         for (kk, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
-            let av = av as i32;
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv as i32;
-            }
+            simd::axpy_i8_i32(orow, av as i32,
+                              &b[kk * n..(kk + 1) * n]);
         }
     }
-    out
 }
 
 /// `a (m, k) @ b (n, k)^T -> (m, n)` — row-by-row dot products
 /// (attention scores `Q K^T` without materializing a transpose).
+/// Inherits [`dot`]'s SIMD contract: parity-bounded vs scalar for
+/// `k` at or above one SIMD chunk, strictly sequential below it.
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
                  -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_nt_into(a, b, m, k, n, &mut out);
+    out
+}
+
+/// [`matmul_nt`] writing into a caller-owned buffer — the sim/off
+/// attention score path reuses one buffer per shard instead of
+/// allocating per (query block, tile) pair.  `out` is resized to
+/// `m * n` and fully overwritten.
+pub fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, k: usize,
+                      n: usize, out: &mut Vec<f32>) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
-    let mut out = vec![0.0f32; m * n];
+    out.clear();
+    out.resize(m * n, 0.0);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         for j in 0..n {
@@ -176,11 +212,12 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
             out[i * n + j] = dot(arow, brow);
         }
     }
-    out
 }
 
 /// `a (k, m)^T @ b (k, n) -> (m, n)` — the linear branch's
-/// `phi(K)^T V` tile update.
+/// `phi(K)^T V` tile update.  kij order with the SIMD
+/// [`simd::axpy_f32`] inner loop: ascending-`k` per output element,
+/// bit-identical across ISAs.
 pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize)
                  -> Vec<f32> {
     debug_assert_eq!(a.len(), k * m);
@@ -190,18 +227,19 @@ pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize)
         let arow = &a[kk * m..(kk + 1) * m];
         let brow = &b[kk * n..(kk + 1) * n];
         for (i, &av) in arow.iter().enumerate() {
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
+            simd::axpy_f32(&mut out[i * n..(i + 1) * n], av, brow);
         }
     }
     out
 }
 
+/// f32 dot product, dispatched to the active ISA.  Parity-bounded:
+/// the horizontal SIMD reduction reassociates the adds (rel_err
+/// < 1e-6 vs the sequential scalar sum); inputs shorter than one SIMD
+/// chunk keep the strict sequential order.
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    simd::dot_f32(a, b)
 }
 
 /// `x (m, n) + bias (n,)` broadcast over rows, in place.
@@ -361,6 +399,126 @@ mod tests {
         let a: Vec<i8> = vec![127; 9];
         let b: Vec<i8> = vec![-128; 9];
         assert_eq!(dot_i8(&a, &b), 9 * 127 * -128);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_gemms_and_reuse_buffers() {
+        let mut rng = crate::util::rng::Pcg32::seeded(77);
+        let mut i32_buf = Vec::new();
+        let mut f32_buf = Vec::new();
+        // descending sizes prove the buffers are truncated, not just
+        // grown — stale tail elements would poison the next tile
+        for (m, k, n) in [(8usize, 64usize, 16usize), (4, 32, 8),
+                          (2, 7, 3)] {
+            let a: Vec<i8> = (0..m * k)
+                .map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let bt: Vec<i8> = (0..n * k)
+                .map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let b: Vec<i8> = (0..k * n)
+                .map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            gemm_i8_nt_into(&a, &bt, m, k, n, &mut i32_buf);
+            assert_eq!(i32_buf, gemm_i8_nt(&a, &bt, m, k, n));
+            gemm_i8_i32_into(&a, &b, m, k, n, &mut i32_buf);
+            assert_eq!(i32_buf, gemm_i8_i32(&a, &b, m, k, n));
+            let af = rng.normal_vec(m * k);
+            let bf = rng.normal_vec(n * k);
+            matmul_nt_into(&af, &bf, m, k, n, &mut f32_buf);
+            assert_eq!(f32_buf, matmul_nt(&af, &bf, m, k, n));
+            let bf2 = rng.normal_vec(k * n);
+            matmul_into(&af, &bf2, m, k, n, &mut f32_buf);
+            assert_eq!(f32_buf, matmul(&af, &bf2, m, k, n));
+        }
+    }
+
+    #[test]
+    fn integer_kernels_bit_identical_across_isas() {
+        // proptest over random i8 operands at remainder-heavy k:
+        // whatever ISA dispatch picked must reproduce the forced-
+        // scalar result bit-for-bit (exact integer arithmetic)
+        use crate::runtime::native::simd::{with_forced_isa, KernelIsa};
+        use crate::util::proptest;
+        proptest::check(
+            "int8-gemm-isa-bit-identity", 64,
+            |rng| {
+                let k = *[1usize, 3, 7, 15, 16, 17, 31, 33, 63, 64,
+                          127, 128][rng.below(12) as usize];
+                let m = 1 + rng.below(6) as usize;
+                let n = 1 + rng.below(6) as usize;
+                let a: Vec<i8> = (0..m * k)
+                    .map(|_| (rng.below(255) as i32 - 127) as i8)
+                    .collect();
+                let bt: Vec<i8> = (0..n * k)
+                    .map(|_| (rng.below(255) as i32 - 127) as i8)
+                    .collect();
+                let b: Vec<i8> = (0..k * n)
+                    .map(|_| (rng.below(255) as i32 - 127) as i8)
+                    .collect();
+                (m, k, n, a, bt, b)
+            },
+            |(m, k, n, a, bt, b)| {
+                let (m, k, n) = (*m, *k, *n);
+                let scalar = with_forced_isa(KernelIsa::Scalar, || {
+                    (gemm_i8_nt(a, bt, m, k, n),
+                     gemm_i8_i32(a, b, m, k, n),
+                     dot_i8(&a[..k], &bt[..k]))
+                });
+                if gemm_i8_nt(a, bt, m, k, n) != scalar.0 {
+                    return Err(format!("gemm_i8_nt ({m},{k},{n})"));
+                }
+                if gemm_i8_i32(a, b, m, k, n) != scalar.1 {
+                    return Err(format!("gemm_i8_i32 ({m},{k},{n})"));
+                }
+                if dot_i8(&a[..k], &bt[..k]) != scalar.2 {
+                    return Err(format!("dot_i8 k={k}"));
+                }
+                Ok(())
+            });
+    }
+
+    #[test]
+    fn f32_matmuls_bit_identical_across_isas() {
+        // matmul / matmul_tn vectorize over output columns with
+        // unfused mul+add, so the active ISA must reproduce forced
+        // scalar EXACTLY — same pin the blocked-vs-naive test makes
+        use crate::runtime::native::simd::{with_forced_isa, KernelIsa};
+        let mut rng = crate::util::rng::Pcg32::seeded(99);
+        for (m, k, n) in [(3usize, 300usize, 70usize), (5, 129, 257),
+                          (2, 17, 9), (1, 4, 3), (7, 131, 300)] {
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(k * n);
+            let at = rng.normal_vec(k * m);
+            let (want, want_tn) =
+                with_forced_isa(KernelIsa::Scalar, || {
+                    (matmul(&a, &b, m, k, n),
+                     matmul_tn(&at, &b, k, m, n))
+                });
+            assert_eq!(matmul(&a, &b, m, k, n), want,
+                       "matmul ISA-diverged at ({m},{k},{n})");
+            assert_eq!(matmul_tn(&at, &b, k, m, n), want_tn,
+                       "matmul_tn ISA-diverged at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn f32_dot_kernels_parity_bounded_across_isas() {
+        // dot / matmul_nt reassociate under SIMD: bounded, not exact
+        use crate::runtime::native::simd::{with_forced_isa, KernelIsa};
+        let mut rng = crate::util::rng::Pcg32::seeded(101);
+        for (m, k, n) in [(4usize, 8usize, 4usize), (3, 32, 5),
+                          (2, 127, 3), (5, 128, 7), (1, 513, 2)] {
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(n * k);
+            let got = matmul_nt(&a, &b, m, k, n);
+            let want = with_forced_isa(KernelIsa::Scalar,
+                                       || matmul_nt(&a, &b, m, k, n));
+            let num: f64 = got.iter().zip(&want)
+                .map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+            let den: f64 = want.iter()
+                .map(|y| (*y as f64).powi(2)).sum();
+            let rel = num.sqrt() / (den.sqrt() + 1e-12);
+            assert!(rel < 1e-6,
+                    "matmul_nt ISA rel_err {rel} at ({m},{k},{n})");
+        }
     }
 
     #[test]

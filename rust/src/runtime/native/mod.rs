@@ -9,6 +9,9 @@
 //! * [`attention`] — the paper's forward math (router, block-sparse
 //!   online softmax, linear branch, real-INT8 integer kernels,
 //!   alpha mix);
+//! * [`simd`] — the runtime-dispatched SIMD kernel layer (AVX2 /
+//!   SSE4.1 / NEON with the scalar reference as portable baseline,
+//!   selected once per process — docs/KERNELS.md §7);
 //! * [`model`] — the DiT forward + canonical parameter layout;
 //! * [`NativeBackend`] — the [`ComputeBackend`] implementation:
 //!   batch-parallel over the process-wide
@@ -38,6 +41,7 @@
 pub mod attention;
 pub mod linalg;
 pub mod model;
+pub mod simd;
 
 use std::cell::{Cell, RefCell};
 use std::path::Path;
@@ -87,6 +91,10 @@ pub struct NativeKernelStats {
     /// quantized heads served by the f32 fake-quant simulation
     /// (`quant_mode = "sim"`)
     pub sim_heads: AtomicU64,
+    /// head invocations that fanned their query blocks across the
+    /// shared pool (intra-head parallelism — the long-sequence,
+    /// few-heads regime; see docs/KERNELS.md §7)
+    pub intra_head_splits: AtomicU64,
     /// (query-block, key-block) tiles routed to the sparse branch
     pub sparse_tiles: AtomicU64,
     /// tiles NOT routed to the sparse branch: linear-branch
@@ -116,9 +124,14 @@ impl NativeKernelStats {
             .push("quant_heads", g(&self.quant_heads))
             .push("int8_heads", g(&self.int8_heads))
             .push("sim_heads", g(&self.sim_heads))
+            .push("intra_head_splits", g(&self.intra_head_splits))
             .push("sparse_tiles", g(&self.sparse_tiles))
             .push("linear_tiles", g(&self.linear_tiles))
             .push("nonfinite_outputs", g(&self.nonfinite_outputs))
+            // which kernel ISA this process dispatches to — bench rows
+            // and wire metrics are attributable to the code path that
+            // actually ran
+            .push("isa", simd::active().name())
     }
 
     /// Achieved block sparsity across every routed tile so far.
@@ -260,9 +273,10 @@ impl ComputeBackend for NativeBackend {
     }
 
     fn platform(&self) -> String {
-        format!("native-cpu ({} threads, params: {}, quant: {})",
+        format!("native-cpu ({} threads, params: {}, quant: {}, \
+                 isa: {})",
                 self.threads, self.params_source,
-                self.quant_mode.as_str())
+                self.quant_mode.as_str(), simd::active().name())
     }
 
     fn model(&self) -> &ModelConfig {
@@ -499,9 +513,14 @@ mod tests {
                     "{variant} execute must bump its head counter");
         }
         for key in ["sla2_heads", "sparge2_heads", "svg_ear_heads",
-                    "ear_compensated_blocks"] {
+                    "ear_compensated_blocks", "intra_head_splits"] {
             assert!(stats().snapshot().get(key).is_some(),
                     "snapshot must carry {key}");
         }
+        // the snapshot names the dispatched ISA so bench rows and
+        // wire metrics are attributable to the path that ran
+        assert_eq!(stats().snapshot().get("isa").unwrap().as_str(),
+                   Some(simd::active().name()));
+        assert!(b.platform().contains("isa: "));
     }
 }

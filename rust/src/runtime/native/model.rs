@@ -319,29 +319,45 @@ pub fn timestep_embedding(t: f32, dim: usize) -> Vec<f32> {
     out
 }
 
-/// One head's attention dispatch.
+/// Sequence length below which intra-head fan-out is never worth the
+/// chunk bookkeeping: short heads finish in microseconds and the
+/// pool round-trip would dominate.  At or above this, a b=1 request
+/// with fewer heads than pool workers splits WITHIN each head (see
+/// [`denoise_forward`]).
+pub const INTRA_HEAD_MIN_TOKENS: usize = 1024;
+
+/// One head's attention dispatch.  `splits > 1` fans each head's
+/// query blocks across the shared pool (intra-head parallelism) —
+/// only legal when the caller is NOT itself a pool worker.
 fn head_attention(cfg: &ModelConfig, blk: &BlockParams, q: &[f32],
-                  k: &[f32], v: &[f32], mode: AttnMode) -> Vec<f32> {
+                  k: &[f32], v: &[f32], mode: AttnMode,
+                  splits: usize) -> Vec<f32> {
     let (n, d) = (cfg.n_tokens, cfg.head_dim);
     match mode {
-        AttnMode::Full => attention::full_attention(q, k, v, n, d),
-        AttnMode::Sla2 { k_pct, quant } => attention::sla2_attention(
-            q, k, v,
-            &Sla2Params {
-                proj_q: &blk.proj_q,
-                proj_k: &blk.proj_k,
-                alpha_logit: &blk.alpha_logit,
-            },
-            k_pct, n, d, cfg.b_q, cfg.b_k, quant),
+        AttnMode::Full => {
+            attention::full_attention_split(q, k, v, n, d, splits)
+        }
+        AttnMode::Sla2 { k_pct, quant } => {
+            attention::sla2_attention_split(
+                q, k, v,
+                &Sla2Params {
+                    proj_q: &blk.proj_q,
+                    proj_k: &blk.proj_k,
+                    alpha_logit: &blk.alpha_logit,
+                },
+                k_pct, n, d, cfg.b_q, cfg.b_k, quant, splits)
+        }
         // the training-free variants never read block parameters —
         // that is the point of the comparison
         AttnMode::Sparge2 { k_pct, top_p, quant } => {
-            attention::sparge2_attention(q, k, v, k_pct, top_p, n, d,
-                                         cfg.b_q, cfg.b_k, quant)
+            attention::sparge2_attention_split(q, k, v, k_pct, top_p,
+                                               n, d, cfg.b_q, cfg.b_k,
+                                               quant, splits)
         }
         AttnMode::SvgEar { k_pct, quant } => {
-            attention::svg_ear_attention(q, k, v, k_pct, n, d, cfg.b_q,
-                                         cfg.b_k, quant)
+            attention::svg_ear_attention_split(q, k, v, k_pct, n, d,
+                                               cfg.b_q, cfg.b_k, quant,
+                                               splits)
         }
     }
 }
@@ -354,7 +370,12 @@ fn head_attention(cfg: &ModelConfig, blk: &BlockParams, q: &[f32],
 /// `parallel_heads` fans the per-block head attentions out over the
 /// shared native pool — callers already running ON that pool (the
 /// batch-parallel path) must pass `false` or risk the classic nested
-/// fan-out deadlock.
+/// fan-out deadlock.  When the sequence is long
+/// (`n_tokens >= INTRA_HEAD_MIN_TOKENS`) and there are fewer heads
+/// than pool workers, the fan-out flips INSIDE the heads instead:
+/// heads run sequentially and each one partitions its query blocks
+/// across the pool, so b=1 long-context latency scales with cores
+/// (bit-identical either way — see docs/KERNELS.md §7).
 pub fn denoise_forward(cfg: &ModelConfig, params: &Arc<NativeParams>,
                        x: &[f32], t: f32, y: i32, mode: AttnMode,
                        parallel_heads: bool) -> Result<Vec<f32>> {
@@ -409,9 +430,30 @@ pub fn denoise_forward(cfg: &ModelConfig, params: &Arc<NativeParams>,
             }
             out
         };
-        let heads_out: Vec<Vec<f32>> = if parallel_heads
-            && cfg.heads >= 2
+        // Parallelism shape: with plenty of heads, one pool task per
+        // head (the classic fan-out).  In the long-sequence/few-heads
+        // regime (b=1 long-context), head-level fan-out caps at
+        // cfg.heads tasks and leaves the rest of the pool idle — so
+        // run heads SEQUENTIALLY here and let each head fan its query
+        // blocks across the whole pool instead.  This thread is not a
+        // pool worker (parallel_heads contract), so the inner fan
+        // cannot deadlock.
+        let pool_w = crate::util::threadpool::shared_pool_width();
+        let intra_splits = if parallel_heads
+            && cfg.n_tokens >= INTRA_HEAD_MIN_TOKENS
+            && cfg.heads < pool_w
         {
+            pool_w
+        } else {
+            1
+        };
+        let heads_out: Vec<Vec<f32>> = if intra_splits > 1 {
+            (0..cfg.heads)
+                .map(|hh| head_attention(
+                    cfg, blk, &extract(0, hh), &extract(1, hh),
+                    &extract(2, hh), mode, intra_splits))
+                .collect()
+        } else if parallel_heads && cfg.heads >= 2 {
             let inputs: Arc<Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>> =
                 Arc::new((0..cfg.heads)
                     .map(|hh| (extract(0, hh), extract(1, hh),
@@ -421,13 +463,14 @@ pub fn denoise_forward(cfg: &ModelConfig, params: &Arc<NativeParams>,
             let cfg = cfg.clone();
             crate::util::threadpool::shared_map(cfg.heads, move |hh| {
                 let (q, k, v) = &inputs[hh];
-                head_attention(&cfg, &params.blocks[bi], q, k, v, mode)
+                head_attention(&cfg, &params.blocks[bi], q, k, v, mode,
+                               1)
             })
         } else {
             (0..cfg.heads)
                 .map(|hh| head_attention(
                     cfg, blk, &extract(0, hh), &extract(1, hh),
-                    &extract(2, hh), mode))
+                    &extract(2, hh), mode, 1))
                 .collect()
         };
         let mut concat = vec![0.0f32; n * hd];

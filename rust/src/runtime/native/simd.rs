@@ -1,0 +1,765 @@
+//! Runtime-dispatched SIMD primitives for the native kernels.
+//!
+//! One ISA is selected per process — AVX2(+FMA) or SSE4.1 on x86_64
+//! (via `is_x86_feature_detected!`), NEON on aarch64, scalar anywhere
+//! else — and every hot inner kernel in `linalg.rs` / `attention.rs`
+//! routes through the four primitives here:
+//!
+//! * [`dot_i8`]   — widening `i8 x i8 -> i32` dot product (the
+//!   `gemm_i8_nt` inner kernel: AVX2 `_mm256_madd_epi16` on
+//!   sign-extended operands, SSE4.1 `_mm_madd_epi16`, NEON
+//!   `vmull_s8`/`vpadalq_s16`).
+//! * [`axpy_i8_i32`] — `acc[j] += x * b[j]` with `i8` operands widened
+//!   to `i32` (the `gemm_i8_i32` inner loop).
+//! * [`dot_f32`]  — horizontal f32 dot product.
+//! * [`axpy_f32`] — `acc[j] += x * b[j]` over f32 rows (the `matmul` /
+//!   `matmul_tn` inner loop).
+//!
+//! # Numerics contract
+//!
+//! The integer primitives are **bit-identical** to their scalar
+//! references on every input: integer adds are exact, so lane order is
+//! free.  The f32 primitives split two ways:
+//!
+//! * [`axpy_f32`] is **bit-identical** to scalar: each output lane
+//!   performs the same `mul` + `add` rounding sequence the scalar loop
+//!   does (deliberately NOT fused into an FMA), and lanes are
+//!   independent output elements — so `matmul` / `matmul_tn` keep the
+//!   ascending-`k`-per-element order the bit-identity tests pin.
+//! * [`dot_f32`] is **parity-bounded** (rel_err < 1e-6 vs scalar): the
+//!   horizontal reduction stripes partial sums across lanes, which
+//!   reassociates the adds.  Inputs shorter than one SIMD chunk fall
+//!   through to the strict sequential scalar loop, so tiny-`k` calls
+//!   (the `k <= 4` shapes some tests compare bit-exactly against
+//!   `matmul`) are unchanged, and for a single SSE/NEON chunk the
+//!   lanes are reduced in ascending order — also scalar-exact.
+//!
+//! # Selection and overrides
+//!
+//! The active ISA resolves once, at the first kernel call:
+//! `SLA2_FORCE_SCALAR=1` (env) pins scalar unconditionally; otherwise
+//! an ISA requested via [`request`] (the `--kernel-isa` knob) wins if
+//! the host supports it; otherwise the best detected ISA.  Tests and
+//! benches use [`with_forced_isa`] for a *thread-scoped* override that
+//! cannot perturb concurrently running tests.
+use std::cell::Cell;
+use std::fmt;
+
+use anyhow::{bail, Result};
+use once_cell::sync::{Lazy, OnceCell};
+
+/// The instruction sets the dispatch layer knows about.  Every
+/// variant exists on every build target; [`KernelIsa::available`]
+/// says which ones the running host can execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelIsa {
+    /// Portable scalar reference kernels (always available).
+    Scalar,
+    /// x86_64 SSE4.1: 4-wide f32, `_mm_madd_epi16` i8 dots.
+    Sse41,
+    /// x86_64 AVX2+FMA: 8-wide f32, `_mm256_madd_epi16` i8 dots.
+    Avx2,
+    /// aarch64 NEON: 4-wide f32, `vmull_s8` widening i8 dots.
+    Neon,
+}
+
+impl KernelIsa {
+    /// The wire/CLI name (`--kernel-isa` values, `native_kernels.isa`).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Sse41 => "sse41",
+            KernelIsa::Avx2 => "avx2",
+            KernelIsa::Neon => "neon",
+        }
+    }
+
+    /// Parse a `--kernel-isa` value.  `"auto"` is `None` (detect);
+    /// unknown names are a startup error, not a silent fallback.
+    pub fn parse(name: &str) -> Result<Option<KernelIsa>> {
+        Ok(Some(match name {
+            "auto" => return Ok(None),
+            "scalar" => KernelIsa::Scalar,
+            "sse41" => KernelIsa::Sse41,
+            "avx2" => KernelIsa::Avx2,
+            "neon" => KernelIsa::Neon,
+            other => bail!(
+                "unknown kernel ISA {other:?} (expected auto|scalar|\
+                 sse41|avx2|neon)"),
+        }))
+    }
+
+    /// Can the running host execute this ISA's kernels?
+    pub fn available(self) -> bool {
+        match self {
+            KernelIsa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelIsa::Avx2 => {
+                // the f32 dot uses FMA alongside AVX2; every real AVX2
+                // part has it, but detect both so the pairing is sound
+                std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma")
+            }
+            #[cfg(target_arch = "x86_64")]
+            KernelIsa::Sse41 => {
+                std::arch::is_x86_feature_detected!("sse4.1")
+            }
+            #[cfg(target_arch = "aarch64")]
+            KernelIsa::Neon => true,
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+}
+
+impl fmt::Display for KernelIsa {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Best ISA the host supports (ignoring every override).
+pub fn detect() -> KernelIsa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if KernelIsa::Avx2.available() {
+            return KernelIsa::Avx2;
+        }
+        if KernelIsa::Sse41.available() {
+            return KernelIsa::Sse41;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    return KernelIsa::Neon;
+    #[allow(unreachable_code)]
+    KernelIsa::Scalar
+}
+
+/// ISA requested via [`request`] before first use (`--kernel-isa`).
+static REQUESTED: OnceCell<KernelIsa> = OnceCell::new();
+
+/// The process-wide resolved ISA.  Priority: `SLA2_FORCE_SCALAR` env
+/// > [`REQUESTED`] > [`detect`].  Resolved once, at the first kernel
+/// call (or the first explicit [`active`] query).
+static ACTIVE: Lazy<KernelIsa> = Lazy::new(|| {
+    if force_scalar_env() {
+        return KernelIsa::Scalar;
+    }
+    if let Some(&isa) = REQUESTED.get() {
+        return isa;
+    }
+    detect()
+});
+
+fn force_scalar_env() -> bool {
+    std::env::var("SLA2_FORCE_SCALAR")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+/// The process-wide active ISA (resolving it if needed).
+pub fn active() -> KernelIsa {
+    *ACTIVE
+}
+
+/// Request a specific ISA for the process (the `--kernel-isa` knob).
+/// `"auto"` keeps detection.  Errors on unknown names, on ISAs the
+/// host lacks, and on requests that arrive after the process already
+/// resolved a different ISA (kernels may have run with it; switching
+/// mid-flight would make bench rows unattributable).  Returns the ISA
+/// the process will use — note `SLA2_FORCE_SCALAR` still wins.
+pub fn request(name: &str) -> Result<KernelIsa> {
+    let Some(isa) = KernelIsa::parse(name)? else {
+        return Ok(active());
+    };
+    if !isa.available() {
+        bail!("kernel ISA {name:?} is not available on this host \
+               (detected: {})", detect());
+    }
+    if let Some(&resolved) = Lazy::get(&ACTIVE) {
+        if resolved != isa && !force_scalar_env() {
+            bail!("kernel ISA already resolved to {resolved}; \
+                   --kernel-isa must be set before the first kernel \
+                   call");
+        }
+        return Ok(resolved);
+    }
+    if let Err(prior) = REQUESTED.set(isa) {
+        if prior != isa {
+            bail!("kernel ISA already requested as {prior}; \
+                   conflicting --kernel-isa {name:?}");
+        }
+    }
+    Ok(active())
+}
+
+thread_local! {
+    /// Thread-scoped ISA override ([`with_forced_isa`]) — lets tests
+    /// and benches compare ISAs inside one process without racing
+    /// concurrently running tests on the process-wide [`ACTIVE`].
+    static TL_OVERRIDE: Cell<Option<KernelIsa>> = const { Cell::new(None) };
+}
+
+/// The ISA the *calling thread* dispatches on right now.
+pub fn current() -> KernelIsa {
+    TL_OVERRIDE.with(Cell::get).unwrap_or_else(active)
+}
+
+/// Run `f` with the calling thread's kernels pinned to `isa`, then
+/// restore (panic-safe).  Thread-scoped: work `f` fans out to pool
+/// threads still runs on the process-wide ISA.
+pub fn with_forced_isa<R>(isa: KernelIsa, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<KernelIsa>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            TL_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(TL_OVERRIDE.with(|c| c.replace(Some(isa))));
+    f()
+}
+
+// ---------------------------------------------------------------------
+// scalar references — the portable baseline and the parity oracle
+// ---------------------------------------------------------------------
+
+/// Strict sequential-`k` f32 dot product (the scalar reference).
+pub fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Unrolled `i8 x i8 -> i32` dot product: four independent accumulator
+/// lanes break the add dependency chain (exact, so lane order is free).
+pub fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
+    let n4 = a.len().min(b.len()) & !3;
+    let mut acc = [0i32; 4];
+    for (ca, cb) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4))
+    {
+        acc[0] += ca[0] as i32 * cb[0] as i32;
+        acc[1] += ca[1] as i32 * cb[1] as i32;
+        acc[2] += ca[2] as i32 * cb[2] as i32;
+        acc[3] += ca[3] as i32 * cb[3] as i32;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (&x, &y) in a[n4..].iter().zip(&b[n4..]) {
+        s += x as i32 * y as i32;
+    }
+    s
+}
+
+/// `acc[j] += x * b[j]` — separate mul and add roundings per element
+/// (the contract the SIMD lanes reproduce bit-exactly).
+pub fn axpy_f32_scalar(acc: &mut [f32], x: f32, b: &[f32]) {
+    for (o, &bv) in acc.iter_mut().zip(b) {
+        *o += x * bv;
+    }
+}
+
+/// `acc[j] += x * b[j]` with `b` widened `i8 -> i32`.
+pub fn axpy_i8_i32_scalar(acc: &mut [i32], x: i32, b: &[i8]) {
+    for (o, &bv) in acc.iter_mut().zip(b) {
+        *o += x * bv as i32;
+    }
+}
+
+// ---------------------------------------------------------------------
+// dispatched primitives
+// ---------------------------------------------------------------------
+
+/// Horizontal f32 dot product — parity-bounded vs scalar (rel_err
+/// < 1e-6); inputs shorter than one SIMD chunk take the strict
+/// sequential scalar path.
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    match current() {
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 if n >= 8 => unsafe { x86::dot_f32_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Sse41 if n >= 4 => unsafe { x86::dot_f32_sse41(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        KernelIsa::Neon if n >= 4 => unsafe { neon::dot_f32_neon(a, b) },
+        _ => dot_f32_scalar(a, b),
+    }
+}
+
+/// Widening `i8 x i8 -> i32` dot product — bit-identical to
+/// [`dot_i8_scalar`] on every input (integer adds are exact).
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    let n = a.len().min(b.len());
+    match current() {
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 if n >= 16 => unsafe { x86::dot_i8_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Sse41 if n >= 8 => unsafe { x86::dot_i8_sse41(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        KernelIsa::Neon if n >= 16 => unsafe { neon::dot_i8_neon(a, b) },
+        _ => dot_i8_scalar(a, b),
+    }
+}
+
+/// `acc[j] += x * b[j]` over f32 — bit-identical to the scalar loop
+/// (independent lanes, unfused mul+add).
+pub fn axpy_f32(acc: &mut [f32], x: f32, b: &[f32]) {
+    let n = acc.len().min(b.len());
+    match current() {
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 if n >= 8 => unsafe {
+            x86::axpy_f32_avx2(acc, x, b)
+        },
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Sse41 if n >= 4 => unsafe {
+            x86::axpy_f32_sse41(acc, x, b)
+        },
+        #[cfg(target_arch = "aarch64")]
+        KernelIsa::Neon if n >= 4 => unsafe {
+            neon::axpy_f32_neon(acc, x, b)
+        },
+        _ => axpy_f32_scalar(acc, x, b),
+    }
+}
+
+/// `acc[j] += x * b[j]` with `i8` operands widened to `i32` —
+/// bit-identical to scalar (exact).
+pub fn axpy_i8_i32(acc: &mut [i32], x: i32, b: &[i8]) {
+    let n = acc.len().min(b.len());
+    match current() {
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 if n >= 8 => unsafe {
+            x86::axpy_i8_i32_avx2(acc, x, b)
+        },
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Sse41 if n >= 4 => unsafe {
+            x86::axpy_i8_i32_sse41(acc, x, b)
+        },
+        #[cfg(target_arch = "aarch64")]
+        KernelIsa::Neon if n >= 8 => unsafe {
+            neon::axpy_i8_i32_neon(acc, x, b)
+        },
+        _ => axpy_i8_i32_scalar(acc, x, b),
+    }
+}
+
+// ---------------------------------------------------------------------
+// x86_64: AVX2(+FMA) and SSE4.1
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2+FMA support at runtime.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc = _mm256_fmadd_ps(av, bv, acc);
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut sum = 0.0f32;
+        for l in lanes {
+            sum += l;
+        }
+        while i < n {
+            sum += a[i] * b[i];
+            i += 1;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Caller must have verified SSE4.1 support at runtime.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn dot_f32_sse41(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut acc = _mm_setzero_ps();
+        let mut i = 0;
+        while i + 4 <= n {
+            let av = _mm_loadu_ps(a.as_ptr().add(i));
+            let bv = _mm_loadu_ps(b.as_ptr().add(i));
+            acc = _mm_add_ps(acc, _mm_mul_ps(av, bv));
+            i += 4;
+        }
+        let mut lanes = [0.0f32; 4];
+        _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+        // ascending lane order: a single-chunk call reduces exactly
+        // like the sequential scalar loop
+        let mut sum = 0.0f32;
+        for l in lanes {
+            sum += l;
+        }
+        while i < n {
+            sum += a[i] * b[i];
+            i += 1;
+        }
+        sum
+    }
+
+    /// Sign-extend 16 `i8` lanes to `i16`, multiply pairwise and add
+    /// adjacent pairs into 8 `i32` lanes (`_mm256_madd_epi16`) — the
+    /// signed-safe version of the `maddubs` idiom (whose first operand
+    /// is unsigned and would corrupt negative Q values).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len().min(b.len());
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 16 <= n {
+            let av = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+            let bv = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+            let aw = _mm256_cvtepi8_epi16(av);
+            let bw = _mm256_cvtepi8_epi16(bv);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(aw, bw));
+            i += 16;
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut sum: i32 = lanes.iter().sum();
+        while i < n {
+            sum += a[i] as i32 * b[i] as i32;
+            i += 1;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Caller must have verified SSE4.1 support at runtime.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn dot_i8_sse41(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len().min(b.len());
+        let mut acc = _mm_setzero_si128();
+        let mut i = 0;
+        while i + 8 <= n {
+            let av = _mm_loadl_epi64(a.as_ptr().add(i) as *const __m128i);
+            let bv = _mm_loadl_epi64(b.as_ptr().add(i) as *const __m128i);
+            let aw = _mm_cvtepi8_epi16(av);
+            let bw = _mm_cvtepi8_epi16(bv);
+            acc = _mm_add_epi32(acc, _mm_madd_epi16(aw, bw));
+            i += 8;
+        }
+        let mut lanes = [0i32; 4];
+        _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, acc);
+        let mut sum: i32 = lanes.iter().sum();
+        while i < n {
+            sum += a[i] as i32 * b[i] as i32;
+            i += 1;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_f32_avx2(acc: &mut [f32], x: f32, b: &[f32]) {
+        let n = acc.len().min(b.len());
+        let xv = _mm256_set1_ps(x);
+        let mut i = 0;
+        while i + 8 <= n {
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+            // unfused mul+add: bit-identical to the scalar loop's two
+            // roundings (an FMA here would single-round and diverge)
+            let sum = _mm256_add_ps(av, _mm256_mul_ps(xv, bv));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), sum);
+            i += 8;
+        }
+        while i < n {
+            acc[i] += x * b[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified SSE4.1 support at runtime.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn axpy_f32_sse41(acc: &mut [f32], x: f32, b: &[f32]) {
+        let n = acc.len().min(b.len());
+        let xv = _mm_set1_ps(x);
+        let mut i = 0;
+        while i + 4 <= n {
+            let bv = _mm_loadu_ps(b.as_ptr().add(i));
+            let av = _mm_loadu_ps(acc.as_ptr().add(i));
+            let sum = _mm_add_ps(av, _mm_mul_ps(xv, bv));
+            _mm_storeu_ps(acc.as_mut_ptr().add(i), sum);
+            i += 4;
+        }
+        while i < n {
+            acc[i] += x * b[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_i8_i32_avx2(acc: &mut [i32], x: i32, b: &[i8]) {
+        let n = acc.len().min(b.len());
+        let xv = _mm256_set1_epi32(x);
+        let mut i = 0;
+        while i + 8 <= n {
+            let bv = _mm_loadl_epi64(b.as_ptr().add(i) as *const __m128i);
+            let bw = _mm256_cvtepi8_epi32(bv);
+            let prod = _mm256_mullo_epi32(bw, xv);
+            let av =
+                _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(i) as *mut __m256i,
+                                _mm256_add_epi32(av, prod));
+            i += 8;
+        }
+        while i < n {
+            acc[i] += x * b[i] as i32;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified SSE4.1 support at runtime.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn axpy_i8_i32_sse41(acc: &mut [i32], x: i32, b: &[i8]) {
+        let n = acc.len().min(b.len());
+        let xv = _mm_set1_epi32(x);
+        let mut i = 0;
+        while i + 4 <= n {
+            let raw =
+                (b.as_ptr().add(i) as *const i32).read_unaligned();
+            let bw = _mm_cvtepi8_epi32(_mm_cvtsi32_si128(raw));
+            let prod = _mm_mullo_epi32(bw, xv);
+            let av =
+                _mm_loadu_si128(acc.as_ptr().add(i) as *const __m128i);
+            _mm_storeu_si128(acc.as_mut_ptr().add(i) as *mut __m128i,
+                             _mm_add_epi32(av, prod));
+            i += 4;
+        }
+        while i < n {
+            acc[i] += x * b[i] as i32;
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// aarch64: NEON
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// NEON is mandatory on aarch64; unsafe only for the intrinsics.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f32_neon(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            let av = vld1q_f32(a.as_ptr().add(i));
+            let bv = vld1q_f32(b.as_ptr().add(i));
+            acc = vaddq_f32(acc, vmulq_f32(av, bv));
+            i += 4;
+        }
+        let mut lanes = [0.0f32; 4];
+        vst1q_f32(lanes.as_mut_ptr(), acc);
+        let mut sum = 0.0f32;
+        for l in lanes {
+            sum += l;
+        }
+        while i < n {
+            sum += a[i] * b[i];
+            i += 1;
+        }
+        sum
+    }
+
+    /// Widening multiply (`vmull_s8`) + pairwise accumulate
+    /// (`vpadalq_s16`) — the portable-NEON form of the `sdot` idiom.
+    ///
+    /// # Safety
+    /// NEON is mandatory on aarch64; unsafe only for the intrinsics.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_i8_neon(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len().min(b.len());
+        let mut acc = vdupq_n_s32(0);
+        let mut i = 0;
+        while i + 16 <= n {
+            let av = vld1q_s8(a.as_ptr().add(i));
+            let bv = vld1q_s8(b.as_ptr().add(i));
+            let lo = vmull_s8(vget_low_s8(av), vget_low_s8(bv));
+            let hi = vmull_s8(vget_high_s8(av), vget_high_s8(bv));
+            acc = vpadalq_s16(acc, lo);
+            acc = vpadalq_s16(acc, hi);
+            i += 16;
+        }
+        let mut sum = vaddvq_s32(acc);
+        while i < n {
+            sum += a[i] as i32 * b[i] as i32;
+            i += 1;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// NEON is mandatory on aarch64; unsafe only for the intrinsics.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_f32_neon(acc: &mut [f32], x: f32, b: &[f32]) {
+        let n = acc.len().min(b.len());
+        let xv = vdupq_n_f32(x);
+        let mut i = 0;
+        while i + 4 <= n {
+            let bv = vld1q_f32(b.as_ptr().add(i));
+            let av = vld1q_f32(acc.as_ptr().add(i));
+            // unfused mul+add (no vfmaq): scalar-identical rounding
+            let sum = vaddq_f32(av, vmulq_f32(xv, bv));
+            vst1q_f32(acc.as_mut_ptr().add(i), sum);
+            i += 4;
+        }
+        while i < n {
+            acc[i] += x * b[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// NEON is mandatory on aarch64; unsafe only for the intrinsics.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_i8_i32_neon(acc: &mut [i32], x: i32, b: &[i8]) {
+        let n = acc.len().min(b.len());
+        let xv = vdupq_n_s32(x);
+        let mut i = 0;
+        while i + 8 <= n {
+            let bv = vld1_s8(b.as_ptr().add(i));
+            let bw = vmovl_s8(bv);
+            let w0 = vmovl_s16(vget_low_s16(bw));
+            let w1 = vmovl_s16(vget_high_s16(bw));
+            let a0 = vld1q_s32(acc.as_ptr().add(i));
+            let a1 = vld1q_s32(acc.as_ptr().add(i + 4));
+            vst1q_s32(acc.as_mut_ptr().add(i),
+                      vaddq_s32(a0, vmulq_s32(w0, xv)));
+            vst1q_s32(acc.as_mut_ptr().add(i + 4),
+                      vaddq_s32(a1, vmulq_s32(w1, xv)));
+            i += 8;
+        }
+        while i < n {
+            acc[i] += x * b[i] as i32;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn detection_returns_an_available_isa() {
+        let isa = detect();
+        assert!(isa.available(), "{isa} detected but not available");
+        assert!(KernelIsa::Scalar.available());
+        // the resolved process ISA is one the host can run
+        assert!(active().available());
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_junk() {
+        for isa in [KernelIsa::Scalar, KernelIsa::Sse41, KernelIsa::Avx2,
+                    KernelIsa::Neon] {
+            assert_eq!(KernelIsa::parse(isa.name()).unwrap(), Some(isa));
+        }
+        assert_eq!(KernelIsa::parse("auto").unwrap(), None);
+        assert!(KernelIsa::parse("avx512").is_err());
+        assert!(KernelIsa::parse("").is_err());
+    }
+
+    #[test]
+    fn with_forced_isa_scopes_and_restores() {
+        let before = current();
+        let inside = with_forced_isa(KernelIsa::Scalar, current);
+        assert_eq!(inside, KernelIsa::Scalar);
+        assert_eq!(current(), before, "override leaked past its scope");
+        // nested overrides unwind in order
+        with_forced_isa(KernelIsa::Scalar, || {
+            let seen = with_forced_isa(detect(), current);
+            assert_eq!(seen, detect());
+            assert_eq!(current(), KernelIsa::Scalar);
+        });
+    }
+
+    #[test]
+    fn integer_primitives_bit_identical_to_scalar_all_remainders() {
+        // k sweeps every remainder class of the 16/8/4-wide chunks,
+        // plus the shapes the attention path actually runs (d = 32/64,
+        // b_k = 16) and straddles (127/128)
+        let mut rng = Pcg32::seeded(0xD07);
+        for k in (1..=64).chain([127usize, 128]) {
+            let a: Vec<i8> =
+                (0..k).map(|_| (rng.below(255) as i32 - 127) as i8)
+                    .collect();
+            let b: Vec<i8> =
+                (0..k).map(|_| (rng.below(255) as i32 - 127) as i8)
+                    .collect();
+            let want = dot_i8_scalar(&a, &b);
+            assert_eq!(dot_i8(&a, &b), want, "dot_i8 k={k}");
+            let mut acc = vec![0i32; k];
+            let mut acc_ref = vec![0i32; k];
+            let x = rng.below(255) as i32 - 127;
+            axpy_i8_i32(&mut acc, x, &a);
+            axpy_i8_i32_scalar(&mut acc_ref, x, &a);
+            assert_eq!(acc, acc_ref, "axpy_i8_i32 k={k}");
+        }
+    }
+
+    #[test]
+    fn axpy_f32_bit_identical_to_scalar() {
+        let mut rng = Pcg32::seeded(0xF32);
+        for k in (1..=32).chain([127usize, 128, 513]) {
+            let b = rng.normal_vec(k);
+            let x = rng.normal();
+            let mut acc = rng.normal_vec(k);
+            let mut acc_ref = acc.clone();
+            axpy_f32(&mut acc, x, &b);
+            axpy_f32_scalar(&mut acc_ref, x, &b);
+            assert_eq!(acc, acc_ref, "axpy_f32 k={k}");
+        }
+    }
+
+    #[test]
+    fn dot_f32_parity_bounded_and_tiny_k_exact() {
+        let mut rng = Pcg32::seeded(0xD0F);
+        for k in [1usize, 2, 3, 8, 9, 32, 127, 128, 513] {
+            let a = rng.normal_vec(k);
+            let b = rng.normal_vec(k);
+            let got = dot_f32(&a, &b) as f64;
+            let want = dot_f32_scalar(&a, &b) as f64;
+            let denom = a.iter().zip(&b)
+                .map(|(x, y)| (x * y).abs() as f64).sum::<f64>()
+                .max(1e-9);
+            assert!((got - want).abs() / denom < 1e-6,
+                    "dot_f32 k={k}: {got} vs {want}");
+        }
+        // below one SIMD chunk the dispatched dot IS the scalar dot
+        let a = rng.normal_vec(3);
+        let b = rng.normal_vec(3);
+        assert_eq!(dot_f32(&a, &b).to_bits(),
+                   dot_f32_scalar(&a, &b).to_bits());
+    }
+
+    #[test]
+    fn forced_scalar_dispatch_equals_scalar_reference() {
+        let mut rng = Pcg32::seeded(0x5CA);
+        let a = rng.normal_vec(130);
+        let b = rng.normal_vec(130);
+        let forced = with_forced_isa(KernelIsa::Scalar,
+                                     || dot_f32(&a, &b));
+        assert_eq!(forced.to_bits(), dot_f32_scalar(&a, &b).to_bits());
+    }
+}

@@ -111,7 +111,10 @@ static SHARED_POOL: Lazy<Mutex<ThreadPool>> =
     Lazy::new(|| Mutex::new(ThreadPool::new(shared_pool_width())));
 
 /// Worker count of [`shared_map`]'s pool (also a sizing hint for
-/// callers deciding whether fanning out is worth it).
+/// callers deciding whether fanning out is worth it — e.g. the native
+/// model fans query-block chunks WITHIN each head when there are
+/// fewer heads than workers, instead of one job per head; see
+/// `runtime::native::model::denoise_forward`).
 pub fn shared_pool_width() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())

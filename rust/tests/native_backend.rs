@@ -423,6 +423,70 @@ fn denoise_forward_identical_across_int8_and_sim_modes() {
                 gates are non-zero");
 }
 
+/// SIMD dispatch e2e: forced-scalar kernels pass the SAME conformance
+/// suite as auto-ISA, and the whole DiT forward agrees across the two
+/// within the f32 parity bound.  The bound is rel_err, not `==`: the
+/// horizontal f32 reductions (`dot`, used by the linear branch's
+/// normalizer) reassociate under SIMD, while every integer kernel and
+/// every vertical f32 kernel is bit-identical by construction (pinned
+/// at unit level in `linalg` and `simd`).
+#[test]
+fn forced_scalar_matches_auto_isa_end_to_end() {
+    use sla2::runtime::native::model::{denoise_forward, NativeParams};
+    use sla2::runtime::native::simd::{self, KernelIsa};
+    use sla2::runtime::native::{builtin_config, AttnMode};
+    use std::sync::Arc;
+
+    // the shared conformance harness under forced-scalar dispatch:
+    // the portable reference kernels meet the same acceptance bars
+    simd::with_forced_isa(KernelIsa::Scalar, || {
+        for (quant, tol) in [(QuantMode::Off, 1e-3),
+                             (QuantMode::Int8, 1e-1)] {
+            conformance::check_conformance(
+                "sla2-forced-scalar", 0.05, 0.90, tol,
+                |q, k, v, s: &HeadShape| {
+                    let proj = eye(s.d);
+                    let alpha = vec![12.0f32; s.n / s.b_q];
+                    let p = Sla2Params { proj_q: &proj, proj_k: &proj,
+                                         alpha_logit: &alpha };
+                    attention::sla2_attention(q, k, v, &p, 0.05, s.n,
+                                              s.d, s.b_q, s.b_k, quant)
+                });
+        }
+    });
+
+    // whole-forward auto-vs-scalar parity on dit-tiny with perturbed
+    // gates (the seeded AdaLN-zero init would make this vacuous —
+    // see denoise_forward_identical_across_int8_and_sim_modes).
+    // parallel=false keeps every kernel on this thread, where the
+    // forced-ISA override applies.
+    let cfg = builtin_config("dit-tiny").unwrap();
+    let mut params = NativeParams::init_seeded(&cfg, 42);
+    let mut rng = Pcg32::seeded(33);
+    for blk in &mut params.blocks {
+        for v in blk.ada_w.iter_mut() {
+            *v = rng.normal() * 0.05;
+        }
+    }
+    for v in params.final_w.iter_mut() {
+        *v = rng.normal() * 0.05;
+    }
+    let params = Arc::new(params);
+    let x = rng.normal_vec(cfg.video_numel());
+    for quant in [QuantMode::Int8, QuantMode::Off] {
+        let run = || denoise_forward(
+            &cfg, &params, &x, 0.5, 2,
+            AttnMode::Sla2 { k_pct: 0.10, quant }, false).unwrap();
+        let auto = run();
+        let scalar = simd::with_forced_isa(KernelIsa::Scalar, run);
+        let err = rel_err(&scalar, &auto);
+        assert!(err < 1e-6,
+                "quant={quant:?}: forced-scalar vs auto-ISA ({}) \
+                 whole-forward rel_err {err} (bound 1e-6)",
+                simd::active());
+    }
+}
+
 /// Serve-level threading: quant_mode reaches the engine's backend
 /// (visible in the platform string and the int8_heads counter), a
 /// quantized engine serves end-to-end, and an unknown mode is
@@ -587,7 +651,14 @@ fn native_e2e_pool_scheduler_streaming_and_tcp() {
     assert_eq!(snap.get("compiles").unwrap().as_usize(), Some(0));
     assert_eq!(snap.get("quant_mode").unwrap().as_str(), Some("int8"),
                "default native serving must report real-int8 mode");
+    let isa = sla2::runtime::native::simd::active().name();
+    assert_eq!(snap.get("kernel_isa").unwrap().as_str(), Some(isa),
+               "the resolved kernel ISA must round-trip the wire \
+                metrics verb");
     let nk = snap.get("native_kernels").expect("native kernel section");
+    assert_eq!(nk.get("isa").unwrap().as_str(), Some(isa));
+    assert!(nk.get("intra_head_splits").unwrap().as_usize().is_some(),
+            "the intra-head split counter must be surfaced");
     assert!(nk.get("denoise_forwards").unwrap().as_usize().unwrap() > 0);
     assert!(nk.get("int8_heads").unwrap().as_usize().unwrap() > 0,
             "sla2 requests at quant_mode=int8 must hit the integer \
