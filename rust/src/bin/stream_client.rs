@@ -1,5 +1,6 @@
-//! `sla2-stream-client` — reference client for the JSON-over-TCP
-//! serving protocol (`sla2 serve-net`).
+//! `sla2-stream-client` — reference client for the SLA2 wire
+//! protocol (`sla2 serve-net`), speaking either the debug-readable
+//! JSON v0 or the binary v1 codec (`--wire v0|v1`, default v1).
 //!
 //! Submits one streaming generation, prints every chunk as it
 //! arrives (with its frame range and time-since-submit), reassembles
@@ -12,11 +13,17 @@
 //! cargo run --release --bin sla2-stream-client -- \
 //!     --addr 127.0.0.1:7341 --class 3 --seed 42 --steps 4 --tier s90
 //! ```
+//!
+//! Transport flags: `--wire v0|v1` selects the codec, `--auth-token
+//! TOK` opens the connection with a `hello` frame carrying TOK (for
+//! servers started with `--auth-token`), `--compress` asks the
+//! server to zrle-compress v1 tensor payloads.
 
 use std::time::Instant;
 
 use anyhow::Result;
-use sla2::coordinator::NetClient;
+use sla2::coordinator::net::ClientOpts;
+use sla2::coordinator::{NetClient, WireFormat};
 use sla2::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -26,9 +33,17 @@ fn main() -> Result<()> {
     let seed = args.u64("seed", 42);
     let steps = args.usize("steps", 4);
     let tier = args.str("tier", "s90");
+    let wire = WireFormat::parse(&args.str("wire", "v1"))?;
+    let token = args.str("auth-token", "");
+    let compress = args.bool("compress", false);
 
-    println!("connecting to {addr} ...");
-    let mut client = NetClient::connect(&addr)?;
+    println!("connecting to {addr} ({}) ...", wire.as_str());
+    let opts = ClientOpts {
+        wire,
+        token: if token.is_empty() { None } else { Some(token) },
+        compress,
+    };
+    let mut client = NetClient::connect_with(&addr, opts)?;
 
     // --- streaming submit -------------------------------------------
     let t0 = Instant::now();

@@ -188,6 +188,18 @@ pub struct ServeConfig {
     /// for this long is declared a slow client — its streams are
     /// cancelled (freeing shard slots) and the connection is dropped
     pub write_stall_ms: u64,
+    /// TCP frontend: reactor I/O worker threads multiplexing all
+    /// connections (floored at 1).  Thread count is O(this), never
+    /// O(connections).
+    pub net_workers: usize,
+    /// TCP frontend: access token every connection must present in a
+    /// `hello` frame before any other verb; empty = auth off
+    pub auth_token: String,
+    /// TCP frontend: per-connection submit budget in submits/second
+    /// (token bucket, burst `max(1, rate)`); over-budget submits are
+    /// rejected with typed `rate_limited` + `retry_after_ms`.
+    /// 0 = unlimited
+    pub rate_limit: f64,
     /// deterministic fault-injection plan (chaos testing), e.g.
     /// `"panic:shard=1:nth=3,slow:ms=200:rate=0.1,drop-conn:rate=0.05"`;
     /// empty = no faults (production default)
@@ -228,6 +240,9 @@ impl Default for ServeConfig {
             drain_timeout_ms: 5_000,
             net_send_queue: 64,
             write_stall_ms: 2_000,
+            net_workers: 4,
+            auth_token: String::new(),
+            rate_limit: 0.0,
             fault_plan: String::new(),
             fault_seed: 0,
         }
@@ -279,6 +294,9 @@ impl ServeConfig {
             net_send_queue: args.usize("net-send-queue",
                                        d.net_send_queue).max(1),
             write_stall_ms: args.u64("write-stall-ms", d.write_stall_ms),
+            net_workers: args.usize("net-workers", d.net_workers).max(1),
+            auth_token: args.str("auth-token", &d.auth_token),
+            rate_limit: args.f64("rate-limit", d.rate_limit),
             fault_plan: args.str("fault-plan", &d.fault_plan),
             fault_seed: args.u64("fault-seed", d.fault_seed),
         }
@@ -339,6 +357,9 @@ impl ServeConfig {
             net_send_queue: u("net_send_queue", d.net_send_queue).max(1),
             write_stall_ms: u("write_stall_ms",
                               d.write_stall_ms as usize) as u64,
+            net_workers: u("net_workers", d.net_workers).max(1),
+            auth_token: s("auth_token", &d.auth_token),
+            rate_limit: f("rate_limit", d.rate_limit),
             fault_plan: s("fault_plan", &d.fault_plan),
             fault_seed: u("fault_seed", d.fault_seed as usize) as u64,
         }
@@ -582,6 +603,28 @@ mod tests {
         assert_eq!(s.drain_timeout_ms, 1000);
         assert_eq!(s.net_send_queue, 16);
         assert_eq!(s.write_stall_ms, 80);
+    }
+
+    #[test]
+    fn wire_knobs_parse_with_defaults() {
+        let d = ServeConfig::default();
+        assert_eq!(d.net_workers, 4);
+        assert_eq!(d.auth_token, "", "auth is opt-in");
+        assert_eq!(d.rate_limit, 0.0, "rate limiting is opt-in");
+        let a = Args::parse_from(
+            ["--net-workers", "0", "--auth-token", "hunter2",
+             "--rate-limit", "2.5"].map(String::from));
+        let s = ServeConfig::from_args(&a);
+        assert_eq!(s.net_workers, 1, "workers must floor at 1");
+        assert_eq!(s.auth_token, "hunter2");
+        assert_eq!(s.rate_limit, 2.5);
+        let j = Json::parse(
+            r#"{"net_workers":8,"auth_token":"tok","rate_limit":10}"#)
+            .unwrap();
+        let s = ServeConfig::from_json(&j);
+        assert_eq!(s.net_workers, 8);
+        assert_eq!(s.auth_token, "tok");
+        assert_eq!(s.rate_limit, 10.0);
     }
 
     #[test]

@@ -57,6 +57,20 @@ pub enum ServeError {
     /// the input was never the problem.
     #[error("shard stalled: {reason}")]
     ShardStalled { reason: String },
+
+    /// The connection has not presented the server's access token, or
+    /// presented a wrong one (`--auth-token`).  Not retryable on this
+    /// connection: the server closes it — reconnect and open with a
+    /// correct `hello`.
+    #[error("unauthorized: {0}")]
+    Unauthorized(String),
+
+    /// The connection exceeded its submit budget (`--rate-limit`).
+    /// Retryable: the token bucket refills — back off at least
+    /// `retry_after_ms`.  Only the submit is shed; the connection and
+    /// its in-flight streams are untouched.
+    #[error("rate limited — retry in {retry_after_ms} ms")]
+    RateLimited { retry_after_ms: u64 },
 }
 
 impl ServeError {
@@ -87,6 +101,8 @@ impl ServeError {
             ServeError::BadRequest(_) => "bad_request",
             ServeError::ShuttingDown => "shutting_down",
             ServeError::ShardStalled { .. } => "shard_stalled",
+            ServeError::Unauthorized(_) => "unauthorized",
+            ServeError::RateLimited { .. } => "rate_limited",
         }
     }
 
@@ -100,13 +116,16 @@ impl ServeError {
             ServeError::BadRequest(_) => false,
             ServeError::ShuttingDown => false,
             ServeError::ShardStalled { .. } => true,
+            ServeError::Unauthorized(_) => false,
+            ServeError::RateLimited { .. } => true,
         }
     }
 
     /// Suggested client backoff, when the server has one.
     pub fn retry_after_ms(&self) -> Option<u64> {
         match self {
-            ServeError::Overloaded { retry_after_ms } =>
+            ServeError::Overloaded { retry_after_ms }
+            | ServeError::RateLimited { retry_after_ms } =>
                 Some(*retry_after_ms),
             _ => None,
         }
@@ -127,6 +146,9 @@ impl ServeError {
             "shard_stalled" => ServeError::ShardStalled {
                 reason: message.to_string(),
             },
+            "unauthorized" =>
+                ServeError::Unauthorized(message.to_string()),
+            "rate_limited" => ServeError::RateLimited { retry_after_ms },
             _ => ServeError::ShardFailed {
                 retryable,
                 reason: message.to_string(),
@@ -150,11 +172,14 @@ mod tests {
             ServeError::BadRequest("nope".into()),
             ServeError::ShuttingDown,
             ServeError::shard_stalled("no beat for 600 ms"),
+            ServeError::Unauthorized("bad or missing token".into()),
+            ServeError::RateLimited { retry_after_ms: 40 },
         ];
         let codes: Vec<&str> = all.iter().map(|e| e.code()).collect();
         assert_eq!(codes, ["overloaded", "deadline_exceeded",
                            "shard_failed", "cancelled", "bad_request",
-                           "shutting_down", "shard_stalled"]);
+                           "shutting_down", "shard_stalled",
+                           "unauthorized", "rate_limited"]);
         let mut dedup = codes.clone();
         dedup.sort();
         dedup.dedup();
@@ -172,6 +197,13 @@ mod tests {
         assert!(!ServeError::ShuttingDown.retryable());
         assert!(ServeError::shard_stalled("stale beat").retryable(),
                 "a stall is the shard's fault, never the request's");
+        assert!(!ServeError::Unauthorized("bad token".into()).retryable(),
+                "retrying with the same missing token cannot help");
+        assert!(ServeError::RateLimited { retry_after_ms: 1 }.retryable(),
+                "the token bucket refills");
+        assert_eq!(ServeError::RateLimited { retry_after_ms: 35 }
+                       .retry_after_ms(),
+                   Some(35));
     }
 
     #[test]
@@ -186,6 +218,8 @@ mod tests {
             ServeError::BadRequest("bad request: oversized frame".into()),
             ServeError::ShuttingDown,
             ServeError::shard_stalled("no beat for 600 ms"),
+            ServeError::Unauthorized("unauthorized: bad token".into()),
+            ServeError::RateLimited { retry_after_ms: 40 },
         ];
         for e in cases {
             let back = ServeError::from_wire(

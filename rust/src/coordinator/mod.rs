@@ -6,7 +6,8 @@
 //! engine pool:
 //!
 //! ```text
-//!  remote clients ──frames──▶ net::NetFrontend (JSON-over-TCP)
+//!  remote clients ──frames──▶ net::NetFrontend (v0 JSON / v1 binary
+//!                                  │ over TCP; wire::FrameDecoder)
 //!                                  │ submit / cancel / metrics verbs
 //!                                  ▼
 //!  clients ──submit() / submit_streaming()──▶ server::Gateway
@@ -91,13 +92,19 @@
 //! invariants).  Dropping a stream cancels its request: the shard
 //! stops emitting, all-cancelled batches skip compute entirely, and
 //! the abandoned slot is freed.  The [`net`] module exposes submit /
-//! streaming chunks / cancel / metrics over length-prefixed
-//! JSON-over-TCP (`ServeConfig::listen_addr`).
+//! streaming chunks / cancel / metrics over TCP
+//! (`ServeConfig::listen_addr`) through a readiness-driven reactor
+//! (`ServeConfig::net_workers` I/O threads, not thread-per-conn),
+//! speaking either the debug-readable length-prefixed JSON v0 or the
+//! binary v1 codec ([`wire`]), negotiated per connection by the first
+//! byte — with optional token auth and per-connection submit rate
+//! limiting.
 //!
 //! **Failure model** — every failure a caller can observe is a typed
 //! [`error::ServeError`] (`overloaded`, `deadline_exceeded`,
 //! `shard_failed`, `shard_stalled`, `cancelled`, `bad_request`,
-//! `shutting_down`), and every accepted request resolves to exactly
+//! `shutting_down`, `unauthorized`, `rate_limited`), and every
+//! accepted request resolves to exactly
 //! one of {clip, typed error}.  The gateway sheds load at configurable
 //! queue-depth / estimated-work watermarks (or reroutes
 //! `allow_degrade` requests to a cheaper sparsity tier instead);
@@ -151,15 +158,17 @@ pub mod queue;
 pub mod request;
 pub mod server;
 pub mod stream;
+pub mod wire;
 
 pub use batcher::{plan_batches, plan_batches_greedy, plan_support};
 pub use engine::Engine;
 pub use error::ServeError;
 pub use loadgen::{run_trace, TraceConfig, TraceReport};
 pub use metrics::ServerMetrics;
-pub use net::{NetClient, NetFrontend};
+pub use net::{ClientOpts, NetClient, NetFrontend};
 pub use pool::{BatchProcessor, DispatchStats, EnginePool, ShardStats};
 pub use queue::{ClassKey, RequestQueue, SchedPolicy};
 pub use request::{GenRequest, GenResponse, ReplySink, RequestMetrics};
 pub use server::{Gateway, Server, SubmitOpts};
 pub use stream::{ClipChunk, ClipStream, StreamCancel};
+pub use wire::{FrameDecoder, WireFormat, WireFrame};

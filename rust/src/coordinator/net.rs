@@ -1,23 +1,38 @@
-//! TCP network frontend: length-prefixed JSON framing over the
-//! [`Gateway`], plus the matching [`NetClient`].
+//! TCP network frontend: the readiness-driven reactor serving the
+//! [`super::wire`] protocol over the [`Gateway`], plus the matching
+//! [`NetClient`].
 //!
-//! # Wire protocol (v1)
+//! # Wire formats
 //!
-//! Every message is a **frame**: a 4-byte big-endian unsigned length
-//! `n` (capped at [`MAX_FRAME_LEN`]) followed by exactly `n` bytes of
-//! UTF-8 JSON (the [`crate::util::json`] subset).  Frames flow both
-//! ways on one connection; the server multiplexes responses for every
-//! in-flight request onto the socket, tagged by request `id`.
-//! Numbers travel as JSON doubles, so integer fields (ids, seeds) are
-//! exact up to 2^53.
+//! Two codecs share one port, negotiated per connection by the FIRST
+//! byte the client sends (see [`super::wire`] for the byte-level
+//! spec):
 //!
-//! Client -> server verbs (the `"op"` field):
+//! * **v0** — length-prefixed JSON, debug-readable: a 4-byte
+//!   big-endian length followed by a UTF-8 JSON body.  Tensors ride
+//!   inline as `{"shape": [..], "data": [f32 as double, ..]}`.
+//! * **v1** — binary frames: a fixed 20-byte header (magic `SLA2`,
+//!   version, verb, flags, request id, payload length) followed by a
+//!   JSON meta section and, on `chunk`/`clip` frames, a raw
+//!   little-endian tensor section with optional zero-run-length
+//!   compression.  ~5x smaller than v0 on f32 clip payloads.
+//!
+//! The server answers in whichever format the connection latched;
+//! frames never mix formats mid-connection.
+//!
+//! # Verbs
+//!
+//! Client -> server (the `"op"` field):
 //!
 //! | op        | fields                                             |
 //! |-----------|----------------------------------------------------|
+//! | `hello`   | optional handshake: `token` (required when the     |
+//! |           | server was started with `--auth-token`), `wire`,   |
+//! |           | `compress` (opt into v1 tensor compression);       |
+//! |           | answered with `hello_ok`                           |
 //! | `submit`  | `class`, `seed`, `steps` (1..=[`MAX_NET_STEPS`]),  |
 //! |           | `tier`, `stream` (bool), `deadline_ms` (0 = server |
-//! |           | default), `allow_degrade` (bool)                   |
+//! |           | default), `allow_degrade` (bool), `variant`        |
 //! | `cancel`  | `id` — cancel an in-flight streaming request       |
 //! | `metrics` | none — request a metrics snapshot                  |
 //! | `health`  | none — liveness/readiness probe (cheap; safe for   |
@@ -25,95 +40,85 @@
 //! | `drain`   | none — begin graceful drain: admission flips to    |
 //! |           | typed `shutting_down`, in-flight work completes    |
 //!
-//! Server -> client frames (the `"type"` field):
+//! Server -> client frames (the `"type"` field): `hello_ok`,
+//! `accepted` / `rejected`, `chunk`, `done` (`{id, complete}`),
+//! `clip`, `metrics`, `cancel_ok`, `health`, `drain_ok`, `goaway`,
+//! and `error` — exactly the PR-3/6 set plus the handshake ack.
+//! Framing-level errors (malformed bytes, oversized frame, bad magic)
+//! send a `bad_request` error frame and then close the connection,
+//! since the byte stream can no longer be resynchronized.
 //!
-//! * `accepted` / `rejected` — submit ack: `{id}` or a typed failure
-//!   (see the error fields below; rejection = shed, backpressure or
-//!   shutdown).
-//! * `chunk` — one streamed frame range: `id`, `seq`, `frame_start`,
-//!   `frame_end`, `total_frames`, `last`, `frames` (tensor), and the
-//!   request `metrics`; chunks for an id arrive in `seq` order.
-//! * `done` — stream terminal: `{id, complete}`; `complete` is false
-//!   when the stream ended without its last chunk (cancel/failure).
-//! * `clip` — non-streaming result: `{id, clip, metrics}`.
-//! * `metrics` — `{snapshot}`.
-//! * `cancel_ok` — `{id, found}`.
-//! * `health` — `{health: {live, ready, draining}}` (the snapshot's
-//!   health section).
-//! * `drain_ok` — `{draining: true}`, ack for the `drain` verb.
-//! * `goaway` — unsolicited drain notice: the server has begun
-//!   draining; finish consuming in-flight streams (they complete) and
-//!   do not submit again on this connection.
-//! * `error` — a typed failure and, for request-scoped failures,
-//!   `{id}`.  Framing-level errors (malformed JSON, oversized frame)
-//!   send a `bad_request` error frame and then close the connection,
-//!   since the byte stream can no longer be trusted.
+//! Typed failures (`rejected` and `error` frames) carry `error`,
+//! `code` ([`ServeError`] codes, now including `unauthorized` and
+//! `rate_limited`), `retryable`, and `retry_after_ms` (present on
+//! `overloaded` and `rate_limited`).
 //!
-//! Typed failures (`rejected` and `error` frames) carry:
+//! # Auth and rate limiting
 //!
-//! * `error` — human-readable message,
-//! * `code` — machine-readable [`ServeError`] code: `overloaded` |
-//!   `deadline_exceeded` | `shard_failed` | `shard_stalled` |
-//!   `cancelled` | `bad_request` | `shutting_down`,
-//! * `retryable` — whether retrying the same request may succeed,
-//! * `retry_after_ms` — backoff hint, present on `overloaded` only.
+//! With `--auth-token` set, every connection must open with a `hello`
+//! frame carrying the exact token; anything else gets a typed
+//! `unauthorized` error and the connection closes.  The comparison is
+//! constant-time.  With `--rate-limit R` set, each connection gets a
+//! token bucket (R submits/second, burst `max(1, R)`); submits over
+//! the budget are rejected with typed `rate_limited` +
+//! `retry_after_ms` — the connection stays up, only submits shed.
+//! TLS remains stubbed behind the `tls` cargo feature (no vendorable
+//! implementation fits the offline registry).
 //!
-//! Tensors are `{"shape": [..], "data": [f32 as double, ..]}` —
-//! lossless for f32 (every f32 is exactly representable as a double
-//! and the writer emits shortest-roundtrip decimals).
+//! # Threads: a reactor, not thread-per-connection
 //!
-//! Not covered (recorded in ROADMAP.md): TLS, authentication,
-//! compression, binary tensor payloads.
+//! One acceptor thread plus `ServeConfig::net_workers` I/O workers —
+//! O(workers), never O(connections).  The acceptor hands each socket
+//! to a worker (round-robin by accept ordinal); the worker multiplexes
+//! all of its connections over one readiness loop (epoll on Linux,
+//! level-triggered; a bounded sweep elsewhere), with nonblocking
+//! sockets throughout.  A per-worker loopback doorbell wakes the loop
+//! instantly for handoffs, drain broadcasts and shutdown, so an idle
+//! worker sleeps in `epoll_wait` — 10k idle streaming connections
+//! cost file descriptors and a few hundred bytes each, not threads.
+//! In-flight work is polled, not pumped: streams via
+//! [`ClipStream::try_recv`], one-shot results via channel `try_recv`,
+//! only while the connection's outbound queue has room.
 //!
-//! # Threads
-//!
-//! One listener thread; per connection, a reader thread (this is the
-//! connection's request loop), one writer thread serializing outbound
-//! frames, and one short-lived pump thread per in-flight request
-//! moving chunks from its [`stream::ClipStream`] to the writer.  A
-//! dropped
-//! connection cancels every stream it still owns, so abandoned
-//! clients release their shard slots (see
+//! A dropped connection cancels every stream it still owns, so
+//! abandoned clients release their shard slots (see
 //! [`crate::coordinator::stream`]).
 //!
 //! # Slow-client protection
 //!
-//! The outbound path is BOUNDED: the writer consumes a
-//! `sync_channel(ServeConfig::net_send_queue)` of frames, and a sender
-//! (the reader answering a verb, or a pump thread moving chunks) waits
-//! at most `ServeConfig::write_stall_ms` for queue space.  A client
-//! that stops reading fills its queue, the next send times out, and
-//! the connection is declared slow: every stream it owns is cancelled
-//! through the normal cancel path (freeing shard slots) and the socket
-//! is severed.  One stuck client can therefore never wedge a pump
-//! thread or hold shard-side work hostage — it costs exactly one
-//! bounded queue of frames, then it is gone.
+//! The outbound path is BOUNDED: each connection buffers at most
+//! `ServeConfig::net_send_queue` frames, and chunk-pulling stops while
+//! the queue is full.  A queue that stays full past
+//! `ServeConfig::write_stall_ms` declares the client slow: every
+//! stream it owns is cancelled through the normal cancel path (freeing
+//! shard slots) and the socket is severed.  One stuck client can never
+//! wedge a worker — it costs exactly one bounded queue of frames,
+//! then it is gone.
 
 use std::collections::{HashMap, VecDeque};
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Shutdown, SocketAddr, TcpListener,
                TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, Receiver, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::error::ServeError;
-use super::pool::lock_recover;
 use super::request::{GenResponse, RequestMetrics};
 use super::server::{Gateway, SubmitOpts};
-use super::stream::{self, ClipChunk, StreamCancel};
+use super::stream::{self, ClipChunk, ClipStream, StreamCancel};
+use super::wire;
+use crate::config::ServeConfig;
 use crate::tensor::Tensor;
 use crate::util::faults::{FaultAction, FaultInjector, FaultPlan};
 use crate::util::json::Json;
 
-/// Hard cap on a single frame (header `n`), both directions.  Far
-/// above any legitimate chunk on the testbed models; anything larger
-/// is treated as a protocol violation and closes the connection.
-pub const MAX_FRAME_LEN: usize = 16 * 1024 * 1024;
+pub use super::wire::{tensor_from_json, tensor_to_json, FrameDecoder,
+                      WireFormat, WireFrame, MAX_FRAME_LEN};
 
 /// Hard cap on a network submit's `steps`.  Frames are size-capped by
 /// [`MAX_FRAME_LEN`], but nothing else bounds per-request COMPUTE, and
@@ -122,9 +127,11 @@ pub const MAX_FRAME_LEN: usize = 16 * 1024 * 1024;
 /// long.  Requests outside `1..=MAX_NET_STEPS` are rejected.
 pub const MAX_NET_STEPS: usize = 1024;
 
-// ---------------- framing ----------------------------------------------
+// ---------------- blocking v0 framing (legacy helpers) ------------------
 
-/// Write one length-prefixed JSON frame.
+/// Write one length-prefixed v0 JSON frame (blocking).  Kept for raw
+/// protocol tests and v0-only tooling; the server and [`NetClient`]
+/// go through [`wire::encode`] / [`FrameDecoder`].
 pub fn write_frame(w: &mut impl Write, j: &Json) -> Result<()> {
     let body = j.to_string();
     anyhow::ensure!(body.len() <= MAX_FRAME_LEN,
@@ -135,10 +142,10 @@ pub fn write_frame(w: &mut impl Write, j: &Json) -> Result<()> {
     Ok(())
 }
 
-/// Read one frame.  `Ok(None)` = the peer closed cleanly between
-/// frames; `Err` = oversized length prefix, truncated frame, or
-/// malformed JSON (the caller should drop the connection — the byte
-/// stream cannot be resynchronized).
+/// Read one v0 frame (blocking).  `Ok(None)` = the peer closed cleanly
+/// between frames; `Err` = oversized length prefix, truncated frame,
+/// or malformed JSON (the caller should drop the connection — the
+/// byte stream cannot be resynchronized).
 pub fn read_frame(r: &mut impl Read, max_len: usize)
                   -> Result<Option<Json>> {
     let mut header = [0u8; 4];
@@ -166,26 +173,6 @@ pub fn read_frame(r: &mut impl Read, max_len: usize)
 
 // ---------------- JSON <-> domain conversions ---------------------------
 
-pub fn tensor_to_json(t: &Tensor) -> Result<Json> {
-    let data: Vec<Json> =
-        t.f32s()?.iter().map(|v| Json::Num(*v as f64)).collect();
-    Ok(Json::obj()
-        .push("shape", t.shape.as_slice())
-        .push("data", data))
-}
-
-pub fn tensor_from_json(j: &Json) -> Result<Tensor> {
-    let shape = j.req("shape")?.as_usize_vec()
-        .context("tensor shape")?;
-    let data: Vec<f32> = j.req("data")?.as_arr()
-        .context("tensor data")?
-        .iter()
-        .map(|v| v.as_f64().map(|f| f as f32))
-        .collect::<Option<_>>()
-        .context("non-numeric tensor data")?;
-    Tensor::from_f32(&shape, data)
-}
-
 fn metrics_to_json(m: &RequestMetrics) -> Json {
     Json::obj()
         .push("queue_ms", m.queue_ms)
@@ -201,6 +188,22 @@ fn metrics_from_json(j: &Json) -> RequestMetrics {
                      steps: u("steps"), batch_size: u("batch_size") }
 }
 
+/// A chunk's meta fields WITHOUT the tensor — the wire codec carries
+/// the tensor out-of-band (v1) or folds it back in under `"frames"`
+/// (v0).
+fn chunk_meta(c: &ClipChunk) -> Json {
+    Json::obj()
+        .push("type", "chunk")
+        .push("id", c.id as usize)
+        .push("seq", c.seq)
+        .push("frame_start", c.frame_start)
+        .push("frame_end", c.frame_end)
+        .push("total_frames", c.total_frames)
+        .push("last", c.last)
+        .push("metrics", metrics_to_json(&c.metrics))
+}
+
+/// The full inline (v0-shaped) chunk JSON, tensor included.
 pub fn chunk_to_json(c: &ClipChunk) -> Result<Json> {
     Ok(Json::obj()
         .push("type", "chunk")
@@ -214,7 +217,7 @@ pub fn chunk_to_json(c: &ClipChunk) -> Result<Json> {
         .push("metrics", metrics_to_json(&c.metrics)))
 }
 
-pub fn chunk_from_json(j: &Json) -> Result<ClipChunk> {
+fn chunk_fields(j: &Json, frames: Tensor) -> Result<ClipChunk> {
     let u = |k: &str| -> Result<usize> {
         j.req(k)?.as_usize().context(format!("chunk field {k}"))
     };
@@ -225,8 +228,43 @@ pub fn chunk_from_json(j: &Json) -> Result<ClipChunk> {
         frame_end: u("frame_end")?,
         total_frames: u("total_frames")?,
         last: j.req("last")?.as_bool().context("chunk field last")?,
-        frames: tensor_from_json(j.req("frames")?)?,
+        frames,
         metrics: j.get("metrics").map(metrics_from_json)
+            .unwrap_or_default(),
+    })
+}
+
+pub fn chunk_from_json(j: &Json) -> Result<ClipChunk> {
+    chunk_fields(j, tensor_from_json(j.req("frames")?)?)
+}
+
+/// Decode a chunk from either path: the out-of-band v1 tensor when
+/// present, the inline `"frames"` tree otherwise.
+pub fn chunk_from_frame(f: &WireFrame) -> Result<ClipChunk> {
+    match &f.tensor {
+        Some(t) => chunk_fields(&f.meta, t.clone()),
+        None => chunk_from_json(&f.meta),
+    }
+}
+
+fn clip_meta(resp: &GenResponse) -> Json {
+    Json::obj()
+        .push("type", "clip")
+        .push("id", resp.id as usize)
+        .push("metrics", metrics_to_json(&resp.metrics))
+}
+
+/// Decode a `clip` frame from either path (see [`chunk_from_frame`]).
+pub fn clip_from_frame(f: &WireFrame) -> Result<GenResponse> {
+    let clip = match &f.tensor {
+        Some(t) => t.clone(),
+        None => tensor_from_json(f.meta.req("clip")?)?,
+    };
+    Ok(GenResponse {
+        id: f.meta.get("id").and_then(|v| v.as_usize())
+            .unwrap_or(0) as u64,
+        clip,
+        metrics: f.meta.get("metrics").map(metrics_from_json)
             .unwrap_or_default(),
     })
 }
@@ -260,77 +298,6 @@ fn internal_error_frame(id: u64, msg: &str) -> Json {
     error_frame(Some(id), &ServeError::shard_fatal(msg.to_string()))
 }
 
-// ---------------- server side -------------------------------------------
-
-/// Per-connection outbound handle: a BOUNDED frame queue shared by the
-/// reader and every pump thread, plus the machinery to declare the
-/// client slow and tear the connection down (see the module docs'
-/// "Slow-client protection").
-#[derive(Clone)]
-struct ConnTx {
-    tx: SyncSender<Json>,
-    /// how long a sender may wait for queue space before the client is
-    /// declared slow
-    stall: Duration,
-    /// streams this connection still owns, by id — the `cancel` verb,
-    /// the disconnect sweep and slow-client teardown all drain it
-    active: Arc<Mutex<HashMap<u64, StreamCancel>>>,
-    /// the raw socket, for severing a slow connection (unblocks the
-    /// reader)
-    sock: Arc<TcpStream>,
-    /// latched once the connection has been declared slow
-    dead: Arc<AtomicBool>,
-}
-
-impl ConnTx {
-    /// Queue `frame` for the writer, waiting up to `stall` for space.
-    /// Returns false when the connection is gone — including when this
-    /// very call declared it slow: a queue that stays full past the
-    /// stall budget triggers [`ConnTx::kill_slow`], so the caller must
-    /// simply stop, never block.
-    fn send(&self, frame: Json) -> bool {
-        if self.dead.load(Ordering::Relaxed) {
-            return false;
-        }
-        let deadline = Instant::now() + self.stall;
-        let mut frame = frame;
-        loop {
-            match self.tx.try_send(frame) {
-                Ok(()) => return true,
-                Err(TrySendError::Disconnected(_)) => return false,
-                Err(TrySendError::Full(f)) => {
-                    if Instant::now() >= deadline {
-                        self.kill_slow();
-                        return false;
-                    }
-                    frame = f;
-                    std::thread::sleep(Duration::from_millis(1));
-                }
-            }
-        }
-    }
-
-    /// Slow-client teardown: cancel every stream the connection owns
-    /// (frees shard slots through the normal cancel path) and sever
-    /// the socket so both the reader and the writer unwind.  Latched:
-    /// concurrent senders hitting the stall race to one teardown.
-    fn kill_slow(&self) {
-        if self.dead.swap(true, Ordering::Relaxed) {
-            return;
-        }
-        let cancels: Vec<StreamCancel> =
-            lock_recover(&self.active).drain().map(|(_, c)| c).collect();
-        crate::warn_!(
-            "slow client: outbound queue stalled over {:?}; cancelling \
-             {} stream(s) and dropping the connection",
-            self.stall, cancels.len());
-        for c in cancels {
-            c.cancel();
-        }
-        let _ = self.sock.shutdown(Shutdown::Both);
-    }
-}
-
 /// The unsolicited drain notice pushed to connections when the server
 /// begins draining.
 fn goaway_frame() -> Json {
@@ -341,397 +308,15 @@ fn goaway_frame() -> Json {
                not submit again on this connection")
 }
 
-/// The listening half: accepts connections and serves the protocol
-/// against a [`Gateway`].  Owned by [`super::server::Server`]; tests
-/// start one over a mock-backed gateway directly.
-pub struct NetFrontend {
-    local_addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
-    /// live connections by accept ordinal, for [`Self::announce_drain`]
-    conns: Arc<Mutex<HashMap<u64, ConnTx>>>,
-    draining: Arc<AtomicBool>,
+fn accepted_frame(id: u64) -> Json {
+    Json::obj().push("type", "accepted").push("id", id as usize)
 }
 
-impl NetFrontend {
-    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
-    /// start the accept loop.
-    pub fn start(gateway: Arc<Gateway>, addr: &str) -> Result<NetFrontend> {
-        NetFrontend::start_with_faults(gateway, addr, FaultPlan::none())
-    }
-
-    /// [`NetFrontend::start`] with a fault plan: each accepted
-    /// connection gets a deterministic net-site [`FaultInjector`]
-    /// keyed by its accept ordinal, so `drop-conn` chaos runs replay
-    /// per (plan, seed).
-    pub fn start_with_faults(gateway: Arc<Gateway>, addr: &str,
-                             plan: FaultPlan) -> Result<NetFrontend> {
-        let listener = TcpListener::bind(addr)
-            .with_context(|| format!("bind {addr}"))?;
-        let local_addr = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let conns: Arc<Mutex<HashMap<u64, ConnTx>>> =
-            Arc::new(Mutex::new(HashMap::new()));
-        let conns2 = Arc::clone(&conns);
-        let draining = Arc::new(AtomicBool::new(false));
-        let draining2 = Arc::clone(&draining);
-        let accept_thread = std::thread::Builder::new()
-            .name("sla2-net-accept".into())
-            .spawn(move || {
-                let mut conn_ordinal: u64 = 0;
-                for conn in listener.incoming() {
-                    if stop2.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    match conn {
-                        Ok(sock) => {
-                            let gw = Arc::clone(&gateway);
-                            let injector = if plan.has_net_faults() {
-                                plan.net_injector(conn_ordinal)
-                            } else {
-                                FaultInjector::inert()
-                            };
-                            let ordinal = conn_ordinal;
-                            conn_ordinal += 1;
-                            let registry = Arc::clone(&conns2);
-                            let draining = Arc::clone(&draining2);
-                            // connection threads are detached: they
-                            // exit when their socket closes or the
-                            // queue shuts down
-                            let _ = std::thread::Builder::new()
-                                .name("sla2-net-conn".into())
-                                .spawn(move || {
-                                    handle_conn(gw, sock, injector,
-                                                registry, ordinal,
-                                                draining)
-                                });
-                        }
-                        Err(e) => {
-                            crate::warn_!("accept failed: {e}");
-                        }
-                    }
-                }
-            })?;
-        Ok(NetFrontend { local_addr, stop,
-                         accept_thread: Some(accept_thread),
-                         conns, draining })
-    }
-
-    /// The bound address (port 0 resolved to the real port).
-    pub fn local_addr(&self) -> SocketAddr {
-        self.local_addr
-    }
-
-    /// Push a `goaway` frame to every live connection and mark the
-    /// frontend draining (connections accepted from now on get the
-    /// goaway as their first frame).  Best-effort and non-blocking: a
-    /// connection whose outbound queue is full (a slow client mid
-    /// teardown) is skipped — its submits get typed `shutting_down`
-    /// rejections anyway.  Admission itself is flipped by the caller
-    /// ([`super::server::Server::drain`] / the `drain` verb).
-    pub fn announce_drain(&self) {
-        self.draining.store(true, Ordering::Relaxed);
-        let conns = lock_recover(&self.conns);
-        crate::info!("net: goaway to {} connection(s)", conns.len());
-        for conn in conns.values() {
-            let _ = conn.tx.try_send(goaway_frame());
-        }
-    }
-
-    /// Stop accepting.  Existing connections wind down on their own
-    /// when their sockets close or the server's queue shuts down.
-    pub fn shutdown(&mut self) {
-        if let Some(h) = self.accept_thread.take() {
-            self.stop.store(true, Ordering::Relaxed);
-            // the accept loop only observes `stop` on its next
-            // connection: poke it awake
-            let mut wake = self.local_addr;
-            if wake.ip().is_unspecified() {
-                wake.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
-            }
-            let _ = TcpStream::connect(wake);
-            let _ = h.join();
-        }
-    }
-}
-
-impl Drop for NetFrontend {
-    fn drop(&mut self) {
-        self.shutdown();
-    }
-}
-
-/// One connection: read request frames, fan responses back through a
-/// single writer thread (one frame at a time, whatever request it
-/// belongs to).  The writer is also the connection's fault-injection
-/// site: each outbound frame is one net-framing event, so a
-/// `drop-conn` clause severs the connection mid-conversation exactly
-/// where a flaky network would, and a `slow-client` clause stalls the
-/// writes so the bounded outbound queue backs up like a stuck reader.
-fn handle_conn(gw: Arc<Gateway>, sock: TcpStream,
-               mut injector: FaultInjector,
-               registry: Arc<Mutex<HashMap<u64, ConnTx>>>, ordinal: u64,
-               draining: Arc<AtomicBool>) {
-    let _ = sock.set_nodelay(true);
-    let (write_sock, raw_sock) = match (sock.try_clone(),
-                                        sock.try_clone()) {
-        (Ok(w), Ok(r)) => (w, r),
-        (Err(e), _) | (_, Err(e)) => {
-            crate::warn_!("connection clone failed: {e}");
-            return;
-        }
-    };
-    let serve = gw.serve_config();
-    let (out_tx, out_rx) =
-        sync_channel::<Json>(serve.net_send_queue.max(1));
-    let writer = std::thread::Builder::new()
-        .name("sla2-net-write".into())
-        .spawn(move || {
-            let mut w = BufWriter::new(write_sock);
-            while let Ok(frame) = out_rx.recv() {
-                match injector.check() {
-                    FaultAction::DropConn => {
-                        // kill BOTH halves so the reader unblocks and
-                        // the cancel-on-disconnect sweep runs
-                        let _ = w.get_ref().shutdown(Shutdown::Both);
-                        break;
-                    }
-                    // slow-client chaos: the WRITE stalls, frames pile
-                    // up in the bounded queue, senders hit the stall
-                    // budget — exactly how a peer that stopped reading
-                    // presents
-                    FaultAction::Slow(d)
-                    | FaultAction::SlowClient(d) => std::thread::sleep(d),
-                    FaultAction::Panic | FaultAction::Hang
-                    | FaultAction::None => {}
-                }
-                if write_frame(&mut w, &frame).is_err()
-                    || w.flush().is_err()
-                {
-                    break; // peer gone; reader will notice too
-                }
-            }
-        });
-    let conn = ConnTx {
-        tx: out_tx,
-        stall: Duration::from_millis(serve.write_stall_ms.max(1)),
-        active: Arc::new(Mutex::new(HashMap::new())),
-        sock: Arc::new(raw_sock),
-        dead: Arc::new(AtomicBool::new(false)),
-    };
-    lock_recover(&registry).insert(ordinal, conn.clone());
-    if draining.load(Ordering::Relaxed) {
-        // the server is already draining: say so up front
-        conn.send(goaway_frame());
-    }
-    let mut reader = BufReader::new(sock);
-    loop {
-        match read_frame(&mut reader, MAX_FRAME_LEN) {
-            Ok(None) => break, // client closed
-            Ok(Some(req)) => {
-                handle_request(&gw, &req, &conn);
-            }
-            Err(e) => {
-                // framing is broken: tell the client WHY with a typed
-                // bad_request frame, then drop the connection (the
-                // writer drains the channel before exiting, so the
-                // frame goes out first)
-                conn.send(error_frame(
-                    None, &ServeError::BadRequest(format!("{e:#}"))));
-                break;
-            }
-        }
-    }
-    // cancel-on-disconnect: whatever this client still had in flight
-    // is dead work now
-    for (_, cancel) in lock_recover(&conn.active).drain() {
-        cancel.cancel();
-    }
-    // deregister BEFORE joining the writer: the registry holds a
-    // ConnTx clone, and the writer only exits once every sender of
-    // the bounded queue is gone
-    lock_recover(&registry).remove(&ordinal);
-    drop(conn);
-    if let Ok(w) = writer {
-        let _ = w.join();
-    }
-}
-
-fn handle_request(gw: &Arc<Gateway>, req: &Json, conn: &ConnTx) {
-    match req.get("op").and_then(|v| v.as_str()) {
-        Some("submit") => handle_submit(gw, req, conn),
-        Some("metrics") => {
-            conn.send(Json::obj()
-                .push("type", "metrics")
-                .push("snapshot", gw.metrics_snapshot()));
-        }
-        Some("health") => {
-            // the snapshot's health section IS the probe payload:
-            // live / ready / draining, derived from the same state
-            // the operator sees in `metrics`
-            let snap = gw.metrics_snapshot();
-            let health = snap.get("health").cloned()
-                .unwrap_or_else(Json::obj);
-            conn.send(Json::obj()
-                .push("type", "health")
-                .push("health", health));
-        }
-        Some("drain") => {
-            gw.begin_drain();
-            conn.send(Json::obj()
-                .push("type", "drain_ok")
-                .push("draining", true));
-        }
-        Some("cancel") => {
-            let id = req.get("id").and_then(|v| v.as_usize())
-                .unwrap_or(0) as u64;
-            let found = match lock_recover(&conn.active).get(&id) {
-                Some(c) => {
-                    c.cancel();
-                    true
-                }
-                None => false,
-            };
-            conn.send(Json::obj()
-                .push("type", "cancel_ok")
-                .push("id", id as usize)
-                .push("found", found));
-        }
-        Some(op) => {
-            conn.send(error_frame(
-                None, &ServeError::BadRequest(format!(
-                    "unknown op {op:?} (valid: submit, cancel, \
-                     metrics, health, drain)"))));
-        }
-        None => {
-            conn.send(error_frame(
-                None,
-                &ServeError::BadRequest("request has no \"op\"".into())));
-        }
-    }
-}
-
-fn handle_submit(gw: &Arc<Gateway>, req: &Json, conn: &ConnTx) {
-    let serve = gw.serve_config();
-    let class = req.get("class").and_then(|v| v.as_i64()).unwrap_or(0)
-        as i32;
-    let seed = req.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0)
-        as u64;
-    let steps = req.get("steps").and_then(|v| v.as_usize())
-        .unwrap_or(serve.sample_steps);
-    let tier = req.get("tier").and_then(|v| v.as_str())
-        .unwrap_or(&serve.tier).to_string();
-    let streaming = req.get("stream").and_then(|v| v.as_bool())
-        .unwrap_or(true);
-    let opts = SubmitOpts {
-        deadline_ms: req.get("deadline_ms").and_then(|v| v.as_f64())
-            .unwrap_or(0.0) as u64,
-        allow_degrade: req.get("allow_degrade").and_then(|v| v.as_bool())
-            .unwrap_or(false),
-        // absent = serve the server's configured default variant; an
-        // unknown name comes back as a typed bad_request reject frame
-        // (gateway admission validates against the backend's set)
-        variant: req.get("variant").and_then(|v| v.as_str())
-            .map(String::from),
-    };
-    if steps == 0 || steps > MAX_NET_STEPS {
-        conn.send(rejected_frame(&ServeError::BadRequest(
-            format!("steps {steps} out of range (1..={MAX_NET_STEPS})"))));
-        return;
-    }
-    if streaming {
-        match gw.submit_streaming_with(class, seed, steps, &tier, opts) {
-            Ok(stream) => {
-                let id = stream.id();
-                lock_recover(&conn.active)
-                    .insert(id, stream.cancel_handle());
-                conn.send(Json::obj()
-                    .push("type", "accepted")
-                    .push("id", id as usize));
-                let out = conn.clone();
-                let _ = std::thread::Builder::new()
-                    .name("sla2-net-pump".into())
-                    .spawn(move || {
-                        pump_stream(id, stream, &out);
-                        lock_recover(&out.active).remove(&id);
-                    });
-            }
-            Err(e) => {
-                conn.send(rejected_frame(&e));
-            }
-        }
-    } else {
-        match gw.submit_tracked_with(class, seed, steps, &tier, opts) {
-            Ok((id, rx)) => {
-                // ack with the real gateway id: clip/error frames are
-                // tagged with it, so pipelined one-shot submits on one
-                // connection stay correlatable even though pump
-                // threads race to the writer in completion order
-                conn.send(Json::obj()
-                    .push("type", "accepted")
-                    .push("id", id as usize));
-                let out = conn.clone();
-                let _ = std::thread::Builder::new()
-                    .name("sla2-net-pump".into())
-                    .spawn(move || {
-                        let frame = match rx.recv() {
-                            Ok(Ok(resp)) => clip_frame(&resp),
-                            Ok(Err(e)) => error_frame(Some(id), &e),
-                            Err(_) => internal_error_frame(
-                                id, "server dropped the request"),
-                        };
-                        out.send(frame);
-                    });
-            }
-            Err(e) => {
-                conn.send(rejected_frame(&e));
-            }
-        }
-    }
-}
-
-fn clip_frame(resp: &GenResponse) -> Json {
-    match tensor_to_json(&resp.clip) {
-        Ok(t) => Json::obj()
-            .push("type", "clip")
-            .push("id", resp.id as usize)
-            .push("clip", t)
-            .push("metrics", metrics_to_json(&resp.metrics)),
-        Err(e) => internal_error_frame(resp.id, &format!("{e:#}")),
-    }
-}
-
-/// Move chunks from a [`ClipStream`] to the connection writer until
-/// the stream ends, then emit the `done` terminal.  A send that fails
-/// means the connection is gone or was just declared slow — either
-/// way the pump stops and dropping the stream cancels the request.
-fn pump_stream(id: u64, stream: stream::ClipStream, out: &ConnTx) {
-    let mut complete = false;
-    while let Some(item) = stream.recv() {
-        match item {
-            Ok(chunk) => {
-                complete = chunk.last;
-                let frame = match chunk_to_json(&chunk) {
-                    Ok(f) => f,
-                    Err(e) => internal_error_frame(id, &format!("{e:#}")),
-                };
-                if !out.send(frame) {
-                    return; // connection gone; drop cancels the stream
-                }
-            }
-            Err(e) => {
-                // typed terminal failure (deadline, shard death, shed
-                // on retry-requeue, ...) — forwarded verbatim
-                out.send(error_frame(Some(id), &e));
-                break;
-            }
-        }
-    }
-    out.send(Json::obj()
+fn done_frame(id: u64, complete: bool) -> Json {
+    Json::obj()
         .push("type", "done")
         .push("id", id as usize)
-        .push("complete", complete));
+        .push("complete", complete)
 }
 
 /// Decode the typed failure carried by a `rejected` / `error` frame
@@ -746,58 +331,1169 @@ pub fn error_from_frame(f: &Json) -> ServeError {
             .unwrap_or(0.0) as u64)
 }
 
+// ---------------- submit parsing ----------------------------------------
+
+/// A submit request's decoded fields — identical whichever wire
+/// format carried the frame (the property tests pin this).
+#[derive(Debug)]
+struct SubmitParams {
+    class: i32,
+    seed: u64,
+    steps: usize,
+    tier: String,
+    streaming: bool,
+    opts: SubmitOpts,
+}
+
+fn parse_submit(req: &Json, serve: &ServeConfig) -> SubmitParams {
+    SubmitParams {
+        class: req.get("class").and_then(|v| v.as_i64()).unwrap_or(0)
+            as i32,
+        seed: req.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0)
+            as u64,
+        steps: req.get("steps").and_then(|v| v.as_usize())
+            .unwrap_or(serve.sample_steps),
+        tier: req.get("tier").and_then(|v| v.as_str())
+            .unwrap_or(&serve.tier).to_string(),
+        streaming: req.get("stream").and_then(|v| v.as_bool())
+            .unwrap_or(true),
+        opts: SubmitOpts {
+            deadline_ms: req.get("deadline_ms").and_then(|v| v.as_f64())
+                .unwrap_or(0.0) as u64,
+            allow_degrade: req.get("allow_degrade")
+                .and_then(|v| v.as_bool()).unwrap_or(false),
+            // absent = serve the server's configured default variant;
+            // an unknown name comes back as a typed bad_request reject
+            // frame (gateway admission validates against the backend's
+            // set)
+            variant: req.get("variant").and_then(|v| v.as_str())
+                .map(String::from),
+        },
+    }
+}
+
+// ---------------- auth + rate limiting ----------------------------------
+
+/// Constant-time token comparison: the loop always covers the full
+/// length, so timing does not leak the first mismatching byte.
+fn token_eq(a: &str, b: &str) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    a.bytes().zip(b.bytes())
+        .fold(0u8, |acc, (x, y)| acc | (x ^ y)) == 0
+}
+
+/// Per-connection token bucket: `rate` submits/second with a burst of
+/// `max(1, rate)`.  `rate <= 0` disables limiting.
+struct TokenBucket {
+    level: f64,
+    at: Instant,
+}
+
+impl TokenBucket {
+    fn new(rate: f64, now: Instant) -> TokenBucket {
+        TokenBucket { level: rate.max(1.0), at: now }
+    }
+
+    /// `None` = admitted (one token spent); `Some(ms)` = over budget,
+    /// with the backoff hint until the next token accrues.
+    fn hit(&mut self, rate: f64, now: Instant) -> Option<u64> {
+        if rate <= 0.0 {
+            return None;
+        }
+        let burst = rate.max(1.0);
+        let dt = now.saturating_duration_since(self.at).as_secs_f64();
+        self.at = now;
+        self.level = (self.level + dt * rate).min(burst);
+        if self.level >= 1.0 {
+            self.level -= 1.0;
+            None
+        } else {
+            Some((((1.0 - self.level) / rate) * 1000.0).ceil() as u64)
+        }
+    }
+}
+
+// ---------------- readiness poller --------------------------------------
+
+#[cfg(target_os = "linux")]
+mod poll {
+    //! Level-triggered epoll over the worker's connections plus its
+    //! doorbell, through direct `extern "C"` FFI (the offline registry
+    //! carries no mio/libc; precedent: `main.rs` binds `signal(2)` the
+    //! same way).  Read-interest only — writes are retried from the
+    //! tick loop, which the doorbell and the busy timeout keep hot.
+
+    use std::io::Read;
+    use std::net::TcpStream;
+    use std::os::unix::io::{AsRawFd, RawFd};
+    use std::time::Duration;
+
+    // x86_64 is the one Linux ABI where epoll_event is packed
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    struct Event {
+        events: u32,
+        data: u64,
+    }
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CLOEXEC: i32 = 0x8_0000;
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut Event)
+                     -> i32;
+        fn epoll_wait(epfd: i32, events: *mut Event, maxevents: i32,
+                      timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    /// The token the worker doorbell is registered under (never a
+    /// valid accept ordinal — ordinals count up from 0).
+    const DOORBELL: u64 = u64::MAX;
+
+    pub struct Poller {
+        epfd: RawFd,
+        bell: TcpStream,
+    }
+
+    impl Poller {
+        pub fn new(bell: TcpStream) -> std::io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            let p = Poller { epfd, bell };
+            p.register(p.bell.as_raw_fd(), DOORBELL)?;
+            Ok(p)
+        }
+
+        fn register(&self, fd: RawFd, token: u64) -> std::io::Result<()> {
+            let mut ev = Event { events: EPOLLIN | EPOLLRDHUP,
+                                 data: token };
+            let rc = unsafe {
+                epoll_ctl(self.epfd, EPOLL_CTL_ADD, fd, &mut ev)
+            };
+            if rc < 0 {
+                Err(std::io::Error::last_os_error())
+            } else {
+                Ok(())
+            }
+        }
+
+        pub fn add(&self, sock: &TcpStream, token: u64)
+                   -> std::io::Result<()> {
+            self.register(sock.as_raw_fd(), token)
+        }
+
+        pub fn del(&self, sock: &TcpStream) {
+            let mut ev = Event { events: 0, data: 0 };
+            unsafe {
+                epoll_ctl(self.epfd, EPOLL_CTL_DEL, sock.as_raw_fd(),
+                          &mut ev);
+            }
+        }
+
+        /// Wait up to `timeout`, pushing ready tokens into `ready`
+        /// (the doorbell is drained internally and never surfaces).
+        /// Returns whether the caller must treat EVERY connection as
+        /// readable — always false here; the portable fallback's
+        /// contract.
+        pub fn wait(&mut self, timeout: Duration, ready: &mut Vec<u64>)
+                    -> bool {
+            let mut evs = [Event { events: 0, data: 0 }; 64];
+            let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+            let n = unsafe {
+                epoll_wait(self.epfd, evs.as_mut_ptr(),
+                           evs.len() as i32, ms)
+            };
+            if n <= 0 {
+                return false; // timeout (EINTR folds into one)
+            }
+            for ev in evs.iter().take(n as usize) {
+                let token = ev.data; // copy out of the packed struct
+                if token == DOORBELL {
+                    let mut buf = [0u8; 64];
+                    while matches!((&self.bell).read(&mut buf),
+                                   Ok(n) if n > 0) {}
+                } else {
+                    ready.push(token);
+                }
+            }
+            false
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod poll {
+    //! Portable fallback: no readiness facility — sleep a bounded
+    //! slice, then report "treat every connection as readable"
+    //! (spurious readiness is free on nonblocking sockets).  Correct
+    //! but O(connections) per tick; the epoll build is the scale
+    //! path.
+
+    use std::io::Read;
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    pub struct Poller {
+        bell: TcpStream,
+    }
+
+    impl Poller {
+        pub fn new(bell: TcpStream) -> std::io::Result<Poller> {
+            Ok(Poller { bell })
+        }
+
+        pub fn add(&self, _sock: &TcpStream, _token: u64)
+                   -> std::io::Result<()> {
+            Ok(())
+        }
+
+        pub fn del(&self, _sock: &TcpStream) {}
+
+        pub fn wait(&mut self, timeout: Duration, _ready: &mut Vec<u64>)
+                    -> bool {
+            std::thread::sleep(timeout.min(Duration::from_millis(1)));
+            let mut buf = [0u8; 64];
+            while matches!((&self.bell).read(&mut buf), Ok(n) if n > 0) {}
+            true
+        }
+    }
+}
+
+/// A nonblocking loopback socket pair: the write half lives with the
+/// acceptor, the read half is registered in the worker's poller, and
+/// one byte rings the worker awake.
+fn doorbell_pair() -> Result<(TcpStream, TcpStream)> {
+    let l = TcpListener::bind((Ipv4Addr::LOCALHOST, 0))
+        .context("bind doorbell listener")?;
+    let addr = l.local_addr()?;
+    let tx = TcpStream::connect(addr).context("connect doorbell")?;
+    let (rx, _) = l.accept().context("accept doorbell")?;
+    tx.set_nonblocking(true)?;
+    rx.set_nonblocking(true)?;
+    let _ = tx.set_nodelay(true);
+    Ok((tx, rx))
+}
+
+/// Ring a worker doorbell: nonblocking one-byte write.  A full buffer
+/// means unread wakeups are already pending, which is just as good.
+fn ring(bell: &TcpStream) {
+    let _ = (&mut &*bell).write(&[1u8]);
+}
+
+// ---------------- server side: connections ------------------------------
+
+/// The per-worker slice of [`ServeConfig`] the connection handlers
+/// need.
+struct WorkerCfg {
+    /// how long the outbound queue may stay full before the client is
+    /// declared slow
+    stall: Duration,
+    /// outbound queue bound (frames)
+    cap: usize,
+    auth_token: String,
+    rate_limit: f64,
+}
+
+impl WorkerCfg {
+    fn from_serve(serve: &ServeConfig) -> WorkerCfg {
+        WorkerCfg {
+            stall: Duration::from_millis(serve.write_stall_ms.max(1)),
+            cap: serve.net_send_queue.max(1),
+            auth_token: serve.auth_token.clone(),
+            rate_limit: serve.rate_limit,
+        }
+    }
+}
+
+struct StreamEntry {
+    stream: ClipStream,
+    cancel: StreamCancel,
+    /// whether the last chunk seen carried `last: true` — decides the
+    /// `done` terminal's `complete` flag
+    complete: bool,
+}
+
+/// One multiplexed connection: decoder state, in-flight work, and the
+/// bounded outbound queue, all owned by exactly one worker thread.
+struct Conn {
+    sock: TcpStream,
+    decoder: FrameDecoder,
+    /// per-frame outbound fault site (`drop-conn` / `slow-client`
+    /// chaos clauses)
+    injector: FaultInjector,
+    cap: usize,
+    outq: VecDeque<Vec<u8>>,
+    /// bytes of `outq[0]` already written
+    out_pos: usize,
+    /// fault-injection latch: the front frame has been checked
+    out_checked: bool,
+    /// `slow-client` chaos: writes pause until this instant
+    write_paused_until: Option<Instant>,
+    /// since when the outbound queue has been full
+    stall_since: Option<Instant>,
+    /// set after a framing/auth error: flush what's queued, then close
+    closing: Option<Instant>,
+    dead: bool,
+    authed: bool,
+    goaway_sent: bool,
+    /// v1 tensor compression, opted into via `hello`
+    compress: bool,
+    bucket: TokenBucket,
+    active: HashMap<u64, StreamEntry>,
+    oneshots: HashMap<u64, Receiver<Result<GenResponse, ServeError>>>,
+}
+
+impl Conn {
+    fn new(sock: TcpStream, injector: FaultInjector, cfg: &WorkerCfg,
+           now: Instant) -> Conn {
+        Conn {
+            sock,
+            decoder: FrameDecoder::new(),
+            injector,
+            cap: cfg.cap,
+            outq: VecDeque::new(),
+            out_pos: 0,
+            out_checked: false,
+            write_paused_until: None,
+            stall_since: None,
+            closing: None,
+            dead: false,
+            authed: cfg.auth_token.is_empty(),
+            goaway_sent: false,
+            compress: false,
+            bucket: TokenBucket::new(cfg.rate_limit, now),
+            active: HashMap::new(),
+            oneshots: HashMap::new(),
+        }
+    }
+
+    /// The latched wire format (v0 until the first byte arrives —
+    /// error replies to undecodable openings go out debug-readable).
+    fn wire(&self) -> WireFormat {
+        self.decoder.wire().unwrap_or(WireFormat::V0)
+    }
+
+    fn has_room(&self) -> bool {
+        self.outq.len() < self.cap
+    }
+
+    /// Anything that wants the 1ms busy timeout instead of the idle
+    /// 250ms sleep.
+    fn is_busy(&self) -> bool {
+        self.dead
+            || !self.active.is_empty()
+            || !self.oneshots.is_empty()
+            || !self.outq.is_empty()
+            || self.write_paused_until.is_some()
+            || self.closing.is_some()
+            || self.stall_since.is_some()
+    }
+
+    /// Encode and enqueue one outbound frame in the connection's wire
+    /// format.  Control frames always enqueue (they are small and
+    /// per-request); bulk backpressure is enforced where chunks are
+    /// PULLED ([`Conn::service_streams`] checks [`Conn::has_room`]).
+    fn push(&mut self, meta: Json, tensor: Option<&Tensor>) {
+        if self.dead {
+            return;
+        }
+        match wire::encode(&meta, tensor, self.wire(), self.compress) {
+            Ok(bytes) => self.outq.push_back(bytes),
+            Err(e) => {
+                // an unencodable reply (tensor over the frame cap,
+                // ...) turns into a typed error where one fits
+                crate::warn_!("net: encode failed: {e:#}");
+                if let Some(id) = meta.get("id")
+                    .and_then(|v| v.as_usize())
+                {
+                    if let Ok(b) = wire::encode(
+                        &internal_error_frame(id as u64,
+                                              &format!("{e:#}")),
+                        None, self.wire(), false)
+                    {
+                        self.outq.push_back(b);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drain readable bytes and dispatch complete frames.  Bounded
+    /// per call (4 reads of 16KB) for fairness across the worker's
+    /// connections.
+    fn service_read(&mut self, gw: &Arc<Gateway>, cfg: &WorkerCfg,
+                    now: Instant) {
+        if self.dead || self.closing.is_some() {
+            return;
+        }
+        let mut buf = [0u8; 16 * 1024];
+        for _ in 0..4 {
+            let n = match self.sock.read(&mut buf) {
+                Ok(0) => {
+                    self.dead = true;
+                    return;
+                }
+                Ok(n) => n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                    continue;
+                }
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            };
+            self.decoder.feed(&buf[..n]);
+            loop {
+                match self.decoder.next() {
+                    Ok(Some(frame)) => {
+                        self.dispatch(gw, cfg, frame, now);
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        // framing is broken: answer WHY with a typed
+                        // bad_request, flush it, then close — the
+                        // byte stream cannot be resynchronized
+                        self.push(error_frame(
+                            None,
+                            &ServeError::BadRequest(format!("{e:#}"))),
+                            None);
+                        self.closing = Some(now);
+                        return;
+                    }
+                }
+                if self.dead || self.closing.is_some() {
+                    return;
+                }
+            }
+            if n < buf.len() {
+                return;
+            }
+        }
+    }
+
+    fn dispatch(&mut self, gw: &Arc<Gateway>, cfg: &WorkerCfg,
+                frame: WireFrame, now: Instant) {
+        let req = frame.meta;
+        let op = req.get("op").and_then(|v| v.as_str());
+        if op == Some("hello") {
+            self.handle_hello(&req, cfg, now);
+            return;
+        }
+        if !self.authed {
+            self.push(error_frame(None, &ServeError::Unauthorized(
+                "this server requires a hello frame carrying its \
+                 access token".into())), None);
+            self.closing = Some(now);
+            return;
+        }
+        match op {
+            Some("submit") => self.handle_submit(gw, &req, cfg, now),
+            Some("metrics") => {
+                let f = Json::obj()
+                    .push("type", "metrics")
+                    .push("snapshot", gw.metrics_snapshot());
+                self.push(f, None);
+            }
+            Some("health") => {
+                // the snapshot's health section IS the probe payload:
+                // live / ready / draining, derived from the same state
+                // the operator sees in `metrics`
+                let snap = gw.metrics_snapshot();
+                let health = snap.get("health").cloned()
+                    .unwrap_or_else(Json::obj);
+                self.push(Json::obj()
+                    .push("type", "health")
+                    .push("health", health), None);
+            }
+            Some("drain") => {
+                gw.begin_drain();
+                self.push(Json::obj()
+                    .push("type", "drain_ok")
+                    .push("draining", true), None);
+            }
+            Some("cancel") => {
+                let id = req.get("id").and_then(|v| v.as_usize())
+                    .unwrap_or(0) as u64;
+                let found = match self.active.get(&id) {
+                    Some(e) => {
+                        e.cancel.cancel();
+                        true
+                    }
+                    None => false,
+                };
+                self.push(Json::obj()
+                    .push("type", "cancel_ok")
+                    .push("id", id as usize)
+                    .push("found", found), None);
+            }
+            Some(op) => {
+                self.push(error_frame(
+                    None, &ServeError::BadRequest(format!(
+                        "unknown op {op:?} (valid: hello, submit, \
+                         cancel, metrics, health, drain)"))), None);
+            }
+            None => {
+                self.push(error_frame(
+                    None, &ServeError::BadRequest(
+                        "request has no \"op\"".into())), None);
+            }
+        }
+    }
+
+    fn handle_hello(&mut self, req: &Json, cfg: &WorkerCfg,
+                    now: Instant) {
+        if !cfg.auth_token.is_empty() {
+            let ok = req.get("token").and_then(|v| v.as_str())
+                .map(|t| token_eq(t, &cfg.auth_token))
+                .unwrap_or(false);
+            if !ok {
+                self.push(error_frame(None, &ServeError::Unauthorized(
+                    "bad or missing token".into())), None);
+                self.closing = Some(now);
+                return;
+            }
+        }
+        self.authed = true;
+        self.compress = req.get("compress").and_then(|v| v.as_bool())
+            .unwrap_or(false);
+        let wire = self.wire();
+        self.push(Json::obj()
+            .push("type", "hello_ok")
+            .push("wire", wire.as_str())
+            .push("compress", self.compress), None);
+    }
+
+    fn handle_submit(&mut self, gw: &Arc<Gateway>, req: &Json,
+                     cfg: &WorkerCfg, now: Instant) {
+        if let Some(retry_after_ms) = self.bucket.hit(cfg.rate_limit,
+                                                      now) {
+            self.push(rejected_frame(
+                &ServeError::RateLimited { retry_after_ms }), None);
+            return;
+        }
+        let p = parse_submit(req, gw.serve_config());
+        if p.steps == 0 || p.steps > MAX_NET_STEPS {
+            self.push(rejected_frame(&ServeError::BadRequest(format!(
+                "steps {} out of range (1..={MAX_NET_STEPS})",
+                p.steps))), None);
+            return;
+        }
+        if p.streaming {
+            match gw.submit_streaming_with(p.class, p.seed, p.steps,
+                                           &p.tier, p.opts) {
+                Ok(s) => {
+                    let id = s.id();
+                    let cancel = s.cancel_handle();
+                    self.push(accepted_frame(id), None);
+                    self.active.insert(id, StreamEntry {
+                        stream: s, cancel, complete: false });
+                }
+                Err(e) => self.push(rejected_frame(&e), None),
+            }
+        } else {
+            match gw.submit_tracked_with(p.class, p.seed, p.steps,
+                                         &p.tier, p.opts) {
+                // ack with the real gateway id: clip/error frames are
+                // tagged with it, so pipelined one-shot submits on one
+                // connection stay correlatable whatever order they
+                // complete in
+                Ok((id, rx)) => {
+                    self.push(accepted_frame(id), None);
+                    self.oneshots.insert(id, rx);
+                }
+                Err(e) => self.push(rejected_frame(&e), None),
+            }
+        }
+    }
+
+    /// Move ready chunks/results from in-flight work to the outbound
+    /// queue — the polled replacement for PR-3's pump threads.
+    /// Chunks are pulled only while the queue has room, so a stream
+    /// never buffers past the slow-client bound.
+    fn service_streams(&mut self) {
+        if self.dead {
+            return;
+        }
+        let mut active = std::mem::take(&mut self.active);
+        let mut finished: Vec<u64> = Vec::new();
+        for (&id, entry) in active.iter_mut() {
+            loop {
+                if !self.has_room() {
+                    break;
+                }
+                match entry.stream.try_recv() {
+                    Ok(Some(Ok(chunk))) => {
+                        entry.complete = chunk.last;
+                        self.push(chunk_meta(&chunk),
+                                  Some(&chunk.frames));
+                    }
+                    Ok(Some(Err(e))) => {
+                        // typed terminal failure (deadline, shard
+                        // death, shed on retry-requeue, ...) —
+                        // forwarded verbatim, then the terminal
+                        self.push(error_frame(Some(id), &e), None);
+                        self.push(done_frame(id, false), None);
+                        finished.push(id);
+                        break;
+                    }
+                    Ok(None) => break, // nothing buffered yet
+                    Err(_) => {
+                        // producer closed the channel: stream over
+                        self.push(done_frame(id, entry.complete), None);
+                        finished.push(id);
+                        break;
+                    }
+                }
+            }
+        }
+        for id in &finished {
+            active.remove(id);
+        }
+        self.active = active;
+
+        let mut oneshots = std::mem::take(&mut self.oneshots);
+        let mut done: Vec<u64> = Vec::new();
+        for (&id, rx) in oneshots.iter() {
+            match rx.try_recv() {
+                Ok(Ok(resp)) => {
+                    self.push(clip_meta(&resp), Some(&resp.clip));
+                    done.push(id);
+                }
+                Ok(Err(e)) => {
+                    self.push(error_frame(Some(id), &e), None);
+                    done.push(id);
+                }
+                Err(TryRecvError::Empty) => {}
+                Err(TryRecvError::Disconnected) => {
+                    self.push(internal_error_frame(
+                        id, "server dropped the request"), None);
+                    done.push(id);
+                }
+            }
+        }
+        for id in &done {
+            oneshots.remove(id);
+        }
+        self.oneshots = oneshots;
+    }
+
+    /// Write queued frames until the socket would block.  The
+    /// per-frame fault check runs once per frame, exactly where the
+    /// old writer thread ran it, so `drop-conn` / `slow-client` chaos
+    /// clauses keep their meaning.
+    fn flush(&mut self, now: Instant) {
+        if self.dead {
+            return;
+        }
+        if let Some(until) = self.write_paused_until {
+            if now < until {
+                return;
+            }
+            self.write_paused_until = None;
+        }
+        while !self.outq.is_empty() {
+            if self.out_pos == 0 && !self.out_checked {
+                self.out_checked = true;
+                match self.injector.check() {
+                    FaultAction::DropConn => {
+                        // kill BOTH halves so the disconnect sweep
+                        // runs — exactly where a flaky network would
+                        let _ = self.sock.shutdown(Shutdown::Both);
+                        self.dead = true;
+                        return;
+                    }
+                    // slow-client chaos: writes stall, frames pile up
+                    // in the bounded queue — exactly how a peer that
+                    // stopped reading presents
+                    FaultAction::Slow(d)
+                    | FaultAction::SlowClient(d) => {
+                        self.write_paused_until = Some(now + d);
+                        return;
+                    }
+                    FaultAction::Panic | FaultAction::Hang
+                    | FaultAction::None => {}
+                }
+            }
+            let frame_len = self.outq[0].len();
+            match self.sock.write(&self.outq[0][self.out_pos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return;
+                }
+                Ok(n) => {
+                    self.out_pos += n;
+                    if self.out_pos >= frame_len {
+                        self.outq.pop_front();
+                        self.out_pos = 0;
+                        self.out_checked = false;
+                    }
+                }
+                Err(e) if e.kind()
+                    == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind()
+                    == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// One reactor turn: drain notices, poll in-flight work, write,
+    /// and enforce the slow-client and close-after-error deadlines.
+    fn tick(&mut self, cfg: &WorkerCfg, draining: bool, now: Instant) {
+        if self.dead {
+            return;
+        }
+        if draining && !self.goaway_sent {
+            self.goaway_sent = true;
+            self.push(goaway_frame(), None);
+        }
+        self.service_streams();
+        self.flush(now);
+        if self.outq.len() >= self.cap {
+            if self.stall_since.is_none() {
+                self.stall_since = Some(now);
+            }
+        } else {
+            self.stall_since = None;
+        }
+        if let Some(since) = self.stall_since {
+            if now.saturating_duration_since(since) >= cfg.stall {
+                crate::warn_!(
+                    "slow client: outbound queue stalled over {:?}; \
+                     cancelling {} stream(s) and dropping the \
+                     connection",
+                    cfg.stall, self.active.len());
+                let _ = self.sock.shutdown(Shutdown::Both);
+                self.dead = true;
+                return;
+            }
+        }
+        if let Some(since) = self.closing {
+            if self.outq.is_empty()
+                || now.saturating_duration_since(since) >= cfg.stall
+            {
+                let _ = self.sock.shutdown(Shutdown::Both);
+                self.dead = true;
+            }
+        }
+    }
+
+    /// cancel-on-disconnect: whatever this client still had in flight
+    /// is dead work now — cancelling frees the shard slots through
+    /// the normal cancel path.
+    fn teardown(&mut self) {
+        for (_, entry) in self.active.drain() {
+            entry.cancel.cancel();
+            drop(entry.stream);
+        }
+        self.oneshots.clear();
+        let _ = self.sock.shutdown(Shutdown::Both);
+    }
+
+    /// Best-effort blocking flush at worker exit, so buffered
+    /// terminal frames (`done`, `goaway`, `drain_ok`) reach
+    /// well-behaved peers before the socket drops.
+    fn final_flush(&mut self) {
+        if self.dead || self.outq.is_empty() {
+            return;
+        }
+        let _ = self.sock.set_nonblocking(false);
+        let _ = self.sock
+            .set_write_timeout(Some(Duration::from_millis(250)));
+        if self.out_pos > 0 {
+            let rest: Vec<u8> = self.outq[0][self.out_pos..].to_vec();
+            if self.sock.write_all(&rest).is_err() {
+                return;
+            }
+            self.outq.pop_front();
+            self.out_pos = 0;
+        }
+        while let Some(frame) = self.outq.pop_front() {
+            if self.sock.write_all(&frame).is_err() {
+                return;
+            }
+        }
+        let _ = self.sock.flush();
+    }
+}
+
+// ---------------- server side: workers + frontend -----------------------
+
+type Handoff = (TcpStream, u64, FaultInjector);
+
+fn worker_loop(gw: Arc<Gateway>, inbox: Receiver<Handoff>,
+               bell: TcpStream, stop: Arc<AtomicBool>,
+               draining: Arc<AtomicBool>) {
+    let cfg = WorkerCfg::from_serve(gw.serve_config());
+    let mut poller = match poll::Poller::new(bell) {
+        Ok(p) => p,
+        Err(e) => {
+            crate::warn_!("net worker: poller init failed: {e}");
+            return;
+        }
+    };
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut ready: Vec<u64> = Vec::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // adopt handed-off connections
+        while let Ok((sock, token, injector)) = inbox.try_recv() {
+            let _ = sock.set_nodelay(true);
+            if sock.set_nonblocking(true).is_err() {
+                continue;
+            }
+            if let Err(e) = poller.add(&sock, token) {
+                crate::warn_!("net worker: register failed: {e}");
+                continue;
+            }
+            let now = Instant::now();
+            let mut conn = Conn::new(sock, injector, &cfg, now);
+            if draining.load(Ordering::Relaxed) {
+                // the server is already draining: say so up front
+                conn.goaway_sent = true;
+                conn.push(goaway_frame(), None);
+            }
+            conns.insert(token, conn);
+        }
+        let busy = conns.values().any(|c| c.is_busy());
+        let timeout = if busy {
+            Duration::from_millis(1)
+        } else {
+            Duration::from_millis(250)
+        };
+        ready.clear();
+        let all_readable = poller.wait(timeout, &mut ready);
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let now = Instant::now();
+        let is_draining = draining.load(Ordering::Relaxed);
+        if all_readable {
+            for conn in conns.values_mut() {
+                conn.service_read(&gw, &cfg, now);
+            }
+        } else {
+            for token in &ready {
+                if let Some(conn) = conns.get_mut(token) {
+                    conn.service_read(&gw, &cfg, now);
+                }
+            }
+        }
+        for conn in conns.values_mut() {
+            conn.tick(&cfg, is_draining, now);
+        }
+        conns.retain(|_, conn| {
+            if conn.dead {
+                poller.del(&conn.sock);
+                conn.teardown();
+                false
+            } else {
+                true
+            }
+        });
+    }
+    for (_, mut conn) in conns.drain() {
+        conn.final_flush();
+        conn.teardown();
+    }
+}
+
+/// The listening half: accepts connections and hands them to the
+/// reactor workers.  Owned by [`super::server::Server`]; tests start
+/// one over a mock-backed gateway directly.
+pub struct NetFrontend {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    doorbells: Vec<TcpStream>,
+    draining: Arc<AtomicBool>,
+}
+
+impl NetFrontend {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start the accept loop + worker pool.
+    pub fn start(gateway: Arc<Gateway>, addr: &str)
+                 -> Result<NetFrontend> {
+        NetFrontend::start_with_faults(gateway, addr, FaultPlan::none())
+    }
+
+    /// [`NetFrontend::start`] with a fault plan: each accepted
+    /// connection gets a deterministic net-site [`FaultInjector`]
+    /// keyed by its accept ordinal, so `drop-conn` chaos runs replay
+    /// per (plan, seed).
+    pub fn start_with_faults(gateway: Arc<Gateway>, addr: &str,
+                             plan: FaultPlan) -> Result<NetFrontend> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("bind {addr}"))?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let draining = Arc::new(AtomicBool::new(false));
+        let n_workers = gateway.serve_config().net_workers.max(1);
+        let mut workers = Vec::with_capacity(n_workers);
+        let mut doorbells = Vec::with_capacity(n_workers);
+        let mut inboxes = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (tx, rx) = channel::<Handoff>();
+            let (bell_tx, bell_rx) = doorbell_pair()?;
+            let gw = Arc::clone(&gateway);
+            let stop2 = Arc::clone(&stop);
+            let draining2 = Arc::clone(&draining);
+            let h = std::thread::Builder::new()
+                .name(format!("sla2-net-io-{w}"))
+                .spawn(move || {
+                    worker_loop(gw, rx, bell_rx, stop2, draining2)
+                })?;
+            workers.push(h);
+            doorbells.push(bell_tx);
+            inboxes.push(tx);
+        }
+        let bells: Vec<TcpStream> = doorbells.iter()
+            .map(|b| b.try_clone())
+            .collect::<std::io::Result<_>>()?;
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("sla2-net-accept".into())
+            .spawn(move || {
+                let mut ordinal: u64 = 0;
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match conn {
+                        Ok(sock) => {
+                            let injector = if plan.has_net_faults() {
+                                plan.net_injector(ordinal)
+                            } else {
+                                FaultInjector::inert()
+                            };
+                            let w = (ordinal % inboxes.len() as u64)
+                                as usize;
+                            if inboxes[w]
+                                .send((sock, ordinal, injector))
+                                .is_ok()
+                            {
+                                ring(&bells[w]);
+                            }
+                            ordinal += 1;
+                        }
+                        Err(e) => {
+                            crate::warn_!("accept failed: {e}");
+                        }
+                    }
+                }
+            })?;
+        Ok(NetFrontend { local_addr, stop,
+                         accept_thread: Some(accept_thread),
+                         workers, doorbells, draining })
+    }
+
+    /// The bound address (port 0 resolved to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Mark the frontend draining and wake every worker: each live
+    /// connection gets a `goaway` frame on its next tick, and
+    /// connections accepted from now on get it as their first frame.
+    /// Admission itself is flipped by the caller
+    /// ([`super::server::Server::drain`] / the `drain` verb).
+    pub fn announce_drain(&self) {
+        self.draining.store(true, Ordering::Relaxed);
+        crate::info!("net: goaway broadcast over {} worker(s)",
+                     self.doorbells.len());
+        for bell in &self.doorbells {
+            ring(bell);
+        }
+    }
+
+    /// Stop accepting and wind the workers down (each gives its
+    /// connections a best-effort final flush so buffered terminals go
+    /// out).
+    pub fn shutdown(&mut self) {
+        if let Some(h) = self.accept_thread.take() {
+            self.stop.store(true, Ordering::Relaxed);
+            // the accept loop only observes `stop` on its next
+            // connection: poke it awake
+            let mut wake = self.local_addr;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
+            }
+            let _ = TcpStream::connect(wake);
+            let _ = h.join();
+            for bell in &self.doorbells {
+                ring(bell);
+            }
+            for h in self.workers.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for NetFrontend {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
 // ---------------- client side -------------------------------------------
 
+/// Connection options for [`NetClient::connect_with`].
+#[derive(Debug, Clone)]
+pub struct ClientOpts {
+    /// wire format to speak (the server answers in kind)
+    pub wire: WireFormat,
+    /// auth token, required against servers started with
+    /// `--auth-token`
+    pub token: Option<String>,
+    /// opt into v1 tensor compression (ignored on v0)
+    pub compress: bool,
+}
+
+impl Default for ClientOpts {
+    fn default() -> ClientOpts {
+        ClientOpts { wire: WireFormat::V1, token: None, compress: false }
+    }
+}
+
 /// Minimal blocking client for the wire protocol, used by the
-/// `sla2-stream-client` binary and the integration tests.  Designed
-/// for sequential use: submit, then consume that request's frames;
-/// frames for other requests encountered while scanning are buffered
-/// and replayed in order.
+/// `sla2-stream-client` binary and the integration tests.  Speaks v1
+/// by default (v0 via [`ClientOpts`]).  Designed for sequential use:
+/// submit, then consume that request's frames; frames for other
+/// requests encountered while scanning are buffered and replayed in
+/// order.
 pub struct NetClient {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-    pending: VecDeque<Json>,
+    sock: TcpStream,
+    decoder: FrameDecoder,
+    wire: WireFormat,
+    pending: VecDeque<WireFrame>,
 }
 
 impl NetClient {
+    /// Connect with the defaults: v1, no token, no compression.
     pub fn connect(addr: &str) -> Result<NetClient> {
+        NetClient::connect_with(addr, ClientOpts::default())
+    }
+
+    /// Connect with explicit options.  A `hello` handshake is sent
+    /// (and its ack awaited) whenever a token or compression is in
+    /// play; a bare connect skips it, matching v0 clients.
+    pub fn connect_with(addr: &str, opts: ClientOpts)
+                        -> Result<NetClient> {
         let sock = TcpStream::connect(addr)
             .with_context(|| format!("connect {addr}"))?;
         let _ = sock.set_nodelay(true);
-        let writer = sock.try_clone()?;
-        Ok(NetClient { reader: BufReader::new(sock), writer,
-                       pending: VecDeque::new() })
+        let mut c = NetClient {
+            sock,
+            decoder: FrameDecoder::with_format(opts.wire),
+            wire: opts.wire,
+            pending: VecDeque::new(),
+        };
+        if opts.token.is_some() || opts.compress {
+            let mut hello = Json::obj().push("op", "hello");
+            if let Some(t) = &opts.token {
+                hello = hello.push("token", t.as_str());
+            }
+            hello = hello.push("wire", opts.wire.as_str())
+                         .push("compress", opts.compress);
+            c.send(&hello)?;
+            let f = c.wait_for(|f| {
+                matches!(f.get("type").and_then(|v| v.as_str()),
+                         Some("hello_ok") | Some("error"))
+            })?;
+            if f.meta.get("type").and_then(|v| v.as_str())
+                != Some("hello_ok")
+            {
+                let e = error_from_frame(&f.meta);
+                return Err(anyhow::Error::new(e.clone())
+                    .context(format!("hello rejected: {e}")));
+            }
+        }
+        Ok(c)
     }
 
+    /// Send one request frame in the connection's wire format.
     pub fn send(&mut self, frame: &Json) -> Result<()> {
-        write_frame(&mut self.writer, frame)
+        let bytes = wire::encode(frame, None, self.wire, false)?;
+        self.sock.write_all(&bytes)?;
+        Ok(())
     }
 
-    /// Next frame: replays buffered frames first, then reads the wire.
-    pub fn next_frame(&mut self) -> Result<Json> {
+    fn read_more(&mut self) -> Result<()> {
+        let mut buf = [0u8; 64 * 1024];
+        let n = self.sock.read(&mut buf)?;
+        anyhow::ensure!(n > 0, "connection closed");
+        self.decoder.feed(&buf[..n]);
+        Ok(())
+    }
+
+    /// Next decoded frame, tensor out-of-band on v1: replays buffered
+    /// frames first, then reads the wire.
+    pub fn next_wire(&mut self) -> Result<WireFrame> {
         if let Some(f) = self.pending.pop_front() {
             return Ok(f);
         }
-        read_frame(&mut self.reader, MAX_FRAME_LEN)?
-            .context("connection closed")
+        loop {
+            if let Some(f) = self.decoder.next()? {
+                return Ok(f);
+            }
+            self.read_more()?;
+        }
     }
 
-    /// Read until `pred` matches, buffering everything else in order.
-    fn wait_for(&mut self, pred: impl Fn(&Json) -> bool) -> Result<Json> {
+    /// Next frame as inline JSON (v0-shaped whatever the wire): the
+    /// back-compatible view; costly for large tensors.
+    pub fn next_frame(&mut self) -> Result<Json> {
+        self.next_wire()?.into_inline()
+    }
+
+    /// Read until `pred` matches a frame's meta, buffering everything
+    /// else in order.
+    fn wait_for(&mut self, pred: impl Fn(&Json) -> bool)
+                -> Result<WireFrame> {
         for i in 0..self.pending.len() {
-            if pred(&self.pending[i]) {
+            if pred(&self.pending[i].meta) {
                 if let Some(f) = self.pending.remove(i) {
                     return Ok(f);
                 }
             }
         }
         loop {
-            let f = read_frame(&mut self.reader, MAX_FRAME_LEN)?
-                .context("connection closed")?;
-            if pred(&f) {
-                return Ok(f);
+            if let Some(f) = self.decoder.next()? {
+                if pred(&f.meta) {
+                    return Ok(f);
+                }
+                self.pending.push_back(f);
+                continue;
             }
-            self.pending.push_back(f);
+            self.read_more()?;
         }
     }
 
@@ -826,15 +1522,20 @@ impl NetClient {
             .push("deadline_ms", opts.deadline_ms as usize)
             .push("allow_degrade", opts.allow_degrade)
             .push_opt("variant", opts.variant))?;
+        // an unscoped error (auth failure, framing complaint) must
+        // surface too, or the client would hang on a closing socket
         let ack = self.wait_for(|f| {
             matches!(f.get("type").and_then(|v| v.as_str()),
                      Some("accepted") | Some("rejected"))
+                || (f.get("type").and_then(|v| v.as_str())
+                        == Some("error")
+                    && f.get("id").is_none())
         })?;
-        match ack.get("type").and_then(|v| v.as_str()) {
-            Some("accepted") => Ok(ack.get("id")
+        match ack.meta.get("type").and_then(|v| v.as_str()) {
+            Some("accepted") => Ok(ack.meta.get("id")
                 .and_then(|v| v.as_usize()).unwrap_or(0) as u64),
             _ => {
-                let e = error_from_frame(&ack);
+                let e = error_from_frame(&ack.meta);
                 Err(anyhow::Error::new(e.clone())
                     .context(format!("submit rejected: {e}")))
             }
@@ -859,9 +1560,9 @@ impl NetClient {
                                 Some("chunk") | Some("done")
                                 | Some("error"))
             })?;
-            match f.get("type").and_then(|v| v.as_str()) {
+            match f.meta.get("type").and_then(|v| v.as_str()) {
                 Some("chunk") => {
-                    let c = chunk_from_json(&f)?;
+                    let c = chunk_from_frame(&f)?;
                     on_chunk(&c);
                     chunks.push(c);
                 }
@@ -869,7 +1570,7 @@ impl NetClient {
                     return stream::assemble_response(id, chunks);
                 }
                 _ => {
-                    let e = error_from_frame(&f);
+                    let e = error_from_frame(&f.meta);
                     return Err(anyhow::Error::new(e.clone())
                         .context(format!("stream {id} failed: {e}")));
                 }
@@ -882,8 +1583,8 @@ impl NetClient {
     }
 
     /// Wait for one non-streaming submit's clip frame, matched by the
-    /// id its ack returned (pump threads answer in completion order,
-    /// not submit order).
+    /// id its ack returned (results answer in completion order, not
+    /// submit order).
     pub fn collect_clip(&mut self, id: u64) -> Result<GenResponse> {
         let f = self.wait_for(|f| {
             f.get("id").and_then(|v| v.as_usize()).map(|v| v as u64)
@@ -891,15 +1592,14 @@ impl NetClient {
                 && matches!(f.get("type").and_then(|v| v.as_str()),
                             Some("clip") | Some("error"))
         })?;
-        match f.get("type").and_then(|v| v.as_str()) {
-            Some("clip") => Ok(GenResponse {
-                id,
-                clip: tensor_from_json(f.req("clip")?)?,
-                metrics: f.get("metrics").map(metrics_from_json)
-                    .unwrap_or_default(),
-            }),
+        match f.meta.get("type").and_then(|v| v.as_str()) {
+            Some("clip") => {
+                let mut resp = clip_from_frame(&f)?;
+                resp.id = id;
+                Ok(resp)
+            }
             _ => {
-                let e = error_from_frame(&f);
+                let e = error_from_frame(&f.meta);
                 Err(anyhow::Error::new(e.clone())
                     .context(format!("request {id} failed: {e}")))
             }
@@ -912,7 +1612,7 @@ impl NetClient {
         let f = self.wait_for(|f| {
             f.get("type").and_then(|v| v.as_str()) == Some("metrics")
         })?;
-        Ok(f.req("snapshot")?.clone())
+        Ok(f.meta.req("snapshot")?.clone())
     }
 
     /// Probe liveness/readiness; returns the server's health object
@@ -922,7 +1622,7 @@ impl NetClient {
         let f = self.wait_for(|f| {
             f.get("type").and_then(|v| v.as_str()) == Some("health")
         })?;
-        Ok(f.req("health")?.clone())
+        Ok(f.meta.req("health")?.clone())
     }
 
     /// Ask the server to begin a graceful drain (admission flips to
@@ -945,7 +1645,39 @@ impl NetClient {
                 && f.get("id").and_then(|v| v.as_usize())
                     .map(|v| v as u64) == Some(id)
         })?;
-        Ok(f.get("found").and_then(|v| v.as_bool()).unwrap_or(false))
+        Ok(f.meta.get("found").and_then(|v| v.as_bool())
+            .unwrap_or(false))
+    }
+}
+
+// ---------------- TLS (stub) --------------------------------------------
+
+/// Transport encryption, reserved behind the `tls` cargo feature.
+///
+/// The offline registry carries no TLS implementation, so this module
+/// only pins the API shape the real handshake will slot into: both
+/// halves return a typed "not implemented" error.  Building without
+/// the feature removes the module entirely, so nothing can link
+/// against a TLS that is not there.
+#[cfg(feature = "tls")]
+pub mod tls {
+    use std::net::TcpStream;
+
+    use anyhow::{bail, Result};
+
+    /// Server-side accept wrapper: will perform the TLS handshake on
+    /// `sock` once an implementation lands.
+    pub fn accept(_sock: TcpStream) -> Result<TcpStream> {
+        bail!("tls: enabled at build time but not implemented — the \
+               offline registry has no TLS crate; terminate TLS in \
+               front of the server for now")
+    }
+
+    /// Client-side connect wrapper, mirroring [`accept`].
+    pub fn connect(_sock: TcpStream, _host: &str) -> Result<TcpStream> {
+        bail!("tls: enabled at build time but not implemented — the \
+               offline registry has no TLS crate; terminate TLS in \
+               front of the server for now")
     }
 }
 
@@ -1005,7 +1737,30 @@ mod tests {
         let f = Json::parse(&error_frame(None, &err).to_string()).unwrap();
         assert_eq!(f.get("code").and_then(|v| v.as_str()),
                    Some("bad_request"));
+        let back = error_from_frame(&f);
+        assert_eq!(back.code(), err.code());
+        assert!(!back.retryable());
+        assert!(back.to_string().contains("no \"op\""));
+
+        // the transport-hardening additions survive the wire too
+        let err = ServeError::RateLimited { retry_after_ms: 40 };
+        let f = Json::parse(&rejected_frame(&err).to_string()).unwrap();
+        assert_eq!(f.get("code").and_then(|v| v.as_str()),
+                   Some("rate_limited"));
+        assert_eq!(f.get("retry_after_ms").and_then(|v| v.as_usize()),
+                   Some(40));
         assert_eq!(error_from_frame(&f), err);
+
+        let err = ServeError::Unauthorized("bad or missing token".into());
+        let f = Json::parse(&error_frame(None, &err).to_string())
+            .unwrap();
+        assert_eq!(f.get("code").and_then(|v| v.as_str()),
+                   Some("unauthorized"));
+        assert_eq!(f.get("retryable").and_then(|v| v.as_bool()),
+                   Some(false));
+        let back = error_from_frame(&f);
+        assert_eq!(back.code(), err.code());
+        assert!(!back.retryable());
 
         // legacy frame without a code decodes as terminal shard_failed
         let legacy = Json::obj().push("type", "error")
@@ -1044,5 +1799,95 @@ mod tests {
         assert_eq!(back.frames, c.frames);
         assert_eq!(back.metrics.batch_size, 2);
         assert!(!back.last);
+    }
+
+    #[test]
+    fn chunk_frames_decode_identically_from_both_wires() {
+        let c = ClipChunk {
+            id: 9, seq: 0, frame_start: 0, frame_end: 2, total_frames: 2,
+            last: true,
+            frames: Tensor::from_f32(&[2, 2],
+                                     vec![0.5, -0.25, 3.0, f32::MIN_POSITIVE])
+                .unwrap(),
+            metrics: RequestMetrics::default(),
+        };
+        for fmt in [WireFormat::V0, WireFormat::V1] {
+            let bytes = wire::encode(&chunk_meta(&c), Some(&c.frames),
+                                     fmt, false).unwrap();
+            let mut d = FrameDecoder::new();
+            d.feed(&bytes);
+            let f = d.next().unwrap().unwrap();
+            let back = chunk_from_frame(&f).unwrap();
+            assert_eq!(back.id, c.id, "{fmt:?}");
+            assert_eq!(back.frames, c.frames, "{fmt:?}");
+            assert!(back.last, "{fmt:?}");
+        }
+    }
+
+    #[test]
+    fn parse_submit_is_wire_agnostic() {
+        let serve = ServeConfig::default();
+        let req = Json::obj()
+            .push("op", "submit")
+            .push("class", 3i64)
+            .push("seed", 41.0)
+            .push("steps", 6usize)
+            .push("tier", "s95")
+            .push("stream", false)
+            .push("deadline_ms", 120usize)
+            .push("allow_degrade", true)
+            .push("variant", "sparge2");
+        let mut params = Vec::new();
+        for fmt in [WireFormat::V0, WireFormat::V1] {
+            let bytes = wire::encode(&req, None, fmt, false).unwrap();
+            let mut d = FrameDecoder::new();
+            d.feed(&bytes);
+            let meta = d.next().unwrap().unwrap().meta;
+            params.push(parse_submit(&meta, &serve));
+        }
+        for p in &params {
+            assert_eq!(p.class, 3);
+            assert_eq!(p.seed, 41);
+            assert_eq!(p.steps, 6);
+            assert_eq!(p.tier, "s95");
+            assert!(!p.streaming);
+            assert_eq!(p.opts.deadline_ms, 120);
+            assert!(p.opts.allow_degrade);
+            assert_eq!(p.opts.variant.as_deref(), Some("sparge2"));
+        }
+        // defaults fill in identically too
+        let bare = Json::obj().push("op", "submit");
+        let p = parse_submit(&bare, &serve);
+        assert_eq!(p.steps, serve.sample_steps);
+        assert_eq!(p.tier, serve.tier);
+        assert!(p.streaming);
+        assert_eq!(p.opts.variant, None);
+    }
+
+    #[test]
+    fn token_eq_is_length_and_content_sensitive() {
+        assert!(token_eq("secret", "secret"));
+        assert!(!token_eq("secret", "secreT"));
+        assert!(!token_eq("secret", "secre"));
+        assert!(!token_eq("", "x"));
+        assert!(token_eq("", ""));
+    }
+
+    #[test]
+    fn token_bucket_admits_burst_then_throttles() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(2.0, t0);
+        assert_eq!(b.hit(2.0, t0), None);
+        assert_eq!(b.hit(2.0, t0), None);
+        let hint = b.hit(2.0, t0).expect("burst exhausted");
+        assert!(hint >= 1 && hint <= 500, "{hint}");
+        // half a second refills one token at 2/s
+        let t1 = t0 + Duration::from_millis(500);
+        assert_eq!(b.hit(2.0, t1), None);
+        // rate 0 = unlimited
+        let mut open = TokenBucket::new(0.0, t0);
+        for _ in 0..100 {
+            assert_eq!(open.hit(0.0, t0), None);
+        }
     }
 }

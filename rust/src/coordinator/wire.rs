@@ -1,0 +1,1020 @@
+//! Versioned wire codecs for the TCP frontend: the debug-readable v0
+//! JSON framing and the binary v1 frame format, behind one
+//! incremental [`FrameDecoder`] that auto-detects which one a peer
+//! speaks.
+//!
+//! Both formats carry the SAME application-level frames (the verb
+//! tables in [`super::net`]); only the bytes differ.  The codec is
+//! therefore Json-in / Json-out: [`encode`] takes a frame's metadata
+//! tree plus an optional out-of-band [`Tensor`], and the decoder hands
+//! back a [`WireFrame`] holding both halves.  Server and client share
+//! this module, so an encode-side layout change is caught by the same
+//! golden vectors and property tests on both ends.
+//!
+//! # v0 (JSON, debug-readable)
+//!
+//! A 4-byte big-endian unsigned length `n` (capped at
+//! [`MAX_FRAME_LEN`]) followed by `n` bytes of UTF-8 JSON.  Tensors
+//! travel inline as `{"shape": [..], "data": [f32 as double, ..]}` —
+//! lossless but ~5x the bytes of raw f32.  `nc`-friendly: you can
+//! debug a server with a shell one-liner.
+//!
+//! # v1 (binary)
+//!
+//! A fixed 20-byte header, all multi-byte fields **little-endian**:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "SLA2" (0x53 0x4c 0x41 0x32)
+//! 4       1     version (= 1)
+//! 5       1     verb (see the verb table below)
+//! 6       2     flags u16: bit0 = tensor bytes zrle-compressed,
+//!                          bit1 = a tensor section follows the meta
+//! 8       8     request id u64 (mirrors meta "id"; 0 when unscoped)
+//! 16      4     payload length u32 (capped at MAX_FRAME_LEN)
+//! ```
+//!
+//! The payload is a length-prefixed JSON **meta** section (the frame
+//! minus its tensor field) and, when `FLAG_TENSOR` is set, a raw
+//! tensor section:
+//!
+//! ```text
+//! meta_len  u32   meta      meta_len bytes of UTF-8 JSON
+//! dtype     u8    (0 = f32, 1 = i32)
+//! ndim      u8    dims      ndim x u32
+//! raw_len   u32   (uncompressed data bytes = numel x 4)
+//! enc_len   u32   data      enc_len bytes, little-endian scalars,
+//!                           zrle-compressed iff FLAG_COMPRESSED
+//! ```
+//!
+//! Only `chunk` frames (tensor field `frames`) and `clip` frames
+//! (tensor field `clip`) carry tensor sections.  The header id and
+//! verb are redundant with the meta — they exist so a router can
+//! dispatch without parsing JSON — and the decoder REJECTS frames
+//! where they disagree, which also catches single-byte corruption.
+//!
+//! Verb table (`op` = client->server, `type` = server->client):
+//!
+//! | code | frame     | code | frame      | code | frame      |
+//! |------|-----------|------|------------|------|------------|
+//! | 0x01 | hello     | 0x81 | hello_ok   | 0x87 | metrics    |
+//! | 0x02 | submit    | 0x82 | accepted   | 0x88 | cancel_ok  |
+//! | 0x03 | cancel    | 0x83 | rejected   | 0x89 | health     |
+//! | 0x04 | metrics   | 0x84 | chunk      | 0x8a | drain_ok   |
+//! | 0x05 | health    | 0x85 | done       | 0x8b | goaway     |
+//! | 0x06 | drain     | 0x86 | clip       | 0x8c | error      |
+//!
+//! Code [`VERB_X_JSON`] (0x7f) is the escape hatch: a frame whose
+//! `op`/`type` is not in the table travels with its whole JSON body in
+//! the meta section, so v1 is total over the same frame set as v0
+//! (forward compatibility for verbs this build does not know).
+//!
+//! # Negotiation
+//!
+//! Per connection, by first byte: a v1 frame starts with `'S'`
+//! (0x53), while a legal v0 length prefix starts with 0x00 or 0x01
+//! (the cap is 16 MiB = 0x0100_0000).  The first frame latches the
+//! connection's format; the server replies in kind.  Any other first
+//! byte is a typed protocol error.  Clients default to v1 and may
+//! request compression in their `hello`.
+//!
+//! # Compression
+//!
+//! `zrle` — a first-party zero-run-length scheme (the offline registry
+//! has no flate2): literal bytes pass through; a 0x00 is followed by a
+//! run length byte (1..=255).  The encoder only keeps the compressed
+//! form when it is strictly smaller (sparse/padded tensors win;
+//! dense noise does not), recorded per frame in `FLAG_COMPRESSED`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Hard cap on a single frame (v0 body or v1 payload), both
+/// directions.  Far above any legitimate chunk on the testbed models;
+/// anything larger is treated as a protocol violation and closes the
+/// connection.
+pub const MAX_FRAME_LEN: usize = 16 * 1024 * 1024;
+
+/// v1 frame magic: the first four bytes of every binary frame.
+pub const MAGIC: [u8; 4] = *b"SLA2";
+
+/// The one binary wire version this build speaks.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Fixed v1 header length in bytes.
+pub const HEADER_LEN: usize = 20;
+
+/// Header flag: the tensor section's data bytes are zrle-compressed.
+pub const FLAG_COMPRESSED: u16 = 1 << 0;
+
+/// Header flag: a tensor section follows the meta section.
+pub const FLAG_TENSOR: u16 = 1 << 1;
+
+/// Escape verb: the meta carries a frame whose `op`/`type` is not in
+/// this build's verb table.
+pub const VERB_X_JSON: u8 = 0x7f;
+
+const DTYPE_F32: u8 = 0;
+const DTYPE_I32: u8 = 1;
+
+const REQUEST_VERBS: &[(u8, &str)] = &[
+    (0x01, "hello"),
+    (0x02, "submit"),
+    (0x03, "cancel"),
+    (0x04, "metrics"),
+    (0x05, "health"),
+    (0x06, "drain"),
+];
+
+const REPLY_VERBS: &[(u8, &str)] = &[
+    (0x81, "hello_ok"),
+    (0x82, "accepted"),
+    (0x83, "rejected"),
+    (0x84, "chunk"),
+    (0x85, "done"),
+    (0x86, "clip"),
+    (0x87, "metrics"),
+    (0x88, "cancel_ok"),
+    (0x89, "health"),
+    (0x8a, "drain_ok"),
+    (0x8b, "goaway"),
+    (0x8c, "error"),
+];
+
+/// Which codec a connection speaks.  Latched per connection by the
+/// first byte the peer sends (servers) or chosen up front (clients).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFormat {
+    /// length-prefixed JSON (debug-readable)
+    V0,
+    /// binary frames with raw little-endian tensor payloads
+    V1,
+}
+
+impl WireFormat {
+    pub fn parse(s: &str) -> Result<WireFormat> {
+        match s {
+            "v0" | "json" => Ok(WireFormat::V0),
+            "v1" | "binary" => Ok(WireFormat::V1),
+            _ => bail!("unknown wire format {s:?} (valid: v0, v1)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WireFormat::V0 => "v0",
+            WireFormat::V1 => "v1",
+        }
+    }
+}
+
+/// One decoded frame: the JSON metadata plus, on the v1 path, the
+/// out-of-band tensor.  v0 frames always arrive with `tensor: None`
+/// (their tensors are inline in `meta`); consumers that need the
+/// tensor regardless of path go through [`super::net::chunk_from_frame`]
+/// / [`super::net::clip_from_frame`] or [`WireFrame::into_inline`].
+#[derive(Debug, Clone)]
+pub struct WireFrame {
+    pub meta: Json,
+    pub tensor: Option<Tensor>,
+}
+
+impl WireFrame {
+    /// Wrap a plain JSON frame (no out-of-band tensor).
+    pub fn from_json(meta: Json) -> WireFrame {
+        WireFrame { meta, tensor: None }
+    }
+
+    /// The frame's verb string: `op` for requests, `type` for replies.
+    pub fn verb(&self) -> Option<&str> {
+        self.meta.get("op").and_then(|v| v.as_str())
+            .or_else(|| self.meta.get("type").and_then(|v| v.as_str()))
+    }
+
+    /// The request id this frame is scoped to, if any.
+    pub fn id(&self) -> Option<u64> {
+        self.meta.get("id").and_then(|v| v.as_f64()).map(|v| v as u64)
+    }
+
+    /// Fold the out-of-band tensor back into the JSON tree (under the
+    /// verb's tensor key), yielding the exact shape a v0 frame has.
+    /// Costly for large tensors — prefer the typed accessors.
+    pub fn into_inline(self) -> Result<Json> {
+        match self.tensor {
+            None => Ok(self.meta),
+            Some(t) => {
+                let verb = verb_of(&self.meta);
+                let key = tensor_key(verb).with_context(|| {
+                    format!("verb 0x{verb:02x} cannot carry a tensor")
+                })?;
+                Ok(self.meta.push(key, tensor_to_json(&t)?))
+            }
+        }
+    }
+}
+
+/// The v1 verb code for a frame body: its `op`/`type` looked up in
+/// the verb table, or [`VERB_X_JSON`] when absent or unknown.
+pub fn verb_of(meta: &Json) -> u8 {
+    if let Some(op) = meta.get("op").and_then(|v| v.as_str()) {
+        lookup(REQUEST_VERBS, op)
+    } else if let Some(ty) = meta.get("type").and_then(|v| v.as_str()) {
+        lookup(REPLY_VERBS, ty)
+    } else {
+        VERB_X_JSON
+    }
+}
+
+fn lookup(table: &[(u8, &str)], name: &str) -> u8 {
+    table.iter().find(|(_, n)| *n == name).map(|(c, _)| *c)
+        .unwrap_or(VERB_X_JSON)
+}
+
+/// The JSON key a verb's tensor section maps to (`chunk` and `clip`
+/// frames only).
+pub fn tensor_key(verb: u8) -> Option<&'static str> {
+    match verb {
+        0x84 => Some("frames"),
+        0x86 => Some("clip"),
+        _ => None,
+    }
+}
+
+// ---------------- JSON <-> tensor ---------------------------------------
+
+/// Inline JSON tensor form (the v0 representation): lossless for f32 —
+/// every f32 is exactly representable as a double and the writer emits
+/// shortest-roundtrip decimals.
+pub fn tensor_to_json(t: &Tensor) -> Result<Json> {
+    let data: Vec<Json> =
+        t.f32s()?.iter().map(|v| Json::Num(*v as f64)).collect();
+    Ok(Json::obj()
+        .push("shape", t.shape.as_slice())
+        .push("data", data))
+}
+
+pub fn tensor_from_json(j: &Json) -> Result<Tensor> {
+    let shape = j.req("shape")?.as_usize_vec()
+        .context("tensor shape")?;
+    let data: Vec<f32> = j.req("data")?.as_arr()
+        .context("tensor data")?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as f32))
+        .collect::<Option<_>>()
+        .context("non-numeric tensor data")?;
+    Tensor::from_f32(&shape, data)
+}
+
+// ---------------- zrle compression --------------------------------------
+
+/// Zero-run-length encode: literal bytes pass through; each 0x00 is
+/// followed by a run length (1..=255).  Worst case (no zeros) is the
+/// input unchanged; all-zero input compresses 128:1.
+pub fn zrle_compress(raw: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(raw.len() / 2 + 16);
+    let mut i = 0;
+    while i < raw.len() {
+        let b = raw[i];
+        if b == 0 {
+            let mut run = 1usize;
+            while run < 255 && i + run < raw.len() && raw[i + run] == 0 {
+                run += 1;
+            }
+            out.push(0);
+            out.push(run as u8);
+            i += run;
+        } else {
+            out.push(b);
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Decode a zrle stream that must expand to exactly `expect` bytes
+/// (the header's `raw_len`); anything else is a protocol error.
+pub fn zrle_decompress(enc: &[u8], expect: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(expect);
+    let mut i = 0;
+    while i < enc.len() {
+        let b = enc[i];
+        if b == 0 {
+            anyhow::ensure!(i + 1 < enc.len(), "zrle: truncated zero run");
+            let run = enc[i + 1] as usize;
+            anyhow::ensure!(run > 0, "zrle: zero-length run");
+            anyhow::ensure!(out.len() + run <= expect,
+                            "zrle: output exceeds declared length");
+            out.resize(out.len() + run, 0);
+            i += 2;
+        } else {
+            anyhow::ensure!(out.len() < expect,
+                            "zrle: output exceeds declared length");
+            out.push(b);
+            i += 1;
+        }
+    }
+    anyhow::ensure!(out.len() == expect,
+                    "zrle: output is {} bytes, header declared {expect}",
+                    out.len());
+    Ok(out)
+}
+
+// ---------------- encode ------------------------------------------------
+
+/// Encode one frame.  `tensor` rides out-of-band on v1 (raw
+/// little-endian, optionally compressed) and is folded inline into
+/// the JSON on v0; only `chunk`/`clip` verbs may carry one.
+pub fn encode(meta: &Json, tensor: Option<&Tensor>, wire: WireFormat,
+              compress: bool) -> Result<Vec<u8>> {
+    match wire {
+        WireFormat::V0 => encode_v0(meta, tensor),
+        WireFormat::V1 => encode_v1(meta, tensor, compress),
+    }
+}
+
+fn encode_v0(meta: &Json, tensor: Option<&Tensor>) -> Result<Vec<u8>> {
+    let body = match tensor {
+        None => meta.to_string(),
+        Some(t) => {
+            let verb = verb_of(meta);
+            let key = tensor_key(verb).with_context(|| {
+                format!("verb 0x{verb:02x} cannot carry a tensor")
+            })?;
+            meta.clone().push(key, tensor_to_json(t)?).to_string()
+        }
+    };
+    anyhow::ensure!(body.len() <= MAX_FRAME_LEN,
+                    "frame of {} bytes exceeds the {} byte cap",
+                    body.len(), MAX_FRAME_LEN);
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    out.extend_from_slice(body.as_bytes());
+    Ok(out)
+}
+
+fn encode_v1(meta: &Json, tensor: Option<&Tensor>, compress: bool)
+             -> Result<Vec<u8>> {
+    let verb = verb_of(meta);
+    let text = meta.to_string();
+    let mut flags: u16 = 0;
+    let mut tensor_sec = Vec::new();
+    if let Some(t) = tensor {
+        anyhow::ensure!(tensor_key(verb).is_some(),
+                        "verb 0x{verb:02x} cannot carry a tensor");
+        flags |= FLAG_TENSOR;
+        encode_tensor_section(t, compress, &mut tensor_sec, &mut flags)?;
+    }
+    let payload_len = 4 + text.len() + tensor_sec.len();
+    anyhow::ensure!(payload_len <= MAX_FRAME_LEN,
+                    "frame of {payload_len} bytes exceeds the \
+                     {MAX_FRAME_LEN} byte cap");
+    let id = meta.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    let mut out = Vec::with_capacity(HEADER_LEN + payload_len);
+    out.extend_from_slice(&MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(verb);
+    out.extend_from_slice(&flags.to_le_bytes());
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    out.extend_from_slice(&(text.len() as u32).to_le_bytes());
+    out.extend_from_slice(text.as_bytes());
+    out.extend_from_slice(&tensor_sec);
+    Ok(out)
+}
+
+fn encode_tensor_section(t: &Tensor, compress: bool, out: &mut Vec<u8>,
+                         flags: &mut u16) -> Result<()> {
+    let (dtype, raw): (u8, Vec<u8>) = if t.is_f32() {
+        let mut b = Vec::with_capacity(t.numel() * 4);
+        for v in t.f32s()? {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        (DTYPE_F32, b)
+    } else {
+        let mut b = Vec::with_capacity(t.numel() * 4);
+        for v in t.i32s()? {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        (DTYPE_I32, b)
+    };
+    anyhow::ensure!(t.shape.len() <= u8::MAX as usize,
+                    "tensor rank {} exceeds the wire cap", t.shape.len());
+    anyhow::ensure!(raw.len() <= MAX_FRAME_LEN,
+                    "tensor of {} bytes exceeds the {} byte cap",
+                    raw.len(), MAX_FRAME_LEN);
+    out.push(dtype);
+    out.push(t.shape.len() as u8);
+    for &d in &t.shape {
+        anyhow::ensure!(d <= u32::MAX as usize,
+                        "tensor dim {d} overflows u32");
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    out.extend_from_slice(&(raw.len() as u32).to_le_bytes());
+    let enc = if compress {
+        let z = zrle_compress(&raw);
+        if z.len() < raw.len() {
+            *flags |= FLAG_COMPRESSED;
+            z
+        } else {
+            raw
+        }
+    } else {
+        raw
+    };
+    out.extend_from_slice(&(enc.len() as u32).to_le_bytes());
+    out.extend_from_slice(&enc);
+    Ok(())
+}
+
+fn decode_tensor_section(b: &[u8], compressed: bool, max_len: usize)
+                         -> Result<(Tensor, usize)> {
+    anyhow::ensure!(b.len() >= 2, "truncated tensor section");
+    let dtype = b[0];
+    let ndim = b[1] as usize;
+    let mut off = 2;
+    anyhow::ensure!(b.len() >= off + ndim * 4 + 8,
+                    "truncated tensor dims");
+    let mut shape = Vec::with_capacity(ndim);
+    let mut numel: usize = 1;
+    for _ in 0..ndim {
+        let d = u32l(&b[off..off + 4]) as usize;
+        off += 4;
+        numel = numel.checked_mul(d)
+            .context("tensor element count overflows")?;
+        shape.push(d);
+    }
+    let raw_len = u32l(&b[off..off + 4]) as usize;
+    off += 4;
+    let enc_len = u32l(&b[off..off + 4]) as usize;
+    off += 4;
+    anyhow::ensure!(raw_len <= max_len,
+                    "oversized tensor: {raw_len} bytes (cap {max_len})");
+    anyhow::ensure!(Some(raw_len) == numel.checked_mul(4),
+                    "tensor data length {raw_len} does not match \
+                     {numel} elements x 4 bytes");
+    anyhow::ensure!(b.len() >= off + enc_len, "truncated tensor data");
+    let enc = &b[off..off + enc_len];
+    off += enc_len;
+    let raw: Vec<u8> = if compressed {
+        zrle_decompress(enc, raw_len)?
+    } else {
+        anyhow::ensure!(enc_len == raw_len,
+                        "tensor data is {enc_len} bytes, header \
+                         declared {raw_len}");
+        enc.to_vec()
+    };
+    let t = match dtype {
+        DTYPE_F32 => {
+            let data: Vec<f32> = raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Tensor::from_f32(&shape, data)?
+        }
+        DTYPE_I32 => {
+            let data: Vec<i32> = raw.chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Tensor::from_i32(&shape, data)?
+        }
+        d => bail!("bad tensor dtype {d} (valid: 0 = f32, 1 = i32)"),
+    };
+    Ok((t, off))
+}
+
+fn u32l(b: &[u8]) -> u32 {
+    let mut a = [0u8; 4];
+    a.copy_from_slice(&b[..4]);
+    u32::from_le_bytes(a)
+}
+
+fn u64l(b: &[u8]) -> u64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(&b[..8]);
+    u64::from_le_bytes(a)
+}
+
+// ---------------- decode ------------------------------------------------
+
+/// Incremental frame decoder: feed it raw socket bytes, pull complete
+/// frames.  The first byte latches the connection's [`WireFormat`]
+/// (unless fixed up front with [`FrameDecoder::with_format`]).
+///
+/// `next` returns `Ok(None)` when more bytes are needed and `Err` on a
+/// protocol violation — after which the byte stream cannot be
+/// resynchronized: the decoder latches poisoned and the connection
+/// must be dropped (the server sends a typed `bad_request` first).
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    start: usize,
+    wire: Option<WireFormat>,
+    max_len: usize,
+    poisoned: bool,
+}
+
+impl Default for FrameDecoder {
+    fn default() -> Self {
+        FrameDecoder::new()
+    }
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder {
+            buf: Vec::new(),
+            start: 0,
+            wire: None,
+            max_len: MAX_FRAME_LEN,
+            poisoned: false,
+        }
+    }
+
+    /// A decoder pinned to one format (no first-byte detection).
+    pub fn with_format(wire: WireFormat) -> FrameDecoder {
+        FrameDecoder { wire: Some(wire), ..FrameDecoder::new() }
+    }
+
+    /// Lower the frame cap (tests of the oversized path).
+    pub fn with_max_len(max_len: usize) -> FrameDecoder {
+        FrameDecoder { max_len, ..FrameDecoder::new() }
+    }
+
+    /// The format latched so far, if any.
+    pub fn wire(&self) -> Option<WireFormat> {
+        self.wire
+    }
+
+    /// Bytes fed but not yet consumed by a decoded frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    pub fn feed(&mut self, bytes: &[u8]) {
+        // compact: drop consumed bytes once they dominate the buffer
+        if self.start > 0
+            && (self.start >= self.buf.len() || self.start > 64 * 1024)
+        {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pull the next complete frame: `Ok(None)` = need more bytes.
+    pub fn next(&mut self) -> Result<Option<WireFrame>> {
+        anyhow::ensure!(!self.poisoned,
+                        "wire decoder poisoned by an earlier framing \
+                         error");
+        let r = self.try_next();
+        if r.is_err() {
+            self.poisoned = true;
+        }
+        r
+    }
+
+    fn try_next(&mut self) -> Result<Option<WireFrame>> {
+        let first = match self.buf.get(self.start) {
+            Some(b) => *b,
+            None => return Ok(None),
+        };
+        let wire = match self.wire {
+            Some(w) => w,
+            None => {
+                // a v1 frame starts with 'S'; a legal v0 BE length
+                // prefix (cap 16 MiB = 0x0100_0000) starts 0x00/0x01
+                let w = match first {
+                    0x53 => WireFormat::V1,
+                    0x00 | 0x01 => WireFormat::V0,
+                    b => bail!("unknown wire format (first byte \
+                                0x{b:02x}; expected a v0 length prefix \
+                                or v1 magic \"SLA2\")"),
+                };
+                self.wire = Some(w);
+                w
+            }
+        };
+        match wire {
+            WireFormat::V0 => self.next_v0(),
+            WireFormat::V1 => self.next_v1(),
+        }
+    }
+
+    fn next_v0(&mut self) -> Result<Option<WireFrame>> {
+        let avail = self.buf.len() - self.start;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let h = &self.buf[self.start..self.start + 4];
+        let len = u32::from_be_bytes([h[0], h[1], h[2], h[3]]) as usize;
+        anyhow::ensure!(len <= self.max_len,
+                        "oversized frame: {len} bytes (cap {})",
+                        self.max_len);
+        if avail < 4 + len {
+            return Ok(None);
+        }
+        let body = &self.buf[self.start + 4..self.start + 4 + len];
+        let text = std::str::from_utf8(body)
+            .context("frame is not UTF-8")?;
+        let meta = Json::parse(text)
+            .map_err(|e| anyhow::anyhow!("malformed frame: {e}"))?;
+        self.start += 4 + len;
+        Ok(Some(WireFrame { meta, tensor: None }))
+    }
+
+    fn next_v1(&mut self) -> Result<Option<WireFrame>> {
+        let avail = self.buf.len() - self.start;
+        if avail < HEADER_LEN {
+            return Ok(None);
+        }
+        let h = &self.buf[self.start..self.start + HEADER_LEN];
+        anyhow::ensure!(h[..4] == MAGIC,
+                        "bad magic {:02x?} (expected \"SLA2\")", &h[..4]);
+        anyhow::ensure!(h[4] == WIRE_VERSION,
+                        "unsupported wire version {} (this build \
+                         speaks {WIRE_VERSION})", h[4]);
+        let verb = h[5];
+        let flags = u16::from_le_bytes([h[6], h[7]]);
+        let id = u64l(&h[8..16]);
+        let payload_len = u32l(&h[16..20]) as usize;
+        anyhow::ensure!(payload_len <= self.max_len,
+                        "oversized frame: {payload_len} bytes (cap {})",
+                        self.max_len);
+        anyhow::ensure!(flags & !(FLAG_COMPRESSED | FLAG_TENSOR) == 0,
+                        "unknown flag bits 0x{flags:04x}");
+        if avail < HEADER_LEN + payload_len {
+            return Ok(None);
+        }
+        let p = &self.buf
+            [self.start + HEADER_LEN..self.start + HEADER_LEN + payload_len];
+        anyhow::ensure!(p.len() >= 4, "truncated meta section");
+        let meta_len = u32l(&p[..4]) as usize;
+        anyhow::ensure!(meta_len <= p.len() - 4,
+                        "meta length {meta_len} overruns the payload");
+        let text = std::str::from_utf8(&p[4..4 + meta_len])
+            .context("frame meta is not UTF-8")?;
+        let meta = Json::parse(text)
+            .map_err(|e| anyhow::anyhow!("malformed frame meta: {e}"))?;
+        anyhow::ensure!(verb_of(&meta) == verb,
+                        "verb byte 0x{verb:02x} does not match the \
+                         frame body");
+        let mut off = 4 + meta_len;
+        let tensor = if flags & FLAG_TENSOR != 0 {
+            anyhow::ensure!(tensor_key(verb).is_some(),
+                            "verb 0x{verb:02x} cannot carry a tensor \
+                             section");
+            let (t, used) = decode_tensor_section(
+                &p[off..], flags & FLAG_COMPRESSED != 0, self.max_len)?;
+            off += used;
+            Some(t)
+        } else {
+            anyhow::ensure!(flags & FLAG_COMPRESSED == 0,
+                            "COMPRESSED flag without a tensor section");
+            None
+        };
+        anyhow::ensure!(off == payload_len,
+                        "payload length mismatch: consumed {off} of \
+                         {payload_len} bytes");
+        let meta_id = meta.get("id").and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as u64;
+        anyhow::ensure!(id == meta_id,
+                        "header id {id} does not match the frame \
+                         body's {meta_id}");
+        self.start += HEADER_LEN + payload_len;
+        Ok(Some(WireFrame { meta, tensor }))
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Pcg32;
+
+    fn decode_one(bytes: &[u8]) -> WireFrame {
+        let mut d = FrameDecoder::new();
+        d.feed(bytes);
+        let f = d.next().unwrap().unwrap();
+        assert_eq!(d.buffered(), 0, "trailing bytes after one frame");
+        f
+    }
+
+    #[test]
+    fn verb_table_is_bijective_and_direction_tagged() {
+        let mut seen = std::collections::HashSet::new();
+        for (code, name) in REQUEST_VERBS {
+            assert!(seen.insert(*code), "duplicate code {code:#x}");
+            assert_eq!(*code & 0x80, 0, "{name}: request high bit");
+            let meta = Json::obj().push("op", *name);
+            assert_eq!(verb_of(&meta), *code);
+        }
+        for (code, name) in REPLY_VERBS {
+            assert!(seen.insert(*code), "duplicate code {code:#x}");
+            assert_eq!(*code & 0x80, 0x80, "{name}: reply high bit");
+            let meta = Json::obj().push("type", *name);
+            assert_eq!(verb_of(&meta), *code);
+        }
+        assert!(!seen.contains(&VERB_X_JSON));
+        assert_eq!(verb_of(&Json::obj().push("op", "frobnicate")),
+                   VERB_X_JSON);
+        assert_eq!(verb_of(&Json::obj()), VERB_X_JSON);
+    }
+
+    #[test]
+    fn v1_layout_is_pinned() {
+        // {"op":"cancel","id":7} — hand-check every header field
+        let meta = Json::obj().push("op", "cancel").push("id", 7usize);
+        let text = meta.to_string();
+        assert_eq!(text, r#"{"op":"cancel","id":7}"#);
+        let b = encode(&meta, None, WireFormat::V1, false).unwrap();
+        assert_eq!(&b[..4], b"SLA2");
+        assert_eq!(b[4], 1, "version");
+        assert_eq!(b[5], 0x03, "cancel verb");
+        assert_eq!(&b[6..8], &[0, 0], "flags");
+        assert_eq!(&b[8..16], &7u64.to_le_bytes(), "id LE");
+        let payload_len = (4 + text.len()) as u32;
+        assert_eq!(&b[16..20], &payload_len.to_le_bytes());
+        assert_eq!(&b[20..24], &(text.len() as u32).to_le_bytes());
+        assert_eq!(&b[24..], text.as_bytes());
+        let back = decode_one(&b);
+        assert_eq!(back.meta, meta);
+        assert!(back.tensor.is_none());
+    }
+
+    #[test]
+    fn every_verb_roundtrips_both_formats() {
+        let mut metas: Vec<Json> = Vec::new();
+        for (_, name) in REQUEST_VERBS {
+            metas.push(Json::obj().push("op", *name).push("id", 3usize));
+        }
+        for (_, name) in REPLY_VERBS {
+            metas.push(Json::obj().push("type", *name)
+                       .push("id", 9usize).push("x", 1.5));
+        }
+        // unknown verbs travel via the x-json escape
+        metas.push(Json::obj().push("op", "frobnicate").push("k", true));
+        metas.push(Json::obj().push("weird", "no verb at all"));
+        for meta in &metas {
+            for wire in [WireFormat::V0, WireFormat::V1] {
+                let b = encode(meta, None, wire, false).unwrap();
+                let f = decode_one(&b);
+                assert_eq!(&f.meta, meta, "{wire:?}");
+                assert!(f.tensor.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn tensors_roundtrip_bit_identically() {
+        check("wire-tensor-roundtrip", 48, |r| {
+            let ndim = 1 + r.below(3) as usize;
+            let shape: Vec<usize> =
+                (0..ndim).map(|_| r.below(5) as usize).collect();
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| {
+                match r.below(8) {
+                    0 => 0.0,
+                    1 => f32::NAN,
+                    2 => f32::INFINITY,
+                    3 => f32::MIN_POSITIVE / 2.0, // subnormal
+                    _ => r.normal() as f32,
+                }
+            }).collect();
+            let compress = r.below(2) == 0;
+            (Tensor::from_f32(&shape, data).unwrap(), compress)
+        }, |(t, compress)| {
+            let meta = Json::obj().push("type", "chunk")
+                .push("id", 5usize).push("last", true);
+            let b = encode(&meta, Some(t), WireFormat::V1, *compress)
+                .map_err(|e| e.to_string())?;
+            let f = decode_one(&b);
+            let back = f.tensor.as_ref().ok_or("no tensor")?;
+            if back.shape != t.shape {
+                return Err(format!("shape {:?} != {:?}",
+                                   back.shape, t.shape));
+            }
+            // compare BITS: NaN payloads must survive, which Tensor's
+            // PartialEq (f32 ==) cannot express
+            let a: Vec<u32> = t.f32s().unwrap().iter()
+                .map(|v| v.to_bits()).collect();
+            let c: Vec<u32> = back.f32s().unwrap().iter()
+                .map(|v| v.to_bits()).collect();
+            if a == c { Ok(()) } else { Err("bits differ".into()) }
+        });
+    }
+
+    #[test]
+    fn i32_tensors_roundtrip() {
+        let t = Tensor::from_i32(&[2, 3], vec![-5, 0, 0, 0, 7, 123])
+            .unwrap();
+        let meta = Json::obj().push("type", "chunk").push("id", 1usize);
+        for compress in [false, true] {
+            let b = encode(&meta, Some(&t), WireFormat::V1, compress)
+                .unwrap();
+            let f = decode_one(&b);
+            assert_eq!(f.tensor.unwrap().i32s().unwrap(),
+                       t.i32s().unwrap());
+        }
+    }
+
+    #[test]
+    fn empty_and_huge_ish_tensors_roundtrip() {
+        // empty: zero elements, still carries shape
+        let t = Tensor::from_f32(&[0, 4], vec![]).unwrap();
+        let meta = Json::obj().push("type", "clip").push("id", 2usize);
+        let f = decode_one(
+            &encode(&meta, Some(&t), WireFormat::V1, true).unwrap());
+        assert_eq!(f.tensor.unwrap().shape, vec![0, 4]);
+        // large-ish (256 KiB raw) — exercises the length fields
+        let mut rng = Pcg32::seeded(11);
+        let big = Tensor::randn(&[64, 32, 32], &mut rng);
+        let f = decode_one(
+            &encode(&meta, Some(&big), WireFormat::V1, false).unwrap());
+        assert_eq!(f.tensor.unwrap(), big);
+    }
+
+    #[test]
+    fn compression_flag_is_honest() {
+        let meta = Json::obj().push("type", "chunk").push("id", 1usize);
+        // zero-heavy tensor: compression must engage and shrink
+        let zeros = Tensor::from_f32(&[1024], vec![0.0; 1024]).unwrap();
+        let plain = encode(&meta, Some(&zeros), WireFormat::V1, false)
+            .unwrap();
+        let packed = encode(&meta, Some(&zeros), WireFormat::V1, true)
+            .unwrap();
+        assert!(packed.len() < plain.len() / 10,
+                "zrle on zeros: {} vs {}", packed.len(), plain.len());
+        assert_eq!(u16::from_le_bytes([packed[6], packed[7]]),
+                   FLAG_COMPRESSED | FLAG_TENSOR);
+        assert_eq!(decode_one(&packed).tensor.unwrap(), zeros);
+        // dense noise: zrle cannot win, the flag must stay clear
+        let mut rng = Pcg32::seeded(3);
+        let noise = Tensor::randn(&[1024], &mut rng);
+        let b = encode(&meta, Some(&noise), WireFormat::V1, true).unwrap();
+        assert_eq!(u16::from_le_bytes([b[6], b[7]]) & FLAG_COMPRESSED, 0);
+        assert_eq!(decode_one(&b).tensor.unwrap(), noise);
+    }
+
+    #[test]
+    fn zrle_roundtrips_and_rejects_bad_streams() {
+        check("zrle-roundtrip", 64, |r| {
+            let n = r.below(512) as usize;
+            (0..n).map(|_| {
+                if r.below(3) == 0 { 0u8 } else { (r.below(255) + 1) as u8 }
+            }).collect::<Vec<u8>>()
+        }, |raw| {
+            let enc = zrle_compress(raw);
+            let back = zrle_decompress(&enc, raw.len())
+                .map_err(|e| e.to_string())?;
+            if back == *raw { Ok(()) } else { Err("mismatch".into()) }
+        });
+        assert!(zrle_decompress(&[0], 4).is_err(), "truncated run");
+        assert!(zrle_decompress(&[0, 0], 4).is_err(), "zero-length run");
+        assert!(zrle_decompress(&[0, 200], 4).is_err(), "overlong run");
+        assert!(zrle_decompress(&[1, 2], 4).is_err(), "short output");
+    }
+
+    #[test]
+    fn v0_frames_interop_with_the_legacy_reader() {
+        // FrameDecoder's v0 path and net::read_frame parse the same
+        // bytes to the same tree
+        let meta = Json::obj().push("op", "metrics").push("x", 1.5);
+        let b = encode(&meta, None, WireFormat::V0, false).unwrap();
+        let legacy = super::super::net::read_frame(
+            &mut std::io::Cursor::new(&b), MAX_FRAME_LEN)
+            .unwrap().unwrap();
+        assert_eq!(legacy, meta);
+        assert_eq!(decode_one(&b).meta, meta);
+    }
+
+    #[test]
+    fn incremental_single_byte_feeding_yields_identical_frames() {
+        let mut rng = Pcg32::seeded(7);
+        let t = Tensor::randn(&[2, 3, 4], &mut rng);
+        let meta = Json::obj().push("type", "chunk")
+            .push("id", 42usize).push("seq", 0usize);
+        let mut all = Vec::new();
+        all.extend(encode(&meta, Some(&t), WireFormat::V1, true).unwrap());
+        all.extend(encode(&Json::obj().push("op", "health"), None,
+                          WireFormat::V1, false).unwrap());
+        let mut d = FrameDecoder::new();
+        let mut frames = Vec::new();
+        for b in &all {
+            d.feed(std::slice::from_ref(b));
+            while let Some(f) = d.next().unwrap() {
+                frames.push(f);
+            }
+        }
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0].meta, meta);
+        assert_eq!(frames[0].tensor.as_ref().unwrap(), &t);
+        assert_eq!(frames[1].meta, Json::obj().push("op", "health"));
+    }
+
+    #[test]
+    fn truncated_prefixes_never_error_or_yield() {
+        let meta = Json::obj().push("op", "submit").push("seed", 3.0);
+        for wire in [WireFormat::V0, WireFormat::V1] {
+            let full = encode(&meta, None, wire, false).unwrap();
+            for cut in 0..full.len() {
+                let mut d = FrameDecoder::new();
+                d.feed(&full[..cut]);
+                assert!(d.next().unwrap().is_none(),
+                        "prefix {cut}/{} yielded a frame", full.len());
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_frames_yield_typed_errors_and_poison() {
+        // unknown first byte
+        let mut d = FrameDecoder::new();
+        d.feed(b"GET / HTTP/1.1\r\n");
+        let e = d.next().unwrap_err().to_string();
+        assert!(e.contains("unknown wire format"), "{e}");
+        assert!(d.next().is_err(), "poisoned decoder must stay dead");
+
+        // bad magic after latching v1
+        let mut d = FrameDecoder::with_format(WireFormat::V1);
+        d.feed(b"SLAQxxxxxxxxxxxxxxxxxxxx");
+        let e = d.next().unwrap_err().to_string();
+        assert!(e.contains("bad magic"), "{e}");
+
+        // wrong version
+        let good = encode(&Json::obj().push("op", "health"), None,
+                          WireFormat::V1, false).unwrap();
+        let mut bad = good.clone();
+        bad[4] = 9;
+        let mut d = FrameDecoder::new();
+        d.feed(&bad);
+        let e = d.next().unwrap_err().to_string();
+        assert!(e.contains("unsupported wire version 9"), "{e}");
+
+        // oversized payload length
+        let mut bad = good.clone();
+        bad[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut d = FrameDecoder::new();
+        d.feed(&bad);
+        let e = d.next().unwrap_err().to_string();
+        assert!(e.contains("oversized frame"), "{e}");
+
+        // verb byte contradicting the body
+        let mut bad = good.clone();
+        bad[5] = 0x02; // claims submit, body says health
+        let mut d = FrameDecoder::new();
+        d.feed(&bad);
+        let e = d.next().unwrap_err().to_string();
+        assert!(e.contains("does not match"), "{e}");
+
+        // header id contradicting the body
+        let good = encode(&Json::obj().push("op", "cancel")
+                          .push("id", 7usize), None,
+                          WireFormat::V1, false).unwrap();
+        let mut bad = good.clone();
+        bad[8] = 99;
+        let mut d = FrameDecoder::new();
+        d.feed(&bad);
+        let e = d.next().unwrap_err().to_string();
+        assert!(e.contains("header id"), "{e}");
+    }
+
+    #[test]
+    fn v1_is_at_least_4x_smaller_than_v0_on_f32_clips() {
+        // the acceptance headline says >= 5x on realistic clips; pin a
+        // conservative 4x here so the unit test is not flaky across
+        // formatting changes, and let the fig5 `wire_serde` section
+        // report the real ratio
+        let mut rng = Pcg32::seeded(17);
+        let clip = Tensor::randn(&[4, 16, 16, 3], &mut rng);
+        let meta = Json::obj().push("type", "clip").push("id", 1usize);
+        let v0 = encode(&meta, Some(&clip), WireFormat::V0, false)
+            .unwrap();
+        let v1 = encode(&meta, Some(&clip), WireFormat::V1, false)
+            .unwrap();
+        let ratio = v0.len() as f64 / v1.len() as f64;
+        assert!(ratio >= 4.0,
+                "v0 {} bytes / v1 {} bytes = {ratio:.2}x",
+                v0.len(), v1.len());
+    }
+
+    #[test]
+    fn into_inline_matches_the_v0_tree() {
+        let t = Tensor::from_f32(&[1, 2], vec![0.25, -1.5]).unwrap();
+        let meta = Json::obj().push("type", "clip").push("id", 4usize);
+        let f = decode_one(
+            &encode(&meta, Some(&t), WireFormat::V1, false).unwrap());
+        let inline = f.into_inline().unwrap();
+        assert_eq!(tensor_from_json(inline.req("clip").unwrap()).unwrap(),
+                   t);
+    }
+
+    #[test]
+    fn wire_format_parses() {
+        assert_eq!(WireFormat::parse("v0").unwrap(), WireFormat::V0);
+        assert_eq!(WireFormat::parse("json").unwrap(), WireFormat::V0);
+        assert_eq!(WireFormat::parse("v1").unwrap(), WireFormat::V1);
+        assert_eq!(WireFormat::parse("binary").unwrap(), WireFormat::V1);
+        assert!(WireFormat::parse("v2").is_err());
+    }
+}

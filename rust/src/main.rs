@@ -77,6 +77,18 @@ liveness (every serving command; docs/ARCHITECTURE.md):
                             streams are cancelled and the connection
                             dropped (default 2000)
 
+transport (serve-net; docs/ARCHITECTURE.md wire spec):
+  --net-workers N           reactor I/O threads multiplexing all
+                            connections (default 4; threads are
+                            O(workers), never O(connections))
+  --auth-token TOK          require every connection to open with a
+                            `hello` frame carrying TOK (constant-time
+                            compare; empty = auth off)
+  --rate-limit R            per-connection submit budget, submits/sec
+                            (token bucket, burst max(1, R); rejected
+                            submits get typed rate_limited +
+                            retry_after_ms; 0 = unlimited)
+
 commands:
   info          show manifest contents and runtime platform
   generate      --model dit-tiny --variant sla2 --tier s90 --steps 8
@@ -86,10 +98,11 @@ commands:
                 against a synthetic request wave (default shards:
                 cores - 1)
   serve-net     --listen-addr 127.0.0.1:7341 --chunk-frames 1
-                --duration-s 0 — serve the JSON-over-TCP protocol
-                (submit / streaming chunks / cancel / metrics); talk
-                to it with the sla2-stream-client binary.  duration 0
-                = run until killed
+                --duration-s 0 — serve the wire protocol (v0 JSON /
+                v1 binary, negotiated per connection: submit /
+                streaming chunks / cancel / metrics); talk to it with
+                the sla2-stream-client binary.  duration 0 = run
+                until killed
   train         --model dit-tiny --tier s90 --stage1-steps 20
                 --stage2-steps 60 — two-stage fine-tune (Alg. 1)
   costmodel     print paper-calibrated kernel/e2e curves (no PJRT)

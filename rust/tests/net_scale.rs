@@ -1,0 +1,767 @@
+//! Wire-protocol torture tests + connection-scale soak for the
+//! reactor frontend.
+//!
+//! Four layers, all runnable without PJRT artifacts:
+//!
+//! 1. **Golden vectors** — the v1 binary layout is pinned
+//!    byte-for-byte against `rust/tests/data/wire_v1/*.bin`, which
+//!    were produced by an independent second implementation
+//!    (`scripts/gen_wire_goldens.py`).  See the README in that
+//!    directory before touching either side.
+//! 2. **Torture corpus** — handcrafted malformed frames (truncated
+//!    headers, bad magic, wrong version, oversized lengths,
+//!    mid-payload disconnects) plus seeded random byte mutations of
+//!    valid frames (`SLA2_TORTURE_SEED`), all fired at a live server:
+//!    every one must end in a typed `bad_request` and/or a clean
+//!    close — never a panic, a hang, or a leaked slot.
+//! 3. **Auth + rate limiting** — token handshake and per-connection
+//!    submit budgets end to end, over both wire formats.
+//! 4. **Connection-churn soak** — `SLA2_SOAK_CYCLES` (default 100;
+//!    CI runs 1000) rapid connect/submit/disconnect cycles with
+//!    mid-stream cancels against a real native-backend server,
+//!    asserting exactly-once conservation: slots freed, stream
+//!    accounting consistent, and fd/thread counts flat (threads are
+//!    O(reactor workers), never O(connections)).
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use sla2::config::ServeConfig;
+use sla2::coordinator::error::ServeError;
+use sla2::coordinator::net::{self, ClientOpts};
+use sla2::coordinator::pool::{BatchProcessor, EnginePool};
+use sla2::coordinator::queue::RequestQueue;
+use sla2::coordinator::request::{GenRequest, RequestMetrics};
+use sla2::coordinator::wire::{self, FrameDecoder, WireFormat,
+                              MAX_FRAME_LEN};
+use sla2::coordinator::{Gateway, NetClient, NetFrontend, Server,
+                        ServerMetrics};
+use sla2::tensor::Tensor;
+use sla2::util::faults::FaultPlan;
+use sla2::util::json::Json;
+use sla2::util::rng::Pcg32;
+
+/// A path no test creates: forces the native backend's builtin-config
+/// + seeded-init path (same convention as the native_backend suite).
+const NO_ARTIFACTS: &str = "definitely-missing-artifacts";
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+// ---------------- /proc observability (linux) ---------------------------
+
+#[cfg(target_os = "linux")]
+fn fd_count() -> Option<usize> {
+    std::fs::read_dir("/proc/self/fd").ok().map(|d| d.count())
+}
+
+#[cfg(not(target_os = "linux"))]
+fn fd_count() -> Option<usize> {
+    None
+}
+
+#[cfg(target_os = "linux")]
+fn thread_count() -> Option<usize> {
+    let s = std::fs::read_to_string("/proc/self/status").ok()?;
+    s.lines().find(|l| l.starts_with("Threads:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+}
+
+#[cfg(not(target_os = "linux"))]
+fn thread_count() -> Option<usize> {
+    None
+}
+
+// ---------------- golden vectors ----------------------------------------
+
+const GOLDEN_DIR: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/data/wire_v1");
+
+fn golden(name: &str) -> Vec<u8> {
+    let path = format!("{GOLDEN_DIR}/{name}");
+    std::fs::read(&path).unwrap_or_else(|e| {
+        panic!("missing golden vector {path}: {e} — regenerate with \
+                `python3 scripts/gen_wire_goldens.py`")
+    })
+}
+
+/// Check one golden: the Rust serializer must emit `meta_text`
+/// exactly, the encoder must reproduce the checked-in bytes, and the
+/// decoder must round-trip them.
+fn check_golden(name: &str, meta: Json, meta_text: &str,
+                tensor: Option<&Tensor>, compress: bool) {
+    assert_eq!(meta.to_string(), meta_text,
+               "{name}: JSON serializer drifted from the golden meta");
+    let bytes = wire::encode(&meta, tensor, WireFormat::V1, compress)
+        .unwrap();
+    let want = golden(name);
+    assert_eq!(bytes, want,
+               "{name}: encoder output differs from the golden vector \
+                (see rust/tests/data/wire_v1/README.md before \
+                regenerating)");
+    let mut d = FrameDecoder::new();
+    d.feed(&want);
+    let f = d.next().unwrap().expect("golden frame must decode");
+    assert_eq!(d.buffered(), 0, "{name}: trailing bytes");
+    assert_eq!(f.meta, meta, "{name}: decoded meta differs");
+    match (tensor, &f.tensor) {
+        (None, None) => {}
+        (Some(t), Some(back)) => {
+            assert_eq!(back.shape, t.shape, "{name}: tensor shape");
+            if t.is_f32() {
+                // compare BITS so NaN payloads count
+                let a: Vec<u32> = t.f32s().unwrap().iter()
+                    .map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = back.f32s().unwrap().iter()
+                    .map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "{name}: tensor bits differ");
+            } else {
+                assert_eq!(back.i32s().unwrap(), t.i32s().unwrap(),
+                           "{name}: i32 tensor differs");
+            }
+        }
+        (want, got) => panic!(
+            "{name}: tensor presence mismatch (want {}, got {})",
+            want.is_some(), got.is_some()),
+    }
+}
+
+#[test]
+fn golden_vectors_pin_the_v1_layout() {
+    check_golden(
+        "hello.bin",
+        Json::obj().push("op", "hello").push("token", "sesame")
+            .push("wire", "v1").push("compress", true),
+        r#"{"op":"hello","token":"sesame","wire":"v1","compress":true}"#,
+        None, false);
+    check_golden(
+        "submit.bin",
+        Json::obj().push("op", "submit").push("class", 3i64)
+            .push("seed", 42.0).push("steps", 4usize)
+            .push("tier", "s90").push("stream", true)
+            .push("deadline_ms", 0usize).push("allow_degrade", false),
+        r#"{"op":"submit","class":3,"seed":42,"steps":4,"tier":"s90","stream":true,"deadline_ms":0,"allow_degrade":false}"#,
+        None, false);
+    check_golden(
+        "cancel.bin",
+        Json::obj().push("op", "cancel").push("id", 7usize),
+        r#"{"op":"cancel","id":7}"#, None, false);
+    check_golden(
+        "accepted.bin",
+        Json::obj().push("type", "accepted").push("id", 9usize),
+        r#"{"type":"accepted","id":9}"#, None, false);
+    check_golden(
+        "error.bin",
+        Json::obj().push("type", "error").push("id", 11usize)
+            .push("error", "bad request: steps 0 out of range (1..=1024)")
+            .push("code", "bad_request").push("retryable", false),
+        r#"{"type":"error","id":11,"error":"bad request: steps 0 out of range (1..=1024)","code":"bad_request","retryable":false}"#,
+        None, false);
+    // f32 tensor with exact-bit NaN/Inf payloads, uncompressed
+    let t = Tensor::from_f32(&[2, 3], vec![
+        0.0, 1.0, -2.5, 3.25,
+        f32::from_bits(0x7fc0_0000), // quiet NaN
+        f32::INFINITY,
+    ]).unwrap();
+    check_golden(
+        "chunk_f32.bin",
+        Json::obj().push("type", "chunk").push("id", 5usize)
+            .push("seq", 0usize).push("frame_start", 0usize)
+            .push("frame_end", 2usize).push("total_frames", 4usize)
+            .push("last", false),
+        r#"{"type":"chunk","id":5,"seq":0,"frame_start":0,"frame_end":2,"total_frames":4,"last":false}"#,
+        Some(&t), false);
+    // zero-heavy tensor: zrle must engage, with the exact run layout
+    let mut data = vec![0.0f32; 64];
+    data[10] = 1.0;
+    let t = Tensor::from_f32(&[64], data).unwrap();
+    check_golden(
+        "chunk_zrle.bin",
+        Json::obj().push("type", "chunk").push("id", 6usize)
+            .push("seq", 1usize).push("last", true),
+        r#"{"type":"chunk","id":6,"seq":1,"last":true}"#,
+        Some(&t), true);
+    let t = Tensor::from_i32(&[2, 2], vec![-5, 0, 7, 123]).unwrap();
+    check_golden(
+        "clip_i32.bin",
+        Json::obj().push("type", "clip").push("id", 12usize),
+        r#"{"type":"clip","id":12}"#, Some(&t), false);
+    // empty tensor: zrle cannot shrink nothing, the flag must stay
+    // clear even though compression was requested
+    let t = Tensor::from_f32(&[0, 4], vec![]).unwrap();
+    check_golden(
+        "clip_empty.bin",
+        Json::obj().push("type", "clip").push("id", 13usize),
+        r#"{"type":"clip","id":13}"#, Some(&t), true);
+    check_golden(
+        "xjson.bin",
+        Json::obj().push("op", "frobnicate").push("k", true),
+        r#"{"op":"frobnicate","k":true}"#, None, false);
+}
+
+// ---------------- mock-backed server harness ----------------------------
+
+/// Host-only processor: clips are a pure function of the seed.
+struct SeedClipProcessor {
+    work: Duration,
+}
+
+const CLIP_SHAPE: [usize; 4] = [4, 2, 2, 3];
+
+fn clip_for_seed(seed: u64) -> Tensor {
+    let mut rng = Pcg32::seeded(seed);
+    Tensor::randn(&CLIP_SHAPE, &mut rng)
+}
+
+impl BatchProcessor for SeedClipProcessor {
+    fn process(&mut self, reqs: &[GenRequest])
+               -> anyhow::Result<Vec<(Tensor, RequestMetrics)>> {
+        if !self.work.is_zero() {
+            std::thread::sleep(self.work);
+        }
+        Ok(reqs.iter()
+            .map(|r| (clip_for_seed(r.seed), RequestMetrics {
+                queue_ms: r.queue_wait_ms(),
+                compute_ms: self.work.as_secs_f64() * 1e3,
+                steps: r.steps,
+                batch_size: reqs.len(),
+            }))
+            .collect())
+    }
+}
+
+struct Mock {
+    queue: Arc<RequestQueue>,
+    gateway: Arc<Gateway>,
+    pool: Option<EnginePool>,
+    net: Option<NetFrontend>,
+    addr: String,
+}
+
+impl Mock {
+    fn start(serve: ServeConfig, work: Duration) -> Mock {
+        Mock::start_with_faults(serve, work, FaultPlan::none())
+    }
+
+    fn start_with_faults(serve: ServeConfig, work: Duration,
+                         plan: FaultPlan) -> Mock {
+        let queue = Arc::new(RequestQueue::new(serve.queue_capacity));
+        let metrics = Arc::new(Mutex::new(ServerMetrics::new()));
+        metrics.lock().unwrap().attach_queue(Arc::clone(&queue));
+        let pool = EnginePool::start_with(
+            2, Arc::clone(&queue), Arc::clone(&metrics), 2,
+            Duration::ZERO, move |_| Ok(SeedClipProcessor { work }))
+            .expect("pool start");
+        let gateway = Arc::new(Gateway::new(Arc::clone(&queue),
+                                            Arc::clone(&metrics), serve));
+        let net = NetFrontend::start_with_faults(
+            Arc::clone(&gateway), "127.0.0.1:0", plan)
+            .expect("bind ephemeral port");
+        let addr = net.local_addr().to_string();
+        Mock { queue, gateway, pool: Some(pool), net: Some(net), addr }
+    }
+
+    fn serve_cfg() -> ServeConfig {
+        ServeConfig {
+            tier: "s90".into(),
+            sample_steps: 4,
+            chunk_frames: 1,
+            stream_buffer_chunks: 8,
+            queue_capacity: 64,
+            net_workers: 2,
+            ..ServeConfig::default()
+        }
+    }
+
+    /// Wait until every in-flight request is accounted for.
+    fn wait_drained(&self) {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while self.gateway.pending() > 0 {
+            assert!(Instant::now() < deadline,
+                    "pending never drained: {} left — a slot leaked",
+                    self.gateway.pending());
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    fn stop(&mut self) {
+        if let Some(mut net) = self.net.take() {
+            net.shutdown();
+        }
+        self.queue.close();
+        self.pool.take();
+    }
+}
+
+impl Drop for Mock {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One good round trip — the post-torture health proof.
+fn roundtrip_ok(addr: &str, wire: WireFormat, seed: u64) {
+    let mut c = NetClient::connect_with(addr, ClientOpts {
+        wire, ..ClientOpts::default()
+    }).expect("connect after torture");
+    let id = c.submit(0, seed, 4, "s90", true).expect("submit");
+    let resp = c.collect_stream(id).expect("stream");
+    assert_eq!(resp.clip, clip_for_seed(seed),
+               "server must still serve bit-exact clips");
+}
+
+// ---------------- torture: handcrafted malformed frames -----------------
+
+/// Fire raw bytes at the server, half-close, and gather the reaction:
+/// every reply frame, plus whether the server closed the connection
+/// within the deadline (false = it HUNG, which is always a failure).
+fn poke(addr: &str, bytes: &[u8]) -> (Vec<Json>, bool) {
+    let mut sock = TcpStream::connect(addr).expect("connect");
+    let _ = sock.set_nodelay(true);
+    let _ = sock.write_all(bytes); // the server may close mid-write
+    let _ = sock.shutdown(Shutdown::Write);
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut dec = FrameDecoder::new();
+    let mut frames = Vec::new();
+    let mut buf = [0u8; 64 * 1024];
+    loop {
+        match sock.read(&mut buf) {
+            Ok(0) => return (frames, true),
+            Ok(n) => {
+                dec.feed(&buf[..n]);
+                while let Ok(Some(f)) = dec.next() {
+                    frames.push(f.meta);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock
+                || e.kind() == ErrorKind::TimedOut =>
+            {
+                return (frames, false);
+            }
+            Err(_) => return (frames, true),
+        }
+    }
+}
+
+fn assert_bad_request_then_close(name: &str, addr: &str, bytes: &[u8]) {
+    let (frames, closed) = poke(addr, bytes);
+    assert!(closed, "{name}: server failed to close the connection");
+    assert!(!frames.is_empty(),
+            "{name}: expected a typed bad_request before the close");
+    let f = &frames[frames.len() - 1];
+    assert_eq!(f.get("type").and_then(|v| v.as_str()), Some("error"),
+               "{name}: {f}");
+    assert_eq!(f.get("code").and_then(|v| v.as_str()),
+               Some("bad_request"), "{name}: {f}");
+    assert_eq!(net::error_from_frame(f).code(), "bad_request");
+}
+
+#[test]
+fn torture_corpus_gets_typed_rejections_never_hangs() {
+    let mut m = Mock::start(Mock::serve_cfg(), Duration::ZERO);
+    let health = wire::encode(&Json::obj().push("op", "health"), None,
+                              WireFormat::V1, false).unwrap();
+
+    // bad magic (first byte still latches v1)
+    assert_bad_request_then_close(
+        "bad-magic", &m.addr, b"SLAQ0123456789abcdef0123");
+    // wrong version byte
+    let mut b = health.clone();
+    b[4] = 9;
+    assert_bad_request_then_close("bad-version", &m.addr, &b);
+    // oversized payload length
+    let mut b = health.clone();
+    b[16..20].copy_from_slice(&(u32::MAX).to_le_bytes());
+    assert_bad_request_then_close("oversized-v1", &m.addr, &b);
+    // unknown flag bits
+    let mut b = health.clone();
+    b[6..8].copy_from_slice(&(0x8000u16).to_le_bytes());
+    assert_bad_request_then_close("unknown-flags", &m.addr, &b);
+    // verb byte contradicting the body
+    let mut b = health.clone();
+    b[5] = 0x02;
+    assert_bad_request_then_close("verb-mismatch", &m.addr, &b);
+    // header id contradicting the body
+    let cancel = wire::encode(
+        &Json::obj().push("op", "cancel").push("id", 7usize), None,
+        WireFormat::V1, false).unwrap();
+    let mut b = cancel;
+    b[8] = 99;
+    assert_bad_request_then_close("id-mismatch", &m.addr, &b);
+    // COMPRESSED flag without a tensor section
+    let mut b = health.clone();
+    b[6..8].copy_from_slice(&1u16.to_le_bytes());
+    assert_bad_request_then_close("compressed-no-tensor", &m.addr, &b);
+    // neither a v0 length prefix nor v1 magic
+    assert_bad_request_then_close(
+        "http-not-sla2", &m.addr, b"GET / HTTP/1.1\r\n\r\n");
+    // v0: oversized length prefix
+    let mut b = Vec::new();
+    b.extend_from_slice(&((MAX_FRAME_LEN as u32) + 1).to_be_bytes());
+    assert_bad_request_then_close("oversized-v0", &m.addr, &b);
+    // v0: malformed JSON body
+    let mut b = Vec::new();
+    b.extend_from_slice(&3u32.to_be_bytes());
+    b.extend_from_slice(b"{x}");
+    assert_bad_request_then_close("malformed-v0", &m.addr, &b);
+
+    // disconnect cases: no reply owed, but the server must shrug
+    // them off (close its side, leak nothing)
+    let (_, closed) = poke(&m.addr, &health[..10]);
+    assert!(closed, "truncated-header: server must close");
+    let mut b = health.clone();
+    b.truncate(b.len() - 3);
+    let (_, closed) = poke(&m.addr, &b);
+    assert!(closed, "mid-payload-disconnect: server must close");
+    let (_, closed) = poke(&m.addr, b"");
+    assert!(closed, "connect-then-close: server must close");
+
+    // after the whole corpus: both wire formats still serve, and no
+    // slot leaked
+    roundtrip_ok(&m.addr, WireFormat::V1, 101);
+    roundtrip_ok(&m.addr, WireFormat::V0, 102);
+    m.wait_drained();
+    m.stop();
+}
+
+#[test]
+fn seeded_byte_mutations_never_panic_or_hang() {
+    let seed = env_u64("SLA2_TORTURE_SEED", 0xC0FFEE);
+    let rounds = env_u64("SLA2_TORTURE_MUTATIONS", 64) as usize;
+    let mut m = Mock::start(Mock::serve_cfg(), Duration::ZERO);
+
+    // base corpus: one frame of each interesting shape
+    let submit = Json::obj().push("op", "submit")
+        .push("class", 1i64).push("seed", 9.0).push("steps", 2usize)
+        .push("tier", "s90").push("stream", true);
+    let chunk_meta = Json::obj().push("type", "chunk")
+        .push("id", 3usize).push("seq", 0usize).push("last", true);
+    let t = Tensor::from_f32(&[2, 2], vec![0.0, 1.0, -2.0, 0.5])
+        .unwrap();
+    let bases = [
+        wire::encode(&submit, None, WireFormat::V1, false).unwrap(),
+        wire::encode(&submit, None, WireFormat::V0, false).unwrap(),
+        wire::encode(&chunk_meta, Some(&t), WireFormat::V1, true)
+            .unwrap(),
+    ];
+
+    let mut rng = Pcg32::seeded(seed);
+    for i in 0..rounds {
+        let base = &bases[i % bases.len()];
+        let mut bytes = base.clone();
+        // flip one bit somewhere; sometimes also truncate the tail —
+        // each mutation runs on a fresh connection so the failures
+        // stay independent
+        let pos = rng.below(bytes.len() as u32) as usize;
+        bytes[pos] ^= 1 << rng.below(8);
+        if rng.below(4) == 0 {
+            let cut = 1 + rng.below(bytes.len() as u32) as usize;
+            bytes.truncate(cut);
+        }
+        let (_, closed) = poke(&m.addr, &bytes);
+        assert!(closed,
+                "mutation {i} (seed {seed:#x}) wedged the server: \
+                 byte {pos} of a {}-byte frame", base.len());
+    }
+
+    // the server survived the whole fuzz run with its slots intact
+    roundtrip_ok(&m.addr, WireFormat::V1, 404);
+    m.wait_drained();
+    m.stop();
+}
+
+#[test]
+fn fault_plan_drop_conn_leaves_no_leaks() {
+    // the chaos drop-conn injector draws per OUTBOUND FRAME (a
+    // streamed clip crosses ~6 frames: accepted + 4 chunks + done),
+    // so rate=0.2 severs roughly three quarters of the connections;
+    // the per-connection RNG streams are seeded, so the decision
+    // sequence replays exactly given the serial connect order.
+    // Clients on severed connections see a dead socket; the server
+    // must free every dropped connection's work.
+    let plan = FaultPlan::parse("drop-conn:rate=0.2", 33).unwrap();
+    let mut m = Mock::start_with_faults(Mock::serve_cfg(),
+                                        Duration::from_millis(2), plan);
+    let (mut served, mut severed) = (0usize, 0usize);
+    for i in 0..96u64 {
+        if served >= 2 && severed >= 2 {
+            break; // both behaviors observed
+        }
+        let mut c = match NetClient::connect(&m.addr) {
+            Ok(c) => c,
+            Err(_) => {
+                severed += 1;
+                continue;
+            }
+        };
+        match c.submit(0, 900 + i, 4, "s90", true)
+            .and_then(|id| c.collect_stream(id))
+        {
+            Ok(resp) => {
+                assert_eq!(resp.clip, clip_for_seed(900 + i));
+                served += 1;
+            }
+            Err(_) => severed += 1, // injector killed the connection
+        }
+    }
+    assert!(served >= 2, "no connection survived drop-conn:rate=0.2 \
+                          across 96 attempts");
+    assert!(severed >= 2, "drop-conn:rate=0.2 never fired across 96 \
+                           streamed connections");
+    m.wait_drained();
+    m.stop();
+}
+
+// ---------------- auth + rate limiting ----------------------------------
+
+#[test]
+fn auth_token_gates_every_verb() {
+    let serve = ServeConfig {
+        auth_token: "sesame".into(),
+        ..Mock::serve_cfg()
+    };
+    let mut m = Mock::start(serve, Duration::ZERO);
+
+    // no hello at all: the first real verb dies with a typed
+    // unauthorized and the connection closes
+    let mut bare = NetClient::connect(&m.addr).unwrap();
+    let err = bare.submit(0, 1, 4, "s90", true)
+        .expect_err("unauthenticated submit must be rejected");
+    let e = err.downcast_ref::<ServeError>()
+        .expect("typed ServeError cause");
+    assert_eq!(e.code(), "unauthorized");
+    assert!(!e.retryable());
+
+    // wrong token: hello itself is rejected
+    let err = NetClient::connect_with(&m.addr, ClientOpts {
+        token: Some("swordfish".into()), ..ClientOpts::default()
+    }).expect_err("bad token must fail the handshake");
+    assert!(err.to_string().contains("hello rejected"), "{err}");
+
+    // right token: both wire formats serve end to end
+    for wire in [WireFormat::V1, WireFormat::V0] {
+        let mut c = NetClient::connect_with(&m.addr, ClientOpts {
+            wire, token: Some("sesame".into()), compress: false,
+        }).expect("authenticated connect");
+        let id = c.submit(0, 7, 4, "s90", true).unwrap();
+        assert_eq!(c.collect_stream(id).unwrap().clip, clip_for_seed(7));
+    }
+    m.wait_drained();
+    m.stop();
+}
+
+#[test]
+fn rate_limit_sheds_submits_but_keeps_the_connection() {
+    let serve = ServeConfig {
+        rate_limit: 2.0, // burst 2, then one token per 500 ms
+        ..Mock::serve_cfg()
+    };
+    let mut m = Mock::start(serve, Duration::ZERO);
+    let mut c = NetClient::connect(&m.addr).unwrap();
+
+    // the burst is admitted...
+    let a = c.submit(0, 1, 4, "s90", false).expect("burst submit 1");
+    let b = c.submit(0, 2, 4, "s90", false).expect("burst submit 2");
+    // ...the next submit is typed rate_limited with a backoff hint
+    let err = c.submit(0, 3, 4, "s90", false)
+        .expect_err("third submit must be over budget");
+    let e = err.downcast_ref::<ServeError>()
+        .expect("typed ServeError cause");
+    assert_eq!(e.code(), "rate_limited");
+    assert!(e.retryable(), "the bucket refills");
+    let hint = e.retry_after_ms().expect("backoff hint");
+    assert!(hint > 0 && hint <= 500, "hint {hint} ms at rate 2/s");
+
+    // only the submit was shed: the connection still serves other
+    // verbs and the admitted requests complete
+    assert_eq!(c.collect_clip(a).unwrap().clip, clip_for_seed(1));
+    assert_eq!(c.collect_clip(b).unwrap().clip, clip_for_seed(2));
+    assert!(c.metrics_snapshot().is_ok());
+
+    // after the hinted backoff a token has accrued
+    std::thread::sleep(Duration::from_millis(600));
+    let d = c.submit(0, 4, 4, "s90", false)
+        .expect("post-backoff submit must be admitted");
+    assert_eq!(c.collect_clip(d).unwrap().clip, clip_for_seed(4));
+    m.wait_drained();
+    m.stop();
+}
+
+// ---------------- connection scale --------------------------------------
+
+#[test]
+fn idle_connections_cost_fds_not_threads() {
+    let Some(base_threads) = thread_count() else {
+        eprintln!("SKIP: no /proc/self/status on this platform");
+        return;
+    };
+    let mut m = Mock::start(Mock::serve_cfg(), Duration::ZERO);
+    let threads_with_server = thread_count().unwrap();
+
+    // park 200 idle connections on the reactor
+    let conns: Vec<TcpStream> = (0..200)
+        .map(|_| TcpStream::connect(&m.addr).expect("connect"))
+        .collect();
+    std::thread::sleep(Duration::from_millis(300));
+    let threads_with_conns = thread_count().unwrap();
+    assert_eq!(
+        threads_with_conns, threads_with_server,
+        "200 idle connections must not add a single thread \
+         (O(workers), not O(connections)); server alone used {} \
+         threads over the {base_threads} baseline",
+        threads_with_server - base_threads);
+
+    // the reactor still serves while holding the idle herd
+    roundtrip_ok(&m.addr, WireFormat::V1, 55);
+    drop(conns);
+    m.wait_drained();
+    m.stop();
+}
+
+#[test]
+fn churn_soak_conserves_slots_fds_and_threads() {
+    let cycles = env_u64("SLA2_SOAK_CYCLES", 100);
+    let serve = ServeConfig {
+        backend: "native".into(),
+        model: "dit-tiny".into(),
+        variant: "sla2".into(),
+        tier: "s90".into(),
+        sample_steps: 2,
+        num_shards: 2,
+        chunk_frames: 1,
+        stream_buffer_chunks: 1,
+        listen_addr: "127.0.0.1:0".into(),
+        net_workers: 2,
+        queue_capacity: 64,
+        ..ServeConfig::default()
+    };
+    let server = Server::start(NO_ARTIFACTS, serve)
+        .expect("native server must start without artifacts");
+    let addr = server.local_addr().expect("bound addr").to_string();
+
+    // v0 and v1 must produce bit-identical clips from the same submit
+    // through the REAL backend (codec equivalence end to end)
+    let clip_of = |wire: WireFormat| -> Tensor {
+        let mut c = NetClient::connect_with(&addr, ClientOpts {
+            wire, ..ClientOpts::default()
+        }).unwrap();
+        let id = c.submit(2, 7777, 2, "s90", true).unwrap();
+        c.collect_stream(id).unwrap().clip
+    };
+    let v0_clip = clip_of(WireFormat::V0);
+    let v1_clip = clip_of(WireFormat::V1);
+    assert_eq!(v0_clip, v1_clip,
+               "the same submit must yield bit-identical clips over \
+                v0 and v1");
+
+    let base_fds = fd_count();
+    let base_threads = thread_count();
+
+    let mut accepted = 0u64;
+    let mut shed = 0u64;
+    let mut completed = 0u64;
+    let mut cancel_found = 0u64;
+    for i in 0..cycles {
+        let wire = if i % 2 == 0 { WireFormat::V1 }
+                   else { WireFormat::V0 };
+        let mut c = match NetClient::connect_with(&addr, ClientOpts {
+            wire, ..ClientOpts::default()
+        }) {
+            Ok(c) => c,
+            Err(e) => panic!("cycle {i}: connect failed: {e}"),
+        };
+        // heavier steps on the abandon modes widen the window in
+        // which the stream is genuinely mid-flight when we vanish
+        let steps = if i % 4 >= 2 { 6 } else { 2 };
+        let id = match c.submit((i % 4) as i32, i, steps, "s90", true) {
+            Ok(id) => id,
+            Err(e) => {
+                let typed = e.downcast_ref::<ServeError>()
+                    .unwrap_or_else(|| panic!(
+                        "cycle {i}: untyped submit failure: {e:#}"));
+                assert!(typed.code() == "overloaded",
+                        "cycle {i}: unexpected reject: {typed}");
+                shed += 1;
+                continue;
+            }
+        };
+        accepted += 1;
+        match i % 4 {
+            // consume fully
+            0 => {
+                let resp = c.collect_stream(id)
+                    .unwrap_or_else(|e| panic!(
+                        "cycle {i}: stream failed: {e:#}"));
+                assert_eq!(resp.clip.shape, vec![4, 8, 8, 3]);
+                completed += 1;
+            }
+            // cancel by verb, then hang up
+            1 => {
+                if c.cancel(id).unwrap_or(false) {
+                    cancel_found += 1;
+                }
+            }
+            // vanish right after the ack (cancel-on-disconnect)
+            2 => {}
+            // vanish with BOTH a stream and a one-shot in flight
+            _ => {
+                let _ = c.submit((i % 4) as i32, i, 2, "s90", false);
+            }
+        }
+        drop(c);
+    }
+
+    assert!(shed * 10 <= cycles,
+            "admission shed {shed}/{cycles} cycles — churn should \
+             never pressure a 64-deep queue that hard");
+
+    // conservation: every accepted request resolves, slots free up
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while server.pending() > 0 {
+        assert!(Instant::now() < deadline,
+                "pending never drained: {} left after the churn — a \
+                 slot leaked", server.pending());
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let snap = server.metrics_snapshot();
+    let streaming = snap.get("streaming").expect("streaming section");
+    let streams = streaming.get("streams").unwrap().as_usize().unwrap()
+        as u64;
+    let cancelled = streaming.get("cancelled_streams").unwrap()
+        .as_usize().unwrap() as u64;
+    // +2 for the v0/v1 equivalence probes before the loop
+    assert_eq!(streams, accepted + 2,
+               "every accepted streaming submit must be registered \
+                exactly once");
+    assert!(cancelled <= streams,
+            "cancelled {cancelled} > registered {streams}");
+    if cycles >= 40 {
+        assert!(cancelled >= 1,
+                "with {cycles} churn cycles (half of them abandoning \
+                 mid-flight) at least one stream must be observed \
+                 cancelled");
+    }
+    assert!(completed >= 1, "full-consume cycles must succeed");
+
+    // resource conservation: fds and threads are flat after the churn
+    // (give reaping a beat to run)
+    std::thread::sleep(Duration::from_millis(500));
+    if let (Some(base), Some(end)) = (base_fds, fd_count()) {
+        assert!(end <= base + 16,
+                "fd growth after {cycles} churn cycles: {base} -> \
+                 {end} — connections are leaking descriptors");
+    }
+    if let (Some(base), Some(end)) = (base_threads, thread_count()) {
+        assert!(end <= base + 2,
+                "thread growth after {cycles} churn cycles: {base} -> \
+                 {end} — threads must be O(workers), not O(churn)");
+    }
+
+    server.shutdown();
+}

@@ -10,10 +10,11 @@ use std::time::Duration;
 
 use sla2::config::ServeConfig;
 use sla2::coordinator::error::ServeError;
-use sla2::coordinator::net::{self, read_frame, write_frame};
+use sla2::coordinator::net::{self, read_frame, write_frame, ClientOpts};
 use sla2::coordinator::pool::{BatchProcessor, EnginePool};
 use sla2::coordinator::queue::RequestQueue;
 use sla2::coordinator::request::{GenRequest, RequestMetrics};
+use sla2::coordinator::wire::{self, FrameDecoder, WireFormat};
 use sla2::coordinator::{Gateway, NetClient, NetFrontend, ServerMetrics};
 use sla2::tensor::Tensor;
 use sla2::util::json::Json;
@@ -433,6 +434,106 @@ fn tcp_rejects_out_of_range_steps() {
     let id = client.submit(0, 3, 4, "s90", true).unwrap();
     assert!(client.collect_stream(id).is_ok());
     drop(client);
+    net.shutdown();
+    h.queue.close();
+    drop(h.pool);
+}
+
+/// Read every reply frame off a raw socket until the server closes it
+/// (or a read times out, which the callers treat as a hang).  The
+/// reply format is auto-detected from its first byte, so this works
+/// whether the connection latched v0 or v1.
+fn drain_replies(sock: &mut std::net::TcpStream)
+                 -> (Vec<sla2::util::json::Json>, bool) {
+    use std::io::Read;
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut dec = FrameDecoder::new();
+    let mut frames = Vec::new();
+    let mut buf = [0u8; 64 * 1024];
+    loop {
+        match sock.read(&mut buf) {
+            Ok(0) => return (frames, true),
+            Ok(n) => {
+                dec.feed(&buf[..n]);
+                while let Ok(Some(f)) = dec.next() {
+                    frames.push(f.meta);
+                }
+            }
+            Err(_) => return (frames, false),
+        }
+    }
+}
+
+/// The binary twin of `tcp_rejects_malformed_frames_and_closes`: a
+/// corrupted v1 header must produce the same typed bad_request + close
+/// the JSON path gets — same taxonomy, different framing layer.
+#[test]
+fn tcp_rejects_v1_bad_frames_and_closes() {
+    use std::io::Write;
+    let (h, mut net, addr) =
+        tcp_harness(serve_cfg(1, 8), Duration::ZERO);
+    let good = wire::encode(&Json::obj().push("op", "health"), None,
+                            WireFormat::V1, false).unwrap();
+    let mut bad_magic = good.clone();
+    bad_magic[3] = b'Q'; // "SLAQ"
+    let mut bad_version = good.clone();
+    bad_version[4] = 9;
+    let mut oversized = good.clone();
+    oversized[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+    for (name, bytes) in [("bad-magic", bad_magic),
+                          ("bad-version", bad_version),
+                          ("oversized", oversized)] {
+        let mut sock = std::net::TcpStream::connect(&addr).unwrap();
+        sock.write_all(&bytes).unwrap();
+        let (frames, closed) = drain_replies(&mut sock);
+        assert!(closed, "{name}: connection must close (framing is \
+                         unrecoverable)");
+        let reply = frames.last().unwrap_or_else(|| {
+            panic!("{name}: expected a typed error before the close")
+        });
+        assert_eq!(reply.get("type").and_then(|v| v.as_str()),
+                   Some("error"), "{name}: {reply}");
+        assert_eq!(reply.get("code").and_then(|v| v.as_str()),
+                   Some("bad_request"), "{name}: {reply}");
+    }
+    // a truncated v1 header followed by a disconnect gets no reply,
+    // but must not wedge the acceptor for the next client
+    let mut sock = std::net::TcpStream::connect(&addr).unwrap();
+    sock.write_all(&good[..10]).unwrap();
+    sock.shutdown(std::net::Shutdown::Write).unwrap();
+    let (_, closed) = drain_replies(&mut sock);
+    assert!(closed, "truncated v1 header: server must close");
+    let mut client = NetClient::connect(&addr).unwrap();
+    assert!(client.metrics_snapshot().is_ok(),
+            "server must keep serving after v1 framing rejections");
+    drop(client);
+    net.shutdown();
+    h.queue.close();
+    drop(h.pool);
+}
+
+/// Satellite of the v1 rollout: the SAME submit must produce
+/// bit-identical clips over the v0 JSON framing, the v1 binary
+/// framing, and the v1 framing with zrle compression negotiated.
+#[test]
+fn tcp_v0_and_v1_deliver_identical_clips() {
+    let (h, mut net, addr) =
+        tcp_harness(serve_cfg(1, 8), Duration::ZERO);
+    let mut clip_of = |opts: ClientOpts| {
+        let mut c = NetClient::connect_with(&addr, opts).unwrap();
+        let id = c.submit(3, 31337, 4, "s90", true).unwrap();
+        c.collect_stream(id).unwrap().clip
+    };
+    let v0 = clip_of(ClientOpts {
+        wire: WireFormat::V0, ..ClientOpts::default() });
+    let v1 = clip_of(ClientOpts {
+        wire: WireFormat::V1, ..ClientOpts::default() });
+    let v1z = clip_of(ClientOpts {
+        wire: WireFormat::V1, token: None, compress: true });
+    assert_eq!(v0, v1,
+               "v0 and v1 transports must deliver bit-identical clips");
+    assert_eq!(v1, v1z, "zrle compression must be lossless");
+    assert_eq!(v0, clip_for_seed(31337));
     net.shutdown();
     h.queue.close();
     drop(h.pool);

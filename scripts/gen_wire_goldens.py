@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Regenerate the wire v1 golden frame vectors.
+
+This is a deliberate SECOND implementation of the v1 frame layout
+(docs/ARCHITECTURE.md "Wire protocol"; rust/src/coordinator/wire.rs is
+the first): the `net_scale` golden test encodes the same frames with
+the Rust codec and compares byte-for-byte against these files, so a
+layout change has to be made twice, on purpose, before the test goes
+green again.
+
+Usage:
+    python3 scripts/gen_wire_goldens.py
+
+Writes rust/tests/data/wire_v1/*.bin.  Deterministic: no timestamps,
+no randomness — reruns are byte-identical.
+"""
+
+import struct
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parent.parent / "rust" / "tests" \
+    / "data" / "wire_v1"
+
+MAGIC = b"SLA2"
+WIRE_VERSION = 1
+FLAG_COMPRESSED = 1 << 0
+FLAG_TENSOR = 1 << 1
+VERB_X_JSON = 0x7F
+
+VERBS = {
+    # op (client -> server)
+    "hello": 0x01, "submit": 0x02, "cancel": 0x03, "metrics": 0x04,
+    "health": 0x05, "drain": 0x06,
+    # type (server -> client)
+    "hello_ok": 0x81, "accepted": 0x82, "rejected": 0x83, "chunk": 0x84,
+    "done": 0x85, "clip": 0x86, "metrics_reply": 0x87, "cancel_ok": 0x88,
+    "health_reply": 0x89, "drain_ok": 0x8A, "goaway": 0x8B, "error": 0x8C,
+}
+
+DTYPE_F32 = 0
+DTYPE_I32 = 1
+
+
+def zrle_compress(raw: bytes) -> bytes:
+    """Zero-run-length encode: literals pass through, 0x00 is followed
+    by a run length byte (1..=255)."""
+    out = bytearray()
+    i = 0
+    while i < len(raw):
+        if raw[i] == 0:
+            run = 1
+            while run < 255 and i + run < len(raw) and raw[i + run] == 0:
+                run += 1
+            out += bytes((0, run))
+            i += run
+        else:
+            out.append(raw[i])
+            i += 1
+    return bytes(out)
+
+
+def tensor_section(dtype: int, shape, data_words) -> tuple[bytes, bytes]:
+    """(uncompressed section tail, raw data bytes).  `data_words` are
+    u32 bit patterns (f32 bits or i32 two's complement)."""
+    raw = b"".join(struct.pack("<I", w & 0xFFFFFFFF) for w in data_words)
+    sec = bytes((dtype, len(shape)))
+    for d in shape:
+        sec += struct.pack("<I", d)
+    sec += struct.pack("<I", len(raw))
+    return sec, raw
+
+
+def frame(verb: int, req_id: int, meta: str, tensor=None,
+          compress=False) -> bytes:
+    """Assemble one v1 frame.  `meta` is the EXACT JSON text the Rust
+    Json serializer emits (compact, insertion-ordered, bare integers);
+    `tensor` is (dtype, shape, data_words)."""
+    meta_b = meta.encode("utf-8")
+    flags = 0
+    tail = b""
+    if tensor is not None:
+        flags |= FLAG_TENSOR
+        dtype, shape, words = tensor
+        sec, raw = tensor_section(dtype, shape, words)
+        enc = raw
+        if compress:
+            z = zrle_compress(raw)
+            if len(z) < len(raw):  # the flag is honest: only if smaller
+                flags |= FLAG_COMPRESSED
+                enc = z
+        tail = sec + struct.pack("<I", len(enc)) + enc
+    payload = struct.pack("<I", len(meta_b)) + meta_b + tail
+    header = MAGIC + struct.pack("<BBHQI", WIRE_VERSION, verb, flags,
+                                 req_id, len(payload))
+    assert len(header) == 20
+    return header + payload
+
+
+F32_ONE = 0x3F800000     # 1.0f
+F32_NEG_2_5 = 0xC0200000  # -2.5f
+F32_3_25 = 0x40500000    # 3.25f
+F32_NAN = 0x7FC00000     # quiet NaN, the payload Rust's f32::NAN has
+F32_INF = 0x7F800000     # +inf
+
+GOLDENS = {
+    "hello.bin": frame(
+        VERBS["hello"], 0,
+        '{"op":"hello","token":"sesame","wire":"v1","compress":true}'),
+    "submit.bin": frame(
+        VERBS["submit"], 0,
+        '{"op":"submit","class":3,"seed":42,"steps":4,"tier":"s90",'
+        '"stream":true,"deadline_ms":0,"allow_degrade":false}'),
+    "cancel.bin": frame(VERBS["cancel"], 7, '{"op":"cancel","id":7}'),
+    "accepted.bin": frame(
+        VERBS["accepted"], 9, '{"type":"accepted","id":9}'),
+    "error.bin": frame(
+        VERBS["error"], 11,
+        '{"type":"error","id":11,"error":"bad request: steps 0 out of '
+        'range (1..=1024)","code":"bad_request","retryable":false}'),
+    "chunk_f32.bin": frame(
+        VERBS["chunk"], 5,
+        '{"type":"chunk","id":5,"seq":0,"frame_start":0,"frame_end":2,'
+        '"total_frames":4,"last":false}',
+        tensor=(DTYPE_F32, [2, 3],
+                [0, F32_ONE, F32_NEG_2_5, F32_3_25, F32_NAN, F32_INF])),
+    "chunk_zrle.bin": frame(
+        VERBS["chunk"], 6, '{"type":"chunk","id":6,"seq":1,"last":true}',
+        tensor=(DTYPE_F32, [64], [F32_ONE if i == 10 else 0
+                                  for i in range(64)]),
+        compress=True),
+    "clip_i32.bin": frame(
+        VERBS["clip"], 12, '{"type":"clip","id":12}',
+        tensor=(DTYPE_I32, [2, 2], [-5, 0, 7, 123])),
+    "clip_empty.bin": frame(
+        VERBS["clip"], 13, '{"type":"clip","id":13}',
+        tensor=(DTYPE_F32, [0, 4], []), compress=True),
+    "xjson.bin": frame(
+        VERB_X_JSON, 0, '{"op":"frobnicate","k":true}'),
+}
+
+
+def main() -> None:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    for name, data in GOLDENS.items():
+        path = OUT_DIR / name
+        path.write_bytes(data)
+        print(f"{path}  {len(data)} bytes")
+
+
+if __name__ == "__main__":
+    main()
